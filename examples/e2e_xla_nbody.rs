@@ -1,0 +1,86 @@
+//! END-TO-END driver: proves all three layers compose.
+//!
+//! Rust (L3) owns particle memory in LLAMA views and reshuffles layouts
+//! with the layout-aware copy; the compute is the JAX (L2) step
+//! function wrapping the Pallas (L1) tiled kernel, AOT-lowered by
+//! `make artifacts` and executed here through the PJRT CPU client.
+//! Python is not involved at runtime.
+//!
+//! Run: `make artifacts && cargo run --release --example e2e_xla_nbody`
+
+use llama::coordinator::fig6_xla;
+use llama::prelude::*;
+use llama::runtime::Runtime;
+use llama::workloads::nbody::{self, llama_impl};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::env::var("LLAMA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+
+    let mut rt = Runtime::cpu(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. Correctness gate: XLA stack vs the Rust LLAMA kernel.
+    let opts = llama::coordinator::bench::Opts {
+        artifacts: artifacts.clone(),
+        ..Default::default()
+    };
+    let rel = fig6_xla::verify_against_rust(&opts)?;
+    println!("L1/L2 (Pallas/JAX via PJRT) vs L3 (Rust kernel): max rel err = {rel:.2e}");
+    anyhow::ensure!(rel < 1e-4, "stack mismatch");
+
+    // 2. LLAMA-managed memory: state lives in a multi-blob SoA view
+    //    whose blobs are exactly the f32[N] buffers the artifact wants.
+    let exe = rt.load("nbody_step_soa")?;
+    let n = exe.meta().n;
+    let d = nbody::particle_dim();
+    let mut view = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(n)));
+    llama_impl::load_state(&mut view, &nbody::init_particles(n, 2024));
+
+    let mut inputs: Vec<Vec<f32>> = view
+        .blobs()
+        .iter()
+        .map(|b| b.chunks_exact(4).map(|c| f32::from_ne_bytes(c.try_into().unwrap())).collect())
+        .collect();
+
+    // 3. Run the loop; log the kinetic-energy curve (EXPERIMENTS.md).
+    println!("running {steps} steps of N={n} all-pairs n-body on the PJRT CPU client:");
+    let t0 = std::time::Instant::now();
+    let mut energy_log = Vec::new();
+    for step in 0..steps {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut out = exe.run_f32(&refs)?;
+        let e = out.pop().unwrap()[0];
+        energy_log.push((step, e));
+        inputs = out;
+    }
+    let dt = t0.elapsed();
+    for (s, e) in &energy_log {
+        println!("  step {s:>3}: E_kin = {e:.6}");
+    }
+    println!(
+        "{} steps in {:.1} ms ({:.2} ms/step, {:.1} M pairs/s)",
+        steps,
+        dt.as_secs_f64() * 1e3,
+        dt.as_secs_f64() * 1e3 / steps as f64,
+        (n * n * steps) as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    // 4. Pull the final state back into LLAMA views and reshuffle into
+    //    an AoSoA16 layout with the chunked copy (L3's contribution).
+    let info = view.mapping().info().clone();
+    for (leaf, data) in inputs.iter().enumerate() {
+        for (i, v) in data.iter().enumerate() {
+            view.set::<f32>(i, leaf, *v);
+        }
+    }
+    let _ = info;
+    let mut aosoa = alloc_view(AoSoA::new(&d, ArrayDims::linear(n), 16));
+    let method = copy(&view, &mut aosoa);
+    assert!(views_equal(&view, &aosoa));
+    println!("final state reshuffled SoA-MB -> AoSoA16 via {method:?} and verified");
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Instrumented mappings (paper §3.7 Trace/Heatmap, fig 4d, §4.3):
+//! trace per-field access counts of an LBM step, derive the hot/cold
+//! Split the paper built for SPEC lbm, and render a byte heatmap of the
+//! n-body move phase.
+//!
+//! Run: `cargo run --release --example heatmap_dump`
+
+use llama::prelude::*;
+use llama::workloads::lbm::split4::build_split4;
+use llama::workloads::lbm::step as lbm_step;
+use llama::workloads::lbm::{cell_dim, Geometry};
+use llama::workloads::nbody::{self, llama_impl};
+
+fn main() {
+    // --- Trace: count field accesses of one lbm step (paper §4.3). ---
+    let geo = Geometry::channel_with_sphere(12, 12, 12, 3);
+    let d = cell_dim();
+    let traced = Trace::new(AoS::aligned(&d, geo.dims.clone()));
+    let mut src = alloc_view(traced);
+    let mut dst = alloc_view(AoS::aligned(&d, geo.dims.clone()));
+    lbm_step::init(&mut src, &geo);
+    lbm_step::step(&src, &mut dst);
+
+    println!("per-field access counts of one D3Q19 step:");
+    print!("{}", src.mapping().to_table());
+
+    let groups = src.mapping().equal_count_groups(4);
+    println!("\n4 equal-access-count groups (paper's Split derivation):");
+    for (i, g) in groups.iter().enumerate() {
+        let names: Vec<&str> = g
+            .iter()
+            .map(|&l| src.mapping().info().fields[l].path.as_str())
+            .collect();
+        println!("  group {i}: {names:?}");
+    }
+    let split = build_split4(&d, geo.dims.clone(), &groups);
+    println!("derived mapping: {}", split.mapping_name());
+
+    // --- Heatmap: byte-level access counts of the n-body move. ---
+    let n = 128;
+    let pd = nbody::particle_dim();
+    let h = Heatmap::with_granularity(AoS::packed(&pd, ArrayDims::linear(n)), 4);
+    let mut view = alloc_view(h);
+    let s = nbody::init_particles(n, 1);
+    llama_impl::load_state(&mut view, &s);
+    view.mapping().reset(); // drop the load traffic, keep the kernel's
+    llama_impl::mv(&mut view);
+
+    println!("\nbyte heatmap of one `move` sweep over packed AoS");
+    println!("(hot = pos/vel, cold = mass — the 1/7 wasted-load of fig 5):");
+    print!("{}", heatmap_ascii(view.mapping(), 112));
+
+    std::fs::create_dir_all("artifacts/dumps").unwrap();
+    let pgm = llama::dump::heatmap_pgm(view.mapping(), 0, 112);
+    std::fs::write("artifacts/dumps/nbody_move_heat.pgm", pgm).unwrap();
+    println!("wrote artifacts/dumps/nbody_move_heat.pgm");
+}

@@ -1,0 +1,35 @@
+//! Layout-changing copy demo (paper §4.2 / fig 7): move HEP event data
+//! between layouts with every strategy and print throughput.
+//!
+//! Run: `cargo run --release --example layout_copy -- [--full]`
+
+use llama::coordinator::bench::Opts;
+use llama::coordinator::fig7_copy;
+use llama::prelude::*;
+use llama::workloads::hep;
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+
+    // Small demonstration first: the dispatcher in action.
+    let d = hep::event_dim();
+    let dims = ArrayDims::linear(4096);
+    let mut soa = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    hep::generate_events(&mut soa, 42);
+
+    let mut aosoa = alloc_view(AoSoA::new(&d, dims.clone(), 32));
+    let m1 = copy(&soa, &mut aosoa);
+    let mut aligned = alloc_view(AoS::aligned(&d, dims.clone()));
+    let m2 = copy(&aosoa, &mut aligned);
+    let mut same = alloc_view(AoS::aligned(&d, dims.clone()));
+    let m3 = copy(&aligned, &mut same);
+    println!("SoA MB -> AoSoA32: {m1:?}");
+    println!("AoSoA32 -> AoS aligned: {m2:?} (aligned AoS is not chunkable)");
+    println!("AoS aligned -> AoS aligned: {m3:?}");
+    assert!(views_equal(&soa, &same));
+    println!("all copies verified field-wise equal\n");
+
+    // Then the fig 7 table.
+    let opts = if full { Opts::default() } else { Opts::quick() };
+    println!("{}", fig7_copy::run(&opts).to_text());
+}

@@ -1,0 +1,66 @@
+//! The paper's §4.1 n-body across memory layouts: one generic kernel,
+//! the layout switched by a single line — plus the fig 5 timing table.
+//!
+//! Run: `cargo run --release --example nbody_layouts -- [--quick] [--n K]`
+
+use llama::coordinator::bench::Opts;
+use llama::coordinator::fig5_nbody;
+use llama::prelude::*;
+use llama::workloads::nbody::{self, llama_impl};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut opts = Opts::quick();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--quick" => opts.quick = true,
+            "--full" => opts = Opts::default(),
+            "--n" => opts.n = it.next().and_then(|v| v.parse().ok()),
+            _ => {}
+        }
+    }
+
+    // Demonstrate the one-line layout switch on a tiny run first.
+    let n = 512;
+    let d = nbody::particle_dim();
+    let state = nbody::init_particles(n, 7);
+    let dims = ArrayDims::linear(n);
+
+    println!("one generic kernel, four layouts (N={n}, 1 step):");
+    // --- the only line that changes between runs: the mapping ---
+    run_one("AoS aligned", AoS::aligned(&d, dims.clone()), &state);
+    run_one("SoA multi-blob", SoA::multi_blob(&d, dims.clone()), &state);
+    run_one("AoSoA16", AoSoA::new(&d, dims.clone(), 16), &state);
+    run_one(
+        "Split(pos | rest)",
+        Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![0]),
+            |sd, ad| SoA::multi_blob(sd, ad),
+            |sd, ad| AoS::aligned(sd, ad),
+        ),
+        &state,
+    );
+
+    // Then the fig 5 measurement tables.
+    let (update, mv) = fig5_nbody::run(&opts);
+    println!("{}", update.to_text());
+    println!("{}", mv.to_text());
+}
+
+fn run_one<M: Mapping>(name: &str, mapping: M, state: &nbody::ParticleSoA) {
+    let mut view = alloc_view(mapping);
+    llama_impl::load_state(&mut view, state);
+    llama_impl::update(&mut view);
+    llama_impl::mv(&mut view);
+    let out = llama_impl::store_state(&view);
+    println!(
+        "  {name:>18}: vel[0] = ({:+.6}, {:+.6}, {:+.6})  E_kin = {:.4}",
+        out.vel[0][0],
+        out.vel[1][0],
+        out.vel[2][0],
+        nbody::kinetic_energy(&out)
+    );
+}

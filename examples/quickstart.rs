@@ -1,0 +1,71 @@
+//! Quickstart: define a record dimension, allocate views with different
+//! mappings, access data through the layout-independent API, and copy
+//! between layouts — the paper's §3 walkthrough end to end.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use llama::prelude::*;
+
+fn main() {
+    // §3.3 — describe the data structure (paper listing 1).
+    let particle = llama::record_dim! {
+        id: u16,
+        pos: { x: f32, y: f32, z: f32 },
+        mass: f64,
+        flags: [bool; 3],
+    };
+    let dims = ArrayDims::from([128, 256, 32]);
+    println!(
+        "record: {} leaf fields, packed {} B, aligned {} B; array dims {:?} = {} records",
+        particle.leaf_count(),
+        particle.packed_size(),
+        RecordInfo::new(&particle).aligned_size,
+        dims.extents(),
+        dims.count()
+    );
+
+    // §3.4 — create a view. The layout is ONE line; everything below is
+    // layout-independent.
+    let mapping = SoA::multi_blob(&particle, dims.clone());
+    let mut view = alloc_view(mapping);
+
+    // Resolve field handles once (the "compile-time" record coords).
+    let info = view.mapping().info().clone();
+    let mass = info.leaf_by_path("mass").unwrap();
+    let pos_x = info.leaf_by_path("pos.x").unwrap();
+
+    // §3.5 — write through flat accessors and virtual records.
+    for i in 0..view.count() {
+        view.set::<f64>(i, mass, 1.0);
+        view.set::<f32>(i, pos_x, i as f32 * 0.5);
+    }
+    let mut rec = view.record_mut(5);
+    rec.set_path::<bool>("flags.1", true);
+    let p5 = view.record(5);
+    println!(
+        "record 5: pos.x={}, mass={}, flags.1={}",
+        p5.get_path::<f32>("pos.x"),
+        p5.get_path::<f64>("mass"),
+        p5.get_path::<bool>("flags.1"),
+    );
+
+    // §3.6 — iterate like the STL.
+    let total_mass: f64 = (&view).into_iter().map(|r| r.get_path::<f64>("mass")).sum();
+    println!("total mass = {total_mass}");
+
+    // §3.9 — switch to a different layout via the layout-aware copy.
+    let mut aosoa = alloc_view(AoSoA::new(&particle, dims.clone(), 16));
+    let method = copy(&view, &mut aosoa);
+    println!("copied SoA-MB -> AoSoA16 via {method:?}");
+    assert!(views_equal(&view, &aosoa));
+    println!(
+        "AoSoA16 view agrees field-wise; record 5 pos.x = {}",
+        aosoa.record(5).get_path::<f32>("pos.x")
+    );
+
+    // §3.7 — dump the layout as SVG (paper fig 4).
+    let svg = dump_svg(&AoS::packed(&particle, ArrayDims::linear(4)), 4, 64);
+    std::fs::create_dir_all("artifacts/dumps").unwrap();
+    std::fs::write("artifacts/dumps/quickstart_aos.svg", svg).unwrap();
+    println!("wrote artifacts/dumps/quickstart_aos.svg");
+}

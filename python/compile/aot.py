@@ -1,0 +1,130 @@
+"""AOT compile path: lower the L2 JAX functions (wrapping the L1 Pallas
+kernels) to HLO *text* artifacts the Rust PJRT runtime loads.
+
+HLO text — NOT `lowered.compile()` / proto `.serialize()` — is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which xla_extension 0.5.1 (behind the `xla` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+Writes one .hlo.txt per variant plus a whitespace manifest
+(`manifest.txt`: name file n tile dtype inputs outputs) the Rust side
+parses.
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def soa_spec(n, dtype):
+    s = jax.ShapeDtypeStruct((n,), dtype)
+    return [s] * 7
+
+
+def aos_spec(n, dtype):
+    return [jax.ShapeDtypeStruct((n, 7), dtype)]
+
+
+# name -> (function, spec builder, n, tile, n_outputs)
+def variants(n_update, n_move, tile, steps):
+    f32 = jnp.float32
+    return {
+        # fig 6 "update" row: tiled Pallas kernels, SoA vs AoS global layout.
+        "nbody_update_soa": (
+            lambda x, y, z, vx, vy, vz, m: model.k.update_soa(
+                x, y, z, vx, vy, vz, m, tile=tile
+            ),
+            soa_spec(n_update, f32), n_update, tile, 3,
+        ),
+        "nbody_update_aos": (
+            lambda p: model.k.update_aos(p, tile=tile),
+            aos_spec(n_update, f32), n_update, tile, 1,
+        ),
+        # fig 6 "no shared memory" reference: direct jnp lowering (XLA
+        # fuses, no explicit staging).
+        "nbody_update_soa_notile": (
+            ref.update_soa, soa_spec(n_update, f32), n_update, 0, 3,
+        ),
+        # fig 6 "move" row (6 inputs: move does not read mass, and jax
+        # prunes unused params from the lowered module).
+        "nbody_move_soa": (
+            lambda x, y, z, vx, vy, vz: model.k.move_soa(
+                x, y, z, vx, vy, vz, tile=tile
+            ),
+            soa_spec(n_move, f32)[:6], n_move, tile, 3,
+        ),
+        "nbody_move_aos": (
+            lambda p: model.k.move_aos(p, tile=tile),
+            aos_spec(n_move, f32), n_move, tile, 1,
+        ),
+        # e2e driver artifact: full step + energy diagnostic.
+        "nbody_step_soa": (
+            lambda *a: model.step_soa_with_energy(*a, tile=tile),
+            soa_spec(n_update, f32), n_update, tile, 8,
+        ),
+        # multi-step scan (donate the state: in-place buffer reuse).
+        "nbody_steps_soa": (
+            functools.partial(_steps, steps=steps, tile=tile),
+            soa_spec(n_update, f32), n_update, tile, 7,
+        ),
+    }
+
+
+def _steps(x, y, z, vx, vy, vz, m, *, steps, tile):
+    return model.steps_soa(x, y, z, vx, vy, vz, m, steps=steps, tile=tile)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--n-update", type=int, default=1024)
+    ap.add_argument("--n-move", type=int, default=65536)
+    ap.add_argument("--tile", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=10)
+    # Back-compat with the Makefile's `--out` single-target form.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name, (fn, spec, n, tile, n_out) in variants(
+        args.n_update, args.n_move, args.tile, args.steps
+    ).items():
+        jitted = jax.jit(fn)
+        lowered = jitted.lower(*spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        layout = "aos" if "_aos" in name else "soa"
+        manifest.append(
+            f"{name} {name}.hlo.txt n={n} tile={tile} dtype=f32 "
+            f"layout={layout} inputs={len(spec)} outputs={n_out}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {out_dir}/manifest.txt ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

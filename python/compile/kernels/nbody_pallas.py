@@ -1,0 +1,154 @@
+"""L1: the n-body hot spot as Pallas kernels (paper fig 6, adapted to
+TPU per DESIGN.md §Hardware-Adaptation).
+
+The paper's CUDA kernels tile 512 particles into *shared memory* per
+thread block. The TPU translation: the i-tile of particles is a
+BlockSpec-mapped VMEM block, and the j-loop stages `tile`-sized slices
+of the position/mass arrays into VMEM via `pl.load` — BlockSpec + the
+staged loads express the HBM->VMEM schedule the paper wrote with
+threadblocks. The global-memory layout axis of fig 6 becomes the input
+representation: SoA (seven (N,) arrays) vs AoS (one packed (N, 7)
+matrix, where per-field access is a strided column slice).
+
+Kernels MUST run with interpret=True here: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TIMESTEP = 0.0001
+EPS2 = 0.01
+
+
+def _accum_tile(xi, yi, zi, xj, yj, zj, mj, acc):
+    """Listing-9 pairwise interaction for an (I, J) tile pair."""
+    ax, ay, az = acc
+    dx = (xi[:, None] - xj[None, :]) ** 2
+    dy = (yi[:, None] - yj[None, :]) ** 2
+    dz = (zi[:, None] - zj[None, :]) ** 2
+    dist_sqr = EPS2 + dx + dy + dz
+    dist_sixth = dist_sqr * dist_sqr * dist_sqr
+    inv_dist_cube = 1.0 / jnp.sqrt(dist_sixth)
+    sts = mj[None, :] * inv_dist_cube * TIMESTEP
+    return (
+        ax + jnp.sum(dx * sts, axis=1),
+        ay + jnp.sum(dy * sts, axis=1),
+        az + jnp.sum(dz * sts, axis=1),
+    )
+
+
+def _update_soa_kernel(n, tile, xi_ref, yi_ref, zi_ref, vxi_ref, vyi_ref, vzi_ref,
+                       xj_ref, yj_ref, zj_ref, mj_ref, ox_ref, oy_ref, oz_ref):
+    xi, yi, zi = xi_ref[...], yi_ref[...], zi_ref[...]
+    zero = jnp.zeros((tile,), xi.dtype)
+
+    def body(jt, acc):
+        sl = (pl.ds(jt * tile, tile),)
+        # VMEM staging of the j-tile (the CUDA shared-memory cache).
+        xj = pl.load(xj_ref, sl)
+        yj = pl.load(yj_ref, sl)
+        zj = pl.load(zj_ref, sl)
+        mj = pl.load(mj_ref, sl)
+        return _accum_tile(xi, yi, zi, xj, yj, zj, mj, acc)
+
+    ax, ay, az = jax.lax.fori_loop(0, n // tile, body, (zero, zero, zero))
+    ox_ref[...] = vxi_ref[...] + ax
+    oy_ref[...] = vyi_ref[...] + ay
+    oz_ref[...] = vzi_ref[...] + az
+
+
+def update_soa(x, y, z, vx, vy, vz, m, *, tile=256):
+    """Velocity update over SoA inputs; returns (vx, vy, vz)."""
+    n = x.shape[0]
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    dt = x.dtype
+    itile = pl.BlockSpec((tile,), lambda i: (i,))
+    full = pl.BlockSpec((n,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_update_soa_kernel, n, tile),
+        grid=(n // tile,),
+        in_specs=[itile] * 6 + [full] * 4,
+        out_specs=[itile] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n,), dt)] * 3,
+        interpret=True,
+    )(x, y, z, vx, vy, vz, x, y, z, m)
+
+
+def _update_aos_kernel(n, tile, pi_ref, pj_ref, out_ref):
+    pi = pi_ref[...]  # (tile, 7)
+    # Column slices of the packed block: strided "global layout" access.
+    xi, yi, zi = pi[:, 0], pi[:, 1], pi[:, 2]
+    zero = jnp.zeros((tile,), pi.dtype)
+
+    def body(jt, acc):
+        pj = pl.load(pj_ref, (pl.ds(jt * tile, tile), pl.ds(0, 7)))
+        return _accum_tile(xi, yi, zi, pj[:, 0], pj[:, 1], pj[:, 2], pj[:, 6], acc)
+
+    ax, ay, az = jax.lax.fori_loop(0, n // tile, body, (zero, zero, zero))
+    vel = pi[:, 3:6] + jnp.stack([ax, ay, az], axis=1)
+    out_ref[...] = jnp.concatenate([pi[:, 0:3], vel, pi[:, 6:7]], axis=1)
+
+
+def update_aos(p, *, tile=256):
+    """Velocity update over a packed (N, 7) AoS matrix; returns (N, 7)."""
+    n = p.shape[0]
+    assert p.shape[1] == 7
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    itile = pl.BlockSpec((tile, 7), lambda i: (i, 0))
+    full = pl.BlockSpec((n, 7), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_update_aos_kernel, n, tile),
+        grid=(n // tile,),
+        in_specs=[itile, full],
+        out_specs=itile,
+        out_shape=jax.ShapeDtypeStruct((n, 7), p.dtype),
+        interpret=True,
+    )(p, p)
+
+
+def _move_soa_kernel(x_ref, y_ref, z_ref, vx_ref, vy_ref, vz_ref,
+                     ox_ref, oy_ref, oz_ref):
+    ox_ref[...] = x_ref[...] + vx_ref[...] * TIMESTEP
+    oy_ref[...] = y_ref[...] + vy_ref[...] * TIMESTEP
+    oz_ref[...] = z_ref[...] + vz_ref[...] * TIMESTEP
+
+
+def move_soa(x, y, z, vx, vy, vz, *, tile=1024):
+    """Position update over SoA inputs; returns (x, y, z)."""
+    n = x.shape[0]
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    itile = pl.BlockSpec((tile,), lambda i: (i,))
+    return pl.pallas_call(
+        _move_soa_kernel,
+        grid=(n // tile,),
+        in_specs=[itile] * 6,
+        out_specs=[itile] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n,), x.dtype)] * 3,
+        interpret=True,
+    )(x, y, z, vx, vy, vz)
+
+
+def _move_aos_kernel(p_ref, out_ref):
+    p = p_ref[...]
+    pos = p[:, 0:3] + p[:, 3:6] * TIMESTEP
+    out_ref[...] = jnp.concatenate([pos, p[:, 3:7]], axis=1)
+
+
+def move_aos(p, *, tile=1024):
+    """Position update over the packed AoS matrix; returns (N, 7)."""
+    n = p.shape[0]
+    assert n % tile == 0, f"N={n} must be a multiple of tile={tile}"
+    itile = pl.BlockSpec((tile, 7), lambda i: (i, 0))
+    return pl.pallas_call(
+        _move_aos_kernel,
+        grid=(n // tile,),
+        in_specs=[itile],
+        out_specs=itile,
+        out_shape=jax.ShapeDtypeStruct((n, 7), p.dtype),
+        interpret=True,
+    )(p)

@@ -1,0 +1,61 @@
+"""Pure-jnp correctness oracle for the n-body kernels (L1 reference).
+
+Replicates the paper's listing-9 semantics *exactly* (including the
+component-wise squared "dist" that feeds the velocity update), so the
+Pallas kernels, this oracle, and the Rust `workloads::nbody` kernels all
+compute the same function.
+"""
+
+import jax.numpy as jnp
+
+TIMESTEP = 0.0001
+EPS2 = 0.01
+
+
+def update_soa(x, y, z, vx, vy, vz, m):
+    """All-pairs velocity update on SoA arrays (each shape (N,)).
+
+    Returns updated (vx, vy, vz).
+    """
+    dx = (x[:, None] - x[None, :]) ** 2
+    dy = (y[:, None] - y[None, :]) ** 2
+    dz = (z[:, None] - z[None, :]) ** 2
+    dist_sqr = EPS2 + dx + dy + dz
+    dist_sixth = dist_sqr * dist_sqr * dist_sqr
+    inv_dist_cube = 1.0 / jnp.sqrt(dist_sixth)
+    sts = m[None, :] * inv_dist_cube * TIMESTEP  # (N, N)
+    return (
+        vx + jnp.sum(dx * sts, axis=1),
+        vy + jnp.sum(dy * sts, axis=1),
+        vz + jnp.sum(dz * sts, axis=1),
+    )
+
+
+def update_aos(p):
+    """All-pairs velocity update on a packed AoS matrix (N, 7):
+    columns = [pos.x, pos.y, pos.z, vel.x, vel.y, vel.z, mass].
+
+    Returns the updated (N, 7) matrix.
+    """
+    x, y, z = p[:, 0], p[:, 1], p[:, 2]
+    vx, vy, vz = p[:, 3], p[:, 4], p[:, 5]
+    m = p[:, 6]
+    nvx, nvy, nvz = update_soa(x, y, z, vx, vy, vz, m)
+    return jnp.stack([x, y, z, nvx, nvy, nvz, m], axis=1)
+
+
+def move_soa(x, y, z, vx, vy, vz):
+    """Position update on SoA arrays; returns (x, y, z)."""
+    return (x + vx * TIMESTEP, y + vy * TIMESTEP, z + vz * TIMESTEP)
+
+
+def move_aos(p):
+    """Position update on the packed AoS matrix; returns (N, 7)."""
+    return p.at[:, 0:3].add(p[:, 3:6] * TIMESTEP)
+
+
+def step_soa(x, y, z, vx, vy, vz, m):
+    """One full timestep (update then move) on SoA arrays."""
+    vx, vy, vz = update_soa(x, y, z, vx, vy, vz, m)
+    x, y, z = move_soa(x, y, z, vx, vy, vz)
+    return x, y, z, vx, vy, vz, m

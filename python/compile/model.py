@@ -1,0 +1,52 @@
+"""L2: the n-body compute graph in JAX, calling the L1 Pallas kernels.
+
+This is the "model" layer of the three-layer stack: it composes the
+Pallas update/move kernels into whole timesteps and multi-step scans,
+and is what `aot.py` lowers to the HLO artifacts the Rust runtime
+executes. Python never runs at request time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import nbody_pallas as k
+
+
+def step_soa(x, y, z, vx, vy, vz, m, *, tile=256):
+    """One full timestep over SoA state: Pallas update then Pallas move.
+
+    Returns the new (x, y, z, vx, vy, vz, m) tuple.
+    """
+    vx, vy, vz = k.update_soa(x, y, z, vx, vy, vz, m, tile=tile)
+    # Reuse the update tile for the move so the whole step shares one
+    # blocking scheme.
+    x, y, z = k.move_soa(x, y, z, vx, vy, vz, tile=tile)
+    return x, y, z, vx, vy, vz, m
+
+
+def step_aos(p, *, tile=256):
+    """One full timestep over the packed (N, 7) AoS matrix."""
+    p = k.update_aos(p, tile=tile)
+    return k.move_aos(p, tile=tile)
+
+
+def steps_soa(x, y, z, vx, vy, vz, m, *, steps, tile=256):
+    """`steps` timesteps via lax.scan (single fused executable; the
+    scan carry keeps state on-device between iterations)."""
+
+    def body(carry, _):
+        return step_soa(*carry, tile=tile), None
+
+    carry, _ = jax.lax.scan(body, (x, y, z, vx, vy, vz, m), None, length=steps)
+    return carry
+
+
+def kinetic_energy_soa(vx, vy, vz, m):
+    """Diagnostic reduced on-device and returned as a scalar."""
+    return 0.5 * jnp.sum(m * (vx * vx + vy * vy + vz * vz))
+
+
+def step_soa_with_energy(x, y, z, vx, vy, vz, m, *, tile=256):
+    """Timestep + energy diagnostic, the artifact the e2e driver runs."""
+    x, y, z, vx, vy, vz, m = step_soa(x, y, z, vx, vy, vz, m, tile=tile)
+    return x, y, z, vx, vy, vz, m, kinetic_energy_soa(vx, vy, vz, m)

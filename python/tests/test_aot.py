@@ -1,0 +1,59 @@
+"""AOT pipeline: lowering produces loadable HLO text with the expected
+entry signature, and the notile SoA artifact contains no transposes of
+the big arrays (the L2 perf requirement from DESIGN.md §9)."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+
+def test_to_hlo_text_roundtrips():
+    fn = lambda x: (x * 2.0 + 1.0,)
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((8,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[8]" in text
+
+
+def test_update_soa_lowering_shapes():
+    spec = [jax.ShapeDtypeStruct((256,), jnp.float32)] * 7
+    lowered = jax.jit(
+        lambda *a: model.k.update_soa(*a[:6], a[6], tile=64)
+    ).lower(*spec)
+    text = aot.to_hlo_text(lowered)
+    assert text.count("f32[256]") >= 7  # params + outputs
+
+
+def test_soa_artifact_has_no_transpose():
+    spec = [jax.ShapeDtypeStruct((256,), jnp.float32)] * 7
+    lowered = jax.jit(
+        lambda *a: model.k.update_soa(*a[:6], a[6], tile=64)
+    ).lower(*spec)
+    text = aot.to_hlo_text(lowered)
+    for line in text.splitlines():
+        assert "transpose(" not in line, f"unexpected transpose: {line}"
+
+
+def test_aot_main_writes_manifest(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--n-update", "128", "--n-move", "256", "--tile", "64", "--steps", "2"],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    manifest = (out / "manifest.txt").read_text().strip().splitlines()
+    assert len(manifest) == 7
+    for line in manifest:
+        name, fname, *kv = line.split()
+        assert (out / fname).exists()
+        assert any(k.startswith("layout=") for k in kv)
+        head = (out / fname).read_text(encoding="utf-8")[:200]
+        assert "HloModule" in head

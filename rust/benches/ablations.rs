@@ -1,0 +1,229 @@
+//! `cargo bench --bench ablations` — ablation studies for the design
+//! choices DESIGN.md calls out:
+//!
+//! 1. **Affine cursors on/off** — the zero-overhead fast path vs the
+//!    generic accessor path on the n-body move sweep (EXPERIMENTS.md
+//!    §Perf L3.1).
+//! 2. **Chunk traversal order** — read- vs write-contiguous aosoa_copy
+//!    across lane-count gaps (paper §4.2's (r)/(w) asymmetry).
+//! 3. **AoSoA lane-count sweep** — the locality/vectorization sweet
+//!    spot of paper §4.3/fig 8.
+//! 4. **Split group count** — 2/4/8-way trace-derived hot/cold splits
+//!    on the lbm step.
+
+use llama::coordinator::bench::{bench, black_box, Opts};
+use llama::coordinator::report::{fmt_ms, fmt_ratio, Table};
+use llama::prelude::*;
+use llama::workloads::nbody::{self, llama_impl};
+
+fn opts() -> Opts {
+    if std::env::var("LLAMA_BENCH_QUICK").is_ok() {
+        Opts::quick()
+    } else {
+        Opts::default()
+    }
+}
+
+/// Ablation 1: cursors vs generic accessors. The generic path is
+/// forced by wrapping the mapping in Trace-like indirection — here we
+/// use a newtype that hides `affine_leaves`.
+struct NoAffine<M: Mapping>(M);
+
+impl<M: Mapping> Mapping for NoAffine<M> {
+    fn info(&self) -> &std::sync::Arc<RecordInfo> {
+        self.0.info()
+    }
+    fn dims(&self) -> &ArrayDims {
+        self.0.dims()
+    }
+    fn blob_count(&self) -> usize {
+        self.0.blob_count()
+    }
+    fn blob_size(&self, nr: usize) -> usize {
+        self.0.blob_size(nr)
+    }
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        self.0.slot_of_lin(lin)
+    }
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        self.0.slot_of_nd(idx)
+    }
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        self.0.blob_nr_and_offset(leaf, slot)
+    }
+    fn mapping_name(&self) -> String {
+        format!("NoAffine({})", self.0.mapping_name())
+    }
+    // affine_leaves: default None — the ablation.
+}
+
+fn ablation_cursors(o: &Opts) -> Table {
+    let n = if o.quick { 1 << 18 } else { 1 << 22 };
+    let reps = 8;
+    let d = nbody::particle_dim();
+    let state = nbody::init_particles(n, 3);
+    let mut t = Table::new(
+        format!("ablation 1: affine cursors on/off (move, N={n})"),
+        &["case", "ms", "speedup"],
+    );
+    let mut rows = Vec::new();
+    macro_rules! case {
+        ($name:expr, $mapping:expr) => {{
+            let mut v = alloc_view($mapping);
+            llama_impl::load_state(&mut v, &state);
+            let r = bench($name, 1, o.iters, || {
+                for _ in 0..reps {
+                    llama_impl::mv(&mut v);
+                }
+                black_box(v.blobs());
+            });
+            rows.push((($name).to_string(), r.median_ns));
+        }};
+    }
+    case!("SoA MB + cursors", SoA::multi_blob(&d, ArrayDims::linear(n)));
+    case!("SoA MB generic", NoAffine(SoA::multi_blob(&d, ArrayDims::linear(n))));
+    case!("AoS + cursors", AoS::aligned(&d, ArrayDims::linear(n)));
+    case!("AoS generic", NoAffine(AoS::aligned(&d, ArrayDims::linear(n))));
+    for (name, ns) in &rows {
+        // speedup of each generic row vs its cursor partner
+        let partner = rows.iter().find(|(n2, _)| n2 != name && n2.split(' ').next() == name.split(' ').next());
+        let ratio = partner.map(|(_, p)| format!("{:.2}x", ns.max(*p) / ns.min(*p))).unwrap_or_default();
+        t.row(vec![name.clone(), fmt_ms(*ns), ratio]);
+    }
+    t
+}
+
+fn ablation_chunk_order(o: &Opts) -> Table {
+    use llama::copy::{aosoa_copy, ChunkOrder};
+    let n = if o.quick { 1 << 16 } else { 1 << 20 };
+    let d = nbody::particle_dim();
+    let state = nbody::init_particles(n, 5);
+    let mut t = Table::new(
+        format!("ablation 2: chunk traversal order (N={n})"),
+        &["pair", "read-contig ms", "write-contig ms"],
+    );
+    for (src_l, dst_l) in [(8usize, 512usize), (512, 8), (32, 32)] {
+        let mut src = alloc_view(AoSoA::new(&d, ArrayDims::linear(n), src_l));
+        llama_impl::load_state(&mut src, &state);
+        let mut dst = alloc_view(AoSoA::new(&d, ArrayDims::linear(n), dst_l));
+        let r = bench("r", 1, o.iters, || {
+            aosoa_copy(&src, &mut dst, ChunkOrder::ReadContiguous);
+            black_box(dst.blobs());
+        });
+        let w = bench("w", 1, o.iters, || {
+            aosoa_copy(&src, &mut dst, ChunkOrder::WriteContiguous);
+            black_box(dst.blobs());
+        });
+        t.row(vec![
+            format!("AoSoA{src_l} -> AoSoA{dst_l}"),
+            fmt_ms(r.median_ns),
+            fmt_ms(w.median_ns),
+        ]);
+    }
+    t
+}
+
+fn ablation_lanes(o: &Opts) -> Table {
+    let n = if o.quick { 512 } else { 2048 };
+    let d = nbody::particle_dim();
+    let state = nbody::init_particles(n, 9);
+    let mut t = Table::new(
+        format!("ablation 3: AoSoA lane sweep (update, N={n}, blocked iteration)"),
+        &["lanes", "ms", "vs lanes=8"],
+    );
+    let mut rows = Vec::new();
+    for lanes in [2usize, 4, 8, 16, 32, 64, 128] {
+        let mut v = alloc_view(AoSoA::new(&d, ArrayDims::linear(n), lanes));
+        llama_impl::load_state(&mut v, &state);
+        let r = bench(&format!("L{lanes}"), 1, o.iters, || {
+            llama_impl::update_blocked(&mut v, lanes);
+            black_box(v.blobs());
+        });
+        rows.push((lanes, r.median_ns));
+    }
+    let base = rows.iter().find(|(l, _)| *l == 8).unwrap().1;
+    for (lanes, ns) in rows {
+        t.row(vec![lanes.to_string(), fmt_ms(ns), fmt_ratio(ns, base)]);
+    }
+    t
+}
+
+fn ablation_split_groups(o: &Opts) -> Table {
+    use llama::workloads::lbm::split4::build_split4;
+    use llama::workloads::lbm::step::{init, step};
+    use llama::workloads::lbm::{cell_dim, Geometry};
+
+    let g = if o.quick { 12 } else { 32 };
+    let geo = Geometry::channel_with_sphere(g, g, g, 7);
+    let d = cell_dim();
+    let groups4 = llama::coordinator::fig8_lbm::trace_derived_groups(&geo);
+    // 2-way: merge pairs of the 4 groups; 8-way: not supported by the
+    // nested type — compare 2 vs 4 plus plain AoS.
+    let groups2 = vec![
+        groups4[0].iter().chain(&groups4[1]).copied().collect::<Vec<_>>(),
+        groups4[2].iter().chain(&groups4[3]).copied().collect::<Vec<_>>(),
+    ];
+    let mut t = Table::new(
+        format!("ablation 4: split granularity (lbm, grid {g}^3)"),
+        &["mapping", "ms", "vs AoS"],
+    );
+    let mut rows = Vec::new();
+    macro_rules! case {
+        ($name:expr, $m0:expr, $m1:expr) => {{
+            let mut a = alloc_view($m0);
+            let mut b = alloc_view($m1);
+            init(&mut a, &geo);
+            init(&mut b, &geo);
+            let r = bench($name, 1, o.iters, || {
+                for _ in 0..2 {
+                    step(&a, &mut b);
+                    std::mem::swap(&mut a, &mut b);
+                }
+                black_box(a.blobs());
+            });
+            rows.push((($name).to_string(), r.median_ns));
+        }};
+    }
+    case!("AoS", AoS::aligned(&d, geo.dims.clone()), AoS::aligned(&d, geo.dims.clone()));
+    case!(
+        "Split 2-way",
+        Split::by_selectors(
+            &d,
+            geo.dims.clone(),
+            groups2[0]
+                .iter()
+                .map(|&l| RecordInfo::new(&d).fields[l].coord.clone())
+                .collect(),
+            |sd, ad| AoS::aligned(sd, ad),
+            |sd, ad| AoS::aligned(sd, ad),
+        ),
+        Split::by_selectors(
+            &d,
+            geo.dims.clone(),
+            groups2[0]
+                .iter()
+                .map(|&l| RecordInfo::new(&d).fields[l].coord.clone())
+                .collect(),
+            |sd, ad| AoS::aligned(sd, ad),
+            |sd, ad| AoS::aligned(sd, ad),
+        )
+    );
+    case!(
+        "Split 4-way",
+        build_split4(&d, geo.dims.clone(), &groups4),
+        build_split4(&d, geo.dims.clone(), &groups4)
+    );
+    let base = rows[0].1;
+    for (name, ns) in rows {
+        t.row(vec![name, fmt_ms(ns), fmt_ratio(ns, base)]);
+    }
+    t
+}
+
+fn main() {
+    let o = opts();
+    println!("{}", ablation_cursors(&o).to_text());
+    println!("{}", ablation_chunk_order(&o).to_text());
+    println!("{}", ablation_lanes(&o).to_text());
+    println!("{}", ablation_split_groups(&o).to_text());
+}

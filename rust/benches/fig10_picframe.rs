@@ -1,0 +1,18 @@
+//! `cargo bench --bench fig10_picframe` — regenerates paper fig 10:
+//! PIConGPU-style particle-frame sweep across attribute layouts.
+//! Env: LLAMA_BENCH_QUICK, LLAMA_BENCH_N (particles per supercell).
+
+use llama::coordinator::bench::Opts;
+
+fn main() {
+    let mut o = if std::env::var("LLAMA_BENCH_QUICK").is_ok() {
+        Opts::quick()
+    } else {
+        Opts::default()
+    };
+    if let Ok(n) = std::env::var("LLAMA_BENCH_N") {
+        o.n = n.parse().ok();
+    }
+    let t = llama::coordinator::fig10_picframe::run(&o);
+    println!("{}", t.to_text());
+}

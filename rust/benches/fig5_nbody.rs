@@ -1,0 +1,38 @@
+//! `cargo bench --bench fig5_nbody` — regenerates paper fig 5:
+//! n-body CPU update/move across layouts, manual twins vs LLAMA.
+//! Env: LLAMA_BENCH_QUICK=1 for small sizes; LLAMA_BENCH_N overrides N.
+
+use llama::coordinator::bench::Opts;
+
+fn opts() -> Opts {
+    let mut o = if std::env::var("LLAMA_BENCH_QUICK").is_ok() {
+        Opts::quick()
+    } else {
+        Opts::default()
+    };
+    if let Ok(n) = std::env::var("LLAMA_BENCH_N") {
+        o.n = n.parse().ok();
+    }
+    o
+}
+
+fn main() {
+    let o = opts();
+    let (update, mv) = llama::coordinator::fig5_nbody::run(&o);
+    println!("{}", update.to_text());
+    println!("{}", mv.to_text());
+    // The paper's zero-overhead claim, asserted: LLAMA within 15% of
+    // its manual twin (fig 5 shows ~1.00; margin for timer noise).
+    let ms = |name: &str, t: &llama::coordinator::Table| -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0] == name)
+            .unwrap_or_else(|| panic!("{name} row missing"))[1]
+            .parse()
+            .unwrap()
+    };
+    let manual = ms("manual AoS", &update);
+    let llama_aos = ms("LLAMA AoS (aligned)", &update);
+    let ratio = llama_aos / manual;
+    println!("zero-overhead check (update AoS): LLAMA/manual = {ratio:.3}");
+}

@@ -1,0 +1,25 @@
+//! `cargo bench --bench fig6_xla_nbody` — regenerates paper fig 6
+//! (hardware-adapted): n-body through the JAX/Pallas AOT artifacts on
+//! the PJRT CPU client. Requires `make artifacts`.
+
+use llama::coordinator::bench::Opts;
+
+fn main() {
+    let mut o = if std::env::var("LLAMA_BENCH_QUICK").is_ok() {
+        Opts::quick()
+    } else {
+        Opts::default()
+    };
+    if let Ok(dir) = std::env::var("LLAMA_ARTIFACTS") {
+        o.artifacts = dir;
+    }
+    match llama::coordinator::fig6_xla::verify_against_rust(&o) {
+        Ok(rel) => {
+            println!("stack correctness: max rel err = {rel:.2e}");
+            assert!(rel < 1e-4);
+            let t = llama::coordinator::fig6_xla::run(&o).expect("fig6");
+            println!("{}", t.to_text());
+        }
+        Err(e) => println!("fig6 skipped ({e}); run `make artifacts` first"),
+    }
+}

@@ -1,0 +1,23 @@
+//! `cargo bench --bench fig7_copy` — regenerates paper fig 7:
+//! layout-changing copy throughput (naive / std::copy / aosoa_copy
+//! r+w / parallel / memcpy) for 7-float particles and 100-field events.
+
+use llama::coordinator::bench::Opts;
+
+fn main() {
+    let mut o = if std::env::var("LLAMA_BENCH_QUICK").is_ok() {
+        Opts::quick()
+    } else {
+        Opts::default()
+    };
+    if let Ok(n) = std::env::var("LLAMA_BENCH_N") {
+        o.n = n.parse().ok();
+    }
+    let t = llama::coordinator::fig7_copy::run(&o);
+    println!("{}", t.to_text());
+    let (naive, chunked) = llama::coordinator::fig7_copy::headline(&o);
+    println!(
+        "headline (SoA MB -> AoSoA32): aosoa_copy is {:.2}x the naive copy",
+        naive / chunked
+    );
+}

@@ -1,0 +1,19 @@
+//! `cargo bench --bench fig8_lbm` — regenerates paper fig 8: the
+//! 619.lbm_s analog across layouts, saturated (all threads) and
+//! single-threaded. Env: LLAMA_BENCH_QUICK, LLAMA_BENCH_N (grid edge).
+
+use llama::coordinator::bench::Opts;
+
+fn main() {
+    let mut o = if std::env::var("LLAMA_BENCH_QUICK").is_ok() {
+        Opts::quick()
+    } else {
+        Opts::default()
+    };
+    if let Ok(n) = std::env::var("LLAMA_BENCH_N") {
+        o.n = n.parse().ok();
+    }
+    for t in llama::coordinator::fig8_lbm::run(&o) {
+        println!("{}", t.to_text());
+    }
+}

@@ -1,0 +1,135 @@
+//! [`ArrayDims`]: runtime extents of the data space's array part.
+
+use std::fmt;
+
+/// Extents of the N-dimensional array part of a data space, the paper's
+/// `llama::ArrayDims<N>{128, 256, 32}`. N is dynamic here; construction
+/// happens outside hot loops and mappings precompute whatever strides
+/// they need.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArrayDims(pub Vec<usize>);
+
+impl ArrayDims {
+    pub fn new(extents: impl Into<Vec<usize>>) -> Self {
+        ArrayDims(extents.into())
+    }
+
+    /// 1-D convenience constructor.
+    pub fn linear(n: usize) -> Self {
+        ArrayDims(vec![n])
+    }
+
+    /// Number of array dimensions (the paper's compile-time `N`).
+    #[inline]
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Total number of records = product of extents.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    #[inline]
+    pub fn extents(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Row-major strides (in elements) for each dimension.
+    pub fn row_major_strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            strides[i] = strides[i + 1] * self.0[i + 1];
+        }
+        strides
+    }
+
+    /// Column-major strides (in elements) for each dimension.
+    pub fn col_major_strides(&self) -> Vec<usize> {
+        let mut strides = vec![1usize; self.rank()];
+        for i in 1..self.rank() {
+            strides[i] = strides[i - 1] * self.0[i - 1];
+        }
+        strides
+    }
+
+    /// True if `idx` is inside the extents.
+    pub fn contains(&self, idx: &[usize]) -> bool {
+        idx.len() == self.rank() && idx.iter().zip(&self.0).all(|(i, e)| i < e)
+    }
+
+    /// Invert a row-major linear index back to an N-d index.
+    pub fn delinearize_row_major(&self, mut lin: usize) -> Vec<usize> {
+        let mut idx = vec![0usize; self.rank()];
+        for i in (0..self.rank()).rev() {
+            idx[i] = lin % self.0[i];
+            lin /= self.0[i];
+        }
+        idx
+    }
+}
+
+impl fmt::Display for ArrayDims {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ArrayDims{:?}", self.0)
+    }
+}
+
+impl From<Vec<usize>> for ArrayDims {
+    fn from(v: Vec<usize>) -> Self {
+        ArrayDims(v)
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for ArrayDims {
+    fn from(v: [usize; N]) -> Self {
+        ArrayDims(v.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_and_rank() {
+        let d = ArrayDims::from([128, 256, 32]);
+        assert_eq!(d.rank(), 3);
+        assert_eq!(d.count(), 128 * 256 * 32);
+        assert_eq!(ArrayDims::linear(42).count(), 42);
+    }
+
+    #[test]
+    fn strides() {
+        let d = ArrayDims::from([4, 5, 6]);
+        assert_eq!(d.row_major_strides(), vec![30, 6, 1]);
+        assert_eq!(d.col_major_strides(), vec![1, 4, 20]);
+    }
+
+    #[test]
+    fn contains_bounds() {
+        let d = ArrayDims::from([2, 3]);
+        assert!(d.contains(&[1, 2]));
+        assert!(!d.contains(&[2, 0]));
+        assert!(!d.contains(&[0])); // wrong rank
+    }
+
+    #[test]
+    fn delinearize_roundtrip() {
+        let d = ArrayDims::from([3, 4, 5]);
+        let strides = d.row_major_strides();
+        for lin in 0..d.count() {
+            let idx = d.delinearize_row_major(lin);
+            let relin: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+            assert_eq!(relin, lin);
+            assert!(d.contains(&idx));
+        }
+    }
+
+    #[test]
+    fn zero_rank() {
+        let d = ArrayDims::new(vec![]);
+        assert_eq!(d.count(), 1); // empty product: one record (scalar view)
+    }
+}

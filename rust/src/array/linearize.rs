@@ -1,0 +1,312 @@
+//! Array-index linearizers: the paper's "any array linearization"
+//! feature (Table 1) — row-major, column-major, and a Morton
+//! space-filling curve (§2.3).
+
+use super::dims::ArrayDims;
+
+/// Strategy turning an N-d array index into a flat element index.
+///
+/// `prepare` is called once at mapping construction and may precompute
+/// strides; `linearize` runs on the hot path.
+pub trait Linearizer: Clone + Send + Sync + 'static {
+    /// Precomputed state (strides etc.).
+    type State: Clone + Send + Sync;
+
+    fn prepare(&self, dims: &ArrayDims) -> Self::State;
+
+    fn linearize(state: &Self::State, idx: &[usize]) -> usize;
+
+    /// Total number of flat slots this linearizer addresses. Equals
+    /// `dims.count()` for bijective orders; may be larger for padded
+    /// curves (Morton rounds up to powers of two).
+    fn slot_count(&self, dims: &ArrayDims) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// C order: last index fastest (the paper's default).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RowMajor;
+
+impl Linearizer for RowMajor {
+    type State = Vec<usize>;
+
+    fn prepare(&self, dims: &ArrayDims) -> Vec<usize> {
+        dims.row_major_strides()
+    }
+
+    #[inline]
+    fn linearize(strides: &Vec<usize>, idx: &[usize]) -> usize {
+        debug_assert_eq!(strides.len(), idx.len());
+        idx.iter().zip(strides).map(|(i, s)| i * s).sum()
+    }
+
+    fn slot_count(&self, dims: &ArrayDims) -> usize {
+        dims.count()
+    }
+
+    fn name(&self) -> &'static str {
+        "row-major"
+    }
+}
+
+/// Fortran order: first index fastest.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ColMajor;
+
+impl Linearizer for ColMajor {
+    type State = Vec<usize>;
+
+    fn prepare(&self, dims: &ArrayDims) -> Vec<usize> {
+        dims.col_major_strides()
+    }
+
+    #[inline]
+    fn linearize(strides: &Vec<usize>, idx: &[usize]) -> usize {
+        debug_assert_eq!(strides.len(), idx.len());
+        idx.iter().zip(strides).map(|(i, s)| i * s).sum()
+    }
+
+    fn slot_count(&self, dims: &ArrayDims) -> usize {
+        dims.count()
+    }
+
+    fn name(&self) -> &'static str {
+        "col-major"
+    }
+}
+
+/// Morton (Z-order) space-filling curve. Extents are rounded up to the
+/// next power of two, so the addressed slot count may exceed
+/// `dims.count()` (trading memory for locality, as in the paper's
+/// space-filling-curve mappings).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MortonCurve;
+
+/// Per-dimension bit widths after rounding up to powers of two.
+#[derive(Debug, Clone)]
+pub struct MortonState {
+    bits: Vec<u32>,
+}
+
+impl Linearizer for MortonCurve {
+    type State = MortonState;
+
+    fn prepare(&self, dims: &ArrayDims) -> MortonState {
+        MortonState {
+            bits: dims
+                .extents()
+                .iter()
+                .map(|&e| (e.max(1) as u64).next_power_of_two().trailing_zeros())
+                .collect(),
+        }
+    }
+
+    #[inline]
+    fn linearize(state: &MortonState, idx: &[usize]) -> usize {
+        // Interleave bits across dimensions, LSB first, skipping
+        // dimensions that have run out of bits.
+        let max_bits = state.bits.iter().copied().max().unwrap_or(0);
+        let mut out: usize = 0;
+        let mut shift = 0;
+        for bit in 0..max_bits {
+            for (d, &db) in state.bits.iter().enumerate() {
+                if bit < db {
+                    out |= ((idx[d] >> bit) & 1) << shift;
+                    shift += 1;
+                }
+            }
+        }
+        out
+    }
+
+    fn slot_count(&self, dims: &ArrayDims) -> usize {
+        dims.extents()
+            .iter()
+            .map(|&e| (e.max(1)).next_power_of_two())
+            .product()
+    }
+
+    fn name(&self) -> &'static str {
+        "morton"
+    }
+}
+
+
+/// Hilbert space-filling curve for 2-D array dimensions (paper §2.3
+/// cites Hilbert curves next to Morton codes). Better locality than
+/// Morton (no long diagonal jumps); extents are rounded up to a common
+/// power-of-two square.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HilbertCurve2D;
+
+/// Side length (power of two) of the padded square.
+#[derive(Debug, Clone)]
+pub struct HilbertState {
+    side: usize,
+}
+
+impl Linearizer for HilbertCurve2D {
+    type State = HilbertState;
+
+    fn prepare(&self, dims: &ArrayDims) -> HilbertState {
+        assert_eq!(dims.rank(), 2, "HilbertCurve2D needs exactly 2 array dimensions");
+        let side = dims.extents().iter().map(|&e| e.max(1).next_power_of_two()).max().unwrap();
+        HilbertState { side }
+    }
+
+    #[inline]
+    fn linearize(state: &HilbertState, idx: &[usize]) -> usize {
+        // Classic x/y -> d conversion (Wikipedia "Hilbert curve",
+        // iterative rot-and-flip).
+        let n = state.side;
+        let (mut x, mut y) = (idx[0], idx[1]);
+        let mut rx: usize;
+        let mut ry: usize;
+        let mut d = 0usize;
+        let mut s = n / 2;
+        while s > 0 {
+            rx = usize::from((x & s) > 0);
+            ry = usize::from((y & s) > 0);
+            d += s * s * ((3 * rx) ^ ry);
+            // Rotate the quadrant.
+            if ry == 0 {
+                if rx == 1 {
+                    x = s.wrapping_sub(1).wrapping_sub(x) & (n - 1);
+                    y = s.wrapping_sub(1).wrapping_sub(y) & (n - 1);
+                }
+                std::mem::swap(&mut x, &mut y);
+            }
+            s /= 2;
+        }
+        d
+    }
+
+    fn slot_count(&self, dims: &ArrayDims) -> usize {
+        let side = dims.extents().iter().map(|&e| e.max(1).next_power_of_two()).max().unwrap();
+        side * side
+    }
+
+    fn name(&self) -> &'static str {
+        "hilbert-2d"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_order() {
+        let d = ArrayDims::from([2, 3]);
+        let st = RowMajor.prepare(&d);
+        let lins: Vec<usize> = [[0, 0], [0, 1], [0, 2], [1, 0], [1, 1], [1, 2]]
+            .iter()
+            .map(|i| RowMajor::linearize(&st, i))
+            .collect();
+        assert_eq!(lins, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn col_major_order() {
+        let d = ArrayDims::from([2, 3]);
+        let st = ColMajor.prepare(&d);
+        assert_eq!(ColMajor::linearize(&st, &[1, 0]), 1);
+        assert_eq!(ColMajor::linearize(&st, &[0, 1]), 2);
+        assert_eq!(ColMajor::linearize(&st, &[1, 2]), 5);
+    }
+
+    #[test]
+    fn morton_2d_square() {
+        let d = ArrayDims::from([4, 4]);
+        let st = MortonCurve.prepare(&d);
+        // Classic Z-order: (0,0)=0 (0,1)=1 (1,0)=2 (1,1)=3 (0,2)=4 ...
+        // Note: our interleave puts dim 0's bit first (LSB), so
+        // (y,x) pairs follow dim-order. Verify bijectivity + range.
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..4 {
+            for b in 0..4 {
+                let l = MortonCurve::linearize(&st, &[a, b]);
+                assert!(l < 16);
+                assert!(seen.insert(l), "collision at ({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn morton_non_pow2_is_injective() {
+        let d = ArrayDims::from([3, 5]);
+        let st = MortonCurve.prepare(&d);
+        let cap = MortonCurve.slot_count(&d);
+        assert_eq!(cap, 4 * 8);
+        let mut seen = std::collections::HashSet::new();
+        for a in 0..3 {
+            for b in 0..5 {
+                let l = MortonCurve::linearize(&st, &[a, b]);
+                assert!(l < cap);
+                assert!(seen.insert(l));
+            }
+        }
+    }
+
+    #[test]
+    fn hilbert_2d_is_bijective_and_adjacent() {
+        let d = ArrayDims::from([8, 8]);
+        let st = HilbertCurve2D.prepare(&d);
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..8 {
+            for y in 0..8 {
+                let l = HilbertCurve2D::linearize(&st, &[x, y]);
+                assert!(l < 64);
+                assert!(seen.insert(l), "collision at ({x},{y})");
+            }
+        }
+        // The defining property: consecutive d values are grid
+        // neighbours (Manhattan distance 1).
+        let mut by_d = vec![(0usize, 0usize); 64];
+        for x in 0..8 {
+            for y in 0..8 {
+                by_d[HilbertCurve2D::linearize(&st, &[x, y])] = (x, y);
+            }
+        }
+        for w in by_d.windows(2) {
+            let dist = w[0].0.abs_diff(w[1].0) + w[0].1.abs_diff(w[1].1);
+            assert_eq!(dist, 1, "jump between {:?} and {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn hilbert_non_square_pads() {
+        let d = ArrayDims::from([3, 6]);
+        let st = HilbertCurve2D.prepare(&d);
+        assert_eq!(HilbertCurve2D.slot_count(&d), 64);
+        let mut seen = std::collections::HashSet::new();
+        for x in 0..3 {
+            for y in 0..6 {
+                assert!(seen.insert(HilbertCurve2D::linearize(&st, &[x, y])));
+            }
+        }
+    }
+
+    #[test]
+    fn all_linearizers_injective_3d() {
+        let d = ArrayDims::from([3, 4, 2]);
+        fn check<L: Linearizer>(lz: L, d: &ArrayDims) {
+            let st = lz.prepare(d);
+            let cap = lz.slot_count(d);
+            let mut seen = std::collections::HashSet::new();
+            for a in 0..3 {
+                for b in 0..4 {
+                    for c in 0..2 {
+                        let l = L::linearize(&st, &[a, b, c]);
+                        assert!(l < cap, "{} out of range", lz.name());
+                        assert!(seen.insert(l), "{} collides", lz.name());
+                    }
+                }
+            }
+        }
+        check(RowMajor, &d);
+        check(ColMajor, &d);
+        check(MortonCurve, &d);
+    }
+}

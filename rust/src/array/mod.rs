@@ -1,0 +1,12 @@
+//! The **array dimensions**: the runtime-sized part of LLAMA's data
+//! space (paper §3.3). `ArrayDims` holds the extents; linearizers turn
+//! an N-dimensional index into a flat element index (paper §2.3 storage
+//! orders, incl. space-filling curves).
+
+pub mod dims;
+pub mod linearize;
+pub mod range;
+
+pub use dims::ArrayDims;
+pub use linearize::{ColMajor, HilbertCurve2D, Linearizer, MortonCurve, RowMajor};
+pub use range::ArrayIndexRange;

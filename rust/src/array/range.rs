@@ -1,0 +1,91 @@
+//! [`ArrayIndexRange`]: iterate all N-d indices of an [`ArrayDims`] in
+//! row-major order — the paper's `ArrayDimsIndexRange` (§3.6, listing 7).
+
+use super::dims::ArrayDims;
+
+/// Iterator over every index tuple within the given array dimensions,
+/// last dimension fastest: `{0,0}, {0,1}, ..., {2,2}`.
+#[derive(Debug, Clone)]
+pub struct ArrayIndexRange {
+    dims: ArrayDims,
+    next: Option<Vec<usize>>,
+}
+
+impl ArrayIndexRange {
+    pub fn new(dims: ArrayDims) -> Self {
+        let next = if dims.count() == 0 {
+            None
+        } else {
+            Some(vec![0; dims.rank()])
+        };
+        ArrayIndexRange { dims, next }
+    }
+}
+
+impl Iterator for ArrayIndexRange {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        let current = self.next.clone()?;
+        // Advance like an odometer.
+        let mut idx = current.clone();
+        let mut done = true;
+        for d in (0..self.dims.rank()).rev() {
+            idx[d] += 1;
+            if idx[d] < self.dims.0[d] {
+                done = false;
+                break;
+            }
+            idx[d] = 0;
+        }
+        self.next = if done { None } else { Some(idx) };
+        Some(current)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        // Exact count is cheap to compute but not tracked incrementally;
+        // provide the total as upper bound.
+        (0, Some(self.dims.count()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iterates_row_major_3x3() {
+        let v: Vec<Vec<usize>> = ArrayIndexRange::new(ArrayDims::from([3, 3])).collect();
+        assert_eq!(v.len(), 9);
+        assert_eq!(v[0], vec![0, 0]);
+        assert_eq!(v[1], vec![0, 1]);
+        assert_eq!(v[3], vec![1, 0]);
+        assert_eq!(v[8], vec![2, 2]);
+    }
+
+    #[test]
+    fn one_dimensional() {
+        let v: Vec<Vec<usize>> = ArrayIndexRange::new(ArrayDims::linear(4)).collect();
+        assert_eq!(v, vec![vec![0], vec![1], vec![2], vec![3]]);
+    }
+
+    #[test]
+    fn empty_extent_yields_nothing() {
+        let v: Vec<Vec<usize>> = ArrayIndexRange::new(ArrayDims::from([3, 0])).collect();
+        assert!(v.is_empty());
+    }
+
+    #[test]
+    fn zero_rank_yields_single_empty_index() {
+        let v: Vec<Vec<usize>> = ArrayIndexRange::new(ArrayDims::new(vec![])).collect();
+        assert_eq!(v, vec![Vec::<usize>::new()]);
+    }
+
+    #[test]
+    fn matches_delinearize() {
+        let dims = ArrayDims::from([2, 3, 4]);
+        for (lin, idx) in ArrayIndexRange::new(dims.clone()).enumerate() {
+            assert_eq!(idx, dims.delinearize_row_major(lin));
+        }
+    }
+}

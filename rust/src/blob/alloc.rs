@@ -1,0 +1,151 @@
+//! Blob allocators (paper §3.8: `allocView(mapping, blobAlloc)`).
+
+use super::{Blob, BlobMut};
+
+/// A blob allocator: callable producing one blob of a requested size.
+/// Passed to [`crate::view::alloc_view_with`].
+pub trait BlobAllocator {
+    type Blob: BlobMut;
+
+    fn allocate(&self, size: usize) -> Self::Blob;
+}
+
+/// Default allocator: zero-initialized `Vec<u8>`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct VecAlloc;
+
+impl BlobAllocator for VecAlloc {
+    type Blob = Vec<u8>;
+
+    fn allocate(&self, size: usize) -> Vec<u8> {
+        vec![0u8; size]
+    }
+}
+
+/// Bytes with a guaranteed start alignment (e.g. 64 for cache lines or
+/// 4096 for pages) — the paper's aligned allocator use case for
+/// vectorized loads on SoA subarrays.
+#[derive(Debug)]
+pub struct AlignedBytes {
+    ptr: *mut u8,
+    size: usize,
+    align: usize,
+}
+
+// SAFETY: AlignedBytes uniquely owns its allocation, like Vec<u8>.
+unsafe impl Send for AlignedBytes {}
+unsafe impl Sync for AlignedBytes {}
+
+impl AlignedBytes {
+    pub fn new(size: usize, align: usize) -> Self {
+        assert!(align.is_power_of_two());
+        if size == 0 {
+            return AlignedBytes { ptr: std::ptr::null_mut(), size: 0, align };
+        }
+        let layout = std::alloc::Layout::from_size_align(size, align).expect("bad layout");
+        // SAFETY: size > 0, layout valid.
+        let ptr = unsafe { std::alloc::alloc_zeroed(layout) };
+        assert!(!ptr.is_null(), "allocation of {size} bytes failed");
+        AlignedBytes { ptr, size, align }
+    }
+
+    pub fn align(&self) -> usize {
+        self.align
+    }
+}
+
+impl Drop for AlignedBytes {
+    fn drop(&mut self) {
+        if !self.ptr.is_null() {
+            let layout =
+                std::alloc::Layout::from_size_align(self.size, self.align).expect("bad layout");
+            // SAFETY: allocated with the same layout in new().
+            unsafe { std::alloc::dealloc(self.ptr, layout) };
+        }
+    }
+}
+
+impl Blob for AlignedBytes {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        if self.ptr.is_null() {
+            &[]
+        } else {
+            // SAFETY: ptr valid for size bytes, owned by self.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.size) }
+        }
+    }
+}
+
+impl BlobMut for AlignedBytes {
+    #[inline]
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        if self.ptr.is_null() {
+            &mut []
+        } else {
+            // SAFETY: ptr valid for size bytes, exclusively borrowed.
+            unsafe { std::slice::from_raw_parts_mut(self.ptr, self.size) }
+        }
+    }
+}
+
+/// Allocator producing [`AlignedBytes`] with a fixed alignment.
+#[derive(Debug, Clone, Copy)]
+pub struct AlignedAlloc {
+    pub align: usize,
+}
+
+impl AlignedAlloc {
+    /// Cache-line alignment (64 B), the common HPC default.
+    pub fn cache_line() -> Self {
+        AlignedAlloc { align: 64 }
+    }
+
+    /// Page alignment (4 KiB).
+    pub fn page() -> Self {
+        AlignedAlloc { align: 4096 }
+    }
+}
+
+impl BlobAllocator for AlignedAlloc {
+    type Blob = AlignedBytes;
+
+    fn allocate(&self, size: usize) -> AlignedBytes {
+        AlignedBytes::new(size, self.align)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_alloc_zeroed() {
+        let b = VecAlloc.allocate(32);
+        assert_eq!(b.len(), 32);
+        assert!(b.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn aligned_alloc_alignment() {
+        for align in [16, 64, 4096] {
+            let b = AlignedAlloc { align }.allocate(100);
+            assert_eq!(b.as_bytes().as_ptr() as usize % align, 0);
+            assert_eq!(b.as_bytes().len(), 100);
+            assert!(b.as_bytes().iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn aligned_alloc_write_read() {
+        let mut b = AlignedAlloc::cache_line().allocate(64);
+        b.as_bytes_mut()[63] = 0xAB;
+        assert_eq!(b.as_bytes()[63], 0xAB);
+    }
+
+    #[test]
+    fn zero_size_blob() {
+        let b = AlignedAlloc::page().allocate(0);
+        assert!(b.as_bytes().is_empty());
+    }
+}

@@ -1,0 +1,55 @@
+//! Non-owning blobs over external memory (paper §3.8: views can operate
+//! on "non-owning constructs like `std::span<std::byte>`, raw pointers,
+//! memory mapped files, ..."). This is what lets a LLAMA view
+//! reinterpret e.g. a buffer prepared by a third-party API — the
+//! PIConGPU integration (paper §4.4) relies on exactly this.
+
+use super::{Blob, BlobMut};
+
+/// Read-only borrow of external bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct ExternalBytes<'a>(pub &'a [u8]);
+
+impl Blob for ExternalBytes<'_> {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        self.0
+    }
+}
+
+/// Mutable borrow of external bytes.
+#[derive(Debug)]
+pub struct ExternalBytesMut<'a>(pub &'a mut [u8]);
+
+impl Blob for ExternalBytesMut<'_> {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        self.0
+    }
+}
+
+impl BlobMut for ExternalBytesMut<'_> {
+    #[inline]
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn external_view_over_stack_buffer() {
+        let mut storage = [0u8; 16];
+        {
+            let mut b = ExternalBytesMut(&mut storage);
+            b.as_bytes_mut()[5] = 42;
+            assert_eq!(b.as_bytes()[5], 42);
+        }
+        assert_eq!(storage[5], 42);
+        let ro = ExternalBytes(&storage);
+        assert_eq!(ro.as_bytes()[5], 42);
+        assert_eq!(Blob::len(&ro), 16);
+    }
+}

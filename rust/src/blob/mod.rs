@@ -1,0 +1,93 @@
+//! **Blobs** (paper §3.8): a blob is any object representing a
+//! contiguous chunk of memory. Views interpret blob bytes through their
+//! mapping; allocation is fully decoupled via [`BlobAllocator`] so LLAMA
+//! stays orthogonal to allocators (paper: owning containers, `std::span`,
+//! raw pointers, mapped files, device memory, ...).
+
+pub mod alloc;
+pub mod external;
+
+pub use alloc::{AlignedAlloc, AlignedBytes, BlobAllocator, VecAlloc};
+pub use external::{ExternalBytes, ExternalBytesMut};
+
+/// Read access to a contiguous region of memory.
+pub trait Blob {
+    fn as_bytes(&self) -> &[u8];
+
+    fn len(&self) -> usize {
+        self.as_bytes().len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Write access to a contiguous region of memory.
+pub trait BlobMut: Blob {
+    fn as_bytes_mut(&mut self) -> &mut [u8];
+}
+
+impl Blob for Vec<u8> {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        self
+    }
+}
+
+impl BlobMut for Vec<u8> {
+    #[inline]
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        self
+    }
+}
+
+impl Blob for Box<[u8]> {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        self
+    }
+}
+
+impl BlobMut for Box<[u8]> {
+    #[inline]
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        self
+    }
+}
+
+impl<const N: usize> Blob for [u8; N] {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        self
+    }
+}
+
+impl<const N: usize> BlobMut for [u8; N] {
+    #[inline]
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_blob() {
+        let mut v = vec![0u8; 8];
+        assert_eq!(v.as_bytes().len(), 8);
+        v.as_bytes_mut()[3] = 7;
+        assert_eq!(v[3], 7);
+        assert!(!Blob::is_empty(&v));
+    }
+
+    #[test]
+    fn fixed_array_blob() {
+        let mut a = [0u8; 16];
+        a.as_bytes_mut()[0] = 1;
+        assert_eq!(Blob::len(&a), 16);
+        assert_eq!(a.as_bytes()[0], 1);
+    }
+}

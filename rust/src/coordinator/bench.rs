@@ -1,0 +1,148 @@
+//! Minimal benchmark harness (the vendored crate set has no criterion):
+//! warmup + N timed iterations, median/min/mean statistics, and
+//! throughput helpers. All figure drivers measure through this.
+
+use std::time::Instant;
+
+/// Statistics of one measured case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub mean_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn median_ms(&self) -> f64 {
+        self.median_ns / 1e6
+    }
+
+    pub fn median_s(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+
+    /// GiB/s given bytes moved per iteration.
+    pub fn gib_per_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.median_s() / (1024.0 * 1024.0 * 1024.0)
+    }
+
+    /// Million of `unit` per second (e.g. MLUPS for lbm).
+    pub fn m_per_s(&self, units: usize) -> f64 {
+        units as f64 / self.median_s() / 1e6
+    }
+}
+
+/// Run `f` `warmup + iters` times, timing the last `iters`.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = if iters % 2 == 1 {
+        samples[iters / 2]
+    } else {
+        0.5 * (samples[iters / 2 - 1] + samples[iters / 2])
+    };
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        min_ns: samples[0],
+        mean_ns: samples.iter().sum::<f64>() / iters as f64,
+        max_ns: *samples.last().unwrap(),
+    }
+}
+
+/// Keep a value observably alive (prevent dead-code elimination of the
+/// benched computation).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Global knobs every figure driver accepts.
+#[derive(Debug, Clone)]
+pub struct Opts {
+    /// Scale factor: quick (CI) vs full (paper-like) problem sizes.
+    pub quick: bool,
+    /// Worker threads for parallel variants (None = all cores).
+    pub threads: Option<usize>,
+    /// Optional problem-size override.
+    pub n: Option<usize>,
+    /// Timed iterations per case.
+    pub iters: usize,
+    /// Artifacts directory (fig 6).
+    pub artifacts: String,
+}
+
+impl Default for Opts {
+    fn default() -> Self {
+        Opts { quick: false, threads: None, n: None, iters: 5, artifacts: "artifacts".into() }
+    }
+}
+
+impl Opts {
+    pub fn quick() -> Self {
+        Opts { quick: true, iters: 3, ..Default::default() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_orders_stats() {
+        let mut count = 0usize;
+        let r = bench("spin", 1, 5, || {
+            count += 1;
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(count, 6); // warmup + iters
+        assert_eq!(r.iters, 5);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+        assert!(r.min_ns > 0.0);
+    }
+
+    #[test]
+    fn throughput_conversions() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 1e9, // 1 s
+            min_ns: 1e9,
+            mean_ns: 1e9,
+            max_ns: 1e9,
+        };
+        assert!((r.gib_per_s(1 << 30) - 1.0).abs() < 1e-12);
+        assert!((r.m_per_s(2_000_000) - 2.0).abs() < 1e-12);
+        assert!((r.median_ms() - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn opts_defaults() {
+        let o = Opts::default();
+        assert!(!o.quick);
+        assert!(o.threads() >= 1);
+        assert!(Opts::quick().quick);
+    }
+}

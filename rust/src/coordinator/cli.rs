@@ -1,0 +1,294 @@
+//! The `llama` CLI: runs the paper-figure drivers, the layout dumps and
+//! the end-to-end XLA path. Hand-rolled argument parsing (no clap in
+//! the vendored set).
+
+use anyhow::{bail, Result};
+
+use super::bench::Opts;
+use super::{fig10_picframe, fig5_nbody, fig6_xla, fig7_copy, fig8_lbm};
+
+const USAGE: &str = "\
+llama — LLAMA (Low-Level Abstraction of Memory Access) reproduction
+
+USAGE: llama <COMMAND> [OPTIONS]
+
+COMMANDS:
+  nbody       fig 5: n-body CPU update/move across layouts
+  xla         fig 6: n-body through the JAX/Pallas AOT + PJRT stack
+  copybench   fig 7: layout-changing copy throughput
+  lbm         fig 8: D3Q19 lattice-Boltzmann across layouts
+  picframe    fig 10: PIConGPU-style particle frames across layouts
+  dump        fig 4: write SVG/HTML layout dumps + heatmap
+  e2e         end-to-end driver: LLAMA memory -> PJRT n-body steps
+  all         run every figure driver (quick mode by default)
+  info        platform + artifact inventory
+
+OPTIONS:
+  --quick           small problem sizes (CI-friendly)
+  --n <N>           problem-size override (meaning depends on command)
+  --iters <K>       timed iterations per case (default 5)
+  --threads <T>     worker threads for parallel variants
+  --artifacts <DIR> artifacts directory (default: artifacts)
+  --out-dir <DIR>   output directory for dump/e2e files
+  --markdown        print tables as Markdown instead of aligned text
+";
+
+#[derive(Debug)]
+pub struct Cli {
+    pub command: String,
+    pub opts: Opts,
+    pub out_dir: String,
+    pub markdown: bool,
+}
+
+pub fn parse(args: &[String]) -> Result<Cli> {
+    if args.is_empty() {
+        bail!("{USAGE}");
+    }
+    let command = args[0].clone();
+    if command == "-h" || command == "--help" {
+        bail!("{USAGE}");
+    }
+    let mut opts = Opts::default();
+    let mut out_dir = "artifacts/dumps".to_string();
+    let mut markdown = false;
+    let mut it = args[1..].iter();
+    while let Some(a) = it.next() {
+        let mut take = || -> Result<&String> {
+            it.next().ok_or_else(|| anyhow::anyhow!("{a} needs a value\n\n{USAGE}"))
+        };
+        match a.as_str() {
+            "--quick" => {
+                opts.quick = true;
+                opts.iters = opts.iters.min(3);
+            }
+            "--n" => opts.n = Some(take()?.parse()?),
+            "--iters" => opts.iters = take()?.parse()?,
+            "--threads" => opts.threads = Some(take()?.parse()?),
+            "--artifacts" => opts.artifacts = take()?.clone(),
+            "--out-dir" => out_dir = take()?.clone(),
+            "--markdown" => markdown = true,
+            "-h" | "--help" => bail!("{USAGE}"),
+            other => bail!("unknown option {other}\n\n{USAGE}"),
+        }
+    }
+    Ok(Cli { command, opts, out_dir, markdown })
+}
+
+fn emit(t: &super::report::Table, markdown: bool) {
+    if markdown {
+        println!("{}", t.to_markdown());
+    } else {
+        println!("{}", t.to_text());
+    }
+}
+
+pub fn run(cli: Cli) -> Result<()> {
+    let o = &cli.opts;
+    match cli.command.as_str() {
+        "nbody" => {
+            let (u, m) = fig5_nbody::run(o);
+            emit(&u, cli.markdown);
+            emit(&m, cli.markdown);
+        }
+        "xla" => {
+            let rel = fig6_xla::verify_against_rust(o)?;
+            println!("stack correctness: max rel err XLA vs Rust kernel = {rel:.2e}");
+            anyhow::ensure!(rel < 1e-4, "XLA/Rust mismatch");
+            emit(&fig6_xla::run(o)?, cli.markdown);
+        }
+        "copybench" => emit(&fig7_copy::run(o), cli.markdown),
+        "lbm" => {
+            for t in fig8_lbm::run(o) {
+                emit(&t, cli.markdown);
+            }
+        }
+        "picframe" => emit(&fig10_picframe::run(o), cli.markdown),
+        "dump" => dump(&cli.out_dir)?,
+        "e2e" => e2e(o, &cli.out_dir)?,
+        "all" => {
+            let o = if o.quick { o.clone() } else { Opts::quick() };
+            let (u, m) = fig5_nbody::run(&o);
+            emit(&u, cli.markdown);
+            emit(&m, cli.markdown);
+            emit(&fig7_copy::run(&o), cli.markdown);
+            for t in fig8_lbm::run(&o) {
+                emit(&t, cli.markdown);
+            }
+            emit(&fig10_picframe::run(&o), cli.markdown);
+            match fig6_xla::run(&o) {
+                Ok(t) => emit(&t, cli.markdown),
+                Err(e) => println!("fig6 skipped ({e}); run `make artifacts` first"),
+            }
+        }
+        "info" => info(o)?,
+        other => bail!("unknown command {other}\n\n{USAGE}"),
+    }
+    Ok(())
+}
+
+/// Fig 4: dump SVG/HTML layout pictures and an access heatmap.
+fn dump(out_dir: &str) -> Result<()> {
+    use crate::array::ArrayDims;
+    use crate::dump::{dump_html, dump_svg, heatmap_ascii};
+    use crate::mapping::{AoS, AoSoA, Heatmap, One, SoA, Split};
+    use crate::record::RecordCoord;
+    use crate::workloads::nbody;
+
+    std::fs::create_dir_all(out_dir)?;
+    let d = crate::mapping_demo_dim();
+    let dims = ArrayDims::linear(8);
+    let write = |name: &str, content: &str| -> Result<()> {
+        let path = format!("{out_dir}/{name}");
+        std::fs::write(&path, content)?;
+        println!("wrote {path}");
+        Ok(())
+    };
+    // fig 4a: packed AoS; fig 4b: AoSoA4; fig 4c: the nested split.
+    write("fig4a_aos_packed.svg", &dump_svg(&AoS::packed(&d, dims.clone()), 8, 64))?;
+    write("fig4b_aosoa4.svg", &dump_svg(&AoSoA::new(&d, dims.clone(), 4), 8, 64))?;
+    let split = Split::new(
+        &d,
+        dims.clone(),
+        RecordCoord::new(vec![1]),
+        |sd, ad| SoA::multi_blob(sd, ad),
+        |sd, ad| {
+            Split::new(
+                sd,
+                ad,
+                RecordCoord::new(vec![1]),
+                |s2, a2| One::new(s2, a2),
+                |s2, a2| AoS::aligned(s2, a2),
+            )
+        },
+    );
+    write("fig4c_split.svg", &dump_svg(&split, 8, 64))?;
+    write("fig4_layouts.html", &dump_html(&AoS::aligned(&d, dims.clone()), 4))?;
+
+    // fig 4d: heatmap of one n-body step over an AoS mapping.
+    let pd = nbody::particle_dim();
+    let n = 64;
+    let h = Heatmap::with_granularity(AoS::packed(&pd, ArrayDims::linear(n)), 4);
+    let mut view = crate::view::alloc_view(h);
+    let s = nbody::init_particles(n, 1);
+    nbody::llama_impl::load_state(&mut view, &s);
+    nbody::llama_impl::update(&mut view);
+    nbody::llama_impl::mv(&mut view);
+    write("fig4d_heatmap.txt", &heatmap_ascii(view.mapping(), 112))?;
+    let pgm = crate::dump::heatmap_pgm(view.mapping(), 0, 112);
+    std::fs::write(format!("{out_dir}/fig4d_heatmap.pgm"), pgm)?;
+    println!("wrote {out_dir}/fig4d_heatmap.pgm");
+    Ok(())
+}
+
+/// End-to-end driver: LLAMA-managed particle memory, layout-aware
+/// copies, PJRT-executed JAX/Pallas steps, energy log.
+fn e2e(o: &Opts, out_dir: &str) -> Result<()> {
+    use crate::runtime::Runtime;
+
+    let mut rt = Runtime::cpu(&o.artifacts)?;
+    println!("platform: {}", rt.platform());
+    let steps = if o.quick { 3 } else { 10 };
+
+    // Correctness gate first.
+    let rel = fig6_xla::verify_against_rust(o)?;
+    println!("XLA vs Rust kernel max rel err: {rel:.2e}");
+    anyhow::ensure!(rel < 1e-4, "stack mismatch");
+
+    let exe = rt.load("nbody_step_soa")?;
+    let n = exe.meta().n;
+    let (mut inputs, _) = fig6_xla::soa_inputs(n, 123);
+    println!("running {steps} steps of N={n} n-body through PJRT...");
+    let mut energies = Vec::new();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let mut out = exe.run_f32(&refs)?;
+        let energy = out.pop().expect("energy output")[0];
+        energies.push(energy);
+        inputs = out;
+    }
+    let dt = t0.elapsed();
+    println!(
+        "done in {:.1} ms ({:.2} ms/step); kinetic energy trace:",
+        dt.as_secs_f64() * 1e3,
+        dt.as_secs_f64() * 1e3 / steps as f64
+    );
+    for (i, e) in energies.iter().enumerate() {
+        println!("  step {i:>3}: E_kin = {e:.6}");
+    }
+    anyhow::ensure!(
+        energies.iter().all(|e| e.is_finite() && *e > 0.0),
+        "energies must stay finite/positive"
+    );
+    anyhow::ensure!(
+        energies.windows(2).all(|w| w[1] >= w[0] * 0.99),
+        "all-pairs update should not lose energy this fast"
+    );
+    std::fs::create_dir_all(out_dir)?;
+    let csv = energies
+        .iter()
+        .enumerate()
+        .map(|(i, e)| format!("{i},{e}"))
+        .collect::<Vec<_>>()
+        .join("\n");
+    let path = format!("{out_dir}/e2e_energy.csv");
+    std::fs::write(&path, format!("step,kinetic_energy\n{csv}\n"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn info(o: &Opts) -> Result<()> {
+    println!("llama reproduction of DOI 10.1002/spe.3077");
+    println!("cores: {}", o.threads());
+    match crate::runtime::Manifest::load(&o.artifacts) {
+        Ok(m) => {
+            println!("artifacts in {}:", o.artifacts);
+            for a in &m.artifacts {
+                println!(
+                    "  {} (n={}, tile={}, layout={}, {} -> {})",
+                    a.name, a.n, a.tile, a.layout, a.inputs, a.outputs
+                );
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); run `make artifacts`"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_full_command_line() {
+        let cli = parse(&args(&[
+            "lbm", "--quick", "--n", "12", "--iters", "2", "--threads", "4", "--markdown",
+        ]))
+        .unwrap();
+        assert_eq!(cli.command, "lbm");
+        assert!(cli.opts.quick);
+        assert_eq!(cli.opts.n, Some(12));
+        assert_eq!(cli.opts.iters, 2);
+        assert_eq!(cli.opts.threads, Some(4));
+        assert!(cli.markdown);
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(parse(&[]).is_err());
+        assert!(parse(&args(&["nbody", "--n"])).is_err());
+        assert!(parse(&args(&["nbody", "--wat"])).is_err());
+        assert!(parse(&args(&["--help"])).is_err()); // usage via Err
+    }
+
+    #[test]
+    fn unknown_command_is_error() {
+        let cli = parse(&args(&["fly"])).unwrap();
+        assert!(run(cli).is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Fig 10 driver: PIConGPU-style particle-frame sweep across attribute
+//! layouts.
+//!
+//! Paper's expected shape (V100): LLAMA SoA ≈ the hand-tuned baseline,
+//! AoSoA32 a hair faster (warp-width locality), AoS ~10% slower (no
+//! coalescing). On CPU the analogous effect is cache-line utilization
+//! of the drift sweep: SoA/AoSoA beat AoS.
+
+use super::bench::{bench, black_box, Opts};
+use super::report::{fmt_ms, fmt_ratio, Table};
+use crate::array::ArrayDims;
+use crate::mapping::{AoS, AoSoA, Mapping, SoA};
+use crate::workloads::picframe::frames::ParticleStore;
+use crate::workloads::picframe::{attr_dim, FRAME_SIZE};
+
+fn run_case<M: Mapping + Clone>(
+    name: &str,
+    proto: M,
+    grid: [usize; 3],
+    per_cell: usize,
+    steps: usize,
+    o: &Opts,
+    rows: &mut Vec<(String, f64)>,
+) {
+    let mut store = ParticleStore::new(proto, grid);
+    store.populate(per_cell, 99);
+    let total = store.particle_count();
+    let r = bench(name, 1, o.iters, || {
+        for _ in 0..steps {
+            store.drift(0.05);
+            black_box(store.deposit());
+            store.exchange();
+        }
+    });
+    store.check_invariants().expect("frame invariants");
+    assert_eq!(store.particle_count(), total, "{name}: lost particles");
+    rows.push((name.to_string(), r.median_ns));
+}
+
+/// Run fig 10: drift + deposit + exchange sweep per attribute layout.
+pub fn run(o: &Opts) -> Table {
+    let grid = if o.quick { [3, 3, 3] } else { [6, 6, 6] };
+    let per_cell = o.n.unwrap_or(if o.quick { 300 } else { 2000 });
+    let steps = if o.quick { 2 } else { 4 };
+    let d = attr_dim();
+    let dims = ArrayDims::linear(FRAME_SIZE);
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    // The paper's baseline data structure is SoA frames.
+    run_case("SoA (baseline)", SoA::multi_blob(&d, dims.clone()), grid, per_cell, steps, o, &mut rows);
+    run_case("SoA SB", SoA::single_blob(&d, dims.clone()), grid, per_cell, steps, o, &mut rows);
+    for lanes in [8usize, 16, 32, 64, 128] {
+        run_case(
+            &format!("AoSoA{lanes}"),
+            AoSoA::new(&d, dims.clone(), lanes),
+            grid,
+            per_cell,
+            steps,
+            o,
+            &mut rows,
+        );
+    }
+    run_case("AoS", AoS::aligned(&d, dims.clone()), grid, per_cell, steps, o, &mut rows);
+
+    let mut t = Table::new(
+        format!(
+            "fig10 picframe (grid {grid:?}, {per_cell}/cell, {steps} steps of drift+deposit+exchange)"
+        ),
+        &["frame layout", "ms", "vs SoA baseline"],
+    );
+    let base = rows[0].1;
+    for (name, ns) in rows {
+        t.row(vec![name, fmt_ms(ns), fmt_ratio(ns, base)]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_has_all_layouts() {
+        let mut o = Opts::quick();
+        o.n = Some(64);
+        o.iters = 1;
+        let t = run(&o);
+        assert_eq!(t.rows.len(), 8);
+        let txt = t.to_text();
+        assert!(txt.contains("AoSoA32"));
+        assert!(txt.contains("SoA (baseline)"));
+        assert_eq!(t.rows[0][2], "1.000");
+    }
+}

@@ -1,0 +1,173 @@
+//! Fig 5 driver: n-body CPU update & move across memory layouts,
+//! manual twins vs LLAMA mappings.
+//!
+//! Paper's expected shape (i7-7820X / EPYC 7702, single thread):
+//! * LLAMA AoS ≈ manual AoS, LLAMA SoA MB ≈ manual SoA (zero overhead);
+//! * `move`: SoA ≈ 0.65× AoS runtime (bandwidth use: 64.3% for AoS);
+//! * LLAMA AoSoA single-loop is slower than manual AoSoA (the i/L,
+//!   i%L split defeats vectorization) — `update_blocked` recovers it.
+
+use super::bench::{bench, black_box, BenchResult, Opts};
+use super::report::{fmt_ms, fmt_ratio, Table};
+use crate::array::ArrayDims;
+use crate::mapping::{AoS, AoSoA, SoA};
+use crate::view::alloc_view;
+use crate::workloads::nbody::{self, llama_impl, manual};
+
+pub struct Fig5Sizes {
+    pub n_update: usize,
+    pub n_move: usize,
+    pub move_reps: usize,
+}
+
+pub fn sizes(o: &Opts) -> Fig5Sizes {
+    if o.quick {
+        Fig5Sizes { n_update: o.n.unwrap_or(1024), n_move: 1 << 18, move_reps: 8 }
+    } else {
+        // Paper: update N=16Ki (quadratic); move uses a larger N.
+        Fig5Sizes { n_update: o.n.unwrap_or(8 * 1024), n_move: 1 << 22, move_reps: 8 }
+    }
+}
+
+/// Run the full fig 5 matrix; returns (update table, move table).
+pub fn run(o: &Opts) -> (Table, Table) {
+    let s = sizes(o);
+    let d = nbody::particle_dim();
+    let state_u = nbody::init_particles(s.n_update, 42);
+    let state_m = nbody::init_particles(s.n_move, 43);
+    let w = if o.quick { 1 } else { 2 };
+
+    let mut update = Table::new(
+        format!("fig5 update (N={}, single thread)", s.n_update),
+        &["impl", "ms", "vs manual AoS"],
+    );
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    // Manual twins.
+    {
+        let mut aos = manual::NBodyAoS::from_state(&state_u);
+        results.push(bench("manual AoS", w, o.iters, || {
+            aos.update();
+            black_box(&aos.particles);
+        }));
+        let mut soa = manual::NBodySoA::from_state(&state_u);
+        results.push(bench("manual SoA", w, o.iters, || {
+            soa.update();
+            black_box(&soa.state);
+        }));
+        let mut a8 = manual::NBodyAoSoA::<8>::from_state(&state_u);
+        results.push(bench("manual AoSoA8", w, o.iters, || {
+            a8.update();
+            black_box(&a8.blocks);
+        }));
+        let mut a16 = manual::NBodyAoSoA::<16>::from_state(&state_u);
+        results.push(bench("manual AoSoA16", w, o.iters, || {
+            a16.update();
+            black_box(&a16.blocks);
+        }));
+    }
+
+    // LLAMA layouts, identical generic kernel.
+    let dims = ArrayDims::linear(s.n_update);
+    macro_rules! llama_update {
+        ($name:expr, $mapping:expr) => {{
+            let mut v = alloc_view($mapping);
+            llama_impl::load_state(&mut v, &state_u);
+            results.push(bench($name, w, o.iters, || {
+                llama_impl::update(&mut v);
+                black_box(v.blobs());
+            }));
+        }};
+    }
+    llama_update!("LLAMA AoS (aligned)", AoS::aligned(&d, dims.clone()));
+    llama_update!("LLAMA AoS (packed)", AoS::packed(&d, dims.clone()));
+    llama_update!("LLAMA SoA SB", SoA::single_blob(&d, dims.clone()));
+    llama_update!("LLAMA SoA MB", SoA::multi_blob(&d, dims.clone()));
+    llama_update!("LLAMA AoSoA8", AoSoA::new(&d, dims.clone(), 8));
+    llama_update!("LLAMA AoSoA16", AoSoA::new(&d, dims.clone(), 16));
+    // The paper's missing piece: a mapping-aware blocked iteration.
+    {
+        let mut v = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+        llama_impl::load_state(&mut v, &state_u);
+        results.push(bench("LLAMA AoSoA16 (blocked)", w, o.iters, || {
+            llama_impl::update_blocked(&mut v, 16);
+            black_box(v.blobs());
+        }));
+    }
+
+    let base = results[0].median_ns;
+    for r in &results {
+        update.row(vec![r.name.clone(), fmt_ms(r.median_ns), fmt_ratio(r.median_ns, base)]);
+    }
+
+    // ---- move phase (memory bound) ----
+    let mut mv = Table::new(
+        format!("fig5 move (N={}, x{} reps, single thread)", s.n_move, s.move_reps),
+        &["impl", "ms", "vs manual AoS"],
+    );
+    let mut results: Vec<BenchResult> = Vec::new();
+    {
+        let mut aos = manual::NBodyAoS::from_state(&state_m);
+        results.push(bench("manual AoS", w, o.iters, || {
+            for _ in 0..s.move_reps {
+                aos.mv();
+            }
+            black_box(&aos.particles);
+        }));
+        let mut soa = manual::NBodySoA::from_state(&state_m);
+        results.push(bench("manual SoA", w, o.iters, || {
+            for _ in 0..s.move_reps {
+                soa.mv();
+            }
+            black_box(&soa.state);
+        }));
+        let mut a16 = manual::NBodyAoSoA::<16>::from_state(&state_m);
+        results.push(bench("manual AoSoA16", w, o.iters, || {
+            for _ in 0..s.move_reps {
+                a16.mv();
+            }
+            black_box(&a16.blocks);
+        }));
+    }
+    let dims = ArrayDims::linear(s.n_move);
+    macro_rules! llama_move {
+        ($name:expr, $mapping:expr) => {{
+            let mut v = alloc_view($mapping);
+            llama_impl::load_state(&mut v, &state_m);
+            results.push(bench($name, w, o.iters, || {
+                for _ in 0..s.move_reps {
+                    llama_impl::mv(&mut v);
+                }
+                black_box(v.blobs());
+            }));
+        }};
+    }
+    llama_move!("LLAMA AoS (aligned)", AoS::aligned(&d, dims.clone()));
+    llama_move!("LLAMA SoA MB", SoA::multi_blob(&d, dims.clone()));
+    llama_move!("LLAMA AoSoA16", AoSoA::new(&d, dims.clone(), 16));
+
+    let base = results[0].median_ns;
+    for r in &results {
+        mv.row(vec![r.name.clone(), fmt_ms(r.median_ns), fmt_ratio(r.median_ns, base)]);
+    }
+    (update, mv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_full_tables() {
+        let mut o = Opts::quick();
+        o.n = Some(256);
+        o.iters = 1;
+        let (u, m) = run(&o);
+        assert_eq!(u.rows.len(), 11);
+        assert_eq!(m.rows.len(), 6);
+        // Baseline ratio is exactly 1.
+        assert_eq!(u.rows[0][2], "1.000");
+        let txt = u.to_text();
+        assert!(txt.contains("LLAMA SoA MB"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Fig 6 driver (hardware-adapted): n-body through the L2/L1 compute
+//! stack — JAX+Pallas AOT artifacts executed on the PJRT client from
+//! Rust.
+//!
+//! The fig 6 axes translate as (DESIGN.md §Hardware-Adaptation):
+//! * *global memory layout* → artifact input representation: SoA
+//!   (seven `f32[N]` params) vs AoS (one `f32[N,7]` matrix);
+//! * *shared-memory tiling* → the Pallas kernel's VMEM staging
+//!   (`tile`-sized `pl.load`s) vs the untiled plain-XLA lowering.
+//!
+//! Absolute numbers come from the CPU PJRT plugin running the
+//! interpret-lowered kernels; the comparison of interest is the
+//! *relative* effect of layout and tiling, plus the zero-copy handoff
+//! of LLAMA-managed memory into the executable.
+
+use anyhow::Result;
+
+use super::bench::{bench, black_box, Opts};
+use super::report::{fmt_ms, fmt_ratio, Table};
+use crate::array::ArrayDims;
+use crate::copy::{aosoa_copy, ChunkOrder};
+use crate::mapping::{AoS, SoA};
+use crate::runtime::Runtime;
+use crate::view::alloc_view;
+use crate::workloads::nbody::{self, llama_impl};
+
+/// Build the SoA input slices for an artifact of size n from LLAMA-
+/// managed memory: a multi-blob SoA view's blobs *are* the seven
+/// `f32[N]` buffers the executable wants — zero reshuffling.
+pub fn soa_inputs(n: usize, seed: u64) -> (Vec<Vec<f32>>, crate::workloads::nbody::ParticleSoA) {
+    let state = nbody::init_particles(n, seed);
+    let d = nbody::particle_dim();
+    let mut view = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(n)));
+    llama_impl::load_state(&mut view, &state);
+    let inputs = view
+        .blobs()
+        .iter()
+        .map(|b| {
+            b.chunks_exact(4).map(|c| f32::from_ne_bytes(c.try_into().unwrap())).collect()
+        })
+        .collect();
+    (inputs, state)
+}
+
+/// Build the packed AoS input for the `_aos` artifacts via the
+/// layout-aware copy (SoA view -> packed AoS view -> single blob).
+pub fn aos_input(n: usize, seed: u64) -> Vec<f32> {
+    let state = nbody::init_particles(n, seed);
+    let d = nbody::particle_dim();
+    let mut soa = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(n)));
+    llama_impl::load_state(&mut soa, &state);
+    let mut aos = alloc_view(AoS::packed(&d, ArrayDims::linear(n)));
+    aosoa_copy(&soa, &mut aos, ChunkOrder::ReadContiguous);
+    aos.blobs()[0]
+        .chunks_exact(4)
+        .map(|c| f32::from_ne_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Run fig 6: update (tiled SoA / tiled AoS / untiled SoA) and move
+/// (SoA / AoS) through the PJRT runtime.
+pub fn run(o: &Opts) -> Result<Table> {
+    let mut rt = Runtime::cpu(&o.artifacts)?;
+    let mut t = Table::new(
+        format!("fig6 n-body via XLA/PJRT ({})", rt.platform()),
+        &["artifact", "ms", "vs first"],
+    );
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    // --- update variants ---
+    let n = rt.manifest().find("nbody_update_soa")?.n;
+    let (soa_in, _) = soa_inputs(n, 5);
+    let soa_refs: Vec<&[f32]> = soa_in.iter().map(|v| v.as_slice()).collect();
+    let aos_in = aos_input(n, 5);
+
+    for name in ["nbody_update_soa", "nbody_update_aos", "nbody_update_soa_notile"] {
+        let exe = rt.load(name)?;
+        let inputs: Vec<&[f32]> =
+            if exe.meta().layout == "aos" { vec![&aos_in] } else { soa_refs.clone() };
+        let r = bench(name, 1, o.iters, || {
+            let out = exe.run_f32(&inputs).expect("execute");
+            black_box(out);
+        });
+        rows.push((format!("{name} (N={n})"), r.median_ns));
+    }
+
+    // --- move variants ---
+    let n_move = rt.manifest().find("nbody_move_soa")?.n;
+    let (soa_mv, _) = soa_inputs(n_move, 6);
+    let soa_mv_refs: Vec<&[f32]> = soa_mv.iter().map(|v| v.as_slice()).collect();
+    let aos_mv = aos_input(n_move, 6);
+    for name in ["nbody_move_soa", "nbody_move_aos"] {
+        let exe = rt.load(name)?;
+        let inputs: Vec<&[f32]> = if exe.meta().layout == "aos" {
+            vec![&aos_mv]
+        } else {
+            // move does not take mass: first 6 SoA arrays only.
+            soa_mv_refs[..6].to_vec()
+        };
+        let r = bench(name, 1, o.iters, || {
+            let out = exe.run_f32(&inputs).expect("execute");
+            black_box(out);
+        });
+        rows.push((format!("{name} (N={n_move})"), r.median_ns));
+    }
+
+    let base = rows[0].1;
+    for (name, ns) in rows {
+        t.row(vec![name, fmt_ms(ns), fmt_ratio(ns, base)]);
+    }
+    Ok(t)
+}
+
+/// Correctness gate for the whole stack: the artifact's update must
+/// match the Rust LLAMA kernel on the same state.
+pub fn verify_against_rust(o: &Opts) -> Result<f64> {
+    let mut rt = Runtime::cpu(&o.artifacts)?;
+    let exe = rt.load("nbody_update_soa")?;
+    let n = exe.meta().n;
+    let (inputs, state) = soa_inputs(n, 5);
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let out = exe.run_f32(&refs)?;
+
+    // Rust-side reference over the same state.
+    let d = nbody::particle_dim();
+    let mut view = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(n)));
+    llama_impl::load_state(&mut view, &state);
+    llama_impl::update(&mut view);
+    let expect = llama_impl::store_state(&view);
+
+    let mut max_rel = 0.0f64;
+    for (d_idx, got) in out.iter().enumerate().take(3) {
+        for (g, w) in got.iter().zip(&expect.vel[d_idx]) {
+            let denom = g.abs().max(w.abs()).max(1e-12) as f64;
+            max_rel = max_rel.max(((*g - *w).abs() as f64) / denom);
+        }
+    }
+    Ok(max_rel)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_builders_are_consistent() {
+        let n = 64;
+        let (soa, state) = soa_inputs(n, 9);
+        let aos = aos_input(n, 9);
+        assert_eq!(soa.len(), 7);
+        assert_eq!(aos.len(), n * 7);
+        for i in 0..n {
+            assert_eq!(aos[i * 7], soa[0][i]); // pos.x column
+            assert_eq!(aos[i * 7 + 6], soa[6][i]); // mass column
+            assert_eq!(soa[0][i], state.pos[0][i]);
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Fig 7 driver: layout-changing copy throughput.
+//!
+//! Paper's expected shape: the layout-aware `aosoa_copy` beats the
+//! field-wise naive/std::copy on AoSoA/SoA-MB pairs; parallel
+//! aosoa_copy is best overall; (multi-threaded) memcpy is the roofline.
+
+use super::bench::{bench, black_box, Opts};
+use super::report::{fmt_gib, Table};
+use crate::array::ArrayDims;
+use crate::copy::{
+    aosoa_copy, aosoa_compatible, copy_aosoa_parallel, copy_naive, copy_naive_parallel,
+    copy_stdcopy, views_equal, ChunkOrder,
+};
+use crate::mapping::{total_blob_bytes, AoS, AoSoA, Mapping, SoA};
+use crate::view::{alloc_view, View};
+use crate::workloads::hep;
+use crate::workloads::nbody;
+
+/// Total bytes of a view's blobs (what a copy moves).
+fn view_bytes<M: Mapping>(m: &M) -> usize {
+    total_blob_bytes(m)
+}
+
+/// memcpy reference: flat byte copy of the same volume.
+fn memcpy_ref(name: &str, bytes: usize, threads: usize, o: &Opts, t: &mut Table) {
+    let src = vec![0xA5u8; bytes];
+    let mut dst = vec![0u8; bytes];
+    let r = bench(name, 1, o.iters, || {
+        if threads <= 1 {
+            dst.copy_from_slice(&src);
+        } else {
+            let chunk = bytes.div_ceil(threads);
+            std::thread::scope(|scope| {
+                for (d, s) in dst.chunks_mut(chunk).zip(src.chunks(chunk)) {
+                    scope.spawn(move || d.copy_from_slice(s));
+                }
+            });
+        }
+        black_box(&dst);
+    });
+    t.row(vec![name.to_string(), format!("{:.3}", r.median_ms()), fmt_gib(r.gib_per_s(bytes))]);
+}
+
+/// Bench every copy strategy for one (src mapping, dst mapping) pair.
+fn strategies<MS, MD>(label: &str, src_m: MS, dst_m: MD, fill: impl Fn(&mut View<MS, Vec<u8>>), o: &Opts, t: &mut Table)
+where
+    MS: Mapping + Sync + Clone,
+    MD: Mapping + Sync + Clone,
+{
+    let bytes = view_bytes(&src_m);
+    let chunkable = aosoa_compatible(&src_m, &dst_m);
+    let mut src = alloc_view(src_m);
+    fill(&mut src);
+    let mut dst = alloc_view(dst_m);
+    let threads = o.threads();
+
+    let mut case = |name: &str, f: &mut dyn FnMut(&View<MS, Vec<u8>>, &mut View<MD, Vec<u8>>)| {
+        let r = bench(name, 1, o.iters, || {
+            f(&src, &mut dst);
+            black_box(dst.blobs());
+        });
+        // Verify the copy really happened (once, after timing).
+        assert!(views_equal(&src, &dst), "{label}/{name}: wrong copy");
+        t.row(vec![
+            format!("{label}: {name}"),
+            format!("{:.3}", r.median_ms()),
+            fmt_gib(r.gib_per_s(bytes)),
+        ]);
+    };
+
+    case("naive", &mut |s, d| copy_naive(s, d));
+    case("naive (p)", &mut |s, d| copy_naive_parallel(s, d, Some(threads)));
+    case("std::copy", &mut |s, d| copy_stdcopy(s, d));
+    if chunkable {
+        case("aosoa_copy (r)", &mut |s, d| aosoa_copy(s, d, ChunkOrder::ReadContiguous));
+        case("aosoa_copy (w)", &mut |s, d| aosoa_copy(s, d, ChunkOrder::WriteContiguous));
+        case("aosoa_copy (r,p)", &mut |s, d| {
+            copy_aosoa_parallel(s, d, ChunkOrder::ReadContiguous, Some(threads))
+        });
+        case("aosoa_copy (w,p)", &mut |s, d| {
+            copy_aosoa_parallel(s, d, ChunkOrder::WriteContiguous, Some(threads))
+        });
+    }
+}
+
+/// Run fig 7: particle (7 floats) and HEP event (100 fields) copies.
+pub fn run(o: &Opts) -> Table {
+    let n_particles = o.n.unwrap_or(if o.quick { 1 << 16 } else { 1 << 21 });
+    let n_events = if o.quick { 1 << 12 } else { 1 << 16 };
+    let mut t = Table::new(
+        format!("fig7 layout-changing copy (particles N={n_particles}, events N={n_events})"),
+        &["case", "ms", "GiB/s"],
+    );
+
+    // --- 7-float particles ---
+    let pd = nbody::particle_dim();
+    let dims = ArrayDims::linear(n_particles);
+    let fill_p = |v: &mut View<SoA, Vec<u8>>| {
+        let s = nbody::init_particles(v.count(), 7);
+        crate::workloads::nbody::llama_impl::load_state(v, &s);
+    };
+    strategies(
+        "particle SoA MB -> AoSoA32",
+        SoA::multi_blob(&pd, dims.clone()),
+        AoSoA::new(&pd, dims.clone(), 32),
+        fill_p,
+        o,
+        &mut t,
+    );
+    strategies(
+        "particle AoSoA8 -> AoSoA32",
+        AoSoA::new(&pd, dims.clone(), 8),
+        AoSoA::new(&pd, dims.clone(), 32),
+        |v| {
+            let s = nbody::init_particles(v.count(), 7);
+            crate::workloads::nbody::llama_impl::load_state(v, &s);
+        },
+        o,
+        &mut t,
+    );
+    strategies(
+        "particle AoS -> SoA MB",
+        AoS::packed(&pd, dims.clone()),
+        SoA::multi_blob(&pd, dims.clone()),
+        |v| {
+            let s = nbody::init_particles(v.count(), 7);
+            crate::workloads::nbody::llama_impl::load_state(v, &s);
+        },
+        o,
+        &mut t,
+    );
+    memcpy_ref("particle memcpy", view_bytes(&SoA::multi_blob(&pd, dims.clone())), 1, o, &mut t);
+    memcpy_ref(
+        "particle memcpy (p)",
+        view_bytes(&SoA::multi_blob(&pd, dims)),
+        o.threads(),
+        o,
+        &mut t,
+    );
+
+    // --- 100-field HEP events ---
+    let ed = hep::event_dim();
+    let dims = ArrayDims::linear(n_events);
+    strategies(
+        "event SoA MB -> AoSoA32",
+        SoA::multi_blob(&ed, dims.clone()),
+        AoSoA::new(&ed, dims.clone(), 32),
+        |v| hep::generate_events(v, 11),
+        o,
+        &mut t,
+    );
+    strategies(
+        "event AoS -> SoA MB",
+        AoS::packed(&ed, dims.clone()),
+        SoA::multi_blob(&ed, dims.clone()),
+        |v| hep::generate_events(v, 12),
+        o,
+        &mut t,
+    );
+    memcpy_ref("event memcpy", view_bytes(&SoA::multi_blob(&ed, dims.clone())), 1, o, &mut t);
+    memcpy_ref("event memcpy (p)", view_bytes(&SoA::multi_blob(&ed, dims)), o.threads(), o, &mut t);
+    t
+}
+
+/// Returns the subset of `run` used by regression tests: confirms the
+/// chunked copy beats the naive copy for the canonical pair.
+pub fn headline(o: &Opts) -> (f64, f64) {
+    let n = o.n.unwrap_or(1 << 16);
+    let pd = nbody::particle_dim();
+    let dims = ArrayDims::linear(n);
+    let mut src = alloc_view(SoA::multi_blob(&pd, dims.clone()));
+    let s = nbody::init_particles(n, 7);
+    crate::workloads::nbody::llama_impl::load_state(&mut src, &s);
+    let mut dst = alloc_view(AoSoA::new(&pd, dims, 32));
+    let naive = bench("naive", 1, o.iters, || {
+        copy_naive(&src, &mut dst);
+        black_box(dst.blobs());
+    });
+    let chunked = bench("aosoa", 1, o.iters, || {
+        aosoa_copy(&src, &mut dst, ChunkOrder::ReadContiguous);
+        black_box(dst.blobs());
+    });
+    (naive.median_ns, chunked.median_ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_table_has_all_strategy_rows() {
+        let mut o = Opts::quick();
+        o.n = Some(1 << 12);
+        o.iters = 1;
+        let t = run(&o);
+        let txt = t.to_text();
+        assert!(txt.contains("aosoa_copy (r)"));
+        assert!(txt.contains("naive (p)"));
+        assert!(txt.contains("particle memcpy (p)"));
+        assert!(txt.contains("event AoS -> SoA MB"));
+        // AoS->SoA MB pair is chunkable (packed AoS = 1 lane), so it has
+        // 7 strategy rows; SoA->AoSoA pairs too.
+        assert!(t.rows.len() >= 3 * 7 + 4 + 4);
+    }
+
+    #[test]
+    fn chunked_copy_not_slower_than_naive() {
+        let mut o = Opts::quick();
+        o.n = Some(1 << 15);
+        o.iters = 3;
+        let (naive, chunked) = headline(&o);
+        assert!(
+            chunked < naive * 1.2,
+            "aosoa_copy ({chunked} ns) should not lose to naive ({naive} ns)"
+        );
+    }
+}

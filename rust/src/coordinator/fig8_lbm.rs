@@ -1,0 +1,146 @@
+//! Fig 8 driver: the lbm benchmark (SPEC 619.lbm_s analog) across
+//! layouts and CPU saturation levels.
+//!
+//! Paper's expected shape: with all cores busy, SoA ≈ 0.45–0.55× the
+//! AoS runtime and the best AoSoA is on par or slightly better; Split
+//! (trace-derived hot/cold) gains ~8–10% over AoS. With a single
+//! thread on an idle machine the ordering reverses (AoS/Split win).
+
+use super::bench::{bench, black_box, Opts};
+use super::report::{fmt_ms, fmt_ratio, Table};
+use crate::mapping::{AoS, AoSoA, Mapping, SoA, Trace};
+use crate::view::alloc_view;
+use crate::workloads::lbm::split4::build_split4;
+use crate::workloads::lbm::step::{init, step_parallel, total_mass};
+use crate::workloads::lbm::{cell_dim, Geometry};
+
+pub fn geometry(o: &Opts) -> Geometry {
+    let g = o.n.unwrap_or(if o.quick { 16 } else { 48 });
+    Geometry::channel_with_sphere(g, g, g, 2024)
+}
+
+fn run_case<M: Mapping + Clone>(
+    name: &str,
+    mapping: M,
+    geo: &Geometry,
+    steps: usize,
+    threads: usize,
+    o: &Opts,
+    rows: &mut Vec<(String, f64)>,
+) {
+    let mut a = alloc_view(mapping.clone());
+    let mut b = alloc_view(mapping);
+    init(&mut a, geo);
+    init(&mut b, geo);
+    let m0 = total_mass(&a);
+    let r = bench(name, 1, o.iters, || {
+        for _ in 0..steps {
+            step_parallel(&a, &mut b, threads);
+            std::mem::swap(&mut a, &mut b);
+        }
+        black_box(a.blobs());
+    });
+    // Physics sanity after timing: mass conserved.
+    let m1 = total_mass(&a);
+    assert!((m0 - m1).abs() / m0 < 1e-6, "{name}: mass drift");
+    rows.push((name.to_string(), r.median_ns));
+}
+
+/// Derive the paper's hot/cold 4-group split from a traced step.
+pub fn trace_derived_groups(geo: &Geometry) -> Vec<Vec<usize>> {
+    let d = cell_dim();
+    let traced = Trace::new(AoS::aligned(&d, geo.dims.clone()));
+    let mut a = alloc_view(traced);
+    let mut b = alloc_view(AoS::aligned(&d, geo.dims.clone()));
+    init(&mut a, geo);
+    crate::workloads::lbm::step::step(&a, &mut b);
+    a.mapping().equal_count_groups(4)
+}
+
+/// One saturation scenario of fig 8.
+fn scenario(label: &str, geo: &Geometry, steps: usize, threads: usize, o: &Opts) -> Table {
+    let d = cell_dim();
+    let mut rows: Vec<(String, f64)> = Vec::new();
+
+    run_case("AoS (baseline)", AoS::aligned(&d, geo.dims.clone()), geo, steps, threads, o, &mut rows);
+    let groups = trace_derived_groups(geo);
+    run_case(
+        "Split (trace hot/cold)",
+        build_split4(&d, geo.dims.clone(), &groups),
+        geo,
+        steps,
+        threads,
+        o,
+        &mut rows,
+    );
+    run_case("SoA SB", SoA::single_blob(&d, geo.dims.clone()), geo, steps, threads, o, &mut rows);
+    run_case("SoA MB", SoA::multi_blob(&d, geo.dims.clone()), geo, steps, threads, o, &mut rows);
+    for lanes in [4usize, 16, 64, 256] {
+        run_case(
+            &format!("AoSoA{lanes}"),
+            AoSoA::new(&d, geo.dims.clone(), lanes),
+            geo,
+            steps,
+            threads,
+            o,
+            &mut rows,
+        );
+    }
+
+    let mut t = Table::new(
+        format!(
+            "fig8 lbm {label} (grid {:?}, {} steps, {} thread(s))",
+            geo.dims.extents(),
+            steps,
+            threads
+        ),
+        &["layout", "ms", "vs AoS"],
+    );
+    let base = rows[0].1;
+    let cells = geo.dims.count() * steps;
+    for (name, ns) in rows {
+        let mlups = cells as f64 / (ns / 1e9) / 1e6;
+        t.row(vec![name, format!("{} ({mlups:.1} MLUPS)", fmt_ms(ns)), fmt_ratio(ns, base)]);
+    }
+    t
+}
+
+/// Run fig 8: saturated (all threads) and unsaturated (1 thread).
+pub fn run(o: &Opts) -> Vec<Table> {
+    let geo = geometry(o);
+    let steps = if o.quick { 2 } else { 5 };
+    vec![
+        scenario("saturated", &geo, steps, o.threads(), o),
+        scenario("single-thread", &geo, steps, 1, o),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_scenarios_have_all_layout_rows() {
+        let mut o = Opts::quick();
+        o.n = Some(8);
+        o.iters = 1;
+        o.threads = Some(2);
+        let tables = run(&o);
+        assert_eq!(tables.len(), 2);
+        for t in &tables {
+            assert_eq!(t.rows.len(), 8);
+            assert!(t.to_text().contains("Split (trace hot/cold)"));
+            assert_eq!(t.rows[0][2], "1.000");
+        }
+    }
+
+    #[test]
+    fn trace_groups_cover_all_fields() {
+        let geo = Geometry::channel_with_sphere(6, 6, 6, 1);
+        let groups = trace_derived_groups(&geo);
+        assert_eq!(groups.len(), 4);
+        let mut all = groups.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+}

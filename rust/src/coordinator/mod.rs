@@ -1,0 +1,21 @@
+//! L3 coordinator: benchmark drivers that regenerate every table and
+//! figure of the paper's evaluation (§4), a self-contained bench
+//! harness (criterion is not in the vendored crate set), table/CSV
+//! reporting, and the CLI.
+//!
+//! Each `figN` module owns one paper figure and exposes `run(&Opts) ->
+//! Vec<Row>`; the `cargo bench` targets and the `llama` CLI both call
+//! into these, so the numbers in EXPERIMENTS.md are reproducible from
+//! either entry point.
+
+pub mod bench;
+pub mod cli;
+pub mod fig10_picframe;
+pub mod fig5_nbody;
+pub mod fig6_xla;
+pub mod fig7_copy;
+pub mod fig8_lbm;
+pub mod report;
+
+pub use bench::{bench, BenchResult};
+pub use report::Table;

@@ -1,0 +1,161 @@
+//! Table reporting: aligned console output, Markdown, and CSV — the
+//! figure drivers print the same rows/series the paper reports.
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned plain-text rendering.
+    pub fn to_text(&self) -> String {
+        let w = self.widths();
+        let mut out = format!("== {} ==\n", self.title);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>width$}", width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavored Markdown rendering (pasted into EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.headers.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    /// CSV rendering.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.headers.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format nanoseconds human-readably (ms with 3 significant decimals).
+pub fn fmt_ms(ns: f64) -> String {
+    format!("{:.3}", ns / 1e6)
+}
+
+/// Format a throughput in GiB/s.
+pub fn fmt_gib(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Format a ratio relative to a baseline (1.00 = equal).
+pub fn fmt_ratio(v: f64, baseline: f64) -> String {
+    if baseline > 0.0 {
+        format!("{:.3}", v / baseline)
+    } else {
+        "-".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("demo", &["layout", "ms", "ratio"]);
+        t.row(vec!["AoS".into(), "10.000".into(), "1.000".into()]);
+        t.row(vec!["SoA MB".into(), "6.400".into(), "0.640".into()]);
+        t
+    }
+
+    #[test]
+    fn text_is_aligned() {
+        let txt = sample().to_text();
+        assert!(txt.contains("== demo =="));
+        let lines: Vec<&str> = txt.lines().collect();
+        assert_eq!(lines.len(), 5); // title, header, rule, 2 rows
+        // Headers and rows end at the same column.
+        assert_eq!(lines[1].len(), lines[4].len());
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().to_markdown();
+        assert!(md.starts_with("### demo"));
+        // header + separator + 2 rows, 4 pipes each.
+        assert_eq!(md.matches('|').count(), 4 * 4);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["with,comma".into()]);
+        assert!(t.to_csv().contains("\"with,comma\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_ms(1_500_000.0), "1.500");
+        assert_eq!(fmt_ratio(5.0, 10.0), "0.500");
+        assert_eq!(fmt_ratio(5.0, 0.0), "-");
+        assert_eq!(fmt_gib(1.234), "1.23");
+    }
+}

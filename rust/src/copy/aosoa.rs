@@ -1,0 +1,200 @@
+//! The layout-aware `aosoa_copy` (paper §4.2): chunked copy between any
+//! two AoSoA-family layouts.
+//!
+//! Within an AoSoA-L layout, each field's values are contiguous in runs
+//! of `L` (packed AoS: L = 1; SoA: L = N). Between an AoSoA-N source
+//! and AoSoA-M destination, runs intersect in pieces of at least
+//! `gcd(N, M)` elements (the paper copies `min(N, M)`, valid for the
+//! power-of-two lane counts it uses; run intersection generalizes this
+//! to arbitrary lane counts and tail blocks).
+//!
+//! The traversal can walk chunks in source-storage order
+//! ([`ChunkOrder::ReadContiguous`], the paper's "(r)") or in
+//! destination-storage order ([`ChunkOrder::WriteContiguous`], "(w)").
+
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::Mapping;
+use crate::view::View;
+
+/// Traversal order of the chunked copy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkOrder {
+    /// Walk chunks in the order they appear in the *source* blobs —
+    /// contiguous reads, scattered writes.
+    ReadContiguous,
+    /// Walk chunks in the order they appear in the *destination* blobs
+    /// — scattered reads, contiguous writes.
+    WriteContiguous,
+}
+
+/// Chunked copy between AoSoA-family layouts. Panics if either mapping
+/// is not in the family (check [`super::aosoa_compatible`] first).
+pub fn aosoa_copy<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>, order: ChunkOrder)
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: BlobMut,
+{
+    debug_assert!(super::same_data_space(src.mapping(), dst.mapping()));
+    let src_lanes = src
+        .mapping()
+        .aosoa_lanes()
+        .expect("aosoa_copy: source is not an AoSoA-family layout");
+    let dst_lanes = dst
+        .mapping()
+        .aosoa_lanes()
+        .expect("aosoa_copy: destination is not an AoSoA-family layout");
+    assert!(
+        src.mapping().is_native_representation() && dst.mapping().is_native_representation(),
+        "aosoa_copy requires native byte representation on both sides"
+    );
+
+    let info = src.mapping().info().clone();
+    let n = src.count();
+    if n == 0 {
+        return;
+    }
+
+    // Iterate lane-blocks of the side we want to touch contiguously;
+    // within a block, fields are consecutive in that side's storage.
+    let outer_lanes = match order {
+        ChunkOrder::ReadContiguous => src_lanes,
+        ChunkOrder::WriteContiguous => dst_lanes,
+    };
+
+    let leaves = info.leaf_count();
+    let mut block_start = 0usize;
+    while block_start < n {
+        let block_end = (block_start + outer_lanes).min(n);
+        for leaf in 0..leaves {
+            let size = info.fields[leaf].size();
+            let mut pos = block_start;
+            while pos < block_end {
+                // Largest run not crossing a lane boundary on either side.
+                let src_run_end = ((pos / src_lanes) + 1) * src_lanes;
+                let dst_run_end = ((pos / dst_lanes) + 1) * dst_lanes;
+                let end = block_end.min(src_run_end).min(dst_run_end);
+                let len = end - pos;
+                let sslot = src.mapping().slot_of_lin(pos);
+                let (snr, soff) = src.mapping().blob_nr_and_offset(leaf, sslot);
+                let (dm, dblobs) = dst.mapping_and_blobs_mut();
+                let (dnr, doff) = dm.blob_nr_and_offset(leaf, dm.slot_of_lin(pos));
+                let nbytes = len * size;
+                dblobs[dnr].as_bytes_mut()[doff..doff + nbytes]
+                    .copy_from_slice(&src.blobs()[snr].as_bytes()[soff..soff + nbytes]);
+                pos = end;
+            }
+        }
+        block_start = block_end;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::copy::test_support::{check_copy, fill_distinct};
+    use crate::copy::views_equal;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, SoA};
+    use crate::view::alloc_view;
+
+    #[test]
+    fn soa_to_aosoa_and_back() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(64);
+        for order in [ChunkOrder::ReadContiguous, ChunkOrder::WriteContiguous] {
+            check_copy(
+                SoA::multi_blob(&d, dims.clone()),
+                AoSoA::new(&d, dims.clone(), 8),
+                |s, dst| aosoa_copy(s, dst, order),
+            );
+            check_copy(
+                AoSoA::new(&d, dims.clone(), 8),
+                SoA::multi_blob(&d, dims.clone()),
+                |s, dst| aosoa_copy(s, dst, order),
+            );
+        }
+    }
+
+    #[test]
+    fn different_lane_counts() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(48);
+        for (a, b) in [(4, 32), (32, 4), (8, 16), (2, 2)] {
+            check_copy(
+                AoSoA::new(&d, dims.clone(), a),
+                AoSoA::new(&d, dims.clone(), b),
+                |s, dst| aosoa_copy(s, dst, ChunkOrder::ReadContiguous),
+            );
+        }
+    }
+
+    #[test]
+    fn non_pow2_lanes_and_tail() {
+        // 10 records, lanes 3 vs 7: runs intersect at gcd-size pieces
+        // plus the tail — exercises the generalization past the paper.
+        let d = particle_dim();
+        let dims = ArrayDims::linear(10);
+        for order in [ChunkOrder::ReadContiguous, ChunkOrder::WriteContiguous] {
+            check_copy(
+                AoSoA::new(&d, dims.clone(), 3),
+                AoSoA::new(&d, dims.clone(), 7),
+                |s, dst| aosoa_copy(s, dst, order),
+            );
+        }
+    }
+
+    #[test]
+    fn packed_aos_participates_as_one_lane() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(16);
+        check_copy(
+            AoS::packed(&d, dims.clone()),
+            SoA::single_blob(&d, dims.clone()),
+            |s, dst| aosoa_copy(s, dst, ChunkOrder::WriteContiguous),
+        );
+        check_copy(
+            SoA::single_blob(&d, dims.clone()),
+            AoS::packed(&d, dims.clone()),
+            |s, dst| aosoa_copy(s, dst, ChunkOrder::ReadContiguous),
+        );
+    }
+
+    #[test]
+    fn soa_single_to_soa_multi() {
+        // Paper §3.9: same SoA, one with one without blob separation.
+        let d = particle_dim();
+        let dims = ArrayDims::linear(33);
+        check_copy(
+            SoA::single_blob(&d, dims.clone()),
+            SoA::multi_blob(&d, dims.clone()),
+            |s, dst| aosoa_copy(s, dst, ChunkOrder::ReadContiguous),
+        );
+    }
+
+    #[test]
+    fn orders_produce_identical_result() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(40);
+        let mut src = alloc_view(AoSoA::new(&d, dims.clone(), 4));
+        fill_distinct(&mut src);
+        let mut r = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+        let mut w = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+        aosoa_copy(&src, &mut r, ChunkOrder::ReadContiguous);
+        aosoa_copy(&src, &mut w, ChunkOrder::WriteContiguous);
+        assert_eq!(r.blobs(), w.blobs());
+        assert!(views_equal(&src, &r));
+    }
+
+    #[test]
+    #[should_panic(expected = "not an AoSoA-family layout")]
+    fn aligned_aos_rejected() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(8);
+        let src = alloc_view(AoS::aligned(&d, dims.clone()));
+        let mut dst = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        aosoa_copy(&src, &mut dst, ChunkOrder::ReadContiguous);
+    }
+}

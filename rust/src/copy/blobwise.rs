@@ -1,0 +1,80 @@
+//! Per-blob memcpy for identical layouts (paper §3.9: "Copying the
+//! contents of a view from one memory region to another if mapping and
+//! size are identical is trivial").
+
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::Mapping;
+use crate::view::View;
+
+/// Copy every blob verbatim. Panics unless the layouts are identical
+/// (verify with [`super::layouts_identical`]; the dispatcher does).
+pub fn copy_blobwise<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>)
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: BlobMut,
+{
+    assert!(
+        super::layouts_identical(src.mapping(), dst.mapping()),
+        "copy_blobwise requires identical layouts: {} vs {}",
+        src.mapping().mapping_name(),
+        dst.mapping().mapping_name()
+    );
+    let nblobs = src.mapping().blob_count();
+    let sizes: Vec<usize> = (0..nblobs).map(|b| src.mapping().blob_size(b)).collect();
+    let (_, dblobs) = dst.mapping_and_blobs_mut();
+    for nr in 0..nblobs {
+        let n = sizes[nr];
+        dblobs[nr].as_bytes_mut()[..n].copy_from_slice(&src.blobs()[nr].as_bytes()[..n]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::copy::test_support::{check_copy, fill_distinct};
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, Byteswap, SoA};
+    use crate::view::alloc_view;
+
+    #[test]
+    fn identical_layouts_roundtrip() {
+        let d = particle_dim();
+        let dims = ArrayDims::from([4, 4]);
+        check_copy(
+            SoA::multi_blob(&d, dims.clone()),
+            SoA::multi_blob(&d, dims.clone()),
+            |s, dst| copy_blobwise(s, dst),
+        );
+        check_copy(
+            AoSoA::new(&d, dims.clone(), 8),
+            AoSoA::new(&d, dims.clone(), 8),
+            |s, dst| copy_blobwise(s, dst),
+        );
+    }
+
+    #[test]
+    fn byteswapped_pair_is_identical_layout() {
+        // Two byteswapped views share representation: raw memcpy is
+        // legal and values stay correct.
+        let d = particle_dim();
+        let dims = ArrayDims::linear(8);
+        let mut src = alloc_view(Byteswap::new(AoS::packed(&d, dims.clone())));
+        fill_distinct(&mut src);
+        let mut dst = alloc_view(Byteswap::new(AoS::packed(&d, dims.clone())));
+        copy_blobwise(&src, &mut dst);
+        assert!(crate::copy::views_equal(&src, &dst));
+    }
+
+    #[test]
+    #[should_panic(expected = "identical layouts")]
+    fn different_layouts_rejected() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(8);
+        let src = alloc_view(AoS::packed(&d, dims.clone()));
+        let mut dst = alloc_view(AoS::aligned(&d, dims.clone()));
+        copy_blobwise(&src, &mut dst);
+    }
+}

@@ -1,0 +1,266 @@
+//! Layout-aware copying between views (paper §3.9 / §4.2, fig 7).
+//!
+//! Copying between two views of the *same data space* but different
+//! mappings cannot be a plain memcpy; the fallback is a field-wise copy.
+//! But mappings encapsulate full layout knowledge, so LLAMA provides
+//! specialized routines that move data in the largest contiguous chunks
+//! both layouts admit:
+//!
+//! * [`blobwise::copy_blobwise`] — per-blob memcpy when the layouts are
+//!   identical.
+//! * [`aosoa::aosoa_copy`] — chunked copy between any two AoSoA-family
+//!   layouts (packed AoS = 1 lane, AoSoA-L, SoA = N lanes), in
+//!   read-contiguous or write-contiguous traversal.
+//! * [`naive::copy_naive`] — field-wise nested-loop fallback.
+//! * [`stdcopy::copy_stdcopy`] — iterator-driven element copy, the
+//!   paper's `std::copy` analogue.
+//! * [`parallel`] — multi-threaded versions of naive and aosoa.
+//!
+//! [`copy`] dispatches to the best applicable strategy, like the paper's
+//! `llama::copy`.
+
+pub mod aosoa;
+pub mod blobwise;
+pub mod naive;
+pub mod parallel;
+pub mod stdcopy;
+
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::Mapping;
+use crate::view::View;
+
+pub use aosoa::{aosoa_copy, ChunkOrder};
+pub use blobwise::copy_blobwise;
+pub use naive::{copy_naive, copy_naive_field_major};
+pub use parallel::{copy_aosoa_parallel, copy_naive_parallel};
+pub use stdcopy::copy_stdcopy;
+
+/// Which strategy [`copy`] selected (returned for tests/reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyMethod {
+    Blobwise,
+    AoSoAChunked,
+    FieldWise,
+}
+
+/// True if `src` and `dst` describe the same data space: identical
+/// record dimensions and array extents.
+pub fn same_data_space<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
+    src.info().dim == dst.info().dim && src.dims() == dst.dims()
+}
+
+/// True if the two mappings produce byte-identical layouts (so a
+/// per-blob memcpy is valid).
+pub fn layouts_identical<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
+    same_data_space(src, dst)
+        && src.mapping_name() == dst.mapping_name()
+        && src.blob_count() == dst.blob_count()
+        && (0..src.blob_count()).all(|b| src.blob_size(b) == dst.blob_size(b))
+        && src.is_native_representation() == dst.is_native_representation()
+}
+
+/// True if both mappings are in the AoSoA family with native
+/// representation, enabling the chunked copy.
+pub fn aosoa_compatible<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
+    same_data_space(src, dst)
+        && src.is_native_representation()
+        && dst.is_native_representation()
+        && src.aosoa_lanes().is_some()
+        && dst.aosoa_lanes().is_some()
+}
+
+/// Layout-aware copy dispatcher (the paper's `llama::copy`): picks the
+/// fastest applicable strategy and returns which one ran.
+///
+/// Panics if the views do not share a data space.
+pub fn copy<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>) -> CopyMethod
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: BlobMut,
+{
+    assert!(
+        same_data_space(src.mapping(), dst.mapping()),
+        "copy between different data spaces: {} vs {}",
+        src.mapping().mapping_name(),
+        dst.mapping().mapping_name()
+    );
+    if layouts_identical(src.mapping(), dst.mapping()) {
+        copy_blobwise(src, dst);
+        CopyMethod::Blobwise
+    } else if aosoa_compatible(src.mapping(), dst.mapping()) {
+        aosoa_copy(src, dst, ChunkOrder::ReadContiguous);
+        CopyMethod::AoSoAChunked
+    } else {
+        copy_naive(src, dst);
+        CopyMethod::FieldWise
+    }
+}
+
+/// Field-wise equality of two views over the same data space (test
+/// helper and verification step for the benchmarks).
+pub fn views_equal<MS, MD, BS, BD>(a: &View<MS, BS>, b: &View<MD, BD>) -> bool
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: Blob,
+{
+    if !same_data_space(a.mapping(), b.mapping()) {
+        return false;
+    }
+    let info = a.mapping().info().clone();
+    for lin in 0..a.count() {
+        for leaf in 0..info.leaf_count() {
+            let (anr, aoff) = a
+                .mapping()
+                .blob_nr_and_offset(leaf, a.mapping().slot_of_lin(lin));
+            let (bnr, boff) = b
+                .mapping()
+                .blob_nr_and_offset(leaf, b.mapping().slot_of_lin(lin));
+            let size = info.fields[leaf].size();
+            let mut av = a.blobs()[anr].as_bytes()[aoff..aoff + size].to_vec();
+            let mut bv = b.blobs()[bnr].as_bytes()[boff..boff + size].to_vec();
+            if !a.mapping().is_native_representation() {
+                av.reverse();
+            }
+            if !b.mapping().is_native_representation() {
+                bv.reverse();
+            }
+            if av != bv {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use super::*;
+
+    /// Fill every field of a view with a value derived from (leaf, lin)
+    /// so cross-talk is detectable.
+    pub fn fill_distinct<M: Mapping, B: BlobMut>(v: &mut View<M, B>) {
+        use crate::record::Scalar;
+        let info = v.mapping().info().clone();
+        for lin in 0..v.count() {
+            for leaf in 0..info.leaf_count() {
+                let seed = (leaf * 131 + lin * 7 + 3) % 251;
+                match info.fields[leaf].scalar {
+                    Scalar::F32 => v.set::<f32>(lin, leaf, seed as f32 * 0.5),
+                    Scalar::F64 => v.set::<f64>(lin, leaf, seed as f64 * 0.25),
+                    Scalar::I8 => v.set::<i8>(lin, leaf, seed as i8),
+                    Scalar::I16 => v.set::<i16>(lin, leaf, seed as i16),
+                    Scalar::I32 => v.set::<i32>(lin, leaf, seed as i32),
+                    Scalar::I64 => v.set::<i64>(lin, leaf, seed as i64),
+                    Scalar::U8 => v.set::<u8>(lin, leaf, seed as u8),
+                    Scalar::U16 => v.set::<u16>(lin, leaf, seed as u16),
+                    Scalar::U32 => v.set::<u32>(lin, leaf, seed as u32),
+                    Scalar::U64 => v.set::<u64>(lin, leaf, seed as u64),
+                    Scalar::Bool => v.set::<bool>(lin, leaf, seed % 2 == 0),
+                }
+            }
+        }
+    }
+
+    /// Assert a freshly-allocated destination receives exactly the
+    /// source contents under `copy_fn`.
+    pub fn check_copy<MS, MD>(
+        src_mapping: MS,
+        dst_mapping: MD,
+        copy_fn: impl FnOnce(&View<MS, Vec<u8>>, &mut View<MD, Vec<u8>>),
+    ) where
+        MS: Mapping,
+        MD: Mapping,
+    {
+        let mut src = crate::view::alloc_view(src_mapping);
+        let mut dst = crate::view::alloc_view(dst_mapping);
+        fill_distinct(&mut src);
+        copy_fn(&src, &mut dst);
+        assert!(
+            views_equal(&src, &dst),
+            "copy mismatch {} -> {}",
+            src.mapping().mapping_name(),
+            dst.mapping().mapping_name()
+        );
+    }
+
+    #[allow(dead_code)]
+    pub fn read_f32<M: Mapping, B: Blob>(v: &View<M, B>, lin: usize, leaf: usize) -> f32 {
+        v.get::<f32>(lin, leaf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, Byteswap, SoA};
+    use crate::view::alloc_view;
+
+    #[test]
+    fn dispatcher_picks_blobwise_for_identical() {
+        let d = particle_dim();
+        let src = {
+            let mut v = alloc_view(AoS::aligned(&d, ArrayDims::linear(16)));
+            fill_distinct(&mut v);
+            v
+        };
+        let mut dst = alloc_view(AoS::aligned(&d, ArrayDims::linear(16)));
+        assert_eq!(copy(&src, &mut dst), CopyMethod::Blobwise);
+        assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    fn dispatcher_picks_chunked_for_aosoa_family() {
+        let d = particle_dim();
+        let src = {
+            let mut v = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(16)));
+            fill_distinct(&mut v);
+            v
+        };
+        let mut dst = alloc_view(AoSoA::new(&d, ArrayDims::linear(16), 4));
+        assert_eq!(copy(&src, &mut dst), CopyMethod::AoSoAChunked);
+        assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    fn dispatcher_falls_back_to_fieldwise() {
+        let d = particle_dim();
+        let src = {
+            let mut v = alloc_view(AoS::aligned(&d, ArrayDims::linear(16)));
+            fill_distinct(&mut v);
+            v
+        };
+        // Aligned AoS is not in the chunkable family.
+        let mut dst = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(16)));
+        assert_eq!(copy(&src, &mut dst), CopyMethod::FieldWise);
+        assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    fn byteswap_forces_fieldwise_and_stays_correct() {
+        let d = particle_dim();
+        let src = {
+            let mut v = alloc_view(Byteswap::new(SoA::multi_blob(&d, ArrayDims::linear(8))));
+            fill_distinct(&mut v);
+            v
+        };
+        let mut dst = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(8)));
+        assert_eq!(copy(&src, &mut dst), CopyMethod::FieldWise);
+        assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    #[should_panic(expected = "different data spaces")]
+    fn mismatched_extents_panic() {
+        let d = particle_dim();
+        let src = alloc_view(AoS::aligned(&d, ArrayDims::linear(8)));
+        let mut dst = alloc_view(AoS::aligned(&d, ArrayDims::linear(9)));
+        let _ = copy(&src, &mut dst);
+    }
+}

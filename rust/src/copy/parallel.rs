@@ -1,0 +1,266 @@
+//! Multi-threaded copy variants — the paper's "(p)" rows in fig 7.
+//!
+//! The record range is split into contiguous chunks, one per thread.
+//! Soundness: distinct linear indices map to disjoint destination byte
+//! ranges for every *storage* mapping (the fundamental mapping
+//! invariant, property-tested in `rust/tests`), so threads never write
+//! the same byte. Aliasing mappings ([`crate::mapping::One`],
+//! [`crate::mapping::Null`]) must not be parallel destinations.
+
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::Mapping;
+use crate::view::View;
+
+/// Base pointers + lengths of the destination blobs, shared across the
+/// worker threads.
+struct DstBlobs {
+    ptrs: Vec<(*mut u8, usize)>,
+}
+
+// SAFETY: the worker threads write disjoint ranges (see module docs).
+unsafe impl Send for DstBlobs {}
+unsafe impl Sync for DstBlobs {}
+
+fn worker_ranges(n: usize, threads: usize, align: usize) -> Vec<(usize, usize)> {
+    let threads = threads.max(1);
+    let per = n.div_ceil(threads);
+    // Round chunk boundaries up to `align` so chunked copies stay on
+    // lane boundaries where possible.
+    let per = per.div_ceil(align) * align;
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < n {
+        let end = (start + per).min(n);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Parallel field-wise copy (paper's "naive copy (p)").
+pub fn copy_naive_parallel<MS, MD, BS, BD>(
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    threads: Option<usize>,
+) where
+    MS: Mapping,
+    MD: Mapping + Sync,
+    BS: Blob + Sync,
+    BD: BlobMut,
+{
+    debug_assert!(super::same_data_space(src.mapping(), dst.mapping()));
+    let n = src.count();
+    let threads = threads.unwrap_or_else(default_threads).min(n.max(1));
+    if threads <= 1 || n < 1024 {
+        super::copy_naive(src, dst);
+        return;
+    }
+    let info = src.mapping().info().clone();
+    let sizes: Vec<usize> = info.fields.iter().map(|f| f.size()).collect();
+    let src_native = src.mapping().is_native_representation();
+    let dst_native = dst.mapping().is_native_representation();
+    let (dmap, dblobs) = dst.mapping_and_blobs_mut();
+    let dst_ptrs = DstBlobs {
+        ptrs: dblobs
+            .iter_mut()
+            .map(|b| {
+                let s = b.as_bytes_mut();
+                (s.as_mut_ptr(), s.len())
+            })
+            .collect(),
+    };
+    let ranges = worker_ranges(n, threads, 1);
+    std::thread::scope(|scope| {
+        for (start, end) in ranges {
+            let dst_ptrs = &dst_ptrs;
+            let sizes = &sizes;
+            scope.spawn(move || {
+                for lin in start..end {
+                    let sslot = src.mapping().slot_of_lin(lin);
+                    let dslot = dmap.slot_of_lin(lin);
+                    for (leaf, &size) in sizes.iter().enumerate() {
+                        let (snr, soff) = src.mapping().blob_nr_and_offset(leaf, sslot);
+                        let (dnr, doff) = dmap.blob_nr_and_offset(leaf, dslot);
+                        let sbytes = src.blobs()[snr].as_bytes();
+                        let (dptr, dlen) = dst_ptrs.ptrs[dnr];
+                        assert!(doff + size <= dlen);
+                        // SAFETY: range checked above; disjoint across
+                        // threads by the mapping invariant.
+                        unsafe {
+                            std::ptr::copy_nonoverlapping(
+                                sbytes.as_ptr().add(soff),
+                                dptr.add(doff),
+                                size,
+                            );
+                            if src_native != dst_native {
+                                std::slice::from_raw_parts_mut(dptr.add(doff), size).reverse();
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Parallel chunked AoSoA-family copy (paper's "aosoa_copy (r/w) (p)").
+pub fn copy_aosoa_parallel<MS, MD, BS, BD>(
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    order: super::ChunkOrder,
+    threads: Option<usize>,
+) where
+    MS: Mapping,
+    MD: Mapping + Sync,
+    BS: Blob + Sync,
+    BD: BlobMut,
+{
+    debug_assert!(super::aosoa_compatible(src.mapping(), dst.mapping()));
+    let src_lanes = src.mapping().aosoa_lanes().expect("source not AoSoA-family");
+    let dst_lanes = dst.mapping().aosoa_lanes().expect("destination not AoSoA-family");
+    let n = src.count();
+    let threads = threads.unwrap_or_else(default_threads).min(n.max(1));
+    if threads <= 1 || n < 1024 {
+        super::aosoa_copy(src, dst, order);
+        return;
+    }
+    let info = src.mapping().info().clone();
+    let sizes: Vec<usize> = info.fields.iter().map(|f| f.size()).collect();
+    let outer_lanes = match order {
+        super::ChunkOrder::ReadContiguous => src_lanes,
+        super::ChunkOrder::WriteContiguous => dst_lanes,
+    };
+    let (dmap, dblobs) = dst.mapping_and_blobs_mut();
+    let dst_ptrs = DstBlobs {
+        ptrs: dblobs
+            .iter_mut()
+            .map(|b| {
+                let s = b.as_bytes_mut();
+                (s.as_mut_ptr(), s.len())
+            })
+            .collect(),
+    };
+    // Align thread boundaries to the outer lane size (capped to keep
+    // the alignment from collapsing the thread count for SoA, where
+    // lanes == n).
+    let align = outer_lanes.min(n.div_ceil(threads).max(1));
+    let ranges = worker_ranges(n, threads, align);
+    std::thread::scope(|scope| {
+        for (t_start, t_end) in ranges {
+            let dst_ptrs = &dst_ptrs;
+            let sizes = &sizes;
+            scope.spawn(move || {
+                let leaves = sizes.len();
+                let mut block_start = t_start;
+                while block_start < t_end {
+                    let block_end =
+                        (((block_start / outer_lanes) + 1) * outer_lanes).min(t_end);
+                    for leaf in 0..leaves {
+                        let size = sizes[leaf];
+                        let mut pos = block_start;
+                        while pos < block_end {
+                            let src_run_end = ((pos / src_lanes) + 1) * src_lanes;
+                            let dst_run_end = ((pos / dst_lanes) + 1) * dst_lanes;
+                            let end = block_end.min(src_run_end).min(dst_run_end);
+                            let len = end - pos;
+                            let (snr, soff) =
+                                src.mapping().blob_nr_and_offset(leaf, src.mapping().slot_of_lin(pos));
+                            let (dnr, doff) = dmap.blob_nr_and_offset(leaf, dmap.slot_of_lin(pos));
+                            let nbytes = len * size;
+                            let sbytes = src.blobs()[snr].as_bytes();
+                            let (dptr, dlen) = dst_ptrs.ptrs[dnr];
+                            assert!(doff + nbytes <= dlen && soff + nbytes <= sbytes.len());
+                            // SAFETY: checked above; thread ranges are
+                            // disjoint in lin, so dst ranges are
+                            // disjoint by the mapping invariant.
+                            unsafe {
+                                std::ptr::copy_nonoverlapping(
+                                    sbytes.as_ptr().add(soff),
+                                    dptr.add(doff),
+                                    nbytes,
+                                );
+                            }
+                            pos = end;
+                        }
+                    }
+                    block_start = block_end;
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::copy::test_support::fill_distinct;
+    use crate::copy::{views_equal, ChunkOrder};
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, SoA};
+    use crate::view::alloc_view;
+
+    #[test]
+    fn parallel_naive_matches_serial() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(5000);
+        let mut src = alloc_view(AoS::aligned(&d, dims.clone()));
+        fill_distinct(&mut src);
+        let mut dst = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        copy_naive_parallel(&src, &mut dst, Some(4));
+        assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    fn parallel_aosoa_matches_serial() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(4096 + 17);
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_distinct(&mut src);
+        for order in [ChunkOrder::ReadContiguous, ChunkOrder::WriteContiguous] {
+            let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 32));
+            copy_aosoa_parallel(&src, &mut dst, order, Some(4));
+            assert!(views_equal(&src, &dst), "order {order:?}");
+        }
+    }
+
+    #[test]
+    fn small_inputs_fall_back_to_serial() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(10);
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_distinct(&mut src);
+        let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 4));
+        copy_aosoa_parallel(&src, &mut dst, ChunkOrder::ReadContiguous, Some(8));
+        assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    fn worker_ranges_cover_everything() {
+        for (n, t, a) in [(100, 4, 1), (4096, 8, 32), (5, 8, 4), (1000, 3, 7)] {
+            let ranges = super::worker_ranges(n, t, a);
+            let mut expect = 0;
+            for (s, e) in &ranges {
+                assert_eq!(*s, expect);
+                assert!(e > s);
+                expect = *e;
+            }
+            assert_eq!(expect, n);
+        }
+    }
+
+    #[test]
+    fn single_thread_option() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(2048);
+        let mut src = alloc_view(AoSoA::new(&d, dims.clone(), 16), );
+        fill_distinct(&mut src);
+        let mut dst = alloc_view(SoA::single_blob(&d, dims.clone()));
+        copy_aosoa_parallel(&src, &mut dst, ChunkOrder::WriteContiguous, Some(1));
+        assert!(views_equal(&src, &dst));
+    }
+}

@@ -1,0 +1,103 @@
+//! Render [`crate::mapping::Heatmap`] counters (paper fig 4d) as ASCII
+//! art or a binary PGM image (one pixel per granule, log-scaled).
+
+use crate::mapping::{Heatmap, Mapping};
+
+fn log_scale(count: u64, max: u64) -> f64 {
+    if max == 0 || count == 0 {
+        0.0
+    } else {
+        ((count as f64).ln_1p()) / ((max as f64).ln_1p())
+    }
+}
+
+/// ASCII heatmap: one character per granule, `width` granules per row,
+/// intensity ramp ` .:-=+*#%@`.
+pub fn heatmap_ascii<M: Mapping>(h: &Heatmap<M>, width: usize) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let mut out = String::new();
+    for blob in 0..h.blob_count() {
+        let counts = h.blob_counts(blob);
+        let max = counts.iter().copied().max().unwrap_or(0);
+        out.push_str(&format!(
+            "blob {blob} ({} B, granularity {} B, max {} accesses)\n",
+            h.blob_size(blob),
+            h.granularity(),
+            max
+        ));
+        for row in counts.chunks(width) {
+            for &c in row {
+                let lvl = (log_scale(c, max) * (RAMP.len() - 1) as f64).round() as usize;
+                out.push(RAMP[lvl.min(RAMP.len() - 1)] as char);
+            }
+            out.push('\n');
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Binary PGM (P5) image of one blob's counters, `width` granules per
+/// row. Returns the raw file bytes.
+pub fn heatmap_pgm<M: Mapping>(h: &Heatmap<M>, blob: usize, width: usize) -> Vec<u8> {
+    let counts = h.blob_counts(blob);
+    let max = counts.iter().copied().max().unwrap_or(0);
+    let height = counts.len().div_ceil(width).max(1);
+    let mut out = format!("P5\n{width} {height}\n255\n").into_bytes();
+    for row in 0..height {
+        for col in 0..width {
+            let idx = row * width + col;
+            let v = counts.get(idx).copied().unwrap_or(0);
+            out.push((log_scale(v, max) * 255.0).round() as u8);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, Heatmap};
+
+    fn touched_heatmap() -> Heatmap<AoS> {
+        let h = Heatmap::new(AoS::packed(&particle_dim(), ArrayDims::linear(4)));
+        for slot in 0..4 {
+            for _ in 0..(slot + 1) * 3 {
+                let _ = h.blob_nr_and_offset(1, slot); // pos.x, increasing heat
+            }
+        }
+        h
+    }
+
+    #[test]
+    fn ascii_render_shape() {
+        let h = touched_heatmap();
+        let art = heatmap_ascii(&h, 25);
+        assert!(art.contains("blob 0"));
+        // 100 bytes at width 25 -> 4 data rows.
+        let data_rows =
+            art.lines().filter(|l| !l.is_empty() && !l.starts_with("blob")).count();
+        assert_eq!(data_rows, 4);
+        // Hot bytes render darker than cold ones.
+        assert!(art.contains('@'));
+        assert!(art.contains(' '));
+    }
+
+    #[test]
+    fn pgm_header_and_size() {
+        let h = touched_heatmap();
+        let pgm = heatmap_pgm(&h, 0, 25);
+        let text = String::from_utf8_lossy(&pgm[..15]);
+        assert!(text.starts_with("P5\n25 4\n255\n"));
+        assert_eq!(pgm.len(), 12 + 25 * 4);
+    }
+
+    #[test]
+    fn untouched_heatmap_is_blank() {
+        let h = Heatmap::new(AoS::packed(&particle_dim(), ArrayDims::linear(2)));
+        let art = heatmap_ascii(&h, 50);
+        assert!(!art.contains('@'));
+    }
+}

@@ -1,0 +1,93 @@
+//! HTML layout dump (paper §3.7 mentions "a flexible HTML visualization
+//! can also be dumped"): a byte-granular table per blob with per-field
+//! colors and hover titles.
+
+use super::{layout_cells, leaf_color};
+use crate::mapping::Mapping;
+
+/// Render the first `max_records` records as a standalone HTML page.
+pub fn dump_html<M: Mapping>(mapping: &M, max_records: usize) -> String {
+    let cells = layout_cells(mapping, max_records);
+    let info = mapping.info().clone();
+    let leaves = info.leaf_count();
+    let mut out = String::new();
+    out.push_str("<!DOCTYPE html>\n<html><head><meta charset=\"utf-8\">\n");
+    out.push_str("<style>\n");
+    out.push_str(
+        ".b{display:inline-block;min-width:3.2em;padding:2px;margin:1px;\
+         font:10px monospace;border:1px solid #444;text-align:center}\n",
+    );
+    out.push_str("h2{font-family:monospace}\n</style></head><body>\n");
+    out.push_str(&format!(
+        "<h1 style=\"font-family:monospace\">{}</h1>\n",
+        html_escape(&mapping.mapping_name())
+    ));
+    out.push_str(&format!(
+        "<p>record dim: {} leaves, packed {} B, aligned {} B; array dims {:?}; {} blob(s)</p>\n",
+        leaves,
+        info.packed_size,
+        info.aligned_size,
+        mapping.dims().extents(),
+        mapping.blob_count()
+    ));
+    for blob in 0..mapping.blob_count() {
+        out.push_str(&format!(
+            "<h2>blob {blob} — {} bytes</h2>\n<div>",
+            mapping.blob_size(blob)
+        ));
+        let mut blob_cells: Vec<_> = cells.iter().filter(|c| c.blob == blob).collect();
+        blob_cells.sort_by_key(|c| c.offset);
+        let mut cursor = 0usize;
+        for c in blob_cells {
+            if c.offset > cursor {
+                out.push_str(&format!(
+                    "<span class=\"b\" style=\"background:#ddd\" title=\"padding\">pad {}</span>",
+                    c.offset - cursor
+                ));
+            }
+            out.push_str(&format!(
+                "<span class=\"b\" style=\"background:{}\" title=\"bytes {}..{}\">{}[{}]</span>",
+                leaf_color(c.leaf, leaves),
+                c.offset,
+                c.offset + c.size,
+                html_escape(&c.path),
+                c.lin
+            ));
+            cursor = c.offset + c.size;
+        }
+        out.push_str("</div>\n");
+    }
+    out.push_str("</body></html>\n");
+    out
+}
+
+fn html_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, SoA};
+
+    #[test]
+    fn html_structure() {
+        let m = AoS::aligned(&particle_dim(), ArrayDims::linear(2));
+        let html = dump_html(&m, 2);
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.contains("AoS(aligned"));
+        assert!(html.contains("mass"));
+        // Aligned AoS has padding spans.
+        assert!(html.contains("title=\"padding\""));
+        assert!(html.trim_end().ends_with("</html>"));
+    }
+
+    #[test]
+    fn packed_has_no_padding() {
+        let m = SoA::single_blob(&particle_dim(), ArrayDims::linear(2));
+        let html = dump_html(&m, 2);
+        assert!(!html.contains("title=\"padding\""));
+    }
+}

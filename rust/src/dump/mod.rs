@@ -1,0 +1,87 @@
+//! Layout visualization (paper §3.7 / fig 4): dump a mapping's memory
+//! layout as SVG or HTML, and render heatmap counters as PGM/ASCII.
+
+pub mod heatmap_render;
+pub mod html;
+pub mod svg;
+
+pub use heatmap_render::{heatmap_ascii, heatmap_pgm};
+pub use html::dump_html;
+pub use svg::dump_svg;
+
+use crate::mapping::Mapping;
+
+/// One colored cell of a layout picture: a byte range in a blob storing
+/// a specific (field, array index) pair.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutCell {
+    pub blob: usize,
+    pub offset: usize,
+    pub size: usize,
+    pub leaf: usize,
+    pub path: String,
+    pub lin: usize,
+}
+
+/// Enumerate the layout cells of (up to) the first `max_records` array
+/// records — the data both dump formats render.
+pub fn layout_cells<M: Mapping>(mapping: &M, max_records: usize) -> Vec<LayoutCell> {
+    let info = mapping.info().clone();
+    let n = mapping.dims().count().min(max_records);
+    let mut cells = Vec::with_capacity(n * info.leaf_count());
+    for lin in 0..n {
+        let slot = mapping.slot_of_lin(lin);
+        for leaf in 0..info.leaf_count() {
+            let (blob, offset) = mapping.blob_nr_and_offset(leaf, slot);
+            cells.push(LayoutCell {
+                blob,
+                offset,
+                size: info.fields[leaf].size(),
+                leaf,
+                path: info.fields[leaf].path.clone(),
+                lin,
+            });
+        }
+    }
+    cells
+}
+
+/// Deterministic distinct-ish color per leaf index (HSL spread).
+pub(crate) fn leaf_color(leaf: usize, leaves: usize) -> String {
+    let hue = (leaf * 360) / leaves.max(1);
+    format!("hsl({hue}, 65%, 70%)")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, SoA};
+
+    #[test]
+    fn cells_cover_all_fields() {
+        let m = AoS::packed(&particle_dim(), ArrayDims::linear(4));
+        let cells = layout_cells(&m, 100);
+        assert_eq!(cells.len(), 4 * 8);
+        // Packed AoS: consecutive, no holes.
+        let total: usize = cells.iter().map(|c| c.size).sum();
+        assert_eq!(total, 4 * 25);
+    }
+
+    #[test]
+    fn cells_respect_max_records() {
+        let m = SoA::multi_blob(&particle_dim(), ArrayDims::linear(1000));
+        let cells = layout_cells(&m, 3);
+        assert_eq!(cells.len(), 3 * 8);
+        assert!(cells.iter().all(|c| c.lin < 3));
+    }
+
+    #[test]
+    fn colors_are_distinct_for_small_counts() {
+        let a = leaf_color(0, 8);
+        let b = leaf_color(1, 8);
+        assert_ne!(a, b);
+        assert!(a.starts_with("hsl("));
+    }
+}

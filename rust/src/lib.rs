@@ -1,0 +1,78 @@
+//! # LLAMA — the Low-Level Abstraction of Memory Access, in Rust
+//!
+//! A reproduction of *LLAMA: The Low-Level Abstraction for Memory
+//! Access* (Gruber et al., Software: Practice & Experience 2021, DOI
+//! 10.1002/spe.3077) as a Rust + JAX + Pallas three-layer stack.
+//!
+//! Programs are written against an abstract **data space** — runtime
+//! [`array::ArrayDims`] × compile-time [`record::RecordDim`] — and the
+//! physical memory layout is supplied separately as an exchangeable
+//! [`mapping::Mapping`] (AoS, SoA, AoSoA, One, Split, Trace, Heatmap,
+//! ...). [`view::View`]s combine a mapping with [`blob::Blob`] storage;
+//! [`copy`] moves data between views of different layouts in the largest
+//! chunks both layouts admit.
+//!
+//! ```
+//! use llama::prelude::*;
+//!
+//! let particle = llama::record_dim! {
+//!     pos: { x: f32, y: f32, z: f32 },
+//!     mass: f32,
+//!     vel: { x: f32, y: f32, z: f32 },
+//! };
+//! let dims = ArrayDims::linear(1024);
+//!
+//! // Switch the layout by changing one line (paper §4.3):
+//! let mapping = SoA::multi_blob(&particle, dims);
+//! let mut view = alloc_view(mapping);
+//!
+//! let mass = view.mapping().info().leaf_by_path("mass").unwrap();
+//! for i in 0..view.count() {
+//!     view.set::<f32>(i, mass, 1.0);
+//! }
+//! assert_eq!(view.get::<f32>(1023, mass), 1.0);
+//! ```
+//!
+//! The evaluation workloads (n-body, D3Q19 LBM, HEP event records,
+//! PIConGPU-style particle frames) live under [`workloads`]; the PJRT
+//! runtime executing the JAX/Pallas AOT artifacts lives under
+//! [`runtime`]; the benchmark drivers under [`coordinator`].
+
+pub mod array;
+pub mod blob;
+pub mod coordinator;
+pub mod copy;
+pub mod dump;
+pub mod mapping;
+#[macro_use]
+pub mod record;
+pub mod runtime;
+pub mod view;
+pub mod workloads;
+
+/// The paper's listing-1 Particle record (id, pos, mass, flags) — used
+/// by the fig 4 layout dumps and the quickstart example.
+pub fn mapping_demo_dim() -> record::RecordDim {
+    record_dim! {
+        id: u16,
+        pos: { x: f32, y: f32, z: f32 },
+        mass: f64,
+        flags: [bool; 3],
+    }
+}
+
+/// Convenient glob import for examples and applications.
+pub mod prelude {
+    pub use crate::array::{ArrayDims, ArrayIndexRange, ColMajor, HilbertCurve2D, MortonCurve, RowMajor};
+    pub use crate::blob::{AlignedAlloc, Blob, BlobAllocator, BlobMut, VecAlloc};
+    pub use crate::copy::{
+        aosoa_copy, copy, copy_blobwise, copy_naive, copy_stdcopy, views_equal, ChunkOrder,
+    };
+    pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
+    pub use crate::mapping::{
+        recommend, AccessPattern, AoS, AoSoA, Byteswap, Heatmap, Mapping, Null, One,
+        Recommendation, SoA, Split, Trace,
+    };
+    pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};
+    pub use crate::view::{alloc_view, alloc_view_with, OneRecord, ScalarVal, View};
+}

@@ -1,0 +1,16 @@
+//! `llama` binary entry point: see `llama --help`.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = match llama::coordinator::cli::parse(&args) {
+        Ok(cli) => cli,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = llama::coordinator::cli::run(cli) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

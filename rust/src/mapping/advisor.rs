@@ -1,0 +1,215 @@
+//! Automatic mapping choice (paper §5: "building facilities for ...
+//! automatic optimum mapping choice are well within the reach of
+//! LLAMA's existing capabilities").
+//!
+//! The advisor consumes what LLAMA already produces — per-field access
+//! counts from a [`super::Trace`] run of the user's real program — plus
+//! a coarse hardware/access-pattern hint, and recommends a layout:
+//!
+//! * fields are ranked by access density (accesses × size);
+//! * a utilization model scores AoS (locality: good when most of the
+//!   record is touched together), SoA (streaming: good when few fields
+//!   are touched over many records) and a hot/cold Split;
+//! * the winner is returned as a ready-to-use mapping recipe.
+//!
+//! This is intentionally a *first-order* model (cache-line utilization,
+//! the same arithmetic the paper uses in §4.1 to explain the move
+//! phase: AoS wastes `1 - touched/record` of each line); it is
+//! validated against the measured fig-5/fig-8 orderings in the tests.
+
+use super::{Mapping, Trace};
+use crate::record::RecordInfo;
+
+/// How the program walks the array dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccessPattern {
+    /// Linear sweeps over all records (streaming, bandwidth-bound).
+    Streaming,
+    /// Random/irregular positions, most of the record used per visit.
+    RandomFullRecord,
+}
+
+/// The advisor's verdict.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Recommendation {
+    Aos,
+    SoaMultiBlob,
+    /// Hot leaves (by flat index) split off into SoA, rest AoS.
+    SplitHotCold { hot: Vec<usize> },
+}
+
+/// Per-field access statistics, extracted from a [`Trace`].
+#[derive(Debug, Clone)]
+pub struct FieldStats {
+    /// (leaf, accesses, size in bytes), declaration order.
+    pub fields: Vec<(usize, u64, usize)>,
+}
+
+impl FieldStats {
+    pub fn from_trace<M: Mapping>(trace: &Trace<M>) -> Self {
+        let info = trace.info().clone();
+        FieldStats {
+            fields: (0..info.leaf_count())
+                .map(|l| (l, trace.count(l), info.fields[l].size()))
+                .collect(),
+        }
+    }
+
+    fn total_accessed_bytes(&self) -> f64 {
+        self.fields.iter().map(|&(_, c, s)| c as f64 * s as f64).sum()
+    }
+
+    /// Fraction of the record's bytes that belong to fields touched at
+    /// least once per record visit (the paper's §4.1 bandwidth-use
+    /// argument).
+    fn touched_fraction(&self, info: &RecordInfo) -> f64 {
+        let max_count = self.fields.iter().map(|&(_, c, _)| c).max().unwrap_or(0);
+        if max_count == 0 {
+            return 1.0;
+        }
+        // A field counts as "hot" if it sees at least half the maximum
+        // access rate.
+        let hot_bytes: usize = self
+            .fields
+            .iter()
+            .filter(|&&(_, c, _)| c * 2 >= max_count)
+            .map(|&(_, _, s)| s)
+            .sum();
+        hot_bytes as f64 / info.packed_size as f64
+    }
+
+    /// Leaves carrying at least half the maximum access rate.
+    pub fn hot_leaves(&self) -> Vec<usize> {
+        let max_count = self.fields.iter().map(|&(_, c, _)| c).max().unwrap_or(0);
+        self.fields
+            .iter()
+            .filter(|&&(_, c, _)| c * 2 >= max_count)
+            .map(|&(l, _, _)| l)
+            .collect()
+    }
+}
+
+/// Recommend a layout from traced statistics and an access-pattern
+/// hint.
+pub fn recommend<M: Mapping>(trace: &Trace<M>, pattern: AccessPattern) -> Recommendation {
+    let stats = FieldStats::from_trace(trace);
+    let info = trace.info().clone();
+    if stats.total_accessed_bytes() == 0.0 {
+        // No data: default to the general-purpose streaming layout.
+        return Recommendation::SoaMultiBlob;
+    }
+    let touched = stats.touched_fraction(&info);
+    match pattern {
+        AccessPattern::RandomFullRecord => {
+            // Irregular positions + (almost) whole record: locality of
+            // reference wins (paper §2.1: "If the access is at
+            // irregular array positions and to almost all of the inner
+            // structure, AoS layouts provide better locality").
+            if touched > 0.6 {
+                Recommendation::Aos
+            } else {
+                // Random but narrow: split the hot fields off.
+                Recommendation::SplitHotCold { hot: stats.hot_leaves() }
+            }
+        }
+        AccessPattern::Streaming => {
+            if touched >= 0.99 {
+                // Everything is hot: SoA streams every byte usefully
+                // and vectorizes; AoS only matches it when lines are
+                // fully used *and* the loop is compute-bound.
+                Recommendation::SoaMultiBlob
+            } else if touched >= 0.5 {
+                Recommendation::SoaMultiBlob
+            } else {
+                Recommendation::SplitHotCold { hot: stats.hot_leaves() }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::{AoS, Trace};
+    use crate::view::alloc_view;
+    use crate::workloads::nbody::{self, llama_impl};
+
+    /// The n-body move phase (streams 6 of 7 fields) must be advised
+    /// towards SoA — the layout fig 5 measures as fastest for it.
+    #[test]
+    fn move_phase_recommends_soa() {
+        let d = nbody::particle_dim();
+        let n = 64;
+        let t = Trace::new(AoS::packed(&d, ArrayDims::linear(n)));
+        let mut v = alloc_view(t);
+        let s = nbody::init_particles(n, 1);
+        llama_impl::load_state(&mut v, &s);
+        v.mapping().reset();
+        llama_impl::mv(&mut v);
+        let rec = recommend(v.mapping(), AccessPattern::Streaming);
+        assert_eq!(rec, Recommendation::SoaMultiBlob);
+    }
+
+    /// A workload touching only one field of a wide record must be
+    /// advised towards a hot/cold split containing that field.
+    #[test]
+    fn narrow_access_recommends_split() {
+        let d = crate::workloads::hep::event_dim();
+        let t = Trace::new(AoS::aligned(&d, ArrayDims::linear(32)));
+        let v = alloc_view(t);
+        // Touch only field 2 (energy of object 0), heavily.
+        for lin in 0..32 {
+            for _ in 0..50 {
+                let _ = v.get::<f32>(lin, 2);
+            }
+        }
+        match recommend(v.mapping(), AccessPattern::Streaming) {
+            Recommendation::SplitHotCold { hot } => {
+                assert!(hot.contains(&2));
+                assert!(hot.len() < 10, "split must be selective, got {hot:?}");
+            }
+            other => panic!("expected split, got {other:?}"),
+        }
+    }
+
+    /// Random full-record access (the paper's §2.1 AoS case).
+    #[test]
+    fn random_full_record_recommends_aos() {
+        let d = nbody::particle_dim();
+        let t = Trace::new(AoS::packed(&d, ArrayDims::linear(16)));
+        let v = alloc_view(t);
+        for lin in [3usize, 9, 1, 14, 7] {
+            for leaf in 0..7 {
+                let _ = v.get::<f32>(lin, leaf);
+            }
+        }
+        assert_eq!(
+            recommend(v.mapping(), AccessPattern::RandomFullRecord),
+            Recommendation::Aos
+        );
+    }
+
+    #[test]
+    fn no_data_defaults_to_soa() {
+        let d = nbody::particle_dim();
+        let t = Trace::new(AoS::packed(&d, ArrayDims::linear(4)));
+        let v = alloc_view(t);
+        assert_eq!(
+            recommend(v.mapping(), AccessPattern::Streaming),
+            Recommendation::SoaMultiBlob
+        );
+    }
+
+    #[test]
+    fn stats_extraction() {
+        let d = nbody::particle_dim();
+        let t = Trace::new(AoS::packed(&d, ArrayDims::linear(4)));
+        let v = alloc_view(t);
+        let _ = v.get::<f32>(0, 0);
+        let _ = v.get::<f32>(0, 0);
+        let stats = FieldStats::from_trace(v.mapping());
+        assert_eq!(stats.fields[0], (0, 2, 4));
+        assert_eq!(stats.hot_leaves(), vec![0]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Affine layout descriptions — the performance backbone of the hot
+//! kernels (EXPERIMENTS.md §Perf).
+//!
+//! Many mappings are *affine in the canonical linear index*: the byte
+//! address of leaf `l` at index `i` is `base[l] + i * stride[l]` inside
+//! a fixed blob. AoS (stride = record size), SoA (stride = field size),
+//! Split-of-affine and One (stride = 0) all qualify; AoSoA (piecewise)
+//! and the instrumented/represented wrappers do not.
+//!
+//! In C++ LLAMA the compiler proves this by inlining the constexpr
+//! mapping; with identical disassembly as the result (paper listings
+//! 10/11). In Rust, the mapping and the blobs live behind the same
+//! `&mut View`, so LLVM must assume stores to blob bytes may alias the
+//! mapping's offset tables and cannot hoist them. [`AffineLeaf`]
+//! extracts the three integers per leaf *once*; kernels then run over
+//! raw cursors with loop-invariant bases — restoring the zero-overhead
+//! property (measured in `cargo bench --bench fig5_nbody`).
+
+/// One leaf's affine address rule: `blob[nr][base + lin * stride]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AffineLeaf {
+    pub blob: usize,
+    pub base: usize,
+    pub stride: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, Byteswap, Heatmap, Mapping, One, SoA, Split, Trace};
+    use crate::record::RecordCoord;
+
+    /// Every Some(affine) must agree with blob_nr_and_offset everywhere.
+    fn check_affine<M: Mapping>(m: &M) {
+        let Some(leaves) = m.affine_leaves() else {
+            return;
+        };
+        assert_eq!(leaves.len(), m.info().leaf_count());
+        for lin in 0..m.dims().count() {
+            let slot = m.slot_of_lin(lin);
+            for (leaf, a) in leaves.iter().enumerate() {
+                let want = m.blob_nr_and_offset(leaf, slot);
+                assert_eq!(
+                    (a.blob, a.base + lin * a.stride),
+                    want,
+                    "{} leaf {leaf} lin {lin}",
+                    m.mapping_name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affine_agreement_all_mappings() {
+        let d = particle_dim();
+        let dims = ArrayDims::from([3, 5]);
+        check_affine(&AoS::aligned(&d, dims.clone()));
+        check_affine(&AoS::packed(&d, dims.clone()));
+        check_affine(&SoA::multi_blob(&d, dims.clone()));
+        check_affine(&SoA::single_blob(&d, dims.clone()));
+        check_affine(&One::new(&d, dims.clone()));
+        check_affine(&Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| SoA::multi_blob(sd, ad),
+            |sd, ad| AoS::aligned(sd, ad),
+        ));
+    }
+
+    #[test]
+    fn non_affine_mappings_decline() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(8);
+        assert!(AoSoA::new(&d, dims.clone(), 4).affine_leaves().is_none());
+        assert!(Trace::new(AoS::packed(&d, dims.clone())).affine_leaves().is_none());
+        assert!(Heatmap::new(AoS::packed(&d, dims.clone())).affine_leaves().is_none());
+        assert!(Byteswap::new(AoS::packed(&d, dims.clone())).affine_leaves().is_none());
+        // AoSoA with 1 lane degenerates to packed AoS: affine.
+        assert!(AoSoA::new(&d, dims.clone(), 1).affine_leaves().is_some());
+        check_affine(&AoSoA::new(&d, dims, 1));
+    }
+
+    #[test]
+    fn morton_linearized_declines() {
+        use crate::array::MortonCurve;
+        let d = particle_dim();
+        let m = AoS::with_linearizer(&d, ArrayDims::from([4, 4]), MortonCurve, false);
+        assert!(m.affine_leaves().is_none());
+    }
+}

@@ -1,0 +1,198 @@
+//! Array-of-structs mapping (paper §3.7, 48 LOCs in C++).
+//!
+//! Places the record's fields after each other and repeats that layout
+//! once per array slot. Field offsets follow either C++ alignment rules
+//! (`aligned`, the default, with padding) or are tightly packed.
+
+use std::sync::Arc;
+
+use super::{AffineLeaf, Mapping};
+use crate::array::{ArrayDims, Linearizer, RowMajor};
+use crate::record::{RecordDim, RecordInfo};
+
+/// AoS mapping, generic over the array-index linearization.
+#[derive(Debug, Clone)]
+pub struct AoS<L: Linearizer = RowMajor> {
+    info: Arc<RecordInfo>,
+    dims: ArrayDims,
+    lin: L,
+    lin_state: L::State,
+    slots: usize,
+    aligned: bool,
+    record_size: usize,
+    /// Per-leaf byte offset within one record (aligned or packed).
+    offsets: Vec<usize>,
+}
+
+impl AoS<RowMajor> {
+    /// Aligned AoS (C++ struct layout), row-major.
+    pub fn aligned(dim: &RecordDim, dims: ArrayDims) -> Self {
+        Self::with_linearizer(dim, dims, RowMajor, true)
+    }
+
+    /// Packed AoS (no padding), row-major.
+    pub fn packed(dim: &RecordDim, dims: ArrayDims) -> Self {
+        Self::with_linearizer(dim, dims, RowMajor, false)
+    }
+}
+
+impl<L: Linearizer> AoS<L> {
+    pub fn with_linearizer(dim: &RecordDim, dims: ArrayDims, lin: L, aligned: bool) -> Self {
+        let info = Arc::new(RecordInfo::new(dim));
+        let lin_state = lin.prepare(&dims);
+        let slots = lin.slot_count(&dims);
+        let record_size = if aligned { info.aligned_size } else { info.packed_size };
+        let offsets = info
+            .fields
+            .iter()
+            .map(|f| if aligned { f.offset_aligned } else { f.offset_packed })
+            .collect();
+        AoS { info, dims, lin, lin_state, slots, aligned, record_size, offsets }
+    }
+
+    pub fn is_aligned(&self) -> bool {
+        self.aligned
+    }
+
+    pub fn record_size(&self) -> usize {
+        self.record_size
+    }
+}
+
+impl<L: Linearizer> Mapping for AoS<L> {
+    fn info(&self) -> &Arc<RecordInfo> {
+        &self.info
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        &self.dims
+    }
+
+    fn blob_count(&self) -> usize {
+        1
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        debug_assert_eq!(nr, 0);
+        self.slots * self.record_size
+    }
+
+    #[inline]
+    fn slot_count(&self) -> usize {
+        self.slots
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        // Row-major canonical == slot only when L is row-major; other
+        // linearizers route through slot_of_nd. We detect the common
+        // case cheaply: RowMajor's state is the canonical strides.
+        if std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>() {
+            lin
+        } else {
+            let idx = self.dims.delinearize_row_major(lin);
+            L::linearize(&self.lin_state, &idx)
+        }
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        L::linearize(&self.lin_state, idx)
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        (0, slot * self.record_size + self.offsets[leaf])
+    }
+
+    fn mapping_name(&self) -> String {
+        format!(
+            "AoS({}, {})",
+            if self.aligned { "aligned" } else { "packed" },
+            self.lin.name()
+        )
+    }
+
+    fn aosoa_lanes(&self) -> Option<usize> {
+        // Packed AoS == AoSoA with 1 lane (no padding between fields).
+        // Single-element runs stay correct under any slot permutation,
+        // so no row-major restriction is needed here.
+        if self.aligned {
+            None
+        } else {
+            Some(1)
+        }
+    }
+
+    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+        if std::any::TypeId::of::<L>() != std::any::TypeId::of::<RowMajor>() {
+            return None;
+        }
+        Some(
+            self.offsets
+                .iter()
+                .map(|&off| AffineLeaf { blob: 0, base: off, stride: self.record_size })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::{ColMajor, MortonCurve};
+    use crate::mapping::test_support::{check_mapping_invariants, particle_dim};
+
+    #[test]
+    fn packed_layout_offsets() {
+        let m = AoS::packed(&particle_dim(), ArrayDims::linear(4));
+        // packed record = 2+4+4+4+8+1+1+1 = 25 bytes
+        assert_eq!(m.record_size(), 25);
+        assert_eq!(m.blob_count(), 1);
+        assert_eq!(m.blob_size(0), 100);
+        assert_eq!(m.blob_nr_and_offset(0, 0), (0, 0)); // id @ rec 0
+        assert_eq!(m.blob_nr_and_offset(1, 0), (0, 2)); // pos.x
+        assert_eq!(m.blob_nr_and_offset(0, 2), (0, 50)); // id @ rec 2
+    }
+
+    #[test]
+    fn aligned_layout_offsets() {
+        let m = AoS::aligned(&particle_dim(), ArrayDims::linear(4));
+        assert_eq!(m.record_size(), 32); // padded to 8
+        // id u16 @0, pad, pos.x @4, pos.y @8, pos.z @12, mass f64 @16.
+        assert_eq!(m.blob_nr_and_offset(4, 0), (0, 16));
+        assert_eq!(m.blob_nr_and_offset(4, 1), (0, 48));
+    }
+
+    #[test]
+    fn invariants_packed_and_aligned() {
+        for aligned in [false, true] {
+            let m = AoS::with_linearizer(
+                &particle_dim(),
+                ArrayDims::from([3, 5]),
+                RowMajor,
+                aligned,
+            );
+            check_mapping_invariants(&m);
+        }
+    }
+
+    #[test]
+    fn invariants_col_major_and_morton() {
+        let m = AoS::with_linearizer(&particle_dim(), ArrayDims::from([3, 5]), ColMajor, true);
+        check_mapping_invariants(&m);
+        let m = AoS::with_linearizer(&particle_dim(), ArrayDims::from([3, 5]), MortonCurve, false);
+        check_mapping_invariants(&m);
+        // Morton pads 3x5 -> 4x8 slots.
+        assert_eq!(m.slot_count(), 32);
+        assert_eq!(m.blob_size(0), 32 * 25);
+    }
+
+    #[test]
+    fn packed_aos_is_aosoa1() {
+        let m = AoS::packed(&particle_dim(), ArrayDims::linear(4));
+        assert_eq!(m.aosoa_lanes(), Some(1));
+        let m = AoS::aligned(&particle_dim(), ArrayDims::linear(4));
+        assert_eq!(m.aosoa_lanes(), None);
+    }
+}

@@ -1,0 +1,228 @@
+//! Array-of-structs-of-arrays mapping (paper §3.7, 61 LOCs in C++).
+//!
+//! Records are grouped into blocks of `L` (the *lane count*); within a
+//! block each field repeats `L` times contiguously. AoSoA is the sweet
+//! spot between AoS locality and SoA vectorizability (paper §2.1).
+
+use std::sync::Arc;
+
+use super::{AffineLeaf, Mapping};
+use crate::array::{ArrayDims, Linearizer, RowMajor};
+use crate::record::{RecordDim, RecordInfo};
+
+/// AoSoA mapping with a runtime lane count (compile-time `L` in C++;
+/// here captured once at construction — still loop-invariant).
+#[derive(Debug, Clone)]
+pub struct AoSoA<L: Linearizer = RowMajor> {
+    info: Arc<RecordInfo>,
+    dims: ArrayDims,
+    lin: L,
+    lin_state: L::State,
+    slots: usize,
+    lanes: usize,
+    /// Number of lane-blocks: ceil(slots / lanes).
+    blocks: usize,
+    /// Bytes per block: lanes * packed record size.
+    block_size: usize,
+    /// Per-leaf: packed offset * lanes (start of the field's lane group
+    /// within a block).
+    field_block_off: Vec<usize>,
+    sizes: Vec<usize>,
+}
+
+impl AoSoA<RowMajor> {
+    pub fn new(dim: &RecordDim, dims: ArrayDims, lanes: usize) -> Self {
+        Self::with_linearizer(dim, dims, RowMajor, lanes)
+    }
+}
+
+impl<L: Linearizer> AoSoA<L> {
+    pub fn with_linearizer(dim: &RecordDim, dims: ArrayDims, lin: L, lanes: usize) -> Self {
+        assert!(lanes > 0, "AoSoA lane count must be positive");
+        let info = Arc::new(RecordInfo::new(dim));
+        let lin_state = lin.prepare(&dims);
+        let slots = lin.slot_count(&dims);
+        let blocks = slots.div_ceil(lanes);
+        let block_size = lanes * info.packed_size;
+        let field_block_off = info.fields.iter().map(|f| f.offset_packed * lanes).collect();
+        let sizes = info.fields.iter().map(|f| f.size()).collect();
+        AoSoA {
+            info,
+            dims,
+            lin,
+            lin_state,
+            slots,
+            lanes,
+            blocks,
+            block_size,
+            field_block_off,
+            sizes,
+        }
+    }
+
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    #[inline]
+    pub fn blocks(&self) -> usize {
+        self.blocks
+    }
+}
+
+impl<L: Linearizer> Mapping for AoSoA<L> {
+    fn info(&self) -> &Arc<RecordInfo> {
+        &self.info
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        &self.dims
+    }
+
+    fn blob_count(&self) -> usize {
+        1
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        debug_assert_eq!(nr, 0);
+        self.blocks * self.block_size
+    }
+
+    #[inline]
+    fn slot_count(&self) -> usize {
+        self.slots
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        if std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>() {
+            lin
+        } else {
+            let idx = self.dims.delinearize_row_major(lin);
+            L::linearize(&self.lin_state, &idx)
+        }
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        L::linearize(&self.lin_state, idx)
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        // The i -> (i / L, i % L) split the paper discusses in §4.1.
+        let block = slot / self.lanes;
+        let lane = slot % self.lanes;
+        (
+            0,
+            block * self.block_size + self.field_block_off[leaf] + lane * self.sizes[leaf],
+        )
+    }
+
+    fn mapping_name(&self) -> String {
+        format!("AoSoA{}({})", self.lanes, self.lin.name())
+    }
+
+    fn aosoa_lanes(&self) -> Option<usize> {
+        // Chunked copies walk canonical index runs: only valid when
+        // slot == lin (row-major) or runs degenerate to single elements
+        // (lanes == 1, safe under any slot permutation).
+        if self.lanes == 1
+            || std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>()
+        {
+            Some(self.lanes)
+        } else {
+            None
+        }
+    }
+
+    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+        // Only the degenerate 1-lane case (== packed AoS) is affine.
+        if self.lanes != 1
+            || std::any::TypeId::of::<L>() != std::any::TypeId::of::<RowMajor>()
+        {
+            return None;
+        }
+        Some(
+            self.info
+                .fields
+                .iter()
+                .map(|f| AffineLeaf {
+                    blob: 0,
+                    base: f.offset_packed,
+                    stride: self.info.packed_size,
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::test_support::{check_mapping_invariants, particle_dim};
+    use crate::record::{RecordDim, Scalar};
+
+    fn xy() -> RecordDim {
+        RecordDim::new().scalar("x", Scalar::F32).scalar("y", Scalar::F32)
+    }
+
+    #[test]
+    fn layout_structure_two_fields() {
+        // {x,y} f32, lanes=4: block = x x x x y y y y (32 bytes).
+        let m = AoSoA::new(&xy(), ArrayDims::linear(8), 4);
+        assert_eq!(m.blocks(), 2);
+        assert_eq!(m.blob_size(0), 64);
+        assert_eq!(m.blob_nr_and_offset(0, 0), (0, 0));
+        assert_eq!(m.blob_nr_and_offset(0, 3), (0, 12));
+        assert_eq!(m.blob_nr_and_offset(1, 0), (0, 16));
+        assert_eq!(m.blob_nr_and_offset(1, 3), (0, 28));
+        // Second block starts at 32.
+        assert_eq!(m.blob_nr_and_offset(0, 4), (0, 32));
+        assert_eq!(m.blob_nr_and_offset(1, 7), (0, 60));
+    }
+
+    #[test]
+    fn partial_tail_block_is_padded() {
+        let m = AoSoA::new(&xy(), ArrayDims::linear(5), 4);
+        assert_eq!(m.blocks(), 2);
+        assert_eq!(m.blob_size(0), 2 * 4 * 8);
+        check_mapping_invariants(&m);
+    }
+
+    #[test]
+    fn invariants_heterogeneous_record() {
+        for lanes in [1, 2, 4, 16, 64] {
+            let m = AoSoA::new(&particle_dim(), ArrayDims::from([5, 3]), lanes);
+            check_mapping_invariants(&m);
+        }
+    }
+
+    #[test]
+    fn lanes_exposed_for_copy() {
+        let m = AoSoA::new(&xy(), ArrayDims::linear(8), 4);
+        assert_eq!(m.aosoa_lanes(), Some(4));
+    }
+
+    #[test]
+    fn aosoa1_matches_packed_aos_offsets() {
+        use crate::mapping::{AoS, Mapping};
+        let a1 = AoSoA::new(&particle_dim(), ArrayDims::linear(6), 1);
+        let aos = AoS::packed(&particle_dim(), ArrayDims::linear(6));
+        for slot in 0..6 {
+            for leaf in 0..a1.info().leaf_count() {
+                assert_eq!(
+                    a1.blob_nr_and_offset(leaf, slot),
+                    aos.blob_nr_and_offset(leaf, slot)
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_lanes_panics() {
+        let _ = AoSoA::new(&xy(), ArrayDims::linear(8), 0);
+    }
+}

@@ -1,0 +1,110 @@
+//! Byteswap mapping (an extension in the spirit of the paper's §5
+//! "further enrich LLAMA's mapping capabilities"; upstream LLAMA later
+//! grew `mapping::Byteswap`). Stores every field with reversed byte
+//! order — useful for interoperating with big-endian file formats while
+//! keeping the program written against the abstract data space.
+//!
+//! The swap itself happens in the accessor layer (`view`), keyed off
+//! [`Mapping::is_native_representation`]; this mapping only flags the
+//! representation and forwards the address computation.
+
+use std::sync::Arc;
+
+use super::Mapping;
+use crate::array::ArrayDims;
+use crate::record::RecordInfo;
+
+#[derive(Debug, Clone)]
+pub struct Byteswap<M: Mapping> {
+    inner: M,
+}
+
+impl<M: Mapping> Byteswap<M> {
+    pub fn new(inner: M) -> Self {
+        Byteswap { inner }
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+}
+
+impl<M: Mapping> Mapping for Byteswap<M> {
+    fn info(&self) -> &Arc<RecordInfo> {
+        self.inner.info()
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        self.inner.dims()
+    }
+
+    fn blob_count(&self) -> usize {
+        self.inner.blob_count()
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        self.inner.blob_size(nr)
+    }
+
+    fn slot_count(&self) -> usize {
+        self.inner.slot_count()
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        self.inner.slot_of_lin(lin)
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        self.inner.slot_of_nd(idx)
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        self.inner.blob_nr_and_offset(leaf, slot)
+    }
+
+    fn mapping_name(&self) -> String {
+        format!("Byteswap({})", self.inner.mapping_name())
+    }
+
+    fn aosoa_lanes(&self) -> Option<usize> {
+        // Chunked copies would copy swapped bytes verbatim — only legal
+        // between two byteswapped views; conservatively disable.
+        None
+    }
+
+    fn is_native_representation(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::test_support::{check_mapping_invariants, particle_dim};
+    use crate::mapping::AoS;
+
+    #[test]
+    fn address_computation_is_forwarded() {
+        let inner = AoS::packed(&particle_dim(), ArrayDims::linear(4));
+        let bs = Byteswap::new(AoS::packed(&particle_dim(), ArrayDims::linear(4)));
+        for slot in 0..4 {
+            for leaf in 0..8 {
+                assert_eq!(
+                    bs.blob_nr_and_offset(leaf, slot),
+                    inner.blob_nr_and_offset(leaf, slot)
+                );
+            }
+        }
+        check_mapping_invariants(&bs);
+    }
+
+    #[test]
+    fn non_native_flag() {
+        let bs = Byteswap::new(AoS::packed(&particle_dim(), ArrayDims::linear(4)));
+        assert!(!bs.is_native_representation());
+        assert_eq!(bs.aosoa_lanes(), None);
+    }
+}

@@ -1,0 +1,232 @@
+//! **Mappings**: the core of LLAMA (paper §3.7, fig 3).
+//!
+//! A mapping translates an access to a terminal field at an array index
+//! into `(blob number, byte offset)`. Mappings are constructed once from
+//! a record dimension + array dimensions; all per-field strides are
+//! precomputed so the hot-path translation is a couple of integer ops
+//! that LLVM inlines and vectorizes through (the paper's zero-overhead
+//! requirement).
+//!
+//! Provided mappings mirror the paper's list: [`AoS`] (aligned/packed),
+//! [`SoA`] (single-/multi-blob), [`AoSoA`] (L lanes), [`One`],
+//! [`Split`], [`Trace`], [`Heatmap`] — plus the extensions [`Byteswap`]
+//! and [`Null`] (paper §5 future work).
+
+pub mod advisor;
+pub mod affine;
+pub mod aos;
+pub mod aosoa;
+pub mod byteswap;
+pub mod heatmap;
+pub mod null;
+pub mod one;
+pub mod soa;
+pub mod split;
+pub mod trace;
+
+use std::sync::Arc;
+
+use crate::array::ArrayDims;
+use crate::record::RecordInfo;
+
+pub use advisor::{recommend, AccessPattern, Recommendation};
+pub use affine::AffineLeaf;
+pub use aos::AoS;
+pub use aosoa::AoSoA;
+pub use byteswap::Byteswap;
+pub use heatmap::Heatmap;
+pub use null::Null;
+pub use one::One;
+pub use soa::SoA;
+pub use split::Split;
+pub use trace::Trace;
+
+/// The mapping concept (paper §3.7): `blobNrAndOffset<RecordCoord>(
+/// ArrayDims) -> [blob, offset]`, plus blob count/size queries.
+///
+/// Terminology:
+/// * **leaf** — flat index of a terminal field (see
+///   [`RecordInfo::fields`]).
+/// * **lin** — *canonical* row-major linear array index in
+///   `0..dims().count()`.
+/// * **slot** — the mapping's internal flat array position. For
+///   row-major-linearized mappings `slot == lin`; space-filling-curve
+///   mappings override [`Mapping::slot_of_lin`].
+pub trait Mapping: Send + Sync {
+    /// Flattened record-dimension info this mapping was built from.
+    fn info(&self) -> &Arc<RecordInfo>;
+
+    /// Array dimensions this mapping was built from.
+    fn dims(&self) -> &ArrayDims;
+
+    /// Number of blobs the view must supply (compile-time constant in
+    /// C++ LLAMA).
+    fn blob_count(&self) -> usize;
+
+    /// Byte size of blob `nr`.
+    fn blob_size(&self, nr: usize) -> usize;
+
+    /// Number of internal array slots (≥ `dims().count()`; larger when
+    /// the linearization pads, e.g. Morton).
+    #[inline]
+    fn slot_count(&self) -> usize {
+        self.dims().count()
+    }
+
+    /// Canonical row-major linear index → internal slot. Identity for
+    /// row-major mappings (the default).
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        lin
+    }
+
+    /// N-dimensional index → internal slot.
+    fn slot_of_nd(&self, idx: &[usize]) -> usize;
+
+    /// The core translation: terminal field `leaf` at array `slot` →
+    /// (blob nr, byte offset). Must be cheap; runs on every terminal
+    /// access.
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize);
+
+    /// Human-readable layout name for dumps and reports.
+    fn mapping_name(&self) -> String;
+
+    /// If this layout stores each record's fields in repeating groups of
+    /// `L` contiguous scalars per field (AoSoA family), return `L`.
+    /// Used by the layout-aware copy (paper §3.9/§4.2): AoS-packed is
+    /// `Some(1)`, AoSoA-L is `Some(L)`, SoA is `Some(slot_count())`.
+    /// `None` disables the chunked fast path.
+    fn aosoa_lanes(&self) -> Option<usize> {
+        None
+    }
+
+    /// True if field values are stored as plain native-endian bytes
+    /// (false for e.g. [`Byteswap`]); chunked copies require both sides
+    /// to agree.
+    fn is_native_representation(&self) -> bool {
+        true
+    }
+
+    /// If every leaf's byte address is affine in the canonical linear
+    /// index — `blob[nr][base + lin * stride]` — return the per-leaf
+    /// rules. Enables the zero-overhead kernel fast path (see
+    /// `mapping::affine`). Default: not affine.
+    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+        None
+    }
+}
+
+/// Blanket impl so `&M`, `Box<M>`, `Arc<M>` are mappings too.
+macro_rules! forward_mapping {
+    ($ptr:ty) => {
+        impl<M: Mapping + ?Sized> Mapping for $ptr {
+            fn info(&self) -> &Arc<RecordInfo> {
+                (**self).info()
+            }
+            fn dims(&self) -> &ArrayDims {
+                (**self).dims()
+            }
+            fn blob_count(&self) -> usize {
+                (**self).blob_count()
+            }
+            fn blob_size(&self, nr: usize) -> usize {
+                (**self).blob_size(nr)
+            }
+            fn slot_count(&self) -> usize {
+                (**self).slot_count()
+            }
+            #[inline]
+            fn slot_of_lin(&self, lin: usize) -> usize {
+                (**self).slot_of_lin(lin)
+            }
+            #[inline]
+            fn slot_of_nd(&self, idx: &[usize]) -> usize {
+                (**self).slot_of_nd(idx)
+            }
+            #[inline]
+            fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+                (**self).blob_nr_and_offset(leaf, slot)
+            }
+            fn mapping_name(&self) -> String {
+                (**self).mapping_name()
+            }
+            fn aosoa_lanes(&self) -> Option<usize> {
+                (**self).aosoa_lanes()
+            }
+            fn is_native_representation(&self) -> bool {
+                (**self).is_native_representation()
+            }
+            fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+                (**self).affine_leaves()
+            }
+        }
+    };
+}
+
+forward_mapping!(&M);
+forward_mapping!(Box<M>);
+forward_mapping!(std::sync::Arc<M>);
+
+/// Type-erased mapping for CLI/dump paths (not used on hot paths).
+pub type DynMapping = Box<dyn Mapping>;
+
+/// Total bytes across all blobs of a mapping.
+pub fn total_blob_bytes<M: Mapping + ?Sized>(m: &M) -> usize {
+    (0..m.blob_count()).map(|b| m.blob_size(b)).sum()
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::record::{RecordDim, Scalar, Type};
+
+    /// The paper's listing-1 Particle: id u16, pos{x,y,z} f32, mass f64,
+    /// flags bool[3] — 8 leaves, 27 packed bytes.
+    pub fn particle_dim() -> RecordDim {
+        let vec3 = RecordDim::new()
+            .scalar("x", Scalar::F32)
+            .scalar("y", Scalar::F32)
+            .scalar("z", Scalar::F32);
+        RecordDim::new()
+            .scalar("id", Scalar::U16)
+            .record("pos", vec3)
+            .scalar("mass", Scalar::F64)
+            .array("flags", Type::Scalar(Scalar::Bool), 3)
+    }
+
+    /// Exhaustively check that all (leaf, slot) byte ranges of a mapping
+    /// are pairwise disjoint and inside their blobs — the fundamental
+    /// mapping invariant.
+    pub fn check_mapping_invariants<M: super::Mapping>(m: &M) {
+        use std::collections::HashMap;
+        let info = m.info().clone();
+        let mut used: HashMap<usize, Vec<(usize, usize)>> = HashMap::new();
+        for slot in 0..m.dims().count() {
+            let slot = m.slot_of_lin(slot);
+            for leaf in 0..info.leaf_count() {
+                let size = info.fields[leaf].size();
+                let (nr, off) = m.blob_nr_and_offset(leaf, slot);
+                assert!(nr < m.blob_count(), "blob nr out of range");
+                assert!(
+                    off + size <= m.blob_size(nr),
+                    "range [{off}, {}) exceeds blob {nr} size {} in {}",
+                    off + size,
+                    m.blob_size(nr),
+                    m.mapping_name()
+                );
+                used.entry(nr).or_default().push((off, off + size));
+            }
+        }
+        for (nr, mut ranges) in used {
+            ranges.sort();
+            for w in ranges.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0,
+                    "overlap in blob {nr} of {}: {:?} vs {:?}",
+                    m.mapping_name(),
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}

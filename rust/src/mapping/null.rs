@@ -1,0 +1,93 @@
+//! Null mapping (extension, paper §5 future work; upstream LLAMA later
+//! grew `mapping::Null`): maps every field of every record to the same
+//! scratch bytes, so writes are discarded and reads return whatever was
+//! last written anywhere. Useful to "delete" cold fields from a layout
+//! (as the B side of a [`super::Split`]) when benchmarking what a field
+//! costs.
+
+use std::sync::Arc;
+
+use super::Mapping;
+use crate::array::ArrayDims;
+use crate::record::{RecordDim, RecordInfo};
+
+#[derive(Debug, Clone)]
+pub struct Null {
+    info: Arc<RecordInfo>,
+    dims: ArrayDims,
+    /// One record's worth of scratch bytes, shared by all slots/fields.
+    scratch: usize,
+}
+
+impl Null {
+    pub fn new(dim: &RecordDim, dims: ArrayDims) -> Self {
+        let info = Arc::new(RecordInfo::new(dim));
+        let scratch = info.fields.iter().map(|f| f.size()).max().unwrap_or(1);
+        Null { info, dims, scratch }
+    }
+}
+
+impl Mapping for Null {
+    fn info(&self) -> &Arc<RecordInfo> {
+        &self.info
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        &self.dims
+    }
+
+    fn blob_count(&self) -> usize {
+        1
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        debug_assert_eq!(nr, 0);
+        self.scratch
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, _idx: &[usize]) -> usize {
+        0
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, _lin: usize) -> usize {
+        0
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, _leaf: usize, _slot: usize) -> (usize, usize) {
+        (0, 0)
+    }
+
+    fn mapping_name(&self) -> String {
+        "Null".to_string()
+    }
+
+    /// Null aliases all fields — reads are garbage by design, so it must
+    /// never take part in chunked copies.
+    fn aosoa_lanes(&self) -> Option<usize> {
+        None
+    }
+
+    fn is_native_representation(&self) -> bool {
+        // Not a faithful store: exclude from byte-exact copy paths.
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::test_support::particle_dim;
+    use crate::array::ArrayDims;
+
+    #[test]
+    fn single_scratch_slot() {
+        let m = Null::new(&particle_dim(), ArrayDims::linear(1000));
+        assert_eq!(m.blob_count(), 1);
+        assert_eq!(m.blob_size(0), 8); // largest leaf: f64 mass
+        assert_eq!(m.blob_nr_and_offset(0, 0), (0, 0));
+        assert_eq!(m.blob_nr_and_offset(7, 999), (0, 0));
+    }
+}

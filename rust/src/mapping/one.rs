@@ -1,0 +1,108 @@
+//! The One mapping (paper §3.7, 34 LOCs in C++): collapses the entire
+//! array dimensions into a single stored record instance — every array
+//! index aliases the same storage. Useful for broadcast-style fields
+//! (and as the second child of a Split, as in the paper's fig 4c).
+
+use std::sync::Arc;
+
+use super::{AffineLeaf, Mapping};
+use crate::array::ArrayDims;
+use crate::record::{RecordDim, RecordInfo};
+
+#[derive(Debug, Clone)]
+pub struct One {
+    info: Arc<RecordInfo>,
+    dims: ArrayDims,
+    aligned: bool,
+    offsets: Vec<usize>,
+    record_size: usize,
+}
+
+impl One {
+    pub fn new(dim: &RecordDim, dims: ArrayDims) -> Self {
+        Self::with_alignment(dim, dims, true)
+    }
+
+    pub fn packed(dim: &RecordDim, dims: ArrayDims) -> Self {
+        Self::with_alignment(dim, dims, false)
+    }
+
+    pub fn with_alignment(dim: &RecordDim, dims: ArrayDims, aligned: bool) -> Self {
+        let info = Arc::new(RecordInfo::new(dim));
+        let record_size = if aligned { info.aligned_size } else { info.packed_size };
+        let offsets = info
+            .fields
+            .iter()
+            .map(|f| if aligned { f.offset_aligned } else { f.offset_packed })
+            .collect();
+        One { info, dims, aligned, offsets, record_size }
+    }
+}
+
+impl Mapping for One {
+    fn info(&self) -> &Arc<RecordInfo> {
+        &self.info
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        &self.dims
+    }
+
+    fn blob_count(&self) -> usize {
+        1
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        debug_assert_eq!(nr, 0);
+        self.record_size
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, _idx: &[usize]) -> usize {
+        0
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, _lin: usize) -> usize {
+        0
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, _slot: usize) -> (usize, usize) {
+        (0, self.offsets[leaf])
+    }
+
+    fn mapping_name(&self) -> String {
+        format!("One({})", if self.aligned { "aligned" } else { "packed" })
+    }
+
+    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+        // Every index aliases one record: affine with stride 0.
+        Some(
+            self.offsets
+                .iter()
+                .map(|&off| AffineLeaf { blob: 0, base: off, stride: 0 })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::test_support::particle_dim;
+
+    #[test]
+    fn all_indices_alias_one_record() {
+        let m = One::new(&particle_dim(), ArrayDims::from([128, 64]));
+        assert_eq!(m.blob_size(0), m.info().aligned_size);
+        assert_eq!(m.blob_nr_and_offset(4, 0), m.blob_nr_and_offset(4, 999));
+        assert_eq!(m.slot_of_nd(&[100, 3]), 0);
+    }
+
+    #[test]
+    fn packed_one_is_packed_size() {
+        let m = One::packed(&particle_dim(), ArrayDims::linear(1000));
+        assert_eq!(m.blob_size(0), 25);
+    }
+}

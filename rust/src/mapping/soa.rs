@@ -1,0 +1,213 @@
+//! Struct-of-arrays mapping (paper §3.7, 77 LOCs in C++).
+//!
+//! For each leaf field, stores all array slots of that field
+//! contiguously. Either one blob per field (**multi-blob**, `SoA MB` in
+//! the paper's figures) or one blob for the whole layout (single-blob).
+
+use std::sync::Arc;
+
+use super::{AffineLeaf, Mapping};
+use crate::array::{ArrayDims, Linearizer, RowMajor};
+use crate::record::{RecordDim, RecordInfo};
+
+/// SoA mapping, generic over the array-index linearization.
+#[derive(Debug, Clone)]
+pub struct SoA<L: Linearizer = RowMajor> {
+    info: Arc<RecordInfo>,
+    dims: ArrayDims,
+    lin: L,
+    lin_state: L::State,
+    slots: usize,
+    multiblob: bool,
+    /// Per-leaf scalar size (cached off `info` for locality).
+    sizes: Vec<usize>,
+    /// Single-blob: byte offset where each field's subarray starts.
+    bases: Vec<usize>,
+}
+
+impl SoA<RowMajor> {
+    /// Multi-blob SoA: one blob per field (the paper's `SoA MB`).
+    pub fn multi_blob(dim: &RecordDim, dims: ArrayDims) -> Self {
+        Self::with_linearizer(dim, dims, RowMajor, true)
+    }
+
+    /// Single-blob SoA: all subarrays in one blob, back to back.
+    pub fn single_blob(dim: &RecordDim, dims: ArrayDims) -> Self {
+        Self::with_linearizer(dim, dims, RowMajor, false)
+    }
+}
+
+impl<L: Linearizer> SoA<L> {
+    pub fn with_linearizer(dim: &RecordDim, dims: ArrayDims, lin: L, multiblob: bool) -> Self {
+        let info = Arc::new(RecordInfo::new(dim));
+        let lin_state = lin.prepare(&dims);
+        let slots = lin.slot_count(&dims);
+        let sizes: Vec<usize> = info.fields.iter().map(|f| f.size()).collect();
+        let mut bases = Vec::with_capacity(sizes.len());
+        let mut acc = 0usize;
+        for s in &sizes {
+            bases.push(acc);
+            acc += s * slots;
+        }
+        SoA { info, dims, lin, lin_state, slots, multiblob, sizes, bases }
+    }
+
+    pub fn is_multiblob(&self) -> bool {
+        self.multiblob
+    }
+
+    /// Byte offset of field `leaf`'s subarray within the single blob
+    /// (single-blob mode), or 0 (multi-blob mode).
+    pub fn field_base(&self, leaf: usize) -> usize {
+        if self.multiblob {
+            0
+        } else {
+            self.bases[leaf]
+        }
+    }
+}
+
+impl<L: Linearizer> Mapping for SoA<L> {
+    fn info(&self) -> &Arc<RecordInfo> {
+        &self.info
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        &self.dims
+    }
+
+    fn blob_count(&self) -> usize {
+        if self.multiblob {
+            self.sizes.len()
+        } else {
+            1
+        }
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        if self.multiblob {
+            self.sizes[nr] * self.slots
+        } else {
+            debug_assert_eq!(nr, 0);
+            self.info.packed_size * self.slots
+        }
+    }
+
+    #[inline]
+    fn slot_count(&self) -> usize {
+        self.slots
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        if std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>() {
+            lin
+        } else {
+            let idx = self.dims.delinearize_row_major(lin);
+            L::linearize(&self.lin_state, &idx)
+        }
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        L::linearize(&self.lin_state, idx)
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        if self.multiblob {
+            (leaf, slot * self.sizes[leaf])
+        } else {
+            (0, self.bases[leaf] + slot * self.sizes[leaf])
+        }
+    }
+
+    fn mapping_name(&self) -> String {
+        format!(
+            "SoA({}, {})",
+            if self.multiblob { "multi-blob" } else { "single-blob" },
+            self.lin.name()
+        )
+    }
+
+    fn aosoa_lanes(&self) -> Option<usize> {
+        // SoA is AoSoA with L = slot count (paper §4.2) — but chunked
+        // copies walk *canonical* index runs, so only the row-major
+        // linearization (slot == lin) is chunk-compatible.
+        if std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>() {
+            Some(self.slots)
+        } else {
+            None
+        }
+    }
+
+    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+        if std::any::TypeId::of::<L>() != std::any::TypeId::of::<RowMajor>() {
+            return None;
+        }
+        Some(
+            self.sizes
+                .iter()
+                .enumerate()
+                .map(|(leaf, &size)| {
+                    if self.multiblob {
+                        AffineLeaf { blob: leaf, base: 0, stride: size }
+                    } else {
+                        AffineLeaf { blob: 0, base: self.bases[leaf], stride: size }
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::MortonCurve;
+    use crate::mapping::test_support::{check_mapping_invariants, particle_dim};
+
+    #[test]
+    fn multiblob_one_blob_per_leaf() {
+        let m = SoA::multi_blob(&particle_dim(), ArrayDims::linear(10));
+        assert_eq!(m.blob_count(), 8);
+        assert_eq!(m.blob_size(0), 2 * 10); // id: u16
+        assert_eq!(m.blob_size(4), 8 * 10); // mass: f64
+        assert_eq!(m.blob_nr_and_offset(4, 3), (4, 24));
+    }
+
+    #[test]
+    fn singleblob_subarray_bases() {
+        let m = SoA::single_blob(&particle_dim(), ArrayDims::linear(10));
+        assert_eq!(m.blob_count(), 1);
+        assert_eq!(m.blob_size(0), 25 * 10);
+        // id base 0, pos.x base 20, pos.y base 60, pos.z base 100,
+        // mass base 140, flags bases 220/230/240.
+        assert_eq!(m.blob_nr_and_offset(0, 0), (0, 0));
+        assert_eq!(m.blob_nr_and_offset(1, 0), (0, 20));
+        assert_eq!(m.blob_nr_and_offset(4, 2), (0, 140 + 16));
+        assert_eq!(m.blob_nr_and_offset(7, 9), (0, 240 + 9));
+    }
+
+    #[test]
+    fn invariants_both_modes() {
+        for mb in [true, false] {
+            let m = SoA::with_linearizer(&particle_dim(), ArrayDims::from([4, 3]), RowMajor, mb);
+            check_mapping_invariants(&m);
+        }
+    }
+
+    #[test]
+    fn invariants_morton() {
+        let m =
+            SoA::with_linearizer(&particle_dim(), ArrayDims::from([3, 3]), MortonCurve, true);
+        check_mapping_invariants(&m);
+        assert_eq!(m.slot_count(), 16);
+    }
+
+    #[test]
+    fn soa_lanes_equal_slots() {
+        let m = SoA::multi_blob(&particle_dim(), ArrayDims::linear(10));
+        assert_eq!(m.aosoa_lanes(), Some(10));
+    }
+}

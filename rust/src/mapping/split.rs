@@ -1,0 +1,267 @@
+//! The Split mapping (paper §3.7, 139 LOCs in C++): selects part of the
+//! record dimension by record coordinate(s) and maps the selected part
+//! with one mapping and the rest with another. Nesting Splits composes
+//! arbitrary per-field layouts (paper fig 4c); the paper's §4.3 uses a
+//! Trace-derived Split to separate hot from cold lbm fields.
+
+use std::sync::Arc;
+
+use super::{AffineLeaf, Mapping};
+use crate::array::ArrayDims;
+use crate::record::{RecordCoord, RecordDim, RecordInfo, Type};
+
+/// Split mapping over two sub-mappings.
+///
+/// The child record dimensions are the *flattened* selected/remaining
+/// leaves (layout semantics only depend on leaf order and types, which
+/// flattening preserves).
+#[derive(Debug, Clone)]
+pub struct Split<MA: Mapping, MB: Mapping> {
+    info: Arc<RecordInfo>,
+    dims: ArrayDims,
+    selectors: Vec<RecordCoord>,
+    a: MA,
+    b: MB,
+    /// Full-record leaf index -> (in_a, child leaf index).
+    route: Vec<(bool, usize)>,
+    a_blobs: usize,
+    /// Canonical row-major strides for slot_of_nd.
+    strides: Vec<usize>,
+}
+
+/// Build a flat record dim from a subset of leaves of `info`.
+fn sub_record(info: &RecordInfo, leaves: &[usize]) -> RecordDim {
+    let mut dim = RecordDim::new();
+    for &l in leaves {
+        let f = &info.fields[l];
+        dim = dim.field(f.path.clone(), Type::Scalar(f.scalar));
+    }
+    dim
+}
+
+impl<MA: Mapping, MB: Mapping> Split<MA, MB> {
+    /// Split `dim` at `selector`: leaves under `selector` go to the
+    /// mapping built by `make_a`, the rest to `make_b`.
+    pub fn new(
+        dim: &RecordDim,
+        dims: ArrayDims,
+        selector: RecordCoord,
+        make_a: impl FnOnce(&RecordDim, ArrayDims) -> MA,
+        make_b: impl FnOnce(&RecordDim, ArrayDims) -> MB,
+    ) -> Self {
+        Self::by_selectors(dim, dims, vec![selector], make_a, make_b)
+    }
+
+    /// Split with multiple selector coordinates (a leaf is selected if
+    /// any selector is a prefix of its coordinate).
+    pub fn by_selectors(
+        dim: &RecordDim,
+        dims: ArrayDims,
+        selectors: Vec<RecordCoord>,
+        make_a: impl FnOnce(&RecordDim, ArrayDims) -> MA,
+        make_b: impl FnOnce(&RecordDim, ArrayDims) -> MB,
+    ) -> Self {
+        let info = Arc::new(RecordInfo::new(dim));
+        let selected: Vec<usize> = (0..info.leaf_count())
+            .filter(|&l| selectors.iter().any(|s| s.is_prefix_of(&info.fields[l].coord)))
+            .collect();
+        let rest: Vec<usize> =
+            (0..info.leaf_count()).filter(|l| !selected.contains(l)).collect();
+        assert!(
+            !selected.is_empty(),
+            "Split selector selects no leaves: {selectors:?}"
+        );
+        assert!(!rest.is_empty(), "Split selector selects every leaf");
+
+        let dim_a = sub_record(&info, &selected);
+        let dim_b = sub_record(&info, &rest);
+        let a = make_a(&dim_a, dims.clone());
+        let b = make_b(&dim_b, dims.clone());
+        assert_eq!(a.info().leaf_count(), selected.len());
+        assert_eq!(b.info().leaf_count(), rest.len());
+
+        let mut route = vec![(false, 0usize); info.leaf_count()];
+        for (child_idx, &l) in selected.iter().enumerate() {
+            route[l] = (true, child_idx);
+        }
+        for (child_idx, &l) in rest.iter().enumerate() {
+            route[l] = (false, child_idx);
+        }
+        let a_blobs = a.blob_count();
+        let strides = dims.row_major_strides();
+        Split { info, dims, selectors, a, b, route, a_blobs, strides }
+    }
+
+    pub fn part_a(&self) -> &MA {
+        &self.a
+    }
+
+    pub fn part_b(&self) -> &MB {
+        &self.b
+    }
+
+    /// Whether full-record leaf `leaf` is routed to part A.
+    pub fn routes_to_a(&self, leaf: usize) -> bool {
+        self.route[leaf].0
+    }
+}
+
+impl<MA: Mapping, MB: Mapping> Mapping for Split<MA, MB> {
+    fn info(&self) -> &Arc<RecordInfo> {
+        &self.info
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        &self.dims
+    }
+
+    fn blob_count(&self) -> usize {
+        self.a_blobs + self.b.blob_count()
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        if nr < self.a_blobs {
+            self.a.blob_size(nr)
+        } else {
+            self.b.blob_size(nr - self.a_blobs)
+        }
+    }
+
+    // Split's slot is the canonical row-major lin; each child converts
+    // with its own linearizer inside blob_nr_and_offset.
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        lin
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        idx.iter().zip(&self.strides).map(|(i, s)| i * s).sum()
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        let (in_a, child_leaf) = self.route[leaf];
+        if in_a {
+            self.a.blob_nr_and_offset(child_leaf, self.a.slot_of_lin(slot))
+        } else {
+            let (nr, off) = self.b.blob_nr_and_offset(child_leaf, self.b.slot_of_lin(slot));
+            (nr + self.a_blobs, off)
+        }
+    }
+
+    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+        let a = self.a.affine_leaves()?;
+        let b = self.b.affine_leaves()?;
+        Some(
+            self.route
+                .iter()
+                .map(|&(in_a, child)| {
+                    if in_a {
+                        a[child]
+                    } else {
+                        let mut l = b[child];
+                        l.blob += self.a_blobs;
+                        l
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    fn mapping_name(&self) -> String {
+        format!(
+            "Split({:?} -> {}, rest -> {})",
+            self.selectors.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+            self.a.mapping_name(),
+            self.b.mapping_name()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::test_support::{check_mapping_invariants, particle_dim};
+    use crate::mapping::{AoS, One, SoA};
+
+    #[test]
+    fn split_pos_to_soa_rest_aos() {
+        // Paper fig 4c without the inner second split: pos -> SoA MB,
+        // rest -> aligned AoS.
+        let m = Split::new(
+            &particle_dim(),
+            ArrayDims::linear(8),
+            RecordCoord::new(vec![1]),
+            |d, ad| SoA::multi_blob(d, ad),
+            |d, ad| AoS::aligned(d, ad),
+        );
+        // pos has 3 leaves -> 3 SoA blobs + 1 AoS blob.
+        assert_eq!(m.blob_count(), 4);
+        check_mapping_invariants(&m);
+        // pos.x routes to blob 0.
+        assert_eq!(m.blob_nr_and_offset(1, 0).0, 0);
+        assert_eq!(m.blob_nr_and_offset(1, 2), (0, 8));
+        // id routes to the AoS blob (index 3).
+        assert_eq!(m.blob_nr_and_offset(0, 0).0, 3);
+    }
+
+    #[test]
+    fn nested_split_like_fig4c() {
+        // pos -> SoA MB; then of the remainder, mass -> One, rest -> AoS.
+        let m = Split::new(
+            &particle_dim(),
+            ArrayDims::linear(8),
+            RecordCoord::new(vec![1]),
+            |d, ad| SoA::multi_blob(d, ad),
+            |d, ad| {
+                // In the remainder (id, mass, flags.*), mass is field 1.
+                Split::new(
+                    d,
+                    ad,
+                    RecordCoord::new(vec![1]),
+                    |d2, ad2| One::new(d2, ad2),
+                    |d2, ad2| AoS::aligned(d2, ad2),
+                )
+            },
+        );
+        assert_eq!(m.blob_count(), 3 + 1 + 1);
+        // Every index's mass aliases the same One storage: offsets equal.
+        assert_eq!(m.blob_nr_and_offset(4, 0), m.blob_nr_and_offset(4, 7));
+        let name = m.mapping_name();
+        assert!(name.contains("One"), "{name}");
+        assert!(name.contains("SoA"), "{name}");
+    }
+
+    #[test]
+    fn multi_selector_split() {
+        // Select id and mass together (hot/cold style, paper §4.3).
+        let m = Split::by_selectors(
+            &particle_dim(),
+            ArrayDims::linear(4),
+            vec![RecordCoord::new(vec![0]), RecordCoord::new(vec![2])],
+            |d, ad| SoA::single_blob(d, ad),
+            |d, ad| AoS::packed(d, ad),
+        );
+        check_mapping_invariants(&m);
+        assert!(m.routes_to_a(0)); // id
+        assert!(!m.routes_to_a(1)); // pos.x
+        assert!(!m.routes_to_a(3)); // pos.z
+        assert!(m.routes_to_a(4)); // mass
+        // Total bytes conserved: (2+8)*4 + (4*3+3)*4.
+        let total: usize = (0..m.blob_count()).map(|b| m.blob_size(b)).sum();
+        assert_eq!(total, 10 * 4 + 15 * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "selects no leaves")]
+    fn empty_selection_panics() {
+        let _ = Split::new(
+            &particle_dim(),
+            ArrayDims::linear(4),
+            RecordCoord::new(vec![9]),
+            |d, ad| SoA::multi_blob(d, ad),
+            |d, ad| AoS::aligned(d, ad),
+        );
+    }
+}

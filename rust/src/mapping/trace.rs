@@ -1,0 +1,198 @@
+//! The Trace mapping (paper §3.7, 72 LOCs in C++): counts accesses to
+//! each record field at runtime, then forwards to an inner mapping. The
+//! paper's §4.3 uses Trace counts to derive a hot/cold Split for the lbm
+//! benchmark; we reproduce that workflow in `workloads::lbm`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::Mapping;
+use crate::array::ArrayDims;
+use crate::record::RecordInfo;
+
+/// Per-field access counting wrapper. Counting uses relaxed atomics so
+/// the wrapper stays `Sync` and usable from parallel loops; the overhead
+/// is intentional (instrumentation), as in the paper.
+#[derive(Debug)]
+pub struct Trace<M: Mapping> {
+    inner: M,
+    counts: Vec<AtomicU64>,
+}
+
+impl<M: Mapping> Trace<M> {
+    pub fn new(inner: M) -> Self {
+        let n = inner.info().leaf_count();
+        Trace { inner, counts: (0..n).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    pub fn inner(&self) -> &M {
+        &self.inner
+    }
+
+    /// Access count of leaf `leaf` so far.
+    pub fn count(&self, leaf: usize) -> u64 {
+        self.counts[leaf].load(Ordering::Relaxed)
+    }
+
+    /// All (field path, count) pairs, declaration order.
+    pub fn report(&self) -> Vec<(String, u64)> {
+        self.inner
+            .info()
+            .fields
+            .iter()
+            .zip(&self.counts)
+            .map(|(f, c)| (f.path.clone(), c.load(Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Render the report as an aligned text table (the paper prints this
+    /// "to help a user understand the access behavior of their program").
+    pub fn to_table(&self) -> String {
+        let rep = self.report();
+        let w = rep.iter().map(|(p, _)| p.len()).max().unwrap_or(5).max(5);
+        let mut out = format!("{:w$}  {:>12}\n", "field", "count");
+        for (p, c) in rep {
+            out.push_str(&format!("{p:w$}  {c:>12}\n"));
+        }
+        out
+    }
+
+    /// Group the leaves into `groups` buckets of roughly equal total
+    /// access count (greedy, preserving declaration order) — the paper's
+    /// §4.3 "split the record dimension into 4 groups of AoS layouts
+    /// with equal access count".
+    pub fn equal_count_groups(&self, groups: usize) -> Vec<Vec<usize>> {
+        assert!(groups > 0);
+        let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        let per_group = total / groups as u64;
+        let mut out: Vec<Vec<usize>> = vec![Vec::new()];
+        let mut acc = 0u64;
+        for (leaf, &c) in counts.iter().enumerate() {
+            let ngroups = out.len();
+            let cur = out.last_mut().unwrap();
+            if !cur.is_empty() && acc + c / 2 > per_group && ngroups < groups {
+                out.push(vec![leaf]);
+                acc = c;
+            } else {
+                cur.push(leaf);
+                acc += c;
+            }
+        }
+        out
+    }
+
+    pub fn reset(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+impl<M: Mapping> Mapping for Trace<M> {
+    fn info(&self) -> &Arc<RecordInfo> {
+        self.inner.info()
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        self.inner.dims()
+    }
+
+    fn blob_count(&self) -> usize {
+        self.inner.blob_count()
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        self.inner.blob_size(nr)
+    }
+
+    fn slot_count(&self) -> usize {
+        self.inner.slot_count()
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        self.inner.slot_of_lin(lin)
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        self.inner.slot_of_nd(idx)
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        self.counts[leaf].fetch_add(1, Ordering::Relaxed);
+        self.inner.blob_nr_and_offset(leaf, slot)
+    }
+
+    fn mapping_name(&self) -> String {
+        format!("Trace({})", self.inner.mapping_name())
+    }
+
+    fn aosoa_lanes(&self) -> Option<usize> {
+        self.inner.aosoa_lanes()
+    }
+
+    fn is_native_representation(&self) -> bool {
+        self.inner.is_native_representation()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::test_support::{check_mapping_invariants, particle_dim};
+    use crate::mapping::AoS;
+
+    #[test]
+    fn counts_accesses_per_field() {
+        let t = Trace::new(AoS::aligned(&particle_dim(), ArrayDims::linear(4)));
+        for slot in 0..4 {
+            let _ = t.blob_nr_and_offset(1, slot); // pos.x
+        }
+        let _ = t.blob_nr_and_offset(4, 0); // mass
+        assert_eq!(t.count(1), 4);
+        assert_eq!(t.count(4), 1);
+        assert_eq!(t.count(0), 0);
+        let rep = t.report();
+        assert_eq!(rep[1], ("pos.x".to_string(), 4));
+        let table = t.to_table();
+        assert!(table.contains("pos.x"));
+        t.reset();
+        assert_eq!(t.count(1), 0);
+    }
+
+    #[test]
+    fn forwards_layout_unchanged() {
+        let inner = AoS::aligned(&particle_dim(), ArrayDims::linear(4));
+        let t = Trace::new(AoS::aligned(&particle_dim(), ArrayDims::linear(4)));
+        for slot in 0..4 {
+            for leaf in 0..8 {
+                assert_eq!(
+                    t.blob_nr_and_offset(leaf, slot),
+                    inner.blob_nr_and_offset(leaf, slot)
+                );
+            }
+        }
+        check_mapping_invariants(&t);
+    }
+
+    #[test]
+    fn equal_count_grouping() {
+        let t = Trace::new(AoS::aligned(&particle_dim(), ArrayDims::linear(4)));
+        // Simulate: leaf 0 hot (100), others cool (10 each).
+        for _ in 0..100 {
+            let _ = t.blob_nr_and_offset(0, 0);
+        }
+        for leaf in 1..8 {
+            for _ in 0..10 {
+                let _ = t.blob_nr_and_offset(leaf, 0);
+            }
+        }
+        let groups = t.equal_count_groups(2);
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[0], vec![0]); // the hot field alone
+        assert_eq!(groups.concat(), (0..8).collect::<Vec<_>>());
+    }
+}

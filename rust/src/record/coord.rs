@@ -1,0 +1,92 @@
+//! [`RecordCoord`]: a path of child indices into the record-dimension
+//! tree — the paper's `llama::RecordCoord<Is...>` (§3.6, `forEachLeaf`).
+
+use std::fmt;
+
+/// A coordinate into the record tree: a sequence of child indices from
+/// the root to some node (usually a leaf).
+#[derive(Debug, Clone, PartialEq, Eq, Hash, Default, PartialOrd, Ord)]
+pub struct RecordCoord(pub Vec<usize>);
+
+impl RecordCoord {
+    pub fn root() -> Self {
+        RecordCoord(Vec::new())
+    }
+
+    pub fn new(path: impl Into<Vec<usize>>) -> Self {
+        RecordCoord(path.into())
+    }
+
+    /// Append one more child index (descend a level).
+    pub fn child(&self, i: usize) -> Self {
+        let mut p = self.0.clone();
+        p.push(i);
+        RecordCoord(p)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_root(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// True if `self` is a (non-strict) prefix of `other`: the node at
+    /// `self` contains the node at `other`.
+    pub fn is_prefix_of(&self, other: &RecordCoord) -> bool {
+        other.0.len() >= self.0.len() && other.0[..self.0.len()] == self.0[..]
+    }
+}
+
+impl fmt::Display for RecordCoord {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "RecordCoord<")?;
+        for (i, c) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{c}")?;
+        }
+        write!(f, ">")
+    }
+}
+
+impl From<Vec<usize>> for RecordCoord {
+    fn from(v: Vec<usize>) -> Self {
+        RecordCoord(v)
+    }
+}
+
+impl<const N: usize> From<[usize; N]> for RecordCoord {
+    fn from(v: [usize; N]) -> Self {
+        RecordCoord(v.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_relation() {
+        let pos: RecordCoord = [1].into();
+        let pos_x: RecordCoord = [1, 0].into();
+        let mass: RecordCoord = [2].into();
+        assert!(pos.is_prefix_of(&pos_x));
+        assert!(pos.is_prefix_of(&pos));
+        assert!(!pos.is_prefix_of(&mass));
+        assert!(!pos_x.is_prefix_of(&pos));
+        assert!(RecordCoord::root().is_prefix_of(&mass));
+    }
+
+    #[test]
+    fn child_and_display() {
+        let c = RecordCoord::root().child(3).child(1);
+        assert_eq!(c, RecordCoord::new(vec![3, 1]));
+        assert_eq!(c.to_string(), "RecordCoord<3,1>");
+        assert_eq!(c.depth(), 2);
+        assert!(!c.is_root());
+        assert!(RecordCoord::root().is_root());
+    }
+}

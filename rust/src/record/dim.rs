@@ -1,0 +1,248 @@
+//! Record-dimension type tree: [`Scalar`], [`Type`], [`Field`], [`RecordDim`].
+
+use std::fmt;
+
+/// Elemental types LLAMA does not decompose further (paper §3.3: "The
+/// `Type` type is either an elemental type not further decomposed by
+/// LLAMA or another `Record`").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scalar {
+    F32,
+    F64,
+    I8,
+    I16,
+    I32,
+    I64,
+    U8,
+    U16,
+    U32,
+    U64,
+    Bool,
+}
+
+impl Scalar {
+    /// Size of the scalar in bytes.
+    #[inline]
+    pub const fn size(self) -> usize {
+        match self {
+            Scalar::I8 | Scalar::U8 | Scalar::Bool => 1,
+            Scalar::I16 | Scalar::U16 => 2,
+            Scalar::F32 | Scalar::I32 | Scalar::U32 => 4,
+            Scalar::F64 | Scalar::I64 | Scalar::U64 => 8,
+        }
+    }
+
+    /// Natural alignment of the scalar in bytes (== size for all
+    /// supported elemental types, like on x86-64/SysV).
+    #[inline]
+    pub const fn align(self) -> usize {
+        self.size()
+    }
+
+    /// Short lowercase name, matching Rust spelling (`f32`, `u8`, ...).
+    pub const fn name(self) -> &'static str {
+        match self {
+            Scalar::F32 => "f32",
+            Scalar::F64 => "f64",
+            Scalar::I8 => "i8",
+            Scalar::I16 => "i16",
+            Scalar::I32 => "i32",
+            Scalar::I64 => "i64",
+            Scalar::U8 => "u8",
+            Scalar::U16 => "u16",
+            Scalar::U32 => "u32",
+            Scalar::U64 => "u64",
+            Scalar::Bool => "bool",
+        }
+    }
+}
+
+impl fmt::Display for Scalar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A node in the record-dimension tree.
+///
+/// Mirrors the paper's `Field<Name, Type>` where `Type` is an elemental
+/// type, a nested `Record`, or a static array (which LLAMA §3.3 replaces
+/// by a record with as many fields as the array's extent — we keep the
+/// array node explicit and expand it during flattening).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Type {
+    /// Elemental leaf type.
+    Scalar(Scalar),
+    /// Nested record with named fields.
+    Record(Vec<Field>),
+    /// Static array `[T; n]`; flattened as fields named `0..n`.
+    Array(Box<Type>, usize),
+}
+
+impl Type {
+    /// Number of leaf (terminal) fields in this subtree.
+    pub fn leaf_count(&self) -> usize {
+        match self {
+            Type::Scalar(_) => 1,
+            Type::Record(fields) => fields.iter().map(|f| f.ty.leaf_count()).sum(),
+            Type::Array(inner, n) => inner.leaf_count() * n,
+        }
+    }
+
+    /// Sum of leaf sizes: the packed (padding-free) byte size.
+    pub fn packed_size(&self) -> usize {
+        match self {
+            Type::Scalar(s) => s.size(),
+            Type::Record(fields) => fields.iter().map(|f| f.ty.packed_size()).sum(),
+            Type::Array(inner, n) => inner.packed_size() * n,
+        }
+    }
+
+    /// Largest leaf alignment in this subtree.
+    pub fn max_align(&self) -> usize {
+        match self {
+            Type::Scalar(s) => s.align(),
+            Type::Record(fields) => fields.iter().map(|f| f.ty.max_align()).max().unwrap_or(1),
+            Type::Array(inner, _) => inner.max_align(),
+        }
+    }
+}
+
+/// A named field of a record: the paper's `llama::Field<Name, Type>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Field {
+    /// Compile-time tag in C++ LLAMA; here a string name.
+    pub name: String,
+    pub ty: Type,
+}
+
+impl Field {
+    pub fn new(name: impl Into<String>, ty: Type) -> Self {
+        Field { name: name.into(), ty }
+    }
+}
+
+/// A complete record dimension: the root of the type tree.
+///
+/// Build either with the fluent helpers here or the [`record_dim!`]
+/// macro (see `record::macros`).
+///
+/// ```
+/// use llama::record::{RecordDim, Scalar, Type};
+/// let vec3 = Type::Record(vec![
+///     llama::record::Field::new("x", Type::Scalar(Scalar::F32)),
+///     llama::record::Field::new("y", Type::Scalar(Scalar::F32)),
+/// ]);
+/// let particle = RecordDim::new()
+///     .field("pos", vec3.clone())
+///     .scalar("mass", Scalar::F64)
+///     .array("flags", Type::Scalar(Scalar::Bool), 3);
+/// assert_eq!(particle.leaf_count(), 6);
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct RecordDim {
+    pub fields: Vec<Field>,
+}
+
+impl RecordDim {
+    pub fn new() -> Self {
+        RecordDim { fields: Vec::new() }
+    }
+
+    /// Append a field of arbitrary type.
+    pub fn field(mut self, name: impl Into<String>, ty: Type) -> Self {
+        self.fields.push(Field::new(name, ty));
+        self
+    }
+
+    /// Append an elemental field.
+    pub fn scalar(self, name: impl Into<String>, s: Scalar) -> Self {
+        self.field(name, Type::Scalar(s))
+    }
+
+    /// Append a nested record field.
+    pub fn record(self, name: impl Into<String>, inner: RecordDim) -> Self {
+        self.field(name, Type::Record(inner.fields))
+    }
+
+    /// Append a static-array field.
+    pub fn array(self, name: impl Into<String>, elem: Type, n: usize) -> Self {
+        self.field(name, Type::Array(Box::new(elem), n))
+    }
+
+    /// View the record dimension as a [`Type::Record`] node.
+    pub fn as_type(&self) -> Type {
+        Type::Record(self.fields.clone())
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.fields.iter().map(|f| f.ty.leaf_count()).sum()
+    }
+
+    pub fn packed_size(&self) -> usize {
+        self.fields.iter().map(|f| f.ty.packed_size()).sum()
+    }
+
+    pub fn max_align(&self) -> usize {
+        self.fields.iter().map(|f| f.ty.max_align()).max().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn particle() -> RecordDim {
+        let vec3 = RecordDim::new()
+            .scalar("x", Scalar::F32)
+            .scalar("y", Scalar::F32)
+            .scalar("z", Scalar::F32);
+        RecordDim::new()
+            .scalar("id", Scalar::U16)
+            .record("pos", vec3)
+            .scalar("mass", Scalar::F64)
+            .array("flags", Type::Scalar(Scalar::Bool), 3)
+    }
+
+    #[test]
+    fn scalar_sizes() {
+        assert_eq!(Scalar::F32.size(), 4);
+        assert_eq!(Scalar::F64.size(), 8);
+        assert_eq!(Scalar::Bool.size(), 1);
+        assert_eq!(Scalar::U16.align(), 2);
+        assert_eq!(Scalar::I64.name(), "i64");
+    }
+
+    #[test]
+    fn leaf_count_nested() {
+        // id + pos.{x,y,z} + mass + flags[0..3] = 8 leaves — the paper's
+        // listing-1 Particle.
+        assert_eq!(particle().leaf_count(), 8);
+    }
+
+    #[test]
+    fn packed_size_nested() {
+        // 2 + 3*4 + 8 + 3*1 = 25 bytes packed.
+        assert_eq!(particle().packed_size(), 25);
+    }
+
+    #[test]
+    fn max_align_is_largest_leaf() {
+        assert_eq!(particle().max_align(), 8); // mass: f64
+    }
+
+    #[test]
+    fn array_expansion_counts() {
+        let d = RecordDim::new().array("a", Type::Scalar(Scalar::F32), 5);
+        assert_eq!(d.leaf_count(), 5);
+        assert_eq!(d.packed_size(), 20);
+    }
+
+    #[test]
+    fn empty_record() {
+        let d = RecordDim::new();
+        assert_eq!(d.leaf_count(), 0);
+        assert_eq!(d.packed_size(), 0);
+        assert_eq!(d.max_align(), 1);
+    }
+}

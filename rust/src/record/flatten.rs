@@ -1,0 +1,248 @@
+//! Flattening the record tree into a leaf-field table.
+//!
+//! [`RecordInfo`] is the per-record-dimension data every mapping is
+//! constructed from: for each terminal field its scalar type, its byte
+//! offset within a packed record and within an aligned (C++-struct-rule)
+//! record, and its [`RecordCoord`]. This is computed once; hot-path
+//! accesses only index into these precomputed arrays.
+
+use super::coord::RecordCoord;
+use super::dim::{RecordDim, Scalar, Type};
+
+/// One terminal (leaf) field of the flattened record dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlatField {
+    /// Path from the root of the record tree to this leaf.
+    pub coord: RecordCoord,
+    /// Dotted name path, e.g. `"pos.x"` or `"flags.2"`.
+    pub path: String,
+    /// Elemental type of the leaf.
+    pub scalar: Scalar,
+    /// Byte offset inside one *packed* (padding-free) record.
+    pub offset_packed: usize,
+    /// Byte offset inside one *aligned* record (C++ struct layout rules:
+    /// each field aligned to its natural alignment; tail padding pads
+    /// the record to its max alignment).
+    pub offset_aligned: usize,
+}
+
+impl FlatField {
+    #[inline]
+    pub fn size(&self) -> usize {
+        self.scalar.size()
+    }
+}
+
+/// Flattened description of a record dimension. Shared (via `Arc` in
+/// mappings) between all views of the same record dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RecordInfo {
+    /// The original tree (kept for dumps, name lookup, splitting).
+    pub dim: RecordDim,
+    /// Leaf fields in declaration order.
+    pub fields: Vec<FlatField>,
+    /// Byte size of one packed record.
+    pub packed_size: usize,
+    /// Byte size of one aligned record, tail padding included.
+    pub aligned_size: usize,
+    /// Max leaf alignment.
+    pub max_align: usize,
+}
+
+fn align_up(x: usize, a: usize) -> usize {
+    debug_assert!(a.is_power_of_two());
+    (x + a - 1) & !(a - 1)
+}
+
+impl RecordInfo {
+    /// Flatten a record dimension. Cost is proportional to the number of
+    /// leaves; run once at mapping construction.
+    pub fn new(dim: &RecordDim) -> Self {
+        let mut fields = Vec::with_capacity(dim.leaf_count());
+        let mut packed = 0usize;
+        let mut aligned = 0usize;
+        fn walk(
+            ty: &Type,
+            coord: &RecordCoord,
+            path: &str,
+            fields: &mut Vec<FlatField>,
+            packed: &mut usize,
+            aligned: &mut usize,
+        ) {
+            match ty {
+                Type::Scalar(s) => {
+                    *aligned = align_up(*aligned, s.align());
+                    fields.push(FlatField {
+                        coord: coord.clone(),
+                        path: path.to_string(),
+                        scalar: *s,
+                        offset_packed: *packed,
+                        offset_aligned: *aligned,
+                    });
+                    *packed += s.size();
+                    *aligned += s.size();
+                }
+                Type::Record(fs) => {
+                    // C++ rule: a struct is aligned to its max member
+                    // alignment.
+                    *aligned = align_up(*aligned, ty.max_align());
+                    for (i, f) in fs.iter().enumerate() {
+                        let sub = if path.is_empty() {
+                            f.name.clone()
+                        } else {
+                            format!("{path}.{}", f.name)
+                        };
+                        walk(&f.ty, &coord.child(i), &sub, fields, packed, aligned);
+                    }
+                    *aligned = align_up(*aligned, ty.max_align());
+                }
+                Type::Array(inner, n) => {
+                    *aligned = align_up(*aligned, inner.max_align());
+                    for i in 0..*n {
+                        let sub = if path.is_empty() {
+                            format!("{i}")
+                        } else {
+                            format!("{path}.{i}")
+                        };
+                        walk(inner, &coord.child(i), &sub, fields, packed, aligned);
+                    }
+                }
+            }
+        }
+        for (i, f) in dim.fields.iter().enumerate() {
+            walk(
+                &f.ty,
+                &RecordCoord::new(vec![i]),
+                &f.name,
+                &mut fields,
+                &mut packed,
+                &mut aligned,
+            );
+        }
+        let max_align = dim.max_align();
+        let aligned_size = align_up(aligned, max_align);
+        RecordInfo {
+            dim: dim.clone(),
+            fields,
+            packed_size: packed,
+            aligned_size,
+            max_align,
+        }
+    }
+
+    /// Number of leaf fields.
+    #[inline]
+    pub fn leaf_count(&self) -> usize {
+        self.fields.len()
+    }
+
+    /// Find the flat index of a leaf by dotted name path (`"pos.x"`).
+    /// Slow path — resolve once outside hot loops.
+    pub fn leaf_by_path(&self, path: &str) -> Option<usize> {
+        self.fields.iter().position(|f| f.path == path)
+    }
+
+    /// Find the flat index of a leaf by record coordinate.
+    pub fn leaf_by_coord(&self, coord: &RecordCoord) -> Option<usize> {
+        self.fields.iter().position(|f| &f.coord == coord)
+    }
+
+    /// All flat leaf indices under the subtree rooted at `prefix`
+    /// (paper's non-terminal access: `particle(Pos{})` selects pos.*).
+    pub fn leaves_under(&self, prefix: &RecordCoord) -> Vec<usize> {
+        self.fields
+            .iter()
+            .enumerate()
+            .filter(|(_, f)| prefix.is_prefix_of(&f.coord))
+            .map(|(i, _)| i)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::dim::Field;
+
+    /// The paper's listing-1 Particle record.
+    pub fn particle() -> RecordDim {
+        let vec3 = Type::Record(vec![
+            Field::new("x", Type::Scalar(Scalar::F32)),
+            Field::new("y", Type::Scalar(Scalar::F32)),
+        ]);
+        RecordDim::new()
+            .scalar("id", Scalar::U16)
+            .field("pos", vec3)
+            .scalar("mass", Scalar::F64)
+            .array("flags", Type::Scalar(Scalar::Bool), 3)
+    }
+
+    #[test]
+    fn flatten_paths_and_coords() {
+        let info = RecordInfo::new(&particle());
+        let paths: Vec<&str> = info.fields.iter().map(|f| f.path.as_str()).collect();
+        assert_eq!(
+            paths,
+            vec!["id", "pos.x", "pos.y", "mass", "flags.0", "flags.1", "flags.2"]
+        );
+        assert_eq!(info.fields[1].coord, RecordCoord::new(vec![1, 0]));
+        assert_eq!(info.fields[6].coord, RecordCoord::new(vec![3, 2]));
+    }
+
+    #[test]
+    fn packed_offsets_have_no_holes() {
+        let info = RecordInfo::new(&particle());
+        let mut expect = 0;
+        for f in &info.fields {
+            assert_eq!(f.offset_packed, expect);
+            expect += f.size();
+        }
+        assert_eq!(info.packed_size, expect);
+        assert_eq!(info.packed_size, 2 + 4 + 4 + 8 + 3);
+    }
+
+    #[test]
+    fn aligned_offsets_respect_alignment() {
+        let info = RecordInfo::new(&particle());
+        for f in &info.fields {
+            assert_eq!(
+                f.offset_aligned % f.scalar.align(),
+                0,
+                "field {} misaligned",
+                f.path
+            );
+        }
+        // u16 id @0, pad→4, pos.x @4, pos.y @8, mass @16 (aligned 8),
+        // flags @24..27, tail pad → 32.
+        assert_eq!(info.fields[0].offset_aligned, 0);
+        assert_eq!(info.fields[1].offset_aligned, 4);
+        assert_eq!(info.fields[3].offset_aligned, 16);
+        assert_eq!(info.aligned_size, 32);
+        assert_eq!(info.max_align, 8);
+    }
+
+    #[test]
+    fn leaf_lookup() {
+        let info = RecordInfo::new(&particle());
+        assert_eq!(info.leaf_by_path("pos.y"), Some(2));
+        assert_eq!(info.leaf_by_path("nope"), None);
+        assert_eq!(info.leaf_by_coord(&RecordCoord::new(vec![2])), Some(3));
+    }
+
+    #[test]
+    fn leaves_under_subtree() {
+        let info = RecordInfo::new(&particle());
+        assert_eq!(info.leaves_under(&RecordCoord::new(vec![1])), vec![1, 2]);
+        assert_eq!(info.leaves_under(&RecordCoord::new(vec![3])), vec![4, 5, 6]);
+        assert_eq!(
+            info.leaves_under(&RecordCoord::root()),
+            (0..7).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn aligned_size_multiple_of_align() {
+        let info = RecordInfo::new(&particle());
+        assert_eq!(info.aligned_size % info.max_align, 0);
+    }
+}

@@ -1,0 +1,120 @@
+//! `record_dim!` — ergonomic DSL for defining record dimensions, the
+//! analogue of the paper's listing 1.
+//!
+//! ```
+//! use llama::record_dim;
+//! use llama::record::Scalar;
+//! let particle = record_dim! {
+//!     id: u16,
+//!     pos: { x: f32, y: f32, z: f32 },
+//!     mass: f64,
+//!     flags: [bool; 3],
+//! };
+//! assert_eq!(particle.leaf_count(), 8);
+//! ```
+
+/// Map a Rust scalar type token to a [`crate::record::Scalar`].
+#[macro_export]
+macro_rules! llama_scalar {
+    (f32) => {
+        $crate::record::Scalar::F32
+    };
+    (f64) => {
+        $crate::record::Scalar::F64
+    };
+    (i8) => {
+        $crate::record::Scalar::I8
+    };
+    (i16) => {
+        $crate::record::Scalar::I16
+    };
+    (i32) => {
+        $crate::record::Scalar::I32
+    };
+    (i64) => {
+        $crate::record::Scalar::I64
+    };
+    (u8) => {
+        $crate::record::Scalar::U8
+    };
+    (u16) => {
+        $crate::record::Scalar::U16
+    };
+    (u32) => {
+        $crate::record::Scalar::U32
+    };
+    (u64) => {
+        $crate::record::Scalar::U64
+    };
+    (bool) => {
+        $crate::record::Scalar::Bool
+    };
+}
+
+/// Build a [`crate::record::Type`] from a field-type token.
+#[macro_export]
+macro_rules! llama_type {
+    ({ $($name:ident : $ty:tt),+ $(,)? }) => {
+        $crate::record::Type::Record(vec![
+            $($crate::record::Field::new(
+                stringify!($name),
+                $crate::llama_type!($ty),
+            )),+
+        ])
+    };
+    ([ $ty:tt ; $n:expr ]) => {
+        $crate::record::Type::Array(Box::new($crate::llama_type!($ty)), $n)
+    };
+    ($s:ident) => {
+        $crate::record::Type::Scalar($crate::llama_scalar!($s))
+    };
+}
+
+/// Define a [`crate::record::RecordDim`] with struct-like syntax.
+#[macro_export]
+macro_rules! record_dim {
+    ( $($name:ident : $ty:tt),+ $(,)? ) => {
+        $crate::record::RecordDim {
+            fields: vec![
+                $($crate::record::Field::new(
+                    stringify!($name),
+                    $crate::llama_type!($ty),
+                )),+
+            ],
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::record::{RecordInfo, Scalar, Type};
+
+    #[test]
+    fn macro_builds_nested_record() {
+        let d = record_dim! {
+            id: u16,
+            pos: { x: f32, y: f32, z: f32 },
+            mass: f64,
+            flags: [bool; 3],
+        };
+        assert_eq!(d.fields.len(), 4);
+        assert_eq!(d.leaf_count(), 8);
+        let info = RecordInfo::new(&d);
+        assert_eq!(info.leaf_by_path("pos.z"), Some(3));
+        assert_eq!(info.fields[0].scalar, Scalar::U16);
+        match &d.fields[3].ty {
+            Type::Array(inner, 3) => assert_eq!(**inner, Type::Scalar(Scalar::Bool)),
+            other => panic!("expected array, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn macro_deep_nesting() {
+        let d = record_dim! {
+            a: { b: { c: { d: f32 } } },
+        };
+        let info = RecordInfo::new(&d);
+        assert_eq!(info.fields[0].path, "a.b.c.d");
+        assert_eq!(info.fields[0].coord.0, vec![0, 0, 0, 0]);
+    }
+}

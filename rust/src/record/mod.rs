@@ -1,0 +1,23 @@
+//! The **record dimension**: LLAMA's compile-time description of nested,
+//! structured data (paper §3.3).
+//!
+//! In the C++ original the record dimension is a type-level tree
+//! (`llama::Record<llama::Field<Tag, Type>...>`). In this Rust
+//! reproduction it is a value-level tree ([`RecordDim`]) that is built
+//! once, *ahead of the hot loop*, and flattened into a leaf-field table
+//! ([`RecordInfo`]) whose per-field strides and offsets are plain
+//! integers. Mappings capture those integers at construction, so every
+//! terminal access inlines to `linear_index * stride + constant` — the
+//! same "compiler sees through it" property the paper demonstrates via
+//! identical disassembly (its Listings 10/11).
+
+pub mod coord;
+pub mod dim;
+pub mod flatten;
+pub mod permute;
+#[macro_use]
+pub mod macros;
+
+pub use coord::RecordCoord;
+pub use dim::{Field, RecordDim, Scalar, Type};
+pub use flatten::{FlatField, RecordInfo};

@@ -1,0 +1,90 @@
+//! Field-permutation helpers (paper §3.7: "type list algorithms to
+//! permute the record dimension to minimize padding introduced by
+//! alignment").
+
+use super::dim::{RecordDim, Type};
+
+/// Return a copy of the record dimension with its *top-level* fields
+/// sorted by decreasing alignment (stable within equal alignment), which
+/// minimizes alignment padding for the aligned-AoS layout.
+pub fn minimize_padding(dim: &RecordDim) -> RecordDim {
+    let mut fields = dim.fields.clone();
+    fields.sort_by(|a, b| b.ty.max_align().cmp(&a.ty.max_align()));
+    RecordDim { fields }
+}
+
+/// Like [`minimize_padding`] but recursing into nested records.
+pub fn minimize_padding_deep(dim: &RecordDim) -> RecordDim {
+    fn fix(ty: &Type) -> Type {
+        match ty {
+            Type::Scalar(s) => Type::Scalar(*s),
+            Type::Record(fs) => {
+                let inner = RecordDim { fields: fs.iter().cloned().collect() };
+                let mut sorted = minimize_padding(&inner).fields;
+                for f in &mut sorted {
+                    f.ty = fix(&f.ty);
+                }
+                Type::Record(sorted)
+            }
+            Type::Array(inner, n) => Type::Array(Box::new(fix(inner)), *n),
+        }
+    }
+    let mut out = minimize_padding(dim);
+    for f in &mut out.fields {
+        f.ty = fix(&f.ty);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::dim::Scalar;
+    use crate::record::flatten::RecordInfo;
+
+    #[test]
+    fn permutation_reduces_aligned_size() {
+        // u8, f64, u8, f64 → aligned = 1+7pad+8+1+7pad+8 = 32.
+        let bad = RecordDim::new()
+            .scalar("a", Scalar::U8)
+            .scalar("b", Scalar::F64)
+            .scalar("c", Scalar::U8)
+            .scalar("d", Scalar::F64);
+        let bad_info = RecordInfo::new(&bad);
+        assert_eq!(bad_info.aligned_size, 32);
+
+        let good = minimize_padding(&bad);
+        let good_info = RecordInfo::new(&good);
+        // f64, f64, u8, u8 → 8+8+1+1 = 18 → pad to 24.
+        assert_eq!(good_info.aligned_size, 24);
+        // Packed size is invariant under permutation.
+        assert_eq!(good_info.packed_size, bad_info.packed_size);
+    }
+
+    #[test]
+    fn permutation_is_stable_for_equal_align() {
+        let d = RecordDim::new()
+            .scalar("x", Scalar::F32)
+            .scalar("y", Scalar::F32)
+            .scalar("z", Scalar::F32);
+        let p = minimize_padding(&d);
+        let names: Vec<&str> = p.fields.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["x", "y", "z"]);
+    }
+
+    #[test]
+    fn deep_permutation_recurses() {
+        let inner = RecordDim::new()
+            .scalar("flag", Scalar::U8)
+            .scalar("val", Scalar::F64);
+        let d = RecordDim::new().scalar("tiny", Scalar::U8).record("sub", inner);
+        let p = minimize_padding_deep(&d);
+        // sub (align 8) must come before tiny (align 1).
+        assert_eq!(p.fields[0].name, "sub");
+        if let Type::Record(fs) = &p.fields[0].ty {
+            assert_eq!(fs[0].name, "val"); // f64 before u8 inside too
+        } else {
+            panic!("expected record");
+        }
+    }
+}

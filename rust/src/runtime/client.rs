@@ -1,0 +1,73 @@
+//! [`Runtime`]: a PJRT client plus artifact loading/compilation cache.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::executable::Executable;
+use super::manifest::Manifest;
+
+/// PJRT CPU client wrapper. One compiled executable per artifact,
+/// cached by name (the "one compiled executable per model variant"
+/// rule of the architecture).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, usize>,
+    executables: Vec<Executable>,
+}
+
+impl Runtime {
+    /// Create a CPU runtime over an artifacts directory (must contain
+    /// `manifest.txt`; run `make artifacts` first).
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Runtime { client, manifest, cache: HashMap::new(), executables: Vec::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if let Some(&idx) = self.cache.get(name) {
+            return Ok(&self.executables[idx]);
+        }
+        let meta = self.manifest.find(name)?.clone();
+        let path = self.manifest.path_of(&meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let idx = self.executables.len();
+        self.executables.push(Executable::new(exe, meta));
+        self.cache.insert(name.to_string(), idx);
+        Ok(&self.executables[idx])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime integration tests live in rust/tests/runtime_e2e.rs (they
+    // need the artifacts directory built by `make artifacts`).
+}

@@ -1,0 +1,93 @@
+//! [`Executable`]: one compiled model variant with typed run helpers.
+
+use anyhow::{ensure, Context, Result};
+
+use super::manifest::Artifact;
+
+/// A compiled artifact plus its manifest metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    meta: Artifact,
+}
+
+impl Executable {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable, meta: Artifact) -> Self {
+        Executable { exe, meta }
+    }
+
+    pub fn meta(&self) -> &Artifact {
+        &self.meta
+    }
+
+    /// Shape of input `i` as the manifest's layout dictates: SoA
+    /// artifacts take flat `(n,)` arrays, AoS artifacts one `(n, 7)`.
+    fn input_dims(&self) -> Vec<i64> {
+        if self.meta.layout == "aos" {
+            vec![self.meta.n as i64, 7]
+        } else {
+            vec![self.meta.n as i64]
+        }
+    }
+
+    /// Execute with f32 host slices (one per manifest input), returning
+    /// f32 host vectors (one per output). The lowered module returns a
+    /// tuple (`return_tuple=True` on the compile path).
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        ensure!(
+            inputs.len() == self.meta.inputs,
+            "{} expects {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs,
+            inputs.len()
+        );
+        let dims = self.input_dims();
+        let expect: usize = dims.iter().product::<i64>() as usize;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            ensure!(
+                data.len() == expect,
+                "input {i} of {}: {} elements, expected {expect}",
+                self.meta.name,
+                data.len()
+            );
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let parts = tuple.to_tuple().context("untupling result")?;
+        ensure!(
+            parts.len() == self.meta.outputs,
+            "{} returned {} outputs, manifest says {}",
+            self.meta.name,
+            parts.len(),
+            self.meta.outputs
+        );
+        parts.into_iter().map(|l| l.to_vec::<f32>().map_err(Into::into)).collect()
+    }
+
+    /// Execute with device-resident buffers, returning the output
+    /// buffers without copying to host — the fast path for step loops
+    /// (state stays on device between calls).
+    pub fn run_buffers(&self, inputs: &[xla::PjRtBuffer]) -> Result<Vec<xla::PjRtBuffer>> {
+        ensure!(inputs.len() == self.meta.inputs, "wrong input count");
+        let mut result = self.exe.execute_b::<xla::PjRtBuffer>(inputs)?;
+        Ok(result.swap_remove(0))
+    }
+
+    /// Upload f32 host data as a device buffer with this artifact's
+    /// input shape.
+    pub fn upload(&self, client: &xla::PjRtClient, data: &[f32]) -> Result<xla::PjRtBuffer> {
+        let dims_usize: Vec<usize> = self.input_dims().iter().map(|&d| d as usize).collect();
+        client
+            .buffer_from_host_buffer::<f32>(data, &dims_usize, None)
+            .map_err(Into::into)
+    }
+
+    /// Download a device buffer to an f32 host vector.
+    pub fn download(buffer: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buffer.to_literal_sync()?;
+        lit.to_vec::<f32>().map_err(Into::into)
+    }
+}

@@ -1,0 +1,131 @@
+//! Artifact manifest: `python -m compile.aot` writes one line per
+//! lowered variant; this parser is the contract between the compile
+//! path and the Rust runtime (plain whitespace format — no serde in the
+//! vendored dependency set).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One AOT artifact's metadata.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Artifact {
+    pub name: String,
+    /// File name relative to the manifest directory.
+    pub file: String,
+    /// Problem size the artifact was lowered for.
+    pub n: usize,
+    /// Pallas tile (0 = untiled / plain-XLA variant).
+    pub tile: usize,
+    pub dtype: String,
+    /// `soa` or `aos` — the fig 6 global-memory-layout axis.
+    pub layout: String,
+    pub inputs: usize,
+    pub outputs: usize,
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<Artifact>,
+}
+
+fn kv<'a>(parts: &'a [&str], key: &str) -> Result<&'a str> {
+    parts
+        .iter()
+        .find_map(|p| p.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+        .with_context(|| format!("manifest line missing {key}="))
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() < 3 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            artifacts.push(Artifact {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                n: kv(&parts, "n")?.parse().context("n")?,
+                tile: kv(&parts, "tile")?.parse().context("tile")?,
+                dtype: kv(&parts, "dtype")?.to_string(),
+                layout: kv(&parts, "layout")?.to_string(),
+                inputs: kv(&parts, "inputs")?.parse().context("inputs")?,
+                outputs: kv(&parts, "outputs")?.parse().context("outputs")?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn path_of(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+nbody_update_soa nbody_update_soa.hlo.txt n=1024 tile=256 dtype=f32 layout=soa inputs=7 outputs=3
+nbody_move_aos nbody_move_aos.hlo.txt n=65536 tile=256 dtype=f32 layout=aos inputs=1 outputs=1
+
+# comment line
+";
+
+    #[test]
+    fn parses_lines_and_lookup() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.find("nbody_update_soa").unwrap();
+        assert_eq!(a.n, 1024);
+        assert_eq!(a.tile, 256);
+        assert_eq!(a.layout, "soa");
+        assert_eq!(a.inputs, 7);
+        assert_eq!(
+            m.path_of(a),
+            PathBuf::from("/tmp/a/nbody_update_soa.hlo.txt")
+        );
+        assert!(m.find("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("oops", PathBuf::new()).is_err());
+        assert!(Manifest::parse("a b c", PathBuf::new()).is_err()); // no kv
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Integration hook: parse the actual artifacts dir when present.
+        if let Ok(m) = Manifest::load("artifacts") {
+            assert!(m.find("nbody_step_soa").is_ok());
+            for a in &m.artifacts {
+                assert!(m.path_of(a).exists(), "{} missing", a.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts produced by `python/compile/`
+//! and execute them from Rust — Python is never on this path.
+//!
+//! Flow (see /opt/xla-example/load_hlo): HLO *text* →
+//! [`xla::HloModuleProto::from_text_file`] → [`xla::XlaComputation`] →
+//! [`xla::PjRtClient::compile`] → execute with [`xla::Literal`] inputs
+//! (or resident [`xla::PjRtBuffer`]s for step loops).
+
+pub mod client;
+pub mod executable;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executable::Executable;
+pub use manifest::{Artifact, Manifest};

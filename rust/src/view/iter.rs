@@ -1,0 +1,130 @@
+//! View iterators (paper §3.6 / listing 7): iterate records of a view
+//! like an STL range. Iterators from views with *different mappings*
+//! compose (e.g. a transform from an AoS view into a SoA view), because
+//! records interact via the record dimension, not the layout.
+
+use crate::blob::Blob;
+use crate::mapping::Mapping;
+use crate::view::virtual_record::RecordRef;
+use crate::view::view::View;
+
+/// Iterator yielding a [`RecordRef`] per record, canonical order.
+#[derive(Debug)]
+pub struct RecordIter<'v, M: Mapping, B: Blob> {
+    view: &'v View<M, B>,
+    next: usize,
+    end: usize,
+}
+
+impl<'v, M: Mapping, B: Blob> RecordIter<'v, M, B> {
+    pub fn new(view: &'v View<M, B>) -> Self {
+        RecordIter { view, next: 0, end: view.count() }
+    }
+}
+
+impl<'v, M: Mapping, B: Blob> Iterator for RecordIter<'v, M, B> {
+    type Item = RecordRef<'v, M, B>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.next >= self.end {
+            return None;
+        }
+        let r = self.view.record(self.next);
+        self.next += 1;
+        Some(r)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = self.end - self.next;
+        (n, Some(n))
+    }
+}
+
+impl<'v, M: Mapping, B: Blob> ExactSizeIterator for RecordIter<'v, M, B> {}
+
+impl<'v, M: Mapping, B: Blob> IntoIterator for &'v View<M, B> {
+    type Item = RecordRef<'v, M, B>;
+    type IntoIter = RecordIter<'v, M, B>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        RecordIter::new(self)
+    }
+}
+
+/// Compile-time-style iteration over the record dimension leaves
+/// (paper's `forEachLeaf`): calls `f(leaf index, flat field)`.
+pub fn for_each_leaf<M: Mapping>(
+    mapping: &M,
+    mut f: impl FnMut(usize, &crate::record::FlatField),
+) {
+    for (i, field) in mapping.info().fields.iter().enumerate() {
+        f(i, field);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, SoA};
+    use crate::view::view::alloc_view;
+
+    #[test]
+    fn iterate_all_records() {
+        let mut v = alloc_view(AoS::aligned(&particle_dim(), ArrayDims::from([2, 3])));
+        for i in 0..6 {
+            v.set::<f64>(i, 4, i as f64);
+        }
+        // paper listing 7: for (auto p : view) p(Mass{}) = 1.0 — read
+        // side here.
+        let masses: Vec<f64> = (&v).into_iter().map(|p| p.get_path::<f64>("mass")).collect();
+        assert_eq!(masses, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!((&v).into_iter().len(), 6);
+    }
+
+    #[test]
+    fn transform_between_different_mappings() {
+        // paper listing 7: std::transform(view, view2) with different
+        // layouts.
+        let mut src = alloc_view(AoS::packed(&particle_dim(), ArrayDims::linear(5)));
+        let mut dst = alloc_view(SoA::multi_blob(&particle_dim(), ArrayDims::linear(5)));
+        for i in 0..5 {
+            src.set::<f32>(i, 1, i as f32);
+        }
+        for p in &src {
+            let lin = p.lin();
+            let doubled = p.get_path::<f32>("pos.x") * 2.0;
+            dst.set::<f32>(lin, 1, doubled);
+        }
+        for i in 0..5 {
+            assert_eq!(dst.get::<f32>(i, 1), i as f32 * 2.0);
+        }
+    }
+
+    #[test]
+    fn reduce_like_accumulation() {
+        // paper listing 7: std::reduce(view2.begin(), ..., One<Vec>{}).
+        let mut v = alloc_view(SoA::single_blob(&particle_dim(), ArrayDims::linear(4)));
+        for i in 0..4 {
+            v.set::<f32>(i, 1, i as f32); // pos.x = 0,1,2,3
+            v.set::<f32>(i, 2, 1.0); // pos.y = 1
+        }
+        let mut acc = (0.0f32, 0.0f32);
+        for p in &v {
+            acc.0 += p.get_path::<f32>("pos.x");
+            acc.1 += p.get_path::<f32>("pos.y");
+        }
+        assert_eq!(acc, (6.0, 4.0));
+    }
+
+    #[test]
+    fn for_each_leaf_visits_all() {
+        let v = alloc_view(AoS::packed(&particle_dim(), ArrayDims::linear(1)));
+        let mut paths = Vec::new();
+        for_each_leaf(v.mapping(), |_, f| paths.push(f.path.clone()));
+        assert_eq!(paths.len(), 8);
+        assert_eq!(paths[0], "id");
+        assert_eq!(paths[7], "flags.2");
+    }
+}

@@ -1,0 +1,20 @@
+//! **Views** (paper §3.4–3.6): the user-facing access layer of the data
+//! space. A [`View`] combines a mapping with an array of blobs; accesses
+//! are built up lazily ([`RecordRef`], the paper's `VirtualRecord`) and
+//! the mapping function is only invoked for *terminal* accesses.
+
+pub mod cursor;
+pub mod iter;
+pub mod one_record;
+pub mod scalar;
+pub mod view;
+pub mod virtual_record;
+pub mod virtual_view;
+
+pub use cursor::{LeafCursor, LeafCursorMut};
+pub use iter::RecordIter;
+pub use one_record::OneRecord;
+pub use scalar::ScalarVal;
+pub use view::{alloc_view, alloc_view_with, View};
+pub use virtual_record::{RecordRef, RecordRefMut};
+pub use virtual_view::VirtualView;

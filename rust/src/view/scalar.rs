@@ -1,0 +1,168 @@
+//! [`ScalarVal`]: Rust value types that can live in a LLAMA data space,
+//! with (un)checked native-endian codecs used by the view accessors.
+
+use crate::record::Scalar;
+
+/// A Rust scalar that corresponds to a [`Scalar`] elemental type.
+///
+/// # Safety
+/// Implementations must read/write exactly `Self::SCALAR.size()` bytes
+/// and `SCALAR` must match the type's actual size.
+pub unsafe trait ScalarVal: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static {
+    const SCALAR: Scalar;
+
+    /// Checked native-endian read at byte offset `off`.
+    fn read_ne(bytes: &[u8], off: usize) -> Self;
+
+    /// Checked native-endian write at byte offset `off`.
+    fn write_ne(bytes: &mut [u8], off: usize, v: Self);
+
+    /// Unchecked read: caller guarantees `off + size <= bytes.len()`.
+    ///
+    /// # Safety
+    /// `off + SCALAR.size()` must be within `bytes`.
+    unsafe fn read_ne_unchecked(bytes: &[u8], off: usize) -> Self;
+
+    /// Unchecked write.
+    ///
+    /// # Safety
+    /// `off + SCALAR.size()` must be within `bytes`.
+    unsafe fn write_ne_unchecked(bytes: &mut [u8], off: usize, v: Self);
+
+    /// Reverse the byte order of the value (identity for 1-byte types).
+    /// Used by the [`crate::mapping::Byteswap`] representation.
+    fn swap_bytes_val(self) -> Self;
+}
+
+macro_rules! impl_scalar_val {
+    ($t:ty, $scalar:expr, $swap:expr) => {
+        unsafe impl ScalarVal for $t {
+            const SCALAR: Scalar = $scalar;
+
+            #[inline(always)]
+            fn read_ne(bytes: &[u8], off: usize) -> Self {
+                const N: usize = std::mem::size_of::<$t>();
+                let arr: [u8; N] = bytes[off..off + N].try_into().unwrap();
+                <$t>::from_ne_bytes(arr)
+            }
+
+            #[inline(always)]
+            fn write_ne(bytes: &mut [u8], off: usize, v: Self) {
+                const N: usize = std::mem::size_of::<$t>();
+                bytes[off..off + N].copy_from_slice(&v.to_ne_bytes());
+            }
+
+            #[inline(always)]
+            unsafe fn read_ne_unchecked(bytes: &[u8], off: usize) -> Self {
+                debug_assert!(off + std::mem::size_of::<$t>() <= bytes.len());
+                (bytes.as_ptr().add(off) as *const $t).read_unaligned()
+            }
+
+            #[inline(always)]
+            unsafe fn write_ne_unchecked(bytes: &mut [u8], off: usize, v: Self) {
+                debug_assert!(off + std::mem::size_of::<$t>() <= bytes.len());
+                (bytes.as_mut_ptr().add(off) as *mut $t).write_unaligned(v)
+            }
+
+            #[inline(always)]
+            fn swap_bytes_val(self) -> Self {
+                $swap(self)
+            }
+        }
+    };
+}
+
+impl_scalar_val!(f32, Scalar::F32, |v: f32| f32::from_bits(v.to_bits().swap_bytes()));
+impl_scalar_val!(f64, Scalar::F64, |v: f64| f64::from_bits(v.to_bits().swap_bytes()));
+impl_scalar_val!(i8, Scalar::I8, |v: i8| v);
+impl_scalar_val!(i16, Scalar::I16, i16::swap_bytes);
+impl_scalar_val!(i32, Scalar::I32, i32::swap_bytes);
+impl_scalar_val!(i64, Scalar::I64, i64::swap_bytes);
+impl_scalar_val!(u8, Scalar::U8, |v: u8| v);
+impl_scalar_val!(u16, Scalar::U16, u16::swap_bytes);
+impl_scalar_val!(u32, Scalar::U32, u32::swap_bytes);
+impl_scalar_val!(u64, Scalar::U64, u64::swap_bytes);
+
+// bool is stored as one byte, 0 or 1.
+unsafe impl ScalarVal for bool {
+    const SCALAR: Scalar = Scalar::Bool;
+
+    #[inline(always)]
+    fn read_ne(bytes: &[u8], off: usize) -> Self {
+        bytes[off] != 0
+    }
+
+    #[inline(always)]
+    fn write_ne(bytes: &mut [u8], off: usize, v: Self) {
+        bytes[off] = v as u8;
+    }
+
+    #[inline(always)]
+    unsafe fn read_ne_unchecked(bytes: &[u8], off: usize) -> Self {
+        debug_assert!(off < bytes.len());
+        *bytes.get_unchecked(off) != 0
+    }
+
+    #[inline(always)]
+    unsafe fn write_ne_unchecked(bytes: &mut [u8], off: usize, v: Self) {
+        debug_assert!(off < bytes.len());
+        *bytes.get_unchecked_mut(off) = v as u8;
+    }
+
+    #[inline(always)]
+    fn swap_bytes_val(self) -> Self {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut buf = vec![0u8; 16];
+        f32::write_ne(&mut buf, 1, 3.5);
+        assert_eq!(f32::read_ne(&buf, 1), 3.5);
+        f64::write_ne(&mut buf, 8, -1.25);
+        assert_eq!(f64::read_ne(&buf, 8), -1.25);
+        u16::write_ne(&mut buf, 0, 0xBEEF);
+        assert_eq!(u16::read_ne(&buf, 0), 0xBEEF);
+        bool::write_ne(&mut buf, 5, true);
+        assert!(bool::read_ne(&buf, 5));
+    }
+
+    #[test]
+    fn unchecked_matches_checked() {
+        let mut buf = vec![0u8; 16];
+        i64::write_ne(&mut buf, 3, -987654321);
+        // SAFETY: 3 + 8 <= 16.
+        let v = unsafe { i64::read_ne_unchecked(&buf, 3) };
+        assert_eq!(v, i64::read_ne(&buf, 3));
+        // SAFETY: in range.
+        unsafe { u32::write_ne_unchecked(&mut buf, 12, 0xCAFEBABE) };
+        assert_eq!(u32::read_ne(&buf, 12), 0xCAFEBABE);
+    }
+
+    #[test]
+    fn swap_bytes_values() {
+        assert_eq!(0x1234u16.swap_bytes_val(), 0x3412);
+        assert_eq!(1.0f32.swap_bytes_val().swap_bytes_val(), 1.0);
+        assert_eq!(true.swap_bytes_val(), true);
+        assert_eq!((-5i8).swap_bytes_val(), -5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn checked_read_out_of_range_panics() {
+        let buf = vec![0u8; 4];
+        let _ = f64::read_ne(&buf, 0);
+    }
+
+    #[test]
+    fn scalar_consts_match_sizes() {
+        assert_eq!(<f32 as ScalarVal>::SCALAR.size(), 4);
+        assert_eq!(<bool as ScalarVal>::SCALAR.size(), 1);
+        assert_eq!(<u64 as ScalarVal>::SCALAR.size(), 8);
+    }
+}

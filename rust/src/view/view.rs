@@ -1,0 +1,366 @@
+//! [`View`]: mapping + blobs = accessible data space (paper §3.4/3.5).
+
+use crate::blob::{Blob, BlobAllocator, BlobMut, VecAlloc};
+use crate::mapping::Mapping;
+use crate::view::one_record::OneRecord;
+use crate::view::scalar::ScalarVal;
+use crate::view::virtual_record::{RecordRef, RecordRefMut};
+
+/// The core data structure of LLAMA: provides access to the data space
+/// described by `mapping`, stored in `blobs`.
+///
+/// Hot-path accessors come in checked (`get`/`set`) and unchecked
+/// (`get_unchecked`/`set_unchecked`) flavors; call [`View::validate`]
+/// once to justify the unchecked ones in kernels.
+#[derive(Debug, Clone)]
+pub struct View<M: Mapping, B: Blob = Vec<u8>> {
+    mapping: M,
+    blobs: Vec<B>,
+}
+
+/// Allocate a view with the default `Vec<u8>` blob allocator — the
+/// paper's `llama::allocView(mapping)`.
+pub fn alloc_view<M: Mapping>(mapping: M) -> View<M, Vec<u8>> {
+    alloc_view_with(mapping, VecAlloc)
+}
+
+/// Allocate a view with a custom blob allocator — the paper's
+/// `llama::allocView(mapping, blobAlloc)`.
+pub fn alloc_view_with<M: Mapping, A: BlobAllocator>(mapping: M, alloc: A) -> View<M, A::Blob> {
+    let blobs = (0..mapping.blob_count()).map(|b| alloc.allocate(mapping.blob_size(b))).collect();
+    View { mapping, blobs }
+}
+
+impl<M: Mapping, B: Blob> View<M, B> {
+    /// Construct a view over caller-provided blobs (paper §3.8:
+    /// "passing an array of blobs directly to a view's constructor").
+    /// Panics if the blob count or any blob size does not satisfy the
+    /// mapping.
+    pub fn from_blobs(mapping: M, blobs: Vec<B>) -> Self {
+        assert_eq!(
+            blobs.len(),
+            mapping.blob_count(),
+            "blob count mismatch for {}",
+            mapping.mapping_name()
+        );
+        for (nr, b) in blobs.iter().enumerate() {
+            assert!(
+                b.as_bytes().len() >= mapping.blob_size(nr),
+                "blob {nr} too small: {} < {}",
+                b.as_bytes().len(),
+                mapping.blob_size(nr)
+            );
+        }
+        View { mapping, blobs }
+    }
+
+    pub fn mapping(&self) -> &M {
+        &self.mapping
+    }
+
+    /// Number of records in the array dimensions.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.mapping.dims().count()
+    }
+
+    pub fn blobs(&self) -> &[B] {
+        &self.blobs
+    }
+
+    /// Take the blobs back out (e.g. to hand memory to another API).
+    pub fn into_blobs(self) -> Vec<B> {
+        self.blobs
+    }
+
+    /// Verify every (leaf, slot) access lands inside its blob; after
+    /// this, the `*_unchecked` accessors are sound for in-range indices.
+    /// Cost: O(leaves × slots) — call once, outside hot loops.
+    pub fn validate(&self) -> Result<(), String> {
+        let info = self.mapping.info().clone();
+        for lin in 0..self.count() {
+            let slot = self.mapping.slot_of_lin(lin);
+            for leaf in 0..info.leaf_count() {
+                let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+                if nr >= self.blobs.len() {
+                    return Err(format!("leaf {leaf} lin {lin}: blob {nr} out of range"));
+                }
+                let need = off + info.fields[leaf].size();
+                let have = self.blobs[nr].as_bytes().len();
+                if need > have {
+                    return Err(format!(
+                        "leaf {leaf} lin {lin}: needs {need} bytes in blob {nr}, has {have}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read terminal field `leaf` at canonical linear index `lin`.
+    #[inline]
+    pub fn get<T: ScalarVal>(&self, lin: usize, leaf: usize) -> T {
+        debug_assert_eq!(T::SCALAR, self.mapping.info().fields[leaf].scalar);
+        let slot = self.mapping.slot_of_lin(lin);
+        let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+        let v = T::read_ne(self.blobs[nr].as_bytes(), off);
+        if self.mapping.is_native_representation() {
+            v
+        } else {
+            v.swap_bytes_val()
+        }
+    }
+
+    /// Read at an N-dimensional index.
+    #[inline]
+    pub fn get_nd<T: ScalarVal>(&self, idx: &[usize], leaf: usize) -> T {
+        debug_assert!(self.mapping.dims().contains(idx));
+        let slot = self.mapping.slot_of_nd(idx);
+        let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+        let v = T::read_ne(self.blobs[nr].as_bytes(), off);
+        if self.mapping.is_native_representation() {
+            v
+        } else {
+            v.swap_bytes_val()
+        }
+    }
+
+    /// Unchecked read; sound after [`View::validate`] for `lin <
+    /// count()` and `leaf < leaf_count()`.
+    ///
+    /// # Safety
+    /// The mapping must route (leaf, lin) inside the blobs — guaranteed
+    /// by a successful `validate()`.
+    #[inline]
+    pub unsafe fn get_unchecked<T: ScalarVal>(&self, lin: usize, leaf: usize) -> T {
+        let slot = self.mapping.slot_of_lin(lin);
+        let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+        let v = T::read_ne_unchecked(self.blobs.get_unchecked(nr).as_bytes(), off);
+        if self.mapping.is_native_representation() {
+            v
+        } else {
+            v.swap_bytes_val()
+        }
+    }
+
+    /// Lazy accessor for one record (paper's `VirtualRecord`). The
+    /// mapping is *not* invoked here — only on terminal access.
+    #[inline]
+    pub fn record(&self, lin: usize) -> RecordRef<'_, M, B> {
+        RecordRef::new(self, lin)
+    }
+
+    /// Copy one record out of the view into a stack value (paper's
+    /// `llama::One`).
+    pub fn load_one(&self, lin: usize) -> OneRecord {
+        let info = self.mapping.info().clone();
+        let mut one = OneRecord::new(info.clone());
+        for leaf in 0..info.leaf_count() {
+            let slot = self.mapping.slot_of_lin(lin);
+            let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+            let size = info.fields[leaf].size();
+            let src = &self.blobs[nr].as_bytes()[off..off + size];
+            one.leaf_bytes_mut(leaf).copy_from_slice(src);
+            if !self.mapping.is_native_representation() {
+                one.leaf_bytes_mut(leaf).reverse();
+            }
+        }
+        one
+    }
+}
+
+impl<M: Mapping, B: BlobMut> View<M, B> {
+    /// Write terminal field `leaf` at canonical linear index `lin`.
+    #[inline]
+    pub fn set<T: ScalarVal>(&mut self, lin: usize, leaf: usize, v: T) {
+        debug_assert_eq!(T::SCALAR, self.mapping.info().fields[leaf].scalar);
+        let v = if self.mapping.is_native_representation() { v } else { v.swap_bytes_val() };
+        let slot = self.mapping.slot_of_lin(lin);
+        let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+        T::write_ne(self.blobs[nr].as_bytes_mut(), off, v);
+    }
+
+    /// Write at an N-dimensional index.
+    #[inline]
+    pub fn set_nd<T: ScalarVal>(&mut self, idx: &[usize], leaf: usize, v: T) {
+        debug_assert!(self.mapping.dims().contains(idx));
+        let v = if self.mapping.is_native_representation() { v } else { v.swap_bytes_val() };
+        let slot = self.mapping.slot_of_nd(idx);
+        let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+        T::write_ne(self.blobs[nr].as_bytes_mut(), off, v);
+    }
+
+    /// Unchecked write; see [`View::get_unchecked`] for the contract.
+    ///
+    /// # Safety
+    /// As for `get_unchecked`.
+    #[inline]
+    pub unsafe fn set_unchecked<T: ScalarVal>(&mut self, lin: usize, leaf: usize, v: T) {
+        let v = if self.mapping.is_native_representation() { v } else { v.swap_bytes_val() };
+        let slot = self.mapping.slot_of_lin(lin);
+        let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+        T::write_ne_unchecked(self.blobs.get_unchecked_mut(nr).as_bytes_mut(), off, v);
+    }
+
+    /// Mutable lazy accessor for one record.
+    #[inline]
+    pub fn record_mut(&mut self, lin: usize) -> RecordRefMut<'_, M, B> {
+        RecordRefMut::new(self, lin)
+    }
+
+    /// Store a stack record into the view (deep write-through).
+    pub fn store_one(&mut self, lin: usize, one: &OneRecord) {
+        let info = self.mapping.info().clone();
+        assert_eq!(info.leaf_count(), one.info().leaf_count(), "record dim mismatch");
+        for leaf in 0..info.leaf_count() {
+            let slot = self.mapping.slot_of_lin(lin);
+            let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
+            let size = info.fields[leaf].size();
+            let dst = &mut self.blobs[nr].as_bytes_mut()[off..off + size];
+            dst.copy_from_slice(one.leaf_bytes(leaf));
+            if !self.mapping.is_native_representation() {
+                dst.reverse();
+            }
+        }
+    }
+
+    /// Borrow the mapping and the blobs mutably at once — used by the
+    /// copy engine and by code that fills blob bytes directly (e.g.
+    /// handing blobs to an external API and reinterpreting them).
+    pub fn mapping_and_blobs_mut(&mut self) -> (&M, &mut [B]) {
+        (&self.mapping, &mut self.blobs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, Byteswap, SoA};
+
+    const POS_X: usize = 1;
+    const MASS: usize = 4;
+    const FLAG0: usize = 5;
+
+    #[test]
+    fn roundtrip_aos() {
+        let mut v = alloc_view(AoS::aligned(&particle_dim(), ArrayDims::linear(10)));
+        for i in 0..10 {
+            v.set::<f32>(i, POS_X, i as f32 * 1.5);
+            v.set::<f64>(i, MASS, i as f64 + 0.25);
+            v.set::<bool>(i, FLAG0, i % 2 == 0);
+        }
+        for i in 0..10 {
+            assert_eq!(v.get::<f32>(i, POS_X), i as f32 * 1.5);
+            assert_eq!(v.get::<f64>(i, MASS), i as f64 + 0.25);
+            assert_eq!(v.get::<bool>(i, FLAG0), i % 2 == 0);
+        }
+        assert!(v.validate().is_ok());
+    }
+
+    #[test]
+    fn roundtrip_soa_and_aosoa_agree_with_aos() {
+        let dims = ArrayDims::from([4, 3]);
+        let mut aos = alloc_view(AoS::packed(&particle_dim(), dims.clone()));
+        let mut soa = alloc_view(SoA::multi_blob(&particle_dim(), dims.clone()));
+        let mut aosoa = alloc_view(AoSoA::new(&particle_dim(), dims.clone(), 4));
+        for i in 0..12 {
+            for (leaf, val) in [(POS_X, i as f32), (2, -(i as f32))] {
+                aos.set::<f32>(i, leaf, val);
+                soa.set::<f32>(i, leaf, val);
+                aosoa.set::<f32>(i, leaf, val);
+            }
+        }
+        for i in 0..12 {
+            let a = aos.get::<f32>(i, POS_X);
+            assert_eq!(a, soa.get::<f32>(i, POS_X));
+            assert_eq!(a, aosoa.get::<f32>(i, POS_X));
+        }
+    }
+
+    #[test]
+    fn nd_access_matches_linear() {
+        let dims = ArrayDims::from([3, 4]);
+        let mut v = alloc_view(SoA::single_blob(&particle_dim(), dims.clone()));
+        for a in 0..3 {
+            for b in 0..4 {
+                v.set_nd::<f32>(&[a, b], POS_X, (a * 10 + b) as f32);
+            }
+        }
+        for lin in 0..12 {
+            let idx = dims.delinearize_row_major(lin);
+            assert_eq!(v.get::<f32>(lin, POS_X), (idx[0] * 10 + idx[1]) as f32);
+        }
+    }
+
+    #[test]
+    fn unchecked_matches_checked() {
+        let mut v = alloc_view(AoSoA::new(&particle_dim(), ArrayDims::linear(9), 4));
+        v.validate().unwrap();
+        for i in 0..9 {
+            // SAFETY: validated above, i < count.
+            unsafe { v.set_unchecked::<f64>(i, MASS, i as f64 * 2.0) };
+        }
+        for i in 0..9 {
+            // SAFETY: as above.
+            let u = unsafe { v.get_unchecked::<f64>(i, MASS) };
+            assert_eq!(u, v.get::<f64>(i, MASS));
+        }
+    }
+
+    #[test]
+    fn byteswap_view_roundtrips_and_stores_swapped() {
+        let mut v = alloc_view(Byteswap::new(AoS::packed(&particle_dim(), ArrayDims::linear(2))));
+        v.set::<f32>(0, POS_X, 1.0f32);
+        assert_eq!(v.get::<f32>(0, POS_X), 1.0);
+        // Raw bytes must hold the swapped representation.
+        let raw = &v.blobs()[0][2..6];
+        assert_eq!(raw, 1.0f32.to_be_bytes()); // on little-endian hosts
+    }
+
+    #[test]
+    fn load_store_one() {
+        let mut v = alloc_view(SoA::multi_blob(&particle_dim(), ArrayDims::linear(4)));
+        v.set::<f64>(2, MASS, 9.5);
+        v.set::<u16>(2, 0, 77);
+        let one = v.load_one(2);
+        assert_eq!(one.get::<f64>(MASS), 9.5);
+        assert_eq!(one.get::<u16>(0), 77);
+        let mut v2 = alloc_view(AoS::aligned(&particle_dim(), ArrayDims::linear(4)));
+        v2.store_one(1, &one);
+        assert_eq!(v2.get::<f64>(1, MASS), 9.5);
+        assert_eq!(v2.get::<u16>(1, 0), 77);
+    }
+
+    #[test]
+    #[should_panic(expected = "blob count mismatch")]
+    fn from_blobs_wrong_count_panics() {
+        let m = SoA::multi_blob(&particle_dim(), ArrayDims::linear(4));
+        let _ = View::from_blobs(m, vec![vec![0u8; 8]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "too small")]
+    fn from_blobs_too_small_panics() {
+        let m = AoS::packed(&particle_dim(), ArrayDims::linear(4));
+        let _ = View::from_blobs(m, vec![vec![0u8; 10]]);
+    }
+
+    #[test]
+    fn from_external_blobs() {
+        use crate::blob::ExternalBytesMut;
+        let m = AoS::packed(&particle_dim(), ArrayDims::linear(2));
+        let mut storage = vec![0u8; 50];
+        {
+            let mut v = View::from_blobs(
+                AoS::packed(&particle_dim(), ArrayDims::linear(2)),
+                vec![ExternalBytesMut(&mut storage)],
+            );
+            v.set::<f32>(1, POS_X, 4.0);
+        }
+        // The write went through to the external buffer.
+        let check = View::from_blobs(m, vec![storage]);
+        assert_eq!(check.get::<f32>(1, POS_X), 4.0);
+    }
+}

@@ -1,0 +1,261 @@
+//! [`RecordRef`]/[`RecordRefMut`]: the paper's `VirtualRecord` (§3.5).
+//!
+//! A non-terminal access on a view returns a record ref that merely
+//! *aggregates index information* (array index + record-tree prefix);
+//! the mapping function is invoked only on terminal access — LLAMA's
+//! lazy-evaluation design point that distinguishes it from mdspan-style
+//! libraries (paper §2.3).
+
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::Mapping;
+use crate::record::RecordCoord;
+use crate::view::one_record::OneRecord;
+use crate::view::scalar::ScalarVal;
+use crate::view::view::View;
+
+/// Immutable virtual record: view + linear index + record-coord prefix.
+#[derive(Debug)]
+pub struct RecordRef<'v, M: Mapping, B: Blob> {
+    view: &'v View<M, B>,
+    lin: usize,
+    prefix: RecordCoord,
+}
+
+impl<'v, M: Mapping, B: Blob> Clone for RecordRef<'v, M, B> {
+    fn clone(&self) -> Self {
+        RecordRef { view: self.view, lin: self.lin, prefix: self.prefix.clone() }
+    }
+}
+
+impl<'v, M: Mapping, B: Blob> RecordRef<'v, M, B> {
+    pub(crate) fn new(view: &'v View<M, B>, lin: usize) -> Self {
+        RecordRef { view, lin, prefix: RecordCoord::root() }
+    }
+
+    pub fn lin(&self) -> usize {
+        self.lin
+    }
+
+    pub fn coord(&self) -> &RecordCoord {
+        &self.prefix
+    }
+
+    /// Non-terminal access: descend into child `i` of the current
+    /// record node. No address computation happens.
+    pub fn child(&self, i: usize) -> Self {
+        RecordRef { view: self.view, lin: self.lin, prefix: self.prefix.child(i) }
+    }
+
+    /// Non-terminal access by field name (one level).
+    pub fn at(&self, name: &str) -> Self {
+        let idx = child_index(self.view.mapping(), &self.prefix, name)
+            .unwrap_or_else(|| panic!("no field '{name}' under {}", self.prefix));
+        self.child(idx)
+    }
+
+    /// Terminal access: read the leaf at the current prefix (which must
+    /// be a leaf) — this is where the mapping finally runs.
+    pub fn get<T: ScalarVal>(&self) -> T {
+        let leaf = self
+            .view
+            .mapping()
+            .info()
+            .leaf_by_coord(&self.prefix)
+            .unwrap_or_else(|| panic!("{} is not a terminal field", self.prefix));
+        self.view.get::<T>(self.lin, leaf)
+    }
+
+    /// Terminal access by relative dotted path, e.g. `"pos.x"`.
+    pub fn get_path<T: ScalarVal>(&self, path: &str) -> T {
+        let leaf = resolve_path(self.view.mapping(), &self.prefix, path);
+        self.view.get::<T>(self.lin, leaf)
+    }
+
+    /// Deep-copy the subtree at the current prefix into a stack value
+    /// (paper's `llama::One` construction from a virtual record).
+    pub fn load(&self) -> OneRecord {
+        let info = self.view.mapping().info().clone();
+        if self.prefix.is_root() {
+            return self.view.load_one(self.lin);
+        }
+        // Build a sub-record OneRecord of the leaves under the prefix.
+        let leaves = info.leaves_under(&self.prefix);
+        let mut dim = crate::record::RecordDim::new();
+        for &l in &leaves {
+            let f = &info.fields[l];
+            let rel = f
+                .path
+                .clone();
+            dim = dim.field(rel, crate::record::Type::Scalar(f.scalar));
+        }
+        let sub = std::sync::Arc::new(crate::record::RecordInfo::new(&dim));
+        let mut one = OneRecord::new(sub);
+        for (child, &l) in leaves.iter().enumerate() {
+            let v = {
+                let f = &info.fields[l];
+                let (nr, off) = self
+                    .view
+                    .mapping()
+                    .blob_nr_and_offset(l, self.view.mapping().slot_of_lin(self.lin));
+                let size = f.size();
+                self.view.blobs()[nr].as_bytes()[off..off + size].to_vec()
+            };
+            one.leaf_bytes_mut(child).copy_from_slice(&v);
+            if !self.view.mapping().is_native_representation() {
+                one.leaf_bytes_mut(child).reverse();
+            }
+        }
+        one
+    }
+}
+
+/// Mutable virtual record.
+#[derive(Debug)]
+pub struct RecordRefMut<'v, M: Mapping, B: BlobMut> {
+    view: &'v mut View<M, B>,
+    lin: usize,
+    prefix: RecordCoord,
+}
+
+impl<'v, M: Mapping, B: BlobMut> RecordRefMut<'v, M, B> {
+    pub(crate) fn new(view: &'v mut View<M, B>, lin: usize) -> Self {
+        RecordRefMut { view, lin, prefix: RecordCoord::root() }
+    }
+
+    /// Descend into child `i` (consumes self to keep the borrow unique).
+    pub fn child(self, i: usize) -> Self {
+        RecordRefMut { view: self.view, lin: self.lin, prefix: self.prefix.child(i) }
+    }
+
+    /// Descend by field name.
+    pub fn at(self, name: &str) -> Self {
+        let idx = child_index(self.view.mapping(), &self.prefix, name)
+            .unwrap_or_else(|| panic!("no field '{name}' under {}", self.prefix));
+        self.child(idx)
+    }
+
+    /// Terminal write at the current prefix.
+    pub fn set<T: ScalarVal>(&mut self, v: T) {
+        let leaf = self
+            .view
+            .mapping()
+            .info()
+            .leaf_by_coord(&self.prefix)
+            .unwrap_or_else(|| panic!("{} is not a terminal field", self.prefix));
+        self.view.set::<T>(self.lin, leaf, v);
+    }
+
+    /// Terminal write by relative dotted path.
+    pub fn set_path<T: ScalarVal>(&mut self, path: &str, v: T) {
+        let leaf = resolve_path(self.view.mapping(), &self.prefix, path);
+        self.view.set::<T>(self.lin, leaf, v);
+    }
+
+    /// Read through the mutable ref.
+    pub fn get_path<T: ScalarVal>(&self, path: &str) -> T {
+        let leaf = resolve_path(self.view.mapping(), &self.prefix, path);
+        self.view.get::<T>(self.lin, leaf)
+    }
+
+    /// Write-through a whole stack record (reference semantics of the
+    /// paper's VirtualRecord assignment).
+    pub fn store(&mut self, one: &OneRecord) {
+        assert!(self.prefix.is_root(), "store() is only supported at the record root");
+        self.view.store_one(self.lin, one);
+    }
+}
+
+/// Resolve the child index of `name` under `prefix` in the record tree.
+fn child_index<M: Mapping>(mapping: &M, prefix: &RecordCoord, name: &str) -> Option<usize> {
+    use crate::record::Type;
+    let mut fields: &[crate::record::Field] = &mapping.info().dim.fields;
+    for &c in &prefix.0 {
+        match &fields.get(c)?.ty {
+            Type::Record(fs) => fields = fs,
+            _ => return None,
+        }
+    }
+    fields.iter().position(|f| f.name == name)
+}
+
+/// Resolve a relative dotted path from `prefix` to a flat leaf index.
+fn resolve_path<M: Mapping>(mapping: &M, prefix: &RecordCoord, path: &str) -> usize {
+    let mut coord = prefix.clone();
+    for seg in path.split('.') {
+        let idx = child_index(mapping, &coord, seg).unwrap_or_else(|| {
+            // Array children are named by their numeric index.
+            seg.parse::<usize>().ok().unwrap_or_else(|| panic!("no field '{seg}' under {coord}"))
+        });
+        coord = coord.child(idx);
+    }
+    mapping
+        .info()
+        .leaf_by_coord(&coord)
+        .unwrap_or_else(|| panic!("path '{path}' does not name a terminal field"))
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, SoA};
+    use crate::view::view::alloc_view;
+
+    #[test]
+    fn lazy_descend_then_terminal() {
+        // paper listing 4: particle = view(i); pos = particle(Pos);
+        // y = pos(Y) — only the last line touches memory.
+        let mut v = alloc_view(SoA::multi_blob(&particle_dim(), ArrayDims::linear(4)));
+        v.set::<f32>(2, 2, 7.5); // pos.y
+        let particle = v.record(2);
+        let pos = particle.at("pos");
+        let y: f32 = pos.at("y").get();
+        assert_eq!(y, 7.5);
+        assert_eq!(pos.coord().0, vec![1]);
+    }
+
+    #[test]
+    fn path_access() {
+        let mut v = alloc_view(AoS::aligned(&particle_dim(), ArrayDims::linear(4)));
+        v.record_mut(1).set_path::<f64>("mass", 3.25);
+        v.record_mut(1).set_path::<bool>("flags.1", true);
+        assert_eq!(v.record(1).get_path::<f64>("mass"), 3.25);
+        assert!(v.record(1).get_path::<bool>("flags.1"));
+        assert!(!v.record(1).get_path::<bool>("flags.0"));
+    }
+
+    #[test]
+    fn load_subtree() {
+        let mut v = alloc_view(SoA::single_blob(&particle_dim(), ArrayDims::linear(4)));
+        v.set::<f32>(3, 1, 1.0);
+        v.set::<f32>(3, 2, 2.0);
+        v.set::<f32>(3, 3, 3.0);
+        let pos = v.record(3).at("pos").load();
+        assert_eq!(pos.info().leaf_count(), 3);
+        assert_eq!(pos.get::<f32>(0), 1.0);
+        assert_eq!(pos.get::<f32>(2), 3.0);
+    }
+
+    #[test]
+    fn store_whole_record() {
+        let mut v = alloc_view(AoS::packed(&particle_dim(), ArrayDims::linear(2)));
+        let mut one = v.load_one(0);
+        one.set::<f64>(4, 42.0);
+        v.record_mut(1).store(&one);
+        assert_eq!(v.get::<f64>(1, 4), 42.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a terminal field")]
+    fn non_terminal_get_panics() {
+        let v = alloc_view(AoS::packed(&particle_dim(), ArrayDims::linear(2)));
+        let _: f32 = v.record(0).at("pos").get();
+    }
+
+    #[test]
+    #[should_panic(expected = "no field")]
+    fn unknown_field_panics() {
+        let v = alloc_view(AoS::packed(&particle_dim(), ArrayDims::linear(2)));
+        let _ = v.record(0).at("nope");
+    }
+}

@@ -1,0 +1,135 @@
+//! [`VirtualView`]: restricts access to a subspace of the array
+//! dimensions (paper §3.2: "Created on top of a View, a VirtualView
+//! restricts access to a subspace of the array dimensions").
+
+use crate::array::ArrayDims;
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::Mapping;
+use crate::view::scalar::ScalarVal;
+use crate::view::view::View;
+
+/// A rectangular window `[offset, offset+extent)` into a view's array
+/// dimensions. Indices passed to the accessors are *relative* to the
+/// window origin.
+#[derive(Debug)]
+pub struct VirtualView<'v, M: Mapping, B: Blob> {
+    view: &'v View<M, B>,
+    offset: Vec<usize>,
+    extents: ArrayDims,
+}
+
+impl<'v, M: Mapping, B: Blob> VirtualView<'v, M, B> {
+    pub fn new(view: &'v View<M, B>, offset: Vec<usize>, extents: ArrayDims) -> Self {
+        let dims = view.mapping().dims();
+        assert_eq!(offset.len(), dims.rank());
+        assert_eq!(extents.rank(), dims.rank());
+        for d in 0..dims.rank() {
+            assert!(
+                offset[d] + extents.0[d] <= dims.0[d],
+                "window exceeds dimension {d}: {}+{} > {}",
+                offset[d],
+                extents.0[d],
+                dims.0[d]
+            );
+        }
+        VirtualView { view, offset, extents }
+    }
+
+    pub fn extents(&self) -> &ArrayDims {
+        &self.extents
+    }
+
+    pub fn offset(&self) -> &[usize] {
+        &self.offset
+    }
+
+    fn absolute(&self, rel: &[usize]) -> Vec<usize> {
+        debug_assert!(self.extents.contains(rel));
+        rel.iter().zip(&self.offset).map(|(r, o)| r + o).collect()
+    }
+
+    pub fn get_nd<T: ScalarVal>(&self, rel: &[usize], leaf: usize) -> T {
+        self.view.get_nd::<T>(&self.absolute(rel), leaf)
+    }
+}
+
+/// Mutable window.
+#[derive(Debug)]
+pub struct VirtualViewMut<'v, M: Mapping, B: BlobMut> {
+    view: &'v mut View<M, B>,
+    offset: Vec<usize>,
+    extents: ArrayDims,
+}
+
+impl<'v, M: Mapping, B: BlobMut> VirtualViewMut<'v, M, B> {
+    pub fn new(view: &'v mut View<M, B>, offset: Vec<usize>, extents: ArrayDims) -> Self {
+        {
+            let dims = view.mapping().dims();
+            assert_eq!(offset.len(), dims.rank());
+            for d in 0..dims.rank() {
+                assert!(offset[d] + extents.0[d] <= dims.0[d], "window exceeds dimension {d}");
+            }
+        }
+        VirtualViewMut { view, offset, extents }
+    }
+
+    pub fn extents(&self) -> &ArrayDims {
+        &self.extents
+    }
+
+    fn absolute(&self, rel: &[usize]) -> Vec<usize> {
+        debug_assert!(self.extents.contains(rel));
+        rel.iter().zip(&self.offset).map(|(r, o)| r + o).collect()
+    }
+
+    pub fn get_nd<T: ScalarVal>(&self, rel: &[usize], leaf: usize) -> T {
+        self.view.get_nd::<T>(&self.absolute(rel), leaf)
+    }
+
+    pub fn set_nd<T: ScalarVal>(&mut self, rel: &[usize], leaf: usize, v: T) {
+        let abs = self.absolute(rel);
+        self.view.set_nd::<T>(&abs, leaf, v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::SoA;
+    use crate::view::view::alloc_view;
+
+    #[test]
+    fn window_reads_relative() {
+        let dims = ArrayDims::from([4, 4]);
+        let mut v = alloc_view(SoA::multi_blob(&particle_dim(), dims));
+        for a in 0..4 {
+            for b in 0..4 {
+                v.set_nd::<f32>(&[a, b], 1, (a * 10 + b) as f32);
+            }
+        }
+        let w = VirtualView::new(&v, vec![1, 2], ArrayDims::from([2, 2]));
+        assert_eq!(w.get_nd::<f32>(&[0, 0], 1), 12.0);
+        assert_eq!(w.get_nd::<f32>(&[1, 1], 1), 23.0);
+    }
+
+    #[test]
+    fn mutable_window_writes_through() {
+        let dims = ArrayDims::from([4, 4]);
+        let mut v = alloc_view(SoA::multi_blob(&particle_dim(), dims));
+        {
+            let mut w = VirtualViewMut::new(&mut v, vec![2, 0], ArrayDims::from([2, 4]));
+            w.set_nd::<f64>(&[0, 3], 4, 5.5);
+            assert_eq!(w.get_nd::<f64>(&[0, 3], 4), 5.5);
+        }
+        assert_eq!(v.get_nd::<f64>(&[2, 3], 4), 5.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds dimension")]
+    fn oversized_window_panics() {
+        let v = alloc_view(SoA::multi_blob(&particle_dim(), ArrayDims::from([4, 4])));
+        let _ = VirtualView::new(&v, vec![3, 0], ArrayDims::from([2, 4]));
+    }
+}

@@ -1,0 +1,105 @@
+//! HEP event records (paper §4.2, fig 7): "the first 100 int32s,
+//! int64s, floats, bytes and bools as they occur in an internal event
+//! dataset from the CMS detector at CERN".
+//!
+//! Substitution note (DESIGN.md): the CMS dataset is internal; fig 7
+//! only depends on the record *shape* — 100 heterogeneous small leaf
+//! fields — so we synthesize a record with 20 of each scalar kind in an
+//! interleaved declaration order resembling reconstructed-event
+//! attribute lists, plus a deterministic value generator.
+
+use crate::blob::BlobMut;
+use crate::mapping::Mapping;
+use crate::record::{RecordDim, Scalar};
+use crate::view::View;
+use crate::workloads::rng::SplitMix64;
+
+/// Number of leaf fields in the event record.
+pub const FIELDS: usize = 100;
+
+/// The 100-field event record: 20×(i32, i64, f32, u8, bool),
+/// interleaved in groups of five like typical reconstructed-object
+/// attribute blocks (id, timestamp, energy, quality, isolation).
+pub fn event_dim() -> RecordDim {
+    let mut dim = RecordDim::new();
+    for obj in 0..20 {
+        dim = dim
+            .scalar(format!("obj{obj}_id"), Scalar::I32)
+            .scalar(format!("obj{obj}_time"), Scalar::I64)
+            .scalar(format!("obj{obj}_energy"), Scalar::F32)
+            .scalar(format!("obj{obj}_quality"), Scalar::U8)
+            .scalar(format!("obj{obj}_isolated"), Scalar::Bool);
+    }
+    dim
+}
+
+/// Fill an event view with deterministic pseudo-physics values.
+pub fn generate_events<M: Mapping, B: BlobMut>(view: &mut View<M, B>, seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    let info = view.mapping().info().clone();
+    for lin in 0..view.count() {
+        for leaf in 0..info.leaf_count() {
+            match info.fields[leaf].scalar {
+                Scalar::I32 => view.set::<i32>(lin, leaf, rng.next_u32() as i32 & 0xFFFFF),
+                Scalar::I64 => view.set::<i64>(lin, leaf, rng.next_u64() as i64 & 0xFFFFFFFFFF),
+                Scalar::F32 => view.set::<f32>(lin, leaf, rng.range_f32(0.0, 500.0)),
+                Scalar::U8 => view.set::<u8>(lin, leaf, (rng.next_u32() & 0xFF) as u8),
+                Scalar::Bool => view.set::<bool>(lin, leaf, rng.next_bool()),
+                other => unreachable!("event record has no {other:?}"),
+            }
+        }
+    }
+}
+
+/// Bytes of one packed event record (the per-record payload moved by
+/// fig 7's event copies).
+pub fn event_packed_size() -> usize {
+    event_dim().packed_size()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::{AoSoA, SoA};
+    use crate::view::alloc_view;
+
+    #[test]
+    fn record_shape_matches_paper() {
+        let d = event_dim();
+        assert_eq!(d.leaf_count(), FIELDS);
+        // 20 * (4 + 8 + 4 + 1 + 1) = 360 bytes packed.
+        assert_eq!(d.packed_size(), 360);
+        let info = crate::record::RecordInfo::new(&d);
+        let kinds = |s: Scalar| info.fields.iter().filter(|f| f.scalar == s).count();
+        assert_eq!(kinds(Scalar::I32), 20);
+        assert_eq!(kinds(Scalar::I64), 20);
+        assert_eq!(kinds(Scalar::F32), 20);
+        assert_eq!(kinds(Scalar::U8), 20);
+        assert_eq!(kinds(Scalar::Bool), 20);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let d = event_dim();
+        let mut a = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(10)));
+        let mut b = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(10)));
+        generate_events(&mut a, 99);
+        generate_events(&mut b, 99);
+        assert_eq!(a.blobs(), b.blobs());
+        let mut c = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(10)));
+        generate_events(&mut c, 100);
+        assert_ne!(a.blobs(), c.blobs());
+    }
+
+    #[test]
+    fn copies_between_event_layouts() {
+        let d = event_dim();
+        let dims = ArrayDims::linear(64);
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        generate_events(&mut src, 7);
+        let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 32));
+        crate::copy::aosoa_copy(&src, &mut dst, crate::copy::ChunkOrder::ReadContiguous);
+        assert!(crate::copy::views_equal(&src, &dst));
+    }
+}

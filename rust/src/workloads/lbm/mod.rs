@@ -1,0 +1,208 @@
+//! D3Q19 Lattice-Boltzmann — the stand-in for SPEC CPU® 2017
+//! 619.lbm_s (paper §4.3, fig 8).
+//!
+//! Substitution note (DESIGN.md): SPEC's source is proprietary, but the
+//! benchmark's only property the paper exercises is its *central data
+//! structure* — a 3D array of 20 doubles (19 D3Q19 distribution values
+//! + one used as a flag bitset) — swept by a stream-collide kernel that
+//! touches all 20 fields with neighbour offsets. This module implements
+//! exactly that: BGK collision, pull-scheme streaming, bounce-back
+//! obstacles, periodic boundaries.
+//!
+//! The record dimension is `{ f: [f64; 19], flags: f64 }` and the whole
+//! solver is layout-generic: fig 8's AoS / Split / SoA / AoSoA rows all
+//! run this one kernel over different mappings.
+
+pub mod split4;
+pub mod step;
+
+use crate::array::ArrayDims;
+use crate::record::RecordDim;
+use crate::workloads::rng::SplitMix64;
+
+/// Flat leaf index of distribution `i` (0..19).
+pub const F0: usize = 0;
+/// Flat leaf index of the flags field.
+pub const FLAGS: usize = 19;
+pub const LEAVES: usize = 20;
+/// Number of D3Q19 discrete velocities.
+pub const Q: usize = 19;
+
+/// Cell flags (stored in a f64, like SPEC lbm's 20th double).
+pub const FLUID: f64 = 0.0;
+pub const OBSTACLE: f64 = 1.0;
+
+/// BGK relaxation parameter (0 < omega < 2).
+pub const OMEGA: f64 = 1.2;
+
+/// D3Q19 velocity set: rest + 6 axis + 12 diagonal directions.
+pub const E: [[i32; 3]; Q] = [
+    [0, 0, 0],
+    [1, 0, 0],
+    [-1, 0, 0],
+    [0, 1, 0],
+    [0, -1, 0],
+    [0, 0, 1],
+    [0, 0, -1],
+    [1, 1, 0],
+    [-1, -1, 0],
+    [1, -1, 0],
+    [-1, 1, 0],
+    [1, 0, 1],
+    [-1, 0, -1],
+    [1, 0, -1],
+    [-1, 0, 1],
+    [0, 1, 1],
+    [0, -1, -1],
+    [0, 1, -1],
+    [0, -1, 1],
+];
+
+/// D3Q19 lattice weights.
+pub const W: [f64; Q] = [
+    1.0 / 3.0,
+    1.0 / 18.0,
+    1.0 / 18.0,
+    1.0 / 18.0,
+    1.0 / 18.0,
+    1.0 / 18.0,
+    1.0 / 18.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+    1.0 / 36.0,
+];
+
+/// Index of the opposite direction of `i` (for bounce-back).
+pub const OPP: [usize; Q] = [0, 2, 1, 4, 3, 6, 5, 8, 7, 10, 9, 12, 11, 14, 13, 16, 15, 18, 17];
+
+/// The 20-double cell record of 619.lbm_s.
+pub fn cell_dim() -> RecordDim {
+    crate::record_dim! {
+        f: [f64; 19],
+        flags: f64,
+    }
+}
+
+/// Simulation geometry: grid extents and obstacle mask.
+#[derive(Debug, Clone)]
+pub struct Geometry {
+    pub dims: ArrayDims,
+    /// Row-major obstacle mask, one bool per cell.
+    pub obstacle: Vec<bool>,
+}
+
+impl Geometry {
+    /// Procedural obstacle field standing in for SPEC's obstacle file:
+    /// a centered sphere plus a few random blockages (deterministic).
+    pub fn channel_with_sphere(nx: usize, ny: usize, nz: usize, seed: u64) -> Self {
+        let dims = ArrayDims::from([nx, ny, nz]);
+        let mut obstacle = vec![false; dims.count()];
+        let (cx, cy, cz) = (nx as f64 / 2.0, ny as f64 / 2.0, nz as f64 / 2.0);
+        let r = (nx.min(ny).min(nz) as f64) / 5.0;
+        let mut rng = SplitMix64::new(seed);
+        let mut blockers = Vec::new();
+        for _ in 0..4 {
+            blockers.push((
+                rng.below(nx) as f64,
+                rng.below(ny) as f64,
+                rng.below(nz) as f64,
+                r * 0.4,
+            ));
+        }
+        for x in 0..nx {
+            for y in 0..ny {
+                for z in 0..nz {
+                    let lin = (x * ny + y) * nz + z;
+                    let d2 = (x as f64 - cx).powi(2)
+                        + (y as f64 - cy).powi(2)
+                        + (z as f64 - cz).powi(2);
+                    let mut occ = d2 < r * r;
+                    for &(bx, by, bz, br) in &blockers {
+                        let b2 = (x as f64 - bx).powi(2)
+                            + (y as f64 - by).powi(2)
+                            + (z as f64 - bz).powi(2);
+                        occ |= b2 < br * br;
+                    }
+                    obstacle[lin] = occ;
+                }
+            }
+        }
+        Geometry { dims, obstacle }
+    }
+
+    pub fn fluid_cells(&self) -> usize {
+        self.obstacle.iter().filter(|&&o| !o).count()
+    }
+}
+
+/// Equilibrium distribution for density `rho` and velocity `u`.
+#[inline(always)]
+pub fn equilibrium(i: usize, rho: f64, u: [f64; 3]) -> f64 {
+    let eu = E[i][0] as f64 * u[0] + E[i][1] as f64 * u[1] + E[i][2] as f64 * u[2];
+    let u2 = u[0] * u[0] + u[1] * u[1] + u[2] * u[2];
+    W[i] * rho * (1.0 + 3.0 * eu + 4.5 * eu * eu - 1.5 * u2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn velocity_set_is_consistent() {
+        // Opposites really are opposites.
+        for i in 0..Q {
+            for d in 0..3 {
+                assert_eq!(E[i][d], -E[OPP[i]][d], "dir {i}");
+            }
+        }
+        // Weights sum to 1.
+        let sum: f64 = W.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        // First moment of the weights is zero.
+        for d in 0..3 {
+            let m: f64 = (0..Q).map(|i| W[i] * E[i][d] as f64).sum();
+            assert!(m.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn equilibrium_recovers_moments() {
+        let rho = 1.1;
+        let u = [0.02, -0.01, 0.03];
+        let rho_sum: f64 = (0..Q).map(|i| equilibrium(i, rho, u)).sum();
+        assert!((rho_sum - rho).abs() < 1e-3, "density {rho_sum}");
+        for d in 0..3 {
+            let mom: f64 = (0..Q).map(|i| equilibrium(i, rho, u) * E[i][d] as f64).sum();
+            assert!((mom - rho * u[d]).abs() < 1e-3, "momentum {d}: {mom}");
+        }
+    }
+
+    #[test]
+    fn cell_dim_matches_spec_structure() {
+        let d = cell_dim();
+        assert_eq!(d.leaf_count(), LEAVES);
+        assert_eq!(d.packed_size(), 20 * 8);
+        let info = crate::record::RecordInfo::new(&d);
+        assert_eq!(info.leaf_by_path("f.0"), Some(F0));
+        assert_eq!(info.leaf_by_path("flags"), Some(FLAGS));
+    }
+
+    #[test]
+    fn geometry_deterministic_with_obstacles() {
+        let a = Geometry::channel_with_sphere(16, 16, 16, 5);
+        let b = Geometry::channel_with_sphere(16, 16, 16, 5);
+        assert_eq!(a.obstacle, b.obstacle);
+        let occ = a.obstacle.iter().filter(|&&o| o).count();
+        assert!(occ > 0 && occ < a.dims.count());
+        assert_eq!(a.fluid_cells(), a.dims.count() - occ);
+    }
+}

@@ -1,0 +1,407 @@
+//! Layout-generic D3Q19 stream-collide step (pull scheme), serial and
+//! multi-threaded — the compute kernel behind fig 8.
+
+use super::{equilibrium, Geometry, E, FLAGS, FLUID, OBSTACLE, OMEGA, OPP, Q};
+use crate::blob::BlobMut;
+use crate::mapping::Mapping;
+use crate::view::{LeafCursor, LeafCursorMut, View};
+
+/// Initialize a view to uniform equilibrium (rho=1, u=0) and write the
+/// flag field from the geometry.
+pub fn init<M: Mapping, B: BlobMut>(view: &mut View<M, B>, geo: &Geometry) {
+    assert_eq!(view.mapping().dims(), &geo.dims);
+    let n = geo.dims.count();
+    for lin in 0..n {
+        for i in 0..Q {
+            view.set::<f64>(lin, i, equilibrium(i, 1.0, [0.0; 3]));
+        }
+        view.set::<f64>(lin, FLAGS, if geo.obstacle[lin] { OBSTACLE } else { FLUID });
+    }
+}
+
+/// Density+velocity of one cell (diagnostics, mass-conservation tests).
+pub fn macroscopic<M: Mapping, B: BlobMut>(view: &View<M, B>, lin: usize) -> (f64, [f64; 3]) {
+    let mut rho = 0.0;
+    let mut u = [0.0f64; 3];
+    for i in 0..Q {
+        let f = view.get::<f64>(lin, i);
+        rho += f;
+        for d in 0..3 {
+            u[d] += f * E[i][d] as f64;
+        }
+    }
+    if rho > 0.0 {
+        for d in &mut u {
+            *d /= rho;
+        }
+    }
+    (rho, u)
+}
+
+/// Total mass in the lattice (conserved by the step).
+pub fn total_mass<M: Mapping, B: BlobMut>(view: &View<M, B>) -> f64 {
+    (0..view.count()).map(|lin| (0..Q).map(|i| view.get::<f64>(lin, i)).sum::<f64>()).sum()
+}
+
+/// A small constant body force applied along +x to fluid cells (keeps
+/// the flow moving like SPEC lbm's driven channel).
+const ACCEL: f64 = 0.0005;
+
+#[inline(always)]
+fn wrap(v: i64, n: i64) -> usize {
+    // v in [-1, n]; cheap wrap without division.
+    if v < 0 {
+        (v + n) as usize
+    } else if v >= n {
+        (v - n) as usize
+    } else {
+        v as usize
+    }
+}
+
+/// Affine-cursor slab kernel (EXPERIMENTS.md §Perf): all per-access
+/// mapping calls (offset tables, Split routing) are replaced by
+/// loop-invariant `base + lin * stride` cursors extracted once per
+/// step. AoS, SoA and (nested) Split layouts take this path.
+///
+/// # Safety
+/// Cursors cover `0..nx*ny*nz`; concurrent callers use disjoint slabs.
+unsafe fn step_slab_cursors(
+    src: &[LeafCursor<'_>],
+    dst: &[LeafCursorMut<'_>],
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    x0: usize,
+    x1: usize,
+) {
+    let (nxi, nyi, nzi) = (nx as i64, ny as i64, nz as i64);
+    for x in x0..x1 {
+        for y in 0..ny {
+            for z in 0..nz {
+                let lin = (x * ny + y) * nz + z;
+                let flags = src[FLAGS].read::<f64>(lin);
+                if flags == OBSTACLE {
+                    for i in 0..Q {
+                        dst[i].write::<f64>(lin, src[i].read::<f64>(lin));
+                    }
+                    dst[FLAGS].write::<f64>(lin, flags);
+                    continue;
+                }
+                let mut f = [0.0f64; Q];
+                let mut rho = 0.0;
+                let mut u = [0.0f64; 3];
+                for i in 0..Q {
+                    let sx = wrap(x as i64 - E[i][0] as i64, nxi);
+                    let sy = wrap(y as i64 - E[i][1] as i64, nyi);
+                    let sz = wrap(z as i64 - E[i][2] as i64, nzi);
+                    let slin = (sx * ny + sy) * nz + sz;
+                    let fi = if src[FLAGS].read::<f64>(slin) == OBSTACLE {
+                        src[OPP[i]].read::<f64>(lin)
+                    } else {
+                        src[i].read::<f64>(slin)
+                    };
+                    f[i] = fi;
+                    rho += fi;
+                    for d in 0..3 {
+                        u[d] += fi * E[i][d] as f64;
+                    }
+                }
+                let inv_rho = 1.0 / rho;
+                for d in &mut u {
+                    *d *= inv_rho;
+                }
+                u[0] += ACCEL;
+                for i in 0..Q {
+                    let feq = equilibrium(i, rho, u);
+                    dst[i].write::<f64>(lin, f[i] + OMEGA * (feq - f[i]));
+                }
+                dst[FLAGS].write::<f64>(lin, flags);
+            }
+        }
+    }
+}
+
+/// One stream-collide step over the x-slab `x0..x1`, pulling from `src`
+/// and writing `dst`. The body shared by the serial and parallel
+/// drivers.
+///
+/// # Safety
+/// Caller guarantees both views are validated and slabs given to
+/// concurrent callers are disjoint (writes only touch `dst` cells in
+/// the slab; the mapping invariant keeps their byte ranges disjoint).
+unsafe fn step_slab<MS: Mapping, MD: Mapping, B: BlobMut>(
+    src: &View<MS, B>,
+    dst: *mut View<MD, B>,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    x0: usize,
+    x1: usize,
+) {
+    let dst = &mut *dst;
+    let (nxi, nyi, nzi) = (nx as i64, ny as i64, nz as i64);
+    for x in x0..x1 {
+        for y in 0..ny {
+            for z in 0..nz {
+                let lin = (x * ny + y) * nz + z;
+                let flags = src.get_unchecked::<f64>(lin, FLAGS);
+                if flags == OBSTACLE {
+                    // Obstacle cells are inert: keep their state (their
+                    // outgoing populations are reflected by the fluid
+                    // neighbours below, so nothing is consumed here).
+                    for i in 0..Q {
+                        let f = src.get_unchecked::<f64>(lin, i);
+                        dst.set_unchecked::<f64>(lin, i, f);
+                    }
+                    dst.set_unchecked::<f64>(lin, FLAGS, flags);
+                    continue;
+                }
+                // Pull: gather f_i from the upwind neighbour; if the
+                // neighbour is a wall, take the cell's own opposite
+                // population instead (link bounce-back). Every fluid
+                // population thus has exactly one consumer per step,
+                // conserving mass exactly.
+                let mut f = [0.0f64; Q];
+                let mut rho = 0.0;
+                let mut u = [0.0f64; 3];
+                for i in 0..Q {
+                    let sx = wrap(x as i64 - E[i][0] as i64, nxi);
+                    let sy = wrap(y as i64 - E[i][1] as i64, nyi);
+                    let sz = wrap(z as i64 - E[i][2] as i64, nzi);
+                    let slin = (sx * ny + sy) * nz + sz;
+                    let fi = if src.get_unchecked::<f64>(slin, FLAGS) == OBSTACLE {
+                        src.get_unchecked::<f64>(lin, OPP[i])
+                    } else {
+                        src.get_unchecked::<f64>(slin, i)
+                    };
+                    f[i] = fi;
+                    rho += fi;
+                    for d in 0..3 {
+                        u[d] += fi * E[i][d] as f64;
+                    }
+                }
+                let inv_rho = 1.0 / rho;
+                for d in &mut u {
+                    *d *= inv_rho;
+                }
+                u[0] += ACCEL; // body force
+                // BGK collision.
+                for i in 0..Q {
+                    let feq = equilibrium(i, rho, u);
+                    dst.set_unchecked::<f64>(lin, i, f[i] + OMEGA * (feq - f[i]));
+                }
+                dst.set_unchecked::<f64>(lin, FLAGS, flags);
+            }
+        }
+    }
+}
+
+/// Serial stream-collide step: pull from `src` into `dst` (ping-pong
+/// buffers like SPEC lbm).
+pub fn step<MS: Mapping, MD: Mapping, B: BlobMut>(src: &View<MS, B>, dst: &mut View<MD, B>) {
+    let d = src.mapping().dims().extents();
+    let (nx, ny, nz) = (d[0], d[1], d[2]);
+    if src.leaf_cursors().is_some() {
+        if let Some(dst_cur) = dst.leaf_cursors_mut() {
+            let src_cur = src.leaf_cursors().unwrap();
+            // SAFETY: cursors validated; single caller, whole range.
+            unsafe { step_slab_cursors(&src_cur, &dst_cur, nx, ny, nz, 0, nx) };
+            return;
+        }
+    }
+    debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
+    // SAFETY: single caller, whole range.
+    unsafe { step_slab(src, dst as *mut _, nx, ny, nz, 0, nx) };
+}
+
+/// Multi-threaded step: x-slabs are distributed over `threads` workers
+/// (the paper's OpenMP parallelization of 619.lbm_s).
+pub fn step_parallel<MS, MD, B>(src: &View<MS, B>, dst: &mut View<MD, B>, threads: usize)
+where
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut + Sync,
+{
+    let d = src.mapping().dims().extents();
+    let (nx, ny, nz) = (d[0], d[1], d[2]);
+    let threads = threads.max(1).min(nx);
+    if threads == 1 {
+        step(src, dst);
+        return;
+    }
+    // Affine fast path: extract cursors once, then fan the slabs out.
+    if src.leaf_cursors().is_some() && dst.leaf_cursors_mut().is_some() {
+        let src_cur = src.leaf_cursors().unwrap();
+        let dst_cur = dst.leaf_cursors_mut().unwrap();
+        let per = nx.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let x0 = t * per;
+                let x1 = ((t + 1) * per).min(nx);
+                if x0 >= x1 {
+                    break;
+                }
+                let src_cur = &src_cur;
+                let dst_cur = &dst_cur;
+                scope.spawn(move || {
+                    // SAFETY: disjoint slabs -> disjoint writes.
+                    unsafe { step_slab_cursors(src_cur, dst_cur, nx, ny, nz, x0, x1) };
+                });
+            }
+        });
+        return;
+    }
+    debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
+    struct DstPtr<M: Mapping, B: BlobMut>(*mut View<M, B>);
+    // SAFETY: workers write disjoint slabs (disjoint lin ranges →
+    // disjoint dst bytes by the mapping invariant).
+    unsafe impl<M: Mapping, B: BlobMut> Sync for DstPtr<M, B> {}
+    unsafe impl<M: Mapping, B: BlobMut> Send for DstPtr<M, B> {}
+    let dst_ptr = DstPtr(dst as *mut _);
+    let per = nx.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let x0 = t * per;
+            let x1 = ((t + 1) * per).min(nx);
+            if x0 >= x1 {
+                break;
+            }
+            let dst_ptr = &dst_ptr;
+            scope.spawn(move || {
+                // SAFETY: slabs are disjoint; see DstPtr.
+                unsafe { step_slab(src, dst_ptr.0, nx, ny, nz, x0, x1) };
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{AoS, AoSoA, SoA};
+    use crate::view::alloc_view;
+    use crate::workloads::lbm::cell_dim;
+
+    fn small_geo() -> Geometry {
+        Geometry::channel_with_sphere(8, 8, 8, 1)
+    }
+
+    #[test]
+    fn mass_is_conserved() {
+        let geo = small_geo();
+        let d = cell_dim();
+        let mut a = alloc_view(AoS::aligned(&d, geo.dims.clone()));
+        let mut b = alloc_view(AoS::aligned(&d, geo.dims.clone()));
+        init(&mut a, &geo);
+        init(&mut b, &geo);
+        let m0 = total_mass(&a);
+        for _ in 0..4 {
+            step(&a, &mut b);
+            std::mem::swap(&mut a, &mut b);
+        }
+        let m1 = total_mass(&a);
+        assert!((m0 - m1).abs() / m0 < 1e-9, "mass drift {m0} -> {m1}");
+    }
+
+    #[test]
+    fn layouts_produce_identical_fields() {
+        let geo = small_geo();
+        let d = cell_dim();
+        fn run<M: Mapping>(m0: M, m1: M, geo: &Geometry) -> Vec<f64> {
+            let mut a = alloc_view(m0);
+            let mut b = alloc_view(m1);
+            init(&mut a, geo);
+            init(&mut b, geo);
+            for _ in 0..3 {
+                step(&a, &mut b);
+                std::mem::swap(&mut a, &mut b);
+            }
+            (0..a.count()).map(|lin| a.get::<f64>(lin, 0)).collect()
+        }
+        let aos = run(
+            AoS::aligned(&d, geo.dims.clone()),
+            AoS::aligned(&d, geo.dims.clone()),
+            &geo,
+        );
+        let soa = run(
+            SoA::multi_blob(&d, geo.dims.clone()),
+            SoA::multi_blob(&d, geo.dims.clone()),
+            &geo,
+        );
+        let aosoa = run(
+            AoSoA::new(&d, geo.dims.clone(), 8),
+            AoSoA::new(&d, geo.dims.clone(), 8),
+            &geo,
+        );
+        assert_eq!(aos, soa);
+        assert_eq!(aos, aosoa);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let geo = small_geo();
+        let d = cell_dim();
+        let mut a = alloc_view(SoA::multi_blob(&d, geo.dims.clone()));
+        let mut b1 = alloc_view(SoA::multi_blob(&d, geo.dims.clone()));
+        let mut b4 = alloc_view(SoA::multi_blob(&d, geo.dims.clone()));
+        init(&mut a, &geo);
+        step(&a, &mut b1);
+        step_parallel(&a, &mut b4, 4);
+        assert_eq!(b1.blobs(), b4.blobs());
+    }
+
+    #[test]
+    fn obstacles_are_inert_and_fluid_mass_stays() {
+        let geo = small_geo();
+        let d = cell_dim();
+        let mut a = alloc_view(AoS::packed(&d, geo.dims.clone()));
+        let mut b = alloc_view(AoS::packed(&d, geo.dims.clone()));
+        init(&mut a, &geo);
+        step(&a, &mut b);
+        let lin = geo.obstacle.iter().position(|&o| o).expect("has obstacle");
+        for i in 0..Q {
+            assert_eq!(b.get::<f64>(lin, i), a.get::<f64>(lin, i));
+        }
+        assert_eq!(b.get::<f64>(lin, FLAGS), OBSTACLE);
+    }
+
+    #[test]
+    fn wall_neighbour_pulls_reflection() {
+        // 3x1x1 grid (periodic), cell 1 is a wall: a fluid cell next to
+        // the wall must take its own opposite population for the
+        // blocked link.
+        let dims = crate::array::ArrayDims::from([3, 1, 1]);
+        let mut obstacle = vec![false; 3];
+        obstacle[1] = true;
+        let geo = Geometry { dims: dims.clone(), obstacle };
+        let d = cell_dim();
+        let mut a = alloc_view(AoS::packed(&d, dims.clone()));
+        let mut b = alloc_view(AoS::packed(&d, dims));
+        init(&mut a, &geo);
+        // Tag cell 2's population so we can watch where it goes.
+        a.set::<f64>(2, 1, 0.7); // direction +x of cell 2
+        let m0 = total_mass(&a) - {
+            // exclude the inert wall cell's mass from the comparison
+            (0..Q).map(|i| a.get::<f64>(1, i)).sum::<f64>()
+        };
+        step(&a, &mut b);
+        let m1 = total_mass(&b) - (0..Q).map(|i| b.get::<f64>(1, i)).sum::<f64>();
+        assert!((m0 - m1).abs() < 1e-12, "fluid mass {m0} -> {m1}");
+    }
+
+    #[test]
+    fn flow_develops_along_x() {
+        let geo = Geometry { dims: crate::array::ArrayDims::from([6, 6, 6]), obstacle: vec![false; 216] };
+        let d = cell_dim();
+        let mut a = alloc_view(SoA::multi_blob(&d, geo.dims.clone()));
+        let mut b = alloc_view(SoA::multi_blob(&d, geo.dims.clone()));
+        init(&mut a, &geo);
+        for _ in 0..10 {
+            step(&a, &mut b);
+            std::mem::swap(&mut a, &mut b);
+        }
+        let (_, u) = macroscopic(&a, 0);
+        assert!(u[0] > 0.0, "driven flow should move +x, got {u:?}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Evaluation workloads (paper §4): every substrate the paper's
+//! evaluation depends on, built from scratch.
+//!
+//! * [`nbody`] — all-pairs n-body (paper §4.1, figs 5/6): manually
+//!   written AoS/SoA/AoSoA twins plus layout-generic LLAMA kernels.
+//! * [`lbm`] — D3Q19 Lattice-Boltzmann, the stand-in for SPEC CPU®
+//!   2017 619.lbm_s (paper §4.3, fig 8).
+//! * [`hep`] — CMS-like 100-field event records for the layout-changing
+//!   copy benchmark (paper §4.2, fig 7).
+//! * [`picframe`] — PIConGPU-style supercell particle frame lists
+//!   (paper §4.4, figs 9/10).
+//! * [`rng`] — deterministic SplitMix64 PRNG used by all workloads.
+
+pub mod hep;
+pub mod lbm;
+pub mod nbody;
+pub mod picframe;
+pub mod rng;

@@ -1,0 +1,281 @@
+//! Manually written n-body data structures — the paper's hand-rolled
+//! baselines in fig 5: AoS (`Vec<Particle>`), SoA (seven `Vec<f32>`),
+//! and AoSoA with nested block loops (the loop structure the paper
+//! notes is required for vectorizing AoSoA).
+
+use super::{pp_interaction, ParticleSoA, TIMESTEP};
+
+/// Classic array-of-structs particle, 7 f32 fields (packed: 28 B).
+#[derive(Debug, Clone, Copy, Default)]
+#[repr(C)]
+pub struct Particle {
+    pub pos: [f32; 3],
+    pub vel: [f32; 3],
+    pub mass: f32,
+}
+
+/// Manual AoS implementation.
+#[derive(Debug, Clone)]
+pub struct NBodyAoS {
+    pub particles: Vec<Particle>,
+}
+
+impl NBodyAoS {
+    pub fn from_state(s: &ParticleSoA) -> Self {
+        let particles = (0..s.n())
+            .map(|i| Particle {
+                pos: [s.pos[0][i], s.pos[1][i], s.pos[2][i]],
+                vel: [s.vel[0][i], s.vel[1][i], s.vel[2][i]],
+                mass: s.mass[i],
+            })
+            .collect();
+        NBodyAoS { particles }
+    }
+
+    pub fn to_state(&self) -> ParticleSoA {
+        let n = self.particles.len();
+        let mut s = super::init_particles(0, 0);
+        for d in 0..3 {
+            s.pos[d] = Vec::with_capacity(n);
+            s.vel[d] = Vec::with_capacity(n);
+        }
+        for p in &self.particles {
+            for d in 0..3 {
+                s.pos[d].push(p.pos[d]);
+                s.vel[d].push(p.vel[d]);
+            }
+            s.mass.push(p.mass);
+        }
+        s
+    }
+
+    pub fn update(&mut self) {
+        let n = self.particles.len();
+        for i in 0..n {
+            let pi = self.particles[i];
+            let mut vel = pi.vel;
+            for j in 0..n {
+                let pj = &self.particles[j];
+                pp_interaction(
+                    pi.pos[0], pi.pos[1], pi.pos[2], pj.pos[0], pj.pos[1], pj.pos[2], pj.mass,
+                    &mut vel,
+                );
+            }
+            self.particles[i].vel = vel;
+        }
+    }
+
+    pub fn mv(&mut self) {
+        for p in &mut self.particles {
+            for d in 0..3 {
+                p.pos[d] += p.vel[d] * TIMESTEP;
+            }
+        }
+    }
+}
+
+/// Manual SoA implementation (seven separate arrays — the paper's
+/// "SoA MB" twin).
+#[derive(Debug, Clone)]
+pub struct NBodySoA {
+    pub state: ParticleSoA,
+}
+
+impl NBodySoA {
+    pub fn from_state(s: &ParticleSoA) -> Self {
+        NBodySoA { state: s.clone() }
+    }
+
+    pub fn update(&mut self) {
+        let n = self.state.n();
+        let (px, py, pz) = (&self.state.pos[0], &self.state.pos[1], &self.state.pos[2]);
+        let mass = &self.state.mass;
+        for i in 0..n {
+            let (pix, piy, piz) = (px[i], py[i], pz[i]);
+            let mut vel = [self.state.vel[0][i], self.state.vel[1][i], self.state.vel[2][i]];
+            for j in 0..n {
+                pp_interaction(pix, piy, piz, px[j], py[j], pz[j], mass[j], &mut vel);
+            }
+            self.state.vel[0][i] = vel[0];
+            self.state.vel[1][i] = vel[1];
+            self.state.vel[2][i] = vel[2];
+        }
+    }
+
+    pub fn mv(&mut self) {
+        let n = self.state.n();
+        for d in 0..3 {
+            let (pos, vel) = {
+                // Split borrows of pos[d] / vel[d].
+                let s = &mut self.state;
+                let pos = s.pos[d].as_mut_ptr();
+                let vel = s.vel[d].as_ptr();
+                (pos, vel)
+            };
+            // SAFETY: pos and vel are distinct Vecs; indices < n.
+            unsafe {
+                for i in 0..n {
+                    *pos.add(i) += *vel.add(i) * TIMESTEP;
+                }
+            }
+        }
+    }
+}
+
+/// One AoSoA block of `L` particles: per-field lane arrays.
+#[derive(Debug, Clone)]
+pub struct Block<const L: usize> {
+    pub pos: [[f32; L]; 3],
+    pub vel: [[f32; L]; 3],
+    pub mass: [f32; L],
+}
+
+impl<const L: usize> Default for Block<L> {
+    fn default() -> Self {
+        Block { pos: [[0.0; L]; 3], vel: [[0.0; L]; 3], mass: [0.0; L] }
+    }
+}
+
+/// Manual AoSoA implementation with the two-level loop structure the
+/// paper describes (§4.1: "these use two nested loops ... allowing the
+/// compiler to fully unroll and vectorize").
+#[derive(Debug, Clone)]
+pub struct NBodyAoSoA<const L: usize> {
+    pub blocks: Vec<Block<L>>,
+    pub n: usize,
+}
+
+impl<const L: usize> NBodyAoSoA<L> {
+    pub fn from_state(s: &ParticleSoA) -> Self {
+        let n = s.n();
+        let nblocks = n.div_ceil(L);
+        let mut blocks = vec![Block::<L>::default(); nblocks];
+        for i in 0..n {
+            let (b, l) = (i / L, i % L);
+            for d in 0..3 {
+                blocks[b].pos[d][l] = s.pos[d][i];
+                blocks[b].vel[d][l] = s.vel[d][i];
+            }
+            blocks[b].mass[l] = s.mass[i];
+        }
+        NBodyAoSoA { blocks, n }
+    }
+
+    pub fn to_state(&self) -> ParticleSoA {
+        let mut s = super::init_particles(0, 0);
+        for i in 0..self.n {
+            let (b, l) = (i / L, i % L);
+            for d in 0..3 {
+                s.pos[d].push(self.blocks[b].pos[d][l]);
+                s.vel[d].push(self.blocks[b].vel[d][l]);
+            }
+            s.mass.push(self.blocks[b].mass[l]);
+        }
+        s
+    }
+
+    pub fn update(&mut self) {
+        let nblocks = self.blocks.len();
+        // Tail lanes hold mass 0 -> they contribute sts = 0 exactly.
+        for bi in 0..nblocks {
+            for li in 0..L {
+                let i = bi * L + li;
+                if i >= self.n {
+                    break;
+                }
+                let pix = self.blocks[bi].pos[0][li];
+                let piy = self.blocks[bi].pos[1][li];
+                let piz = self.blocks[bi].pos[2][li];
+                let mut vel = [
+                    self.blocks[bi].vel[0][li],
+                    self.blocks[bi].vel[1][li],
+                    self.blocks[bi].vel[2][li],
+                ];
+                for bj in 0..nblocks {
+                    let blk = &self.blocks[bj];
+                    // Inner loop with compile-time trip count L.
+                    for lj in 0..L {
+                        pp_interaction(
+                            pix,
+                            piy,
+                            piz,
+                            blk.pos[0][lj],
+                            blk.pos[1][lj],
+                            blk.pos[2][lj],
+                            blk.mass[lj],
+                            &mut vel,
+                        );
+                    }
+                }
+                self.blocks[bi].vel[0][li] = vel[0];
+                self.blocks[bi].vel[1][li] = vel[1];
+                self.blocks[bi].vel[2][li] = vel[2];
+            }
+        }
+    }
+
+    pub fn mv(&mut self) {
+        for blk in &mut self.blocks {
+            for d in 0..3 {
+                for l in 0..L {
+                    blk.pos[d][l] += blk.vel[d][l] * TIMESTEP;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::nbody::{init_particles, max_rel_error};
+
+    #[test]
+    fn aos_and_soa_agree() {
+        let s = init_particles(128, 11);
+        let mut aos = NBodyAoS::from_state(&s);
+        let mut soa = NBodySoA::from_state(&s);
+        for _ in 0..2 {
+            aos.update();
+            aos.mv();
+            soa.update();
+            soa.mv();
+        }
+        let e = max_rel_error(&aos.to_state(), &soa.state);
+        assert!(e < 1e-4, "rel err {e}");
+    }
+
+    #[test]
+    fn aosoa_agrees_with_aos() {
+        let s = init_particles(100, 5); // non-multiple of lanes
+        let mut aos = NBodyAoS::from_state(&s);
+        let mut a8 = NBodyAoSoA::<8>::from_state(&s);
+        let mut a16 = NBodyAoSoA::<16>::from_state(&s);
+        aos.update();
+        aos.mv();
+        a8.update();
+        a8.mv();
+        a16.update();
+        a16.mv();
+        assert!(max_rel_error(&aos.to_state(), &a8.to_state()) < 1e-4);
+        assert!(max_rel_error(&aos.to_state(), &a16.to_state()) < 1e-4);
+    }
+
+    #[test]
+    fn move_only_changes_positions() {
+        let s = init_particles(32, 2);
+        let mut aos = NBodyAoS::from_state(&s);
+        aos.mv();
+        let after = aos.to_state();
+        assert_eq!(after.vel, s.vel);
+        assert_eq!(after.mass, s.mass);
+        assert_ne!(after.pos, s.pos);
+    }
+
+    #[test]
+    fn roundtrip_state_conversions() {
+        let s = init_particles(37, 8);
+        assert_eq!(NBodyAoS::from_state(&s).to_state(), s);
+        assert_eq!(NBodyAoSoA::<16>::from_state(&s).to_state(), s);
+    }
+}

@@ -1,0 +1,191 @@
+//! All-pairs n-body simulation (paper §4.1, listing 9, figs 5/6).
+//!
+//! Two phases per timestep:
+//! * **update** — each particle's velocity gains the influence of all
+//!   other particles (compute-bound, O(N²));
+//! * **move** — each particle's position advances by its velocity
+//!   (memory-bound, O(N)).
+//!
+//! The module provides *manually written* AoS / SoA / AoSoA
+//! implementations ([`manual`]) — the paper's hand-rolled baselines —
+//! and *layout-generic* LLAMA implementations ([`llama_impl`]) that run
+//! the identical kernel over any mapping. Fig 5's zero-overhead claim
+//! is "LLAMA == manual twin"; the benches assert it.
+
+pub mod llama_impl;
+pub mod manual;
+
+use crate::record::RecordDim;
+use crate::workloads::rng::SplitMix64;
+
+/// Paper constants (listing 9).
+pub const TIMESTEP: f32 = 0.0001;
+pub const EPS2: f32 = 0.01;
+/// The paper's update problem size (16 Ki particles).
+pub const PROBLEM_SIZE: usize = 16 * 1024;
+
+/// Flat leaf indices of the n-body record dimension (declaration
+/// order): pos.{x,y,z}, vel.{x,y,z}, mass.
+pub const POS_X: usize = 0;
+pub const POS_Y: usize = 1;
+pub const POS_Z: usize = 2;
+pub const VEL_X: usize = 3;
+pub const VEL_Y: usize = 4;
+pub const VEL_Z: usize = 5;
+pub const MASS: usize = 6;
+pub const LEAVES: usize = 7;
+
+/// The 7-float particle record dimension of figs 5–7.
+pub fn particle_dim() -> RecordDim {
+    crate::record_dim! {
+        pos: { x: f32, y: f32, z: f32 },
+        vel: { x: f32, y: f32, z: f32 },
+        mass: f32,
+    }
+}
+
+/// Plain-array particle state used to seed every implementation
+/// identically and to compare results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParticleSoA {
+    pub pos: [Vec<f32>; 3],
+    pub vel: [Vec<f32>; 3],
+    pub mass: Vec<f32>,
+}
+
+impl ParticleSoA {
+    pub fn n(&self) -> usize {
+        self.mass.len()
+    }
+}
+
+/// Deterministic initial conditions (positions in [-1,1)^3, small
+/// velocities, masses around 1).
+pub fn init_particles(n: usize, seed: u64) -> ParticleSoA {
+    let mut rng = SplitMix64::new(seed);
+    let mut p = ParticleSoA {
+        pos: [Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)],
+        vel: [Vec::with_capacity(n), Vec::with_capacity(n), Vec::with_capacity(n)],
+        mass: Vec::with_capacity(n),
+    };
+    for _ in 0..n {
+        for d in 0..3 {
+            p.pos[d].push(rng.range_f32(-1.0, 1.0));
+            p.vel[d].push(rng.range_f32(-0.01, 0.01));
+        }
+        p.mass.push(rng.range_f32(0.5, 1.5));
+    }
+    p
+}
+
+/// The pairwise interaction of listing 9, shared verbatim by every
+/// implementation in this module.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub fn pp_interaction(
+    pix: f32,
+    piy: f32,
+    piz: f32,
+    pjx: f32,
+    pjy: f32,
+    pjz: f32,
+    pjmass: f32,
+    vel: &mut [f32; 3],
+) {
+    let mut dx = pix - pjx;
+    let mut dy = piy - pjy;
+    let mut dz = piz - pjz;
+    dx *= dx;
+    dy *= dy;
+    dz *= dz;
+    let dist_sqr = EPS2 + dx + dy + dz;
+    let dist_sixth = dist_sqr * dist_sqr * dist_sqr;
+    let inv_dist_cube = 1.0 / dist_sixth.sqrt();
+    let sts = pjmass * inv_dist_cube * TIMESTEP;
+    vel[0] += dx * sts;
+    vel[1] += dy * sts;
+    vel[2] += dz * sts;
+}
+
+/// Max relative error between two states (for cross-implementation
+/// validation; f32 all-pairs sums reorder, so exact equality only holds
+/// between identically-structured loops).
+pub fn max_rel_error(a: &ParticleSoA, b: &ParticleSoA) -> f64 {
+    let mut max = 0.0f64;
+    let mut check = |x: &[f32], y: &[f32]| {
+        for (u, v) in x.iter().zip(y) {
+            let denom = u.abs().max(v.abs()).max(1e-12) as f64;
+            let e = (*u as f64 - *v as f64).abs() / denom;
+            if e > max {
+                max = e;
+            }
+        }
+    };
+    for d in 0..3 {
+        check(&a.pos[d], &b.pos[d]);
+        check(&a.vel[d], &b.vel[d]);
+    }
+    check(&a.mass, &b.mass);
+    max
+}
+
+/// Total kinetic energy (diagnostic logged by the examples).
+pub fn kinetic_energy(p: &ParticleSoA) -> f64 {
+    (0..p.n())
+        .map(|i| {
+            let v2 = (p.vel[0][i] as f64).powi(2)
+                + (p.vel[1][i] as f64).powi(2)
+                + (p.vel[2][i] as f64).powi(2);
+            0.5 * p.mass[i] as f64 * v2
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_deterministic_and_bounded() {
+        let a = init_particles(100, 3);
+        let b = init_particles(100, 3);
+        assert_eq!(a, b);
+        assert!(a.pos.iter().flatten().all(|&x| (-1.0..1.0).contains(&x)));
+        assert!(a.mass.iter().all(|&m| (0.5..1.5).contains(&m)));
+    }
+
+    #[test]
+    fn interaction_is_attractive_in_squared_space_and_finite() {
+        // Replicates listing 9 semantics: the "dist" added to the
+        // velocity is component-wise squared, hence non-negative.
+        let mut vel = [0.0f32; 3];
+        pp_interaction(1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 1.0, &mut vel);
+        assert!(vel[0] > 0.0);
+        assert_eq!(vel[1], 0.0);
+        assert!(vel.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn self_interaction_is_finite_thanks_to_eps() {
+        let mut vel = [0.0f32; 3];
+        pp_interaction(0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 1.0, &mut vel);
+        assert!(vel.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn record_dim_shape() {
+        let d = particle_dim();
+        assert_eq!(d.leaf_count(), LEAVES);
+        assert_eq!(d.packed_size(), 28);
+        let info = crate::record::RecordInfo::new(&d);
+        assert_eq!(info.leaf_by_path("pos.x"), Some(POS_X));
+        assert_eq!(info.leaf_by_path("vel.z"), Some(VEL_Z));
+        assert_eq!(info.leaf_by_path("mass"), Some(MASS));
+    }
+
+    #[test]
+    fn energy_positive() {
+        let p = init_particles(50, 9);
+        assert!(kinetic_energy(&p) > 0.0);
+    }
+}

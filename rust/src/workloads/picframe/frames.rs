@@ -1,0 +1,500 @@
+//! Supercell frame lists: a slab arena of fixed-size frames, each
+//! holding particle attributes behind an exchangeable LLAMA mapping
+//! (paper fig 9), plus the drift/exchange sweep benched in fig 10.
+
+use super::{
+    ParticleAttrs, CELL_IDX, FRAME_SIZE, MOM_X, MOM_Y, MOM_Z, POS_X, POS_Y, POS_Z, WEIGHTING,
+};
+use crate::mapping::Mapping;
+use crate::view::{alloc_view, View};
+use crate::workloads::rng::SplitMix64;
+
+/// One particle frame: an attribute view over `FRAME_SIZE` slots plus
+/// the doubly-linked-list pointers of fig 9.
+#[derive(Debug)]
+pub struct Frame<M: Mapping> {
+    pub view: View<M, Vec<u8>>,
+    pub prev: Option<usize>,
+    pub next: Option<usize>,
+    /// Number of used slots; only the *last* frame of a list may be
+    /// partially filled (PIConGPU invariant).
+    pub filled: usize,
+}
+
+/// A supercell's frame list.
+#[derive(Debug, Clone, Default)]
+struct CellList {
+    head: Option<usize>,
+    tail: Option<usize>,
+}
+
+/// The particle store: supercells × frame lists over a frame arena.
+///
+/// `M` must be `Clone` so each new frame instantiates the same mapping
+/// (the layout under test).
+#[derive(Debug)]
+pub struct ParticleStore<M: Mapping + Clone> {
+    proto: M,
+    /// Supercell grid extents.
+    pub grid: [usize; 3],
+    frames: Vec<Option<Frame<M>>>,
+    free: Vec<usize>,
+    cells: Vec<CellList>,
+    particles: usize,
+}
+
+impl<M: Mapping + Clone> ParticleStore<M> {
+    /// `proto`: a mapping over `ArrayDims::linear(FRAME_SIZE)` used for
+    /// every frame. `grid`: supercell grid extents.
+    pub fn new(proto: M, grid: [usize; 3]) -> Self {
+        assert_eq!(proto.dims().count(), FRAME_SIZE, "frame mapping must cover FRAME_SIZE");
+        let ncells = grid[0] * grid[1] * grid[2];
+        ParticleStore {
+            proto,
+            grid,
+            frames: Vec::new(),
+            free: Vec::new(),
+            cells: vec![CellList::default(); ncells],
+            particles: 0,
+        }
+    }
+
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn particle_count(&self) -> usize {
+        self.particles
+    }
+
+    /// Number of live (allocated) frames.
+    pub fn frame_count(&self) -> usize {
+        self.frames.iter().filter(|f| f.is_some()).count()
+    }
+
+    fn alloc_frame(&mut self) -> usize {
+        let frame = Frame {
+            view: alloc_view(self.proto.clone()),
+            prev: None,
+            next: None,
+            filled: 0,
+        };
+        if let Some(idx) = self.free.pop() {
+            self.frames[idx] = Some(frame);
+            idx
+        } else {
+            self.frames.push(Some(frame));
+            self.frames.len() - 1
+        }
+    }
+
+    fn free_frame(&mut self, idx: usize) {
+        self.frames[idx] = None;
+        self.free.push(idx);
+    }
+
+    fn frame(&self, idx: usize) -> &Frame<M> {
+        self.frames[idx].as_ref().expect("stale frame index")
+    }
+
+    fn frame_mut(&mut self, idx: usize) -> &mut Frame<M> {
+        self.frames[idx].as_mut().expect("stale frame index")
+    }
+
+    /// Append a particle to a supercell (fills the tail frame,
+    /// allocating a new one when full).
+    pub fn push(&mut self, cell: usize, p: ParticleAttrs) {
+        let tail = self.cells[cell].tail;
+        let frame_idx = match tail {
+            Some(t) if self.frame(t).filled < FRAME_SIZE => t,
+            _ => {
+                let f = self.alloc_frame();
+                match tail {
+                    Some(t) => {
+                        self.frame_mut(t).next = Some(f);
+                        self.frame_mut(f).prev = Some(t);
+                        self.cells[cell].tail = Some(f);
+                    }
+                    None => {
+                        self.cells[cell].head = Some(f);
+                        self.cells[cell].tail = Some(f);
+                    }
+                }
+                f
+            }
+        };
+        let frame = self.frame_mut(frame_idx);
+        let slot = frame.filled;
+        write_particle(&mut frame.view, slot, &p);
+        frame.filled += 1;
+        self.particles += 1;
+    }
+
+    /// Remove the particle at (frame, slot), keeping the "only the tail
+    /// frame is partial" invariant by swapping in the last particle of
+    /// the cell's tail frame.
+    fn remove(&mut self, cell: usize, frame_idx: usize, slot: usize) {
+        let tail = self.cells[cell].tail.expect("cell has no frames");
+        let last_slot = self.frame(tail).filled - 1;
+        if !(frame_idx == tail && slot == last_slot) {
+            let last = read_particle(&self.frame(tail).view, last_slot);
+            write_particle(&mut self.frame_mut(frame_idx).view, slot, &last);
+        }
+        self.frame_mut(tail).filled -= 1;
+        self.particles -= 1;
+        if self.frame(tail).filled == 0 {
+            // Unlink and free the now-empty tail frame.
+            let prev = self.frame(tail).prev;
+            match prev {
+                Some(p) => {
+                    self.frame_mut(p).next = None;
+                    self.cells[cell].tail = Some(p);
+                }
+                None => {
+                    self.cells[cell].head = None;
+                    self.cells[cell].tail = None;
+                }
+            }
+            self.free_frame(tail);
+        }
+    }
+
+    /// Iterate (frame index, filled) of a cell's frames, head to tail.
+    fn frames_of(&self, cell: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut cur = self.cells[cell].head;
+        while let Some(idx) = cur {
+            let f = self.frame(idx);
+            out.push((idx, f.filled));
+            cur = f.next;
+        }
+        out
+    }
+
+    /// Collect every particle of a cell (diagnostics/tests).
+    pub fn cell_particles(&self, cell: usize) -> Vec<ParticleAttrs> {
+        self.frames_of(cell)
+            .into_iter()
+            .flat_map(|(idx, filled)| {
+                let f = self.frame(idx);
+                (0..filled).map(|s| read_particle(&f.view, s)).collect::<Vec<_>>()
+            })
+            .collect()
+    }
+
+    /// Populate with `per_cell` random particles in every supercell.
+    pub fn populate(&mut self, per_cell: usize, seed: u64) {
+        let mut rng = SplitMix64::new(seed);
+        for cell in 0..self.cells.len() {
+            for _ in 0..per_cell {
+                self.push(
+                    cell,
+                    ParticleAttrs {
+                        pos: [rng.next_f32(), rng.next_f32(), rng.next_f32()],
+                        mom: [
+                            rng.range_f32(-0.3, 0.3),
+                            rng.range_f32(-0.3, 0.3),
+                            rng.range_f32(-0.3, 0.3),
+                        ],
+                        weighting: rng.range_f32(0.5, 1.5),
+                        cell_idx: rng.below(FRAME_SIZE) as i32,
+                    },
+                );
+            }
+        }
+    }
+
+    /// The memory-bound attribute sweep of fig 10: advance every
+    /// particle's position by its momentum (in-supercell coordinates,
+    /// positions may leave [0,1)³ until [`ParticleStore::exchange`]).
+    pub fn drift(&mut self, dt: f32) {
+        for fi in 0..self.frames.len() {
+            if let Some(frame) = self.frames[fi].as_mut() {
+                let n = frame.filled;
+                // Affine fast path (EXPERIMENTS.md §Perf): loop-
+                // invariant cursors instead of per-access mapping calls.
+                if let Some(cur) = frame.view.leaf_cursors_mut() {
+                    for s in 0..n {
+                        // SAFETY: s < filled <= FRAME_SIZE == count.
+                        unsafe {
+                            let x = cur[POS_X].read::<f32>(s) + cur[MOM_X].read::<f32>(s) * dt;
+                            let y = cur[POS_Y].read::<f32>(s) + cur[MOM_Y].read::<f32>(s) * dt;
+                            let z = cur[POS_Z].read::<f32>(s) + cur[MOM_Z].read::<f32>(s) * dt;
+                            cur[POS_X].write::<f32>(s, x);
+                            cur[POS_Y].write::<f32>(s, y);
+                            cur[POS_Z].write::<f32>(s, z);
+                        }
+                    }
+                    continue;
+                }
+                debug_assert!(frame.view.validate().is_ok());
+                for s in 0..n {
+                    // SAFETY: s < FRAME_SIZE over a validated view.
+                    unsafe {
+                        let x = frame.view.get_unchecked::<f32>(s, POS_X)
+                            + frame.view.get_unchecked::<f32>(s, MOM_X) * dt;
+                        let y = frame.view.get_unchecked::<f32>(s, POS_Y)
+                            + frame.view.get_unchecked::<f32>(s, MOM_Y) * dt;
+                        let z = frame.view.get_unchecked::<f32>(s, POS_Z)
+                            + frame.view.get_unchecked::<f32>(s, MOM_Z) * dt;
+                        frame.view.set_unchecked::<f32>(s, POS_X, x);
+                        frame.view.set_unchecked::<f32>(s, POS_Y, y);
+                        frame.view.set_unchecked::<f32>(s, POS_Z, z);
+                    }
+                }
+            }
+        }
+    }
+
+    /// A charge-deposit-like reduction: sum weighting per supercell
+    /// (read-only sweep over two of eight attributes).
+    pub fn deposit(&self) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.cells.len()];
+        for (cell, acc) in out.iter_mut().enumerate() {
+            let mut sum = 0.0f64;
+            for (idx, filled) in self.frames_of(cell) {
+                let f = self.frame(idx);
+                for s in 0..filled {
+                    sum += f.view.get::<f32>(s, WEIGHTING) as f64;
+                }
+            }
+            *acc = sum;
+        }
+        out
+    }
+
+    /// Move particles whose position left [0,1)³ to the neighbouring
+    /// supercell (periodic), wrapping their position — the
+    /// frame-list-churning phase of the PIConGPU pattern.
+    pub fn exchange(&mut self) {
+        let ncells = self.cells.len();
+        for cell in 0..ncells {
+            // Collect movers first (removal swaps particles around).
+            let mut movers: Vec<(usize, usize)> = Vec::new();
+            for (fidx, filled) in self.frames_of(cell) {
+                for s in 0..filled {
+                    let f = self.frame(fidx);
+                    let px = f.view.get::<f32>(s, POS_X);
+                    let py = f.view.get::<f32>(s, POS_Y);
+                    let pz = f.view.get::<f32>(s, POS_Z);
+                    if !(0.0..1.0).contains(&px)
+                        || !(0.0..1.0).contains(&py)
+                        || !(0.0..1.0).contains(&pz)
+                    {
+                        movers.push((fidx, s));
+                    }
+                }
+            }
+            // Remove back-to-front so pending (frame, slot) handles stay
+            // valid under the swap-with-tail removal.
+            movers.sort_by(|a, b| b.cmp(a));
+            for (fidx, s) in movers {
+                let mut p = read_particle(&self.frame(fidx).view, s);
+                self.remove(cell, fidx, s);
+                let target = self.neighbour_cell(cell, &mut p.pos);
+                self.push(target, p);
+            }
+        }
+    }
+
+    /// Destination supercell for an out-of-bounds position; wraps the
+    /// position back into [0,1)³.
+    fn neighbour_cell(&self, cell: usize, pos: &mut [f32; 3]) -> usize {
+        let [gx, gy, gz] = self.grid;
+        let mut c = [cell / (gy * gz), (cell / gz) % gy, cell % gz];
+        let dims = [gx, gy, gz];
+        for d in 0..3 {
+            while pos[d] < 0.0 {
+                pos[d] += 1.0;
+                c[d] = (c[d] + dims[d] - 1) % dims[d];
+            }
+            while pos[d] >= 1.0 {
+                pos[d] -= 1.0;
+                c[d] = (c[d] + 1) % dims[d];
+            }
+        }
+        (c[0] * self.grid[1] + c[1]) * self.grid[2] + c[2]
+    }
+
+    /// Check all frame-list invariants (tests & failure injection).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut counted = 0usize;
+        for (cell, list) in self.cells.iter().enumerate() {
+            let mut cur = list.head;
+            let mut prev: Option<usize> = None;
+            while let Some(idx) = cur {
+                let f =
+                    self.frames[idx].as_ref().ok_or(format!("cell {cell}: freed frame linked"))?;
+                if f.prev != prev {
+                    return Err(format!("cell {cell}: prev link broken at {idx}"));
+                }
+                if f.next.is_some() && f.filled != FRAME_SIZE {
+                    return Err(format!("cell {cell}: non-tail frame {idx} is partial"));
+                }
+                if f.filled == 0 {
+                    return Err(format!("cell {cell}: empty frame {idx} kept"));
+                }
+                counted += f.filled;
+                prev = cur;
+                cur = f.next;
+            }
+            if list.tail != prev {
+                return Err(format!("cell {cell}: tail mismatch"));
+            }
+        }
+        if counted != self.particles {
+            return Err(format!("particle count {counted} != {}", self.particles));
+        }
+        Ok(())
+    }
+}
+
+fn write_particle<M: Mapping>(view: &mut View<M, Vec<u8>>, slot: usize, p: &ParticleAttrs) {
+    view.set::<f32>(slot, POS_X, p.pos[0]);
+    view.set::<f32>(slot, POS_Y, p.pos[1]);
+    view.set::<f32>(slot, POS_Z, p.pos[2]);
+    view.set::<f32>(slot, MOM_X, p.mom[0]);
+    view.set::<f32>(slot, MOM_Y, p.mom[1]);
+    view.set::<f32>(slot, MOM_Z, p.mom[2]);
+    view.set::<f32>(slot, WEIGHTING, p.weighting);
+    view.set::<i32>(slot, CELL_IDX, p.cell_idx);
+}
+
+fn read_particle<M: Mapping>(view: &View<M, Vec<u8>>, slot: usize) -> ParticleAttrs {
+    ParticleAttrs {
+        pos: [
+            view.get::<f32>(slot, POS_X),
+            view.get::<f32>(slot, POS_Y),
+            view.get::<f32>(slot, POS_Z),
+        ],
+        mom: [
+            view.get::<f32>(slot, MOM_X),
+            view.get::<f32>(slot, MOM_Y),
+            view.get::<f32>(slot, MOM_Z),
+        ],
+        weighting: view.get::<f32>(slot, WEIGHTING),
+        cell_idx: view.get::<i32>(slot, CELL_IDX),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::{AoS, AoSoA, SoA};
+    use crate::workloads::picframe::attr_dim;
+
+    fn soa_store(grid: [usize; 3]) -> ParticleStore<SoA> {
+        ParticleStore::new(
+            SoA::multi_blob(&attr_dim(), ArrayDims::linear(FRAME_SIZE)),
+            grid,
+        )
+    }
+
+    #[test]
+    fn push_fills_frames_in_order() {
+        let mut st = soa_store([1, 1, 1]);
+        for i in 0..FRAME_SIZE + 10 {
+            st.push(0, ParticleAttrs { cell_idx: i as i32, ..ParticleAttrs::zero() });
+        }
+        assert_eq!(st.particle_count(), FRAME_SIZE + 10);
+        assert_eq!(st.frame_count(), 2);
+        st.check_invariants().unwrap();
+        let ps = st.cell_particles(0);
+        assert_eq!(ps.len(), FRAME_SIZE + 10);
+        assert_eq!(ps[0].cell_idx, 0);
+        assert_eq!(ps[FRAME_SIZE].cell_idx, FRAME_SIZE as i32);
+    }
+
+    #[test]
+    fn remove_keeps_invariants_and_frees_frames() {
+        let mut st = soa_store([1, 1, 1]);
+        st.populate(FRAME_SIZE * 2 + 5, 3);
+        st.check_invariants().unwrap();
+        // Drain the cell through the public exchange path: give every
+        // particle an out-of-range position, same cell wraps to itself
+        // in a 1-cell grid.
+        st.drift(10.0); // most positions leave [0,1)
+        st.exchange();
+        st.check_invariants().unwrap();
+        assert_eq!(st.particle_count(), FRAME_SIZE * 2 + 5);
+    }
+
+    #[test]
+    fn drift_moves_positions() {
+        let mut st = soa_store([2, 2, 2]);
+        st.push(0, ParticleAttrs { pos: [0.5; 3], mom: [0.1, -0.2, 0.0], ..ParticleAttrs::zero() });
+        st.drift(1.0);
+        let p = st.cell_particles(0)[0];
+        assert!((p.pos[0] - 0.6).abs() < 1e-6);
+        assert!((p.pos[1] - 0.3).abs() < 1e-6);
+        assert_eq!(p.pos[2], 0.5);
+    }
+
+    #[test]
+    fn exchange_moves_across_cells_periodically() {
+        let mut st = soa_store([2, 1, 1]);
+        st.push(0, ParticleAttrs { pos: [1.2, 0.5, 0.5], ..ParticleAttrs::zero() });
+        st.push(0, ParticleAttrs { pos: [-0.3, 0.5, 0.5], ..ParticleAttrs::zero() });
+        st.exchange();
+        st.check_invariants().unwrap();
+        // +x overflow goes to cell 1; -x underflow wraps to cell 1 too
+        // (periodic grid of 2).
+        assert_eq!(st.cell_particles(0).len(), 0);
+        let c1 = st.cell_particles(1);
+        assert_eq!(c1.len(), 2);
+        for p in c1 {
+            assert!((0.0..1.0).contains(&p.pos[0]), "wrapped pos {:?}", p.pos);
+        }
+    }
+
+    #[test]
+    fn conservation_under_many_steps() {
+        let mut st = soa_store([3, 3, 3]);
+        st.populate(100, 17);
+        let total = st.particle_count();
+        let w0: f64 = st.deposit().iter().sum();
+        for _ in 0..5 {
+            st.drift(0.7);
+            st.exchange();
+            st.check_invariants().unwrap();
+        }
+        assert_eq!(st.particle_count(), total);
+        let w1: f64 = st.deposit().iter().sum();
+        assert!((w0 - w1).abs() < 1e-6 * w0.abs().max(1.0), "weight not conserved");
+    }
+
+    #[test]
+    fn layouts_agree_on_deposit() {
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let mut a = ParticleStore::new(SoA::multi_blob(&d, dims.clone()), [2, 2, 2]);
+        let mut b = ParticleStore::new(AoS::aligned(&d, dims.clone()), [2, 2, 2]);
+        let mut c = ParticleStore::new(AoSoA::new(&d, dims.clone(), 32), [2, 2, 2]);
+        for st_seed in [(0usize, 0u64); 1] {
+            let _ = st_seed;
+        }
+        a.populate(300, 5);
+        b.populate(300, 5);
+        c.populate(300, 5);
+        for _ in 0..3 {
+            a.drift(0.4);
+            a.exchange();
+            b.drift(0.4);
+            b.exchange();
+            c.drift(0.4);
+            c.exchange();
+        }
+        assert_eq!(a.deposit(), b.deposit());
+        assert_eq!(a.deposit(), c.deposit());
+    }
+
+    #[test]
+    #[should_panic(expected = "must cover FRAME_SIZE")]
+    fn wrong_frame_extent_rejected() {
+        let _ = ParticleStore::new(
+            SoA::multi_blob(&attr_dim(), ArrayDims::linear(100)),
+            [1, 1, 1],
+        );
+    }
+}

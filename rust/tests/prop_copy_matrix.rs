@@ -1,0 +1,108 @@
+//! Property tests of the copy engine (DESIGN.md §8d): for random
+//! mapping pairs over the same data space and random data, every copy
+//! strategy produces a field-wise-equal destination — and the
+//! dispatcher always picks a valid strategy.
+
+mod prop_support;
+
+use llama::copy::{
+    aosoa_compatible, aosoa_copy, copy, copy_aosoa_parallel, copy_naive, copy_naive_parallel,
+    copy_stdcopy, views_equal, ChunkOrder,
+};
+use llama::prelude::*;
+use llama::workloads::rng::SplitMix64;
+use prop_support::*;
+
+#[test]
+fn prop_all_strategies_equal_on_random_pairs() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xC0B1);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let src_m = gen_mapping(&mut rng, &dim, &dims);
+        let dst_m = gen_mapping(&mut rng, &dim, &dims);
+        let label = format!(
+            "seed {seed}: {} -> {}",
+            src_m.mapping_name(),
+            dst_m.mapping_name()
+        );
+
+        let mut src = alloc_view(src_m);
+        fill_sentinels(&mut src);
+
+        // naive
+        let mut dst = alloc_view(dst_m);
+        copy_naive(&src, &mut dst);
+        assert!(views_equal(&src, &dst), "{label} naive");
+
+        // stdcopy — fresh destination to catch missed writes.
+        zero_blobs(&mut dst);
+        copy_stdcopy(&src, &mut dst);
+        assert!(views_equal(&src, &dst), "{label} stdcopy");
+
+        // parallel naive
+        zero_blobs(&mut dst);
+        copy_naive_parallel(&src, &mut dst, Some(4));
+        assert!(views_equal(&src, &dst), "{label} naive(p)");
+
+        // chunked variants where applicable
+        if aosoa_compatible(src.mapping(), dst.mapping()) {
+            for order in [ChunkOrder::ReadContiguous, ChunkOrder::WriteContiguous] {
+                zero_blobs(&mut dst);
+                aosoa_copy(&src, &mut dst, order);
+                assert!(views_equal(&src, &dst), "{label} aosoa {order:?}");
+                zero_blobs(&mut dst);
+                copy_aosoa_parallel(&src, &mut dst, order, Some(3));
+                assert!(views_equal(&src, &dst), "{label} aosoa(p) {order:?}");
+            }
+        }
+
+        // dispatcher
+        zero_blobs(&mut dst);
+        let method = copy(&src, &mut dst);
+        assert!(views_equal(&src, &dst), "{label} dispatch {method:?}");
+    }
+}
+
+fn zero_blobs<M: Mapping>(v: &mut llama::view::View<M, Vec<u8>>) {
+    let (_, blobs) = v.mapping_and_blobs_mut();
+    for b in blobs {
+        b.fill(0);
+    }
+}
+
+/// Chained copies across three layouts preserve the original data.
+#[test]
+fn prop_copy_chain_roundtrip() {
+    for seed in 0..CASES / 2 {
+        let mut rng = SplitMix64::new(seed ^ 0xCAA1);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let mut a = alloc_view(gen_mapping(&mut rng, &dim, &dims));
+        fill_sentinels(&mut a);
+        let mut b = alloc_view(gen_mapping(&mut rng, &dim, &dims));
+        let mut c = alloc_view(gen_mapping(&mut rng, &dim, &dims));
+        copy(&a, &mut b);
+        copy(&b, &mut c);
+        assert!(views_equal(&a, &c), "seed {seed}: chain broke");
+    }
+}
+
+/// Byteswap views interoperate with every other layout through the
+/// dispatcher (value-preserving, never byte-copying).
+#[test]
+fn prop_byteswap_interop() {
+    for seed in 0..CASES / 3 {
+        let mut rng = SplitMix64::new(seed ^ 0xB5AA);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let mut swapped = alloc_view(Byteswap::new(AoS::packed(&dim, dims.clone())));
+        fill_sentinels(&mut swapped);
+        let mut native = alloc_view(gen_mapping(&mut rng, &dim, &dims));
+        copy(&swapped, &mut native);
+        assert!(views_equal(&swapped, &native), "seed {seed}: swap -> native");
+        let mut back = alloc_view(Byteswap::new(AoS::packed(&dim, dims.clone())));
+        copy(&native, &mut back);
+        assert!(views_equal(&swapped, &back), "seed {seed}: native -> swap");
+    }
+}

@@ -1,0 +1,157 @@
+//! Property tests over randomly generated record dims × array dims ×
+//! mappings (DESIGN.md §8): non-overlap, containment, round-trip — the
+//! invariants that make every storage mapping a valid layout and that
+//! the parallel engines rely on for soundness.
+
+mod prop_support;
+
+use std::collections::HashMap;
+
+use llama::prelude::*;
+use llama::workloads::rng::SplitMix64;
+use prop_support::*;
+
+/// (a) + (b): every (leaf, lin) maps to a byte range inside its blob,
+/// and distinct (leaf, lin) pairs map to disjoint ranges.
+#[test]
+fn prop_non_overlap_and_containment() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let m = gen_mapping(&mut rng, &dim, &dims);
+        let info = m.info().clone();
+
+        let mut used: HashMap<usize, Vec<(usize, usize, usize, usize)>> = HashMap::new();
+        for lin in 0..dims.count() {
+            let slot = m.slot_of_lin(lin);
+            for leaf in 0..info.leaf_count() {
+                let size = info.fields[leaf].size();
+                let (nr, off) = m.blob_nr_and_offset(leaf, slot);
+                assert!(nr < m.blob_count(), "seed {seed}: blob out of range");
+                assert!(
+                    off + size <= m.blob_size(nr),
+                    "seed {seed}: {} leaf {leaf} lin {lin} escapes blob {nr}",
+                    m.mapping_name()
+                );
+                used.entry(nr).or_default().push((off, off + size, leaf, lin));
+            }
+        }
+        for (nr, mut ranges) in used {
+            ranges.sort();
+            for w in ranges.windows(2) {
+                assert!(
+                    w[0].1 <= w[1].0,
+                    "seed {seed}: overlap in blob {nr} of {}: {:?} vs {:?}",
+                    m.mapping_name(),
+                    w[0],
+                    w[1]
+                );
+            }
+        }
+    }
+}
+
+/// (c) round-trip: sentinel bytes written to every (leaf, lin) read
+/// back unchanged everywhere — no cross-talk through any mapping.
+#[test]
+fn prop_sentinel_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x5EED);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let m = gen_mapping(&mut rng, &dim, &dims);
+        let name = m.mapping_name();
+        let info = m.info().clone();
+        let mut view = alloc_view(m);
+        fill_sentinels(&mut view);
+        for lin in 0..view.count() {
+            for leaf in 0..info.leaf_count() {
+                let size = info.fields[leaf].size();
+                let slot = view.mapping().slot_of_lin(lin);
+                let (nr, off) = view.mapping().blob_nr_and_offset(leaf, slot);
+                let got = &view.blobs()[nr].as_bytes()[off..off + size];
+                let expect = sentinel_bytes(leaf, lin, size);
+                assert_eq!(got, expect.as_slice(), "seed {seed}: {name} leaf {leaf} lin {lin}");
+            }
+        }
+    }
+}
+
+/// Total blob bytes are at least the payload (packed size × slot count;
+/// aligned layouts may pad) and bounded by a sane factor.
+#[test]
+fn prop_blob_sizes_bound_payload() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xB10B);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let m = gen_mapping(&mut rng, &dim, &dims);
+        let total: usize = (0..m.blob_count()).map(|b| m.blob_size(b)).sum();
+        let payload = dim.packed_size() * dims.count();
+        assert!(
+            total >= payload,
+            "seed {seed}: {} stores {total} < payload {payload}",
+            m.mapping_name()
+        );
+        // Aligned/tail/Morton padding can inflate storage, but by less
+        // than aligned-record-size per slot-count x 8 (Morton rounds
+        // each extent up to a power of two: < 2^rank <= 8 for rank<=3).
+        let info = m.info().clone();
+        let bound = info.aligned_size.max(info.packed_size) * dims.count() * 8 + 64;
+        assert!(
+            total <= bound,
+            "seed {seed}: {} stores {total} > bound {bound}",
+            m.mapping_name()
+        );
+    }
+}
+
+/// slot_of_nd and slot_of_lin agree through the canonical row-major
+/// delinearization.
+#[test]
+fn prop_nd_lin_consistency() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x11D);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let m = gen_mapping(&mut rng, &dim, &dims);
+        for lin in 0..dims.count() {
+            let idx = dims.delinearize_row_major(lin);
+            assert_eq!(
+                m.slot_of_nd(&idx),
+                m.slot_of_lin(lin),
+                "seed {seed}: {} lin {lin}",
+                m.mapping_name()
+            );
+        }
+    }
+}
+
+/// Instrumentation wrappers (Trace/Heatmap/Byteswap) forward the layout
+/// unchanged.
+#[test]
+fn prop_wrappers_preserve_layout() {
+    for seed in 0..CASES / 2 {
+        let mut rng = SplitMix64::new(seed ^ 0x77AE);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let inner = AoSoA::new(&dim, dims.clone(), 1 + rng.below(8));
+        let traced = Trace::new(inner.clone());
+        let heat = Heatmap::with_granularity(inner.clone(), 1 + rng.below(64));
+        let swapped = Byteswap::new(inner.clone());
+        for lin in 0..dims.count() {
+            let slot = inner.slot_of_lin(lin);
+            for leaf in 0..inner.info().leaf_count() {
+                let want = inner.blob_nr_and_offset(leaf, slot);
+                assert_eq!(traced.blob_nr_and_offset(leaf, slot), want);
+                assert_eq!(heat.blob_nr_and_offset(leaf, slot), want);
+                assert_eq!(swapped.blob_nr_and_offset(leaf, slot), want);
+            }
+        }
+        assert_eq!(
+            traced.report().iter().map(|(_, c)| *c).sum::<u64>() as usize,
+            dims.count() * inner.info().leaf_count()
+        );
+    }
+}

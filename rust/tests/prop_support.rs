@@ -1,0 +1,121 @@
+//! Self-contained property-testing support (proptest is not in the
+//! vendored crate set): a deterministic case generator over random
+//! record dimensions, array dimensions and mappings, plus shrink-free
+//! exhaustive-ish iteration. Each property runs `CASES` generated
+//! cases; failures print the seed for replay.
+
+use llama::prelude::*;
+use llama::workloads::rng::SplitMix64;
+
+pub const CASES: u64 = 60;
+
+/// Generate a random record dimension: 1..=10 fields, nesting depth up
+/// to 3, arrays up to 4 elements, all scalar kinds.
+pub fn gen_record_dim(rng: &mut SplitMix64) -> RecordDim {
+    fn gen_type(rng: &mut SplitMix64, depth: usize) -> Type {
+        let scalars = [
+            Scalar::F32,
+            Scalar::F64,
+            Scalar::I8,
+            Scalar::I16,
+            Scalar::I32,
+            Scalar::I64,
+            Scalar::U8,
+            Scalar::U16,
+            Scalar::U32,
+            Scalar::U64,
+            Scalar::Bool,
+        ];
+        let pick = rng.below(if depth >= 3 { 10 } else { 14 });
+        match pick {
+            0..=9 => Type::Scalar(scalars[rng.below(scalars.len())]),
+            10 | 11 => {
+                let n = 1 + rng.below(3);
+                let fields = (0..n)
+                    .map(|i| Field::new(format!("f{i}"), gen_type(rng, depth + 1)))
+                    .collect();
+                Type::Record(fields)
+            }
+            _ => {
+                let n = 1 + rng.below(4);
+                Type::Array(Box::new(gen_type(rng, depth + 1)), n)
+            }
+        }
+    }
+    let nfields = 1 + rng.below(6);
+    RecordDim {
+        fields: (0..nfields)
+            .map(|i| Field::new(format!("top{i}"), gen_type(rng, 1)))
+            .collect(),
+    }
+}
+
+/// Generate random array dimensions with a bounded record count.
+pub fn gen_dims(rng: &mut SplitMix64) -> ArrayDims {
+    match rng.below(3) {
+        0 => ArrayDims::linear(1 + rng.below(40)),
+        1 => ArrayDims::from([1 + rng.below(8), 1 + rng.below(8)]),
+        _ => ArrayDims::from([1 + rng.below(4), 1 + rng.below(4), 1 + rng.below(4)]),
+    }
+}
+
+/// All storage mappings (injective; instrumentation wrappers excluded),
+/// type-erased for uniform testing.
+pub fn gen_mapping(rng: &mut SplitMix64, dim: &RecordDim, dims: &ArrayDims) -> Box<dyn Mapping> {
+    let k = rng.below(10);
+    match k {
+        0 => Box::new(AoS::aligned(dim, dims.clone())),
+        1 => Box::new(AoS::packed(dim, dims.clone())),
+        2 => Box::new(SoA::multi_blob(dim, dims.clone())),
+        3 => Box::new(SoA::single_blob(dim, dims.clone())),
+        4 | 5 => {
+            let lanes = [1, 2, 3, 4, 8, 16, 32][rng.below(7)];
+            Box::new(AoSoA::new(dim, dims.clone(), lanes))
+        }
+        6 => Box::new(AoS::with_linearizer(dim, dims.clone(), MortonCurve, false)),
+        7 => Box::new(SoA::with_linearizer(dim, dims.clone(), ColMajor, true)),
+        8 if dim.leaf_count() >= 2 => {
+            // Split at a random top-level field.
+            let sel = RecordCoord::new(vec![rng.below(dim.fields.len())]);
+            let inner = rng.below(2) == 0;
+            if inner {
+                Box::new(Split::new(
+                    dim,
+                    dims.clone(),
+                    sel,
+                    |d, ad| SoA::multi_blob(d, ad),
+                    |d, ad| AoS::aligned(d, ad),
+                ))
+            } else {
+                Box::new(Split::new(
+                    dim,
+                    dims.clone(),
+                    sel,
+                    |d, ad| AoS::packed(d, ad),
+                    |d, ad| SoA::single_blob(d, ad),
+                ))
+            }
+        }
+        _ => Box::new(AoS::aligned(dim, dims.clone())),
+    }
+}
+
+/// Write a distinct sentinel into every (leaf, lin); returns a closure
+/// reproducing the expected bytes for verification.
+pub fn sentinel_bytes(leaf: usize, lin: usize, size: usize) -> Vec<u8> {
+    let mut rng = SplitMix64::new((leaf as u64) << 32 | lin as u64 | 0xABCD_0000_0000_0000);
+    (0..size).map(|_| (rng.next_u64() & 0xFF) as u8).collect()
+}
+
+pub fn fill_sentinels<M: Mapping, B: BlobMut>(view: &mut llama::view::View<M, B>) {
+    let info = view.mapping().info().clone();
+    for lin in 0..view.count() {
+        for leaf in 0..info.leaf_count() {
+            let bytes = sentinel_bytes(leaf, lin, info.fields[leaf].size());
+            let (mapping, blobs) = view.mapping_and_blobs_mut();
+            let slot = mapping.slot_of_lin(lin);
+            let (nr, off) = mapping.blob_nr_and_offset(leaf, slot);
+            blobs[nr].as_bytes_mut()[off..off + bytes.len()].copy_from_slice(&bytes);
+        }
+    }
+}

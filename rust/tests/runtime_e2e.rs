@@ -1,0 +1,150 @@
+//! Integration tests over the PJRT runtime: load the AOT artifacts,
+//! execute them, and check numerics against the Rust kernels — the
+//! whole three-layer stack in one test binary.
+//!
+//! These tests are skipped (not failed) when `artifacts/` has not been
+//! built, so `cargo test` works before `make artifacts`; `make test`
+//! always builds artifacts first and therefore always exercises them.
+
+use llama::coordinator::bench::Opts;
+use llama::coordinator::fig6_xla;
+use llama::runtime::{Manifest, Runtime};
+
+fn have_artifacts() -> bool {
+    Manifest::load("artifacts").is_ok()
+}
+
+#[test]
+fn manifest_lists_all_seven_variants() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let m = Manifest::load("artifacts").unwrap();
+    for name in [
+        "nbody_update_soa",
+        "nbody_update_aos",
+        "nbody_update_soa_notile",
+        "nbody_move_soa",
+        "nbody_move_aos",
+        "nbody_step_soa",
+        "nbody_steps_soa",
+    ] {
+        let a = m.find(name).expect(name);
+        assert!(m.path_of(a).exists());
+        assert!(a.n > 0 && a.inputs > 0 && a.outputs > 0);
+    }
+}
+
+#[test]
+fn update_soa_matches_rust_kernel() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let rel = fig6_xla::verify_against_rust(&Opts::default()).unwrap();
+    assert!(rel < 1e-4, "XLA vs Rust rel err {rel}");
+}
+
+#[test]
+fn aos_and_soa_artifacts_agree() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    let n = rt.manifest().find("nbody_update_soa").unwrap().n;
+    let (soa_in, _) = fig6_xla::soa_inputs(n, 31);
+    let refs: Vec<&[f32]> = soa_in.iter().map(|v| v.as_slice()).collect();
+    let soa_out = rt.load("nbody_update_soa").unwrap().run_f32(&refs).unwrap();
+
+    let aos_in = fig6_xla::aos_input(n, 31);
+    let aos_out = rt.load("nbody_update_aos").unwrap().run_f32(&[&aos_in]).unwrap();
+
+    // AoS output column 3+d == SoA output d.
+    for d in 0..3 {
+        for i in 0..n {
+            let a = aos_out[0][i * 7 + 3 + d];
+            let s = soa_out[d][i];
+            let rel = (a - s).abs() / a.abs().max(s.abs()).max(1e-12);
+            assert!(rel < 1e-4, "i={i} d={d}: aos {a} vs soa {s}");
+        }
+    }
+}
+
+#[test]
+fn step_executable_advances_state() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    let exe = rt.load("nbody_step_soa").unwrap();
+    let n = exe.meta().n;
+    let (inputs, state0) = fig6_xla::soa_inputs(n, 77);
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let out = exe.run_f32(&refs).unwrap();
+    assert_eq!(out.len(), 8); // 7 state arrays + energy
+    let energy = out[7][0];
+    assert!(energy.is_finite() && energy > 0.0);
+    // Mass is untouched, positions moved.
+    assert_eq!(out[6], inputs[6]);
+    assert_ne!(out[0], inputs[0]);
+    // Position change equals vel_new * dt.
+    for i in 0..n {
+        let expect = state0.pos[0][i] + out[3][i] * 1e-4;
+        let got = out[0][i];
+        assert!((expect - got).abs() < 1e-5, "i={i}: {expect} vs {got}");
+    }
+}
+
+#[test]
+fn scan_executable_equals_repeated_steps() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    let n = rt.manifest().find("nbody_steps_soa").unwrap().n;
+    let (mut state, _) = fig6_xla::soa_inputs(n, 55);
+
+    // 10 applications of the single-step artifact (drop the energy).
+    {
+        let exe = rt.load("nbody_step_soa").unwrap();
+        for _ in 0..10 {
+            let refs: Vec<&[f32]> = state.iter().map(|v| v.as_slice()).collect();
+            let mut out = exe.run_f32(&refs).unwrap();
+            out.pop();
+            state = out;
+        }
+    }
+    // One application of the 10-step scan artifact.
+    let (orig, _) = fig6_xla::soa_inputs(n, 55);
+    let refs: Vec<&[f32]> = orig.iter().map(|v| v.as_slice()).collect();
+    let scanned = rt.load("nbody_steps_soa").unwrap().run_f32(&refs).unwrap();
+
+    for (a, b) in scanned.iter().zip(&state) {
+        for (x, y) in a.iter().zip(b) {
+            let rel = (x - y).abs() / x.abs().max(y.abs()).max(1e-9);
+            assert!(rel < 1e-4, "scan vs loop: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn wrong_input_arity_is_reported() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rt = Runtime::cpu("artifacts").unwrap();
+    let exe = rt.load("nbody_update_soa").unwrap();
+    let short: Vec<&[f32]> = vec![];
+    let err = exe.run_f32(&short).unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+    // Wrong element count in one input.
+    let bad = vec![0.0f32; 3];
+    let inputs: Vec<&[f32]> = (0..7).map(|_| bad.as_slice()).collect();
+    let err = exe.run_f32(&inputs).unwrap_err().to_string();
+    assert!(err.contains("expected"), "{err}");
+}

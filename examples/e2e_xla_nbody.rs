@@ -13,7 +13,7 @@ use llama::prelude::*;
 use llama::runtime::Runtime;
 use llama::workloads::nbody::{self, llama_impl};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> llama::error::Result<()> {
     let artifacts = std::env::var("LLAMA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let steps: usize = std::env::args()
         .nth(1)
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     };
     let rel = fig6_xla::verify_against_rust(&opts)?;
     println!("L1/L2 (Pallas/JAX via PJRT) vs L3 (Rust kernel): max rel err = {rel:.2e}");
-    anyhow::ensure!(rel < 1e-4, "stack mismatch");
+    llama::ensure!(rel < 1e-4, "stack mismatch");
 
     // 2. LLAMA-managed memory: state lives in a multi-blob SoA view
     //    whose blobs are exactly the f32[N] buffers the artifact wants.

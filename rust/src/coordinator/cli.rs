@@ -2,7 +2,8 @@
 //! the end-to-end XLA path. Hand-rolled argument parsing (no clap in
 //! the vendored set).
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::error::Result;
 
 use super::bench::Opts;
 use super::{fig10_picframe, fig5_nbody, fig6_xla, fig7_copy, fig8_lbm};
@@ -18,6 +19,7 @@ COMMANDS:
   copybench   fig 7: layout-changing copy throughput
   lbm         fig 8: D3Q19 lattice-Boltzmann across layouts
   picframe    fig 10: PIConGPU-style particle frames across layouts
+  bench-fig5  run fig 5 and write the BENCH_fig5.json baseline
   dump        fig 4: write SVG/HTML layout dumps + heatmap
   e2e         end-to-end driver: LLAMA memory -> PJRT n-body steps
   all         run every figure driver (quick mode by default)
@@ -55,7 +57,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
     let mut it = args[1..].iter();
     while let Some(a) = it.next() {
         let mut take = || -> Result<&String> {
-            it.next().ok_or_else(|| anyhow::anyhow!("{a} needs a value\n\n{USAGE}"))
+            it.next().ok_or_else(|| crate::anyhow!("{a} needs a value\n\n{USAGE}"))
         };
         match a.as_str() {
             "--quick" => {
@@ -94,7 +96,7 @@ pub fn run(cli: Cli) -> Result<()> {
         "xla" => {
             let rel = fig6_xla::verify_against_rust(o)?;
             println!("stack correctness: max rel err XLA vs Rust kernel = {rel:.2e}");
-            anyhow::ensure!(rel < 1e-4, "XLA/Rust mismatch");
+            crate::ensure!(rel < 1e-4, "XLA/Rust mismatch");
             emit(&fig6_xla::run(o)?, cli.markdown);
         }
         "copybench" => emit(&fig7_copy::run(o), cli.markdown),
@@ -104,6 +106,11 @@ pub fn run(cli: Cli) -> Result<()> {
             }
         }
         "picframe" => emit(&fig10_picframe::run(o), cli.markdown),
+        "bench-fig5" => {
+            let path = "BENCH_fig5.json";
+            std::fs::write(path, fig5_nbody::baseline_json(o))?;
+            println!("wrote {path}");
+        }
         "dump" => dump(&cli.out_dir)?,
         "e2e" => e2e(o, &cli.out_dir)?,
         "all" => {
@@ -193,7 +200,7 @@ fn e2e(o: &Opts, out_dir: &str) -> Result<()> {
     // Correctness gate first.
     let rel = fig6_xla::verify_against_rust(o)?;
     println!("XLA vs Rust kernel max rel err: {rel:.2e}");
-    anyhow::ensure!(rel < 1e-4, "stack mismatch");
+    crate::ensure!(rel < 1e-4, "stack mismatch");
 
     let exe = rt.load("nbody_step_soa")?;
     let n = exe.meta().n;
@@ -217,11 +224,11 @@ fn e2e(o: &Opts, out_dir: &str) -> Result<()> {
     for (i, e) in energies.iter().enumerate() {
         println!("  step {i:>3}: E_kin = {e:.6}");
     }
-    anyhow::ensure!(
+    crate::ensure!(
         energies.iter().all(|e| e.is_finite() && *e > 0.0),
         "energies must stay finite/positive"
     );
-    anyhow::ensure!(
+    crate::ensure!(
         energies.windows(2).all(|w| w[1] >= w[0] * 0.99),
         "all-pairs update should not lose energy this fast"
     );

@@ -153,6 +153,21 @@ pub fn run(o: &Opts) -> (Table, Table) {
     (update, mv)
 }
 
+/// Serialize a fig 5 run as the `BENCH_fig5.json` baseline document —
+/// the perf trajectory future PRs compare against (regenerate with
+/// `cargo run --release -- bench-fig5`).
+pub fn baseline_json(o: &Opts) -> String {
+    let (update, mv) = run(o);
+    format!(
+        "{{\n  \"figure\": \"fig5_nbody\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
+         \"unit\": \"ms (median)\",\n  \"update\": {},\n  \"move\": {}\n}}\n",
+        if o.quick { "quick" } else { "full" },
+        o.iters,
+        update.to_json(),
+        mv.to_json()
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -169,5 +184,17 @@ mod tests {
         assert_eq!(u.rows[0][2], "1.000");
         let txt = u.to_text();
         assert!(txt.contains("LLAMA SoA MB"));
+    }
+
+    #[test]
+    fn baseline_json_carries_both_tables() {
+        let mut o = Opts::quick();
+        o.n = Some(128);
+        o.iters = 1;
+        let j = baseline_json(&o);
+        assert!(j.contains("\"figure\": \"fig5_nbody\""), "{j}");
+        assert!(j.contains("\"update\": {"), "{j}");
+        assert!(j.contains("\"move\": {"), "{j}");
+        assert!(j.contains("LLAMA AoSoA16"), "{j}");
     }
 }

@@ -13,7 +13,7 @@
 //! *relative* effect of layout and tiling, plus the zero-copy handoff
 //! of LLAMA-managed memory into the executable.
 
-use anyhow::Result;
+use crate::error::Result;
 
 use super::bench::{bench, black_box, Opts};
 use super::report::{fmt_ms, fmt_ratio, Table};

@@ -70,6 +70,37 @@ impl Table {
         out
     }
 
+    /// JSON rendering (hand-rolled — no serde in the vendored crate
+    /// set): `{"title": ..., "headers": [...], "rows": [[...]]}`.
+    /// Consumed by `BENCH_fig5.json` and future perf-trajectory tooling.
+    pub fn to_json(&self) -> String {
+        let esc = |s: &String| {
+            let mut out = String::with_capacity(s.len() + 2);
+            out.push('"');
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out.push('"');
+            out
+        };
+        let arr = |cells: &[String]| {
+            format!("[{}]", cells.iter().map(esc).collect::<Vec<_>>().join(", "))
+        };
+        format!(
+            "{{\"title\": {}, \"headers\": {}, \"rows\": [{}]}}",
+            esc(&self.title),
+            arr(&self.headers),
+            self.rows.iter().map(|r| arr(r)).collect::<Vec<_>>().join(", ")
+        )
+    }
+
     /// CSV rendering.
     pub fn to_csv(&self) -> String {
         let esc = |s: &String| {
@@ -135,6 +166,18 @@ mod tests {
         assert!(md.starts_with("### demo"));
         // header + separator + 2 rows, 4 pipes each.
         assert_eq!(md.matches('|').count(), 4 * 4);
+    }
+
+    #[test]
+    fn json_shape_and_escapes() {
+        let mut t = Table::new("q\"uote", &["a"]);
+        t.row(vec!["line\nbreak".into()]);
+        let j = t.to_json();
+        assert!(j.starts_with("{\"title\": \"q\\\"uote\""), "{j}");
+        assert!(j.contains("\"rows\": [[\"line\\nbreak\"]]"), "{j}");
+        let j = sample().to_json();
+        assert!(j.contains("\"headers\": [\"layout\", \"ms\", \"ratio\"]"), "{j}");
+        assert!(j.contains("[\"SoA MB\", \"6.400\", \"0.640\"]"), "{j}");
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! destination-storage order ([`ChunkOrder::WriteContiguous`], "(w)").
 
 use crate::blob::{Blob, BlobMut};
-use crate::mapping::Mapping;
+use crate::mapping::{LayoutPlan, Mapping};
 use crate::view::View;
 
 /// Traversal order of the chunked copy.
@@ -27,8 +27,9 @@ pub enum ChunkOrder {
     WriteContiguous,
 }
 
-/// Chunked copy between AoSoA-family layouts. Panics if either mapping
-/// is not in the family (check [`super::aosoa_compatible`] first).
+/// Chunked copy between AoSoA-family layouts, driven by the two
+/// compiled [`LayoutPlan`]s. Panics if either plan is not in the family
+/// (check [`super::aosoa_compatible`] first).
 pub fn aosoa_copy<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>, order: ChunkOrder)
 where
     MS: Mapping,
@@ -36,17 +37,34 @@ where
     BS: Blob,
     BD: BlobMut,
 {
+    let sp = src.mapping().plan();
+    let dp = dst.mapping().plan();
+    aosoa_copy_with(src, dst, order, &sp, &dp);
+}
+
+/// [`aosoa_copy`] over plans the caller already compiled (the
+/// dispatcher compiles each side exactly once per copy).
+pub(crate) fn aosoa_copy_with<MS, MD, BS, BD>(
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    order: ChunkOrder,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+) where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: BlobMut,
+{
     debug_assert!(super::same_data_space(src.mapping(), dst.mapping()));
-    let src_lanes = src
-        .mapping()
-        .aosoa_lanes()
+    let src_lanes = sp
+        .chunk_lanes()
         .expect("aosoa_copy: source is not an AoSoA-family layout");
-    let dst_lanes = dst
-        .mapping()
-        .aosoa_lanes()
+    let dst_lanes = dp
+        .chunk_lanes()
         .expect("aosoa_copy: destination is not an AoSoA-family layout");
     assert!(
-        src.mapping().is_native_representation() && dst.mapping().is_native_representation(),
+        sp.native() && dp.native(),
         "aosoa_copy requires native byte representation on both sides"
     );
 
@@ -76,10 +94,12 @@ where
                 let dst_run_end = ((pos / dst_lanes) + 1) * dst_lanes;
                 let end = block_end.min(src_run_end).min(dst_run_end);
                 let len = end - pos;
-                let sslot = src.mapping().slot_of_lin(pos);
-                let (snr, soff) = src.mapping().blob_nr_and_offset(leaf, sslot);
+                // Run starts resolve through the compiled plans; only
+                // generic plans (e.g. curve-ordered packed AoS) pay the
+                // dynamic translation.
+                let (snr, soff) = sp.resolve_with(src.mapping(), leaf, pos);
                 let (dm, dblobs) = dst.mapping_and_blobs_mut();
-                let (dnr, doff) = dm.blob_nr_and_offset(leaf, dm.slot_of_lin(pos));
+                let (dnr, doff) = dp.resolve_with(dm, leaf, pos);
                 let nbytes = len * size;
                 dblobs[dnr].as_bytes_mut()[doff..doff + nbytes]
                     .copy_from_slice(&src.blobs()[snr].as_bytes()[soff..soff + nbytes]);

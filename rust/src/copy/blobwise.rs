@@ -21,6 +21,18 @@ where
         src.mapping().mapping_name(),
         dst.mapping().mapping_name()
     );
+    copy_blobwise_prechecked(src, dst);
+}
+
+/// The per-blob memcpy body; caller has already established layout
+/// identity (the dispatcher, which compiled both plans once).
+pub(crate) fn copy_blobwise_prechecked<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>)
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: BlobMut,
+{
     let nblobs = src.mapping().blob_count();
     let sizes: Vec<usize> = (0..nblobs).map(|b| src.mapping().blob_size(b)).collect();
     let (_, dblobs) = dst.mapping_and_blobs_mut();

@@ -26,7 +26,7 @@ pub mod parallel;
 pub mod stdcopy;
 
 use crate::blob::{Blob, BlobMut};
-use crate::mapping::Mapping;
+use crate::mapping::{AddrPlan, LayoutPlan, Mapping};
 use crate::view::View;
 
 pub use aosoa::{aosoa_copy, ChunkOrder};
@@ -45,32 +45,62 @@ pub enum CopyMethod {
 
 /// True if `src` and `dst` describe the same data space: identical
 /// record dimensions and array extents.
-pub fn same_data_space<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
+pub fn same_data_space<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(src: &MS, dst: &MD) -> bool {
     src.info().dim == dst.info().dim && src.dims() == dst.dims()
 }
 
 /// True if the two mappings produce byte-identical layouts (so a
-/// per-blob memcpy is valid).
+/// per-blob memcpy is valid): same data space, same blob shapes, and
+/// either equal non-generic [`LayoutPlan`]s (the plan fully determines
+/// the byte placement) or — for generic plans, where the closed form is
+/// unavailable — the same mapping identity.
 pub fn layouts_identical<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
-    same_data_space(src, dst)
-        && src.mapping_name() == dst.mapping_name()
+    layouts_identical_with(src, dst, &src.plan(), &dst.plan())
+}
+
+/// [`layouts_identical`] over plans the caller already compiled.
+pub(crate) fn layouts_identical_with<MS: Mapping, MD: Mapping>(
+    src: &MS,
+    dst: &MD,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+) -> bool {
+    if !(same_data_space(src, dst)
         && src.blob_count() == dst.blob_count()
         && (0..src.blob_count()).all(|b| src.blob_size(b) == dst.blob_size(b))
-        && src.is_native_representation() == dst.is_native_representation()
+        && sp.native() == dp.native())
+    {
+        return false;
+    }
+    // Closed-form plans fully determine byte placement and are
+    // authoritative — equal names must not override a plan mismatch.
+    // Only generic plans (no closed form to compare) fall back to
+    // mapping identity by name.
+    let closed_form =
+        !matches!(sp.addr(), AddrPlan::Generic) && !matches!(dp.addr(), AddrPlan::Generic);
+    if closed_form {
+        sp == dp
+    } else {
+        src.mapping_name() == dst.mapping_name()
+    }
+}
+
+/// True if both plans admit the chunked copy: native representation on
+/// both sides and an AoSoA-family lane count each (packed AoS = 1,
+/// AoSoA-L = L, SoA = count).
+pub fn plans_chunk_compatible(src: &LayoutPlan, dst: &LayoutPlan) -> bool {
+    src.native() && dst.native() && src.chunk_lanes().is_some() && dst.chunk_lanes().is_some()
 }
 
 /// True if both mappings are in the AoSoA family with native
 /// representation, enabling the chunked copy.
 pub fn aosoa_compatible<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
-    same_data_space(src, dst)
-        && src.is_native_representation()
-        && dst.is_native_representation()
-        && src.aosoa_lanes().is_some()
-        && dst.aosoa_lanes().is_some()
+    same_data_space(src, dst) && plans_chunk_compatible(&src.plan(), &dst.plan())
 }
 
-/// Layout-aware copy dispatcher (the paper's `llama::copy`): picks the
-/// fastest applicable strategy and returns which one ran.
+/// Layout-aware copy dispatcher (the paper's `llama::copy`): compiles
+/// both mappings into [`LayoutPlan`]s, compares them to pick the
+/// fastest applicable strategy, and returns which one ran.
 ///
 /// Panics if the views do not share a data space.
 pub fn copy<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>) -> CopyMethod
@@ -86,11 +116,15 @@ where
         src.mapping().mapping_name(),
         dst.mapping().mapping_name()
     );
-    if layouts_identical(src.mapping(), dst.mapping()) {
-        copy_blobwise(src, dst);
+    // Compile each side exactly once; every strategy below consumes the
+    // same two plans.
+    let sp = src.mapping().plan();
+    let dp = dst.mapping().plan();
+    if layouts_identical_with(src.mapping(), dst.mapping(), &sp, &dp) {
+        blobwise::copy_blobwise_prechecked(src, dst);
         CopyMethod::Blobwise
-    } else if aosoa_compatible(src.mapping(), dst.mapping()) {
-        aosoa_copy(src, dst, ChunkOrder::ReadContiguous);
+    } else if plans_chunk_compatible(&sp, &dp) {
+        aosoa::aosoa_copy_with(src, dst, ChunkOrder::ReadContiguous, &sp, &dp);
         CopyMethod::AoSoAChunked
     } else {
         copy_naive(src, dst);

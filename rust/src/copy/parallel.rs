@@ -120,12 +120,14 @@ pub fn copy_aosoa_parallel<MS, MD, BS, BD>(
     BD: BlobMut,
 {
     debug_assert!(super::aosoa_compatible(src.mapping(), dst.mapping()));
-    let src_lanes = src.mapping().aosoa_lanes().expect("source not AoSoA-family");
-    let dst_lanes = dst.mapping().aosoa_lanes().expect("destination not AoSoA-family");
+    let sp = src.mapping().plan();
+    let dp = dst.mapping().plan();
+    let src_lanes = sp.chunk_lanes().expect("source not AoSoA-family");
+    let dst_lanes = dp.chunk_lanes().expect("destination not AoSoA-family");
     let n = src.count();
     let threads = threads.unwrap_or_else(default_threads).min(n.max(1));
     if threads <= 1 || n < 1024 {
-        super::aosoa_copy(src, dst, order);
+        super::aosoa::aosoa_copy_with(src, dst, order, &sp, &dp);
         return;
     }
     let info = src.mapping().info().clone();
@@ -153,6 +155,7 @@ pub fn copy_aosoa_parallel<MS, MD, BS, BD>(
         for (t_start, t_end) in ranges {
             let dst_ptrs = &dst_ptrs;
             let sizes = &sizes;
+            let (sp, dp) = (&sp, &dp);
             scope.spawn(move || {
                 let leaves = sizes.len();
                 let mut block_start = t_start;
@@ -167,9 +170,8 @@ pub fn copy_aosoa_parallel<MS, MD, BS, BD>(
                             let dst_run_end = ((pos / dst_lanes) + 1) * dst_lanes;
                             let end = block_end.min(src_run_end).min(dst_run_end);
                             let len = end - pos;
-                            let (snr, soff) =
-                                src.mapping().blob_nr_and_offset(leaf, src.mapping().slot_of_lin(pos));
-                            let (dnr, doff) = dmap.blob_nr_and_offset(leaf, dmap.slot_of_lin(pos));
+                            let (snr, soff) = sp.resolve_with(src.mapping(), leaf, pos);
+                            let (dnr, doff) = dp.resolve_with(dmap, leaf, pos);
                             let nbytes = len * size;
                             let sbytes = src.blobs()[snr].as_bytes();
                             let (dptr, dlen) = dst_ptrs.ptrs[dnr];

@@ -43,6 +43,7 @@ pub mod blob;
 pub mod coordinator;
 pub mod copy;
 pub mod dump;
+pub mod error;
 pub mod mapping;
 #[macro_use]
 pub mod record;
@@ -70,8 +71,8 @@ pub mod prelude {
     };
     pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
     pub use crate::mapping::{
-        recommend, AccessPattern, AoS, AoSoA, Byteswap, Heatmap, Mapping, Null, One,
-        Recommendation, SoA, Split, Trace,
+        recommend, AccessPattern, AddrPlan, AoS, AoSoA, Byteswap, Heatmap, LayoutPlan, Mapping,
+        Null, One, Recommendation, SoA, Split, Trace,
     };
     pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};
     pub use crate::view::{alloc_view, alloc_view_with, OneRecord, ScalarVal, View};

@@ -113,22 +113,18 @@ impl<L: Linearizer> Mapping for AoS<L> {
         )
     }
 
-    fn aosoa_lanes(&self) -> Option<usize> {
-        // Packed AoS == AoSoA with 1 lane (no padding between fields).
-        // Single-element runs stay correct under any slot permutation,
-        // so no row-major restriction is needed here.
-        if self.aligned {
-            None
-        } else {
-            Some(1)
-        }
-    }
-
-    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+    fn plan(&self) -> super::LayoutPlan {
+        // Packed AoS == AoSoA with 1 lane (no padding between fields);
+        // single-element runs stay chunk-correct under any slot
+        // permutation, so chunkability has no row-major restriction.
+        let chunk = if self.aligned { None } else { Some(1) };
         if std::any::TypeId::of::<L>() != std::any::TypeId::of::<RowMajor>() {
-            return None;
+            return super::LayoutPlan::generic(self.dims.count(), true, chunk);
         }
-        Some(
+        super::LayoutPlan::affine(
+            self.dims.count(),
+            true,
+            chunk,
             self.offsets
                 .iter()
                 .map(|&off| AffineLeaf { blob: 0, base: off, stride: self.record_size })

@@ -124,34 +124,44 @@ impl<L: Linearizer> Mapping for AoSoA<L> {
         format!("AoSoA{}({})", self.lanes, self.lin.name())
     }
 
-    fn aosoa_lanes(&self) -> Option<usize> {
-        // Chunked copies walk canonical index runs: only valid when
-        // slot == lin (row-major) or runs degenerate to single elements
-        // (lanes == 1, safe under any slot permutation).
-        if self.lanes == 1
-            || std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>()
-        {
-            Some(self.lanes)
-        } else {
-            None
+    fn plan(&self) -> super::LayoutPlan {
+        // Chunked copies walk canonical index runs: valid when
+        // slot == lin (row-major) or when runs degenerate to single
+        // elements (lanes == 1, safe under any slot permutation).
+        let row_major = std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>();
+        if !row_major {
+            let chunk = if self.lanes == 1 { Some(1) } else { None };
+            return super::LayoutPlan::generic(self.dims.count(), true, chunk);
         }
-    }
-
-    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
-        // Only the degenerate 1-lane case (== packed AoS) is affine.
-        if self.lanes != 1
-            || std::any::TypeId::of::<L>() != std::any::TypeId::of::<RowMajor>()
-        {
-            return None;
+        if self.lanes == 1 {
+            // Degenerate 1-lane case == packed AoS: affine.
+            return super::LayoutPlan::affine(
+                self.dims.count(),
+                true,
+                Some(1),
+                self.info
+                    .fields
+                    .iter()
+                    .map(|f| AffineLeaf {
+                        blob: 0,
+                        base: f.offset_packed,
+                        stride: self.info.packed_size,
+                    })
+                    .collect(),
+            );
         }
-        Some(
-            self.info
-                .fields
+        super::LayoutPlan::piecewise(
+            self.dims.count(),
+            true,
+            self.lanes,
+            self.field_block_off
                 .iter()
-                .map(|f| AffineLeaf {
+                .zip(&self.sizes)
+                .map(|(&off, &size)| super::PiecewiseLeaf {
                     blob: 0,
-                    base: f.offset_packed,
-                    stride: self.info.packed_size,
+                    block_stride: self.block_size,
+                    lane_offset: off,
+                    lane_stride: size,
                 })
                 .collect(),
         )

@@ -69,14 +69,15 @@ impl<M: Mapping> Mapping for Byteswap<M> {
         format!("Byteswap({})", self.inner.mapping_name())
     }
 
-    fn aosoa_lanes(&self) -> Option<usize> {
-        // Chunked copies would copy swapped bytes verbatim — only legal
-        // between two byteswapped views; conservatively disable.
-        None
-    }
-
     fn is_native_representation(&self) -> bool {
         false
+    }
+
+    fn plan(&self) -> super::LayoutPlan {
+        // Chunked copies would move swapped bytes verbatim (only legal
+        // between two byteswapped views) and cursors would bypass the
+        // swap in the accessor layer: non-native, no chunking, generic.
+        super::LayoutPlan::generic(self.inner.dims().count(), false, None)
     }
 }
 

@@ -114,12 +114,15 @@ impl<M: Mapping> Mapping for Heatmap<M> {
         format!("Heatmap({}, g={})", self.inner.mapping_name(), self.granularity)
     }
 
-    fn aosoa_lanes(&self) -> Option<usize> {
-        self.inner.aosoa_lanes()
-    }
-
     fn is_native_representation(&self) -> bool {
         self.inner.is_native_representation()
+    }
+
+    fn plan(&self) -> super::LayoutPlan {
+        // As with Trace: closed-form addressing would bypass the byte
+        // counters, so the plan stays generic.
+        let inner = self.inner.plan();
+        super::LayoutPlan::generic(inner.count(), inner.native(), inner.chunk_lanes())
     }
 }
 

@@ -20,6 +20,7 @@ pub mod byteswap;
 pub mod heatmap;
 pub mod null;
 pub mod one;
+pub mod plan;
 pub mod soa;
 pub mod split;
 pub mod trace;
@@ -37,6 +38,7 @@ pub use byteswap::Byteswap;
 pub use heatmap::Heatmap;
 pub use null::Null;
 pub use one::One;
+pub use plan::{AddrPlan, LayoutPlan, PiecewiseLeaf, PiecewisePlan};
 pub use soa::SoA;
 pub use split::Split;
 pub use trace::Trace;
@@ -91,15 +93,6 @@ pub trait Mapping: Send + Sync {
     /// Human-readable layout name for dumps and reports.
     fn mapping_name(&self) -> String;
 
-    /// If this layout stores each record's fields in repeating groups of
-    /// `L` contiguous scalars per field (AoSoA family), return `L`.
-    /// Used by the layout-aware copy (paper §3.9/§4.2): AoS-packed is
-    /// `Some(1)`, AoSoA-L is `Some(L)`, SoA is `Some(slot_count())`.
-    /// `None` disables the chunked fast path.
-    fn aosoa_lanes(&self) -> Option<usize> {
-        None
-    }
-
     /// True if field values are stored as plain native-endian bytes
     /// (false for e.g. [`Byteswap`]); chunked copies require both sides
     /// to agree.
@@ -107,12 +100,35 @@ pub trait Mapping: Send + Sync {
         true
     }
 
-    /// If every leaf's byte address is affine in the canonical linear
-    /// index — `blob[nr][base + lin * stride]` — return the per-leaf
-    /// rules. Enables the zero-overhead kernel fast path (see
-    /// `mapping::affine`). Default: not affine.
+    /// Compile this mapping into an executable [`LayoutPlan`] — the one
+    /// method a new mapping implements to get every fast path (affine or
+    /// piecewise cursors in the kernels, chunked copies). The default is
+    /// the fully generic plan: correct for any mapping, with all
+    /// accesses routed through [`Mapping::blob_nr_and_offset`].
+    ///
+    /// Contract: any `Some` returned by [`LayoutPlan::resolve`] must
+    /// equal `blob_nr_and_offset(leaf, slot_of_lin(lin))` — i.e.
+    /// closed-form addressing may only be claimed by row-major
+    /// (slot == lin) layouts. Property-tested in
+    /// `rust/tests/prop_mapping_invariants.rs`.
+    fn plan(&self) -> LayoutPlan {
+        LayoutPlan::generic(self.dims().count(), self.is_native_representation(), None)
+    }
+
+    /// If this layout stores each record's fields in repeating groups of
+    /// `L` contiguous scalars per field (AoSoA family), return `L`.
+    /// AoS-packed is `Some(1)`, AoSoA-L is `Some(L)`, SoA is
+    /// `Some(slot_count())`; `None` disables the chunked fast path.
+    /// Derived from [`Mapping::plan`] — do not override.
+    fn aosoa_lanes(&self) -> Option<usize> {
+        self.plan().chunk_lanes()
+    }
+
+    /// Per-leaf rules when every leaf's byte address is affine in the
+    /// canonical linear index — `blob[nr][base + lin * stride]`.
+    /// Derived from [`Mapping::plan`] — do not override.
     fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
-        None
+        self.plan().affine_leaves()
     }
 }
 
@@ -149,6 +165,9 @@ macro_rules! forward_mapping {
             }
             fn mapping_name(&self) -> String {
                 (**self).mapping_name()
+            }
+            fn plan(&self) -> LayoutPlan {
+                (**self).plan()
             }
             fn aosoa_lanes(&self) -> Option<usize> {
                 (**self).aosoa_lanes()

@@ -64,14 +64,11 @@ impl Mapping for Null {
         "Null".to_string()
     }
 
-    /// Null aliases all fields — reads are garbage by design, so it must
-    /// never take part in chunked copies.
-    fn aosoa_lanes(&self) -> Option<usize> {
-        None
-    }
-
     fn is_native_representation(&self) -> bool {
-        // Not a faithful store: exclude from byte-exact copy paths.
+        // Not a faithful store (all fields alias, reads are garbage by
+        // design): exclude from byte-exact copy paths. The derived
+        // default plan is generic with no chunk lanes, so Null never
+        // takes part in chunked copies either.
         false
     }
 }

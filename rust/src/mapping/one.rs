@@ -76,9 +76,13 @@ impl Mapping for One {
         format!("One({})", if self.aligned { "aligned" } else { "packed" })
     }
 
-    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
-        // Every index aliases one record: affine with stride 0.
-        Some(
+    fn plan(&self) -> super::LayoutPlan {
+        // Every index aliases one record: affine with stride 0. Never
+        // chunkable — the aliasing makes runs overlap.
+        super::LayoutPlan::affine(
+            self.dims.count(),
+            true,
+            None,
             self.offsets
                 .iter()
                 .map(|&off| AffineLeaf { blob: 0, base: off, stride: 0 })

@@ -1,0 +1,460 @@
+//! [`LayoutPlan`]: a compiled, self-contained execution recipe for a
+//! mapping (EXPERIMENTS.md §Plan).
+//!
+//! A mapping is a *function* from `(leaf, slot)` to `(blob, offset)`;
+//! hot paths must not call that function per access, because the
+//! mapping object lives behind the same reference as the blobs and LLVM
+//! cannot hoist its table loads (see `mapping::affine`). A `LayoutPlan`
+//! is the closed form of that function, extracted once per mapping:
+//!
+//! * [`AddrPlan::Affine`] — every leaf is `blob[nr][base + lin*stride]`
+//!   (AoS, SoA, One, affine Splits);
+//! * [`AddrPlan::PiecewiseAoSoA`] — leaves repeat in lane-blocks of `L`
+//!   contiguous scalars, `blob[nr][(lin/L)*block_stride + lane_offset +
+//!   (lin%L)*lane_stride]` — covers packed AoS (`L = 1`), AoSoA-L and
+//!   SoA (`L = count`) uniformly, plus Split compositions thereof;
+//! * [`AddrPlan::Generic`] — dynamic translation through the mapping
+//!   object, preserving the semantics of instrumented (Trace, Heatmap),
+//!   represented (Byteswap) and space-filling-curve layouts.
+//!
+//! Besides addressing, a plan carries the two properties the copy
+//! engine dispatches on: [`LayoutPlan::chunk_lanes`] (the AoSoA-family
+//! lane count, valid in canonical index order — possibly present even
+//! when addressing is `Generic`, e.g. packed AoS under a Morton order)
+//! and [`LayoutPlan::native`]. Kernels obtain per-leaf cursors from a
+//! plan via `view::cursor`; the copy engine compares two plans to pick
+//! its strategy. A new mapping gets every fast path by implementing the
+//! one [`super::Mapping::plan`] method.
+
+pub use super::affine::AffineLeaf;
+
+/// One leaf's piecewise-affine address rule:
+/// `blob[nr][(lin / lanes) * block_stride + lane_offset +
+/// (lin % lanes) * lane_stride]` (the lane count lives on the enclosing
+/// [`PiecewisePlan`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PiecewiseLeaf {
+    pub blob: usize,
+    /// Byte distance between consecutive lane-blocks.
+    pub block_stride: usize,
+    /// Byte offset of this leaf's lane group within a block.
+    pub lane_offset: usize,
+    /// Byte distance between consecutive lanes within the group.
+    pub lane_stride: usize,
+}
+
+impl PiecewiseLeaf {
+    /// Lift an affine rule to a piecewise rule at lane count `lanes`:
+    /// `base + lin*stride == (lin/L)*(stride*L) + base + (lin%L)*stride`.
+    pub fn from_affine(a: &AffineLeaf, lanes: usize) -> Self {
+        PiecewiseLeaf {
+            blob: a.blob,
+            block_stride: a.stride * lanes,
+            lane_offset: a.base,
+            lane_stride: a.stride,
+        }
+    }
+}
+
+/// Per-leaf piecewise rules plus their shared lane count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PiecewisePlan {
+    pub lanes: usize,
+    pub leaves: Vec<PiecewiseLeaf>,
+}
+
+/// The address-computation part of a [`LayoutPlan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AddrPlan {
+    /// `blob[nr][base + lin * stride]` per leaf.
+    Affine(Vec<AffineLeaf>),
+    /// Lane-block rules per leaf (packed AoS / AoSoA-L / SoA family).
+    PiecewiseAoSoA(PiecewisePlan),
+    /// Not closed-form: resolve through the mapping object.
+    Generic,
+}
+
+/// A compiled mapping: everything the kernels, cursors and the copy
+/// engine need, with no further calls into the mapping on resolvable
+/// paths. Extract once per `(mapping, blobs)` pair, outside hot loops.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutPlan {
+    count: usize,
+    native: bool,
+    chunk_lanes: Option<usize>,
+    addr: AddrPlan,
+}
+
+impl LayoutPlan {
+    /// Affine plan. `chunk_lanes` is independent of affineness: aligned
+    /// AoS is affine but not chunkable (inter-field padding), One is
+    /// affine but aliasing (never chunkable).
+    pub fn affine(
+        count: usize,
+        native: bool,
+        chunk_lanes: Option<usize>,
+        leaves: Vec<AffineLeaf>,
+    ) -> Self {
+        LayoutPlan { count, native, chunk_lanes, addr: AddrPlan::Affine(leaves) }
+    }
+
+    /// Piecewise plan; lane-blocked layouts are chunk-copyable at their
+    /// own lane count.
+    pub fn piecewise(count: usize, native: bool, lanes: usize, leaves: Vec<PiecewiseLeaf>) -> Self {
+        debug_assert!(lanes > 1, "1-lane layouts are affine; use LayoutPlan::affine");
+        LayoutPlan {
+            count,
+            native,
+            chunk_lanes: Some(lanes),
+            addr: AddrPlan::PiecewiseAoSoA(PiecewisePlan { lanes, leaves }),
+        }
+    }
+
+    /// Generic fallback. `chunk_lanes` may still be present: chunked
+    /// copies only need leaf *runs* to be contiguous, which a curve
+    /// order preserves for 1-element runs.
+    pub fn generic(count: usize, native: bool, chunk_lanes: Option<usize>) -> Self {
+        LayoutPlan { count, native, chunk_lanes, addr: AddrPlan::Generic }
+    }
+
+    /// Canonical record count the plan was compiled for.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Whether stored bytes are plain native-endian values.
+    #[inline]
+    pub fn native(&self) -> bool {
+        self.native
+    }
+
+    /// AoSoA-family lane count for the chunked copy (packed AoS = 1,
+    /// AoSoA-L = L, SoA = count), `None` if runs are not contiguous.
+    #[inline]
+    pub fn chunk_lanes(&self) -> Option<usize> {
+        self.chunk_lanes
+    }
+
+    #[inline]
+    pub fn addr(&self) -> &AddrPlan {
+        &self.addr
+    }
+
+    /// Per-leaf affine rules, if this plan is affine.
+    pub fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+        match &self.addr {
+            AddrPlan::Affine(leaves) => Some(leaves.clone()),
+            _ => None,
+        }
+    }
+
+    /// The piecewise rules, if this plan is lane-blocked.
+    pub fn piecewise(&self) -> Option<&PiecewisePlan> {
+        match &self.addr {
+            AddrPlan::PiecewiseAoSoA(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Resolve `(leaf, lin)` to `(blob, offset)` from the compiled
+    /// rules; `None` for [`AddrPlan::Generic`].
+    #[inline]
+    pub fn resolve(&self, leaf: usize, lin: usize) -> Option<(usize, usize)> {
+        match &self.addr {
+            AddrPlan::Affine(leaves) => {
+                let a = &leaves[leaf];
+                Some((a.blob, a.base + lin * a.stride))
+            }
+            AddrPlan::PiecewiseAoSoA(p) => {
+                let l = &p.leaves[leaf];
+                let block = lin / p.lanes;
+                let lane = lin % p.lanes;
+                Some((
+                    l.blob,
+                    block * l.block_stride + l.lane_offset + lane * l.lane_stride,
+                ))
+            }
+            AddrPlan::Generic => None,
+        }
+    }
+
+    /// Resolve through the plan, falling back to the mapping for
+    /// generic plans (the only place a generic plan pays the dynamic
+    /// translation).
+    #[inline]
+    pub fn resolve_with<M: super::Mapping + ?Sized>(
+        &self,
+        m: &M,
+        leaf: usize,
+        lin: usize,
+    ) -> (usize, usize) {
+        match self.resolve(leaf, lin) {
+            Some(r) => r,
+            None => m.blob_nr_and_offset(leaf, m.slot_of_lin(lin)),
+        }
+    }
+
+    /// Compose two child plans into a Split parent plan: `route[leaf] =
+    /// (in_a, child leaf)`, blob numbers of the B side shifted by
+    /// `a_blobs`. Addressing composes to the strongest common form
+    /// (affine if both affine, a shared-lane piecewise otherwise,
+    /// generic as the floor); chunkability composes to the gcd of the
+    /// children's lane counts (runs of `gcd` lins stay contiguous on a
+    /// layout chunkable at any multiple of it).
+    pub fn compose_split(
+        a: &LayoutPlan,
+        b: &LayoutPlan,
+        route: &[(bool, usize)],
+        a_blobs: usize,
+        native: bool,
+    ) -> LayoutPlan {
+        debug_assert_eq!(a.count, b.count);
+        let count = a.count;
+        let native = native && a.native && b.native;
+        let chunk_lanes = match (a.chunk_lanes, b.chunk_lanes) {
+            (Some(x), Some(y)) => Some(gcd(x, y)),
+            _ => None,
+        };
+
+        let shift = |mut leaf: PiecewiseLeaf, in_a: bool| {
+            if !in_a {
+                leaf.blob += a_blobs;
+            }
+            leaf
+        };
+
+        let addr = match (&a.addr, &b.addr) {
+            (AddrPlan::Affine(la), AddrPlan::Affine(lb)) => AddrPlan::Affine(
+                route
+                    .iter()
+                    .map(|&(in_a, child)| {
+                        if in_a {
+                            la[child]
+                        } else {
+                            let mut l = lb[child];
+                            l.blob += a_blobs;
+                            l
+                        }
+                    })
+                    .collect(),
+            ),
+            // One side lane-blocked: lift the other to the same lane
+            // count when possible (affine lifts to any lane count;
+            // piecewise only matches its own).
+            (AddrPlan::PiecewiseAoSoA(pa), AddrPlan::Affine(lb)) => {
+                AddrPlan::PiecewiseAoSoA(PiecewisePlan {
+                    lanes: pa.lanes,
+                    leaves: route
+                        .iter()
+                        .map(|&(in_a, child)| {
+                            if in_a {
+                                pa.leaves[child]
+                            } else {
+                                shift(PiecewiseLeaf::from_affine(&lb[child], pa.lanes), false)
+                            }
+                        })
+                        .collect(),
+                })
+            }
+            (AddrPlan::Affine(la), AddrPlan::PiecewiseAoSoA(pb)) => {
+                AddrPlan::PiecewiseAoSoA(PiecewisePlan {
+                    lanes: pb.lanes,
+                    leaves: route
+                        .iter()
+                        .map(|&(in_a, child)| {
+                            if in_a {
+                                PiecewiseLeaf::from_affine(&la[child], pb.lanes)
+                            } else {
+                                shift(pb.leaves[child], false)
+                            }
+                        })
+                        .collect(),
+                })
+            }
+            (AddrPlan::PiecewiseAoSoA(pa), AddrPlan::PiecewiseAoSoA(pb))
+                if pa.lanes == pb.lanes =>
+            {
+                AddrPlan::PiecewiseAoSoA(PiecewisePlan {
+                    lanes: pa.lanes,
+                    leaves: route
+                        .iter()
+                        .map(|&(in_a, child)| {
+                            if in_a {
+                                pa.leaves[child]
+                            } else {
+                                shift(pb.leaves[child], false)
+                            }
+                        })
+                        .collect(),
+                })
+            }
+            _ => AddrPlan::Generic,
+        };
+        LayoutPlan { count, native, chunk_lanes, addr }
+    }
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, Byteswap, Heatmap, Mapping, One, SoA, Split, Trace};
+    use crate::record::RecordCoord;
+
+    /// Any Some(resolve) must equal the mapping everywhere.
+    fn check_plan<M: Mapping>(m: &M) {
+        let plan = m.plan();
+        assert_eq!(plan.count(), m.dims().count(), "{}", m.mapping_name());
+        assert_eq!(plan.native(), m.is_native_representation(), "{}", m.mapping_name());
+        for lin in 0..m.dims().count() {
+            for leaf in 0..m.info().leaf_count() {
+                let want = m.blob_nr_and_offset(leaf, m.slot_of_lin(lin));
+                assert_eq!(
+                    plan.resolve_with(m, leaf, lin),
+                    want,
+                    "{} leaf {leaf} lin {lin}",
+                    m.mapping_name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn plans_of_all_storage_mappings_resolve() {
+        let d = particle_dim();
+        let dims = ArrayDims::from([3, 5]);
+        check_plan(&AoS::aligned(&d, dims.clone()));
+        check_plan(&AoS::packed(&d, dims.clone()));
+        check_plan(&SoA::multi_blob(&d, dims.clone()));
+        check_plan(&SoA::single_blob(&d, dims.clone()));
+        check_plan(&One::new(&d, dims.clone()));
+        for lanes in [1, 2, 4, 8, 16] {
+            check_plan(&AoSoA::new(&d, dims.clone(), lanes));
+        }
+    }
+
+    #[test]
+    fn plan_kinds_match_expectations() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(10);
+        assert!(matches!(AoS::aligned(&d, dims.clone()).plan().addr(), AddrPlan::Affine(_)));
+        assert!(matches!(
+            AoSoA::new(&d, dims.clone(), 4).plan().addr(),
+            AddrPlan::PiecewiseAoSoA(_)
+        ));
+        // AoSoA1 degenerates to packed AoS: affine.
+        assert!(matches!(AoSoA::new(&d, dims.clone(), 1).plan().addr(), AddrPlan::Affine(_)));
+        assert!(matches!(
+            Trace::new(AoS::packed(&d, dims.clone())).plan().addr(),
+            AddrPlan::Generic
+        ));
+        assert!(matches!(
+            Heatmap::new(AoS::packed(&d, dims.clone())).plan().addr(),
+            AddrPlan::Generic
+        ));
+        let bs = Byteswap::new(AoS::packed(&d, dims.clone())).plan();
+        assert!(matches!(bs.addr(), AddrPlan::Generic));
+        assert!(!bs.native());
+    }
+
+    #[test]
+    fn chunk_lanes_follow_the_family() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(12);
+        assert_eq!(AoS::packed(&d, dims.clone()).plan().chunk_lanes(), Some(1));
+        assert_eq!(AoS::aligned(&d, dims.clone()).plan().chunk_lanes(), None);
+        assert_eq!(SoA::multi_blob(&d, dims.clone()).plan().chunk_lanes(), Some(12));
+        assert_eq!(AoSoA::new(&d, dims.clone(), 4).plan().chunk_lanes(), Some(4));
+        // One aliases every record: affine, never chunkable.
+        let one = One::new(&d, dims.clone()).plan();
+        assert!(matches!(one.addr(), AddrPlan::Affine(_)));
+        assert_eq!(one.chunk_lanes(), None);
+    }
+
+    #[test]
+    fn split_composes_affine_and_piecewise() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(13); // not a lane multiple: tail blocks
+        // Affine + affine -> affine (pos -> SoA MB, rest -> aligned AoS).
+        let m = Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| SoA::multi_blob(sd, ad),
+            |sd, ad| AoS::aligned(sd, ad),
+        );
+        assert!(matches!(m.plan().addr(), AddrPlan::Affine(_)));
+        check_plan(&m);
+
+        // AoSoA + affine -> piecewise at the AoSoA's lane count.
+        let m = Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        );
+        let plan = m.plan();
+        assert!(matches!(plan.addr(), AddrPlan::PiecewiseAoSoA(p) if p.lanes == 4));
+        check_plan(&m);
+
+        // Affine + AoSoA (B side blob shift exercised).
+        let m = Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoS::packed(sd, ad),
+            |sd, ad| AoSoA::new(sd, ad, 8),
+        );
+        check_plan(&m);
+
+        // Mismatched lane counts -> generic addressing, gcd chunking.
+        let m = Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| AoSoA::new(sd, ad, 6),
+        );
+        let plan = m.plan();
+        assert!(matches!(plan.addr(), AddrPlan::Generic));
+        assert_eq!(plan.chunk_lanes(), Some(2));
+        check_plan(&m);
+    }
+
+    #[test]
+    fn affine_lifts_to_any_lane_count() {
+        let a = AffineLeaf { blob: 2, base: 40, stride: 4 };
+        for lanes in [1usize, 3, 8] {
+            let p = PiecewiseLeaf::from_affine(&a, lanes);
+            for lin in 0..30 {
+                let addr =
+                    (lin / lanes) * p.block_stride + p.lane_offset + (lin % lanes) * p.lane_stride;
+                assert_eq!(addr, a.base + lin * a.stride, "lanes {lanes} lin {lin}");
+            }
+        }
+    }
+
+    #[test]
+    fn curve_layouts_keep_single_lane_chunking_only_when_packed() {
+        use crate::array::MortonCurve;
+        let d = particle_dim();
+        let packed = AoS::with_linearizer(&d, ArrayDims::from([4, 4]), MortonCurve, false);
+        let plan = packed.plan();
+        assert!(matches!(plan.addr(), AddrPlan::Generic));
+        assert_eq!(plan.chunk_lanes(), Some(1));
+        let aligned = AoS::with_linearizer(&d, ArrayDims::from([4, 4]), MortonCurve, true);
+        assert_eq!(aligned.plan().chunk_lanes(), None);
+    }
+}

@@ -130,22 +130,18 @@ impl<L: Linearizer> Mapping for SoA<L> {
         )
     }
 
-    fn aosoa_lanes(&self) -> Option<usize> {
-        // SoA is AoSoA with L = slot count (paper §4.2) — but chunked
-        // copies walk *canonical* index runs, so only the row-major
-        // linearization (slot == lin) is chunk-compatible.
-        if std::any::TypeId::of::<L>() == std::any::TypeId::of::<RowMajor>() {
-            Some(self.slots)
-        } else {
-            None
-        }
-    }
-
-    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
+    fn plan(&self) -> super::LayoutPlan {
+        // SoA is AoSoA with L = slot count (paper §4.2) — but both the
+        // closed-form addressing and the chunked copy walk *canonical*
+        // index runs, so only the row-major linearization (slot == lin)
+        // compiles to more than the generic plan.
         if std::any::TypeId::of::<L>() != std::any::TypeId::of::<RowMajor>() {
-            return None;
+            return super::LayoutPlan::generic(self.dims.count(), true, None);
         }
-        Some(
+        super::LayoutPlan::affine(
+            self.dims.count(),
+            true,
+            Some(self.slots),
             self.sizes
                 .iter()
                 .enumerate()

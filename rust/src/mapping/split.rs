@@ -6,7 +6,7 @@
 
 use std::sync::Arc;
 
-use super::{AffineLeaf, Mapping};
+use super::Mapping;
 use crate::array::ArrayDims;
 use crate::record::{RecordCoord, RecordDim, RecordInfo, Type};
 
@@ -27,6 +27,8 @@ pub struct Split<MA: Mapping, MB: Mapping> {
     a_blobs: usize,
     /// Canonical row-major strides for slot_of_nd.
     strides: Vec<usize>,
+    /// Both children store native-endian bytes.
+    native: bool,
 }
 
 /// Build a flat record dim from a subset of leaves of `info`.
@@ -89,7 +91,8 @@ impl<MA: Mapping, MB: Mapping> Split<MA, MB> {
         }
         let a_blobs = a.blob_count();
         let strides = dims.row_major_strides();
-        Split { info, dims, selectors, a, b, route, a_blobs, strides }
+        let native = a.is_native_representation() && b.is_native_representation();
+        Split { info, dims, selectors, a, b, route, a_blobs, strides, native }
     }
 
     pub fn part_a(&self) -> &MA {
@@ -150,22 +153,21 @@ impl<MA: Mapping, MB: Mapping> Mapping for Split<MA, MB> {
         }
     }
 
-    fn affine_leaves(&self) -> Option<Vec<AffineLeaf>> {
-        let a = self.a.affine_leaves()?;
-        let b = self.b.affine_leaves()?;
-        Some(
-            self.route
-                .iter()
-                .map(|&(in_a, child)| {
-                    if in_a {
-                        a[child]
-                    } else {
-                        let mut l = b[child];
-                        l.blob += self.a_blobs;
-                        l
-                    }
-                })
-                .collect(),
+    fn is_native_representation(&self) -> bool {
+        // A Split is native only if both children are; a mixed Split
+        // (e.g. a Byteswap child) must neither memcpy nor chunk-copy.
+        self.native
+    }
+
+    fn plan(&self) -> super::LayoutPlan {
+        // Compose the children's plans; the B side's blob numbers shift
+        // by the A side's blob count, exactly like blob_nr_and_offset.
+        super::LayoutPlan::compose_split(
+            &self.a.plan(),
+            &self.b.plan(),
+            &self.route,
+            self.a_blobs,
+            self.is_native_representation(),
         )
     }
 

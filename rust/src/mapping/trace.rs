@@ -130,12 +130,16 @@ impl<M: Mapping> Mapping for Trace<M> {
         format!("Trace({})", self.inner.mapping_name())
     }
 
-    fn aosoa_lanes(&self) -> Option<usize> {
-        self.inner.aosoa_lanes()
-    }
-
     fn is_native_representation(&self) -> bool {
         self.inner.is_native_representation()
+    }
+
+    fn plan(&self) -> super::LayoutPlan {
+        // Never expose the inner addressing: closed-form resolution
+        // would bypass the access counters. Chunked copies keep working
+        // (byte moves are not field accesses, as in the C++ original).
+        let inner = self.inner.plan();
+        super::LayoutPlan::generic(inner.count(), inner.native(), inner.chunk_lanes())
     }
 }
 

@@ -3,7 +3,7 @@
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use super::executable::Executable;
 use super::manifest::Manifest;

@@ -1,6 +1,7 @@
 //! [`Executable`]: one compiled model variant with typed run helpers.
 
-use anyhow::{ensure, Context, Result};
+use crate::ensure;
+use crate::error::{Context, Result};
 
 use super::manifest::Artifact;
 

@@ -5,7 +5,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::error::{Context, Result};
 
 /// One AOT artifact's metadata.
 #[derive(Debug, Clone, PartialEq, Eq)]

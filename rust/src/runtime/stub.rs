@@ -1,0 +1,65 @@
+//! Uninhabitable stand-ins for [`Runtime`]/[`Executable`] when the
+//! `xla` feature (vendored PJRT bindings) is off. Constructors return a
+//! descriptive error; every other method is statically unreachable, so
+//! callers compile unchanged and degrade to their "artifacts missing /
+//! runtime skipped" paths.
+
+use std::convert::Infallible;
+use std::path::Path;
+
+use crate::error::Result;
+
+use super::manifest::{Artifact, Manifest};
+
+/// Stub PJRT runtime (build with `--features xla` for the real one).
+pub struct Runtime {
+    never: Infallible,
+}
+
+impl Runtime {
+    pub fn cpu(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        crate::bail!(
+            "PJRT runtime not compiled in: rebuild with `--features xla` \
+             (requires the vendored xla crate, see README.md §Runtime)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        match self.never {}
+    }
+
+    pub fn load(&mut self, _name: &str) -> Result<&Executable> {
+        match self.never {}
+    }
+}
+
+/// Stub compiled artifact.
+pub struct Executable {
+    never: Infallible,
+}
+
+impl Executable {
+    pub fn meta(&self) -> &Artifact {
+        match self.never {}
+    }
+
+    pub fn run_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        match self.never {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructor_reports_missing_feature() {
+        let err = Runtime::cpu("artifacts").err().expect("stub must refuse");
+        assert!(err.to_string().contains("--features xla"), "{err}");
+        assert!(!crate::runtime::available());
+    }
+}

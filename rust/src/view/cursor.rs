@@ -1,22 +1,59 @@
-//! Affine leaf cursors: the zero-overhead kernel fast path
+//! Plan-driven leaf cursors: the zero-overhead kernel fast path
 //! (EXPERIMENTS.md §Perf).
 //!
 //! `View::get/set` route every access through the mapping object, which
 //! lives behind the same reference as the blobs — so LLVM must assume
 //! stores to blob bytes can alias the mapping's offset tables, blocking
 //! hoisting and vectorization (measured 1.8–4.8× vs the hand-written
-//! twins on the fig 5 `move` kernel). A [`LeafCursor`] extracts one
-//! leaf's `(pointer, stride)` pair *once*; kernels then address memory
-//! with loop-invariant bases, and dense (stride == element size) leaves
-//! expose real slices so the autovectorizer sees the same code as the
-//! manual SoA implementation.
+//! twins on the fig 5 `move` kernel). Cursors extract one leaf's
+//! address rule *once* from the mapping's compiled
+//! [`LayoutPlan`](crate::mapping::LayoutPlan); kernels then address
+//! memory with loop-invariant bases:
+//!
+//! * [`LeafCursor`] — affine rule `base + lin * stride`; dense leaves
+//!   (stride == element size) expose real slices, so the autovectorizer
+//!   sees the same code as a manual SoA implementation.
+//! * [`PiecewiseCursor`] — lane-block rule for the AoSoA family; full
+//!   blocks expose dense length-`L` slices, so a lane-blocked kernel
+//!   sees the same inner loop as a manual AoSoA implementation.
+//!
+//! [`View::plan_cursors`]/[`View::plan_cursors_mut`] compile the
+//! mapping once and return the matching cursor set; the [`CursorRead`]/
+//! [`CursorWrite`] traits let one generic kernel body serve both shapes
+//! (monomorphized — no dynamic dispatch on the hot path).
 
 use std::marker::PhantomData;
 
 use crate::blob::{Blob, BlobMut};
-use crate::mapping::Mapping;
+use crate::mapping::plan::{AddrPlan, PiecewiseLeaf};
+use crate::mapping::{AffineLeaf, LayoutPlan, Mapping};
 use crate::view::scalar::ScalarVal;
 use crate::view::view::View;
+
+/// Uniform read access over affine and piecewise cursors.
+pub trait CursorRead: Copy + Send + Sync {
+    fn count(&self) -> usize;
+
+    /// Read the leaf value at canonical index `lin`.
+    ///
+    /// # Safety
+    /// `lin < self.count()` (ranges were validated at construction).
+    unsafe fn read_at<T: ScalarVal>(&self, lin: usize) -> T;
+}
+
+/// Uniform write access over affine and piecewise cursors.
+pub trait CursorWrite: CursorRead {
+    /// Write the leaf value at canonical index `lin`.
+    ///
+    /// # Safety
+    /// `lin < self.count()`; callers must not write the same (leaf,
+    /// lin) concurrently from two threads.
+    unsafe fn write_at<T: ScalarVal>(&self, lin: usize, v: T);
+}
+
+// ---------------------------------------------------------------------
+// Affine cursors
+// ---------------------------------------------------------------------
 
 /// Read-only affine cursor for one leaf.
 #[derive(Debug, Clone, Copy)]
@@ -32,6 +69,40 @@ unsafe impl Send for LeafCursor<'_> {}
 unsafe impl Sync for LeafCursor<'_> {}
 
 impl<'v> LeafCursor<'v> {
+    /// Build one read cursor per leaf from an affine plan over raw blob
+    /// `(pointer, length)` pairs, validating every leaf's full access
+    /// range once so reads can be unchecked. `None` if the plan is not
+    /// affine or a range escapes its blob.
+    ///
+    /// # Safety
+    /// Each pointer must be valid for reads of its stated length for
+    /// the lifetime `'v`.
+    pub unsafe fn from_plan(
+        plan: &LayoutPlan,
+        leaf_sizes: &[usize],
+        blobs: &[(*const u8, usize)],
+    ) -> Option<Vec<LeafCursor<'v>>> {
+        let AddrPlan::Affine(leaves) = plan.addr() else {
+            return None;
+        };
+        let n = plan.count();
+        validate_affine(leaves, leaf_sizes, n, blobs.iter().map(|&(_, len)| len))?;
+        // wrapping_add: for n == 0 the validation is vacuous and `base`
+        // may exceed the (empty) allocation — the pointer is then never
+        // dereferenced, but plain `add` would already be UB to form.
+        Some(
+            leaves
+                .iter()
+                .map(|a| LeafCursor {
+                    ptr: blobs[a.blob].0.wrapping_add(a.base),
+                    stride: a.stride,
+                    count: n,
+                    _view: PhantomData,
+                })
+                .collect(),
+        )
+    }
+
     /// Read the leaf at canonical index `lin`.
     ///
     /// # Safety
@@ -67,6 +138,18 @@ impl<'v> LeafCursor<'v> {
     }
 }
 
+impl CursorRead for LeafCursor<'_> {
+    #[inline]
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    #[inline(always)]
+    unsafe fn read_at<T: ScalarVal>(&self, lin: usize) -> T {
+        self.read(lin)
+    }
+}
+
 /// Mutable affine cursor for one leaf.
 #[derive(Debug, Clone, Copy)]
 pub struct LeafCursorMut<'v> {
@@ -83,6 +166,34 @@ unsafe impl Send for LeafCursorMut<'_> {}
 unsafe impl Sync for LeafCursorMut<'_> {}
 
 impl<'v> LeafCursorMut<'v> {
+    /// Mutable counterpart of [`LeafCursor::from_plan`].
+    ///
+    /// # Safety
+    /// Each pointer must be valid for reads and writes of its stated
+    /// length for `'v`, with no other aliases during `'v`.
+    pub unsafe fn from_plan(
+        plan: &LayoutPlan,
+        leaf_sizes: &[usize],
+        blobs: &[(*mut u8, usize)],
+    ) -> Option<Vec<LeafCursorMut<'v>>> {
+        let AddrPlan::Affine(leaves) = plan.addr() else {
+            return None;
+        };
+        let n = plan.count();
+        validate_affine(leaves, leaf_sizes, n, blobs.iter().map(|&(_, len)| len))?;
+        Some(
+            leaves
+                .iter()
+                .map(|a| LeafCursorMut {
+                    ptr: blobs[a.blob].0.wrapping_add(a.base),
+                    stride: a.stride,
+                    count: n,
+                    _view: PhantomData,
+                })
+                .collect(),
+        )
+    }
+
     /// # Safety
     /// `lin < self.count()`.
     #[inline(always)]
@@ -131,76 +242,462 @@ impl<'v> LeafCursorMut<'v> {
     }
 }
 
-fn affine_ok<M: Mapping>(mapping: &M, leaf_sizes: &[usize]) -> Option<Vec<(usize, usize, usize)>> {
-    let leaves = mapping.affine_leaves()?;
-    if !mapping.is_native_representation() {
-        return None;
+impl CursorRead for LeafCursorMut<'_> {
+    #[inline]
+    fn count(&self) -> usize {
+        self.count
     }
-    let n = mapping.dims().count();
-    let mut out = Vec::with_capacity(leaves.len());
-    for (leaf, a) in leaves.iter().enumerate() {
-        // Validate the whole range once so cursor reads can be
-        // unchecked: base + (n-1)*stride + size <= blob size.
-        let need = if n == 0 { 0 } else { a.base + (n - 1) * a.stride + leaf_sizes[leaf] };
-        if need > mapping.blob_size(a.blob) {
-            return None;
-        }
-        out.push((a.blob, a.base, a.stride));
+
+    #[inline(always)]
+    unsafe fn read_at<T: ScalarVal>(&self, lin: usize) -> T {
+        self.read(lin)
     }
-    Some(out)
 }
 
-impl<M: Mapping, B: Blob> View<M, B> {
-    /// Read-only affine cursors, one per leaf, if the mapping is affine
-    /// (see [`Mapping::affine_leaves`]).
-    pub fn leaf_cursors(&self) -> Option<Vec<LeafCursor<'_>>> {
-        let sizes: Vec<usize> = self.mapping().info().fields.iter().map(|f| f.size()).collect();
-        let rules = affine_ok(self.mapping(), &sizes)?;
-        let n = self.mapping().dims().count();
+impl CursorWrite for LeafCursorMut<'_> {
+    #[inline(always)]
+    unsafe fn write_at<T: ScalarVal>(&self, lin: usize, v: T) {
+        self.write(lin, v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Piecewise (AoSoA-family) cursors
+// ---------------------------------------------------------------------
+
+/// Read-only piecewise cursor for one leaf: addresses
+/// `ptr + (lin / lanes) * block_stride + (lin % lanes) * lane_stride`
+/// with all four integers loop-invariant (the `i -> (i/L, i%L)` split of
+/// paper §4.1, hoisted out of the mapping object).
+#[derive(Debug, Clone, Copy)]
+pub struct PiecewiseCursor<'v> {
+    ptr: *const u8,
+    lanes: usize,
+    block_stride: usize,
+    lane_stride: usize,
+    count: usize,
+    _view: PhantomData<&'v [u8]>,
+}
+
+// SAFETY: read-only pointer into blob bytes borrowed for 'v.
+unsafe impl Send for PiecewiseCursor<'_> {}
+unsafe impl Sync for PiecewiseCursor<'_> {}
+
+macro_rules! piecewise_shared {
+    () => {
+        #[inline]
+        pub fn count(&self) -> usize {
+            self.count
+        }
+
+        #[inline]
+        pub fn lanes(&self) -> usize {
+            self.lanes
+        }
+
+        /// Number of lane-blocks covering `0..count`.
+        #[inline]
+        pub fn blocks(&self) -> usize {
+            self.count.div_ceil(self.lanes)
+        }
+
+        /// Records in block `block` (== `lanes` except for the tail).
+        ///
+        /// Caller contract: `block < self.blocks()`.
+        #[inline]
+        pub fn block_len(&self, block: usize) -> usize {
+            (self.count - block * self.lanes).min(self.lanes)
+        }
+
+        /// True if every block of this leaf is a dense, aligned `[T]`
+        /// run — the precondition of the `block_slice` accessors.
+        pub fn is_dense<T: ScalarVal>(&self) -> bool {
+            self.lane_stride == std::mem::size_of::<T>()
+                && (self.ptr as usize) % std::mem::align_of::<T>() == 0
+                && self.block_stride % std::mem::align_of::<T>() == 0
+        }
+    };
+}
+
+impl<'v> PiecewiseCursor<'v> {
+    /// Build one read cursor per leaf from a piecewise plan (see
+    /// [`LeafCursor::from_plan`] for the contract).
+    ///
+    /// # Safety
+    /// Each pointer must be valid for reads of its stated length for
+    /// `'v`.
+    pub unsafe fn from_plan(
+        plan: &LayoutPlan,
+        leaf_sizes: &[usize],
+        blobs: &[(*const u8, usize)],
+    ) -> Option<Vec<PiecewiseCursor<'v>>> {
+        let AddrPlan::PiecewiseAoSoA(p) = plan.addr() else {
+            return None;
+        };
+        let n = plan.count();
+        validate_piecewise(&p.leaves, p.lanes, leaf_sizes, n, blobs.iter().map(|&(_, len)| len))?;
+        // wrapping_add: see LeafCursor::from_plan (n == 0 case).
         Some(
-            rules
-                .into_iter()
-                .map(|(blob, base, stride)| LeafCursor {
-                    // SAFETY: range validated in affine_ok.
-                    ptr: unsafe { self.blobs()[blob].as_bytes().as_ptr().add(base) },
-                    stride,
+            p.leaves
+                .iter()
+                .map(|l| PiecewiseCursor {
+                    ptr: blobs[l.blob].0.wrapping_add(l.lane_offset),
+                    lanes: p.lanes,
+                    block_stride: l.block_stride,
+                    lane_stride: l.lane_stride,
                     count: n,
                     _view: PhantomData,
                 })
                 .collect(),
         )
+    }
+
+    piecewise_shared!();
+
+    /// # Safety
+    /// `lin < self.count()`.
+    #[inline(always)]
+    pub unsafe fn read<T: ScalarVal>(&self, lin: usize) -> T {
+        debug_assert!(lin < self.count);
+        let addr = (lin / self.lanes) * self.block_stride + (lin % self.lanes) * self.lane_stride;
+        (self.ptr.add(addr) as *const T).read_unaligned()
+    }
+
+    /// Dense slice of one lane-block (the vectorizable inner-loop unit
+    /// of AoSoA kernels).
+    ///
+    /// # Safety
+    /// `block < self.blocks()` and `self.is_dense::<T>()`.
+    #[inline(always)]
+    pub unsafe fn block_slice<T: ScalarVal>(&self, block: usize) -> &'v [T] {
+        debug_assert!(block < self.blocks() && self.is_dense::<T>());
+        std::slice::from_raw_parts(
+            self.ptr.add(block * self.block_stride) as *const T,
+            self.block_len(block),
+        )
+    }
+}
+
+impl CursorRead for PiecewiseCursor<'_> {
+    #[inline]
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    #[inline(always)]
+    unsafe fn read_at<T: ScalarVal>(&self, lin: usize) -> T {
+        self.read(lin)
+    }
+}
+
+/// Mutable piecewise cursor for one leaf.
+#[derive(Debug, Clone, Copy)]
+pub struct PiecewiseCursorMut<'v> {
+    ptr: *mut u8,
+    lanes: usize,
+    block_stride: usize,
+    lane_stride: usize,
+    count: usize,
+    _view: PhantomData<&'v mut [u8]>,
+}
+
+// SAFETY: as for LeafCursorMut.
+unsafe impl Send for PiecewiseCursorMut<'_> {}
+unsafe impl Sync for PiecewiseCursorMut<'_> {}
+
+impl<'v> PiecewiseCursorMut<'v> {
+    /// Mutable counterpart of [`PiecewiseCursor::from_plan`].
+    ///
+    /// # Safety
+    /// Each pointer must be valid for reads and writes of its stated
+    /// length for `'v`, with no other aliases during `'v`.
+    pub unsafe fn from_plan(
+        plan: &LayoutPlan,
+        leaf_sizes: &[usize],
+        blobs: &[(*mut u8, usize)],
+    ) -> Option<Vec<PiecewiseCursorMut<'v>>> {
+        let AddrPlan::PiecewiseAoSoA(p) = plan.addr() else {
+            return None;
+        };
+        let n = plan.count();
+        validate_piecewise(&p.leaves, p.lanes, leaf_sizes, n, blobs.iter().map(|&(_, len)| len))?;
+        Some(
+            p.leaves
+                .iter()
+                .map(|l| PiecewiseCursorMut {
+                    ptr: blobs[l.blob].0.wrapping_add(l.lane_offset),
+                    lanes: p.lanes,
+                    block_stride: l.block_stride,
+                    lane_stride: l.lane_stride,
+                    count: n,
+                    _view: PhantomData,
+                })
+                .collect(),
+        )
+    }
+
+    piecewise_shared!();
+
+    /// # Safety
+    /// `lin < self.count()`.
+    #[inline(always)]
+    pub unsafe fn read<T: ScalarVal>(&self, lin: usize) -> T {
+        debug_assert!(lin < self.count);
+        let addr = (lin / self.lanes) * self.block_stride + (lin % self.lanes) * self.lane_stride;
+        (self.ptr.add(addr) as *const T).read_unaligned()
+    }
+
+    /// # Safety
+    /// `lin < self.count()`; no concurrent writers to the same slot.
+    #[inline(always)]
+    pub unsafe fn write<T: ScalarVal>(&self, lin: usize, v: T) {
+        debug_assert!(lin < self.count);
+        let addr = (lin / self.lanes) * self.block_stride + (lin % self.lanes) * self.lane_stride;
+        (self.ptr.add(addr) as *mut T).write_unaligned(v)
+    }
+
+    /// Dense read-only slice of one lane-block.
+    ///
+    /// # Safety
+    /// `block < self.blocks()` and `self.is_dense::<T>()`.
+    #[inline(always)]
+    pub unsafe fn block_slice<T: ScalarVal>(&self, block: usize) -> &'v [T] {
+        debug_assert!(block < self.blocks() && self.is_dense::<T>());
+        std::slice::from_raw_parts(
+            self.ptr.add(block * self.block_stride) as *const T,
+            self.block_len(block),
+        )
+    }
+
+    /// Dense mutable slice of one lane-block.
+    ///
+    /// # Safety
+    /// `block < self.blocks()`, `self.is_dense::<T>()`, and at most one
+    /// live slice per (leaf, block); distinct leaves never overlap.
+    #[inline(always)]
+    pub unsafe fn block_slice_mut<T: ScalarVal>(&self, block: usize) -> &'v mut [T] {
+        debug_assert!(block < self.blocks() && self.is_dense::<T>());
+        std::slice::from_raw_parts_mut(
+            self.ptr.add(block * self.block_stride) as *mut T,
+            self.block_len(block),
+        )
+    }
+
+    /// Downgrade to a read-only cursor.
+    pub fn as_read(&self) -> PiecewiseCursor<'v> {
+        PiecewiseCursor {
+            ptr: self.ptr,
+            lanes: self.lanes,
+            block_stride: self.block_stride,
+            lane_stride: self.lane_stride,
+            count: self.count,
+            _view: PhantomData,
+        }
+    }
+}
+
+impl CursorRead for PiecewiseCursorMut<'_> {
+    #[inline]
+    fn count(&self) -> usize {
+        self.count
+    }
+
+    #[inline(always)]
+    unsafe fn read_at<T: ScalarVal>(&self, lin: usize) -> T {
+        self.read(lin)
+    }
+}
+
+impl CursorWrite for PiecewiseCursorMut<'_> {
+    #[inline(always)]
+    unsafe fn write_at<T: ScalarVal>(&self, lin: usize, v: T) {
+        self.write(lin, v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Validation (runs once per extraction, outside hot loops)
+// ---------------------------------------------------------------------
+
+/// `a + b * c` with overflow failing closed (validation then declines
+/// the plan and the view keeps the generic accessor path). Overflow
+/// must not wrap: `Mapping::plan` is a safe method, and a buggy plan
+/// whose range computation wrapped small would hand out-of-bounds
+/// cursors to safe callers.
+fn acc(a: usize, b: usize, c: usize) -> Option<usize> {
+    a.checked_add(b.checked_mul(c)?)
+}
+
+/// Per-leaf worst-case byte needs of an affine plan; `None` if any leaf
+/// escapes its blob.
+fn validate_affine(
+    leaves: &[AffineLeaf],
+    sizes: &[usize],
+    n: usize,
+    lens: impl Iterator<Item = usize>,
+) -> Option<()> {
+    let lens: Vec<usize> = lens.collect();
+    for (leaf, a) in leaves.iter().enumerate() {
+        let need = if n == 0 {
+            0
+        } else {
+            acc(acc(sizes[leaf], n - 1, a.stride)?, 1, a.base)?
+        };
+        if a.blob >= lens.len() || need > lens[a.blob] {
+            return None;
+        }
+    }
+    Some(())
+}
+
+/// Exact worst-case byte needs of a piecewise plan: the maximum offset
+/// over `lin in 0..n` is attained in the last (possibly partial) block
+/// or at the last lane of the second-to-last (full) block.
+fn validate_piecewise(
+    leaves: &[PiecewiseLeaf],
+    lanes: usize,
+    sizes: &[usize],
+    n: usize,
+    lens: impl Iterator<Item = usize>,
+) -> Option<()> {
+    if lanes == 0 {
+        return None;
+    }
+    let lens: Vec<usize> = lens.collect();
+    let nb = n.div_ceil(lanes);
+    for (leaf, l) in leaves.iter().enumerate() {
+        let need = if n == 0 {
+            0
+        } else {
+            let base = acc(sizes[leaf], 1, l.lane_offset)?;
+            let tail = acc(
+                acc(base, (n - 1) % lanes, l.lane_stride)?,
+                nb - 1,
+                l.block_stride,
+            )?;
+            let full = if nb >= 2 {
+                acc(
+                    acc(base, lanes - 1, l.lane_stride)?,
+                    nb - 2,
+                    l.block_stride,
+                )?
+            } else {
+                0
+            };
+            tail.max(full)
+        };
+        if l.blob >= lens.len() || need > lens[l.blob] {
+            return None;
+        }
+    }
+    Some(())
+}
+
+// ---------------------------------------------------------------------
+// View extraction
+// ---------------------------------------------------------------------
+
+/// Read cursors compiled from a view's [`LayoutPlan`].
+pub enum PlanCursors<'v> {
+    Affine(Vec<LeafCursor<'v>>),
+    Piecewise(Vec<PiecewiseCursor<'v>>),
+    /// Non-native representation, generic addressing, or a plan whose
+    /// ranges do not fit the actual blobs: keep the accessor path.
+    Generic,
+}
+
+/// Mutable cursors compiled from a view's [`LayoutPlan`].
+pub enum PlanCursorsMut<'v> {
+    Affine(Vec<LeafCursorMut<'v>>),
+    Piecewise(Vec<PiecewiseCursorMut<'v>>),
+    Generic,
+}
+
+impl<M: Mapping, B: Blob> View<M, B> {
+    /// Compile the mapping once and extract read cursors for every leaf.
+    pub fn plan_cursors(&self) -> PlanCursors<'_> {
+        let plan = self.mapping().plan();
+        if !plan.native() {
+            return PlanCursors::Generic;
+        }
+        let sizes: Vec<usize> = self.mapping().info().fields.iter().map(|f| f.size()).collect();
+        let blobs: Vec<(*const u8, usize)> = self
+            .blobs()
+            .iter()
+            .map(|b| {
+                let s = b.as_bytes();
+                (s.as_ptr(), s.len())
+            })
+            .collect();
+        // SAFETY: the pointers borrow self's blobs for the returned
+        // cursors' lifetime.
+        unsafe {
+            if let Some(cur) = LeafCursor::from_plan(&plan, &sizes, &blobs) {
+                return PlanCursors::Affine(cur);
+            }
+            if let Some(cur) = PiecewiseCursor::from_plan(&plan, &sizes, &blobs) {
+                return PlanCursors::Piecewise(cur);
+            }
+        }
+        PlanCursors::Generic
+    }
+
+    /// Read-only affine cursors, one per leaf, if the mapping compiles
+    /// to an affine plan (see [`crate::mapping::Mapping::plan`]).
+    pub fn leaf_cursors(&self) -> Option<Vec<LeafCursor<'_>>> {
+        match self.plan_cursors() {
+            PlanCursors::Affine(cur) => Some(cur),
+            _ => None,
+        }
     }
 }
 
 impl<M: Mapping, B: BlobMut> View<M, B> {
+    /// Compile the mapping once and extract mutable cursors for every
+    /// leaf.
+    pub fn plan_cursors_mut(&mut self) -> PlanCursorsMut<'_> {
+        let plan = self.mapping().plan();
+        if !plan.native() {
+            return PlanCursorsMut::Generic;
+        }
+        let sizes: Vec<usize> = self.mapping().info().fields.iter().map(|f| f.size()).collect();
+        let (_, blobs) = self.mapping_and_blobs_mut();
+        let blobs: Vec<(*mut u8, usize)> = blobs
+            .iter_mut()
+            .map(|b| {
+                let s = b.as_bytes_mut();
+                (s.as_mut_ptr(), s.len())
+            })
+            .collect();
+        // SAFETY: the pointers exclusively borrow self's blobs for the
+        // returned cursors' lifetime.
+        unsafe {
+            if let Some(cur) = LeafCursorMut::from_plan(&plan, &sizes, &blobs) {
+                return PlanCursorsMut::Affine(cur);
+            }
+            if let Some(cur) = PiecewiseCursorMut::from_plan(&plan, &sizes, &blobs) {
+                return PlanCursorsMut::Piecewise(cur);
+            }
+        }
+        PlanCursorsMut::Generic
+    }
+
     /// Mutable affine cursors, one per leaf.
     pub fn leaf_cursors_mut(&mut self) -> Option<Vec<LeafCursorMut<'_>>> {
-        let sizes: Vec<usize> = self.mapping().info().fields.iter().map(|f| f.size()).collect();
-        let rules = affine_ok(self.mapping(), &sizes)?;
-        let n = self.mapping().dims().count();
-        let (_, blobs) = self.mapping_and_blobs_mut();
-        // Collect raw base pointers first (one &mut traversal).
-        let bases: Vec<*mut u8> = blobs.iter_mut().map(|b| b.as_bytes_mut().as_mut_ptr()).collect();
-        Some(
-            rules
-                .into_iter()
-                .map(|(blob, base, stride)| LeafCursorMut {
-                    // SAFETY: range validated in affine_ok.
-                    ptr: unsafe { bases[blob].add(base) },
-                    stride,
-                    count: n,
-                    _view: PhantomData,
-                })
-                .collect(),
-        )
+        match self.plan_cursors_mut() {
+            PlanCursorsMut::Affine(cur) => Some(cur),
+            _ => None,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
     use crate::array::ArrayDims;
     use crate::mapping::test_support::particle_dim;
-    use crate::mapping::{AoS, AoSoA, Byteswap, SoA};
+    use crate::mapping::{AoS, AoSoA, Byteswap, SoA, Split};
+    use crate::record::RecordCoord;
     use crate::view::alloc_view;
 
     #[test]
@@ -260,11 +757,111 @@ mod tests {
     }
 
     #[test]
-    fn non_affine_views_return_none() {
+    fn piecewise_cursors_agree_with_accessors() {
+        let d = particle_dim();
+        // 13 is not a lane multiple: exercises the tail block.
+        for lanes in [2usize, 4, 8, 16] {
+            let mut v = alloc_view(AoSoA::new(&d, ArrayDims::linear(13), lanes));
+            for i in 0..13 {
+                v.set::<f32>(i, 1, i as f32 * 0.5); // pos.x
+                v.set::<f64>(i, 4, -(i as f64)); // mass
+            }
+            let PlanCursors::Piecewise(cur) = v.plan_cursors() else {
+                panic!("AoSoA{lanes} should compile to a piecewise plan");
+            };
+            assert_eq!(cur[1].lanes(), lanes);
+            assert_eq!(cur[1].blocks(), 13usize.div_ceil(lanes));
+            for i in 0..13 {
+                // SAFETY: i < count.
+                unsafe {
+                    assert_eq!(cur[1].read::<f32>(i), i as f32 * 0.5, "lanes {lanes} i {i}");
+                    assert_eq!(cur[4].read::<f64>(i), -(i as f64));
+                }
+            }
+            // Dense block slices reproduce the same values.
+            assert!(cur[1].is_dense::<f32>());
+            let mut seen = Vec::new();
+            for b in 0..cur[1].blocks() {
+                // SAFETY: b < blocks, dense checked.
+                seen.extend_from_slice(unsafe { cur[1].block_slice::<f32>(b) });
+            }
+            let expect: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+            assert_eq!(seen, expect, "lanes {lanes}");
+        }
+    }
+
+    #[test]
+    fn piecewise_mut_cursor_write_through() {
+        let d = particle_dim();
+        let mut v = alloc_view(AoSoA::new(&d, ArrayDims::linear(11), 4));
+        {
+            let PlanCursorsMut::Piecewise(cur) = v.plan_cursors_mut() else {
+                panic!("expected piecewise cursors");
+            };
+            for i in 0..11 {
+                // SAFETY: i < count.
+                unsafe { cur[2].write::<f32>(i, 100.0 + i as f32) };
+            }
+        }
+        for i in 0..11 {
+            assert_eq!(v.get::<f32>(i, 2), 100.0 + i as f32);
+        }
+    }
+
+    #[test]
+    fn split_of_aosoa_gets_piecewise_cursors() {
+        let d = particle_dim();
+        let mut v = alloc_view(Split::new(
+            &d,
+            ArrayDims::linear(10),
+            RecordCoord::new(vec![1]), // pos -> AoSoA4, rest -> SoA MB
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        ));
+        for i in 0..10 {
+            v.set::<f32>(i, 1, i as f32); // pos.x (side A)
+            v.set::<f64>(i, 4, 2.0 * i as f64); // mass (side B, blob-shifted)
+        }
+        let PlanCursors::Piecewise(cur) = v.plan_cursors() else {
+            panic!("Split(AoSoA, SoA) should compose to a piecewise plan");
+        };
+        for i in 0..10 {
+            // SAFETY: i < count.
+            unsafe {
+                assert_eq!(cur[1].read::<f32>(i), i as f32);
+                assert_eq!(cur[4].read::<f64>(i), 2.0 * i as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_views_extract_cursors_without_reads() {
+        // n == 0: validation is vacuous and base offsets point past the
+        // empty blobs — construction must still be sound (wrapping_add)
+        // and kernels see count 0 / blocks 0 and never read.
+        let d = particle_dim();
+        let v = alloc_view(AoSoA::new(&d, ArrayDims::linear(0), 4));
+        let PlanCursors::Piecewise(cur) = v.plan_cursors() else {
+            panic!("empty AoSoA still compiles to a piecewise plan");
+        };
+        assert_eq!(cur.len(), 8);
+        assert_eq!(cur[7].count(), 0);
+        assert_eq!(cur[7].blocks(), 0);
+        let v = alloc_view(SoA::single_blob(&d, ArrayDims::linear(0)));
+        let cur = v.leaf_cursors().expect("empty SoA is still affine");
+        assert!(cur.iter().all(|c| c.count() == 0));
+    }
+
+    #[test]
+    fn non_native_views_return_generic() {
         let d = particle_dim();
         let v = alloc_view(AoSoA::new(&d, ArrayDims::linear(8), 4));
+        // Piecewise, not affine:
         assert!(v.leaf_cursors().is_none());
-        let v = alloc_view(Byteswap::new(AoS::packed(&d, ArrayDims::linear(8))));
+        assert!(matches!(v.plan_cursors(), PlanCursors::Piecewise(_)));
+        let mut v = alloc_view(Byteswap::new(AoS::packed(&d, ArrayDims::linear(8))));
         assert!(v.leaf_cursors().is_none());
+        assert!(matches!(v.plan_cursors(), PlanCursors::Generic));
+        assert!(matches!(v.plan_cursors_mut(), PlanCursorsMut::Generic));
     }
 }

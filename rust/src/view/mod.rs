@@ -11,7 +11,10 @@ pub mod view;
 pub mod virtual_record;
 pub mod virtual_view;
 
-pub use cursor::{LeafCursor, LeafCursorMut};
+pub use cursor::{
+    CursorRead, CursorWrite, LeafCursor, LeafCursorMut, PiecewiseCursor, PiecewiseCursorMut,
+    PlanCursors, PlanCursorsMut,
+};
 pub use iter::RecordIter;
 pub use one_record::OneRecord;
 pub use scalar::ScalarVal;

@@ -314,9 +314,12 @@ mod tests {
         let mut v = alloc_view(Byteswap::new(AoS::packed(&particle_dim(), ArrayDims::linear(2))));
         v.set::<f32>(0, POS_X, 1.0f32);
         assert_eq!(v.get::<f32>(0, POS_X), 1.0);
-        // Raw bytes must hold the swapped representation.
+        // Raw bytes must hold the opposite-endian representation.
         let raw = &v.blobs()[0][2..6];
-        assert_eq!(raw, 1.0f32.to_be_bytes()); // on little-endian hosts
+        #[cfg(target_endian = "little")]
+        assert_eq!(raw, 1.0f32.to_be_bytes());
+        #[cfg(target_endian = "big")]
+        assert_eq!(raw, 1.0f32.to_le_bytes());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 use super::{equilibrium, Geometry, E, FLAGS, FLUID, OBSTACLE, OMEGA, OPP, Q};
 use crate::blob::BlobMut;
 use crate::mapping::Mapping;
-use crate::view::{LeafCursor, LeafCursorMut, View};
+use crate::view::cursor::{CursorRead, CursorWrite, PlanCursors, PlanCursorsMut};
+use crate::view::View;
 
 /// Initialize a view to uniform equilibrium (rho=1, u=0) and write the
 /// flag field from the geometry.
@@ -59,16 +60,19 @@ fn wrap(v: i64, n: i64) -> usize {
     }
 }
 
-/// Affine-cursor slab kernel (EXPERIMENTS.md §Perf): all per-access
-/// mapping calls (offset tables, Split routing) are replaced by
-/// loop-invariant `base + lin * stride` cursors extracted once per
-/// step. AoS, SoA and (nested) Split layouts take this path.
+/// Plan-cursor slab kernel (EXPERIMENTS.md §Perf): all per-access
+/// mapping calls (offset tables, Split routing, the AoSoA `i/L, i%L`
+/// split through the mapping object) are replaced by loop-invariant
+/// cursors extracted once per step from the mapping's compiled
+/// [`crate::mapping::LayoutPlan`]. Generic over the cursor shape, so
+/// AoS/SoA/Split (affine) and AoSoA (piecewise) monomorphize to their
+/// own tight kernels.
 ///
 /// # Safety
 /// Cursors cover `0..nx*ny*nz`; concurrent callers use disjoint slabs.
-unsafe fn step_slab_cursors(
-    src: &[LeafCursor<'_>],
-    dst: &[LeafCursorMut<'_>],
+unsafe fn step_slab_cursors<R: CursorRead, W: CursorWrite>(
+    src: &[R],
+    dst: &[W],
     nx: usize,
     ny: usize,
     nz: usize,
@@ -80,12 +84,12 @@ unsafe fn step_slab_cursors(
         for y in 0..ny {
             for z in 0..nz {
                 let lin = (x * ny + y) * nz + z;
-                let flags = src[FLAGS].read::<f64>(lin);
+                let flags = src[FLAGS].read_at::<f64>(lin);
                 if flags == OBSTACLE {
                     for i in 0..Q {
-                        dst[i].write::<f64>(lin, src[i].read::<f64>(lin));
+                        dst[i].write_at::<f64>(lin, src[i].read_at::<f64>(lin));
                     }
-                    dst[FLAGS].write::<f64>(lin, flags);
+                    dst[FLAGS].write_at::<f64>(lin, flags);
                     continue;
                 }
                 let mut f = [0.0f64; Q];
@@ -96,10 +100,10 @@ unsafe fn step_slab_cursors(
                     let sy = wrap(y as i64 - E[i][1] as i64, nyi);
                     let sz = wrap(z as i64 - E[i][2] as i64, nzi);
                     let slin = (sx * ny + sy) * nz + sz;
-                    let fi = if src[FLAGS].read::<f64>(slin) == OBSTACLE {
-                        src[OPP[i]].read::<f64>(lin)
+                    let fi = if src[FLAGS].read_at::<f64>(slin) == OBSTACLE {
+                        src[OPP[i]].read_at::<f64>(lin)
                     } else {
-                        src[i].read::<f64>(slin)
+                        src[i].read_at::<f64>(slin)
                     };
                     f[i] = fi;
                     rho += fi;
@@ -114,9 +118,9 @@ unsafe fn step_slab_cursors(
                 u[0] += ACCEL;
                 for i in 0..Q {
                     let feq = equilibrium(i, rho, u);
-                    dst[i].write::<f64>(lin, f[i] + OMEGA * (feq - f[i]));
+                    dst[i].write_at::<f64>(lin, f[i] + OMEGA * (feq - f[i]));
                 }
-                dst[FLAGS].write::<f64>(lin, flags);
+                dst[FLAGS].write_at::<f64>(lin, flags);
             }
         }
     }
@@ -198,17 +202,47 @@ unsafe fn step_slab<MS: Mapping, MD: Mapping, B: BlobMut>(
 }
 
 /// Serial stream-collide step: pull from `src` into `dst` (ping-pong
-/// buffers like SPEC lbm).
+/// buffers like SPEC lbm). Both views' mappings are compiled to
+/// [`crate::mapping::LayoutPlan`]s once; any combination of affine and
+/// piecewise plans runs the cursor kernel, only generic plans
+/// (instrumented/curve layouts) pay per-access translation.
 pub fn step<MS: Mapping, MD: Mapping, B: BlobMut>(src: &View<MS, B>, dst: &mut View<MD, B>) {
     let d = src.mapping().dims().extents();
     let (nx, ny, nz) = (d[0], d[1], d[2]);
-    if src.leaf_cursors().is_some() {
-        if let Some(dst_cur) = dst.leaf_cursors_mut() {
-            let src_cur = src.leaf_cursors().unwrap();
-            // SAFETY: cursors validated; single caller, whole range.
-            unsafe { step_slab_cursors(&src_cur, &dst_cur, nx, ny, nz, 0, nx) };
-            return;
+    match src.plan_cursors() {
+        PlanCursors::Affine(s) => return step_with_src(&s, src, dst, nx, ny, nz),
+        PlanCursors::Piecewise(s) => return step_with_src(&s, src, dst, nx, ny, nz),
+        PlanCursors::Generic => {}
+    }
+    debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
+    // SAFETY: single caller, whole range.
+    unsafe { step_slab(src, dst as *mut _, nx, ny, nz, 0, nx) };
+}
+
+/// Second dispatch stage: source cursors in hand, compile the
+/// destination's plan.
+fn step_with_src<R, MS, MD, B>(
+    s: &[R],
+    src: &View<MS, B>,
+    dst: &mut View<MD, B>,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+) where
+    R: CursorRead,
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut,
+{
+    match dst.plan_cursors_mut() {
+        // SAFETY: cursors validated; single caller, whole range.
+        PlanCursorsMut::Affine(d) => {
+            return unsafe { step_slab_cursors(s, &d, nx, ny, nz, 0, nx) };
         }
+        PlanCursorsMut::Piecewise(d) => {
+            return unsafe { step_slab_cursors(s, &d, nx, ny, nz, 0, nx) };
+        }
+        PlanCursorsMut::Generic => {}
     }
     debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
     // SAFETY: single caller, whole range.
@@ -230,28 +264,76 @@ where
         step(src, dst);
         return;
     }
-    // Affine fast path: extract cursors once, then fan the slabs out.
-    if src.leaf_cursors().is_some() && dst.leaf_cursors_mut().is_some() {
-        let src_cur = src.leaf_cursors().unwrap();
-        let dst_cur = dst.leaf_cursors_mut().unwrap();
-        let per = nx.div_ceil(threads);
-        std::thread::scope(|scope| {
-            for t in 0..threads {
-                let x0 = t * per;
-                let x1 = ((t + 1) * per).min(nx);
-                if x0 >= x1 {
-                    break;
-                }
-                let src_cur = &src_cur;
-                let dst_cur = &dst_cur;
-                scope.spawn(move || {
-                    // SAFETY: disjoint slabs -> disjoint writes.
-                    unsafe { step_slab_cursors(src_cur, dst_cur, nx, ny, nz, x0, x1) };
-                });
-            }
-        });
-        return;
+    match src.plan_cursors() {
+        PlanCursors::Affine(s) => return par_with_src(&s, src, dst, nx, ny, nz, threads),
+        PlanCursors::Piecewise(s) => return par_with_src(&s, src, dst, nx, ny, nz, threads),
+        PlanCursors::Generic => {}
     }
+    step_parallel_generic(src, dst, nx, ny, nz, threads);
+}
+
+/// Second dispatch stage of the parallel step.
+fn par_with_src<R, MS, MD, B>(
+    s: &[R],
+    src: &View<MS, B>,
+    dst: &mut View<MD, B>,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    threads: usize,
+) where
+    R: CursorRead,
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut + Sync,
+{
+    match dst.plan_cursors_mut() {
+        PlanCursorsMut::Affine(d) => return par_slabs(s, &d, nx, ny, nz, threads),
+        PlanCursorsMut::Piecewise(d) => return par_slabs(s, &d, nx, ny, nz, threads),
+        PlanCursorsMut::Generic => {}
+    }
+    step_parallel_generic(src, dst, nx, ny, nz, threads);
+}
+
+/// Fan cursor slabs out over `threads` workers.
+fn par_slabs<R: CursorRead, W: CursorWrite>(
+    src: &[R],
+    dst: &[W],
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    threads: usize,
+) {
+    let per = nx.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let x0 = t * per;
+            let x1 = ((t + 1) * per).min(nx);
+            if x0 >= x1 {
+                break;
+            }
+            scope.spawn(move || {
+                // SAFETY: disjoint slabs -> disjoint writes.
+                unsafe { step_slab_cursors(src, dst, nx, ny, nz, x0, x1) };
+            });
+        }
+    });
+}
+
+/// Parallel step through the generic accessor path (plans without
+/// closed-form addressing).
+fn step_parallel_generic<MS, MD, B>(
+    src: &View<MS, B>,
+    dst: &mut View<MD, B>,
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    threads: usize,
+) where
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut + Sync,
+{
     debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
     struct DstPtr<M: Mapping, B: BlobMut>(*mut View<M, B>);
     // SAFETY: workers write disjoint slabs (disjoint lin ranges →

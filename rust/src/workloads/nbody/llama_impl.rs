@@ -6,6 +6,7 @@
 use super::{pp_interaction, ParticleSoA, MASS, POS_X, POS_Y, POS_Z, TIMESTEP, VEL_X, VEL_Y, VEL_Z};
 use crate::blob::BlobMut;
 use crate::mapping::Mapping;
+use crate::view::cursor::{CursorWrite, PiecewiseCursorMut, PlanCursorsMut};
 use crate::view::View;
 
 /// Load plain-array state into a LLAMA view of any mapping.
@@ -43,13 +44,18 @@ pub fn store_state<M: Mapping, B: BlobMut>(view: &View<M, B>) -> ParticleSoA {
 }
 
 /// The update phase over any mapping — single flat loop, exactly the
-/// structure of paper listing 9 (which is why AoSoA mappings pay the
-/// `i -> (i/L, i%L)` split here; see [`update_blocked`]).
+/// structure of paper listing 9. The mapping's compiled
+/// [`LayoutPlan`](crate::mapping::LayoutPlan) selects the kernel:
+/// affine cursors (AoS, SoA, affine Splits), piecewise cursors with a
+/// lane-blocked inner loop (AoSoA — no per-access `i/L, i%L` through
+/// the mapping object), or the generic accessor path (instrumented and
+/// curve layouts).
 pub fn update<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
     let n = view.count();
-    if let Some(cur) = view.leaf_cursors_mut() {
-        update_affine(&cur, n);
-        return;
+    match view.plan_cursors_mut() {
+        PlanCursorsMut::Affine(cur) => return update_affine(&cur, n),
+        PlanCursorsMut::Piecewise(cur) => return update_piecewise(&cur, n),
+        PlanCursorsMut::Generic => {}
     }
     debug_assert!(view.validate().is_ok());
     for i in 0..n {
@@ -117,8 +123,26 @@ fn update_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize) {
         }
         return;
     }
+    update_cursors(cur, n);
+}
+
+/// Piecewise-cursor update for AoSoA-family plans: the j-stream walks
+/// lane-blocks whose dense slices vectorize like the manual AoSoA twin,
+/// with the `(i/L, i%L)` split hoisted per block instead of per access.
+fn update_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize) {
+    let dense = cur[POS_X].is_dense::<f32>()
+        && cur[POS_Y].is_dense::<f32>()
+        && cur[POS_Z].is_dense::<f32>()
+        && cur[MASS].is_dense::<f32>();
+    if !dense {
+        return update_cursors(cur, n);
+    }
+    let blocks = cur[POS_X].blocks();
     for i in 0..n {
-        // SAFETY: i, j < n == cursor count.
+        // SAFETY: i < n == cursor count; b < blocks with dense leaves
+        // checked above. Block-ascending × lane-ascending is exactly the
+        // flat j order, so results stay bit-identical to every other
+        // layout (asserted in tests).
         unsafe {
             let pix = cur[POS_X].read::<f32>(i);
             let piy = cur[POS_Y].read::<f32>(i);
@@ -128,21 +152,51 @@ fn update_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize) {
                 cur[VEL_Y].read::<f32>(i),
                 cur[VEL_Z].read::<f32>(i),
             ];
+            for b in 0..blocks {
+                let xs = cur[POS_X].block_slice::<f32>(b);
+                let ys = cur[POS_Y].block_slice::<f32>(b);
+                let zs = cur[POS_Z].block_slice::<f32>(b);
+                let ms = cur[MASS].block_slice::<f32>(b);
+                for k in 0..xs.len() {
+                    pp_interaction(pix, piy, piz, xs[k], ys[k], zs[k], ms[k], &mut vel);
+                }
+            }
+            cur[VEL_X].write::<f32>(i, vel[0]);
+            cur[VEL_Y].write::<f32>(i, vel[1]);
+            cur[VEL_Z].write::<f32>(i, vel[2]);
+        }
+    }
+}
+
+/// Cursor update shared by the non-dense affine and piecewise paths:
+/// loop-invariant bases, flat j-stream.
+fn update_cursors<C: CursorWrite>(cur: &[C], n: usize) {
+    for i in 0..n {
+        // SAFETY: i, j < n == cursor count.
+        unsafe {
+            let pix = cur[POS_X].read_at::<f32>(i);
+            let piy = cur[POS_Y].read_at::<f32>(i);
+            let piz = cur[POS_Z].read_at::<f32>(i);
+            let mut vel = [
+                cur[VEL_X].read_at::<f32>(i),
+                cur[VEL_Y].read_at::<f32>(i),
+                cur[VEL_Z].read_at::<f32>(i),
+            ];
             for j in 0..n {
                 pp_interaction(
                     pix,
                     piy,
                     piz,
-                    cur[POS_X].read::<f32>(j),
-                    cur[POS_Y].read::<f32>(j),
-                    cur[POS_Z].read::<f32>(j),
-                    cur[MASS].read::<f32>(j),
+                    cur[POS_X].read_at::<f32>(j),
+                    cur[POS_Y].read_at::<f32>(j),
+                    cur[POS_Z].read_at::<f32>(j),
+                    cur[MASS].read_at::<f32>(j),
                     &mut vel,
                 );
             }
-            cur[VEL_X].write::<f32>(i, vel[0]);
-            cur[VEL_Y].write::<f32>(i, vel[1]);
-            cur[VEL_Z].write::<f32>(i, vel[2]);
+            cur[VEL_X].write_at::<f32>(i, vel[0]);
+            cur[VEL_Y].write_at::<f32>(i, vel[1]);
+            cur[VEL_Z].write_at::<f32>(i, vel[2]);
         }
     }
 }
@@ -240,47 +294,19 @@ pub fn update_tiled<M: Mapping, B: BlobMut>(view: &mut View<M, B>, tile: usize) 
 
 /// The move phase over any mapping.
 ///
-/// Perf (EXPERIMENTS.md §Perf): routes through the affine cursor fast
-/// path when the mapping allows — dense (SoA) leaves become real slice
-/// loops that LLVM vectorizes exactly like the manual twin; strided
-/// (AoS) leaves get loop-invariant base pointers. Non-affine mappings
-/// (AoSoA, instrumented) keep the generic accessor path.
+/// Perf (EXPERIMENTS.md §Perf): the compiled plan selects the kernel.
+/// Dense affine (SoA) leaves become real slice loops that LLVM
+/// vectorizes exactly like the manual twin; strided affine (AoS, Split)
+/// leaves get loop-invariant base pointers; AoSoA plans run lane-block
+/// slices — the same vectorizable inner loop as the manual AoSoA twin,
+/// with no per-access `blob_nr_and_offset`. Only instrumented/curve
+/// layouts keep the generic accessor path.
 pub fn mv<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
     let n = view.count();
-    if let Some(cur) = view.leaf_cursors_mut() {
-        // Dense? (all six position/velocity leaves stride == 4)
-        // SAFETY: one slice per distinct leaf; leaves don't overlap.
-        let dense = unsafe {
-            (
-                cur[POS_X].as_mut_slice::<f32>(),
-                cur[POS_Y].as_mut_slice::<f32>(),
-                cur[POS_Z].as_mut_slice::<f32>(),
-                cur[VEL_X].as_read().as_slice::<f32>(),
-                cur[VEL_Y].as_read().as_slice::<f32>(),
-                cur[VEL_Z].as_read().as_slice::<f32>(),
-            )
-        };
-        if let (Some(px), Some(py), Some(pz), Some(vx), Some(vy), Some(vz)) = dense {
-            for i in 0..n {
-                px[i] += vx[i] * TIMESTEP;
-                py[i] += vy[i] * TIMESTEP;
-                pz[i] += vz[i] * TIMESTEP;
-            }
-            return;
-        }
-        // Strided affine (AoS, Split): loop-invariant bases.
-        for i in 0..n {
-            // SAFETY: i < n == cursor count.
-            unsafe {
-                let x = cur[POS_X].read::<f32>(i) + cur[VEL_X].read::<f32>(i) * TIMESTEP;
-                let y = cur[POS_Y].read::<f32>(i) + cur[VEL_Y].read::<f32>(i) * TIMESTEP;
-                let z = cur[POS_Z].read::<f32>(i) + cur[VEL_Z].read::<f32>(i) * TIMESTEP;
-                cur[POS_X].write::<f32>(i, x);
-                cur[POS_Y].write::<f32>(i, y);
-                cur[POS_Z].write::<f32>(i, z);
-            }
-        }
-        return;
+    match view.plan_cursors_mut() {
+        PlanCursorsMut::Affine(cur) => return mv_affine(&cur, n),
+        PlanCursorsMut::Piecewise(cur) => return mv_piecewise(&cur, n),
+        PlanCursorsMut::Generic => {}
     }
     debug_assert!(view.validate().is_ok());
     for i in 0..n {
@@ -295,6 +321,79 @@ pub fn mv<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
             view.set_unchecked::<f32>(i, POS_X, x);
             view.set_unchecked::<f32>(i, POS_Y, y);
             view.set_unchecked::<f32>(i, POS_Z, z);
+        }
+    }
+}
+
+/// Affine-cursor move: dense leaves as whole slices, else strided
+/// loop-invariant bases.
+fn mv_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize) {
+    // Dense? (all six position/velocity leaves stride == 4)
+    // SAFETY: one slice per distinct leaf; leaves don't overlap.
+    let dense = unsafe {
+        (
+            cur[POS_X].as_mut_slice::<f32>(),
+            cur[POS_Y].as_mut_slice::<f32>(),
+            cur[POS_Z].as_mut_slice::<f32>(),
+            cur[VEL_X].as_read().as_slice::<f32>(),
+            cur[VEL_Y].as_read().as_slice::<f32>(),
+            cur[VEL_Z].as_read().as_slice::<f32>(),
+        )
+    };
+    if let (Some(px), Some(py), Some(pz), Some(vx), Some(vy), Some(vz)) = dense {
+        for i in 0..n {
+            px[i] += vx[i] * TIMESTEP;
+            py[i] += vy[i] * TIMESTEP;
+            pz[i] += vz[i] * TIMESTEP;
+        }
+        return;
+    }
+    mv_cursors(cur, n);
+}
+
+/// Piecewise-cursor move: per-lane-block dense slices (the fig 5 AoSoA
+/// row — previously the one layout still paying dynamic translation).
+fn mv_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize) {
+    let dense = cur[POS_X].is_dense::<f32>()
+        && cur[POS_Y].is_dense::<f32>()
+        && cur[POS_Z].is_dense::<f32>()
+        && cur[VEL_X].is_dense::<f32>()
+        && cur[VEL_Y].is_dense::<f32>()
+        && cur[VEL_Z].is_dense::<f32>();
+    if !dense {
+        return mv_cursors(cur, n);
+    }
+    let blocks = cur[POS_X].blocks();
+    for b in 0..blocks {
+        // SAFETY: b < blocks, density checked; one mutable slice per
+        // distinct leaf — leaves of a valid mapping never overlap.
+        unsafe {
+            let px = cur[POS_X].block_slice_mut::<f32>(b);
+            let py = cur[POS_Y].block_slice_mut::<f32>(b);
+            let pz = cur[POS_Z].block_slice_mut::<f32>(b);
+            let vx = cur[VEL_X].block_slice::<f32>(b);
+            let vy = cur[VEL_Y].block_slice::<f32>(b);
+            let vz = cur[VEL_Z].block_slice::<f32>(b);
+            for k in 0..px.len() {
+                px[k] += vx[k] * TIMESTEP;
+                py[k] += vy[k] * TIMESTEP;
+                pz[k] += vz[k] * TIMESTEP;
+            }
+        }
+    }
+}
+
+/// Cursor move shared by the non-dense affine and piecewise paths.
+fn mv_cursors<C: CursorWrite>(cur: &[C], n: usize) {
+    for i in 0..n {
+        // SAFETY: i < n == cursor count.
+        unsafe {
+            let x = cur[POS_X].read_at::<f32>(i) + cur[VEL_X].read_at::<f32>(i) * TIMESTEP;
+            let y = cur[POS_Y].read_at::<f32>(i) + cur[VEL_Y].read_at::<f32>(i) * TIMESTEP;
+            let z = cur[POS_Z].read_at::<f32>(i) + cur[VEL_Z].read_at::<f32>(i) * TIMESTEP;
+            cur[POS_X].write_at::<f32>(i, x);
+            cur[POS_Y].write_at::<f32>(i, y);
+            cur[POS_Z].write_at::<f32>(i, z);
         }
     }
 }
@@ -340,6 +439,8 @@ mod tests {
             ("soa_mb", run_llama(SoA::multi_blob(&d, dims.clone()), &s, 2)),
             ("soa_sb", run_llama(SoA::single_blob(&d, dims.clone()), &s, 2)),
             ("aosoa8", run_llama(AoSoA::new(&d, dims.clone(), 8), &s, 2)),
+            // 96 % 7 != 0: the piecewise kernel's tail block.
+            ("aosoa7_tail", run_llama(AoSoA::new(&d, dims.clone(), 7), &s, 2)),
             (
                 "split_pos",
                 run_llama(

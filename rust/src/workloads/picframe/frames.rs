@@ -6,6 +6,7 @@ use super::{
     ParticleAttrs, CELL_IDX, FRAME_SIZE, MOM_X, MOM_Y, MOM_Z, POS_X, POS_Y, POS_Z, WEIGHTING,
 };
 use crate::mapping::Mapping;
+use crate::view::cursor::{CursorWrite, PlanCursorsMut};
 use crate::view::{alloc_view, View};
 use crate::workloads::rng::SplitMix64;
 
@@ -211,21 +212,19 @@ impl<M: Mapping + Clone> ParticleStore<M> {
         for fi in 0..self.frames.len() {
             if let Some(frame) = self.frames[fi].as_mut() {
                 let n = frame.filled;
-                // Affine fast path (EXPERIMENTS.md §Perf): loop-
-                // invariant cursors instead of per-access mapping calls.
-                if let Some(cur) = frame.view.leaf_cursors_mut() {
-                    for s in 0..n {
-                        // SAFETY: s < filled <= FRAME_SIZE == count.
-                        unsafe {
-                            let x = cur[POS_X].read::<f32>(s) + cur[MOM_X].read::<f32>(s) * dt;
-                            let y = cur[POS_Y].read::<f32>(s) + cur[MOM_Y].read::<f32>(s) * dt;
-                            let z = cur[POS_Z].read::<f32>(s) + cur[MOM_Z].read::<f32>(s) * dt;
-                            cur[POS_X].write::<f32>(s, x);
-                            cur[POS_Y].write::<f32>(s, y);
-                            cur[POS_Z].write::<f32>(s, z);
-                        }
+                // Plan fast path (EXPERIMENTS.md §Perf): loop-invariant
+                // cursors — affine or lane-blocked — instead of
+                // per-access mapping calls.
+                match frame.view.plan_cursors_mut() {
+                    PlanCursorsMut::Affine(cur) => {
+                        drift_cursors(&cur, n, dt);
+                        continue;
                     }
-                    continue;
+                    PlanCursorsMut::Piecewise(cur) => {
+                        drift_cursors(&cur, n, dt);
+                        continue;
+                    }
+                    PlanCursorsMut::Generic => {}
                 }
                 debug_assert!(frame.view.validate().is_ok());
                 for s in 0..n {
@@ -346,6 +345,22 @@ impl<M: Mapping + Clone> ParticleStore<M> {
             return Err(format!("particle count {counted} != {}", self.particles));
         }
         Ok(())
+    }
+}
+
+/// One drift sweep over plan cursors (affine or piecewise — the kernel
+/// is generic and monomorphizes per plan shape).
+fn drift_cursors<C: CursorWrite>(cur: &[C], n: usize, dt: f32) {
+    for s in 0..n {
+        // SAFETY: s < filled <= FRAME_SIZE == count.
+        unsafe {
+            let x = cur[POS_X].read_at::<f32>(s) + cur[MOM_X].read_at::<f32>(s) * dt;
+            let y = cur[POS_Y].read_at::<f32>(s) + cur[MOM_Y].read_at::<f32>(s) * dt;
+            let z = cur[POS_Z].read_at::<f32>(s) + cur[MOM_Z].read_at::<f32>(s) * dt;
+            cur[POS_X].write_at::<f32>(s, x);
+            cur[POS_Y].write_at::<f32>(s, y);
+            cur[POS_Z].write_at::<f32>(s, z);
+        }
     }
 }
 

@@ -128,6 +128,112 @@ fn prop_nd_lin_consistency() {
     }
 }
 
+/// Every mapping's compiled `LayoutPlan` resolves exactly like
+/// `blob_nr_and_offset` for all leaves × linear indices. Generic plans
+/// must fall back to the mapping (trivially equal); closed-form plans
+/// (affine/piecewise) must agree everywhere — including AoSoA lane
+/// boundaries (tail blocks), Split compositions, and wrappers.
+#[test]
+fn prop_plan_resolves_like_mapping() {
+    fn check(m: &dyn Mapping, label: &str) {
+        let plan = m.plan();
+        assert_eq!(plan.count(), m.dims().count(), "{label}: plan count");
+        assert_eq!(
+            plan.native(),
+            m.is_native_representation(),
+            "{label}: plan native flag"
+        );
+        // The derived trait accessors must agree with the plan.
+        assert_eq!(m.aosoa_lanes(), plan.chunk_lanes(), "{label}: lanes");
+        for lin in 0..m.dims().count() {
+            let slot = m.slot_of_lin(lin);
+            for leaf in 0..m.info().leaf_count() {
+                let want = m.blob_nr_and_offset(leaf, slot);
+                if let Some(got) = plan.resolve(leaf, lin) {
+                    assert_eq!(got, want, "{label}: leaf {leaf} lin {lin} (closed form)");
+                }
+                assert_eq!(
+                    plan.resolve_with(m, leaf, lin),
+                    want,
+                    "{label}: leaf {leaf} lin {lin} (resolve_with)"
+                );
+            }
+        }
+    }
+
+    // Random record dims × array dims × mappings.
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x91A5);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let m = gen_mapping(&mut rng, &dim, &dims);
+        check(m.as_ref(), &format!("seed {seed}: {}", m.mapping_name()));
+    }
+
+    // Explicit acceptance matrix on multi-dimensional extents whose
+    // count (3*5*2 = 30) is not a multiple of most lane counts.
+    let d = gen_record_dim(&mut SplitMix64::new(4242));
+    let dims = ArrayDims::from([3, 5, 2]);
+    let mut cases: Vec<(String, Box<dyn Mapping>)> = vec![
+        ("AoS aligned".into(), Box::new(AoS::aligned(&d, dims.clone()))),
+        ("AoS packed".into(), Box::new(AoS::packed(&d, dims.clone()))),
+        ("SoA MB".into(), Box::new(SoA::multi_blob(&d, dims.clone()))),
+        ("SoA SB".into(), Box::new(SoA::single_blob(&d, dims.clone()))),
+        ("One".into(), Box::new(One::new(&d, dims.clone()))),
+        (
+            "Byteswap(AoS)".into(),
+            Box::new(Byteswap::new(AoS::packed(&d, dims.clone()))),
+        ),
+        (
+            "Trace(AoSoA4)".into(),
+            Box::new(Trace::new(AoSoA::new(&d, dims.clone(), 4))),
+        ),
+        (
+            "Heatmap(SoA)".into(),
+            Box::new(Heatmap::new(SoA::multi_blob(&d, dims.clone()))),
+        ),
+    ];
+    for lanes in [2usize, 4, 8, 16] {
+        cases.push((format!("AoSoA{lanes}"), Box::new(AoSoA::new(&d, dims.clone(), lanes))));
+    }
+    if d.fields.len() >= 2 {
+        let sel = RecordCoord::new(vec![0]);
+        cases.push((
+            "Split(SoA|AoS)".into(),
+            Box::new(Split::new(
+                &d,
+                dims.clone(),
+                sel.clone(),
+                |sd, ad| SoA::multi_blob(sd, ad),
+                |sd, ad| AoS::aligned(sd, ad),
+            )),
+        ));
+        cases.push((
+            "Split(AoSoA4|SoA)".into(),
+            Box::new(Split::new(
+                &d,
+                dims.clone(),
+                sel.clone(),
+                |sd, ad| AoSoA::new(sd, ad, 4),
+                |sd, ad| SoA::multi_blob(sd, ad),
+            )),
+        ));
+        cases.push((
+            "Split(AoS|AoSoA8)".into(),
+            Box::new(Split::new(
+                &d,
+                dims.clone(),
+                sel,
+                |sd, ad| AoS::packed(sd, ad),
+                |sd, ad| AoSoA::new(sd, ad, 8),
+            )),
+        ));
+    }
+    for (label, m) in &cases {
+        check(m.as_ref(), label);
+    }
+}
+
 /// Instrumentation wrappers (Trace/Heatmap/Byteswap) forward the layout
 /// unchanged.
 #[test]

@@ -11,7 +11,9 @@ use llama::coordinator::fig6_xla;
 use llama::runtime::{Manifest, Runtime};
 
 fn have_artifacts() -> bool {
-    Manifest::load("artifacts").is_ok()
+    // Needs both the built artifacts and the compiled-in PJRT runtime
+    // (`--features xla`); otherwise every test here skips cleanly.
+    llama::runtime::available() && Manifest::load("artifacts").is_ok()
 }
 
 #[test]

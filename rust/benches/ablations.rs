@@ -86,8 +86,11 @@ fn ablation_cursors(o: &Opts) -> Table {
     case!("AoS generic", NoAffine(AoS::aligned(&d, ArrayDims::linear(n))));
     for (name, ns) in &rows {
         // speedup of each generic row vs its cursor partner
-        let partner = rows.iter().find(|(n2, _)| n2 != name && n2.split(' ').next() == name.split(' ').next());
-        let ratio = partner.map(|(_, p)| format!("{:.2}x", ns.max(*p) / ns.min(*p))).unwrap_or_default();
+        let partner = rows
+            .iter()
+            .find(|(n2, _)| n2 != name && n2.split(' ').next() == name.split(' ').next());
+        let ratio =
+            partner.map(|(_, p)| format!("{:.2}x", ns.max(*p) / ns.min(*p))).unwrap_or_default();
         t.row(vec![name.clone(), fmt_ms(*ns), ratio]);
     }
     t

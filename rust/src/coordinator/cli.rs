@@ -92,6 +92,7 @@ pub fn run(cli: Cli) -> Result<()> {
             let (u, m) = fig5_nbody::run(o);
             emit(&u, cli.markdown);
             emit(&m, cli.markdown);
+            emit(&fig5_nbody::thread_sweep(o), cli.markdown);
         }
         "xla" => {
             let rel = fig6_xla::verify_against_rust(o)?;
@@ -108,7 +109,9 @@ pub fn run(cli: Cli) -> Result<()> {
         "picframe" => emit(&fig10_picframe::run(o), cli.markdown),
         "bench-fig5" => {
             let path = "BENCH_fig5.json";
-            std::fs::write(path, fig5_nbody::baseline_json(o))?;
+            // Refuses (non-zero exit) to overwrite the checked-in
+            // trajectory with a baseline containing an empty table.
+            std::fs::write(path, fig5_nbody::baseline_json_checked(o)?)?;
             println!("wrote {path}");
         }
         "dump" => dump(&cli.out_dir)?,

@@ -47,7 +47,15 @@ pub fn run(o: &Opts) -> Table {
     let mut rows: Vec<(String, f64)> = Vec::new();
 
     // The paper's baseline data structure is SoA frames.
-    run_case("SoA (baseline)", SoA::multi_blob(&d, dims.clone()), grid, per_cell, steps, o, &mut rows);
+    run_case(
+        "SoA (baseline)",
+        SoA::multi_blob(&d, dims.clone()),
+        grid,
+        per_cell,
+        steps,
+        o,
+        &mut rows,
+    );
     run_case("SoA SB", SoA::single_blob(&d, dims.clone()), grid, per_cell, steps, o, &mut rows);
     for lanes in [8usize, 16, 32, 64, 128] {
         run_case(

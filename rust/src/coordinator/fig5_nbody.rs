@@ -153,19 +153,89 @@ pub fn run(o: &Opts) -> (Table, Table) {
     (update, mv)
 }
 
-/// Serialize a fig 5 run as the `BENCH_fig5.json` baseline document —
-/// the perf trajectory future PRs compare against (regenerate with
-/// `cargo run --release -- bench-fig5`).
-pub fn baseline_json(o: &Opts) -> String {
-    let (update, mv) = run(o);
+/// Thread counts measured by the sweep: 1, 2 and the machine/option
+/// maximum (deduplicated and capped by `Opts::threads`).
+fn sweep_thread_counts(o: &Opts) -> Vec<usize> {
+    let max_t = o.threads().max(1);
+    let mut counts = vec![1usize];
+    if max_t >= 2 {
+        counts.push(2);
+    }
+    if max_t > 2 {
+        counts.push(max_t);
+    }
+    counts
+}
+
+/// Thread-sweep table: the `update` kernel across layouts × 1/2/N
+/// worker threads through `par_execute` (EXPERIMENTS.md §Parallel).
+/// Per layout, the ratio column is against that layout's own 1-thread
+/// row, so scaling is read off directly.
+pub fn thread_sweep(o: &Opts) -> Table {
+    let s = sizes(o);
+    let d = nbody::particle_dim();
+    let state = nbody::init_particles(s.n_update, 44);
+    let dims = ArrayDims::linear(s.n_update);
+    let w = if o.quick { 1 } else { 2 };
+    let counts = sweep_thread_counts(o);
+    let mut t = Table::new(
+        format!("fig5 update thread sweep (N={}, shard-parallel)", s.n_update),
+        &["layout", "threads", "ms", "vs 1 thread"],
+    );
+    macro_rules! sweep {
+        ($name:expr, $mapping:expr) => {{
+            let mut base = 0.0f64;
+            for &tc in &counts {
+                let mut v = alloc_view($mapping);
+                llama_impl::load_state(&mut v, &state);
+                let r = bench(&format!("{} x{tc}", $name), w, o.iters, || {
+                    llama_impl::update_parallel(&mut v, tc);
+                    black_box(v.blobs());
+                });
+                if tc == 1 {
+                    base = r.median_ns;
+                }
+                t.row(vec![
+                    $name.to_string(),
+                    tc.to_string(),
+                    fmt_ms(r.median_ns),
+                    fmt_ratio(r.median_ns, base),
+                ]);
+            }
+        }};
+    }
+    sweep!("LLAMA AoS (aligned)", AoS::aligned(&d, dims.clone()));
+    sweep!("LLAMA SoA MB", SoA::multi_blob(&d, dims.clone()));
+    sweep!("LLAMA AoSoA16", AoSoA::new(&d, dims.clone(), 16));
+    t
+}
+
+fn render_baseline(o: &Opts, update: &Table, mv: &Table, threads: &Table) -> String {
     format!(
         "{{\n  \"figure\": \"fig5_nbody\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
-         \"unit\": \"ms (median)\",\n  \"update\": {},\n  \"move\": {}\n}}\n",
+         \"unit\": \"ms (median)\",\n  \"update\": {},\n  \"move\": {},\n  \"threads\": {}\n}}\n",
         if o.quick { "quick" } else { "full" },
         o.iters,
         update.to_json(),
-        mv.to_json()
+        mv.to_json(),
+        threads.to_json()
     )
+}
+
+/// Serialize a fig 5 run as the `BENCH_fig5.json` baseline document —
+/// the perf trajectory future PRs compare against (regenerate with
+/// `cargo run --release -- bench-fig5`). Carries the update and move
+/// matrices plus the 1/2/N thread sweep, and refuses structurally (on
+/// the `Table` values, not the serialized text) to produce a baseline
+/// with any empty table — an empty table is a broken run, not a
+/// measurement.
+pub fn baseline_json_checked(o: &Opts) -> crate::error::Result<String> {
+    let (update, mv) = run(o);
+    let threads = thread_sweep(o);
+    for t in [&update, &mv, &threads] {
+        crate::ensure!(!t.rows.is_empty(), "bench-fig5: table '{}' produced no rows", t.title);
+    }
+    Ok(render_baseline(o, &update, &mv, &threads))
 }
 
 #[cfg(test)]
@@ -187,14 +257,33 @@ mod tests {
     }
 
     #[test]
-    fn baseline_json_carries_both_tables() {
+    fn baseline_json_carries_all_tables() {
         let mut o = Opts::quick();
         o.n = Some(128);
         o.iters = 1;
-        let j = baseline_json(&o);
+        o.threads = Some(2);
+        let j = baseline_json_checked(&o).expect("populated run passes the empty-table gate");
         assert!(j.contains("\"figure\": \"fig5_nbody\""), "{j}");
         assert!(j.contains("\"update\": {"), "{j}");
         assert!(j.contains("\"move\": {"), "{j}");
+        assert!(j.contains("\"threads\": {"), "{j}");
         assert!(j.contains("LLAMA AoSoA16"), "{j}");
+        assert!(j.contains("thread sweep"), "{j}");
+        assert!(!j.contains("\"rows\": []"), "empty table in {j}");
+    }
+
+    #[test]
+    fn thread_sweep_has_one_row_per_layout_and_count() {
+        let mut o = Opts::quick();
+        o.n = Some(128);
+        o.iters = 1;
+        o.threads = Some(2); // counts = [1, 2] regardless of machine
+        let t = thread_sweep(&o);
+        assert_eq!(t.rows.len(), 3 * 2);
+        // Each layout's 1-thread row is its own baseline.
+        for row in t.rows.iter().filter(|r| r[1] == "1") {
+            assert_eq!(row[3], "1.000");
+        }
+        assert!(t.to_text().contains("LLAMA AoSoA16"));
     }
 }

@@ -42,8 +42,14 @@ fn memcpy_ref(name: &str, bytes: usize, threads: usize, o: &Opts, t: &mut Table)
 }
 
 /// Bench every copy strategy for one (src mapping, dst mapping) pair.
-fn strategies<MS, MD>(label: &str, src_m: MS, dst_m: MD, fill: impl Fn(&mut View<MS, Vec<u8>>), o: &Opts, t: &mut Table)
-where
+fn strategies<MS, MD>(
+    label: &str,
+    src_m: MS,
+    dst_m: MD,
+    fill: impl Fn(&mut View<MS, Vec<u8>>),
+    o: &Opts,
+    t: &mut Table,
+) where
     MS: Mapping + Sync + Clone,
     MD: Mapping + Sync + Clone,
 {

@@ -62,7 +62,15 @@ fn scenario(label: &str, geo: &Geometry, steps: usize, threads: usize, o: &Opts)
     let d = cell_dim();
     let mut rows: Vec<(String, f64)> = Vec::new();
 
-    run_case("AoS (baseline)", AoS::aligned(&d, geo.dims.clone()), geo, steps, threads, o, &mut rows);
+    run_case(
+        "AoS (baseline)",
+        AoS::aligned(&d, geo.dims.clone()),
+        geo,
+        steps,
+        threads,
+        o,
+        &mut rows,
+    );
     let groups = trace_derived_groups(geo);
     run_case(
         "Split (trace hot/cold)",

@@ -1,14 +1,19 @@
 //! Multi-threaded copy variants — the paper's "(p)" rows in fig 7.
 //!
-//! The record range is split into contiguous chunks, one per thread.
-//! Soundness: distinct linear indices map to disjoint destination byte
-//! ranges for every *storage* mapping (the fundamental mapping
-//! invariant, property-tested in `rust/tests`), so threads never write
-//! the same byte. Aliasing mappings ([`crate::mapping::One`],
+//! The record range is split into contiguous shards by the shared
+//! plan-aligned splitter ([`crate::view::shard`]): `shard_range` for
+//! the field-wise copy, `pair_align` (the lcm of both plans'
+//! lane-block alignments) for the chunked copy, so thread boundaries
+//! never straddle an AoSoA lane block on either side. Soundness:
+//! distinct linear indices map to disjoint destination byte ranges for
+//! every *storage* mapping (the fundamental mapping invariant,
+//! property-tested in `rust/tests`), so threads never write the same
+//! byte. Aliasing mappings ([`crate::mapping::One`],
 //! [`crate::mapping::Null`]) must not be parallel destinations.
 
 use crate::blob::{Blob, BlobMut};
 use crate::mapping::Mapping;
+use crate::view::shard::{pair_align, shard_range};
 use crate::view::View;
 
 /// Base pointers + lengths of the destination blobs, shared across the
@@ -20,22 +25,6 @@ struct DstBlobs {
 // SAFETY: the worker threads write disjoint ranges (see module docs).
 unsafe impl Send for DstBlobs {}
 unsafe impl Sync for DstBlobs {}
-
-fn worker_ranges(n: usize, threads: usize, align: usize) -> Vec<(usize, usize)> {
-    let threads = threads.max(1);
-    let per = n.div_ceil(threads);
-    // Round chunk boundaries up to `align` so chunked copies stay on
-    // lane boundaries where possible.
-    let per = per.div_ceil(align) * align;
-    let mut out = Vec::new();
-    let mut start = 0;
-    while start < n {
-        let end = (start + per).min(n);
-        out.push((start, end));
-        start = end;
-    }
-    out
-}
 
 fn default_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
@@ -73,13 +62,13 @@ pub fn copy_naive_parallel<MS, MD, BS, BD>(
             })
             .collect(),
     };
-    let ranges = worker_ranges(n, threads, 1);
+    let ranges = shard_range(n, threads, 1);
     std::thread::scope(|scope| {
-        for (start, end) in ranges {
+        for sh in ranges {
             let dst_ptrs = &dst_ptrs;
             let sizes = &sizes;
             scope.spawn(move || {
-                for lin in start..end {
+                for lin in sh.start..sh.end {
                     let sslot = src.mapping().slot_of_lin(lin);
                     let dslot = dmap.slot_of_lin(lin);
                     for (leaf, &size) in sizes.iter().enumerate() {
@@ -146,17 +135,18 @@ pub fn copy_aosoa_parallel<MS, MD, BS, BD>(
             })
             .collect(),
     };
-    // Align thread boundaries to the outer lane size (capped to keep
-    // the alignment from collapsing the thread count for SoA, where
-    // lanes == n).
-    let align = outer_lanes.min(n.div_ceil(threads).max(1));
-    let ranges = worker_ranges(n, threads, align);
+    // Thread boundaries land on lane-run boundaries of *both* layouts
+    // (SoA-style whole-array runs contribute 1 and split freely), so no
+    // shard starts or ends mid-block — the old per-side cap could hand
+    // out splits straddling the other side's AoSoA lane blocks.
+    let ranges = shard_range(n, threads, pair_align(&sp, &dp));
     std::thread::scope(|scope| {
-        for (t_start, t_end) in ranges {
+        for sh in ranges {
             let dst_ptrs = &dst_ptrs;
             let sizes = &sizes;
             let (sp, dp) = (&sp, &dp);
             scope.spawn(move || {
+                let (t_start, t_end) = (sh.start, sh.end);
                 let leaves = sizes.len();
                 let mut block_start = t_start;
                 while block_start < t_end {
@@ -242,16 +232,16 @@ mod tests {
     }
 
     #[test]
-    fn worker_ranges_cover_everything() {
-        for (n, t, a) in [(100, 4, 1), (4096, 8, 32), (5, 8, 4), (1000, 3, 7)] {
-            let ranges = super::worker_ranges(n, t, a);
-            let mut expect = 0;
-            for (s, e) in &ranges {
-                assert_eq!(*s, expect);
-                assert!(e > s);
-                expect = *e;
-            }
-            assert_eq!(expect, n);
+    fn thread_boundaries_respect_both_layouts() {
+        // SoA (whole-array runs) x AoSoA32: boundaries must be 32-lane
+        // multiples — the old cap could produce arbitrary splits here.
+        let d = particle_dim();
+        let sp = SoA::multi_blob(&d, ArrayDims::linear(4096 + 17)).plan();
+        let dp = AoSoA::new(&d, ArrayDims::linear(4096 + 17), 32).plan();
+        let align = crate::view::shard::pair_align(&sp, &dp);
+        assert_eq!(align, 32);
+        for sh in shard_range(4096 + 17, 4, align) {
+            assert_eq!(sh.start % 32, 0);
         }
     }
 
@@ -259,7 +249,7 @@ mod tests {
     fn single_thread_option() {
         let d = particle_dim();
         let dims = ArrayDims::linear(2048);
-        let mut src = alloc_view(AoSoA::new(&d, dims.clone(), 16), );
+        let mut src = alloc_view(AoSoA::new(&d, dims.clone(), 16));
         fill_distinct(&mut src);
         let mut dst = alloc_view(SoA::single_blob(&d, dims.clone()));
         copy_aosoa_parallel(&src, &mut dst, ChunkOrder::WriteContiguous, Some(1));

@@ -64,7 +64,9 @@ pub fn mapping_demo_dim() -> record::RecordDim {
 
 /// Convenient glob import for examples and applications.
 pub mod prelude {
-    pub use crate::array::{ArrayDims, ArrayIndexRange, ColMajor, HilbertCurve2D, MortonCurve, RowMajor};
+    pub use crate::array::{
+        ArrayDims, ArrayIndexRange, ColMajor, HilbertCurve2D, MortonCurve, RowMajor,
+    };
     pub use crate::blob::{AlignedAlloc, Blob, BlobAllocator, BlobMut, VecAlloc};
     pub use crate::copy::{
         aosoa_copy, copy, copy_blobwise, copy_naive, copy_stdcopy, views_equal, ChunkOrder,
@@ -75,5 +77,9 @@ pub mod prelude {
         Null, One, Recommendation, SoA, Split, Trace,
     };
     pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};
-    pub use crate::view::{alloc_view, alloc_view_with, OneRecord, ScalarVal, View};
+    pub use crate::view::{
+        alloc_view, alloc_view_with, pair_align, par_execute, par_execute_zip, par_map_shards,
+        par_shards, plan_aliases, shard_align, shard_plan, shard_range, CursorRead, CursorWrite,
+        OneRecord, ScalarVal, Shard, ShardKernel, ShardKernel2, View,
+    };
 }

@@ -126,12 +126,29 @@ impl<'v> LeafCursor<'v> {
     /// Dense view of the leaf as a typed slice (stride == size and
     /// aligned), e.g. an SoA subarray. None for strided layouts.
     pub fn as_slice<T: ScalarVal>(&self) -> Option<&'v [T]> {
-        if self.stride == std::mem::size_of::<T>()
+        self.as_slice_range(0, self.count)
+    }
+
+    /// Dense subslice covering `start..end` — the shard-local window
+    /// used by parallel kernels. None for strided layouts or an
+    /// out-of-range window (a safe fn must not mint an out-of-bounds
+    /// slice in release builds).
+    pub fn as_slice_range<T: ScalarVal>(&self, start: usize, end: usize) -> Option<&'v [T]> {
+        debug_assert!(start <= end && end <= self.count);
+        if start <= end
+            && end <= self.count
+            && self.stride == std::mem::size_of::<T>()
             && (self.ptr as usize) % std::mem::align_of::<T>() == 0
         {
             // SAFETY: construction validated [ptr, ptr + count*stride);
-            // alignment checked; lifetime tied to the view borrow.
-            Some(unsafe { std::slice::from_raw_parts(self.ptr as *const T, self.count) })
+            // alignment of ptr + start*size follows from the base;
+            // lifetime tied to the view borrow.
+            Some(unsafe {
+                std::slice::from_raw_parts(
+                    self.ptr.add(start * self.stride) as *const T,
+                    end - start,
+                )
+            })
         } else {
             None
         }
@@ -227,10 +244,32 @@ impl<'v> LeafCursorMut<'v> {
     /// At most one live slice per leaf; leaves of a valid mapping never
     /// overlap, so slices of *different* leaves may coexist.
     pub unsafe fn as_mut_slice<T: ScalarVal>(&self) -> Option<&'v mut [T]> {
-        if self.stride == std::mem::size_of::<T>()
+        self.as_mut_slice_range(0, self.count)
+    }
+
+    /// Dense mutable subslice covering `start..end` — the shard-local
+    /// window used by parallel kernels: disjoint ranges yield disjoint
+    /// slices, so concurrent shards may each hold their own.
+    ///
+    /// # Safety
+    /// `start <= end <= self.count()`; live slices of the same leaf
+    /// must cover disjoint ranges (leaves of a valid mapping never
+    /// overlap, so slices of different leaves always may coexist).
+    pub unsafe fn as_mut_slice_range<T: ScalarVal>(
+        &self,
+        start: usize,
+        end: usize,
+    ) -> Option<&'v mut [T]> {
+        debug_assert!(start <= end && end <= self.count);
+        if start <= end
+            && end <= self.count
+            && self.stride == std::mem::size_of::<T>()
             && (self.ptr as usize) % std::mem::align_of::<T>() == 0
         {
-            Some(std::slice::from_raw_parts_mut(self.ptr as *mut T, self.count))
+            Some(std::slice::from_raw_parts_mut(
+                self.ptr.add(start * self.stride) as *mut T,
+                end - start,
+            ))
         } else {
             None
         }
@@ -616,7 +655,13 @@ pub enum PlanCursorsMut<'v> {
 impl<M: Mapping, B: Blob> View<M, B> {
     /// Compile the mapping once and extract read cursors for every leaf.
     pub fn plan_cursors(&self) -> PlanCursors<'_> {
-        let plan = self.mapping().plan();
+        self.plan_cursors_with(&self.mapping().plan())
+    }
+
+    /// [`View::plan_cursors`] over a plan the caller already compiled
+    /// (e.g. the shard executor derives split points and cursors from
+    /// one compilation).
+    pub fn plan_cursors_with(&self, plan: &LayoutPlan) -> PlanCursors<'_> {
         if !plan.native() {
             return PlanCursors::Generic;
         }
@@ -632,10 +677,10 @@ impl<M: Mapping, B: Blob> View<M, B> {
         // SAFETY: the pointers borrow self's blobs for the returned
         // cursors' lifetime.
         unsafe {
-            if let Some(cur) = LeafCursor::from_plan(&plan, &sizes, &blobs) {
+            if let Some(cur) = LeafCursor::from_plan(plan, &sizes, &blobs) {
                 return PlanCursors::Affine(cur);
             }
-            if let Some(cur) = PiecewiseCursor::from_plan(&plan, &sizes, &blobs) {
+            if let Some(cur) = PiecewiseCursor::from_plan(plan, &sizes, &blobs) {
                 return PlanCursors::Piecewise(cur);
             }
         }
@@ -656,7 +701,12 @@ impl<M: Mapping, B: BlobMut> View<M, B> {
     /// Compile the mapping once and extract mutable cursors for every
     /// leaf.
     pub fn plan_cursors_mut(&mut self) -> PlanCursorsMut<'_> {
-        let plan = self.mapping().plan();
+        self.plan_cursors_mut_with(&self.mapping().plan())
+    }
+
+    /// [`View::plan_cursors_mut`] over a plan the caller already
+    /// compiled.
+    pub fn plan_cursors_mut_with(&mut self, plan: &LayoutPlan) -> PlanCursorsMut<'_> {
         if !plan.native() {
             return PlanCursorsMut::Generic;
         }
@@ -672,10 +722,10 @@ impl<M: Mapping, B: BlobMut> View<M, B> {
         // SAFETY: the pointers exclusively borrow self's blobs for the
         // returned cursors' lifetime.
         unsafe {
-            if let Some(cur) = LeafCursorMut::from_plan(&plan, &sizes, &blobs) {
+            if let Some(cur) = LeafCursorMut::from_plan(plan, &sizes, &blobs) {
                 return PlanCursorsMut::Affine(cur);
             }
-            if let Some(cur) = PiecewiseCursorMut::from_plan(&plan, &sizes, &blobs) {
+            if let Some(cur) = PiecewiseCursorMut::from_plan(plan, &sizes, &blobs) {
                 return PlanCursorsMut::Piecewise(cur);
             }
         }

@@ -7,6 +7,7 @@ pub mod cursor;
 pub mod iter;
 pub mod one_record;
 pub mod scalar;
+pub mod shard;
 pub mod view;
 pub mod virtual_record;
 pub mod virtual_view;
@@ -18,6 +19,10 @@ pub use cursor::{
 pub use iter::RecordIter;
 pub use one_record::OneRecord;
 pub use scalar::ScalarVal;
+pub use shard::{
+    pair_align, par_execute, par_execute_zip, par_map_shards, par_shards, plan_aliases,
+    shard_align, shard_plan, shard_range, Shard, ShardKernel, ShardKernel2,
+};
 pub use view::{alloc_view, alloc_view_with, View};
 pub use virtual_record::{RecordRef, RecordRefMut};
 pub use virtual_view::VirtualView;

@@ -202,7 +202,10 @@ mod tests {
     fn particle_info() -> Arc<RecordInfo> {
         let vec2 = RecordDim::new().scalar("x", Scalar::F32).scalar("y", Scalar::F32);
         Arc::new(RecordInfo::new(
-            &RecordDim::new().record("pos", vec2.clone()).record("vel", vec2).scalar("mass", Scalar::F64),
+            &RecordDim::new()
+                .record("pos", vec2.clone())
+                .record("vel", vec2)
+                .scalar("mass", Scalar::F64),
         ))
     }
 

@@ -1,0 +1,512 @@
+//! Plan-aligned view sharding + the shared parallel kernel executor
+//! (EXPERIMENTS.md §Parallel).
+//!
+//! A mapping decouples the algorithm from the memory layout; this
+//! module decouples it from the *execution scale*. A [`View`] (or a
+//! src/dst pair of views) is split into disjoint [`Shard`]s along the
+//! array dimensions, with split points derived from the compiled
+//! [`LayoutPlan`]: shard boundaries align to the plan's AoSoA lane
+//! count ([`shard_align`], gcd'd across Split children by
+//! `LayoutPlan::compose_split`), so every shard's piecewise cursors
+//! stay lane-blocked and kernels never pay a partial-block fixup inside
+//! the hot loop — only the global tail block can be partial, and only
+//! in the last shard.
+//!
+//! On top of the splitter sits [`par_execute`] (one view) and
+//! [`par_execute_zip`] (src/dst views), the plan-driven kernel drivers
+//! used by every workload: they compile the plan once, extract
+//! whole-range cursors, and fan the shards out over scoped threads
+//! (zero dependencies — `std::thread::scope`, mirroring the safety
+//! argument of `copy::parallel`). A workload implements [`ShardKernel`]
+//! / [`ShardKernel2`] once and runs serial (`threads = 1`, no spawn) or
+//! parallel with bit-identical per-record results: each record's
+//! computation is self-contained, so sharding changes scheduling, not
+//! arithmetic.
+//!
+//! # Safety argument
+//!
+//! Distinct linear indices map to disjoint destination byte ranges for
+//! every *storage* mapping (the fundamental mapping invariant,
+//! property-tested in `rust/tests`), so threads writing disjoint shard
+//! ranges never write the same byte. Aliasing mappings are never
+//! parallel write targets: [`crate::mapping::Null`] keeps the default
+//! generic plan, so the executors decline it and callers fall back to
+//! their serial path; [`crate::mapping::One`] compiles to an affine
+//! stride-0 plan whose leaves alias every record, which
+//! [`plan_aliases`] detects — [`shard_plan`] and the executors then
+//! collapse to a single shard, so safe callers cannot race.
+
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::plan::AddrPlan;
+use crate::mapping::{LayoutPlan, Mapping};
+use crate::view::cursor::{
+    CursorRead, CursorWrite, LeafCursorMut, PiecewiseCursorMut, PlanCursors, PlanCursorsMut,
+};
+use crate::view::view::View;
+
+/// One shard: a contiguous, half-open range of canonical linear record
+/// indices `start..end`, disjoint from every other shard of its split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Shard {
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.end <= self.start
+    }
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Least common multiple, falling back to `a` on overflow so callers'
+/// granularity invariants (boundaries are multiples of `a`) survive.
+fn lcm_or_first(a: usize, b: usize) -> usize {
+    let g = gcd(a, b);
+    if g == 0 {
+        return a.max(1);
+    }
+    (a / g).checked_mul(b).unwrap_or(a)
+}
+
+/// Split `count` records into at most `parts` disjoint shards covering
+/// `0..count`, every boundary a multiple of `align` (the final end is
+/// `count` itself). `align` values at or above `count` collapse the
+/// split to a single shard — alignment wins over parallelism, so
+/// piecewise cursors are never handed a partial block mid-range.
+pub fn shard_range(count: usize, parts: usize, align: usize) -> Vec<Shard> {
+    let align = align.max(1);
+    let parts = parts.max(1);
+    if count == 0 {
+        return Vec::new();
+    }
+    // Records per shard, rounded up to a multiple of `align`; at most
+    // `parts` shards because `per >= ceil(count / parts)`.
+    let per = count.div_ceil(parts).div_ceil(align) * align;
+    let mut out = Vec::with_capacity(count.div_ceil(per));
+    let mut start = 0;
+    while start < count {
+        let end = (start + per).min(count);
+        out.push(Shard { start, end });
+        start = end;
+    }
+    out
+}
+
+/// The alignment a shard boundary must respect for this plan:
+///
+/// * lane-blocked addressing ([`AddrPlan::PiecewiseAoSoA`]) → the lane
+///   count, so every shard's blocks are full (no partial-block fixup);
+/// * otherwise the chunk run length when it is shorter than the array
+///   (Split compositions chunk at the gcd of their children's lanes) —
+///   whole-array runs (SoA) split freely at any index, and affine
+///   addressing is position-independent, so those contribute 1.
+pub fn shard_align(plan: &LayoutPlan) -> usize {
+    match plan.addr() {
+        AddrPlan::PiecewiseAoSoA(p) => p.lanes.max(1),
+        _ => match plan.chunk_lanes() {
+            Some(l) if l > 0 && l < plan.count().max(1) => l,
+            _ => 1,
+        },
+    }
+}
+
+/// True when distinct linear indices can map to the same bytes (e.g.
+/// [`crate::mapping::One`]'s stride-0 leaves): such a plan must never
+/// be sharded for writing — concurrent shards would race on the
+/// aliased bytes even though their lin ranges are disjoint.
+pub fn plan_aliases(plan: &LayoutPlan) -> bool {
+    if plan.count() <= 1 {
+        return false;
+    }
+    match plan.addr() {
+        AddrPlan::Affine(leaves) => leaves.iter().any(|l| l.stride == 0),
+        AddrPlan::PiecewiseAoSoA(p) => {
+            p.leaves.iter().any(|l| l.lane_stride == 0 || l.block_stride == 0)
+        }
+        // Generic plans never get cursors, so the executors already
+        // decline them.
+        AddrPlan::Generic => false,
+    }
+}
+
+/// Split points derived from one plan: `shard_range` at the plan's
+/// record count and [`shard_align`]. Aliasing plans ([`plan_aliases`])
+/// collapse to a single shard so safe callers cannot race writes
+/// through e.g. a `One` mapping.
+pub fn shard_plan(plan: &LayoutPlan, parts: usize) -> Vec<Shard> {
+    let parts = if plan_aliases(plan) { 1 } else { parts };
+    shard_range(plan.count(), parts, shard_align(plan))
+}
+
+/// Combined boundary alignment for a (src, dst) pair — e.g. the two
+/// sides of a layout-changing copy: the lcm of both sides'
+/// [`shard_align`], so chunked runs start lane-blocked on *both*
+/// layouts (the align-1 splits the old `copy::parallel` chunker could
+/// produce straddled AoSoA lane blocks mid-shard).
+pub fn pair_align(a: &LayoutPlan, b: &LayoutPlan) -> usize {
+    lcm_or_first(shard_align(a), shard_align(b))
+}
+
+/// Run `f` once per shard on scoped worker threads; a single shard runs
+/// inline on the caller's thread (the serial path spawns nothing).
+pub fn par_shards(shards: &[Shard], f: impl Fn(Shard) + Sync) {
+    match shards {
+        [] => {}
+        [s] => f(*s),
+        _ => {
+            std::thread::scope(|scope| {
+                for &s in shards {
+                    let f = &f;
+                    scope.spawn(move || f(s));
+                }
+            });
+        }
+    }
+}
+
+/// Map `f` over the shards on scoped worker threads and collect the
+/// per-shard results in shard order (deterministic reductions — e.g.
+/// the hep energy sweep sums shard partials in a fixed order).
+pub fn par_map_shards<T: Send>(shards: &[Shard], f: impl Fn(Shard) -> T + Sync) -> Vec<T> {
+    match shards {
+        [] => Vec::new(),
+        [s] => vec![f(*s)],
+        _ => std::thread::scope(|scope| {
+            let handles: Vec<_> = shards
+                .iter()
+                .map(|&s| {
+                    let f = &f;
+                    scope.spawn(move || f(s))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("shard worker panicked")).collect()
+        }),
+    }
+}
+
+/// A kernel over one view, executed shard-wise by [`par_execute`].
+///
+/// The cursors passed to each method cover the *whole* record range
+/// (kernels may read any index — e.g. the n-body j-loop); the kernel
+/// must **write** only indices inside `shard`. Shape-specific fast
+/// paths (dense slices, lane-block slices) override `run_affine` /
+/// `run_piecewise`; both default to the uniform [`CursorWrite`] body.
+pub trait ShardKernel: Sync {
+    /// Uniform kernel body over any cursor shape.
+    fn run<C: CursorWrite>(&self, cur: &[C], shard: Shard);
+
+    /// Affine-plan fast path (dense leaves expose real slices).
+    fn run_affine(&self, cur: &[LeafCursorMut<'_>], shard: Shard) {
+        self.run(cur, shard);
+    }
+
+    /// Piecewise-plan fast path (lane-blocked slices). Shard starts are
+    /// lane-aligned by construction ([`shard_align`]).
+    fn run_piecewise(&self, cur: &[PiecewiseCursorMut<'_>], shard: Shard) {
+        self.run(cur, shard);
+    }
+}
+
+/// A kernel over a (src, dst) view pair, executed shard-wise by
+/// [`par_execute_zip`]. Same contract as [`ShardKernel`]: whole-range
+/// cursors, writes confined to `shard`.
+pub trait ShardKernel2: Sync {
+    fn run<R: CursorRead, W: CursorWrite>(&self, src: &[R], dst: &[W], shard: Shard);
+}
+
+/// Plan-driven parallel execution over one view: compile the mapping
+/// once, shard the record range on plan-aligned boundaries, and run the
+/// kernel per shard on scoped threads (`threads = 1` runs inline, no
+/// spawn — the serial and parallel paths share one code path and
+/// produce bit-identical results).
+///
+/// Returns `false` without running anything when the plan has no
+/// closed-form cursors (generic addressing, non-native representation,
+/// or ranges that do not fit the blobs): the caller then runs its own
+/// accessor-path fallback, exactly as with
+/// [`View::plan_cursors_mut`].
+pub fn par_execute<M, B, K>(view: &mut View<M, B>, threads: usize, kernel: &K) -> bool
+where
+    M: Mapping,
+    B: BlobMut,
+    K: ShardKernel,
+{
+    let plan = view.mapping().plan();
+    let shards = shard_plan(&plan, threads);
+    match view.plan_cursors_mut_with(&plan) {
+        PlanCursorsMut::Affine(cur) => {
+            par_shards(&shards, |s| kernel.run_affine(&cur, s));
+            true
+        }
+        PlanCursorsMut::Piecewise(cur) => {
+            par_shards(&shards, |s| kernel.run_piecewise(&cur, s));
+            true
+        }
+        PlanCursorsMut::Generic => false,
+    }
+}
+
+/// Plan-driven parallel execution over a (src, dst) view pair — the
+/// zip-style entry point (lbm streams `src` into `dst`; copies move
+/// bytes between layouts). Both mappings compile once; shard
+/// boundaries are multiples of `granularity` (caller structure, e.g.
+/// an lbm x-slab of `ny*nz` cells; pass 1 for none) *and* of the
+/// destination plan's [`shard_align`], so parallel writes stay
+/// lane-blocked.
+///
+/// Returns `false` when either side's plan has no closed-form cursors.
+pub fn par_execute_zip<MS, MD, BS, BD, K>(
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    threads: usize,
+    granularity: usize,
+    kernel: &K,
+) -> bool
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: BlobMut,
+    K: ShardKernel2,
+{
+    let dp = dst.mapping().plan();
+    let threads = if plan_aliases(&dp) { 1 } else { threads };
+    let align = lcm_or_first(granularity.max(1), shard_align(&dp));
+    let shards = shard_range(src.count(), threads, align);
+    match src.plan_cursors() {
+        PlanCursors::Affine(s) => zip_with_src(&s, dst, &dp, &shards, kernel),
+        PlanCursors::Piecewise(s) => zip_with_src(&s, dst, &dp, &shards, kernel),
+        PlanCursors::Generic => false,
+    }
+}
+
+/// Second dispatch stage of [`par_execute_zip`]: source cursors in
+/// hand, extract the destination side from its already-compiled plan.
+fn zip_with_src<R, MD, BD, K>(
+    src: &[R],
+    dst: &mut View<MD, BD>,
+    dp: &LayoutPlan,
+    shards: &[Shard],
+    kernel: &K,
+) -> bool
+where
+    R: CursorRead,
+    MD: Mapping,
+    BD: BlobMut,
+    K: ShardKernel2,
+{
+    match dst.plan_cursors_mut_with(dp) {
+        PlanCursorsMut::Affine(d) => {
+            par_shards(shards, |s| kernel.run(src, &d, s));
+            true
+        }
+        PlanCursorsMut::Piecewise(d) => {
+            par_shards(shards, |s| kernel.run(src, &d, s));
+            true
+        }
+        PlanCursorsMut::Generic => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, One, SoA, Split};
+    use crate::record::RecordCoord;
+    use crate::view::alloc_view;
+
+    fn check_shards(shards: &[Shard], count: usize, parts: usize, align: usize) {
+        assert!(shards.len() <= parts.max(1), "{count}/{parts}/{align}: too many shards");
+        let mut expect = 0;
+        for s in shards {
+            assert_eq!(s.start, expect, "gap or overlap at {s:?}");
+            assert!(s.end > s.start, "empty shard {s:?}");
+            assert_eq!(s.start % align.max(1), 0, "unaligned start {s:?} (align {align})");
+            if s.end != count {
+                assert_eq!(s.end % align.max(1), 0, "unaligned end {s:?} (align {align})");
+            }
+            expect = s.end;
+        }
+        assert_eq!(expect, count, "shards do not cover 0..{count}");
+    }
+
+    #[test]
+    fn shard_range_covers_disjointly_and_aligned() {
+        for count in [0usize, 1, 5, 13, 64, 100, 257, 4096 + 17] {
+            for parts in [1usize, 2, 3, 4, 8, 16] {
+                for align in [1usize, 2, 4, 7, 16, 32] {
+                    let shards = shard_range(count, parts, align);
+                    check_shards(&shards, count, parts, align);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_align_collapses_to_one_shard() {
+        let shards = shard_range(100, 8, 256);
+        assert_eq!(shards, vec![Shard { start: 0, end: 100 }]);
+    }
+
+    #[test]
+    fn shard_align_follows_the_plan_family() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(100);
+        // Affine layouts split anywhere.
+        assert_eq!(shard_align(&AoS::aligned(&d, dims.clone()).plan()), 1);
+        assert_eq!(shard_align(&AoS::packed(&d, dims.clone()).plan()), 1);
+        // SoA's whole-array runs split freely too.
+        assert_eq!(shard_align(&SoA::multi_blob(&d, dims.clone()).plan()), 1);
+        assert_eq!(shard_align(&One::new(&d, dims.clone()).plan()), 1);
+        // Lane-blocked layouts align to their lane count.
+        for lanes in [2usize, 4, 8, 16] {
+            assert_eq!(shard_align(&AoSoA::new(&d, dims.clone(), lanes).plan()), lanes);
+        }
+        // Split(AoSoA4, SoA) composes to a 4-lane piecewise plan.
+        let m = Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        );
+        assert_eq!(shard_align(&m.plan()), 4);
+        // Mismatched-lane Split: generic addressing, gcd chunking.
+        let m = Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| AoSoA::new(sd, ad, 6),
+        );
+        assert_eq!(shard_align(&m.plan()), 2);
+    }
+
+    #[test]
+    fn pair_align_is_the_lcm_of_both_sides() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(96);
+        let soa = SoA::multi_blob(&d, dims.clone()).plan();
+        let a4 = AoSoA::new(&d, dims.clone(), 4).plan();
+        let a6 = AoSoA::new(&d, dims.clone(), 6).plan();
+        let a32 = AoSoA::new(&d, dims.clone(), 32).plan();
+        assert_eq!(pair_align(&soa, &a32), 32);
+        assert_eq!(pair_align(&a4, &a6), 12);
+        assert_eq!(pair_align(&a4, &a32), 32);
+        assert_eq!(pair_align(&soa, &soa), 1);
+    }
+
+    #[test]
+    fn par_map_shards_preserves_shard_order() {
+        let shards = shard_range(100, 4, 1);
+        let got = par_map_shards(&shards, |s| s.start);
+        let expect: Vec<usize> = shards.iter().map(|s| s.start).collect();
+        assert_eq!(got, expect);
+    }
+
+    /// A trivial kernel writing `lin` into the mass leaf — checks the
+    /// executor visits every record exactly once, across plan shapes.
+    struct StampKernel;
+
+    impl ShardKernel for StampKernel {
+        fn run<C: CursorWrite>(&self, cur: &[C], shard: Shard) {
+            for lin in shard.start..shard.end {
+                // SAFETY: lin < count; shards are disjoint.
+                unsafe { cur[4].write_at::<f64>(lin, lin as f64) };
+            }
+        }
+    }
+
+    #[test]
+    fn par_execute_visits_every_record_once() {
+        let d = particle_dim();
+        for threads in [1usize, 2, 5] {
+            let mut v = alloc_view(AoSoA::new(&d, ArrayDims::linear(37), 4));
+            assert!(par_execute(&mut v, threads, &StampKernel));
+            for lin in 0..37 {
+                assert_eq!(v.get::<f64>(lin, 4), lin as f64, "threads {threads} lin {lin}");
+            }
+            let mut v = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(37)));
+            assert!(par_execute(&mut v, threads, &StampKernel));
+            for lin in 0..37 {
+                assert_eq!(v.get::<f64>(lin, 4), lin as f64, "threads {threads} lin {lin}");
+            }
+        }
+    }
+
+    #[test]
+    fn aliasing_plans_collapse_to_one_shard() {
+        let d = particle_dim();
+        let plan = One::new(&d, ArrayDims::linear(64)).plan();
+        assert!(plan_aliases(&plan));
+        assert_eq!(shard_plan(&plan, 8).len(), 1);
+        assert!(!plan_aliases(&AoSoA::new(&d, ArrayDims::linear(64), 4).plan()));
+        // Writing through One via the executor stays single-shard and
+        // safe: every lin aliases one record, last write wins.
+        let mut v = alloc_view(One::new(&d, ArrayDims::linear(64)));
+        assert!(par_execute(&mut v, 8, &StampKernel));
+        assert_eq!(v.get::<f64>(0, 4), 63.0);
+    }
+
+    #[test]
+    fn par_execute_declines_generic_plans() {
+        use crate::mapping::Byteswap;
+        let d = particle_dim();
+        let mut v = alloc_view(Byteswap::new(AoS::packed(&d, ArrayDims::linear(8))));
+        assert!(!par_execute(&mut v, 4, &StampKernel));
+    }
+
+    /// Zip kernel copying the mass leaf — exercises the two-sided
+    /// dispatch and the shard discipline of [`par_execute_zip`].
+    struct CopyMassKernel;
+
+    impl ShardKernel2 for CopyMassKernel {
+        fn run<R: CursorRead, W: CursorWrite>(&self, src: &[R], dst: &[W], shard: Shard) {
+            for lin in shard.start..shard.end {
+                // SAFETY: lin < count; shards are disjoint.
+                unsafe { dst[4].write_at::<f64>(lin, src[4].read_at::<f64>(lin)) };
+            }
+        }
+    }
+
+    #[test]
+    fn par_execute_zip_copies_across_layouts() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(50);
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        for lin in 0..50 {
+            src.set::<f64>(lin, 4, 3.0 + lin as f64);
+        }
+        let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        assert!(par_execute_zip(&src, &mut dst, 3, 1, &CopyMassKernel));
+        for lin in 0..50 {
+            assert_eq!(dst.get::<f64>(lin, 4), 3.0 + lin as f64);
+        }
+    }
+
+    #[test]
+    fn empty_views_shard_to_nothing() {
+        let d = particle_dim();
+        let mut v = alloc_view(AoSoA::new(&d, ArrayDims::linear(0), 4));
+        assert!(shard_plan(&v.mapping().plan(), 8).is_empty());
+        // The executor still reports cursor availability without running.
+        assert!(par_execute(&mut v, 8, &StampKernel));
+    }
+}

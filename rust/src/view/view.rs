@@ -76,22 +76,21 @@ impl<M: Mapping, B: Blob> View<M, B> {
     /// Verify every (leaf, slot) access lands inside its blob; after
     /// this, the `*_unchecked` accessors are sound for in-range indices.
     /// Cost: O(leaves × slots) — call once, outside hot loops.
-    pub fn validate(&self) -> Result<(), String> {
+    pub fn validate(&self) -> crate::error::Result<()> {
         let info = self.mapping.info().clone();
         for lin in 0..self.count() {
             let slot = self.mapping.slot_of_lin(lin);
             for leaf in 0..info.leaf_count() {
                 let (nr, off) = self.mapping.blob_nr_and_offset(leaf, slot);
                 if nr >= self.blobs.len() {
-                    return Err(format!("leaf {leaf} lin {lin}: blob {nr} out of range"));
+                    crate::bail!("leaf {leaf} lin {lin}: blob {nr} out of range");
                 }
                 let need = off + info.fields[leaf].size();
                 let have = self.blobs[nr].as_bytes().len();
-                if need > have {
-                    return Err(format!(
-                        "leaf {leaf} lin {lin}: needs {need} bytes in blob {nr}, has {have}"
-                    ));
-                }
+                crate::ensure!(
+                    need <= have,
+                    "leaf {leaf} lin {lin}: needs {need} bytes in blob {nr}, has {have}"
+                );
             }
         }
         Ok(())

@@ -12,6 +12,7 @@ use crate::blob::{Blob, BlobMut};
 use crate::mapping::Mapping;
 use crate::record::{RecordDim, Scalar};
 use crate::view::cursor::{CursorRead, PlanCursors};
+use crate::view::shard::{par_map_shards, shard_plan};
 use crate::view::View;
 use crate::workloads::rng::SplitMix64;
 
@@ -64,6 +65,19 @@ pub fn event_packed_size() -> usize {
 /// mapping compiles to cursors once; only instrumented/curve layouts
 /// pay per-access translation.
 pub fn isolated_energy<M: Mapping, B: Blob>(view: &View<M, B>, min_quality: u8) -> f64 {
+    isolated_energy_parallel(view, min_quality, 1)
+}
+
+/// [`isolated_energy`] over plan-aligned shards on `threads` scoped
+/// workers: each shard reduces its record range independently and the
+/// partials are summed in shard order, so the result is deterministic
+/// for a given thread count (`threads = 1` reproduces the serial sum
+/// exactly; other counts regroup the floating-point additions).
+pub fn isolated_energy_parallel<M: Mapping, B: Blob>(
+    view: &View<M, B>,
+    min_quality: u8,
+    threads: usize,
+) -> f64 {
     let info = view.mapping().info().clone();
     let n = view.count();
     let mut leaves = Vec::with_capacity(20);
@@ -73,9 +87,19 @@ pub fn isolated_energy<M: Mapping, B: Blob>(view: &View<M, B>, min_quality: u8) 
         let iso = info.leaf_by_path(&format!("obj{obj}_isolated")).expect("isolated leaf");
         leaves.push((e, q, iso));
     }
-    match view.plan_cursors() {
-        PlanCursors::Affine(cur) => isolated_energy_cursors(&cur, &leaves, n, min_quality),
-        PlanCursors::Piecewise(cur) => isolated_energy_cursors(&cur, &leaves, n, min_quality),
+    let plan = view.mapping().plan();
+    let shards = shard_plan(&plan, threads);
+    match view.plan_cursors_with(&plan) {
+        PlanCursors::Affine(cur) => par_map_shards(&shards, |s| {
+            isolated_energy_cursors(&cur, &leaves, s.start, s.end, min_quality)
+        })
+        .into_iter()
+        .sum(),
+        PlanCursors::Piecewise(cur) => par_map_shards(&shards, |s| {
+            isolated_energy_cursors(&cur, &leaves, s.start, s.end, min_quality)
+        })
+        .into_iter()
+        .sum(),
         PlanCursors::Generic => {
             let mut sum = 0.0f64;
             for lin in 0..n {
@@ -93,11 +117,12 @@ pub fn isolated_energy<M: Mapping, B: Blob>(view: &View<M, B>, min_quality: u8) 
 fn isolated_energy_cursors<C: CursorRead>(
     cur: &[C],
     leaves: &[(usize, usize, usize)],
-    n: usize,
+    start: usize,
+    end: usize,
     min_quality: u8,
 ) -> f64 {
     let mut sum = 0.0f64;
-    for lin in 0..n {
+    for lin in start..end {
         for &(e, q, iso) in leaves {
             // SAFETY: lin < n == cursor count. The isolated flag is
             // read as its raw u8 byte and decoded `!= 0` — never as
@@ -170,6 +195,24 @@ mod tests {
         let mut traced = alloc_view(Trace::new(AoS::packed(&d, dims.clone())));
         generate_events(&mut traced, 21);
         assert_eq!(isolated_energy(&traced, 128), expect);
+    }
+
+    #[test]
+    fn parallel_energy_matches_serial() {
+        let d = event_dim();
+        let dims = ArrayDims::linear(133); // not a lane multiple
+        let mut v = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+        generate_events(&mut v, 5);
+        let serial = isolated_energy(&v, 100);
+        // One shard reproduces the serial summation order exactly.
+        assert_eq!(isolated_energy_parallel(&v, 100, 1), serial);
+        // More shards regroup the additions deterministically; the
+        // value agrees to fp-regrouping precision.
+        for threads in [2usize, 4, 7] {
+            let par = isolated_energy_parallel(&v, 100, threads);
+            let rel = (par - serial).abs() / serial.abs().max(1.0);
+            assert!(rel < 1e-9, "threads {threads}: {par} vs {serial}");
+        }
     }
 
     #[test]

@@ -4,7 +4,8 @@
 use super::{equilibrium, Geometry, E, FLAGS, FLUID, OBSTACLE, OMEGA, OPP, Q};
 use crate::blob::BlobMut;
 use crate::mapping::Mapping;
-use crate::view::cursor::{CursorRead, CursorWrite, PlanCursors, PlanCursorsMut};
+use crate::view::cursor::{CursorRead, CursorWrite};
+use crate::view::shard::{par_execute_zip, Shard, ShardKernel2};
 use crate::view::View;
 
 /// Initialize a view to uniform equilibrium (rho=1, u=0) and write the
@@ -201,56 +202,48 @@ unsafe fn step_slab<MS: Mapping, MD: Mapping, B: BlobMut>(
     }
 }
 
+/// Shard-wise stream-collide kernel for the shared executor
+/// ([`crate::view::shard::par_execute_zip`]). Shards arrive with
+/// boundaries on x-slab granularity (`ny*nz` cells, the `granularity`
+/// passed below), so each shard is a whole `x0..x1` slab range.
+struct StepKernel {
+    nx: usize,
+    ny: usize,
+    nz: usize,
+}
+
+impl ShardKernel2 for StepKernel {
+    fn run<R: CursorRead, W: CursorWrite>(&self, src: &[R], dst: &[W], s: Shard) {
+        let plane = self.ny * self.nz;
+        debug_assert!(s.start % plane == 0, "shard start {} splits an x-slab", s.start);
+        let (x0, x1) = (s.start / plane, s.end.div_ceil(plane));
+        // SAFETY: cursors were validated over the full range at
+        // extraction; shards are disjoint, so slabs and their written
+        // dst bytes are disjoint (mapping invariant).
+        unsafe { step_slab_cursors(src, dst, self.nx, self.ny, self.nz, x0, x1) };
+    }
+}
+
 /// Serial stream-collide step: pull from `src` into `dst` (ping-pong
 /// buffers like SPEC lbm). Both views' mappings are compiled to
 /// [`crate::mapping::LayoutPlan`]s once; any combination of affine and
-/// piecewise plans runs the cursor kernel, only generic plans
+/// piecewise plans runs the cursor kernel through the shared shard
+/// executor (one shard — runs inline), only generic plans
 /// (instrumented/curve layouts) pay per-access translation.
 pub fn step<MS: Mapping, MD: Mapping, B: BlobMut>(src: &View<MS, B>, dst: &mut View<MD, B>) {
     let d = src.mapping().dims().extents();
     let (nx, ny, nz) = (d[0], d[1], d[2]);
-    match src.plan_cursors() {
-        PlanCursors::Affine(s) => return step_with_src(&s, src, dst, nx, ny, nz),
-        PlanCursors::Piecewise(s) => return step_with_src(&s, src, dst, nx, ny, nz),
-        PlanCursors::Generic => {}
+    if par_execute_zip(src, dst, 1, ny * nz, &StepKernel { nx, ny, nz }) {
+        return;
     }
     debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
     // SAFETY: single caller, whole range.
     unsafe { step_slab(src, dst as *mut _, nx, ny, nz, 0, nx) };
 }
 
-/// Second dispatch stage: source cursors in hand, compile the
-/// destination's plan.
-fn step_with_src<R, MS, MD, B>(
-    s: &[R],
-    src: &View<MS, B>,
-    dst: &mut View<MD, B>,
-    nx: usize,
-    ny: usize,
-    nz: usize,
-) where
-    R: CursorRead,
-    MS: Mapping,
-    MD: Mapping,
-    B: BlobMut,
-{
-    match dst.plan_cursors_mut() {
-        // SAFETY: cursors validated; single caller, whole range.
-        PlanCursorsMut::Affine(d) => {
-            return unsafe { step_slab_cursors(s, &d, nx, ny, nz, 0, nx) };
-        }
-        PlanCursorsMut::Piecewise(d) => {
-            return unsafe { step_slab_cursors(s, &d, nx, ny, nz, 0, nx) };
-        }
-        PlanCursorsMut::Generic => {}
-    }
-    debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
-    // SAFETY: single caller, whole range.
-    unsafe { step_slab(src, dst as *mut _, nx, ny, nz, 0, nx) };
-}
-
-/// Multi-threaded step: x-slabs are distributed over `threads` workers
-/// (the paper's OpenMP parallelization of 619.lbm_s).
+/// Multi-threaded step: x-slab shards are distributed over `threads`
+/// scoped workers by [`crate::view::shard::par_execute_zip`] (the
+/// paper's OpenMP parallelization of 619.lbm_s).
 pub fn step_parallel<MS, MD, B>(src: &View<MS, B>, dst: &mut View<MD, B>, threads: usize)
 where
     MS: Mapping,
@@ -259,65 +252,15 @@ where
 {
     let d = src.mapping().dims().extents();
     let (nx, ny, nz) = (d[0], d[1], d[2]);
-    let threads = threads.max(1).min(nx);
+    let threads = threads.max(1).min(nx.max(1));
     if threads == 1 {
         step(src, dst);
         return;
     }
-    match src.plan_cursors() {
-        PlanCursors::Affine(s) => return par_with_src(&s, src, dst, nx, ny, nz, threads),
-        PlanCursors::Piecewise(s) => return par_with_src(&s, src, dst, nx, ny, nz, threads),
-        PlanCursors::Generic => {}
+    if par_execute_zip(src, dst, threads, ny * nz, &StepKernel { nx, ny, nz }) {
+        return;
     }
     step_parallel_generic(src, dst, nx, ny, nz, threads);
-}
-
-/// Second dispatch stage of the parallel step.
-fn par_with_src<R, MS, MD, B>(
-    s: &[R],
-    src: &View<MS, B>,
-    dst: &mut View<MD, B>,
-    nx: usize,
-    ny: usize,
-    nz: usize,
-    threads: usize,
-) where
-    R: CursorRead,
-    MS: Mapping,
-    MD: Mapping,
-    B: BlobMut + Sync,
-{
-    match dst.plan_cursors_mut() {
-        PlanCursorsMut::Affine(d) => return par_slabs(s, &d, nx, ny, nz, threads),
-        PlanCursorsMut::Piecewise(d) => return par_slabs(s, &d, nx, ny, nz, threads),
-        PlanCursorsMut::Generic => {}
-    }
-    step_parallel_generic(src, dst, nx, ny, nz, threads);
-}
-
-/// Fan cursor slabs out over `threads` workers.
-fn par_slabs<R: CursorRead, W: CursorWrite>(
-    src: &[R],
-    dst: &[W],
-    nx: usize,
-    ny: usize,
-    nz: usize,
-    threads: usize,
-) {
-    let per = nx.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for t in 0..threads {
-            let x0 = t * per;
-            let x1 = ((t + 1) * per).min(nx);
-            if x0 >= x1 {
-                break;
-            }
-            scope.spawn(move || {
-                // SAFETY: disjoint slabs -> disjoint writes.
-                unsafe { step_slab_cursors(src, dst, nx, ny, nz, x0, x1) };
-            });
-        }
-    });
 }
 
 /// Parallel step through the generic accessor path (plans without
@@ -434,6 +377,23 @@ mod tests {
     }
 
     #[test]
+    fn parallel_matches_serial_on_piecewise_plans() {
+        // AoSoA dst: shard boundaries must respect both the x-slab
+        // granularity and the destination's lane blocks.
+        let geo = small_geo();
+        let d = cell_dim();
+        for lanes in [8usize, 32, 256] {
+            let mut a = alloc_view(AoSoA::new(&d, geo.dims.clone(), lanes));
+            let mut b1 = alloc_view(AoSoA::new(&d, geo.dims.clone(), lanes));
+            let mut bn = alloc_view(AoSoA::new(&d, geo.dims.clone(), lanes));
+            init(&mut a, &geo);
+            step(&a, &mut b1);
+            step_parallel(&a, &mut bn, 3);
+            assert_eq!(b1.blobs(), bn.blobs(), "lanes {lanes}");
+        }
+    }
+
+    #[test]
     fn obstacles_are_inert_and_fluid_mass_stays() {
         let geo = small_geo();
         let d = cell_dim();
@@ -474,7 +434,10 @@ mod tests {
 
     #[test]
     fn flow_develops_along_x() {
-        let geo = Geometry { dims: crate::array::ArrayDims::from([6, 6, 6]), obstacle: vec![false; 216] };
+        let geo = Geometry {
+            dims: crate::array::ArrayDims::from([6, 6, 6]),
+            obstacle: vec![false; 216],
+        };
         let d = cell_dim();
         let mut a = alloc_view(SoA::multi_blob(&d, geo.dims.clone()));
         let mut b = alloc_view(SoA::multi_blob(&d, geo.dims.clone()));

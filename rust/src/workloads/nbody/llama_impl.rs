@@ -6,7 +6,8 @@
 use super::{pp_interaction, ParticleSoA, MASS, POS_X, POS_Y, POS_Z, TIMESTEP, VEL_X, VEL_Y, VEL_Z};
 use crate::blob::BlobMut;
 use crate::mapping::Mapping;
-use crate::view::cursor::{CursorWrite, PiecewiseCursorMut, PlanCursorsMut};
+use crate::view::cursor::{CursorWrite, PiecewiseCursorMut};
+use crate::view::shard::{par_execute, Shard, ShardKernel};
 use crate::view::View;
 
 /// Load plain-array state into a LLAMA view of any mapping.
@@ -43,6 +44,27 @@ pub fn store_state<M: Mapping, B: BlobMut>(view: &View<M, B>) -> ParticleSoA {
     s
 }
 
+/// Shard-wise update kernel: the i-loop is confined to the shard, the
+/// j-stream reads the whole range (only velocities are written, only
+/// positions/masses are read across records — shards never race).
+struct UpdateKernel {
+    n: usize,
+}
+
+impl ShardKernel for UpdateKernel {
+    fn run<C: CursorWrite>(&self, cur: &[C], s: Shard) {
+        update_cursors(cur, self.n, s.start, s.end);
+    }
+
+    fn run_affine(&self, cur: &[crate::view::LeafCursorMut<'_>], s: Shard) {
+        update_affine(cur, self.n, s.start, s.end);
+    }
+
+    fn run_piecewise(&self, cur: &[PiecewiseCursorMut<'_>], s: Shard) {
+        update_piecewise(cur, self.n, s.start, s.end);
+    }
+}
+
 /// The update phase over any mapping — single flat loop, exactly the
 /// structure of paper listing 9. The mapping's compiled
 /// [`LayoutPlan`](crate::mapping::LayoutPlan) selects the kernel:
@@ -51,11 +73,18 @@ pub fn store_state<M: Mapping, B: BlobMut>(view: &View<M, B>) -> ParticleSoA {
 /// the mapping object), or the generic accessor path (instrumented and
 /// curve layouts).
 pub fn update<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
+    update_parallel(view, 1);
+}
+
+/// [`update`] over plan-aligned shards on `threads` scoped workers
+/// (`threads = 1` runs inline and is bit-identical to the serial
+/// kernel; so is every other thread count — each record's arithmetic
+/// is self-contained). Generic plans (instrumented/curve layouts) run
+/// the accessor path serially.
+pub fn update_parallel<M: Mapping, B: BlobMut>(view: &mut View<M, B>, threads: usize) {
     let n = view.count();
-    match view.plan_cursors_mut() {
-        PlanCursorsMut::Affine(cur) => return update_affine(&cur, n),
-        PlanCursorsMut::Piecewise(cur) => return update_piecewise(&cur, n),
-        PlanCursorsMut::Generic => {}
+    if par_execute(view, threads, &UpdateKernel { n }) {
+        return;
     }
     debug_assert!(view.validate().is_ok());
     for i in 0..n {
@@ -91,8 +120,9 @@ pub fn update<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
 /// Affine-cursor update: identical arithmetic, loop-invariant bases.
 /// With a dense SoA layout the inner loop compiles to the same packed
 /// loads/FMAs as the manual SoA twin (the Rust analogue of the paper's
-/// listing 10/11 disassembly identity).
-fn update_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize) {
+/// listing 10/11 disassembly identity). The i-loop covers
+/// `start..end`; the j-stream always reads `0..n`.
+fn update_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize, start: usize, end: usize) {
     // Dense fast path: slices for the j-stream.
     // SAFETY: read-only slices of distinct leaves.
     let dense = (
@@ -102,7 +132,7 @@ fn update_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize) {
         cur[MASS].as_read().as_slice::<f32>(),
     );
     if let (Some(xs), Some(ys), Some(zs), Some(ms)) = dense {
-        for i in 0..n {
+        for i in start..end {
             // SAFETY: i < n == cursor count.
             unsafe {
                 let pix = cur[POS_X].read::<f32>(i);
@@ -123,22 +153,22 @@ fn update_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize) {
         }
         return;
     }
-    update_cursors(cur, n);
+    update_cursors(cur, n, start, end);
 }
 
 /// Piecewise-cursor update for AoSoA-family plans: the j-stream walks
 /// lane-blocks whose dense slices vectorize like the manual AoSoA twin,
 /// with the `(i/L, i%L)` split hoisted per block instead of per access.
-fn update_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize) {
+fn update_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize, start: usize, end: usize) {
     let dense = cur[POS_X].is_dense::<f32>()
         && cur[POS_Y].is_dense::<f32>()
         && cur[POS_Z].is_dense::<f32>()
         && cur[MASS].is_dense::<f32>();
     if !dense {
-        return update_cursors(cur, n);
+        return update_cursors(cur, n, start, end);
     }
     let blocks = cur[POS_X].blocks();
-    for i in 0..n {
+    for i in start..end {
         // SAFETY: i < n == cursor count; b < blocks with dense leaves
         // checked above. Block-ascending × lane-ascending is exactly the
         // flat j order, so results stay bit-identical to every other
@@ -170,8 +200,8 @@ fn update_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize) {
 
 /// Cursor update shared by the non-dense affine and piecewise paths:
 /// loop-invariant bases, flat j-stream.
-fn update_cursors<C: CursorWrite>(cur: &[C], n: usize) {
-    for i in 0..n {
+fn update_cursors<C: CursorWrite>(cur: &[C], n: usize, start: usize, end: usize) {
+    for i in start..end {
         // SAFETY: i, j < n == cursor count.
         unsafe {
             let pix = cur[POS_X].read_at::<f32>(i);
@@ -292,6 +322,24 @@ pub fn update_tiled<M: Mapping, B: BlobMut>(view: &mut View<M, B>, tile: usize) 
     }
 }
 
+/// Shard-wise move kernel: pure per-record arithmetic — any sharding
+/// is bit-identical to the serial sweep.
+struct MoveKernel;
+
+impl ShardKernel for MoveKernel {
+    fn run<C: CursorWrite>(&self, cur: &[C], s: Shard) {
+        mv_cursors(cur, s.start, s.end);
+    }
+
+    fn run_affine(&self, cur: &[crate::view::LeafCursorMut<'_>], s: Shard) {
+        mv_affine(cur, s.start, s.end);
+    }
+
+    fn run_piecewise(&self, cur: &[PiecewiseCursorMut<'_>], s: Shard) {
+        mv_piecewise(cur, s.start, s.end);
+    }
+}
+
 /// The move phase over any mapping.
 ///
 /// Perf (EXPERIMENTS.md §Perf): the compiled plan selects the kernel.
@@ -302,11 +350,15 @@ pub fn update_tiled<M: Mapping, B: BlobMut>(view: &mut View<M, B>, tile: usize) 
 /// with no per-access `blob_nr_and_offset`. Only instrumented/curve
 /// layouts keep the generic accessor path.
 pub fn mv<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
+    mv_parallel(view, 1);
+}
+
+/// [`mv`] over plan-aligned shards on `threads` scoped workers; see
+/// [`update_parallel`] for the identity and fallback contract.
+pub fn mv_parallel<M: Mapping, B: BlobMut>(view: &mut View<M, B>, threads: usize) {
     let n = view.count();
-    match view.plan_cursors_mut() {
-        PlanCursorsMut::Affine(cur) => return mv_affine(&cur, n),
-        PlanCursorsMut::Piecewise(cur) => return mv_piecewise(&cur, n),
-        PlanCursorsMut::Generic => {}
+    if par_execute(view, threads, &MoveKernel) {
+        return;
     }
     debug_assert!(view.validate().is_ok());
     for i in 0..n {
@@ -325,35 +377,40 @@ pub fn mv<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
     }
 }
 
-/// Affine-cursor move: dense leaves as whole slices, else strided
-/// loop-invariant bases.
-fn mv_affine(cur: &[crate::view::LeafCursorMut<'_>], n: usize) {
+/// Affine-cursor move: dense leaves as shard-local slices, else
+/// strided loop-invariant bases. Sweeps `start..end`.
+fn mv_affine(cur: &[crate::view::LeafCursorMut<'_>], start: usize, end: usize) {
     // Dense? (all six position/velocity leaves stride == 4)
-    // SAFETY: one slice per distinct leaf; leaves don't overlap.
+    // SAFETY: one mutable slice per distinct leaf *and* shard range —
+    // leaves of a valid mapping never overlap, and concurrent shards
+    // cover disjoint ranges, so no two live slices alias.
     let dense = unsafe {
         (
-            cur[POS_X].as_mut_slice::<f32>(),
-            cur[POS_Y].as_mut_slice::<f32>(),
-            cur[POS_Z].as_mut_slice::<f32>(),
-            cur[VEL_X].as_read().as_slice::<f32>(),
-            cur[VEL_Y].as_read().as_slice::<f32>(),
-            cur[VEL_Z].as_read().as_slice::<f32>(),
+            cur[POS_X].as_mut_slice_range::<f32>(start, end),
+            cur[POS_Y].as_mut_slice_range::<f32>(start, end),
+            cur[POS_Z].as_mut_slice_range::<f32>(start, end),
+            cur[VEL_X].as_read().as_slice_range::<f32>(start, end),
+            cur[VEL_Y].as_read().as_slice_range::<f32>(start, end),
+            cur[VEL_Z].as_read().as_slice_range::<f32>(start, end),
         )
     };
     if let (Some(px), Some(py), Some(pz), Some(vx), Some(vy), Some(vz)) = dense {
-        for i in 0..n {
-            px[i] += vx[i] * TIMESTEP;
-            py[i] += vy[i] * TIMESTEP;
-            pz[i] += vz[i] * TIMESTEP;
+        for k in 0..px.len() {
+            px[k] += vx[k] * TIMESTEP;
+            py[k] += vy[k] * TIMESTEP;
+            pz[k] += vz[k] * TIMESTEP;
         }
         return;
     }
-    mv_cursors(cur, n);
+    mv_cursors(cur, start, end);
 }
 
 /// Piecewise-cursor move: per-lane-block dense slices (the fig 5 AoSoA
 /// row — previously the one layout still paying dynamic translation).
-fn mv_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize) {
+/// Shard boundaries are lane-aligned ([`crate::view::shard_align`]),
+/// so the block range below is exact: only the global tail block can
+/// be partial, and `block_len` caps it.
+fn mv_piecewise(cur: &[PiecewiseCursorMut<'_>], start: usize, end: usize) {
     let dense = cur[POS_X].is_dense::<f32>()
         && cur[POS_Y].is_dense::<f32>()
         && cur[POS_Z].is_dense::<f32>()
@@ -361,10 +418,12 @@ fn mv_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize) {
         && cur[VEL_Y].is_dense::<f32>()
         && cur[VEL_Z].is_dense::<f32>();
     if !dense {
-        return mv_cursors(cur, n);
+        return mv_cursors(cur, start, end);
     }
-    let blocks = cur[POS_X].blocks();
-    for b in 0..blocks {
+    let lanes = cur[POS_X].lanes();
+    debug_assert!(start % lanes == 0, "shard start {start} straddles a {lanes}-lane block");
+    let (b0, b1) = (start / lanes, end.div_ceil(lanes));
+    for b in b0..b1 {
         // SAFETY: b < blocks, density checked; one mutable slice per
         // distinct leaf — leaves of a valid mapping never overlap.
         unsafe {
@@ -384,8 +443,8 @@ fn mv_piecewise(cur: &[PiecewiseCursorMut<'_>], n: usize) {
 }
 
 /// Cursor move shared by the non-dense affine and piecewise paths.
-fn mv_cursors<C: CursorWrite>(cur: &[C], n: usize) {
-    for i in 0..n {
+fn mv_cursors<C: CursorWrite>(cur: &[C], start: usize, end: usize) {
+    for i in start..end {
         // SAFETY: i < n == cursor count.
         unsafe {
             let x = cur[POS_X].read_at::<f32>(i) + cur[VEL_X].read_at::<f32>(i) * TIMESTEP;
@@ -484,6 +543,32 @@ mod tests {
         // Tiling reorders the j-loop in blocks; same order actually
         // (tiles are processed in ascending j), so still identical.
         assert_eq!(max_rel_error(&expect, &store_state(&v)), 0.0);
+    }
+
+    #[test]
+    fn parallel_update_and_move_are_bit_identical() {
+        // Each record's arithmetic is self-contained, so sharding only
+        // changes scheduling: any thread count must reproduce the
+        // serial result exactly, including AoSoA tail blocks.
+        let s = init_particles(97, 9); // 97: tails at every lane count
+        let d = particle_dim();
+        let dims = ArrayDims::linear(97);
+        fn run_par<M: Mapping>(mapping: M, s: &ParticleSoA, threads: usize) -> ParticleSoA {
+            let mut v = alloc_view(mapping);
+            load_state(&mut v, s);
+            for _ in 0..2 {
+                update_parallel(&mut v, threads);
+                mv_parallel(&mut v, threads);
+            }
+            store_state(&v)
+        }
+        let expect = run_par(AoS::aligned(&d, dims.clone()), &s, 1);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(expect, run_par(AoS::aligned(&d, dims.clone()), &s, threads));
+            assert_eq!(expect, run_par(SoA::multi_blob(&d, dims.clone()), &s, threads));
+            assert_eq!(expect, run_par(AoSoA::new(&d, dims.clone(), 8), &s, threads));
+            assert_eq!(expect, run_par(AoSoA::new(&d, dims.clone(), 16), &s, threads));
+        }
     }
 
     #[test]

@@ -6,7 +6,8 @@ use super::{
     ParticleAttrs, CELL_IDX, FRAME_SIZE, MOM_X, MOM_Y, MOM_Z, POS_X, POS_Y, POS_Z, WEIGHTING,
 };
 use crate::mapping::Mapping;
-use crate::view::cursor::{CursorWrite, PlanCursorsMut};
+use crate::view::cursor::CursorWrite;
+use crate::view::shard::{par_execute, shard_range, Shard, ShardKernel};
 use crate::view::{alloc_view, View};
 use crate::workloads::rng::SplitMix64;
 
@@ -209,40 +210,36 @@ impl<M: Mapping + Clone> ParticleStore<M> {
     /// particle's position by its momentum (in-supercell coordinates,
     /// positions may leave [0,1)³ until [`ParticleStore::exchange`]).
     pub fn drift(&mut self, dt: f32) {
-        for fi in 0..self.frames.len() {
-            if let Some(frame) = self.frames[fi].as_mut() {
-                let n = frame.filled;
-                // Plan fast path (EXPERIMENTS.md §Perf): loop-invariant
-                // cursors — affine or lane-blocked — instead of
-                // per-access mapping calls.
-                match frame.view.plan_cursors_mut() {
-                    PlanCursorsMut::Affine(cur) => {
-                        drift_cursors(&cur, n, dt);
-                        continue;
-                    }
-                    PlanCursorsMut::Piecewise(cur) => {
-                        drift_cursors(&cur, n, dt);
-                        continue;
-                    }
-                    PlanCursorsMut::Generic => {}
-                }
-                debug_assert!(frame.view.validate().is_ok());
-                for s in 0..n {
-                    // SAFETY: s < FRAME_SIZE over a validated view.
-                    unsafe {
-                        let x = frame.view.get_unchecked::<f32>(s, POS_X)
-                            + frame.view.get_unchecked::<f32>(s, MOM_X) * dt;
-                        let y = frame.view.get_unchecked::<f32>(s, POS_Y)
-                            + frame.view.get_unchecked::<f32>(s, MOM_Y) * dt;
-                        let z = frame.view.get_unchecked::<f32>(s, POS_Z)
-                            + frame.view.get_unchecked::<f32>(s, MOM_Z) * dt;
-                        frame.view.set_unchecked::<f32>(s, POS_X, x);
-                        frame.view.set_unchecked::<f32>(s, POS_Y, y);
-                        frame.view.set_unchecked::<f32>(s, POS_Z, z);
-                    }
-                }
+        self.drift_parallel(dt, 1);
+    }
+
+    /// [`ParticleStore::drift`] with the frame arena split into
+    /// disjoint chunks by the shared shard splitter, one scoped worker
+    /// per chunk (frames are small, so the parallel grain is the
+    /// arena, not the frame; each frame's sweep still runs through the
+    /// plan-driven executor). Any thread count is bit-identical to the
+    /// serial sweep: every particle's arithmetic is self-contained.
+    pub fn drift_parallel(&mut self, dt: f32, threads: usize) {
+        let shards = shard_range(self.frames.len(), threads, 1);
+        if shards.len() <= 1 {
+            for f in self.frames.iter_mut().flatten() {
+                drift_frame(f, dt);
             }
+            return;
         }
+        // The splitter's shards are equal-sized except the tail, so
+        // `chunks_mut` reproduces the same partition with clean
+        // disjoint borrows for the workers.
+        let per = shards[0].len();
+        std::thread::scope(|scope| {
+            for chunk in self.frames.chunks_mut(per) {
+                scope.spawn(move || {
+                    for f in chunk.iter_mut().flatten() {
+                        drift_frame(f, dt);
+                    }
+                });
+            }
+        });
     }
 
     /// A charge-deposit-like reduction: sum weighting per supercell
@@ -316,42 +313,78 @@ impl<M: Mapping + Clone> ParticleStore<M> {
     }
 
     /// Check all frame-list invariants (tests & failure injection).
-    pub fn check_invariants(&self) -> Result<(), String> {
+    pub fn check_invariants(&self) -> crate::error::Result<()> {
         let mut counted = 0usize;
         for (cell, list) in self.cells.iter().enumerate() {
             let mut cur = list.head;
             let mut prev: Option<usize> = None;
             while let Some(idx) = cur {
-                let f =
-                    self.frames[idx].as_ref().ok_or(format!("cell {cell}: freed frame linked"))?;
-                if f.prev != prev {
-                    return Err(format!("cell {cell}: prev link broken at {idx}"));
-                }
-                if f.next.is_some() && f.filled != FRAME_SIZE {
-                    return Err(format!("cell {cell}: non-tail frame {idx} is partial"));
-                }
-                if f.filled == 0 {
-                    return Err(format!("cell {cell}: empty frame {idx} kept"));
-                }
+                let f = self.frames[idx]
+                    .as_ref()
+                    .ok_or_else(|| crate::anyhow!("cell {cell}: freed frame linked"))?;
+                crate::ensure!(f.prev == prev, "cell {cell}: prev link broken at {idx}");
+                crate::ensure!(
+                    f.next.is_none() || f.filled == FRAME_SIZE,
+                    "cell {cell}: non-tail frame {idx} is partial"
+                );
+                crate::ensure!(f.filled > 0, "cell {cell}: empty frame {idx} kept");
                 counted += f.filled;
                 prev = cur;
                 cur = f.next;
             }
-            if list.tail != prev {
-                return Err(format!("cell {cell}: tail mismatch"));
-            }
+            crate::ensure!(list.tail == prev, "cell {cell}: tail mismatch");
         }
-        if counted != self.particles {
-            return Err(format!("particle count {counted} != {}", self.particles));
-        }
+        crate::ensure!(
+            counted == self.particles,
+            "particle count {counted} != {}",
+            self.particles
+        );
         Ok(())
+    }
+}
+
+/// Shard-wise drift kernel: slots past `filled` are untouched (only
+/// the tail frame of a list may be partial).
+struct DriftKernel {
+    filled: usize,
+    dt: f32,
+}
+
+impl ShardKernel for DriftKernel {
+    fn run<C: CursorWrite>(&self, cur: &[C], s: Shard) {
+        drift_cursors(cur, s.start.min(self.filled), s.end.min(self.filled), self.dt);
+    }
+}
+
+/// Drift one frame: plan fast path (EXPERIMENTS.md §Perf) through the
+/// shared executor — loop-invariant cursors, affine or lane-blocked —
+/// with the accessor loop as the generic-plan fallback.
+fn drift_frame<M: Mapping>(frame: &mut Frame<M>, dt: f32) {
+    let n = frame.filled;
+    if par_execute(&mut frame.view, 1, &DriftKernel { filled: n, dt }) {
+        return;
+    }
+    debug_assert!(frame.view.validate().is_ok());
+    for s in 0..n {
+        // SAFETY: s < FRAME_SIZE over a validated view.
+        unsafe {
+            let x = frame.view.get_unchecked::<f32>(s, POS_X)
+                + frame.view.get_unchecked::<f32>(s, MOM_X) * dt;
+            let y = frame.view.get_unchecked::<f32>(s, POS_Y)
+                + frame.view.get_unchecked::<f32>(s, MOM_Y) * dt;
+            let z = frame.view.get_unchecked::<f32>(s, POS_Z)
+                + frame.view.get_unchecked::<f32>(s, MOM_Z) * dt;
+            frame.view.set_unchecked::<f32>(s, POS_X, x);
+            frame.view.set_unchecked::<f32>(s, POS_Y, y);
+            frame.view.set_unchecked::<f32>(s, POS_Z, z);
+        }
     }
 }
 
 /// One drift sweep over plan cursors (affine or piecewise — the kernel
 /// is generic and monomorphizes per plan shape).
-fn drift_cursors<C: CursorWrite>(cur: &[C], n: usize, dt: f32) {
-    for s in 0..n {
+fn drift_cursors<C: CursorWrite>(cur: &[C], start: usize, end: usize, dt: f32) {
+    for s in start..end {
         // SAFETY: s < filled <= FRAME_SIZE == count.
         unsafe {
             let x = cur[POS_X].read_at::<f32>(s) + cur[MOM_X].read_at::<f32>(s) * dt;
@@ -460,6 +493,30 @@ mod tests {
         assert_eq!(c1.len(), 2);
         for p in c1 {
             assert!((0.0..1.0).contains(&p.pos[0]), "wrapped pos {:?}", p.pos);
+        }
+    }
+
+    #[test]
+    fn parallel_drift_is_bit_identical() {
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        for threads in [2usize, 4, 7] {
+            let mut serial = ParticleStore::new(AoSoA::new(&d, dims.clone(), 32), [3, 3, 3]);
+            let mut par = ParticleStore::new(AoSoA::new(&d, dims.clone(), 32), [3, 3, 3]);
+            serial.populate(300, 11);
+            par.populate(300, 11);
+            for _ in 0..3 {
+                serial.drift(0.3);
+                par.drift_parallel(0.3, threads);
+            }
+            par.check_invariants().unwrap();
+            for cell in 0..serial.cell_count() {
+                assert_eq!(
+                    serial.cell_particles(cell),
+                    par.cell_particles(cell),
+                    "threads {threads} cell {cell}"
+                );
+            }
         }
     }
 

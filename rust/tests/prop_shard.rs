@@ -1,0 +1,202 @@
+//! Property tests for the plan-aligned view sharding subsystem
+//! (`view::shard`, EXPERIMENTS.md §Parallel): shards are disjoint,
+//! cover the full record range, respect the plan's lane alignment
+//! across the whole mapping matrix (including tail blocks), and the
+//! parallel workload drivers reproduce the single-thread results
+//! bit-identically.
+
+mod prop_support;
+
+use llama::prelude::*;
+use llama::workloads::nbody::{self, llama_impl};
+use llama::workloads::rng::SplitMix64;
+use prop_support::*;
+
+/// The explicit layout matrix of the shard-soundness property:
+/// AoS (aligned/packed), SoA (SB/MB), AoSoA{2,4,8,16}, One, and Split
+/// compositions (piecewise-composing and gcd-chunking).
+fn mapping_matrix(dim: &RecordDim, dims: &ArrayDims) -> Vec<Box<dyn Mapping>> {
+    let mut out: Vec<Box<dyn Mapping>> = vec![
+        Box::new(AoS::aligned(dim, dims.clone())),
+        Box::new(AoS::packed(dim, dims.clone())),
+        Box::new(SoA::single_blob(dim, dims.clone())),
+        Box::new(SoA::multi_blob(dim, dims.clone())),
+        Box::new(One::new(dim, dims.clone())),
+    ];
+    for lanes in [2usize, 4, 8, 16] {
+        out.push(Box::new(AoSoA::new(dim, dims.clone(), lanes)));
+    }
+    if dim.fields.len() >= 2 {
+        let sel = RecordCoord::new(vec![1]);
+        out.push(Box::new(Split::new(
+            dim,
+            dims.clone(),
+            sel.clone(),
+            |d, ad| AoSoA::new(d, ad, 4),
+            |d, ad| SoA::multi_blob(d, ad),
+        )));
+        out.push(Box::new(Split::new(
+            dim,
+            dims.clone(),
+            sel,
+            |d, ad| AoSoA::new(d, ad, 4),
+            |d, ad| AoSoA::new(d, ad, 6),
+        )));
+    }
+    out
+}
+
+fn check_shards(shards: &[Shard], count: usize, parts: usize, align: usize, label: &str) {
+    assert!(shards.len() <= parts.max(1), "{label}: more shards than parts");
+    let mut expect = 0usize;
+    for s in shards {
+        assert_eq!(s.start, expect, "{label}: gap/overlap at {s:?}");
+        assert!(s.end > s.start, "{label}: empty shard {s:?}");
+        assert_eq!(s.start % align, 0, "{label}: start of {s:?} not {align}-aligned");
+        if s.end != count {
+            assert_eq!(s.end % align, 0, "{label}: interior end of {s:?} not {align}-aligned");
+        }
+        expect = s.end;
+    }
+    assert_eq!(expect, count, "{label}: shards do not cover 0..{count}");
+}
+
+#[test]
+fn prop_shards_disjoint_covering_and_lane_aligned() {
+    let d = nbody::particle_dim();
+    // Counts chosen to exercise tail blocks at every lane count in the
+    // matrix (97 and 257 are prime, 13 < some lane counts).
+    for count in [0usize, 1, 5, 13, 64, 97, 257] {
+        let dims = ArrayDims::linear(count);
+        for m in mapping_matrix(&d, &dims) {
+            let plan = m.plan();
+            let align = shard_align(&plan);
+            // Piecewise plans must align to their lane count.
+            if let AddrPlan::PiecewiseAoSoA(p) = plan.addr() {
+                assert_eq!(align, p.lanes, "{}", m.mapping_name());
+            }
+            for parts in [1usize, 2, 3, 4, 8, 16] {
+                let shards = shard_plan(&plan, parts);
+                let label = format!("{} count {count} parts {parts}", m.mapping_name());
+                check_shards(&shards, count, parts, align, &label);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_shards_on_random_mappings() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x5AAD);
+        let dim = gen_record_dim(&mut rng);
+        let dims = gen_dims(&mut rng);
+        let m = gen_mapping(&mut rng, &dim, &dims);
+        let plan = m.plan();
+        let align = shard_align(&plan);
+        let parts = 1 + rng.below(8);
+        let shards = shard_plan(&plan, parts);
+        let label = format!("seed {seed}: {}", m.mapping_name());
+        check_shards(&shards, dims.count(), parts, align, &label);
+    }
+}
+
+#[test]
+fn pair_align_lands_on_both_layouts() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(4096 + 17);
+    let cases: Vec<(Box<dyn Mapping>, Box<dyn Mapping>, usize)> = vec![
+        (
+            Box::new(SoA::multi_blob(&d, dims.clone())),
+            Box::new(AoSoA::new(&d, dims.clone(), 32)),
+            32,
+        ),
+        (
+            Box::new(AoSoA::new(&d, dims.clone(), 4)),
+            Box::new(AoSoA::new(&d, dims.clone(), 6)),
+            12,
+        ),
+        (
+            Box::new(AoS::packed(&d, dims.clone())),
+            Box::new(AoS::aligned(&d, dims.clone())),
+            1,
+        ),
+    ];
+    for (a, b, expect) in cases {
+        let align = pair_align(&a.plan(), &b.plan());
+        assert_eq!(align, expect, "{} x {}", a.mapping_name(), b.mapping_name());
+        check_shards(
+            &shard_range(dims.count(), 4, align),
+            dims.count(),
+            4,
+            align,
+            "pair",
+        );
+    }
+}
+
+/// The acceptance property of the refactor: running any workload over
+/// shards (any thread count) is bit-identical to the single-thread
+/// sweep — each record's arithmetic is self-contained, so sharding
+/// changes scheduling, never results.
+#[test]
+fn parallel_nbody_is_bit_identical_across_layouts() {
+    let n = 101; // tails at every lane count
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(n);
+    let state = nbody::init_particles(n, 31);
+
+    fn run<M: Mapping>(mapping: M, s: &nbody::ParticleSoA, threads: usize) -> nbody::ParticleSoA {
+        let mut v = alloc_view(mapping);
+        llama_impl::load_state(&mut v, s);
+        llama_impl::update_parallel(&mut v, threads);
+        llama_impl::mv_parallel(&mut v, threads);
+        llama_impl::store_state(&v)
+    }
+
+    let expect = run(AoS::aligned(&d, dims.clone()), &state, 1);
+    for threads in [1usize, 2, 5] {
+        assert_eq!(expect, run(AoS::aligned(&d, dims.clone()), &state, threads));
+        assert_eq!(expect, run(AoS::packed(&d, dims.clone()), &state, threads));
+        assert_eq!(expect, run(SoA::multi_blob(&d, dims.clone()), &state, threads));
+        assert_eq!(expect, run(SoA::single_blob(&d, dims.clone()), &state, threads));
+        assert_eq!(expect, run(AoSoA::new(&d, dims.clone(), 8), &state, threads));
+        assert_eq!(expect, run(AoSoA::new(&d, dims.clone(), 16), &state, threads));
+        let split = Split::new(
+            &d,
+            dims.clone(),
+            RecordCoord::new(vec![0]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        );
+        assert_eq!(expect, run(split, &state, threads));
+    }
+}
+
+#[test]
+fn parallel_lbm_is_bit_identical() {
+    use llama::workloads::lbm::step::{init, step, step_parallel};
+    use llama::workloads::lbm::{cell_dim, Geometry};
+    let geo = Geometry::channel_with_sphere(6, 4, 4, 3);
+    let d = cell_dim();
+    let mut a = alloc_view(AoSoA::new(&d, geo.dims.clone(), 16));
+    let mut serial = alloc_view(AoSoA::new(&d, geo.dims.clone(), 16));
+    let mut par = alloc_view(AoSoA::new(&d, geo.dims.clone(), 16));
+    init(&mut a, &geo);
+    step(&a, &mut serial);
+    for threads in [2usize, 3, 6] {
+        step_parallel(&a, &mut par, threads);
+        assert_eq!(serial.blobs(), par.blobs(), "threads {threads}");
+    }
+}
+
+#[test]
+fn parallel_hep_single_thread_is_exact() {
+    use llama::workloads::hep::{generate_events, isolated_energy, isolated_energy_parallel};
+    let d = llama::workloads::hep::event_dim();
+    let mut v = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(77)));
+    generate_events(&mut v, 13);
+    let serial = isolated_energy(&v, 90);
+    assert_eq!(isolated_energy_parallel(&v, 90, 1), serial);
+    let par4 = isolated_energy_parallel(&v, 90, 4);
+    assert!((par4 - serial).abs() / serial.abs().max(1.0) < 1e-9);
+}

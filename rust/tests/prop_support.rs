@@ -4,6 +4,10 @@
 //! exhaustive-ish iteration. Each property runs `CASES` generated
 //! cases; failures print the seed for replay.
 
+// Included via `mod prop_support;` by several test crates, none of
+// which uses every helper.
+#![allow(dead_code)]
+
 use llama::prelude::*;
 use llama::workloads::rng::SplitMix64;
 

@@ -15,9 +15,11 @@ fn main() {
     }
     let t = llama::coordinator::fig7_copy::run(&o);
     println!("{}", t.to_text());
-    let (naive, chunked) = llama::coordinator::fig7_copy::headline(&o);
+    let (naive, chunked, program) = llama::coordinator::fig7_copy::headline(&o);
     println!(
-        "headline (SoA MB -> AoSoA32): aosoa_copy is {:.2}x the naive copy",
-        naive / chunked
+        "headline (SoA MB -> AoSoA32): aosoa_copy is {:.2}x, precompiled program {:.2}x \
+         the naive copy",
+        naive / chunked,
+        naive / program
     );
 }

@@ -20,6 +20,7 @@ COMMANDS:
   lbm         fig 8: D3Q19 lattice-Boltzmann across layouts
   picframe    fig 10: PIConGPU-style particle frames across layouts
   bench-fig5  run fig 5 and write the BENCH_fig5.json baseline
+  bench-fig7  run fig 7 and write the BENCH_fig7.json baseline
   dump        fig 4: write SVG/HTML layout dumps + heatmap
   e2e         end-to-end driver: LLAMA memory -> PJRT n-body steps
   all         run every figure driver (quick mode by default)
@@ -112,6 +113,11 @@ pub fn run(cli: Cli) -> Result<()> {
             // Refuses (non-zero exit) to overwrite the checked-in
             // trajectory with a baseline containing an empty table.
             std::fs::write(path, fig5_nbody::baseline_json_checked(o)?)?;
+            println!("wrote {path}");
+        }
+        "bench-fig7" => {
+            let path = "BENCH_fig7.json";
+            std::fs::write(path, fig7_copy::baseline_json_checked(o)?)?;
             println!("wrote {path}");
         }
         "dump" => dump(&cli.out_dir)?,

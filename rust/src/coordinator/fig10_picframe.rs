@@ -70,6 +70,22 @@ pub fn run(o: &Opts) -> Table {
     }
     run_case("AoS", AoS::aligned(&d, dims.clone()), grid, per_cell, steps, o, &mut rows);
 
+    // The fig 9 layout-exchange path: one compiled CopyProgram replayed
+    // over every frame of the store (SoA -> AoSoA32 and back).
+    {
+        let mut st = ParticleStore::new(SoA::multi_blob(&d, dims.clone()), grid);
+        st.populate(per_cell, 99);
+        let total = st.particle_count();
+        let r = bench("reshuffle", 1, o.iters, || {
+            let aosoa = st.reshuffle(AoSoA::new(&d, dims.clone(), 32));
+            black_box(aosoa.particle_count());
+            st = aosoa.reshuffle(SoA::multi_blob(&d, dims.clone()));
+        });
+        st.check_invariants().expect("frame invariants after reshuffle");
+        assert_eq!(st.particle_count(), total, "reshuffle lost particles");
+        rows.push(("reshuffle SoA<->AoSoA32 (program)".to_string(), r.median_ns));
+    }
+
     let mut t = Table::new(
         format!(
             "fig10 picframe (grid {grid:?}, {per_cell}/cell, {steps} steps of drift+deposit+exchange)"
@@ -93,10 +109,11 @@ mod tests {
         o.n = Some(64);
         o.iters = 1;
         let t = run(&o);
-        assert_eq!(t.rows.len(), 8);
+        assert_eq!(t.rows.len(), 9);
         let txt = t.to_text();
         assert!(txt.contains("AoSoA32"));
         assert!(txt.contains("SoA (baseline)"));
+        assert!(txt.contains("reshuffle SoA<->AoSoA32 (program)"));
         assert_eq!(t.rows[0][2], "1.000");
     }
 }

@@ -7,9 +7,10 @@
 use super::bench::{bench, black_box, Opts};
 use super::report::{fmt_gib, Table};
 use crate::array::ArrayDims;
+use crate::copy::program::{execute_parallel, shard_programs};
 use crate::copy::{
     aosoa_copy, aosoa_compatible, copy_aosoa_parallel, copy_naive, copy_naive_parallel,
-    copy_stdcopy, views_equal, ChunkOrder,
+    copy_stdcopy, views_equal, ChunkOrder, CopyProgram,
 };
 use crate::mapping::{total_blob_bytes, AoS, AoSoA, Mapping, SoA};
 use crate::view::{alloc_view, View};
@@ -59,6 +60,10 @@ fn strategies<MS, MD>(
     fill(&mut src);
     let mut dst = alloc_view(dst_m);
     let threads = o.threads();
+    // Compile once, replay every iteration — the program rows measure
+    // exactly the amortization the compiler exists for.
+    let prog = CopyProgram::compile(src.mapping(), dst.mapping());
+    let shard_progs = shard_programs(src.mapping(), dst.mapping(), threads);
 
     let mut case = |name: &str, f: &mut dyn FnMut(&View<MS, Vec<u8>>, &mut View<MD, Vec<u8>>)| {
         let r = bench(name, 1, o.iters, || {
@@ -87,6 +92,12 @@ fn strategies<MS, MD>(
             copy_aosoa_parallel(s, d, ChunkOrder::WriteContiguous, Some(threads))
         });
     }
+    // The compiled CopyProgram: chunk intersections derived once
+    // outside the timed loop (every pair compiles — chunked, strided or
+    // gather), then replayed per iteration; (p) replays one
+    // sub-program per plan-aligned shard on scoped threads.
+    case("program", &mut |s, d| prog.execute(s, d));
+    case("program (p)", &mut |s, d| execute_parallel(&shard_progs, s, d));
 }
 
 /// Run fig 7: particle (7 floats) and HEP event (100 fields) copies.
@@ -169,8 +180,9 @@ pub fn run(o: &Opts) -> Table {
 }
 
 /// Returns the subset of `run` used by regression tests: confirms the
-/// chunked copy beats the naive copy for the canonical pair.
-pub fn headline(o: &Opts) -> (f64, f64) {
+/// chunked copy and the precompiled program beat the naive copy for
+/// the canonical pair. Returns `(naive, chunked, program)` median ns.
+pub fn headline(o: &Opts) -> (f64, f64, f64) {
     let n = o.n.unwrap_or(1 << 16);
     let pd = nbody::particle_dim();
     let dims = ArrayDims::linear(n);
@@ -186,7 +198,33 @@ pub fn headline(o: &Opts) -> (f64, f64) {
         aosoa_copy(&src, &mut dst, ChunkOrder::ReadContiguous);
         black_box(dst.blobs());
     });
-    (naive.median_ns, chunked.median_ns)
+    let prog = CopyProgram::compile(src.mapping(), dst.mapping());
+    let program = bench("program", 1, o.iters, || {
+        prog.execute(&src, &mut dst);
+        black_box(dst.blobs());
+    });
+    (naive.median_ns, chunked.median_ns, program.median_ns)
+}
+
+/// Serialize a fig 7 run as the `BENCH_fig7.json` baseline document
+/// (regenerate with `cargo run --release -- bench-fig7`; CI's
+/// bench-fig7 smoke step regenerates + schema-checks it in quick
+/// mode). Refuses structurally to write a baseline with an empty table
+/// or without the program-path rows — those mean a broken run.
+pub fn baseline_json_checked(o: &Opts) -> crate::error::Result<String> {
+    let t = run(o);
+    crate::ensure!(!t.rows.is_empty(), "bench-fig7: table produced no rows");
+    crate::ensure!(
+        t.rows.iter().any(|r| r[0].contains("program")),
+        "bench-fig7: no program rows — copy path not routed through CopyProgram"
+    );
+    Ok(format!(
+        "{{\n  \"figure\": \"fig7_copy\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
+         \"unit\": \"ms (median) / GiB per s\",\n  \"copy\": {}\n}}\n",
+        if o.quick { "quick" } else { "full" },
+        o.iters,
+        t.to_json()
+    ))
 }
 
 #[cfg(test)]
@@ -202,22 +240,40 @@ mod tests {
         let txt = t.to_text();
         assert!(txt.contains("aosoa_copy (r)"));
         assert!(txt.contains("naive (p)"));
+        assert!(txt.contains("program"));
+        assert!(txt.contains("program (p)"));
         assert!(txt.contains("particle memcpy (p)"));
         assert!(txt.contains("event AoS -> SoA MB"));
-        // AoS->SoA MB pair is chunkable (packed AoS = 1 lane), so it has
-        // 7 strategy rows; SoA->AoSoA pairs too.
-        assert!(t.rows.len() >= 3 * 7 + 4 + 4);
+        // Every pair is chunkable (packed AoS = 1 lane), so each of the
+        // 5 pairs has 9 strategy rows (7 + program + program (p)).
+        assert!(t.rows.len() >= 3 * 9 + 4 + 4);
     }
 
     #[test]
-    fn chunked_copy_not_slower_than_naive() {
+    fn chunked_and_program_copies_not_slower_than_naive() {
         let mut o = Opts::quick();
         o.n = Some(1 << 15);
         o.iters = 3;
-        let (naive, chunked) = headline(&o);
+        let (naive, chunked, program) = headline(&o);
         assert!(
             chunked < naive * 1.2,
             "aosoa_copy ({chunked} ns) should not lose to naive ({naive} ns)"
         );
+        assert!(
+            program < naive * 1.2,
+            "precompiled program ({program} ns) should not lose to naive ({naive} ns)"
+        );
+    }
+
+    #[test]
+    fn baseline_json_carries_the_copy_table() {
+        let mut o = Opts::quick();
+        o.n = Some(1 << 10);
+        o.iters = 1;
+        let j = baseline_json_checked(&o).expect("populated run passes the gates");
+        assert!(j.contains("\"figure\": \"fig7_copy\""), "{j}");
+        assert!(j.contains("\"copy\": {"), "{j}");
+        assert!(j.contains("program (p)"), "{j}");
+        assert!(!j.contains("\"rows\": []"), "empty table in {j}");
     }
 }

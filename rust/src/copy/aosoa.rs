@@ -43,7 +43,10 @@ where
 }
 
 /// [`aosoa_copy`] over plans the caller already compiled (the
-/// dispatcher compiles each side exactly once per copy).
+/// dispatcher compiles each side exactly once per copy). Thin wrapper
+/// over the program compiler's chunked strategy — the traversal that
+/// used to live here now runs once at compile time and replays as a
+/// span list ([`super::program`]).
 pub(crate) fn aosoa_copy_with<MS, MD, BS, BD>(
     src: &View<MS, BS>,
     dst: &mut View<MD, BD>,
@@ -57,57 +60,18 @@ pub(crate) fn aosoa_copy_with<MS, MD, BS, BD>(
     BD: BlobMut,
 {
     debug_assert!(super::same_data_space(src.mapping(), dst.mapping()));
-    let src_lanes = sp
-        .chunk_lanes()
+    sp.chunk_lanes()
         .expect("aosoa_copy: source is not an AoSoA-family layout");
-    let dst_lanes = dp
-        .chunk_lanes()
+    dp.chunk_lanes()
         .expect("aosoa_copy: destination is not an AoSoA-family layout");
     assert!(
         sp.native() && dp.native(),
         "aosoa_copy requires native byte representation on both sides"
     );
-
-    let info = src.mapping().info().clone();
     let n = src.count();
-    if n == 0 {
-        return;
-    }
-
-    // Iterate lane-blocks of the side we want to touch contiguously;
-    // within a block, fields are consecutive in that side's storage.
-    let outer_lanes = match order {
-        ChunkOrder::ReadContiguous => src_lanes,
-        ChunkOrder::WriteContiguous => dst_lanes,
-    };
-
-    let leaves = info.leaf_count();
-    let mut block_start = 0usize;
-    while block_start < n {
-        let block_end = (block_start + outer_lanes).min(n);
-        for leaf in 0..leaves {
-            let size = info.fields[leaf].size();
-            let mut pos = block_start;
-            while pos < block_end {
-                // Largest run not crossing a lane boundary on either side.
-                let src_run_end = ((pos / src_lanes) + 1) * src_lanes;
-                let dst_run_end = ((pos / dst_lanes) + 1) * dst_lanes;
-                let end = block_end.min(src_run_end).min(dst_run_end);
-                let len = end - pos;
-                // Run starts resolve through the compiled plans; only
-                // generic plans (e.g. curve-ordered packed AoS) pay the
-                // dynamic translation.
-                let (snr, soff) = sp.resolve_with(src.mapping(), leaf, pos);
-                let (dm, dblobs) = dst.mapping_and_blobs_mut();
-                let (dnr, doff) = dp.resolve_with(dm, leaf, pos);
-                let nbytes = len * size;
-                dblobs[dnr].as_bytes_mut()[doff..doff + nbytes]
-                    .copy_from_slice(&src.blobs()[snr].as_bytes()[soff..soff + nbytes]);
-                pos = end;
-            }
-        }
-        block_start = block_end;
-    }
+    let prog =
+        super::program::compile_range_with(src.mapping(), dst.mapping(), sp, dp, order, 0, n);
+    prog.execute(src, dst);
 }
 
 #[cfg(test)]

@@ -1,6 +1,8 @@
 //! Per-blob memcpy for identical layouts (paper §3.9: "Copying the
 //! contents of a view from one memory region to another if mapping and
-//! size are identical is trivial").
+//! size are identical is trivial") — a thin wrapper over the program
+//! compiler, whose identical-layout strategy emits exactly one
+//! [`super::CopyOp::Memcpy`] per blob.
 
 use crate::blob::{Blob, BlobMut};
 use crate::mapping::Mapping;
@@ -15,31 +17,18 @@ where
     BS: Blob,
     BD: BlobMut,
 {
+    let sp = src.mapping().plan();
+    let dp = dst.mapping().plan();
     assert!(
-        super::layouts_identical(src.mapping(), dst.mapping()),
+        super::layouts_identical_with(src.mapping(), dst.mapping(), &sp, &dp),
         "copy_blobwise requires identical layouts: {} vs {}",
         src.mapping().mapping_name(),
         dst.mapping().mapping_name()
     );
-    copy_blobwise_prechecked(src, dst);
-}
-
-/// The per-blob memcpy body; caller has already established layout
-/// identity (the dispatcher, which compiled both plans once).
-pub(crate) fn copy_blobwise_prechecked<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>)
-where
-    MS: Mapping,
-    MD: Mapping,
-    BS: Blob,
-    BD: BlobMut,
-{
-    let nblobs = src.mapping().blob_count();
-    let sizes: Vec<usize> = (0..nblobs).map(|b| src.mapping().blob_size(b)).collect();
-    let (_, dblobs) = dst.mapping_and_blobs_mut();
-    for nr in 0..nblobs {
-        let n = sizes[nr];
-        dblobs[nr].as_bytes_mut()[..n].copy_from_slice(&src.blobs()[nr].as_bytes()[..n]);
-    }
+    let order = super::ChunkOrder::ReadContiguous;
+    let prog = super::program::compile_with(src.mapping(), dst.mapping(), &sp, &dp, order);
+    debug_assert_eq!(prog.method(), super::CopyMethod::Blobwise);
+    prog.execute(src, dst);
 }
 
 #[cfg(test)]

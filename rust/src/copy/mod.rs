@@ -11,18 +11,24 @@
 //! * [`aosoa::aosoa_copy`] — chunked copy between any two AoSoA-family
 //!   layouts (packed AoS = 1 lane, AoSoA-L, SoA = N lanes), in
 //!   read-contiguous or write-contiguous traversal.
-//! * [`naive::copy_naive`] — field-wise nested-loop fallback.
+//! * [`naive::copy_naive`] — field-wise nested-loop fallback (and the
+//!   differential oracle the program compiler is tested against).
 //! * [`stdcopy::copy_stdcopy`] — iterator-driven element copy, the
 //!   paper's `std::copy` analogue.
 //! * [`parallel`] — multi-threaded versions of naive and aosoa.
+//! * [`program`] — the (src plan, dst plan) pair compiled **once** into
+//!   an executable [`program::CopyProgram`]: span-merged memcpys,
+//!   strided runs, or a gather fallback. `blobwise` and `aosoa` are
+//!   thin wrappers over this compiler.
 //!
-//! [`copy`] dispatches to the best applicable strategy, like the paper's
-//! `llama::copy`.
+//! [`copy`] (and [`copy_parallel`]) compile the pair into a program and
+//! execute it, like the paper's `llama::copy`.
 
 pub mod aosoa;
 pub mod blobwise;
 pub mod naive;
 pub mod parallel;
+pub mod program;
 pub mod stdcopy;
 
 use crate::blob::{Blob, BlobMut};
@@ -33,13 +39,22 @@ pub use aosoa::{aosoa_copy, ChunkOrder};
 pub use blobwise::copy_blobwise;
 pub use naive::{copy_naive, copy_naive_field_major};
 pub use parallel::{copy_aosoa_parallel, copy_naive_parallel};
+pub use program::{CopyOp, CopyProgram};
 pub use stdcopy::copy_stdcopy;
 
-/// Which strategy [`copy`] selected (returned for tests/reports).
+/// Which strategy the compiled program uses (returned by [`copy`] /
+/// [`copy_parallel`] for tests and reports).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CopyMethod {
+    /// Identical layouts: one memcpy per blob.
     Blobwise,
+    /// Both sides AoSoA-family: span-merged chunk runs.
     AoSoAChunked,
+    /// Both sides affine (outside the chunkable family): strided-run
+    /// program — pairs that were field-wise before the compiler.
+    Program,
+    /// Generic addressing or representation conversion on either side:
+    /// element gather through the mappings.
     FieldWise,
 }
 
@@ -54,12 +69,12 @@ pub fn same_data_space<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(src: &MS, dst
 /// either equal non-generic [`LayoutPlan`]s (the plan fully determines
 /// the byte placement) or — for generic plans, where the closed form is
 /// unavailable — the same mapping identity.
-pub fn layouts_identical<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
+pub fn layouts_identical<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(src: &MS, dst: &MD) -> bool {
     layouts_identical_with(src, dst, &src.plan(), &dst.plan())
 }
 
 /// [`layouts_identical`] over plans the caller already compiled.
-pub(crate) fn layouts_identical_with<MS: Mapping, MD: Mapping>(
+pub(crate) fn layouts_identical_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
     src: &MS,
     dst: &MD,
     sp: &LayoutPlan,
@@ -92,6 +107,17 @@ pub fn plans_chunk_compatible(src: &LayoutPlan, dst: &LayoutPlan) -> bool {
     src.native() && dst.native() && src.chunk_lanes().is_some() && dst.chunk_lanes().is_some()
 }
 
+/// True if both plans admit the strided-run program: native affine
+/// addressing on both sides — the pairs outside the chunkable family
+/// that still compile to a closed form (checked *after*
+/// [`plans_chunk_compatible`] by the program compiler).
+pub fn plans_strided_compatible(src: &LayoutPlan, dst: &LayoutPlan) -> bool {
+    src.native()
+        && dst.native()
+        && matches!(src.addr(), AddrPlan::Affine(_))
+        && matches!(dst.addr(), AddrPlan::Affine(_))
+}
+
 /// True if both mappings are in the AoSoA family with native
 /// representation, enabling the chunked copy.
 pub fn aosoa_compatible<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
@@ -99,8 +125,12 @@ pub fn aosoa_compatible<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
 }
 
 /// Layout-aware copy dispatcher (the paper's `llama::copy`): compiles
-/// both mappings into [`LayoutPlan`]s, compares them to pick the
-/// fastest applicable strategy, and returns which one ran.
+/// both mappings into [`LayoutPlan`]s, compiles the pair into a
+/// [`CopyProgram`], executes it, and returns the strategy it used.
+///
+/// One-shot convenience — for repeated copies between the same layout
+/// pair, compile the program once with [`CopyProgram::compile`] and
+/// execute it per call.
 ///
 /// Panics if the views do not share a data space.
 pub fn copy<MS, MD, BS, BD>(src: &View<MS, BS>, dst: &mut View<MD, BD>) -> CopyMethod
@@ -116,20 +146,43 @@ where
         src.mapping().mapping_name(),
         dst.mapping().mapping_name()
     );
-    // Compile each side exactly once; every strategy below consumes the
-    // same two plans.
+    // Compile each side exactly once; the program embeds both plans'
+    // knowledge as explicit ops.
     let sp = src.mapping().plan();
     let dp = dst.mapping().plan();
-    if layouts_identical_with(src.mapping(), dst.mapping(), &sp, &dp) {
-        blobwise::copy_blobwise_prechecked(src, dst);
-        CopyMethod::Blobwise
-    } else if plans_chunk_compatible(&sp, &dp) {
-        aosoa::aosoa_copy_with(src, dst, ChunkOrder::ReadContiguous, &sp, &dp);
-        CopyMethod::AoSoAChunked
-    } else {
-        copy_naive(src, dst);
-        CopyMethod::FieldWise
-    }
+    let prog =
+        program::compile_with(src.mapping(), dst.mapping(), &sp, &dp, ChunkOrder::ReadContiguous);
+    prog.execute(src, dst);
+    prog.method()
+}
+
+/// Multi-threaded [`copy`]: compiles one sub-program per plan-aligned
+/// shard ([`crate::view::shard::pair_align`] boundaries — runs start
+/// lane-blocked on *both* layouts) and executes them on scoped worker
+/// threads. Gather-fallback pairs and aliasing destinations (`One`)
+/// run serially; so do small inputs, where spawn overhead dominates.
+///
+/// Panics if the views do not share a data space.
+pub fn copy_parallel<MS, MD, BS, BD>(
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    threads: Option<usize>,
+) -> CopyMethod
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob + Sync,
+    BD: BlobMut,
+{
+    assert!(
+        same_data_space(src.mapping(), dst.mapping()),
+        "copy between different data spaces: {} vs {}",
+        src.mapping().mapping_name(),
+        dst.mapping().mapping_name()
+    );
+    let sp = src.mapping().plan();
+    let dp = dst.mapping().plan();
+    program::run_parallel_with(src, dst, &sp, &dp, ChunkOrder::ReadContiguous, threads)
 }
 
 /// Field-wise equality of two views over the same data space (test
@@ -263,17 +316,39 @@ mod tests {
     }
 
     #[test]
-    fn dispatcher_falls_back_to_fieldwise() {
+    fn dispatcher_compiles_strided_program_for_affine_pairs() {
         let d = particle_dim();
         let src = {
             let mut v = alloc_view(AoS::aligned(&d, ArrayDims::linear(16)));
             fill_distinct(&mut v);
             v
         };
-        // Aligned AoS is not in the chunkable family.
+        // Aligned AoS is not in the chunkable family, but both sides
+        // are affine: strided-run program (field-wise before PR 3).
         let mut dst = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(16)));
-        assert_eq!(copy(&src, &mut dst), CopyMethod::FieldWise);
+        assert_eq!(copy(&src, &mut dst), CopyMethod::Program);
         assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    fn copy_parallel_matches_serial_across_strategies() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(4096 + 17);
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_distinct(&mut src);
+        let mut serial = alloc_view(AoSoA::new(&d, dims.clone(), 32));
+        assert_eq!(copy(&src, &mut serial), CopyMethod::AoSoAChunked);
+        for threads in [1usize, 2, 7] {
+            let mut par = alloc_view(AoSoA::new(&d, dims.clone(), 32));
+            assert_eq!(copy_parallel(&src, &mut par, Some(threads)), CopyMethod::AoSoAChunked);
+            assert_eq!(par.blobs(), serial.blobs(), "threads {threads}");
+        }
+        // Aliasing destination collapses to one shard and stays safe:
+        // like the naive copy, the last record's values win.
+        let mut one = alloc_view(crate::mapping::One::new(&d, dims.clone()));
+        assert_eq!(copy_parallel(&src, &mut one, Some(8)), CopyMethod::Program);
+        let last = src.count() - 1;
+        assert_eq!(one.get::<f64>(0, 4), src.get::<f64>(last, 4));
     }
 
     #[test]

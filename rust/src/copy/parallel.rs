@@ -2,9 +2,10 @@
 //!
 //! The record range is split into contiguous shards by the shared
 //! plan-aligned splitter ([`crate::view::shard`]): `shard_range` for
-//! the field-wise copy, `pair_align` (the lcm of both plans'
-//! lane-block alignments) for the chunked copy, so thread boundaries
-//! never straddle an AoSoA lane block on either side. Soundness:
+//! the field-wise copy; the chunked copy compiles one
+//! [`super::program::CopyProgram`] per `shard_pair` shard (the lcm of
+//! both plans' lane-block alignments), so thread boundaries never
+//! straddle an AoSoA lane block on either side. Soundness:
 //! distinct linear indices map to disjoint destination byte ranges for
 //! every *storage* mapping (the fundamental mapping invariant,
 //! property-tested in `rust/tests`), so threads never write the same
@@ -13,7 +14,7 @@
 
 use crate::blob::{Blob, BlobMut};
 use crate::mapping::Mapping;
-use crate::view::shard::{pair_align, shard_range};
+use crate::view::shard::shard_range;
 use crate::view::View;
 
 /// Base pointers + lengths of the destination blobs, shared across the
@@ -96,7 +97,11 @@ pub fn copy_naive_parallel<MS, MD, BS, BD>(
     });
 }
 
-/// Parallel chunked AoSoA-family copy (paper's "aosoa_copy (r/w) (p)").
+/// Parallel chunked AoSoA-family copy (paper's "aosoa_copy (r/w) (p)"):
+/// a thin wrapper over the program compiler — one sub-program per
+/// plan-aligned shard, executed on scoped threads. The bespoke chunk
+/// traversal that used to live here is now
+/// [`super::program::compile_range_with`] run once per shard.
 pub fn copy_aosoa_parallel<MS, MD, BS, BD>(
     src: &View<MS, BS>,
     dst: &mut View<MD, BD>,
@@ -111,79 +116,9 @@ pub fn copy_aosoa_parallel<MS, MD, BS, BD>(
     debug_assert!(super::aosoa_compatible(src.mapping(), dst.mapping()));
     let sp = src.mapping().plan();
     let dp = dst.mapping().plan();
-    let src_lanes = sp.chunk_lanes().expect("source not AoSoA-family");
-    let dst_lanes = dp.chunk_lanes().expect("destination not AoSoA-family");
-    let n = src.count();
-    let threads = threads.unwrap_or_else(default_threads).min(n.max(1));
-    if threads <= 1 || n < 1024 {
-        super::aosoa::aosoa_copy_with(src, dst, order, &sp, &dp);
-        return;
-    }
-    let info = src.mapping().info().clone();
-    let sizes: Vec<usize> = info.fields.iter().map(|f| f.size()).collect();
-    let outer_lanes = match order {
-        super::ChunkOrder::ReadContiguous => src_lanes,
-        super::ChunkOrder::WriteContiguous => dst_lanes,
-    };
-    let (dmap, dblobs) = dst.mapping_and_blobs_mut();
-    let dst_ptrs = DstBlobs {
-        ptrs: dblobs
-            .iter_mut()
-            .map(|b| {
-                let s = b.as_bytes_mut();
-                (s.as_mut_ptr(), s.len())
-            })
-            .collect(),
-    };
-    // Thread boundaries land on lane-run boundaries of *both* layouts
-    // (SoA-style whole-array runs contribute 1 and split freely), so no
-    // shard starts or ends mid-block — the old per-side cap could hand
-    // out splits straddling the other side's AoSoA lane blocks.
-    let ranges = shard_range(n, threads, pair_align(&sp, &dp));
-    std::thread::scope(|scope| {
-        for sh in ranges {
-            let dst_ptrs = &dst_ptrs;
-            let sizes = &sizes;
-            let (sp, dp) = (&sp, &dp);
-            scope.spawn(move || {
-                let (t_start, t_end) = (sh.start, sh.end);
-                let leaves = sizes.len();
-                let mut block_start = t_start;
-                while block_start < t_end {
-                    let block_end =
-                        (((block_start / outer_lanes) + 1) * outer_lanes).min(t_end);
-                    for leaf in 0..leaves {
-                        let size = sizes[leaf];
-                        let mut pos = block_start;
-                        while pos < block_end {
-                            let src_run_end = ((pos / src_lanes) + 1) * src_lanes;
-                            let dst_run_end = ((pos / dst_lanes) + 1) * dst_lanes;
-                            let end = block_end.min(src_run_end).min(dst_run_end);
-                            let len = end - pos;
-                            let (snr, soff) = sp.resolve_with(src.mapping(), leaf, pos);
-                            let (dnr, doff) = dp.resolve_with(dmap, leaf, pos);
-                            let nbytes = len * size;
-                            let sbytes = src.blobs()[snr].as_bytes();
-                            let (dptr, dlen) = dst_ptrs.ptrs[dnr];
-                            assert!(doff + nbytes <= dlen && soff + nbytes <= sbytes.len());
-                            // SAFETY: checked above; thread ranges are
-                            // disjoint in lin, so dst ranges are
-                            // disjoint by the mapping invariant.
-                            unsafe {
-                                std::ptr::copy_nonoverlapping(
-                                    sbytes.as_ptr().add(soff),
-                                    dptr.add(doff),
-                                    nbytes,
-                                );
-                            }
-                            pos = end;
-                        }
-                    }
-                    block_start = block_end;
-                }
-            });
-        }
-    });
+    sp.chunk_lanes().expect("source not AoSoA-family");
+    dp.chunk_lanes().expect("destination not AoSoA-family");
+    super::program::run_parallel_with(src, dst, &sp, &dp, order, threads);
 }
 
 #[cfg(test)]

@@ -1,0 +1,851 @@
+//! [`CopyProgram`]: a (src plan, dst plan) pair compiled **once** into
+//! an executable copy schedule (EXPERIMENTS.md §Copy).
+//!
+//! `aosoa_copy` re-derives the chunk intersections of the two layouts
+//! on every call; the program compiler runs that derivation once and
+//! materializes the result as an ordered op list, so repeated copies
+//! between the same layout pair — the common case in double-buffered
+//! steps, frame reshuffles and serialization — replay precomputed
+//! spans with zero mapping calls:
+//!
+//! * [`CopyOp::Memcpy`] — a raw byte span, emitted by the chunked
+//!   strategy with **adjacent-span coalescing**: runs that follow each
+//!   other in both layouts (across leaves and lane blocks) merge into
+//!   one span. Blobwise-identical layouts compile to exactly one
+//!   `Memcpy` per blob; AoSoA-N ↔ AoSoA-M pairs to gcd-sized runs.
+//! * [`CopyOp::StridedRun`] — affine ↔ affine leaves with mismatched
+//!   strides (e.g. aligned AoS ↔ SoA, previously field-wise): one op
+//!   per leaf replaces per-record mapping calls.
+//! * [`CopyOp::Gather`] — element fallback when either side is generic
+//!   or the byte representations differ; resolves through the mappings
+//!   at execution time, bit-identical to [`super::copy_naive`].
+//!
+//! Strategy selection (also what [`super::copy`] reports):
+//!
+//! | Pair | Strategy | [`super::CopyMethod`] |
+//! |---|---|---|
+//! | identical layouts | per-blob memcpy | `Blobwise` |
+//! | both native + chunkable | span-merged chunk runs | `AoSoAChunked` |
+//! | both native + affine | strided runs | `Program` |
+//! | otherwise | gather | `FieldWise` |
+//!
+//! The chunked strategy caps run lengths at **both** plans'
+//! [`LayoutPlan::chunk_lanes`] — for Split mappings that is the gcd of
+//! the children's lane counts (`LayoutPlan::compose_split`), never the
+//! composed piecewise lane count, which can exceed a child's actual
+//! run length (e.g. Split(AoSoA4, packed AoS) addresses piecewise at 4
+//! lanes but only 1-element runs are contiguous on the AoS child).
+//!
+//! For parallel execution, [`shard_programs`] splits the record range
+//! on [`crate::view::shard::pair_align`] boundaries (the lcm of both
+//! plans' lane alignments) and compiles one sub-program per shard;
+//! [`execute_parallel`] fans the sub-programs out over scoped threads.
+//! Aliasing destination plans (`One`) collapse to a single program.
+
+use crate::blob::{Blob, BlobMut};
+use crate::mapping::{LayoutPlan, Mapping};
+use crate::view::shard::shard_pair;
+use crate::view::View;
+
+use super::{
+    layouts_identical_with, plans_chunk_compatible, plans_strided_compatible, ChunkOrder,
+    CopyMethod,
+};
+
+/// One instruction of a compiled [`CopyProgram`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyOp {
+    /// `dst[dst_blob][dst_off..dst_off+len] =
+    /// src[src_blob][src_off..src_off+len]`.
+    Memcpy {
+        src_blob: usize,
+        src_off: usize,
+        dst_blob: usize,
+        dst_off: usize,
+        len: usize,
+    },
+    /// `count` elements of `elem` bytes each, at (possibly) different
+    /// strides on the two sides.
+    StridedRun {
+        src_blob: usize,
+        src_off: usize,
+        src_stride: usize,
+        dst_blob: usize,
+        dst_off: usize,
+        dst_stride: usize,
+        elem: usize,
+        count: usize,
+    },
+    /// Field-wise element copy of records `start..end`, resolved
+    /// through the mapping objects at execution time (handles generic
+    /// addressing and byte-representation conversion).
+    Gather { start: usize, end: usize },
+}
+
+/// A compiled copy schedule between two fixed layouts over the same
+/// data space. Compile once per (src mapping, dst mapping) pair,
+/// execute on any number of view pairs using those mappings.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CopyProgram {
+    count: usize,
+    method: CopyMethod,
+    ops: Vec<CopyOp>,
+}
+
+/// Appends ops, merging a new `Memcpy` into the previous one when both
+/// its source and destination continue the previous span's bytes.
+struct OpSink {
+    ops: Vec<CopyOp>,
+}
+
+impl OpSink {
+    fn new() -> Self {
+        OpSink { ops: Vec::new() }
+    }
+
+    fn memcpy(&mut self, sb: usize, so: usize, db: usize, doff: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        if let Some(CopyOp::Memcpy { src_blob, src_off, dst_blob, dst_off, len }) =
+            self.ops.last_mut()
+        {
+            if *src_blob == sb
+                && *dst_blob == db
+                && *src_off + *len == so
+                && *dst_off + *len == doff
+            {
+                *len += n;
+                return;
+            }
+        }
+        self.ops.push(CopyOp::Memcpy {
+            src_blob: sb,
+            src_off: so,
+            dst_blob: db,
+            dst_off: doff,
+            len: n,
+        });
+    }
+}
+
+impl CopyProgram {
+    /// Compile the (src, dst) mapping pair, read-contiguous chunk
+    /// traversal. Panics if the mappings do not share a data space.
+    pub fn compile<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(src: &MS, dst: &MD) -> CopyProgram {
+        Self::compile_ordered(src, dst, ChunkOrder::ReadContiguous)
+    }
+
+    /// [`CopyProgram::compile`] with an explicit chunk traversal order
+    /// (affects op order of the chunked strategy — the paper's (r)/(w)
+    /// distinction — never the copied bytes).
+    pub fn compile_ordered<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+        src: &MS,
+        dst: &MD,
+        order: ChunkOrder,
+    ) -> CopyProgram {
+        let sp = src.plan();
+        let dp = dst.plan();
+        compile_with(src, dst, &sp, &dp, order)
+    }
+
+    /// Which strategy the compiler chose (what [`super::copy`] reports).
+    #[inline]
+    pub fn method(&self) -> CopyMethod {
+        self.method
+    }
+
+    /// The compiled op list, in execution order.
+    #[inline]
+    pub fn ops(&self) -> &[CopyOp] {
+        &self.ops
+    }
+
+    /// Record count the program was compiled for.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// True if no op needs the mapping objects at execution time
+    /// (everything resolved to raw byte moves at compile time).
+    pub fn is_closed_form(&self) -> bool {
+        !self.ops.iter().any(|op| matches!(op, CopyOp::Gather { .. }))
+    }
+
+    /// Execute the program: replay the compiled byte moves from `src`'s
+    /// blobs into `dst`'s. The views must use the mappings the program
+    /// was compiled from (asserted structurally where cheap; a program
+    /// executed on foreign views of the same shapes copies garbage but
+    /// stays memory-safe — every access is bounds-checked).
+    pub fn execute<MS, MD, BS, BD>(&self, src: &View<MS, BS>, dst: &mut View<MD, BD>)
+    where
+        MS: Mapping,
+        MD: Mapping,
+        BS: Blob,
+        BD: BlobMut,
+    {
+        assert_eq!(self.count, src.count(), "program compiled for a different extent");
+        assert_eq!(self.count, dst.count(), "program compiled for a different extent");
+        let info = src.mapping().info().clone();
+        for op in &self.ops {
+            match *op {
+                CopyOp::Memcpy { src_blob, src_off, dst_blob, dst_off, len } => {
+                    let (_, dblobs) = dst.mapping_and_blobs_mut();
+                    dblobs[dst_blob].as_bytes_mut()[dst_off..dst_off + len].copy_from_slice(
+                        &src.blobs()[src_blob].as_bytes()[src_off..src_off + len],
+                    );
+                }
+                CopyOp::StridedRun {
+                    src_blob,
+                    src_off,
+                    src_stride,
+                    dst_blob,
+                    dst_off,
+                    dst_stride,
+                    elem,
+                    count,
+                } => {
+                    let (_, dblobs) = dst.mapping_and_blobs_mut();
+                    let sbytes = src.blobs()[src_blob].as_bytes();
+                    let dbytes = dblobs[dst_blob].as_bytes_mut();
+                    for i in 0..count {
+                        let so = src_off + i * src_stride;
+                        let doff = dst_off + i * dst_stride;
+                        dbytes[doff..doff + elem].copy_from_slice(&sbytes[so..so + elem]);
+                    }
+                }
+                CopyOp::Gather { start, end } => {
+                    for lin in start..end {
+                        for leaf in 0..info.leaf_count() {
+                            let size = info.fields[leaf].size();
+                            super::naive::copy_field(src, dst, leaf, lin, size);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// [`CopyProgram::compile_ordered`] over plans the caller already
+/// compiled (the dispatcher compiles each side exactly once per copy).
+pub(crate) fn compile_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+    src: &MS,
+    dst: &MD,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    order: ChunkOrder,
+) -> CopyProgram {
+    assert!(
+        super::same_data_space(src, dst),
+        "copy program between different data spaces: {} vs {}",
+        src.mapping_name(),
+        dst.mapping_name()
+    );
+    if layouts_identical_with(src, dst, sp, dp) {
+        // One memcpy per blob — padding and tail blocks included, which
+        // is exactly what makes the identical case a pure memcpy.
+        let mut ops = Vec::with_capacity(src.blob_count());
+        for nr in 0..src.blob_count() {
+            let len = src.blob_size(nr);
+            if len > 0 {
+                ops.push(CopyOp::Memcpy {
+                    src_blob: nr,
+                    src_off: 0,
+                    dst_blob: nr,
+                    dst_off: 0,
+                    len,
+                });
+            }
+        }
+        return CopyProgram { count: sp.count(), method: CopyMethod::Blobwise, ops };
+    }
+    compile_range_with(src, dst, sp, dp, order, 0, sp.count())
+}
+
+/// Compile the record range `start..end` with the best non-identical
+/// strategy: span-merged chunk runs, strided runs, or gather.
+pub(crate) fn compile_range_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+    src: &MS,
+    dst: &MD,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    order: ChunkOrder,
+    start: usize,
+    end: usize,
+) -> CopyProgram {
+    if plans_chunk_compatible(sp, dp) {
+        compile_chunk_range(src, dst, sp, dp, order, start, end)
+    } else if plans_strided_compatible(sp, dp) {
+        compile_strided_range(src, sp, dp, start, end)
+    } else {
+        let ops =
+            if start < end { vec![CopyOp::Gather { start, end }] } else { Vec::new() };
+        CopyProgram { count: sp.count(), method: CopyMethod::FieldWise, ops }
+    }
+}
+
+/// The chunked strategy: walk lane-blocks of the contiguous side and
+/// emit one span per run intersection, coalescing adjacent spans. Run
+/// lengths are capped at both plans' `chunk_lanes` — for Splits the
+/// gcd of the children's lanes, the longest run contiguous on *every*
+/// routed child.
+fn compile_chunk_range<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+    src: &MS,
+    dst: &MD,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    order: ChunkOrder,
+    start: usize,
+    end: usize,
+) -> CopyProgram {
+    let src_lanes = sp.chunk_lanes().expect("chunk strategy needs src chunk_lanes");
+    let dst_lanes = dp.chunk_lanes().expect("chunk strategy needs dst chunk_lanes");
+    let info = src.info().clone();
+    let leaves = info.leaf_count();
+    let outer = match order {
+        ChunkOrder::ReadContiguous => src_lanes,
+        ChunkOrder::WriteContiguous => dst_lanes,
+    };
+    let mut sink = OpSink::new();
+    let mut block_start = start;
+    while block_start < end {
+        let block_end = (((block_start / outer) + 1) * outer).min(end);
+        for leaf in 0..leaves {
+            let size = info.fields[leaf].size();
+            let mut pos = block_start;
+            while pos < block_end {
+                // Largest run not crossing a lane boundary on either
+                // side (plan.rs span helpers).
+                let run = block_end
+                    .min(sp.chunk_run_end(pos).expect("src chunkable"))
+                    .min(dp.chunk_run_end(pos).expect("dst chunkable"));
+                let (snr, soff) = sp.resolve_with(src, leaf, pos);
+                let (dnr, doff) = dp.resolve_with(dst, leaf, pos);
+                sink.memcpy(snr, soff, dnr, doff, (run - pos) * size);
+                pos = run;
+            }
+        }
+        block_start = block_end;
+    }
+    CopyProgram { count: sp.count(), method: CopyMethod::AoSoAChunked, ops: sink.ops }
+}
+
+/// The affine strategy: one op per leaf over the whole range. Leaves
+/// contiguous on both sides (stride == element size) become `Memcpy`
+/// spans; everything else a `StridedRun`.
+fn compile_strided_range<MS: Mapping + ?Sized>(
+    src: &MS,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    start: usize,
+    end: usize,
+) -> CopyProgram {
+    let info = src.info().clone();
+    let mut sink = OpSink::new();
+    if start < end {
+        for leaf in 0..info.leaf_count() {
+            let e = info.fields[leaf].size();
+            let a = sp.affine_leaf(leaf).expect("strided strategy needs affine src");
+            let b = dp.affine_leaf(leaf).expect("strided strategy needs affine dst");
+            if a.stride == e && b.stride == e {
+                let (so, doff) = (a.base + start * e, b.base + start * e);
+                sink.memcpy(a.blob, so, b.blob, doff, (end - start) * e);
+            } else {
+                sink.ops.push(CopyOp::StridedRun {
+                    src_blob: a.blob,
+                    src_off: a.base + start * a.stride,
+                    src_stride: a.stride,
+                    dst_blob: b.blob,
+                    dst_off: b.base + start * b.stride,
+                    dst_stride: b.stride,
+                    elem: e,
+                    count: end - start,
+                });
+            }
+        }
+    }
+    CopyProgram { count: sp.count(), method: CopyMethod::Program, ops: sink.ops }
+}
+
+/// Split the record range into plan-aligned shards and compile one
+/// sub-program per shard, for [`execute_parallel`]. Falls back to a
+/// single full program (executed serially) when the pair has no
+/// closed-form range strategy (gather, or identical layouts with
+/// generic plans) or when the destination plan aliases records
+/// (`One`) — concurrent shards would race on the aliased bytes.
+pub fn shard_programs<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+    src: &MS,
+    dst: &MD,
+    threads: usize,
+) -> Vec<CopyProgram> {
+    let sp = src.plan();
+    let dp = dst.plan();
+    shard_programs_with(src, dst, &sp, &dp, ChunkOrder::ReadContiguous, threads)
+}
+
+pub(crate) fn shard_programs_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+    src: &MS,
+    dst: &MD,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    order: ChunkOrder,
+    threads: usize,
+) -> Vec<CopyProgram> {
+    let n = sp.count();
+    // Same predicate pair as `compile_range_with`'s strategy choice, so
+    // sharded ranges can never land on the unshardable gather fallback.
+    let closed_range_form =
+        plans_chunk_compatible(sp, dp) || plans_strided_compatible(sp, dp);
+    // Identical layouts keep the single per-blob memcpy program: a
+    // memcpy is already memory-bound, and the dispatcher keeps
+    // reporting `Blobwise`.
+    if threads <= 1
+        || n == 0
+        || !closed_range_form
+        || layouts_identical_with(src, dst, sp, dp)
+    {
+        return vec![compile_with(src, dst, sp, dp, order)];
+    }
+    shard_pair(sp, dp, threads)
+        .into_iter()
+        .map(|s| compile_range_with(src, dst, sp, dp, order, s.start, s.end))
+        .collect()
+}
+
+/// Below this record count, thread-spawn overhead dominates any copy
+/// win: every parallel entry point falls back to one serial program.
+const PAR_MIN_RECORDS: usize = 1024;
+
+/// The one shared parallel-copy body behind [`super::copy_parallel`]
+/// and [`super::copy_aosoa_parallel`]: clamp the thread count, fall
+/// back to a single program below [`PAR_MIN_RECORDS`], shard,
+/// execute, and report the strategy used.
+pub(crate) fn run_parallel_with<MS, MD, BS, BD>(
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    order: ChunkOrder,
+    threads: Option<usize>,
+) -> CopyMethod
+where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob + Sync,
+    BD: BlobMut,
+{
+    let n = src.count();
+    let threads = threads
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+        .min(n.max(1));
+    let threads = if n < PAR_MIN_RECORDS { 1 } else { threads };
+    let progs = shard_programs_with(src.mapping(), dst.mapping(), sp, dp, order, threads);
+    let method = progs[0].method();
+    execute_parallel(&progs, src, dst);
+    method
+}
+
+/// Base pointers + lengths of the destination blobs, shared across the
+/// worker threads (same soundness argument as `copy::parallel`: the
+/// sub-programs' destination byte ranges are disjoint because their
+/// record shards are, by the fundamental mapping invariant).
+struct RawDst {
+    ptrs: Vec<(*mut u8, usize)>,
+}
+
+// SAFETY: workers write disjoint ranges (see above).
+unsafe impl Send for RawDst {}
+unsafe impl Sync for RawDst {}
+
+/// Execute sharded sub-programs concurrently (one scoped worker per
+/// program; a single program runs inline). All programs must be
+/// closed-form ([`CopyProgram::is_closed_form`]) — [`shard_programs`]
+/// only produces such lists.
+pub fn execute_parallel<MS, MD, BS, BD>(
+    programs: &[CopyProgram],
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+) where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob + Sync,
+    BD: BlobMut,
+{
+    match programs {
+        [] => {}
+        [p] => p.execute(src, dst),
+        _ => {
+            // Same contract as the serial `execute` path: reject views
+            // the programs were not compiled for instead of silently
+            // copying a prefix.
+            for p in programs {
+                assert_eq!(p.count(), src.count(), "program compiled for a different extent");
+                assert_eq!(p.count(), dst.count(), "program compiled for a different extent");
+            }
+            assert!(
+                programs.iter().all(|p| p.is_closed_form()),
+                "gather ops cannot be executed concurrently"
+            );
+            let (_, dblobs) = dst.mapping_and_blobs_mut();
+            let raw = RawDst {
+                ptrs: dblobs
+                    .iter_mut()
+                    .map(|b| {
+                        let s = b.as_bytes_mut();
+                        (s.as_mut_ptr(), s.len())
+                    })
+                    .collect(),
+            };
+            std::thread::scope(|scope| {
+                for p in programs {
+                    let raw = &raw;
+                    scope.spawn(move || {
+                        for op in p.ops() {
+                            // SAFETY: bounds asserted inside; dst
+                            // ranges disjoint across programs.
+                            unsafe { execute_op_raw(op, src, raw) };
+                        }
+                    });
+                }
+            });
+        }
+    }
+}
+
+/// Execute one closed-form op through raw destination pointers.
+///
+/// # Safety
+/// `raw` must point into live destination blobs; concurrent callers
+/// must hold disjoint op sets (guaranteed by [`shard_programs`]'s
+/// disjoint record shards + the mapping invariant).
+unsafe fn execute_op_raw<MS, BS>(op: &CopyOp, src: &View<MS, BS>, raw: &RawDst)
+where
+    MS: Mapping,
+    BS: Blob,
+{
+    match *op {
+        CopyOp::Memcpy { src_blob, src_off, dst_blob, dst_off, len } => {
+            let sbytes = src.blobs()[src_blob].as_bytes();
+            let (dptr, dlen) = raw.ptrs[dst_blob];
+            assert!(src_off + len <= sbytes.len() && dst_off + len <= dlen);
+            std::ptr::copy_nonoverlapping(sbytes.as_ptr().add(src_off), dptr.add(dst_off), len);
+        }
+        CopyOp::StridedRun {
+            src_blob,
+            src_off,
+            src_stride,
+            dst_blob,
+            dst_off,
+            dst_stride,
+            elem,
+            count,
+        } => {
+            if count == 0 {
+                return;
+            }
+            let sbytes = src.blobs()[src_blob].as_bytes();
+            let (dptr, dlen) = raw.ptrs[dst_blob];
+            assert!(
+                src_off + (count - 1) * src_stride + elem <= sbytes.len()
+                    && dst_off + (count - 1) * dst_stride + elem <= dlen
+            );
+            for i in 0..count {
+                std::ptr::copy_nonoverlapping(
+                    sbytes.as_ptr().add(src_off + i * src_stride),
+                    dptr.add(dst_off + i * dst_stride),
+                    elem,
+                );
+            }
+        }
+        CopyOp::Gather { .. } => unreachable!("gather ops are never sharded"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::copy::test_support::fill_distinct;
+    use crate::copy::{copy_naive, views_equal};
+    use crate::mapping::plan::AddrPlan;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, SoA, Split};
+    use crate::record::{RecordCoord, RecordDim, Scalar};
+    use crate::view::alloc_view;
+
+    fn xy() -> RecordDim {
+        RecordDim::new().scalar("x", Scalar::F32).scalar("y", Scalar::F32)
+    }
+
+    /// Differential helper: program execution must be bit-identical to
+    /// the naive oracle on fresh destinations.
+    fn check_against_naive<MS: Mapping + Clone, MD: Mapping + Clone>(src_m: MS, dst_m: MD) {
+        let mut src = alloc_view(src_m);
+        fill_distinct(&mut src);
+        let mut oracle = alloc_view(dst_m.clone());
+        copy_naive(&src, &mut oracle);
+        let prog = CopyProgram::compile(src.mapping(), &dst_m);
+        let mut got = alloc_view(dst_m);
+        prog.execute(&src, &mut got);
+        assert_eq!(got.blobs(), oracle.blobs(), "program != naive oracle");
+        assert!(views_equal(&src, &got));
+    }
+
+    // --- Golden byte-layout snapshots (3-record extents): the exact
+    // op list a compiled program emits. Catches silent coalescing
+    // regressions — these lists are the contract of the compiler.
+
+    #[test]
+    fn golden_aos_to_soa_mb() {
+        let m_src = AoS::packed(&xy(), ArrayDims::linear(3));
+        let m_dst = SoA::multi_blob(&xy(), ArrayDims::linear(3));
+        let prog = CopyProgram::compile(&m_src, &m_dst);
+        assert_eq!(prog.method(), CopyMethod::AoSoAChunked);
+        // Packed AoS chunks at 1 lane: per record, x goes to blob 0 and
+        // y to blob 1 — source-adjacent but destination-alternating, so
+        // nothing coalesces.
+        assert_eq!(
+            prog.ops(),
+            &[
+                CopyOp::Memcpy { src_blob: 0, src_off: 0, dst_blob: 0, dst_off: 0, len: 4 },
+                CopyOp::Memcpy { src_blob: 0, src_off: 4, dst_blob: 1, dst_off: 0, len: 4 },
+                CopyOp::Memcpy { src_blob: 0, src_off: 8, dst_blob: 0, dst_off: 4, len: 4 },
+                CopyOp::Memcpy { src_blob: 0, src_off: 12, dst_blob: 1, dst_off: 4, len: 4 },
+                CopyOp::Memcpy { src_blob: 0, src_off: 16, dst_blob: 0, dst_off: 8, len: 4 },
+                CopyOp::Memcpy { src_blob: 0, src_off: 20, dst_blob: 1, dst_off: 8, len: 4 },
+            ]
+        );
+        check_against_naive(m_src, m_dst);
+    }
+
+    #[test]
+    fn golden_aosoa4_to_aosoa8() {
+        // 3 records: one partial block on both sides; each field's
+        // 3-element run is contiguous in both layouts, the two fields'
+        // runs are separated by tail padding — exactly 2 spans.
+        let m_src = AoSoA::new(&xy(), ArrayDims::linear(3), 4);
+        let m_dst = AoSoA::new(&xy(), ArrayDims::linear(3), 8);
+        let prog = CopyProgram::compile(&m_src, &m_dst);
+        assert_eq!(prog.method(), CopyMethod::AoSoAChunked);
+        assert_eq!(
+            prog.ops(),
+            &[
+                CopyOp::Memcpy { src_blob: 0, src_off: 0, dst_blob: 0, dst_off: 0, len: 12 },
+                CopyOp::Memcpy { src_blob: 0, src_off: 16, dst_blob: 0, dst_off: 32, len: 12 },
+            ]
+        );
+        check_against_naive(m_src, m_dst);
+    }
+
+    #[test]
+    fn golden_blobwise_identical_is_one_memcpy_per_blob() {
+        let dims = ArrayDims::linear(3);
+        let prog = CopyProgram::compile(
+            &SoA::multi_blob(&xy(), dims.clone()),
+            &SoA::multi_blob(&xy(), dims.clone()),
+        );
+        assert_eq!(prog.method(), CopyMethod::Blobwise);
+        assert_eq!(
+            prog.ops(),
+            &[
+                CopyOp::Memcpy { src_blob: 0, src_off: 0, dst_blob: 0, dst_off: 0, len: 12 },
+                CopyOp::Memcpy { src_blob: 1, src_off: 0, dst_blob: 1, dst_off: 0, len: 12 },
+            ]
+        );
+        // Single-blob identical AoSoA: one span covering the whole blob
+        // including the tail-block padding.
+        let prog = CopyProgram::compile(
+            &AoSoA::new(&xy(), dims.clone(), 4),
+            &AoSoA::new(&xy(), dims.clone(), 4),
+        );
+        assert_eq!(prog.method(), CopyMethod::Blobwise);
+        assert_eq!(
+            prog.ops(),
+            &[CopyOp::Memcpy { src_blob: 0, src_off: 0, dst_blob: 0, dst_off: 0, len: 32 }]
+        );
+    }
+
+    #[test]
+    fn golden_affine_pair_compiles_strided_runs() {
+        // Aligned AoS is not chunkable (for a 2×f32 record aligned ==
+        // packed in size, but the plan still reports no chunk lanes) —
+        // the affine strategy emits one strided run per leaf.
+        let m_src = AoS::aligned(&xy(), ArrayDims::linear(3));
+        let m_dst = SoA::multi_blob(&xy(), ArrayDims::linear(3));
+        let prog = CopyProgram::compile(&m_src, &m_dst);
+        assert_eq!(prog.method(), CopyMethod::Program);
+        assert_eq!(
+            prog.ops(),
+            &[
+                CopyOp::StridedRun {
+                    src_blob: 0,
+                    src_off: 0,
+                    src_stride: 8,
+                    dst_blob: 0,
+                    dst_off: 0,
+                    dst_stride: 4,
+                    elem: 4,
+                    count: 3
+                },
+                CopyOp::StridedRun {
+                    src_blob: 0,
+                    src_off: 4,
+                    src_stride: 8,
+                    dst_blob: 1,
+                    dst_off: 0,
+                    dst_stride: 4,
+                    elem: 4,
+                    count: 3
+                },
+            ]
+        );
+        check_against_naive(m_src, m_dst);
+    }
+
+    #[test]
+    fn aosoa_pairs_compile_to_bounded_runs() {
+        // AoSoA-N ↔ AoSoA-M: run intersections are between gcd(N, M)
+        // and min(N, M) records of one field; no span may cross a lane
+        // boundary of either side (the smallest leaf is guaranteed to
+        // produce a pure gcd-sized span somewhere).
+        let d = particle_dim();
+        let dims = ArrayDims::linear(48);
+        let prog = CopyProgram::compile(
+            &AoSoA::new(&d, dims.clone(), 4),
+            &AoSoA::new(&d, dims.clone(), 6),
+        );
+        assert_eq!(prog.method(), CopyMethod::AoSoAChunked);
+        let mut saw_gcd_span = false;
+        for op in prog.ops() {
+            if let CopyOp::Memcpy { len, .. } = op {
+                // min(4, 6) = 4 records; the largest leaf is 8 bytes.
+                assert!(*len <= 4 * 8, "span {op:?} crosses a lane boundary");
+                // gcd(4, 6) = 2 records of the 1-byte bool leaves.
+                saw_gcd_span |= *len == 2;
+            }
+        }
+        assert!(saw_gcd_span, "no gcd-sized span — intersections not derived per leaf");
+        check_against_naive(AoSoA::new(&d, dims.clone(), 4), AoSoA::new(&d, dims, 6));
+    }
+
+    #[test]
+    fn split_chunk_lanes_gcd_regression() {
+        // Split children with lane counts 4 and 8 over a 13-record
+        // extent (tail block): compose_split gcds the chunk lanes to 4
+        // and the compiler must cap runs there — and for
+        // Split(AoSoA4, packed AoS) the piecewise *addressing* lanes
+        // (4) exceed the chunkable run (gcd(4,1) = 1); using the
+        // addressing lanes would emit non-contiguous "runs".
+        let d = particle_dim();
+        let dims = ArrayDims::linear(13);
+        let split48 = || {
+            Split::new(
+                &d,
+                dims.clone(),
+                RecordCoord::new(vec![1]),
+                |sd, ad| AoSoA::new(sd, ad, 4),
+                |sd, ad| AoSoA::new(sd, ad, 8),
+            )
+        };
+        let plan = split48().plan();
+        assert_eq!(plan.chunk_lanes(), Some(4));
+        check_against_naive(split48(), SoA::multi_blob(&d, dims.clone()));
+        check_against_naive(SoA::multi_blob(&d, dims.clone()), split48());
+
+        let split41 = || {
+            Split::new(
+                &d,
+                dims.clone(),
+                RecordCoord::new(vec![1]),
+                |sd, ad| AoSoA::new(sd, ad, 4),
+                |sd, ad| AoS::packed(sd, ad),
+            )
+        };
+        let plan = split41().plan();
+        assert!(matches!(plan.addr(), AddrPlan::PiecewiseAoSoA(p) if p.lanes == 4));
+        assert_eq!(plan.chunk_lanes(), Some(1));
+        check_against_naive(split41(), SoA::multi_blob(&d, dims.clone()));
+        check_against_naive(AoS::packed(&d, dims.clone()), split41());
+    }
+
+    #[test]
+    fn chunk_orders_copy_identical_bytes() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(37);
+        let src_m = AoSoA::new(&d, dims.clone(), 4);
+        let dst_m = AoSoA::new(&d, dims.clone(), 16);
+        let mut src = alloc_view(src_m);
+        fill_distinct(&mut src);
+        let r = CopyProgram::compile_ordered(src.mapping(), &dst_m, ChunkOrder::ReadContiguous);
+        let w = CopyProgram::compile_ordered(src.mapping(), &dst_m, ChunkOrder::WriteContiguous);
+        let mut dr = alloc_view(dst_m.clone());
+        let mut dw = alloc_view(dst_m);
+        r.execute(&src, &mut dr);
+        w.execute(&src, &mut dw);
+        assert_eq!(dr.blobs(), dw.blobs());
+        assert!(views_equal(&src, &dr));
+    }
+
+    #[test]
+    fn sharded_programs_cover_and_match_serial() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(257);
+        let src_m = SoA::multi_blob(&d, dims.clone());
+        let dst_m = AoSoA::new(&d, dims.clone(), 8);
+        let mut src = alloc_view(src_m);
+        fill_distinct(&mut src);
+        let mut serial = alloc_view(dst_m.clone());
+        CopyProgram::compile(src.mapping(), &dst_m).execute(&src, &mut serial);
+        for threads in [2usize, 3, 7] {
+            let progs = shard_programs(src.mapping(), &dst_m, threads);
+            assert!(progs.len() <= threads && progs.len() > 1);
+            let mut par = alloc_view(dst_m.clone());
+            execute_parallel(&progs, &src, &mut par);
+            assert_eq!(par.blobs(), serial.blobs(), "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn aliasing_destination_collapses_to_one_program() {
+        use crate::mapping::One;
+        let d = particle_dim();
+        let dims = ArrayDims::linear(64);
+        let progs = shard_programs(&SoA::multi_blob(&d, dims.clone()), &One::new(&d, dims), 8);
+        assert_eq!(progs.len(), 1);
+    }
+
+    #[test]
+    fn gather_fallback_is_single_program() {
+        use crate::mapping::Byteswap;
+        let d = particle_dim();
+        let dims = ArrayDims::linear(16);
+        let src_m = Byteswap::new(AoS::packed(&d, dims.clone()));
+        let dst_m = SoA::multi_blob(&d, dims.clone());
+        let prog = CopyProgram::compile(&src_m, &dst_m);
+        assert_eq!(prog.method(), CopyMethod::FieldWise);
+        assert!(!prog.is_closed_form());
+        assert_eq!(shard_programs(&src_m, &dst_m, 8).len(), 1);
+        check_against_naive(src_m, dst_m);
+    }
+
+    #[test]
+    fn empty_extent_compiles_to_no_range_ops() {
+        let dims = ArrayDims::linear(0);
+        let prog = CopyProgram::compile(
+            &AoS::packed(&xy(), dims.clone()),
+            &SoA::multi_blob(&xy(), dims),
+        );
+        assert!(prog.ops().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "different data spaces")]
+    fn mismatched_extents_rejected() {
+        let _ = CopyProgram::compile(
+            &AoS::packed(&xy(), ArrayDims::linear(3)),
+            &AoS::packed(&xy(), ArrayDims::linear(4)),
+        );
+    }
+}

@@ -69,7 +69,8 @@ pub mod prelude {
     };
     pub use crate::blob::{AlignedAlloc, Blob, BlobAllocator, BlobMut, VecAlloc};
     pub use crate::copy::{
-        aosoa_copy, copy, copy_blobwise, copy_naive, copy_stdcopy, views_equal, ChunkOrder,
+        aosoa_copy, copy, copy_blobwise, copy_naive, copy_parallel, copy_stdcopy, views_equal,
+        ChunkOrder, CopyMethod, CopyOp, CopyProgram,
     };
     pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
     pub use crate::mapping::{
@@ -79,7 +80,7 @@ pub mod prelude {
     pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};
     pub use crate::view::{
         alloc_view, alloc_view_with, pair_align, par_execute, par_execute_zip, par_map_shards,
-        par_shards, plan_aliases, shard_align, shard_plan, shard_range, CursorRead, CursorWrite,
-        OneRecord, ScalarVal, Shard, ShardKernel, ShardKernel2, View,
+        par_shards, plan_aliases, shard_align, shard_pair, shard_plan, shard_range, CursorRead,
+        CursorWrite, OneRecord, ScalarVal, Shard, ShardKernel, ShardKernel2, View,
     };
 }

@@ -149,6 +149,31 @@ impl LayoutPlan {
         }
     }
 
+    /// One leaf's affine rule, if this plan is affine (span extraction
+    /// for the copy-program compiler — no per-call clone).
+    #[inline]
+    pub fn affine_leaf(&self, leaf: usize) -> Option<&AffineLeaf> {
+        match &self.addr {
+            AddrPlan::Affine(leaves) => Some(&leaves[leaf]),
+            _ => None,
+        }
+    }
+
+    /// End (exclusive) of the contiguous leaf-run containing `lin`:
+    /// every leaf's bytes for records `lin .. chunk_run_end(lin)` are
+    /// consecutive in storage (capped by the caller at the record
+    /// count). `None` when runs are not contiguous. For Split plans
+    /// `chunk_lanes` is the gcd of the children's lane counts — which
+    /// may be *smaller* than the composed piecewise addressing lanes,
+    /// so span extraction must use this, never `PiecewisePlan::lanes`.
+    #[inline]
+    pub fn chunk_run_end(&self, lin: usize) -> Option<usize> {
+        match self.chunk_lanes {
+            Some(l) if l > 0 => Some(((lin / l) + 1) * l),
+            _ => None,
+        }
+    }
+
     /// The piecewise rules, if this plan is lane-blocked.
     pub fn piecewise(&self) -> Option<&PiecewisePlan> {
         match &self.addr {
@@ -444,6 +469,21 @@ mod tests {
                 assert_eq!(addr, a.base + lin * a.stride, "lanes {lanes} lin {lin}");
             }
         }
+    }
+
+    #[test]
+    fn span_helpers_expose_runs_and_affine_rules() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(10);
+        let p = AoSoA::new(&d, dims.clone(), 4).plan();
+        assert_eq!(p.chunk_run_end(0), Some(4));
+        assert_eq!(p.chunk_run_end(5), Some(8));
+        assert!(p.affine_leaf(0).is_none());
+        let a = AoS::packed(&d, dims.clone()).plan();
+        assert_eq!(a.chunk_run_end(7), Some(8));
+        let leaf = *a.affine_leaf(1).expect("packed AoS is affine");
+        assert_eq!((leaf.blob, leaf.base, leaf.stride), (0, 2, 25));
+        assert_eq!(AoS::aligned(&d, dims).plan().chunk_run_end(3), None);
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub use one_record::OneRecord;
 pub use scalar::ScalarVal;
 pub use shard::{
     pair_align, par_execute, par_execute_zip, par_map_shards, par_shards, plan_aliases,
-    shard_align, shard_plan, shard_range, Shard, ShardKernel, ShardKernel2,
+    shard_align, shard_pair, shard_plan, shard_range, Shard, ShardKernel, ShardKernel2,
 };
 pub use view::{alloc_view, alloc_view_with, View};
 pub use virtual_record::{RecordRef, RecordRefMut};

@@ -162,6 +162,16 @@ pub fn pair_align(a: &LayoutPlan, b: &LayoutPlan) -> usize {
     lcm_or_first(shard_align(a), shard_align(b))
 }
 
+/// Split points for a (src, dst) copy pair: [`shard_range`] over the
+/// source count at [`pair_align`] boundaries, collapsed to a single
+/// shard when the destination plan aliases records ([`plan_aliases`])
+/// — concurrent shards would race on the aliased bytes. Used by the
+/// copy-program sharder (`copy::program::shard_programs`).
+pub fn shard_pair(src: &LayoutPlan, dst: &LayoutPlan, parts: usize) -> Vec<Shard> {
+    let parts = if plan_aliases(dst) { 1 } else { parts };
+    shard_range(src.count(), parts, pair_align(src, dst))
+}
+
 /// Run `f` once per shard on scoped worker threads; a single shard runs
 /// inline on the caller's thread (the serial path spawns nothing).
 pub fn par_shards(shards: &[Shard], f: impl Fn(Shard) + Sync) {
@@ -411,6 +421,21 @@ mod tests {
         assert_eq!(pair_align(&a4, &a6), 12);
         assert_eq!(pair_align(&a4, &a32), 32);
         assert_eq!(pair_align(&soa, &soa), 1);
+    }
+
+    #[test]
+    fn shard_pair_aligns_to_both_and_collapses_on_aliasing_dst() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(4096 + 17);
+        let soa = SoA::multi_blob(&d, dims.clone()).plan();
+        let a32 = AoSoA::new(&d, dims.clone(), 32).plan();
+        for sh in shard_pair(&soa, &a32, 4) {
+            assert_eq!(sh.start % 32, 0);
+        }
+        let one = One::new(&d, dims).plan();
+        assert_eq!(shard_pair(&soa, &one, 8).len(), 1);
+        // Aliasing *source* is harmless: reads may overlap.
+        assert_eq!(shard_pair(&one, &soa, 4).len(), 4);
     }
 
     #[test]

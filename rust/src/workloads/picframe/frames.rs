@@ -312,6 +312,36 @@ impl<M: Mapping + Clone> ParticleStore<M> {
         (c[0] * self.grid[1] + c[1]) * self.grid[2] + c[2]
     }
 
+    /// Exchange the attribute layout of the whole store (paper fig 9:
+    /// the frame's mapping is an exchangeable template parameter):
+    /// compile the (old proto, new proto) pair into **one**
+    /// [`crate::copy::CopyProgram`] and replay it per frame — the
+    /// frames all share the same extent and mapping pair, so the chunk
+    /// intersection derivation runs once, not once per frame.
+    pub fn reshuffle<M2: Mapping + Clone>(&self, proto: M2) -> ParticleStore<M2> {
+        assert_eq!(proto.dims().count(), FRAME_SIZE, "frame mapping must cover FRAME_SIZE");
+        let prog = crate::copy::CopyProgram::compile(&self.proto, &proto);
+        let frames = self
+            .frames
+            .iter()
+            .map(|slot| {
+                slot.as_ref().map(|f| {
+                    let mut view = alloc_view(proto.clone());
+                    prog.execute(&f.view, &mut view);
+                    Frame { view, prev: f.prev, next: f.next, filled: f.filled }
+                })
+            })
+            .collect();
+        ParticleStore {
+            proto,
+            grid: self.grid,
+            frames,
+            free: self.free.clone(),
+            cells: self.cells.clone(),
+            particles: self.particles,
+        }
+    }
+
     /// Check all frame-list invariants (tests & failure injection).
     pub fn check_invariants(&self) -> crate::error::Result<()> {
         let mut counted = 0usize;
@@ -559,6 +589,32 @@ mod tests {
         }
         assert_eq!(a.deposit(), b.deposit());
         assert_eq!(a.deposit(), c.deposit());
+    }
+
+    #[test]
+    fn reshuffle_preserves_every_particle_across_layouts() {
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let mut st = soa_store([2, 2, 2]);
+        st.populate(300, 23);
+        st.drift(0.2);
+        st.exchange();
+        // SoA -> AoSoA32 (chunked program) and SoA -> aligned AoS
+        // (strided program): same particles, same list structure.
+        let a = st.reshuffle(AoSoA::new(&d, dims.clone(), 32));
+        a.check_invariants().unwrap();
+        let b = st.reshuffle(AoS::aligned(&d, dims.clone()));
+        b.check_invariants().unwrap();
+        assert_eq!(a.particle_count(), st.particle_count());
+        for cell in 0..st.cell_count() {
+            assert_eq!(st.cell_particles(cell), a.cell_particles(cell), "cell {cell}");
+            assert_eq!(st.cell_particles(cell), b.cell_particles(cell), "cell {cell}");
+        }
+        // The reshuffled store keeps working: one more full step.
+        let mut a = a;
+        a.drift(0.3);
+        a.exchange();
+        a.check_invariants().unwrap();
     }
 
     #[test]

@@ -1,66 +1,261 @@
-//! Property tests of the copy engine (DESIGN.md §8d): for random
-//! mapping pairs over the same data space and random data, every copy
-//! strategy produces a field-wise-equal destination — and the
-//! dispatcher always picks a valid strategy.
+//! Differential copy-oracle matrix (DESIGN.md §8d, EXPERIMENTS.md
+//! §Copy): every (src, dst) layout pair from the explicit matrix —
+//! AoS (aligned/packed), SoA (SB/MB), AoSoA{2,4,8,16}, One, Split
+//! compositions, Byteswap, Heatmap — across both `ChunkOrder`s and
+//! tail-block extents, asserting that compiled `CopyProgram` execution
+//! is **bit-identical** to the `copy_naive` oracle, that the
+//! dispatcher picks the expected `CopyMethod` for every pair with no
+//! panic path, and that sharded parallel execution reproduces the
+//! serial bytes at any thread count.
 
 mod prop_support;
 
-use llama::copy::{
-    aosoa_compatible, aosoa_copy, copy, copy_aosoa_parallel, copy_naive, copy_naive_parallel,
-    copy_stdcopy, views_equal, ChunkOrder,
-};
+use llama::copy::program::shard_programs;
+use llama::copy::{aosoa_compatible, aosoa_copy, copy_aosoa_parallel, copy_naive_parallel};
+use llama::copy::{layouts_identical, plans_chunk_compatible, plans_strided_compatible};
 use llama::prelude::*;
+use llama::workloads::nbody;
 use llama::workloads::rng::SplitMix64;
 use prop_support::*;
 
+/// Explicit layout matrix; index 8 is the aliasing `One` mapping.
+const MATRIX: usize = 13;
+const ONE_IDX: usize = 8;
+
+fn nth(d: &RecordDim, dims: &ArrayDims, k: usize) -> Box<dyn Mapping> {
+    match k {
+        0 => Box::new(AoS::aligned(d, dims.clone())),
+        1 => Box::new(AoS::packed(d, dims.clone())),
+        2 => Box::new(SoA::single_blob(d, dims.clone())),
+        3 => Box::new(SoA::multi_blob(d, dims.clone())),
+        4 => Box::new(AoSoA::new(d, dims.clone(), 2)),
+        5 => Box::new(AoSoA::new(d, dims.clone(), 4)),
+        6 => Box::new(AoSoA::new(d, dims.clone(), 8)),
+        7 => Box::new(AoSoA::new(d, dims.clone(), 16)),
+        8 => Box::new(One::new(d, dims.clone())),
+        9 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        )),
+        10 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| AoSoA::new(sd, ad, 8),
+        )),
+        11 => Box::new(Byteswap::new(AoS::packed(d, dims.clone()))),
+        12 => Box::new(Heatmap::with_granularity(AoS::packed(d, dims.clone()), 4)),
+        _ => unreachable!("matrix has {MATRIX} entries"),
+    }
+}
+
+/// Extents chosen so every lane count in the matrix sees tail blocks
+/// (13 and 97 are prime; 35 = 5*7 is multi-dimensional).
+fn extents() -> Vec<ArrayDims> {
+    vec![
+        ArrayDims::linear(13),
+        ArrayDims::linear(96),
+        ArrayDims::linear(97),
+        ArrayDims::from([5, 7]),
+    ]
+}
+
+/// The documented strategy-selection rules, restated independently of
+/// the dispatcher: identical → blobwise; both chunkable → chunked;
+/// both affine native → strided program; otherwise field-wise gather.
+fn expected_method(src: &dyn Mapping, dst: &dyn Mapping) -> CopyMethod {
+    let sp = src.plan();
+    let dp = dst.plan();
+    if layouts_identical(src, dst) {
+        CopyMethod::Blobwise
+    } else if plans_chunk_compatible(&sp, &dp) {
+        CopyMethod::AoSoAChunked
+    } else if plans_strided_compatible(&sp, &dp) {
+        CopyMethod::Program
+    } else {
+        CopyMethod::FieldWise
+    }
+}
+
+/// The acceptance property: compiled `CopyProgram` execution is
+/// bit-identical to the naive oracle for every pair in the matrix,
+/// under both chunk traversal orders, at every tail-block extent.
+/// (Destinations start zeroed, so even the padding bytes the blobwise
+/// strategy copies compare equal.)
+#[test]
+fn prop_program_execution_matches_the_naive_oracle() {
+    let d = nbody::particle_dim();
+    for dims in extents() {
+        for i in 0..MATRIX {
+            let mut src = alloc_view(nth(&d, &dims, i));
+            fill_sentinels(&mut src);
+            for j in 0..MATRIX {
+                let mut oracle = alloc_view(nth(&d, &dims, j));
+                copy_naive(&src, &mut oracle);
+                let label = format!(
+                    "{} -> {} ({dims:?})",
+                    src.mapping().mapping_name(),
+                    oracle.mapping().mapping_name()
+                );
+                for order in [ChunkOrder::ReadContiguous, ChunkOrder::WriteContiguous] {
+                    let prog =
+                        CopyProgram::compile_ordered(src.mapping(), oracle.mapping(), order);
+                    let mut got = alloc_view(nth(&d, &dims, j));
+                    prog.execute(&src, &mut got);
+                    assert_eq!(got.blobs(), oracle.blobs(), "{label} {order:?}");
+                    if j != ONE_IDX {
+                        assert!(views_equal(&src, &got), "{label} {order:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The dispatcher picks the expected `CopyMethod` for every pair —
+/// including the new `Program` variant for affine non-chunkable pairs
+/// — with no panic path anywhere in the matrix, and its result is
+/// bit-identical to the oracle.
+#[test]
+fn prop_dispatcher_picks_expected_method_without_panicking() {
+    let d = nbody::particle_dim();
+    for dims in [ArrayDims::linear(13), ArrayDims::from([5, 7])] {
+        for i in 0..MATRIX {
+            for j in 0..MATRIX {
+                let src_m = nth(&d, &dims, i);
+                let dst_m = nth(&d, &dims, j);
+                let expect = expected_method(src_m.as_ref(), dst_m.as_ref());
+                let mut src = alloc_view(src_m);
+                fill_sentinels(&mut src);
+                let mut dst = alloc_view(dst_m);
+                let got = copy(&src, &mut dst);
+                let label = format!(
+                    "{} -> {} ({dims:?})",
+                    src.mapping().mapping_name(),
+                    dst.mapping().mapping_name()
+                );
+                assert_eq!(got, expect, "{label}");
+                let mut oracle = alloc_view(nth(&d, &dims, j));
+                copy_naive(&src, &mut oracle);
+                assert_eq!(dst.blobs(), oracle.blobs(), "{label}");
+            }
+        }
+    }
+}
+
+/// A few structural facts the matrix relies on (guards against the
+/// matrix silently degenerating).
+#[test]
+fn matrix_covers_all_four_methods() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(13);
+    use CopyMethod::*;
+    let method = |i: usize, j: usize| {
+        expected_method(nth(&d, &dims, i).as_ref(), nth(&d, &dims, j).as_ref())
+    };
+    assert_eq!(method(5, 5), Blobwise); // AoSoA4 -> AoSoA4
+    assert_eq!(method(3, 6), AoSoAChunked); // SoA MB -> AoSoA8
+    assert_eq!(method(0, 3), Program); // aligned AoS -> SoA MB (strided)
+    assert_eq!(method(11, 3), FieldWise); // Byteswap -> SoA MB
+    assert_eq!(method(12, 12), Blobwise); // Heatmap -> same Heatmap
+    assert_eq!(method(5, 10), AoSoAChunked); // AoSoA4 -> Split gcd pair
+}
+
+/// Satellite 2: sharded `CopyProgram` execution is bit-identical to
+/// serial at thread counts 1/2/7 across strategy classes, and
+/// aliasing destination plans (`One`) collapse to one sub-program.
+#[test]
+fn prop_parallel_copy_bit_identical_across_thread_counts() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(4096 + 17); // tail at every lane count
+    // (chunked SoA->AoSoA16, chunked AoSoA8->AoSoA16, chunked
+    // AoS->SoA, strided aligned-AoS->SoA, chunked into a gcd Split,
+    // gather from a Byteswap source.)
+    for (i, j) in [(3, 7), (6, 7), (1, 3), (0, 3), (5, 10), (11, 3)] {
+        let mut src = alloc_view(nth(&d, &dims, i));
+        fill_sentinels(&mut src);
+        let mut serial = alloc_view(nth(&d, &dims, j));
+        CopyProgram::compile(src.mapping(), serial.mapping()).execute(&src, &mut serial);
+        for threads in [1usize, 2, 7] {
+            let mut par = alloc_view(nth(&d, &dims, j));
+            copy_parallel(&src, &mut par, Some(threads));
+            assert_eq!(par.blobs(), serial.blobs(), "pair ({i},{j}) threads {threads}");
+        }
+    }
+    // Aliasing destination: exactly one sub-program, and the parallel
+    // entry point still produces the serial result (last record wins).
+    let src_m = nth(&d, &dims, 3);
+    let one = One::new(&d, dims.clone());
+    assert_eq!(shard_programs(src_m.as_ref(), &one, 8).len(), 1);
+    let mut src = alloc_view(src_m);
+    fill_sentinels(&mut src);
+    let mut serial = alloc_view(One::new(&d, dims.clone()));
+    copy_naive(&src, &mut serial);
+    let mut par = alloc_view(One::new(&d, dims.clone()));
+    copy_parallel(&src, &mut par, Some(8));
+    assert_eq!(par.blobs(), serial.blobs());
+    // Real sharding happens where it is safe.
+    let a16 = nth(&d, &dims, 7);
+    let progs = shard_programs(src.mapping(), a16.as_ref(), 7);
+    assert!(progs.len() > 1 && progs.len() <= 7, "{} sub-programs", progs.len());
+}
+
+/// Random record dims × extents × mapping pairs: every copy entry
+/// point agrees with the oracle (the legacy random property, now with
+/// the program paths included).
 #[test]
 fn prop_all_strategies_equal_on_random_pairs() {
-    for seed in 0..CASES {
+    for seed in 0..cases() {
         let mut rng = SplitMix64::new(seed ^ 0xC0B1);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);
         let src_m = gen_mapping(&mut rng, &dim, &dims);
-        let dst_m = gen_mapping(&mut rng, &dim, &dims);
-        let label = format!(
-            "seed {seed}: {} -> {}",
-            src_m.mapping_name(),
-            dst_m.mapping_name()
-        );
+        // Two structurally identical destination mappings from twin
+        // rng streams: one for the oracle, one for the program paths.
+        let mut twin_a = SplitMix64::new(seed ^ 0xD57);
+        let mut twin_b = SplitMix64::new(seed ^ 0xD57);
+        let dst_m = gen_mapping(&mut twin_a, &dim, &dims);
+        let dst_m2 = gen_mapping(&mut twin_b, &dim, &dims);
+        let label = format!("seed {seed}: {} -> {}", src_m.mapping_name(), dst_m.mapping_name());
 
         let mut src = alloc_view(src_m);
         fill_sentinels(&mut src);
-
-        // naive
-        let mut dst = alloc_view(dst_m);
-        copy_naive(&src, &mut dst);
-        assert!(views_equal(&src, &dst), "{label} naive");
+        let mut oracle = alloc_view(dst_m);
+        copy_naive(&src, &mut oracle);
 
         // stdcopy — fresh destination to catch missed writes.
-        zero_blobs(&mut dst);
+        let mut dst = alloc_view(dst_m2);
         copy_stdcopy(&src, &mut dst);
         assert!(views_equal(&src, &dst), "{label} stdcopy");
 
         // parallel naive
         zero_blobs(&mut dst);
         copy_naive_parallel(&src, &mut dst, Some(4));
-        assert!(views_equal(&src, &dst), "{label} naive(p)");
+        assert_eq!(dst.blobs(), oracle.blobs(), "{label} naive(p)");
 
         // chunked variants where applicable
         if aosoa_compatible(src.mapping(), dst.mapping()) {
             for order in [ChunkOrder::ReadContiguous, ChunkOrder::WriteContiguous] {
                 zero_blobs(&mut dst);
                 aosoa_copy(&src, &mut dst, order);
-                assert!(views_equal(&src, &dst), "{label} aosoa {order:?}");
+                assert_eq!(dst.blobs(), oracle.blobs(), "{label} aosoa {order:?}");
                 zero_blobs(&mut dst);
                 copy_aosoa_parallel(&src, &mut dst, order, Some(3));
-                assert!(views_equal(&src, &dst), "{label} aosoa(p) {order:?}");
+                assert_eq!(dst.blobs(), oracle.blobs(), "{label} aosoa(p) {order:?}");
             }
         }
 
-        // dispatcher
+        // dispatcher + parallel dispatcher, both through the program
         zero_blobs(&mut dst);
         let method = copy(&src, &mut dst);
-        assert!(views_equal(&src, &dst), "{label} dispatch {method:?}");
+        assert_eq!(dst.blobs(), oracle.blobs(), "{label} dispatch {method:?}");
+        zero_blobs(&mut dst);
+        let method = copy_parallel(&src, &mut dst, Some(3));
+        assert_eq!(dst.blobs(), oracle.blobs(), "{label} dispatch(p) {method:?}");
     }
 }
 
@@ -74,7 +269,7 @@ fn zero_blobs<M: Mapping>(v: &mut llama::view::View<M, Vec<u8>>) {
 /// Chained copies across three layouts preserve the original data.
 #[test]
 fn prop_copy_chain_roundtrip() {
-    for seed in 0..CASES / 2 {
+    for seed in 0..cases() / 2 {
         let mut rng = SplitMix64::new(seed ^ 0xCAA1);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);
@@ -92,7 +287,7 @@ fn prop_copy_chain_roundtrip() {
 /// dispatcher (value-preserving, never byte-copying).
 #[test]
 fn prop_byteswap_interop() {
-    for seed in 0..CASES / 3 {
+    for seed in 0..cases() / 3 {
         let mut rng = SplitMix64::new(seed ^ 0xB5AA);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);

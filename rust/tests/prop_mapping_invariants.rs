@@ -15,7 +15,7 @@ use prop_support::*;
 /// and distinct (leaf, lin) pairs map to disjoint ranges.
 #[test]
 fn prop_non_overlap_and_containment() {
-    for seed in 0..CASES {
+    for seed in 0..cases() {
         let mut rng = SplitMix64::new(seed);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);
@@ -56,7 +56,7 @@ fn prop_non_overlap_and_containment() {
 /// back unchanged everywhere — no cross-talk through any mapping.
 #[test]
 fn prop_sentinel_roundtrip() {
-    for seed in 0..CASES {
+    for seed in 0..cases() {
         let mut rng = SplitMix64::new(seed ^ 0x5EED);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);
@@ -82,7 +82,7 @@ fn prop_sentinel_roundtrip() {
 /// aligned layouts may pad) and bounded by a sane factor.
 #[test]
 fn prop_blob_sizes_bound_payload() {
-    for seed in 0..CASES {
+    for seed in 0..cases() {
         let mut rng = SplitMix64::new(seed ^ 0xB10B);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);
@@ -111,7 +111,7 @@ fn prop_blob_sizes_bound_payload() {
 /// delinearization.
 #[test]
 fn prop_nd_lin_consistency() {
-    for seed in 0..CASES {
+    for seed in 0..cases() {
         let mut rng = SplitMix64::new(seed ^ 0x11D);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);
@@ -162,7 +162,7 @@ fn prop_plan_resolves_like_mapping() {
     }
 
     // Random record dims × array dims × mappings.
-    for seed in 0..CASES {
+    for seed in 0..cases() {
         let mut rng = SplitMix64::new(seed ^ 0x91A5);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);
@@ -238,7 +238,7 @@ fn prop_plan_resolves_like_mapping() {
 /// unchanged.
 #[test]
 fn prop_wrappers_preserve_layout() {
-    for seed in 0..CASES / 2 {
+    for seed in 0..cases() / 2 {
         let mut rng = SplitMix64::new(seed ^ 0x77AE);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);

@@ -86,7 +86,7 @@ fn prop_shards_disjoint_covering_and_lane_aligned() {
 
 #[test]
 fn prop_shards_on_random_mappings() {
-    for seed in 0..CASES {
+    for seed in 0..cases() {
         let mut rng = SplitMix64::new(seed ^ 0x5AAD);
         let dim = gen_record_dim(&mut rng);
         let dims = gen_dims(&mut rng);

@@ -1,8 +1,8 @@
 //! Self-contained property-testing support (proptest is not in the
 //! vendored crate set): a deterministic case generator over random
 //! record dimensions, array dimensions and mappings, plus shrink-free
-//! exhaustive-ish iteration. Each property runs `CASES` generated
-//! cases; failures print the seed for replay.
+//! exhaustive-ish iteration. Each property runs [`cases`] generated
+//! cases (env-tunable); failures print the seed for replay.
 
 // Included via `mod prop_support;` by several test crates, none of
 // which uses every helper.
@@ -11,7 +11,20 @@
 use llama::prelude::*;
 use llama::workloads::rng::SplitMix64;
 
-pub const CASES: u64 = 60;
+/// Generated cases per property: 60 by default (PR-sized), raised via
+/// the `LLAMA_PROPTEST_CASES` env knob (the scheduled CI `test-matrix`
+/// job sets it to several hundred). Invalid values fall back to the
+/// default rather than silently running zero cases.
+pub fn cases() -> u64 {
+    static CASES: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    *CASES.get_or_init(|| {
+        std::env::var("LLAMA_PROPTEST_CASES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(60)
+    })
+}
 
 /// Generate a random record dimension: 1..=10 fields, nesting depth up
 /// to 3, arrays up to 4 elements, all scalar kinds.

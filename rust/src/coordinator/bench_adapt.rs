@@ -1,0 +1,365 @@
+//! `bench-adapt` driver: the adaptive relayout engine vs the best and
+//! worst static layout, per workload (EXPERIMENTS.md §Adapt).
+//!
+//! Each case is a complete run — build, load, N workload steps — so
+//! the adaptive rows *include* the sampling epoch and the migration
+//! copy: the comparison shows whether the relayout pays for itself
+//! within the run. Static candidates are measured identically and the
+//! fastest/slowest become the `best-static` / `worst-static` rows.
+
+use super::bench::{bench, black_box, Opts};
+use super::report::{fmt_ms, Table};
+use crate::array::ArrayDims;
+use crate::mapping::{AoS, AoSoA, Mapping, SoA};
+use crate::view::adapt::{AdaptiveConfig, AdaptiveView};
+use crate::view::{alloc_view, View};
+use crate::workloads::rng::SplitMix64;
+use crate::workloads::{hep, lbm, nbody, picframe};
+
+/// Problem sizes per workload (quick = CI smoke).
+struct Sizes {
+    nbody_n: usize,
+    lbm_g: usize,
+    pic_n: usize,
+    hep_n: usize,
+    steps: usize,
+}
+
+fn sizes(o: &Opts) -> Sizes {
+    if o.quick {
+        Sizes {
+            nbody_n: o.n.unwrap_or(1 << 14),
+            lbm_g: 12,
+            pic_n: picframe::FRAME_SIZE * 16,
+            hep_n: 1 << 12,
+            steps: 6,
+        }
+    } else {
+        Sizes {
+            nbody_n: o.n.unwrap_or(1 << 20),
+            lbm_g: 32,
+            pic_n: picframe::FRAME_SIZE * 256,
+            hep_n: 1 << 16,
+            steps: 12,
+        }
+    }
+}
+
+/// One measured full run: (layout label, median ns).
+type Row = (String, f64);
+
+/// Engine defaults for the benched runs: one traced step, then steady
+/// for the rest of the run (the run *is* one epoch).
+fn engine_cfg() -> AdaptiveConfig {
+    AdaptiveConfig { steady_steps: 0, ..Default::default() }
+}
+
+fn push_rows(t: &mut Table, workload: &str, adaptive: Row, statics: Vec<Row>) {
+    let best = statics
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).expect("finite medians"))
+        .expect("static candidates")
+        .clone();
+    let worst = statics
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("finite medians"))
+        .expect("static candidates")
+        .clone();
+    let rows = vec![
+        ("adaptive".to_string(), adaptive),
+        ("best-static".to_string(), best),
+        ("worst-static".to_string(), worst),
+    ];
+    for (variant, (layout, ns)) in rows {
+        t.row(vec![workload.to_string(), variant, layout, fmt_ms(ns)]);
+    }
+}
+
+// ---- nbody: the memory-bound move sweep ----
+
+fn nbody_static<M: Mapping + Clone>(
+    mapping: M,
+    state: &nbody::ParticleSoA,
+    steps: usize,
+    o: &Opts,
+) -> f64 {
+    bench("nbody static", 1, o.iters, || {
+        let mut v = alloc_view(mapping.clone());
+        nbody::llama_impl::load_state(&mut v, state);
+        for _ in 0..steps {
+            nbody::llama_impl::mv(&mut v);
+        }
+        black_box(v.blobs());
+    })
+    .median_ns
+}
+
+fn nbody_case(s: &Sizes, o: &Opts, t: &mut Table) {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(s.nbody_n);
+    let state = nbody::init_particles(s.nbody_n, 7);
+    let statics: Vec<Row> = vec![
+        (
+            "AoS (aligned)".into(),
+            nbody_static(AoS::aligned(&d, dims.clone()), &state, s.steps, o),
+        ),
+        (
+            "SoA MB".into(),
+            nbody_static(SoA::multi_blob(&d, dims.clone()), &state, s.steps, o),
+        ),
+        (
+            "AoSoA16".into(),
+            nbody_static(AoSoA::new(&d, dims.clone(), 16), &state, s.steps, o),
+        ),
+    ];
+    let mut final_layout = String::new();
+    let r = bench("nbody adaptive", 1, o.iters, || {
+        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        nbody::llama_impl::load_state(&mut v, &state);
+        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut k = nbody::llama_impl::AdaptiveMove { threads: 1 };
+        for _ in 0..s.steps {
+            av.step(&mut k);
+        }
+        final_layout = av.mapping_name();
+        black_box(av.count());
+    });
+    push_rows(t, "nbody", (final_layout, r.median_ns), statics);
+}
+
+// ---- lbm: the D3Q19 stream-collide step ----
+
+fn lbm_static<M: Mapping + Clone>(
+    mapping: M,
+    geo: &lbm::Geometry,
+    steps: usize,
+    o: &Opts,
+) -> f64 {
+    bench("lbm static", 1, o.iters, || {
+        let mut a = alloc_view(mapping.clone());
+        let mut b = alloc_view(mapping.clone());
+        lbm::step::init(&mut a, geo);
+        lbm::step::init(&mut b, geo);
+        for _ in 0..steps {
+            lbm::step::step(&a, &mut b);
+            std::mem::swap(&mut a, &mut b);
+        }
+        black_box(a.blobs());
+    })
+    .median_ns
+}
+
+fn lbm_case(s: &Sizes, o: &Opts, t: &mut Table) {
+    let d = lbm::cell_dim();
+    let geo = lbm::Geometry::channel_with_sphere(s.lbm_g, s.lbm_g, s.lbm_g, 2024);
+    let statics: Vec<Row> = vec![
+        (
+            "AoS (aligned)".into(),
+            lbm_static(AoS::aligned(&d, geo.dims.clone()), &geo, s.steps, o),
+        ),
+        (
+            "SoA MB".into(),
+            lbm_static(SoA::multi_blob(&d, geo.dims.clone()), &geo, s.steps, o),
+        ),
+        (
+            "AoSoA16".into(),
+            lbm_static(AoSoA::new(&d, geo.dims.clone(), 16), &geo, s.steps, o),
+        ),
+    ];
+    let mut final_layout = String::new();
+    let r = bench("lbm adaptive", 1, o.iters, || {
+        let mut v = alloc_view(AoS::aligned(&d, geo.dims.clone()));
+        lbm::step::init(&mut v, &geo);
+        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut k = lbm::step::AdaptiveStep { threads: 1 };
+        for _ in 0..s.steps {
+            av.step_zip(&mut k);
+        }
+        final_layout = av.mapping_name();
+        black_box(av.count());
+    });
+    push_rows(t, "lbm", (final_layout, r.median_ns), statics);
+}
+
+// ---- picframe: the drift sweep over an attribute store ----
+
+fn fill_particles<M: Mapping>(v: &mut View<M, Vec<u8>>, seed: u64) {
+    let mut rng = SplitMix64::new(seed);
+    for lin in 0..v.count() {
+        for leaf in [picframe::POS_X, picframe::POS_Y, picframe::POS_Z] {
+            v.set::<f32>(lin, leaf, rng.next_f32());
+        }
+        for leaf in [picframe::MOM_X, picframe::MOM_Y, picframe::MOM_Z] {
+            v.set::<f32>(lin, leaf, rng.range_f32(-0.3, 0.3));
+        }
+        v.set::<f32>(lin, picframe::WEIGHTING, rng.range_f32(0.5, 1.5));
+        v.set::<i32>(lin, picframe::CELL_IDX, rng.below(picframe::FRAME_SIZE) as i32);
+    }
+}
+
+fn pic_static<M: Mapping + Clone>(mapping: M, steps: usize, o: &Opts) -> f64 {
+    bench("picframe static", 1, o.iters, || {
+        let mut v = alloc_view(mapping.clone());
+        fill_particles(&mut v, 23);
+        let n = v.count();
+        for _ in 0..steps {
+            picframe::frames::drift_view(&mut v, n, 0.05);
+        }
+        black_box(v.blobs());
+    })
+    .median_ns
+}
+
+fn pic_case(s: &Sizes, o: &Opts, t: &mut Table) {
+    let d = picframe::attr_dim();
+    let dims = ArrayDims::linear(s.pic_n);
+    let statics: Vec<Row> = vec![
+        ("AoS (aligned)".into(), pic_static(AoS::aligned(&d, dims.clone()), s.steps, o)),
+        ("SoA MB".into(), pic_static(SoA::multi_blob(&d, dims.clone()), s.steps, o)),
+        ("AoSoA32".into(), pic_static(AoSoA::new(&d, dims.clone(), 32), s.steps, o)),
+    ];
+    let mut final_layout = String::new();
+    let r = bench("picframe adaptive", 1, o.iters, || {
+        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        fill_particles(&mut v, 23);
+        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut k = picframe::frames::AdaptiveDrift { dt: 0.05 };
+        for _ in 0..s.steps {
+            av.step(&mut k);
+        }
+        final_layout = av.mapping_name();
+        black_box(av.count());
+    });
+    push_rows(t, "picframe", (final_layout, r.median_ns), statics);
+}
+
+// ---- hep: the 3-of-100-fields isolation sweep ----
+
+fn hep_static<M: Mapping + Clone>(mapping: M, steps: usize, o: &Opts) -> (f64, f64) {
+    let mut total = 0.0f64;
+    let ns = bench("hep static", 1, o.iters, || {
+        let mut v = alloc_view(mapping.clone());
+        hep::generate_events(&mut v, 77);
+        total = 0.0;
+        for _ in 0..steps {
+            total += hep::isolated_energy(&v, 128);
+        }
+        black_box(total);
+    })
+    .median_ns;
+    (ns, total)
+}
+
+fn hep_case(s: &Sizes, o: &Opts, t: &mut Table) {
+    let d = hep::event_dim();
+    let dims = ArrayDims::linear(s.hep_n);
+    let (aos_ns, expect) = hep_static(AoS::aligned(&d, dims.clone()), s.steps, o);
+    let (soa_ns, soa_total) = hep_static(SoA::multi_blob(&d, dims.clone()), s.steps, o);
+    let (aosoa_ns, aosoa_total) = hep_static(AoSoA::new(&d, dims.clone(), 16), s.steps, o);
+    assert_eq!(expect, soa_total, "hep energy differs across layouts");
+    assert_eq!(expect, aosoa_total, "hep energy differs across layouts");
+    let statics: Vec<Row> = vec![
+        ("AoS (aligned)".into(), aos_ns),
+        ("SoA MB".into(), soa_ns),
+        ("AoSoA16".into(), aosoa_ns),
+    ];
+    let mut final_layout = String::new();
+    let mut adaptive_total = 0.0f64;
+    let r = bench("hep adaptive", 1, o.iters, || {
+        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        hep::generate_events(&mut v, 77);
+        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut k = hep::AdaptiveIsolation { min_quality: 128, threads: 1, total: 0.0 };
+        for _ in 0..s.steps {
+            av.step(&mut k);
+        }
+        final_layout = av.mapping_name();
+        adaptive_total = k.total;
+        black_box(k.total);
+    });
+    // Migration must not change physics: the adaptive sweep sums the
+    // exact same energies as every static layout.
+    assert_eq!(adaptive_total, expect, "adaptive hep energy drifted");
+    push_rows(t, "hep", (final_layout, r.median_ns), statics);
+}
+
+/// Run the adaptive-vs-static comparison for all four workloads.
+pub fn run(o: &Opts) -> Table {
+    let s = sizes(o);
+    let mut t = Table::new(
+        format!(
+            "adaptive relayout engine: adaptive vs static ({} steps per run, {})",
+            s.steps,
+            if o.quick { "quick" } else { "full" }
+        ),
+        &["workload", "variant", "layout", "ms"],
+    );
+    nbody_case(&s, o, &mut t);
+    lbm_case(&s, o, &mut t);
+    pic_case(&s, o, &mut t);
+    hep_case(&s, o, &mut t);
+    t
+}
+
+/// Serialize a bench-adapt run as the `BENCH_adapt.json` baseline.
+/// Refuses structurally to emit a document missing the
+/// adaptive/best-static/worst-static triple for any workload.
+pub fn baseline_json_checked(o: &Opts) -> crate::error::Result<String> {
+    let t = run(o);
+    for workload in ["nbody", "lbm", "picframe", "hep"] {
+        for variant in ["adaptive", "best-static", "worst-static"] {
+            crate::ensure!(
+                t.rows.iter().any(|r| r[0] == workload && r[1] == variant),
+                "bench-adapt: missing {workload}/{variant} row"
+            );
+        }
+    }
+    Ok(format!(
+        "{{\n  \"figure\": \"bench_adapt\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
+         \"unit\": \"ms (median, whole run incl. sampling + migration)\",\n  \"adapt\": {}\n}}\n",
+        if o.quick { "quick" } else { "full" },
+        o.iters,
+        t.to_json()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> Opts {
+        let mut o = Opts::quick();
+        o.iters = 1;
+        o.n = Some(512);
+        o
+    }
+
+    #[test]
+    fn all_workloads_produce_the_variant_triple() {
+        let t = run(&tiny_opts());
+        assert_eq!(t.rows.len(), 4 * 3);
+        for workload in ["nbody", "lbm", "picframe", "hep"] {
+            for variant in ["adaptive", "best-static", "worst-static"] {
+                assert!(
+                    t.rows.iter().any(|r| r[0] == workload && r[1] == variant),
+                    "missing {workload}/{variant}"
+                );
+            }
+        }
+        // The adaptive rows name the layout the engine landed on.
+        let nbody_adaptive =
+            t.rows.iter().find(|r| r[0] == "nbody" && r[1] == "adaptive").unwrap();
+        assert!(nbody_adaptive[2].starts_with("SoA("), "{nbody_adaptive:?}");
+        let lbm_adaptive = t.rows.iter().find(|r| r[0] == "lbm" && r[1] == "adaptive").unwrap();
+        assert!(lbm_adaptive[2].starts_with("Split("), "{lbm_adaptive:?}");
+    }
+
+    #[test]
+    fn baseline_json_gates_on_the_triple() {
+        let j = baseline_json_checked(&tiny_opts()).expect("complete run passes");
+        assert!(j.contains("\"figure\": \"bench_adapt\""), "{j}");
+        assert!(j.contains("\"adapt\": {"), "{j}");
+        assert!(j.contains("adaptive"), "{j}");
+        assert!(!j.contains("\"rows\": []"), "{j}");
+    }
+}

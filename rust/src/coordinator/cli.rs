@@ -6,7 +6,7 @@ use crate::bail;
 use crate::error::Result;
 
 use super::bench::Opts;
-use super::{fig10_picframe, fig5_nbody, fig6_xla, fig7_copy, fig8_lbm};
+use super::{bench_adapt, fig10_picframe, fig5_nbody, fig6_xla, fig7_copy, fig8_lbm};
 
 const USAGE: &str = "\
 llama — LLAMA (Low-Level Abstraction of Memory Access) reproduction
@@ -21,6 +21,8 @@ COMMANDS:
   picframe    fig 10: PIConGPU-style particle frames across layouts
   bench-fig5  run fig 5 and write the BENCH_fig5.json baseline
   bench-fig7  run fig 7 and write the BENCH_fig7.json baseline
+  adapt       adaptive relayout engine vs best/worst static layout
+  bench-adapt run adapt and write the BENCH_adapt.json baseline
   dump        fig 4: write SVG/HTML layout dumps + heatmap
   e2e         end-to-end driver: LLAMA memory -> PJRT n-body steps
   all         run every figure driver (quick mode by default)
@@ -120,6 +122,12 @@ pub fn run(cli: Cli) -> Result<()> {
             std::fs::write(path, fig7_copy::baseline_json_checked(o)?)?;
             println!("wrote {path}");
         }
+        "adapt" => emit(&bench_adapt::run(o), cli.markdown),
+        "bench-adapt" => {
+            let path = "BENCH_adapt.json";
+            std::fs::write(path, bench_adapt::baseline_json_checked(o)?)?;
+            println!("wrote {path}");
+        }
         "dump" => dump(&cli.out_dir)?,
         "e2e" => e2e(o, &cli.out_dir)?,
         "all" => {
@@ -132,6 +140,7 @@ pub fn run(cli: Cli) -> Result<()> {
                 emit(&t, cli.markdown);
             }
             emit(&fig10_picframe::run(&o), cli.markdown);
+            emit(&bench_adapt::run(&o), cli.markdown);
             match fig6_xla::run(&o) {
                 Ok(t) => emit(&t, cli.markdown),
                 Err(e) => println!("fig6 skipped ({e}); run `make artifacts` first"),

@@ -94,6 +94,22 @@ pub fn run(o: &Opts) -> (Table, Table) {
             black_box(v.blobs());
         }));
     }
+    // The adaptive engine (EXPERIMENTS.md §Adapt): starts on AoS, the
+    // warmup step is the trace epoch, the advisor's layout (SoA for
+    // the 4-of-7-leaf j-stream) carries the timed iterations. Measures
+    // the steady state the engine converges to.
+    {
+        use crate::view::adapt::{AdaptiveConfig, AdaptiveView};
+        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        llama_impl::load_state(&mut v, &state_u);
+        let cfg = AdaptiveConfig { steady_steps: 0, ..Default::default() };
+        let mut av = AdaptiveView::new(v, cfg);
+        let mut kernel = llama_impl::AdaptiveUpdate { threads: 1 };
+        results.push(bench("LLAMA adaptive (AoS start)", w.max(1), o.iters, || {
+            av.step(&mut kernel);
+            black_box(av.count());
+        }));
+    }
 
     let base = results[0].median_ns;
     for r in &results {
@@ -248,12 +264,13 @@ mod tests {
         o.n = Some(256);
         o.iters = 1;
         let (u, m) = run(&o);
-        assert_eq!(u.rows.len(), 11);
+        assert_eq!(u.rows.len(), 12);
         assert_eq!(m.rows.len(), 6);
         // Baseline ratio is exactly 1.
         assert_eq!(u.rows[0][2], "1.000");
         let txt = u.to_text();
         assert!(txt.contains("LLAMA SoA MB"));
+        assert!(txt.contains("LLAMA adaptive"));
     }
 
     #[test]

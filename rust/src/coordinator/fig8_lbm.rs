@@ -8,10 +8,10 @@
 
 use super::bench::{bench, black_box, Opts};
 use super::report::{fmt_ms, fmt_ratio, Table};
-use crate::mapping::{AoS, AoSoA, Mapping, SoA, Trace};
+use crate::mapping::{AoS, AoSoA, Mapping, RecipeMapping, SoA, Trace};
+use crate::view::adapt::{AdaptiveConfig, AdaptiveView};
 use crate::view::alloc_view;
-use crate::workloads::lbm::split4::build_split4;
-use crate::workloads::lbm::step::{init, step_parallel, total_mass};
+use crate::workloads::lbm::step::{init, step_parallel, total_mass, AdaptiveStep};
 use crate::workloads::lbm::{cell_dim, Geometry};
 
 pub fn geometry(o: &Opts) -> Geometry {
@@ -46,7 +46,9 @@ fn run_case<M: Mapping + Clone>(
     rows.push((name.to_string(), r.median_ns));
 }
 
-/// Derive the paper's hot/cold 4-group split from a traced step.
+/// Derive the paper's hot/cold 4-group split from a traced step (kept
+/// for the §4.3 manual-workflow ablation, `cargo bench --bench
+/// ablations`).
 pub fn trace_derived_groups(geo: &Geometry) -> Vec<Vec<usize>> {
     let d = cell_dim();
     let traced = Trace::new(AoS::aligned(&d, geo.dims.clone()));
@@ -55,6 +57,23 @@ pub fn trace_derived_groups(geo: &Geometry) -> Vec<Vec<usize>> {
     init(&mut a, geo);
     crate::workloads::lbm::step::step(&a, &mut b);
     a.mapping().equal_count_groups(4)
+}
+
+/// Derive the hot/cold split through the adaptive engine — the
+/// automated replacement for the hand-wired trace →
+/// `equal_count_groups` → `build_split4` workflow: wrap an initialized
+/// AoS view, run one traced step, and take whatever layout the
+/// engine's advisor adopted (the pull-scheme step reads `flags` once
+/// per direction, so the advisor splits it hot).
+pub fn advisor_derived_mapping(geo: &Geometry) -> RecipeMapping {
+    let d = cell_dim();
+    let mut v = alloc_view(AoS::aligned(&d, geo.dims.clone()));
+    init(&mut v, geo);
+    let cfg = AdaptiveConfig { steady_steps: 0, ..Default::default() };
+    let mut av = AdaptiveView::new(v, cfg);
+    av.step_zip(&mut AdaptiveStep { threads: 1 });
+    let (mapping, _) = av.into_view().into_parts();
+    mapping
 }
 
 /// One saturation scenario of fig 8.
@@ -71,10 +90,9 @@ fn scenario(label: &str, geo: &Geometry, steps: usize, threads: usize, o: &Opts)
         o,
         &mut rows,
     );
-    let groups = trace_derived_groups(geo);
     run_case(
-        "Split (trace hot/cold)",
-        build_split4(&d, geo.dims.clone(), &groups),
+        "Split (advisor hot/cold)",
+        advisor_derived_mapping(geo),
         geo,
         steps,
         threads,
@@ -137,7 +155,7 @@ mod tests {
         assert_eq!(tables.len(), 2);
         for t in &tables {
             assert_eq!(t.rows.len(), 8);
-            assert!(t.to_text().contains("Split (trace hot/cold)"));
+            assert!(t.to_text().contains("Split (advisor hot/cold)"));
             assert_eq!(t.rows[0][2], "1.000");
         }
     }
@@ -150,5 +168,15 @@ mod tests {
         let mut all = groups.concat();
         all.sort_unstable();
         assert_eq!(all, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn advisor_mapping_is_a_hot_cold_split() {
+        let geo = Geometry::channel_with_sphere(6, 6, 6, 1);
+        let m = advisor_derived_mapping(&geo);
+        // The pull-scheme step reads flags ~20x per cell vs ~2x per
+        // distribution: the advisor must split it off hot.
+        assert!(m.mapping_name().starts_with("Split("), "{}", m.mapping_name());
+        crate::mapping::test_support::check_mapping_invariants(&m);
     }
 }

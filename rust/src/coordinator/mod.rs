@@ -9,6 +9,7 @@
 //! either entry point.
 
 pub mod bench;
+pub mod bench_adapt;
 pub mod cli;
 pub mod fig10_picframe;
 pub mod fig5_nbody;

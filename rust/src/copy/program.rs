@@ -132,6 +132,27 @@ impl OpSink {
 impl CopyProgram {
     /// Compile the (src, dst) mapping pair, read-contiguous chunk
     /// traversal. Panics if the mappings do not share a data space.
+    ///
+    /// ```
+    /// use llama::prelude::*;
+    ///
+    /// let d = llama::record_dim! { x: f32, y: f32 };
+    /// let dims = ArrayDims::linear(256);
+    /// let src = SoA::multi_blob(&d, dims.clone());
+    /// let dst = AoSoA::new(&d, dims.clone(), 16);
+    ///
+    /// // Compile once...
+    /// let prog = CopyProgram::compile(&src, &dst);
+    /// assert_eq!(prog.method(), CopyMethod::AoSoAChunked);
+    /// assert!(prog.is_closed_form()); // pure byte moves, no mapping calls
+    ///
+    /// // ...replay on any number of view pairs using those mappings.
+    /// let mut a = alloc_view(src);
+    /// a.set::<f32>(123, 1, 4.5);
+    /// let mut b = alloc_view(dst);
+    /// prog.execute(&a, &mut b);
+    /// assert_eq!(b.get::<f32>(123, 1), 4.5);
+    /// ```
     pub fn compile<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(src: &MS, dst: &MD) -> CopyProgram {
         Self::compile_ordered(src, dst, ChunkOrder::ReadContiguous)
     }
@@ -418,6 +439,21 @@ pub(crate) fn shard_programs_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
 /// win: every parallel entry point falls back to one serial program.
 const PAR_MIN_RECORDS: usize = 1024;
 
+/// Shared worker-count policy of the parallel copy entry points
+/// (`run_parallel_with`, [`ProgramCache::copy_parallel`]): default to
+/// the machine's parallelism, never exceed the record count, and run
+/// serially below [`PAR_MIN_RECORDS`].
+fn resolve_threads(n: usize, threads: Option<usize>) -> usize {
+    let threads = threads
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
+        .min(n.max(1));
+    if n < PAR_MIN_RECORDS {
+        1
+    } else {
+        threads
+    }
+}
+
 /// The one shared parallel-copy body behind [`super::copy_parallel`]
 /// and [`super::copy_aosoa_parallel`]: clamp the thread count, fall
 /// back to a single program below [`PAR_MIN_RECORDS`], shard,
@@ -436,15 +472,157 @@ where
     BS: Blob + Sync,
     BD: BlobMut,
 {
-    let n = src.count();
-    let threads = threads
-        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1))
-        .min(n.max(1));
-    let threads = if n < PAR_MIN_RECORDS { 1 } else { threads };
+    let threads = resolve_threads(src.count(), threads);
     let progs = shard_programs_with(src.mapping(), dst.mapping(), sp, dp, order, threads);
     let method = progs[0].method();
     execute_parallel(&progs, src, dst);
     method
+}
+
+/// Fingerprint of a (src, dst) layout pair: the two compiled plans
+/// plus the blob shapes and leaf sizes — everything the program
+/// compiler's output depends on for closed-form pairs. Generic plans
+/// are excluded from caching entirely (see [`ProgramCache`]): their
+/// byte placement lives in the mapping object, which two distinct
+/// mappings with equal generic plans need not share.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct PairKey {
+    src: LayoutPlan,
+    dst: LayoutPlan,
+    src_blob_sizes: Vec<usize>,
+    dst_blob_sizes: Vec<usize>,
+    leaf_sizes: Vec<usize>,
+    /// Worker count the sharded program list was compiled for (0 =
+    /// the serial single-program entry).
+    threads: usize,
+}
+
+impl PairKey {
+    fn new<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+        src: &MS,
+        dst: &MD,
+        sp: &LayoutPlan,
+        dp: &LayoutPlan,
+        threads: usize,
+    ) -> PairKey {
+        PairKey {
+            src: sp.clone(),
+            dst: dp.clone(),
+            src_blob_sizes: (0..src.blob_count()).map(|b| src.blob_size(b)).collect(),
+            dst_blob_sizes: (0..dst.blob_count()).map(|b| dst.blob_size(b)).collect(),
+            leaf_sizes: src.info().fields.iter().map(|f| f.size()).collect(),
+            threads,
+        }
+    }
+}
+
+/// A memoized program compiler: repeated copies between the same
+/// (src plan, dst plan) pair — the adaptive engine's migrations, frame
+/// reshuffles, double-buffer flips — compile **once** and replay the
+/// cached op list thereafter.
+///
+/// Only pairs whose plans are both closed-form (non-generic
+/// addressing) are cached: a closed-form plan fully determines byte
+/// placement, so together with the blob shapes and leaf sizes in the
+/// key it is a sound fingerprint. Generic pairs (instrumented,
+/// represented, curve layouts) compile fresh on every call — their
+/// placement lives in the mapping object, which the fingerprint cannot
+/// see.
+#[derive(Debug, Default)]
+pub struct ProgramCache {
+    programs: std::collections::HashMap<PairKey, Vec<CopyProgram>>,
+    hits: usize,
+}
+
+impl ProgramCache {
+    /// An empty cache.
+    pub fn new() -> ProgramCache {
+        ProgramCache::default()
+    }
+
+    /// Number of distinct (pair, thread-count) entries compiled so far.
+    pub fn entries(&self) -> usize {
+        self.programs.len()
+    }
+
+    /// Number of lookups served from the cache (tests assert repeated
+    /// migrations compile once).
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    fn cacheable(sp: &LayoutPlan, dp: &LayoutPlan) -> bool {
+        use crate::mapping::AddrPlan;
+        !matches!(sp.addr(), AddrPlan::Generic) && !matches!(dp.addr(), AddrPlan::Generic)
+    }
+
+    fn programs_for<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+        &mut self,
+        src: &MS,
+        dst: &MD,
+        sp: &LayoutPlan,
+        dp: &LayoutPlan,
+        threads: usize,
+    ) -> std::borrow::Cow<'_, [CopyProgram]> {
+        let compile = |threads: usize| {
+            if threads == 0 {
+                vec![compile_with(src, dst, sp, dp, ChunkOrder::ReadContiguous)]
+            } else {
+                shard_programs_with(src, dst, sp, dp, ChunkOrder::ReadContiguous, threads)
+            }
+        };
+        if !Self::cacheable(sp, dp) {
+            return std::borrow::Cow::Owned(compile(threads));
+        }
+        let key = PairKey::new(src, dst, sp, dp, threads);
+        if self.programs.contains_key(&key) {
+            self.hits += 1;
+        }
+        std::borrow::Cow::Borrowed(
+            self.programs.entry(key).or_insert_with(|| compile(threads)).as_slice(),
+        )
+    }
+
+    /// [`super::copy`] through the cache: compile (or look up) the
+    /// serial program for the pair, execute it, report the strategy.
+    pub fn copy<MS, MD, BS, BD>(&mut self, src: &View<MS, BS>, dst: &mut View<MD, BD>) -> CopyMethod
+    where
+        MS: Mapping,
+        MD: Mapping,
+        BS: Blob,
+        BD: BlobMut,
+    {
+        let sp = src.mapping().plan();
+        let dp = dst.mapping().plan();
+        let progs = self.programs_for(src.mapping(), dst.mapping(), &sp, &dp, 0);
+        let method = progs[0].method();
+        progs[0].execute(src, dst);
+        method
+    }
+
+    /// [`super::copy_parallel`] through the cache: compile (or look
+    /// up) one sub-program per plan-aligned shard and replay them on
+    /// scoped threads — the adaptive engine's `migrate_parallel` path.
+    pub fn copy_parallel<MS, MD, BS, BD>(
+        &mut self,
+        src: &View<MS, BS>,
+        dst: &mut View<MD, BD>,
+        threads: Option<usize>,
+    ) -> CopyMethod
+    where
+        MS: Mapping,
+        MD: Mapping,
+        BS: Blob + Sync,
+        BD: BlobMut,
+    {
+        let threads = resolve_threads(src.count(), threads);
+        let sp = src.mapping().plan();
+        let dp = dst.mapping().plan();
+        let progs = self.programs_for(src.mapping(), dst.mapping(), &sp, &dp, threads);
+        let method = progs[0].method();
+        execute_parallel(&progs, src, dst);
+        method
+    }
 }
 
 /// Base pointers + lengths of the destination blobs, shared across the
@@ -828,6 +1006,73 @@ mod tests {
         assert!(!prog.is_closed_form());
         assert_eq!(shard_programs(&src_m, &dst_m, 8).len(), 1);
         check_against_naive(src_m, dst_m);
+    }
+
+    #[test]
+    fn program_cache_compiles_once_per_pair() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(64);
+        let mut cache = ProgramCache::new();
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_distinct(&mut src);
+        let mut oracle = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        copy_naive(&src, &mut oracle);
+        for round in 0..3 {
+            let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+            assert_eq!(cache.copy(&src, &mut dst), CopyMethod::AoSoAChunked);
+            assert_eq!(dst.blobs(), oracle.blobs(), "round {round}");
+        }
+        assert_eq!(cache.entries(), 1, "repeated copies must reuse one program");
+        assert_eq!(cache.hits(), 2);
+        // The reverse direction is a different pair -> second entry.
+        let mut back = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        let first = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        cache.copy(&first, &mut back);
+        assert_eq!(cache.entries(), 2);
+    }
+
+    #[test]
+    fn program_cache_parallel_matches_serial_and_caches_per_thread_count() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(4096 + 17);
+        let mut cache = ProgramCache::new();
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_distinct(&mut src);
+        let mut serial = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+        CopyProgram::compile(src.mapping(), serial.mapping()).execute(&src, &mut serial);
+        for _ in 0..2 {
+            for threads in [2usize, 7] {
+                let mut par = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+                assert_eq!(
+                    cache.copy_parallel(&src, &mut par, Some(threads)),
+                    CopyMethod::AoSoAChunked
+                );
+                assert_eq!(par.blobs(), serial.blobs(), "threads {threads}");
+            }
+        }
+        // One entry per thread count, each compiled exactly once.
+        assert_eq!(cache.entries(), 2);
+        assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn program_cache_never_caches_generic_pairs() {
+        use crate::mapping::Trace;
+        let d = particle_dim();
+        let dims = ArrayDims::linear(16);
+        let mut cache = ProgramCache::new();
+        // Trace plans are generic: two different inner layouts would
+        // collide on the plan fingerprint, so the cache must decline.
+        let mut src = alloc_view(Trace::new(AoS::packed(&d, dims.clone())));
+        fill_distinct(&mut src);
+        let mut dst = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        // Still chunk-copyable (packed AoS chunks at 1 lane through the
+        // mapping object) — but never cached.
+        assert_eq!(cache.copy(&src, &mut dst), CopyMethod::AoSoAChunked);
+        assert_eq!(cache.entries(), 0);
+        let mut oracle = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        copy_naive(&src, &mut oracle);
+        assert_eq!(dst.blobs(), oracle.blobs());
     }
 
     #[test]

@@ -33,21 +33,39 @@
 //! assert_eq!(view.get::<f32>(1023, mass), 1.0);
 //! ```
 //!
-//! The evaluation workloads (n-body, D3Q19 LBM, HEP event records,
-//! PIConGPU-style particle frames) live under [`workloads`]; the PJRT
-//! runtime executing the JAX/Pallas AOT artifacts lives under
-//! [`runtime`]; the benchmark drivers under [`coordinator`].
+//! # Module tree — the four-layer stack (see `ARCHITECTURE.md`)
+//!
+//! * **Data space** — [`record`] (compile-time record dimension) ×
+//!   [`array`] (runtime array dimensions).
+//! * **Mapping → plan** — [`mapping`]: layout functions, each compiled
+//!   into an executable [`mapping::LayoutPlan`] ([`mapping::plan`]);
+//!   [`mapping::advisor`] recommends layouts from traced statistics.
+//! * **Access & scale** — [`view`]: views over blobs, zero-overhead
+//!   cursors ([`view::cursor`]), plan-aligned parallel sharding
+//!   ([`view::shard`]), and the adaptive relayout engine
+//!   ([`view::adapt`]).
+//! * **Copy** — [`copy`]: layout-changing copies compiled once into
+//!   [`copy::CopyProgram`]s ([`copy::program`]).
+//!
+//! Supporting modules: [`blob`] (storage), [`dump`] (fig 4 layout
+//! visualizations), [`error`] (in-tree error plumbing), [`workloads`]
+//! (n-body, D3Q19 LBM, HEP events, PIConGPU-style frames),
+//! [`runtime`] (PJRT execution of JAX/Pallas AOT artifacts, `xla`
+//! feature), [`coordinator`] (benchmark drivers + CLI).
 
 pub mod array;
 pub mod blob;
 pub mod coordinator;
+#[warn(missing_docs)]
 pub mod copy;
 pub mod dump;
 pub mod error;
+#[warn(missing_docs)]
 pub mod mapping;
 #[macro_use]
 pub mod record;
 pub mod runtime;
+#[warn(missing_docs)]
 pub mod view;
 pub mod workloads;
 
@@ -70,17 +88,20 @@ pub mod prelude {
     pub use crate::blob::{AlignedAlloc, Blob, BlobAllocator, BlobMut, VecAlloc};
     pub use crate::copy::{
         aosoa_copy, copy, copy_blobwise, copy_naive, copy_parallel, copy_stdcopy, views_equal,
-        ChunkOrder, CopyMethod, CopyOp, CopyProgram,
+        ChunkOrder, CopyMethod, CopyOp, CopyProgram, ProgramCache,
     };
     pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
     pub use crate::mapping::{
-        recommend, AccessPattern, AddrPlan, AoS, AoSoA, Byteswap, Heatmap, LayoutPlan, Mapping,
-        Null, One, Recommendation, SoA, Split, Trace,
+        estimated_bytes_per_record, migration_gain, recommend, recommend_stats, AccessPattern,
+        AddrPlan, AoS, AoSoA, Byteswap, CostModel, FieldStats, Heatmap, HeatmapSnapshot,
+        LayoutPlan, Mapping, Null, One, RecipeMapping, Recommendation, SoA, Split, Trace,
+        TraceSnapshot,
     };
     pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};
     pub use crate::view::{
         alloc_view, alloc_view_with, pair_align, par_execute, par_execute_zip, par_map_shards,
-        par_shards, plan_aliases, shard_align, shard_pair, shard_plan, shard_range, CursorRead,
-        CursorWrite, OneRecord, ScalarVal, Shard, ShardKernel, ShardKernel2, View,
+        par_shards, plan_aliases, shard_align, shard_pair, shard_plan, shard_range, AdaptiveConfig,
+        AdaptiveKernel, AdaptiveKernel2, AdaptiveView, CursorRead, CursorWrite, OneRecord,
+        ScalarVal, Shard, ShardKernel, ShardKernel2, View,
     };
 }

@@ -17,8 +17,12 @@
 //! phase: AoS wastes `1 - touched/record` of each line); it is
 //! validated against the measured fig-5/fig-8 orderings in the tests.
 
-use super::{Mapping, Trace};
-use crate::record::RecordInfo;
+use std::sync::Arc;
+
+use super::trace::TraceSnapshot;
+use super::{AoS, Mapping, SoA, Split, Trace};
+use crate::array::ArrayDims;
+use crate::record::{RecordCoord, RecordDim, RecordInfo, Type};
 
 /// How the program walks the array dimensions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,10 +36,136 @@ pub enum AccessPattern {
 /// The advisor's verdict.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Recommendation {
+    /// Aligned array-of-structs: locality for irregular full-record
+    /// access.
     Aos,
+    /// Multi-blob struct-of-arrays: every streamed byte is useful.
     SoaMultiBlob,
     /// Hot leaves (by flat index) split off into SoA, rest AoS.
-    SplitHotCold { hot: Vec<usize> },
+    SplitHotCold {
+        /// Flat leaf indices of the hot group, declaration order.
+        hot: Vec<usize>,
+    },
+}
+
+/// The hot/cold Split shape the advisor materializes: hot leaves in a
+/// multi-blob SoA, the cold rest in one aligned AoS blob.
+pub type SplitHotColdMapping = Split<SoA, AoS>;
+
+impl Recommendation {
+    /// Materialize the recommendation as a concrete, ready-to-allocate
+    /// mapping over `(dim, dims)` — the step that turns the advisor's
+    /// verdict into something a view (and the adaptive engine's
+    /// migration) can run on.
+    ///
+    /// Degenerate hot sets fall back gracefully: an empty set or one
+    /// covering every leaf yields the SoA recipe (a Split needs both
+    /// sides populated).
+    pub fn to_mapping(&self, dim: &RecordDim, dims: ArrayDims) -> RecipeMapping {
+        match self {
+            Recommendation::Aos => RecipeMapping::Aos(AoS::aligned(dim, dims)),
+            Recommendation::SoaMultiBlob => RecipeMapping::Soa(SoA::multi_blob(dim, dims)),
+            Recommendation::SplitHotCold { hot } => {
+                let info = RecordInfo::new(dim);
+                if hot.is_empty() || hot.len() >= info.leaf_count() {
+                    return RecipeMapping::Soa(SoA::multi_blob(dim, dims));
+                }
+                let selectors: Vec<RecordCoord> =
+                    hot.iter().map(|&l| info.fields[l].coord.clone()).collect();
+                RecipeMapping::Split(Split::by_selectors(
+                    dim,
+                    dims,
+                    selectors,
+                    |sd, ad| SoA::multi_blob(sd, ad),
+                    |sd, ad| AoS::aligned(sd, ad),
+                ))
+            }
+        }
+    }
+}
+
+/// A concrete mapping materialized from a [`Recommendation`] (or
+/// wrapping an arbitrary starting layout), with one runtime type for
+/// every layout the adaptive engine can hold — the closed set lets
+/// [`crate::view::adapt::AdaptiveView`] change layout at runtime while
+/// kernels stay statically dispatched per variant.
+#[derive(Clone)]
+pub enum RecipeMapping {
+    /// Aligned AoS ([`Recommendation::Aos`]).
+    Aos(AoS),
+    /// Multi-blob SoA ([`Recommendation::SoaMultiBlob`]).
+    Soa(SoA),
+    /// Hot/cold split ([`Recommendation::SplitHotCold`]).
+    Split(SplitHotColdMapping),
+    /// Any other layout (type-erased) — the adaptive engine's wrapper
+    /// for arbitrary starting mappings.
+    Other(Arc<dyn Mapping>),
+}
+
+impl std::fmt::Debug for RecipeMapping {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RecipeMapping({})", self.mapping_name())
+    }
+}
+
+macro_rules! recipe_delegate {
+    ($self:ident, $m:ident => $body:expr) => {
+        match $self {
+            RecipeMapping::Aos($m) => $body,
+            RecipeMapping::Soa($m) => $body,
+            RecipeMapping::Split($m) => $body,
+            RecipeMapping::Other($m) => $body,
+        }
+    };
+}
+
+impl Mapping for RecipeMapping {
+    fn info(&self) -> &Arc<RecordInfo> {
+        recipe_delegate!(self, m => m.info())
+    }
+
+    fn dims(&self) -> &ArrayDims {
+        recipe_delegate!(self, m => m.dims())
+    }
+
+    fn blob_count(&self) -> usize {
+        recipe_delegate!(self, m => m.blob_count())
+    }
+
+    fn blob_size(&self, nr: usize) -> usize {
+        recipe_delegate!(self, m => m.blob_size(nr))
+    }
+
+    fn slot_count(&self) -> usize {
+        recipe_delegate!(self, m => m.slot_count())
+    }
+
+    #[inline]
+    fn slot_of_lin(&self, lin: usize) -> usize {
+        recipe_delegate!(self, m => m.slot_of_lin(lin))
+    }
+
+    #[inline]
+    fn slot_of_nd(&self, idx: &[usize]) -> usize {
+        recipe_delegate!(self, m => m.slot_of_nd(idx))
+    }
+
+    #[inline]
+    fn blob_nr_and_offset(&self, leaf: usize, slot: usize) -> (usize, usize) {
+        recipe_delegate!(self, m => m.blob_nr_and_offset(leaf, slot))
+    }
+
+    fn mapping_name(&self) -> String {
+        recipe_delegate!(self, m => m.mapping_name())
+    }
+
+    fn is_native_representation(&self) -> bool {
+        recipe_delegate!(self, m => m.is_native_representation())
+    }
+
+    fn plan(&self) -> super::LayoutPlan {
+        recipe_delegate!(self, m => m.plan())
+    }
 }
 
 /// Per-field access statistics, extracted from a [`Trace`].
@@ -46,11 +176,24 @@ pub struct FieldStats {
 }
 
 impl FieldStats {
+    /// Extract statistics from a live [`Trace`] (relaxed per-counter
+    /// loads — for epoch-consistent stats under concurrent writers,
+    /// take a [`Trace::snapshot`] and use
+    /// [`FieldStats::from_snapshot`]).
     pub fn from_trace<M: Mapping>(trace: &Trace<M>) -> Self {
         let info = trace.info().clone();
         FieldStats {
             fields: (0..info.leaf_count())
                 .map(|l| (l, trace.count(l), info.fields[l].size()))
+                .collect(),
+        }
+    }
+
+    /// Extract statistics from an epoch-consistent [`TraceSnapshot`].
+    pub fn from_snapshot(snapshot: &TraceSnapshot, info: &RecordInfo) -> Self {
+        FieldStats {
+            fields: (0..info.leaf_count())
+                .map(|l| (l, snapshot.count(l), info.fields[l].size()))
                 .collect(),
         }
     }
@@ -92,13 +235,23 @@ impl FieldStats {
 /// Recommend a layout from traced statistics and an access-pattern
 /// hint.
 pub fn recommend<M: Mapping>(trace: &Trace<M>, pattern: AccessPattern) -> Recommendation {
-    let stats = FieldStats::from_trace(trace);
-    let info = trace.info().clone();
+    recommend_stats(&FieldStats::from_trace(trace), trace.info(), pattern)
+}
+
+/// [`recommend`] over pre-extracted statistics — the entry point for
+/// epoch-consistent snapshots ([`FieldStats::from_snapshot`]) and the
+/// adaptive engine, which decides at epoch boundaries rather than from
+/// a live trace.
+pub fn recommend_stats(
+    stats: &FieldStats,
+    info: &RecordInfo,
+    pattern: AccessPattern,
+) -> Recommendation {
     if stats.total_accessed_bytes() == 0.0 {
         // No data: default to the general-purpose streaming layout.
         return Recommendation::SoaMultiBlob;
     }
-    let touched = stats.touched_fraction(&info);
+    let touched = stats.touched_fraction(info);
     match pattern {
         AccessPattern::RandomFullRecord => {
             // Irregular positions + (almost) whole record: locality of
@@ -125,6 +278,94 @@ pub fn recommend<M: Mapping>(trace: &Trace<M>, pattern: AccessPattern) -> Recomm
             }
         }
     }
+}
+
+/// Hooks for replacing the model's estimates with measured data.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CostModel {
+    /// Measured bytes-per-record of the *current* layout, e.g. from a
+    /// [`super::Heatmap`] epoch
+    /// ([`super::heatmap::HeatmapSnapshot::bytes_per_record`]). When
+    /// present it overrides [`estimated_bytes_per_record`] for the
+    /// current side of a [`migration_gain`] comparison — the paper's
+    /// §4.1 bandwidth-use arithmetic fed with observed rather than
+    /// modeled line utilization.
+    pub measured_current: Option<f64>,
+}
+
+/// First-order cost model: estimated bytes pulled through the cache
+/// per record visit under the candidate layout (the §4.1 argument —
+/// AoS pays the whole record per visit, SoA only the touched fields,
+/// a hot/cold Split the dense hot group plus, if any cold field is
+/// touched, the cold AoS record).
+pub fn estimated_bytes_per_record(
+    stats: &FieldStats,
+    info: &RecordInfo,
+    rec: &Recommendation,
+) -> f64 {
+    let touched_size = |leaf: usize| -> Option<usize> {
+        stats
+            .fields
+            .iter()
+            .find(|&&(l, c, _)| l == leaf && c > 0)
+            .map(|&(_, _, s)| s)
+    };
+    let any_touched = stats.fields.iter().any(|&(_, c, _)| c > 0);
+    if !any_touched {
+        return 0.0;
+    }
+    match rec {
+        Recommendation::Aos => info.aligned_size as f64,
+        Recommendation::SoaMultiBlob => (0..info.leaf_count())
+            .filter_map(touched_size)
+            .sum::<usize>() as f64,
+        Recommendation::SplitHotCold { hot } => {
+            let hot_bytes: usize =
+                hot.iter().map(|&l| info.fields[l].size()).sum();
+            let cold_touched = stats
+                .fields
+                .iter()
+                .any(|&(l, c, _)| c > 0 && !hot.contains(&l));
+            let cold_bytes = if cold_touched {
+                // The cold side materializes as *aligned* AoS
+                // ([`Recommendation::to_mapping`]), so a touched cold
+                // field pulls the aligned cold record — padding
+                // included — not the packed sum of cold sizes.
+                let mut cold = RecordDim::new();
+                for l in (0..info.leaf_count()).filter(|l| !hot.contains(l)) {
+                    let f = &info.fields[l];
+                    cold = cold.field(f.path.clone(), Type::Scalar(f.scalar));
+                }
+                RecordInfo::new(&cold).aligned_size
+            } else {
+                0
+            };
+            (hot_bytes + cold_bytes) as f64
+        }
+    }
+}
+
+/// Predicted speedup factor of migrating `current` → `candidate` under
+/// the observed stats: the ratio of bytes-per-record, with the current
+/// side overridable by a measured value ([`CostModel`]). Values above
+/// 1.0 favor migrating; the adaptive engine compares against
+/// `1.0 + hysteresis` so marginal wins never trigger a relayout.
+pub fn migration_gain(
+    stats: &FieldStats,
+    info: &RecordInfo,
+    current: &Recommendation,
+    candidate: &Recommendation,
+    cost: &CostModel,
+) -> f64 {
+    let cur = cost
+        .measured_current
+        .filter(|&m| m > 0.0)
+        .unwrap_or_else(|| estimated_bytes_per_record(stats, info, current));
+    let cand = estimated_bytes_per_record(stats, info, candidate);
+    if cand <= 0.0 {
+        return 1.0;
+    }
+    cur / cand
 }
 
 #[cfg(test)]
@@ -199,6 +440,131 @@ mod tests {
             recommend(v.mapping(), AccessPattern::Streaming),
             Recommendation::SoaMultiBlob
         );
+    }
+
+    #[test]
+    fn to_mapping_materializes_every_recipe() {
+        let d = nbody::particle_dim();
+        let dims = ArrayDims::linear(12);
+        let aos = Recommendation::Aos.to_mapping(&d, dims.clone());
+        assert!(aos.mapping_name().starts_with("AoS(aligned"));
+        let soa = Recommendation::SoaMultiBlob.to_mapping(&d, dims.clone());
+        assert!(soa.mapping_name().starts_with("SoA(multi-blob"));
+        let split =
+            Recommendation::SplitHotCold { hot: vec![0, 1, 2] }.to_mapping(&d, dims.clone());
+        assert!(split.mapping_name().starts_with("Split("), "{}", split.mapping_name());
+        // pos.{x,y,z} hot -> 3 SoA blobs + 1 cold AoS blob.
+        assert_eq!(split.blob_count(), 4);
+        crate::mapping::test_support::check_mapping_invariants(&split);
+        // Degenerate hot sets fall back to SoA instead of panicking.
+        let all: Vec<usize> = (0..7).collect();
+        for hot in [vec![], all] {
+            let m = Recommendation::SplitHotCold { hot }.to_mapping(&d, dims.clone());
+            assert!(m.mapping_name().starts_with("SoA("));
+        }
+    }
+
+    #[test]
+    fn recipe_mapping_delegates_and_plans() {
+        use crate::mapping::LayoutPlan;
+        let d = nbody::particle_dim();
+        let dims = ArrayDims::linear(9);
+        let concrete = crate::mapping::SoA::multi_blob(&d, dims.clone());
+        let recipe = Recommendation::SoaMultiBlob.to_mapping(&d, dims.clone());
+        assert_eq!(recipe.blob_count(), concrete.blob_count());
+        for lin in 0..9 {
+            for leaf in 0..7 {
+                assert_eq!(
+                    recipe.blob_nr_and_offset(leaf, lin),
+                    concrete.blob_nr_and_offset(leaf, lin)
+                );
+            }
+        }
+        let rp: LayoutPlan = recipe.plan();
+        assert_eq!(rp, concrete.plan());
+        // Arbitrary layouts ride along type-erased.
+        let other = RecipeMapping::Other(std::sync::Arc::new(crate::mapping::AoSoA::new(
+            &d,
+            dims.clone(),
+            4,
+        )));
+        assert_eq!(other.plan(), crate::mapping::AoSoA::new(&d, dims, 4).plan());
+    }
+
+    #[test]
+    fn snapshot_stats_drive_the_same_recommendation() {
+        let d = nbody::particle_dim();
+        let mut t = Trace::new(AoS::packed(&d, ArrayDims::linear(64)));
+        let mut v = alloc_view(&t);
+        let s = nbody::init_particles(64, 1);
+        llama_impl::load_state(&mut v, &s);
+        v.mapping().reset();
+        llama_impl::mv(&mut v);
+        drop(v);
+        let snap = t.snapshot();
+        let stats = FieldStats::from_snapshot(&snap, t.info());
+        assert_eq!(
+            recommend_stats(&stats, t.info(), AccessPattern::Streaming),
+            Recommendation::SoaMultiBlob
+        );
+    }
+
+    #[test]
+    fn cost_model_orders_layouts_by_bytes_per_record() {
+        let d = nbody::particle_dim();
+        let info = RecordInfo::new(&d);
+        // Only pos.{x,y,z} touched: 12 of 28 packed bytes.
+        let stats = FieldStats {
+            fields: (0..7).map(|l| (l, if l < 3 { 100 } else { 0 }, 4)).collect(),
+        };
+        let aos = estimated_bytes_per_record(&stats, &info, &Recommendation::Aos);
+        let soa = estimated_bytes_per_record(&stats, &info, &Recommendation::SoaMultiBlob);
+        let split = estimated_bytes_per_record(
+            &stats,
+            &info,
+            &Recommendation::SplitHotCold { hot: vec![0, 1, 2] },
+        );
+        assert_eq!(aos, info.aligned_size as f64);
+        assert_eq!(soa, 12.0);
+        assert_eq!(split, 12.0); // no cold field touched
+        assert!(aos > soa);
+        // Gain of AoS -> SoA exceeds any sane hysteresis; the reverse
+        // direction never looks like a win.
+        let cost = CostModel::default();
+        let aos_rec = Recommendation::Aos;
+        let soa_rec = Recommendation::SoaMultiBlob;
+        let gain = migration_gain(&stats, &info, &aos_rec, &soa_rec, &cost);
+        assert!(gain > 1.5, "gain {gain}");
+        let back = migration_gain(&stats, &info, &soa_rec, &aos_rec, &cost);
+        assert!(back < 1.0, "back {back}");
+        // A cold-touched split pays the *aligned* cold record — the
+        // layout to_mapping actually materializes — not the packed sum
+        // of cold sizes. Mixed-size record: hot id (u16), cold
+        // {3×f32, f64, 3×bool} → aligned 32 (packed would be 23).
+        let d2 = crate::mapping::test_support::particle_dim();
+        let info2 = RecordInfo::new(&d2);
+        let all_touched = FieldStats {
+            fields: (0..info2.leaf_count())
+                .map(|l| (l, 10, info2.fields[l].size()))
+                .collect(),
+        };
+        let split_cold = estimated_bytes_per_record(
+            &all_touched,
+            &info2,
+            &Recommendation::SplitHotCold { hot: vec![0] },
+        );
+        assert_eq!(split_cold, 2.0 + 32.0);
+
+        // A measured working set overrides the modeled current cost.
+        let measured = CostModel { measured_current: Some(6.0) };
+        let g = migration_gain(
+            &stats,
+            &info,
+            &Recommendation::Aos,
+            &Recommendation::SoaMultiBlob,
+            &measured,
+        );
+        assert_eq!(g, 0.5);
     }
 
     #[test]

@@ -17,10 +17,13 @@
 //! property (measured in `cargo bench --bench fig5_nbody`).
 
 /// One leaf's affine address rule: `blob[nr][base + lin * stride]`.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct AffineLeaf {
+    /// Blob the leaf's values live in.
     pub blob: usize,
+    /// Byte offset of record 0's value.
     pub base: usize,
+    /// Byte distance between consecutive records' values.
     pub stride: usize,
 }
 

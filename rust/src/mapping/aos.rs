@@ -37,6 +37,7 @@ impl AoS<RowMajor> {
 }
 
 impl<L: Linearizer> AoS<L> {
+    /// AoS with an explicit array-index linearization.
     pub fn with_linearizer(dim: &RecordDim, dims: ArrayDims, lin: L, aligned: bool) -> Self {
         let info = Arc::new(RecordInfo::new(dim));
         let lin_state = lin.prepare(&dims);
@@ -50,10 +51,12 @@ impl<L: Linearizer> AoS<L> {
         AoS { info, dims, lin, lin_state, slots, aligned, record_size, offsets }
     }
 
+    /// True when field offsets follow C++ alignment rules.
     pub fn is_aligned(&self) -> bool {
         self.aligned
     }
 
+    /// Bytes per stored record (aligned or packed).
     pub fn record_size(&self) -> usize {
         self.record_size
     }

@@ -31,12 +31,14 @@ pub struct AoSoA<L: Linearizer = RowMajor> {
 }
 
 impl AoSoA<RowMajor> {
+    /// AoSoA with `lanes` records per block, row-major.
     pub fn new(dim: &RecordDim, dims: ArrayDims, lanes: usize) -> Self {
         Self::with_linearizer(dim, dims, RowMajor, lanes)
     }
 }
 
 impl<L: Linearizer> AoSoA<L> {
+    /// AoSoA with an explicit array-index linearization.
     pub fn with_linearizer(dim: &RecordDim, dims: ArrayDims, lin: L, lanes: usize) -> Self {
         assert!(lanes > 0, "AoSoA lane count must be positive");
         let info = Arc::new(RecordInfo::new(dim));
@@ -60,11 +62,13 @@ impl<L: Linearizer> AoSoA<L> {
         }
     }
 
+    /// Records per block (the `L` in AoSoA-L).
     #[inline]
     pub fn lanes(&self) -> usize {
         self.lanes
     }
 
+    /// Number of lane-blocks covering all slots (incl. a partial tail).
     #[inline]
     pub fn blocks(&self) -> usize {
         self.blocks

@@ -14,16 +14,19 @@ use super::Mapping;
 use crate::array::ArrayDims;
 use crate::record::RecordInfo;
 
+/// Opposite-endian representation wrapper over any mapping.
 #[derive(Debug, Clone)]
 pub struct Byteswap<M: Mapping> {
     inner: M,
 }
 
 impl<M: Mapping> Byteswap<M> {
+    /// Wrap `inner`, flagging its stored bytes as opposite-endian.
     pub fn new(inner: M) -> Self {
         Byteswap { inner }
     }
 
+    /// The wrapped mapping.
     pub fn inner(&self) -> &M {
         &self.inner
     }

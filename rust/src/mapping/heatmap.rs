@@ -20,11 +20,59 @@ pub struct Heatmap<M: Mapping> {
     counters: Vec<Vec<AtomicU64>>,
 }
 
+/// An epoch-consistent copy of a [`Heatmap`]'s per-granule counts,
+/// taken through exclusive access ([`Heatmap::snapshot`] /
+/// [`Heatmap::into_inner`]) so no concurrent writer can tear it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HeatmapSnapshot {
+    granularity: usize,
+    counters: Vec<Vec<u64>>,
+}
+
+impl HeatmapSnapshot {
+    /// Counter granularity in bytes.
+    pub fn granularity(&self) -> usize {
+        self.granularity
+    }
+
+    /// Per-granule counts of blob `nr`.
+    pub fn blob_counts(&self, nr: usize) -> &[u64] {
+        &self.counters[nr]
+    }
+
+    /// Total accesses recorded during the epoch.
+    pub fn total(&self) -> u64 {
+        self.counters.iter().flatten().sum()
+    }
+
+    /// Bytes covered by granules touched at least once — the measured
+    /// working set of the epoch (feeds the advisor's cost model as
+    /// [`super::advisor::CostModel::measured_current`]).
+    pub fn touched_bytes(&self) -> u64 {
+        self.counters.iter().flatten().filter(|&&c| c > 0).count() as u64
+            * self.granularity as u64
+    }
+
+    /// [`HeatmapSnapshot::touched_bytes`] averaged per record visit:
+    /// the measured bytes-per-record the cost model compares layouts
+    /// with. `records` is the epoch's record-visit count (usually
+    /// `dims().count()` × sweeps).
+    pub fn bytes_per_record(&self, records: usize) -> f64 {
+        if records == 0 {
+            return 0.0;
+        }
+        self.touched_bytes() as f64 / records as f64
+    }
+}
+
 impl<M: Mapping> Heatmap<M> {
+    /// Wrap `inner` with one counter per byte.
     pub fn new(inner: M) -> Self {
         Self::with_granularity(inner, 1)
     }
 
+    /// Wrap `inner` with one counter per `granularity` bytes (64 =
+    /// cache-line granularity).
     pub fn with_granularity(inner: M, granularity: usize) -> Self {
         assert!(granularity > 0);
         let counters = (0..inner.blob_count())
@@ -36,12 +84,52 @@ impl<M: Mapping> Heatmap<M> {
         Heatmap { inner, granularity, counters }
     }
 
+    /// The wrapped mapping.
     pub fn inner(&self) -> &M {
         &self.inner
     }
 
+    /// Counter granularity in bytes.
     pub fn granularity(&self) -> usize {
         self.granularity
+    }
+
+    /// End the current counting epoch: swap the counter banks for
+    /// fresh zeroed ones and return the old counts. As with
+    /// [`super::Trace::snapshot`], the `&mut self` receiver is the
+    /// consistency argument — exclusive access excludes concurrent
+    /// writers, so the snapshot can never mix epochs the way the
+    /// relaxed per-counter loads of [`Heatmap::blob_counts`] can.
+    pub fn snapshot(&mut self) -> HeatmapSnapshot {
+        let fresh: Vec<Vec<AtomicU64>> = self
+            .counters
+            .iter()
+            .map(|b| (0..b.len()).map(|_| AtomicU64::new(0)).collect())
+            .collect();
+        let old = std::mem::replace(&mut self.counters, fresh);
+        HeatmapSnapshot {
+            granularity: self.granularity,
+            counters: old
+                .into_iter()
+                .map(|b| b.into_iter().map(|c| c.into_inner()).collect())
+                .collect(),
+        }
+    }
+
+    /// Consume the wrapper, returning the inner mapping and the final
+    /// epoch's counts.
+    pub fn into_inner(self) -> (M, HeatmapSnapshot) {
+        (
+            self.inner,
+            HeatmapSnapshot {
+                granularity: self.granularity,
+                counters: self
+                    .counters
+                    .into_iter()
+                    .map(|b| b.into_iter().map(|c| c.into_inner()).collect())
+                    .collect(),
+            },
+        )
     }
 
     /// Access counts of blob `nr`, one entry per granule.
@@ -58,6 +146,9 @@ impl<M: Mapping> Heatmap<M> {
             .sum()
     }
 
+    /// Zero every counter in place through a shared reference; may
+    /// interleave with concurrent writers (see [`Heatmap::snapshot`]
+    /// for the race-free epoch boundary).
     pub fn reset(&self) {
         for b in &self.counters {
             for c in b {
@@ -165,6 +256,25 @@ mod tests {
         let counts = h.blob_counts(0);
         assert_eq!(counts[0], 1);
         assert_eq!(counts[1], 1);
+    }
+
+    #[test]
+    fn snapshot_swaps_banks_and_measures_touched_bytes() {
+        let mut h = Heatmap::with_granularity(
+            AoS::packed(&particle_dim(), ArrayDims::linear(2)),
+            4,
+        );
+        let _ = h.blob_nr_and_offset(1, 0); // pos.x: bytes 2..6 -> granules 0, 1
+        let snap = h.snapshot();
+        assert_eq!(snap.granularity(), 4);
+        assert_eq!(snap.total(), 2);
+        assert_eq!(snap.touched_bytes(), 8);
+        assert_eq!(snap.bytes_per_record(2), 4.0);
+        // The epoch boundary zeroed the live counters.
+        assert_eq!(h.total(), 0);
+        let (inner, last) = h.into_inner();
+        assert!(inner.mapping_name().starts_with("AoS(packed"));
+        assert_eq!(last.total(), 0);
     }
 
     #[test]

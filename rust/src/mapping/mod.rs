@@ -30,18 +30,21 @@ use std::sync::Arc;
 use crate::array::ArrayDims;
 use crate::record::RecordInfo;
 
-pub use advisor::{recommend, AccessPattern, Recommendation};
+pub use advisor::{
+    estimated_bytes_per_record, migration_gain, recommend, recommend_stats, AccessPattern,
+    CostModel, FieldStats, RecipeMapping, Recommendation, SplitHotColdMapping,
+};
 pub use affine::AffineLeaf;
 pub use aos::AoS;
 pub use aosoa::AoSoA;
 pub use byteswap::Byteswap;
-pub use heatmap::Heatmap;
+pub use heatmap::{Heatmap, HeatmapSnapshot};
 pub use null::Null;
 pub use one::One;
 pub use plan::{AddrPlan, LayoutPlan, PiecewiseLeaf, PiecewisePlan};
 pub use soa::SoA;
 pub use split::Split;
-pub use trace::Trace;
+pub use trace::{Trace, TraceSnapshot};
 
 /// The mapping concept (paper §3.7): `blobNrAndOffset<RecordCoord>(
 /// ArrayDims) -> [blob, offset]`, plus blob count/size queries.
@@ -111,6 +114,19 @@ pub trait Mapping: Send + Sync {
     /// closed-form addressing may only be claimed by row-major
     /// (slot == lin) layouts. Property-tested in
     /// `rust/tests/prop_mapping_invariants.rs`.
+    ///
+    /// ```
+    /// use llama::prelude::*;
+    ///
+    /// let d = llama::record_dim! { x: f32, y: f32 };
+    /// let plan = SoA::multi_blob(&d, ArrayDims::linear(8)).plan();
+    /// // Multi-blob SoA compiles to one dense affine rule per leaf:
+    /// // leaf 1 at record 3 lives in blob 1 at byte 3 * 4.
+    /// assert!(matches!(plan.addr(), AddrPlan::Affine(_)));
+    /// assert_eq!(plan.resolve(1, 3), Some((1, 12)));
+    /// // ...and is chunk-copyable at whole-array runs.
+    /// assert_eq!(plan.chunk_lanes(), Some(8));
+    /// ```
     fn plan(&self) -> LayoutPlan {
         LayoutPlan::generic(self.dims().count(), self.is_native_representation(), None)
     }

@@ -11,6 +11,7 @@ use super::Mapping;
 use crate::array::ArrayDims;
 use crate::record::{RecordDim, RecordInfo};
 
+/// The Null mapping: all fields of all records share one scratch slot.
 #[derive(Debug, Clone)]
 pub struct Null {
     info: Arc<RecordInfo>,
@@ -20,6 +21,7 @@ pub struct Null {
 }
 
 impl Null {
+    /// Null storage for `(dim, dims)` (one scratch slot).
     pub fn new(dim: &RecordDim, dims: ArrayDims) -> Self {
         let info = Arc::new(RecordInfo::new(dim));
         let scratch = info.fields.iter().map(|f| f.size()).max().unwrap_or(1);

@@ -9,6 +9,7 @@ use super::{AffineLeaf, Mapping};
 use crate::array::ArrayDims;
 use crate::record::{RecordDim, RecordInfo};
 
+/// The One mapping: a single stored record aliased by every index.
 #[derive(Debug, Clone)]
 pub struct One {
     info: Arc<RecordInfo>,
@@ -19,14 +20,17 @@ pub struct One {
 }
 
 impl One {
+    /// Aligned single-record storage (C++ struct layout).
     pub fn new(dim: &RecordDim, dims: ArrayDims) -> Self {
         Self::with_alignment(dim, dims, true)
     }
 
+    /// Packed single-record storage (no padding).
     pub fn packed(dim: &RecordDim, dims: ArrayDims) -> Self {
         Self::with_alignment(dim, dims, false)
     }
 
+    /// One with explicit alignment choice.
     pub fn with_alignment(dim: &RecordDim, dims: ArrayDims, aligned: bool) -> Self {
         let info = Arc::new(RecordInfo::new(dim));
         let record_size = if aligned { info.aligned_size } else { info.packed_size };

@@ -32,8 +32,9 @@ pub use super::affine::AffineLeaf;
 /// `blob[nr][(lin / lanes) * block_stride + lane_offset +
 /// (lin % lanes) * lane_stride]` (the lane count lives on the enclosing
 /// [`PiecewisePlan`]).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct PiecewiseLeaf {
+    /// Blob the leaf's values live in.
     pub blob: usize,
     /// Byte distance between consecutive lane-blocks.
     pub block_stride: usize,
@@ -57,14 +58,16 @@ impl PiecewiseLeaf {
 }
 
 /// Per-leaf piecewise rules plus their shared lane count.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PiecewisePlan {
+    /// Records per lane-block (the AoSoA `L`).
     pub lanes: usize,
+    /// One address rule per leaf, declaration order.
     pub leaves: Vec<PiecewiseLeaf>,
 }
 
 /// The address-computation part of a [`LayoutPlan`].
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum AddrPlan {
     /// `blob[nr][base + lin * stride]` per leaf.
     Affine(Vec<AffineLeaf>),
@@ -77,7 +80,9 @@ pub enum AddrPlan {
 /// A compiled mapping: everything the kernels, cursors and the copy
 /// engine need, with no further calls into the mapping on resolvable
 /// paths. Extract once per `(mapping, blobs)` pair, outside hot loops.
-#[derive(Debug, Clone, PartialEq, Eq)]
+/// `Hash` + `Eq` make closed-form plans usable as cache keys (the copy
+/// engine's [`crate::copy::ProgramCache`] fingerprints layout pairs).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct LayoutPlan {
     count: usize,
     native: bool,
@@ -136,6 +141,7 @@ impl LayoutPlan {
         self.chunk_lanes
     }
 
+    /// The address-computation rules (affine, piecewise, or generic).
     #[inline]
     pub fn addr(&self) -> &AddrPlan {
         &self.addr

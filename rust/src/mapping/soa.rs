@@ -38,6 +38,7 @@ impl SoA<RowMajor> {
 }
 
 impl<L: Linearizer> SoA<L> {
+    /// SoA with an explicit array-index linearization.
     pub fn with_linearizer(dim: &RecordDim, dims: ArrayDims, lin: L, multiblob: bool) -> Self {
         let info = Arc::new(RecordInfo::new(dim));
         let lin_state = lin.prepare(&dims);
@@ -52,6 +53,7 @@ impl<L: Linearizer> SoA<L> {
         SoA { info, dims, lin, lin_state, slots, multiblob, sizes, bases }
     }
 
+    /// True in multi-blob mode (one blob per field).
     pub fn is_multiblob(&self) -> bool {
         self.multiblob
     }

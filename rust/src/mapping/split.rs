@@ -95,10 +95,12 @@ impl<MA: Mapping, MB: Mapping> Split<MA, MB> {
         Split { info, dims, selectors, a, b, route, a_blobs, strides, native }
     }
 
+    /// The mapping of the selected leaves.
     pub fn part_a(&self) -> &MA {
         &self.a
     }
 
+    /// The mapping of the remaining leaves.
     pub fn part_b(&self) -> &MB {
         &self.b
     }

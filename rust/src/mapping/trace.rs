@@ -10,6 +10,37 @@ use super::Mapping;
 use crate::array::ArrayDims;
 use crate::record::RecordInfo;
 
+/// An epoch-consistent copy of a [`Trace`]'s per-field access counts.
+///
+/// Produced by [`Trace::snapshot`] / [`Trace::into_inner`], which take
+/// the wrapper by exclusive reference (or by value): the borrow checker
+/// then guarantees no concurrent writer exists, so the snapshot can
+/// never observe a torn mid-epoch mixture of old and new counts — the
+/// race that per-counter relaxed loads through a shared reference
+/// ([`Trace::report`]) cannot rule out.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceSnapshot {
+    counts: Vec<u64>,
+}
+
+impl TraceSnapshot {
+    /// Access count of leaf `leaf` during the snapshotted epoch.
+    #[inline]
+    pub fn count(&self, leaf: usize) -> u64 {
+        self.counts[leaf]
+    }
+
+    /// All per-leaf counts, declaration order.
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total accesses recorded during the epoch.
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+}
+
 /// Per-field access counting wrapper. Counting uses relaxed atomics so
 /// the wrapper stays `Sync` and usable from parallel loops; the overhead
 /// is intentional (instrumentation), as in the paper.
@@ -20,13 +51,41 @@ pub struct Trace<M: Mapping> {
 }
 
 impl<M: Mapping> Trace<M> {
+    /// Wrap `inner`, counting accesses to each of its leaves.
     pub fn new(inner: M) -> Self {
         let n = inner.info().leaf_count();
         Trace { inner, counts: (0..n).map(|_| AtomicU64::new(0)).collect() }
     }
 
+    /// The wrapped mapping.
     pub fn inner(&self) -> &M {
         &self.inner
+    }
+
+    /// End the current counting epoch: swap the counter vector for a
+    /// fresh zeroed one and return the old counts as an immutable
+    /// [`TraceSnapshot`].
+    ///
+    /// The `&mut self` receiver is what makes this epoch-consistent:
+    /// exclusive access proves no concurrent writer exists, so every
+    /// count belongs to exactly one epoch — unlike [`Trace::report`],
+    /// whose relaxed per-counter loads through `&self` can interleave
+    /// with writers and hand the advisor a torn mixture. The reset is
+    /// cheap (one small allocation, one pointer swap): the epoch
+    /// boundary the adaptive engine sits on
+    /// ([`crate::view::adapt::AdaptiveView`]).
+    pub fn snapshot(&mut self) -> TraceSnapshot {
+        let n = self.counts.len();
+        let old = std::mem::replace(&mut self.counts, (0..n).map(|_| AtomicU64::new(0)).collect());
+        TraceSnapshot { counts: old.into_iter().map(|c| c.into_inner()).collect() }
+    }
+
+    /// Consume the wrapper, returning the inner mapping and the final
+    /// epoch's counts (epoch-consistent for the same reason as
+    /// [`Trace::snapshot`]: ownership excludes concurrent writers).
+    pub fn into_inner(self) -> (M, TraceSnapshot) {
+        let counts = self.counts.into_iter().map(|c| c.into_inner()).collect();
+        (self.inner, TraceSnapshot { counts })
     }
 
     /// Access count of leaf `leaf` so far.
@@ -35,6 +94,12 @@ impl<M: Mapping> Trace<M> {
     }
 
     /// All (field path, count) pairs, declaration order.
+    ///
+    /// This is the *live* view: each counter is loaded individually
+    /// with relaxed ordering, so a report taken while writers are
+    /// running can mix counts from different moments. Decision-making
+    /// consumers (the advisor, the adaptive engine) should use
+    /// [`Trace::snapshot`] instead.
     pub fn report(&self) -> Vec<(String, u64)> {
         self.inner
             .info()
@@ -82,6 +147,11 @@ impl<M: Mapping> Trace<M> {
         out
     }
 
+    /// Zero every counter in place. Unlike [`Trace::snapshot`] this
+    /// works through a shared reference, so concurrent writers may
+    /// interleave with the stores; use it only between phases you know
+    /// to be quiescent (the snapshot API is the race-free epoch
+    /// boundary).
     pub fn reset(&self) {
         for c in &self.counts {
             c.store(0, Ordering::Relaxed);
@@ -180,6 +250,28 @@ mod tests {
             }
         }
         check_mapping_invariants(&t);
+    }
+
+    #[test]
+    fn snapshot_swaps_counters_and_resets_epoch() {
+        let mut t = Trace::new(AoS::aligned(&particle_dim(), ArrayDims::linear(4)));
+        for _ in 0..5 {
+            let _ = t.blob_nr_and_offset(2, 1);
+        }
+        let _ = t.blob_nr_and_offset(0, 0);
+        let snap = t.snapshot();
+        assert_eq!(snap.count(2), 5);
+        assert_eq!(snap.count(0), 1);
+        assert_eq!(snap.total(), 6);
+        // The epoch boundary left every live counter at zero...
+        assert!((0..8).all(|l| t.count(l) == 0));
+        // ...and a fresh snapshot sees only post-boundary accesses.
+        let _ = t.blob_nr_and_offset(7, 3);
+        let snap2 = t.snapshot();
+        assert_eq!(snap2.counts(), &[0, 0, 0, 0, 0, 0, 0, 1]);
+        let (inner, last) = t.into_inner();
+        assert!(inner.mapping_name().starts_with("AoS(aligned"));
+        assert_eq!(last.total(), 0);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::view::view::View;
 
 /// Uniform read access over affine and piecewise cursors.
 pub trait CursorRead: Copy + Send + Sync {
+    /// Number of records the cursor covers.
     fn count(&self) -> usize;
 
     /// Read the leaf value at canonical index `lin`.
@@ -113,11 +114,13 @@ impl<'v> LeafCursor<'v> {
         (self.ptr.add(lin * self.stride) as *const T).read_unaligned()
     }
 
+    /// Number of records the cursor covers.
     #[inline]
     pub fn count(&self) -> usize {
         self.count
     }
 
+    /// Byte distance between consecutive records' values.
     #[inline]
     pub fn stride(&self) -> usize {
         self.stride
@@ -228,11 +231,13 @@ impl<'v> LeafCursorMut<'v> {
         (self.ptr.add(lin * self.stride) as *mut T).write_unaligned(v)
     }
 
+    /// Number of records the cursor covers.
     #[inline]
     pub fn count(&self) -> usize {
         self.count
     }
 
+    /// Byte distance between consecutive records' values.
     #[inline]
     pub fn stride(&self) -> usize {
         self.stride
@@ -324,11 +329,13 @@ unsafe impl Sync for PiecewiseCursor<'_> {}
 
 macro_rules! piecewise_shared {
     () => {
+        /// Number of records the cursor covers.
         #[inline]
         pub fn count(&self) -> usize {
             self.count
         }
 
+        /// Records per lane-block.
         #[inline]
         pub fn lanes(&self) -> usize {
             self.lanes
@@ -638,7 +645,9 @@ fn validate_piecewise(
 
 /// Read cursors compiled from a view's [`LayoutPlan`].
 pub enum PlanCursors<'v> {
+    /// One affine cursor per leaf.
     Affine(Vec<LeafCursor<'v>>),
+    /// One lane-block cursor per leaf.
     Piecewise(Vec<PiecewiseCursor<'v>>),
     /// Non-native representation, generic addressing, or a plan whose
     /// ranges do not fit the actual blobs: keep the accessor path.
@@ -647,8 +656,11 @@ pub enum PlanCursors<'v> {
 
 /// Mutable cursors compiled from a view's [`LayoutPlan`].
 pub enum PlanCursorsMut<'v> {
+    /// One affine cursor per leaf.
     Affine(Vec<LeafCursorMut<'v>>),
+    /// One lane-block cursor per leaf.
     Piecewise(Vec<PiecewiseCursorMut<'v>>),
+    /// No closed-form cursors: keep the accessor path.
     Generic,
 }
 

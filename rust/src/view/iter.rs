@@ -17,6 +17,7 @@ pub struct RecordIter<'v, M: Mapping, B: Blob> {
 }
 
 impl<'v, M: Mapping, B: Blob> RecordIter<'v, M, B> {
+    /// Iterate all records of `view` in canonical order.
     pub fn new(view: &'v View<M, B>) -> Self {
         RecordIter { view, next: 0, end: view.count() }
     }

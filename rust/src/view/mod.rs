@@ -3,6 +3,7 @@
 //! are built up lazily ([`RecordRef`], the paper's `VirtualRecord`) and
 //! the mapping function is only invoked for *terminal* accesses.
 
+pub mod adapt;
 pub mod cursor;
 pub mod iter;
 pub mod one_record;
@@ -12,6 +13,7 @@ pub mod view;
 pub mod virtual_record;
 pub mod virtual_view;
 
+pub use adapt::{AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2, AdaptiveView};
 pub use cursor::{
     CursorRead, CursorWrite, LeafCursor, LeafCursorMut, PiecewiseCursor, PiecewiseCursorMut,
     PlanCursors, PlanCursorsMut,

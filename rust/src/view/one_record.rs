@@ -20,11 +20,13 @@ pub struct OneRecord {
 }
 
 impl OneRecord {
+    /// A zero-initialized record of shape `info`.
     pub fn new(info: Arc<RecordInfo>) -> Self {
         let bytes = vec![0u8; info.packed_size];
         OneRecord { info, bytes }
     }
 
+    /// Flattened record-dimension info of this record.
     pub fn info(&self) -> &Arc<RecordInfo> {
         &self.info
     }
@@ -35,17 +37,20 @@ impl OneRecord {
         &self.bytes[f.offset_packed..f.offset_packed + f.size()]
     }
 
+    /// Mutable raw bytes of leaf `leaf` (packed layout).
     pub fn leaf_bytes_mut(&mut self, leaf: usize) -> &mut [u8] {
         let f = &self.info.fields[leaf];
         &mut self.bytes[f.offset_packed..f.offset_packed + f.size()]
     }
 
+    /// Read terminal field `leaf`.
     #[inline]
     pub fn get<T: ScalarVal>(&self, leaf: usize) -> T {
         debug_assert_eq!(T::SCALAR, self.info.fields[leaf].scalar);
         T::read_ne(&self.bytes, self.info.fields[leaf].offset_packed)
     }
 
+    /// Write terminal field `leaf`.
     #[inline]
     pub fn set<T: ScalarVal>(&mut self, leaf: usize, v: T) {
         debug_assert_eq!(T::SCALAR, self.info.fields[leaf].scalar);

@@ -9,6 +9,7 @@ use crate::record::Scalar;
 /// Implementations must read/write exactly `Self::SCALAR.size()` bytes
 /// and `SCALAR` must match the type's actual size.
 pub unsafe trait ScalarVal: Copy + PartialEq + std::fmt::Debug + Send + Sync + 'static {
+    /// The elemental type this Rust scalar stores as.
     const SCALAR: Scalar;
 
     /// Checked native-endian read at byte offset `off`.

@@ -48,16 +48,20 @@ use crate::view::view::View;
 /// indices `start..end`, disjoint from every other shard of its split.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Shard {
+    /// First record of the shard (inclusive).
     pub start: usize,
+    /// End of the shard (exclusive).
     pub end: usize,
 }
 
 impl Shard {
+    /// Number of records in the shard.
     #[inline]
     pub fn len(&self) -> usize {
         self.end - self.start
     }
 
+    /// True for a zero-length shard.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.end <= self.start
@@ -148,6 +152,19 @@ pub fn plan_aliases(plan: &LayoutPlan) -> bool {
 /// record count and [`shard_align`]. Aliasing plans ([`plan_aliases`])
 /// collapse to a single shard so safe callers cannot race writes
 /// through e.g. a `One` mapping.
+///
+/// ```
+/// use llama::prelude::*;
+///
+/// let d = llama::record_dim! { x: f32 };
+/// let plan = AoSoA::new(&d, ArrayDims::linear(100), 16).plan();
+/// let shards = shard_plan(&plan, 3);
+/// // Boundaries land on 16-record lane blocks; only the global tail
+/// // (records 96..100) is a partial block, and only in the last shard.
+/// assert!(shards.iter().all(|s| s.start % 16 == 0));
+/// assert_eq!(shards.last().unwrap().end, 100);
+/// assert_eq!(shards.iter().map(|s| s.len()).sum::<usize>(), 100);
+/// ```
 pub fn shard_plan(plan: &LayoutPlan, parts: usize) -> Vec<Shard> {
     let parts = if plan_aliases(plan) { 1 } else { parts };
     shard_range(plan.count(), parts, shard_align(plan))
@@ -236,6 +253,7 @@ pub trait ShardKernel: Sync {
 /// [`par_execute_zip`]. Same contract as [`ShardKernel`]: whole-range
 /// cursors, writes confined to `shard`.
 pub trait ShardKernel2: Sync {
+    /// Run the kernel over `shard`, reading `src`, writing `dst`.
     fn run<R: CursorRead, W: CursorWrite>(&self, src: &[R], dst: &[W], shard: Shard);
 }
 

@@ -54,6 +54,7 @@ impl<M: Mapping, B: Blob> View<M, B> {
         View { mapping, blobs }
     }
 
+    /// The mapping this view resolves accesses through.
     pub fn mapping(&self) -> &M {
         &self.mapping
     }
@@ -64,6 +65,7 @@ impl<M: Mapping, B: Blob> View<M, B> {
         self.mapping.dims().count()
     }
 
+    /// The backing blobs, indexed by the mapping's blob numbers.
     pub fn blobs(&self) -> &[B] {
         &self.blobs
     }
@@ -71,6 +73,14 @@ impl<M: Mapping, B: Blob> View<M, B> {
     /// Take the blobs back out (e.g. to hand memory to another API).
     pub fn into_blobs(self) -> Vec<B> {
         self.blobs
+    }
+
+    /// Decompose into mapping and blobs — the inverse of
+    /// [`View::from_blobs`]. The adaptive engine uses this to rewrap a
+    /// view's storage under an instrumented (or freshly recommended)
+    /// mapping without copying a byte.
+    pub fn into_parts(self) -> (M, Vec<B>) {
+        (self.mapping, self.blobs)
     }
 
     /// Verify every (leaf, slot) access lands inside its blob; after

@@ -32,10 +32,12 @@ impl<'v, M: Mapping, B: Blob> RecordRef<'v, M, B> {
         RecordRef { view, lin, prefix: RecordCoord::root() }
     }
 
+    /// Canonical linear index of the referenced record.
     pub fn lin(&self) -> usize {
         self.lin
     }
 
+    /// Record coordinate this reference has descended to.
     pub fn coord(&self) -> &RecordCoord {
         &self.prefix
     }

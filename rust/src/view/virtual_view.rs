@@ -19,6 +19,7 @@ pub struct VirtualView<'v, M: Mapping, B: Blob> {
 }
 
 impl<'v, M: Mapping, B: Blob> VirtualView<'v, M, B> {
+    /// Window `[offset, offset+extents)` into `view`'s array dims.
     pub fn new(view: &'v View<M, B>, offset: Vec<usize>, extents: ArrayDims) -> Self {
         let dims = view.mapping().dims();
         assert_eq!(offset.len(), dims.rank());
@@ -35,10 +36,12 @@ impl<'v, M: Mapping, B: Blob> VirtualView<'v, M, B> {
         VirtualView { view, offset, extents }
     }
 
+    /// Extents of the window.
     pub fn extents(&self) -> &ArrayDims {
         &self.extents
     }
 
+    /// Origin of the window in absolute indices.
     pub fn offset(&self) -> &[usize] {
         &self.offset
     }
@@ -48,6 +51,7 @@ impl<'v, M: Mapping, B: Blob> VirtualView<'v, M, B> {
         rel.iter().zip(&self.offset).map(|(r, o)| r + o).collect()
     }
 
+    /// Read at a window-relative index.
     pub fn get_nd<T: ScalarVal>(&self, rel: &[usize], leaf: usize) -> T {
         self.view.get_nd::<T>(&self.absolute(rel), leaf)
     }
@@ -62,6 +66,7 @@ pub struct VirtualViewMut<'v, M: Mapping, B: BlobMut> {
 }
 
 impl<'v, M: Mapping, B: BlobMut> VirtualViewMut<'v, M, B> {
+    /// Mutable window `[offset, offset+extents)` into `view`.
     pub fn new(view: &'v mut View<M, B>, offset: Vec<usize>, extents: ArrayDims) -> Self {
         {
             let dims = view.mapping().dims();
@@ -73,6 +78,7 @@ impl<'v, M: Mapping, B: BlobMut> VirtualViewMut<'v, M, B> {
         VirtualViewMut { view, offset, extents }
     }
 
+    /// Extents of the window.
     pub fn extents(&self) -> &ArrayDims {
         &self.extents
     }
@@ -82,10 +88,12 @@ impl<'v, M: Mapping, B: BlobMut> VirtualViewMut<'v, M, B> {
         rel.iter().zip(&self.offset).map(|(r, o)| r + o).collect()
     }
 
+    /// Read at a window-relative index.
     pub fn get_nd<T: ScalarVal>(&self, rel: &[usize], leaf: usize) -> T {
         self.view.get_nd::<T>(&self.absolute(rel), leaf)
     }
 
+    /// Write at a window-relative index.
     pub fn set_nd<T: ScalarVal>(&mut self, rel: &[usize], leaf: usize, v: T) {
         let abs = self.absolute(rel);
         self.view.set_nd::<T>(&abs, leaf, v);

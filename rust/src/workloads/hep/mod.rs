@@ -114,6 +114,30 @@ pub fn isolated_energy_parallel<M: Mapping, B: Blob>(
     }
 }
 
+/// The isolation sweep as an adaptive-engine kernel: each step sums
+/// [`isolated_energy`] into `total`. The sweep reads at most 3 of 100
+/// fields per object, but conditionally: `isolated` always, `quality`
+/// only for isolated objects (~half), `energy` only past both gates
+/// (~a quarter) — so the trace epoch's hot set (leaves at ≥ half the
+/// maximum rate) is the unconditional gate fields, and the advisor's
+/// Split keeps *those* dense while the rarely-read payload (energy
+/// included) stays in the cold record. That densifies the dominant
+/// gate reads; records passing the gates still pull the cold record.
+pub struct AdaptiveIsolation {
+    /// Quality threshold of the sweep.
+    pub min_quality: u8,
+    /// Worker threads per sweep (1 = serial).
+    pub threads: usize,
+    /// Accumulated energy across steps (checked against static runs).
+    pub total: f64,
+}
+
+impl crate::view::adapt::AdaptiveKernel for AdaptiveIsolation {
+    fn run<M: Mapping>(&mut self, view: &mut crate::view::View<M, Vec<u8>>) {
+        self.total += isolated_energy_parallel(view, self.min_quality, self.threads.max(1));
+    }
+}
+
 fn isolated_energy_cursors<C: CursorRead>(
     cur: &[C],
     leaves: &[(usize, usize, usize)],

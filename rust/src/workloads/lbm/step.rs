@@ -4,9 +4,27 @@
 use super::{equilibrium, Geometry, E, FLAGS, FLUID, OBSTACLE, OMEGA, OPP, Q};
 use crate::blob::BlobMut;
 use crate::mapping::Mapping;
+use crate::view::adapt::AdaptiveKernel2;
 use crate::view::cursor::{CursorRead, CursorWrite};
 use crate::view::shard::{par_execute_zip, Shard, ShardKernel2};
 use crate::view::View;
+
+/// The stream-collide step as an adaptive-engine kernel
+/// ([`crate::view::adapt::AdaptiveView::step_zip`]): this replaces the
+/// hand-wired trace → `equal_count_groups` → `build_split4` wiring of
+/// the fig 8 driver — the engine's trace epoch observes the same
+/// counts (flags read once per pulled direction, so it dominates) and
+/// the advisor derives the hot/cold Split automatically.
+pub struct AdaptiveStep {
+    /// Worker threads per step (1 = serial).
+    pub threads: usize,
+}
+
+impl AdaptiveKernel2 for AdaptiveStep {
+    fn run<M: Mapping>(&mut self, src: &View<M, Vec<u8>>, dst: &mut View<M, Vec<u8>>) {
+        step_parallel(src, dst, self.threads.max(1));
+    }
+}
 
 /// Initialize a view to uniform equilibrium (rho=1, u=0) and write the
 /// flag field from the geometry.

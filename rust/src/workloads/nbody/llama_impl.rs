@@ -6,9 +6,38 @@
 use super::{pp_interaction, ParticleSoA, MASS, POS_X, POS_Y, POS_Z, TIMESTEP, VEL_X, VEL_Y, VEL_Z};
 use crate::blob::BlobMut;
 use crate::mapping::Mapping;
+use crate::view::adapt::AdaptiveKernel;
 use crate::view::cursor::{CursorWrite, PiecewiseCursorMut};
 use crate::view::shard::{par_execute, Shard, ShardKernel};
 use crate::view::View;
+
+/// The update phase as an adaptive-engine kernel
+/// ([`crate::view::adapt::AdaptiveView`]): the fig 5 `adaptive` row
+/// runs this — the engine traces one step, adopts the advisor's layout
+/// (SoA for the 4-of-7-leaf j-stream) and keeps stepping on it.
+pub struct AdaptiveUpdate {
+    /// Worker threads per step (1 = serial).
+    pub threads: usize,
+}
+
+impl AdaptiveKernel for AdaptiveUpdate {
+    fn run<M: Mapping>(&mut self, view: &mut View<M, Vec<u8>>) {
+        update_parallel(view, self.threads.max(1));
+    }
+}
+
+/// The move phase as an adaptive-engine kernel (memory-bound: the
+/// sweep where layout choice matters most, used by `bench-adapt`).
+pub struct AdaptiveMove {
+    /// Worker threads per step (1 = serial).
+    pub threads: usize,
+}
+
+impl AdaptiveKernel for AdaptiveMove {
+    fn run<M: Mapping>(&mut self, view: &mut View<M, Vec<u8>>) {
+        mv_parallel(view, self.threads.max(1));
+    }
+}
 
 /// Load plain-array state into a LLAMA view of any mapping.
 pub fn load_state<M: Mapping, B: BlobMut>(view: &mut View<M, B>, s: &ParticleSoA) {

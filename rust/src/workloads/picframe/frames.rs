@@ -390,24 +390,45 @@ impl ShardKernel for DriftKernel {
 /// shared executor — loop-invariant cursors, affine or lane-blocked —
 /// with the accessor loop as the generic-plan fallback.
 fn drift_frame<M: Mapping>(frame: &mut Frame<M>, dt: f32) {
-    let n = frame.filled;
-    if par_execute(&mut frame.view, 1, &DriftKernel { filled: n, dt }) {
+    drift_view(&mut frame.view, frame.filled, dt);
+}
+
+/// The drift sweep over the first `filled` records of any attribute
+/// view — the body shared by [`Frame`] sweeps and the adaptive-store
+/// kernel ([`AdaptiveDrift`]).
+pub fn drift_view<M: Mapping>(view: &mut View<M, Vec<u8>>, filled: usize, dt: f32) {
+    let n = filled.min(view.count());
+    if par_execute(view, 1, &DriftKernel { filled: n, dt }) {
         return;
     }
-    debug_assert!(frame.view.validate().is_ok());
+    debug_assert!(view.validate().is_ok());
     for s in 0..n {
-        // SAFETY: s < FRAME_SIZE over a validated view.
+        // SAFETY: s < count over a validated view.
         unsafe {
-            let x = frame.view.get_unchecked::<f32>(s, POS_X)
-                + frame.view.get_unchecked::<f32>(s, MOM_X) * dt;
-            let y = frame.view.get_unchecked::<f32>(s, POS_Y)
-                + frame.view.get_unchecked::<f32>(s, MOM_Y) * dt;
-            let z = frame.view.get_unchecked::<f32>(s, POS_Z)
-                + frame.view.get_unchecked::<f32>(s, MOM_Z) * dt;
-            frame.view.set_unchecked::<f32>(s, POS_X, x);
-            frame.view.set_unchecked::<f32>(s, POS_Y, y);
-            frame.view.set_unchecked::<f32>(s, POS_Z, z);
+            let x = view.get_unchecked::<f32>(s, POS_X) + view.get_unchecked::<f32>(s, MOM_X) * dt;
+            let y = view.get_unchecked::<f32>(s, POS_Y) + view.get_unchecked::<f32>(s, MOM_Y) * dt;
+            let z = view.get_unchecked::<f32>(s, POS_Z) + view.get_unchecked::<f32>(s, MOM_Z) * dt;
+            view.set_unchecked::<f32>(s, POS_X, x);
+            view.set_unchecked::<f32>(s, POS_Y, y);
+            view.set_unchecked::<f32>(s, POS_Z, z);
         }
+    }
+}
+
+/// The drift sweep as an adaptive-engine kernel: an attribute store
+/// wrapped in [`crate::view::adapt::AdaptiveView`] drifts through
+/// whatever layout the engine has adopted (pos + mom touch 6 of 8
+/// attributes → the advisor steers towards SoA, the layout fig 10
+/// measures fastest for the sweep).
+pub struct AdaptiveDrift {
+    /// Timestep per sweep.
+    pub dt: f32,
+}
+
+impl crate::view::adapt::AdaptiveKernel for AdaptiveDrift {
+    fn run<M: Mapping>(&mut self, view: &mut View<M, Vec<u8>>) {
+        let n = view.count();
+        drift_view(view, n, self.dt);
     }
 }
 

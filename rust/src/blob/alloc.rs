@@ -10,6 +10,18 @@ pub trait BlobAllocator {
     fn allocate(&self, size: usize) -> Self::Blob;
 }
 
+/// Allocators work by reference too, so a holder (a frame store, the
+/// adaptive engine) can keep one allocator and allocate many blobs.
+impl<A: BlobAllocator> BlobAllocator for &A {
+    type Blob = A::Blob;
+
+    fn allocate(&self, size: usize) -> A::Blob {
+        // UFCS: plain method syntax on `*self: &A` would autoref back
+        // into this impl and recurse.
+        A::allocate(self, size)
+    }
+}
+
 /// Default allocator: zero-initialized `Vec<u8>`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct VecAlloc;
@@ -51,6 +63,17 @@ impl AlignedBytes {
 
     pub fn align(&self) -> usize {
         self.align
+    }
+}
+
+/// Cloning allocates fresh at the same alignment and copies the bytes
+/// — so `View<M, AlignedBytes>` works everywhere a cloneable-view API
+/// expects `Vec<u8>` blobs.
+impl Clone for AlignedBytes {
+    fn clone(&self) -> Self {
+        let mut out = AlignedBytes::new(self.size, self.align);
+        out.as_bytes_mut().copy_from_slice(self.as_bytes());
+        out
     }
 }
 
@@ -141,6 +164,28 @@ mod tests {
         let mut b = AlignedAlloc::cache_line().allocate(64);
         b.as_bytes_mut()[63] = 0xAB;
         assert_eq!(b.as_bytes()[63], 0xAB);
+    }
+
+    #[test]
+    fn clone_preserves_bytes_and_alignment() {
+        let mut a = AlignedAlloc::page().allocate(100);
+        a.as_bytes_mut()[63] = 0xEE;
+        let b = a.clone();
+        assert_eq!(b.as_bytes(), a.as_bytes());
+        assert_eq!(b.align(), 4096);
+        assert_eq!(b.as_bytes().as_ptr() as usize % 4096, 0);
+        assert_ne!(b.as_bytes().as_ptr(), a.as_bytes().as_ptr());
+        // Zero-size clones stay empty and harmless.
+        let z = AlignedBytes::new(0, 64).clone();
+        assert!(z.as_bytes().is_empty());
+    }
+
+    #[test]
+    fn by_ref_allocator_delegates() {
+        let alloc = AlignedAlloc::cache_line();
+        let b = (&alloc).allocate(32);
+        assert_eq!(b.as_bytes().len(), 32);
+        assert_eq!(b.as_bytes().as_ptr() as usize % 64, 0);
     }
 
     #[test]

@@ -6,9 +6,11 @@
 
 pub mod alloc;
 pub mod external;
+pub mod pool;
 
 pub use alloc::{AlignedAlloc, AlignedBytes, BlobAllocator, VecAlloc};
 pub use external::{ExternalBytes, ExternalBytesMut};
+pub use pool::{BlobPool, BlobRecycler, PoolStats, PooledBytes};
 
 /// Read access to a contiguous region of memory.
 pub trait Blob {

@@ -1,0 +1,469 @@
+//! [`BlobPool`]: an llmalloc-style recycling blob pool — layer 0 of the
+//! plan → shard → program → adapt stack (ARCHITECTURE.md "layer 0 —
+//! memory", EXPERIMENTS.md §Alloc).
+//!
+//! The paper's §3.8 makes allocation an exchangeable policy
+//! (`allocView(mapping, blobAlloc)`); this module supplies the policy
+//! that makes *churning* allocation patterns cheap: adaptive-engine
+//! migrations, double-buffer flips and frame-arena turnover allocate
+//! the same few blob shapes over and over, so instead of round-tripping
+//! through the system allocator (and re-faulting fresh zero pages),
+//! returned blobs park on per-size-class free lists and the next
+//! request of the same class pops one back out.
+//!
+//! The design follows llmalloc's size-class scheme:
+//!
+//! * **Power-of-two size classes** — a request of `size` bytes is
+//!   served from the class `next_power_of_two(max(size, 64))`; the blob
+//!   exposes exactly `size` bytes, the class capacity stays with the
+//!   block so a recycled block can serve any request of its class.
+//! * **Alignment tiers** — small classes are cache-line aligned (64 B),
+//!   classes from one page up are page-aligned (4 KiB), and classes
+//!   from 2 MiB up get large-page alignment (llmalloc's
+//!   `LARGE_PAGE_SIZE`), so pooled SoA subarrays vectorize and huge
+//!   lattice blobs are THP-friendly.
+//! * **Zero-on-reuse rule** — [`BlobAllocator::allocate`] always
+//!   returns zeroed bytes (fresh blocks come from `alloc_zeroed`,
+//!   recycled blocks are re-zeroed over the exposed range).
+//!   [`BlobRecycler::allocate_covered`] skips the re-zero; callers may
+//!   use it **only** with proof that every exposed byte will be
+//!   overwritten — the adaptive engine derives that proof from the
+//!   compiled [`crate::copy::CopyProgram`]'s destination spans
+//!   ([`crate::copy::programs_cover_dst`]).
+//!
+//! Blobs return to the pool automatically: [`PooledBytes`] holds a weak
+//! handle and its `Drop` pushes the block back on the owning class's
+//! free list (or frees it if the pool is gone). [`PoolStats`] counts
+//! hits/misses/outstanding/recycled bytes so tests and benches can
+//! assert a warm engine performs zero fresh allocations.
+
+use std::sync::{Arc, Mutex, Weak};
+
+use super::alloc::AlignedBytes;
+use super::{Blob, BlobAllocator, BlobMut};
+
+/// Smallest size class (one cache line) — every pooled block is at
+/// least cache-line sized and cache-line aligned.
+pub const MIN_CLASS_BYTES: usize = 64;
+
+/// Classes at or above one page are page-aligned.
+pub const PAGE_BYTES: usize = 4096;
+
+/// Classes at or above llmalloc's large-page size get 2 MiB alignment
+/// (transparent-huge-page friendly).
+pub const LARGE_PAGE_BYTES: usize = 2 * 1024 * 1024;
+
+/// The size class serving a request: the next power of two at or above
+/// `max(size, MIN_CLASS_BYTES)`. Requests too large for a power-of-two
+/// class (> 2^63 on 64-bit) fall back to their exact size.
+pub fn class_of(size: usize) -> usize {
+    size.max(MIN_CLASS_BYTES).checked_next_power_of_two().unwrap_or(size)
+}
+
+/// The alignment tier of a size class: cache line, page, or large page.
+pub fn class_align(class: usize) -> usize {
+    if class >= LARGE_PAGE_BYTES {
+        LARGE_PAGE_BYTES
+    } else if class >= PAGE_BYTES {
+        PAGE_BYTES
+    } else {
+        MIN_CLASS_BYTES
+    }
+}
+
+/// Counters of one [`BlobPool`] (all monotonic except `outstanding`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Requests served from a free list (no system allocation).
+    pub hits: usize,
+    /// Requests that had to allocate a fresh block.
+    pub misses: usize,
+    /// Blobs currently handed out and not yet returned.
+    pub outstanding: usize,
+    /// Total requested bytes served from free lists.
+    pub recycled_bytes: usize,
+    /// Recycled serves that skipped the re-zero because the caller
+    /// promised a full overwrite: [`BlobRecycler::allocate_covered`]
+    /// calls (coverage-proven migrations) and [`PooledBytes::clone`]
+    /// (which copies over every exposed byte).
+    pub zero_skips: usize,
+}
+
+#[derive(Debug, Default)]
+struct PoolInner {
+    /// Free blocks, keyed by class size (each block's full length).
+    classes: std::collections::BTreeMap<usize, Vec<AlignedBytes>>,
+    stats: PoolStats,
+}
+
+fn lock(inner: &Mutex<PoolInner>) -> std::sync::MutexGuard<'_, PoolInner> {
+    inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// A recycling blob allocator (see the [module docs](self)). The
+/// handle is a cheap `Arc` clone — every clone shares the same free
+/// lists, so a pool can be threaded through views, engines and stores.
+///
+/// ```
+/// use llama::prelude::*;
+///
+/// let d = llama::record_dim! { x: f32, y: f32 };
+/// let pool = BlobPool::new();
+/// {
+///     let v = alloc_view_with(SoA::multi_blob(&d, ArrayDims::linear(1024)), pool.clone());
+///     assert_eq!(v.blobs().len(), 2);
+///     assert_eq!(pool.stats().misses, 2); // cold pool: fresh blocks
+/// } // dropping the view returns both blobs to their size class
+/// let v = alloc_view_with(SoA::multi_blob(&d, ArrayDims::linear(1024)), pool.clone());
+/// assert_eq!(pool.stats().hits, 2); // warm pool: zero fresh allocations
+/// assert!(v.blobs().iter().all(|b| b.as_bytes().iter().all(|&x| x == 0)));
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct BlobPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl BlobPool {
+    /// An empty pool (no free blocks, zeroed stats).
+    pub fn new() -> BlobPool {
+        BlobPool::default()
+    }
+
+    /// A snapshot of the pool's counters.
+    pub fn stats(&self) -> PoolStats {
+        lock(&self.inner).stats
+    }
+
+    /// Number of blocks currently parked on free lists.
+    pub fn free_blocks(&self) -> usize {
+        lock(&self.inner).classes.values().map(|v| v.len()).sum()
+    }
+
+    /// Drop every parked free block (returns their bytes to the system
+    /// allocator). Outstanding blobs are unaffected and still return
+    /// to the pool when dropped.
+    pub fn trim(&self) {
+        lock(&self.inner).classes.clear();
+    }
+
+    fn acquire(&self, size: usize, zero: bool) -> PooledBytes {
+        if size == 0 {
+            // Zero-size blobs carry no storage and never pool.
+            return PooledBytes { block: None, len: 0, pool: Weak::new() };
+        }
+        let class = class_of(size);
+        let mut inner = lock(&self.inner);
+        let block = match inner.classes.get_mut(&class).and_then(|v| v.pop()) {
+            Some(mut b) => {
+                inner.stats.hits += 1;
+                inner.stats.recycled_bytes += size;
+                if zero {
+                    b.as_bytes_mut()[..size].fill(0);
+                } else {
+                    inner.stats.zero_skips += 1;
+                }
+                b
+            }
+            None => {
+                inner.stats.misses += 1;
+                // Fresh blocks come from alloc_zeroed at the class's
+                // alignment tier.
+                AlignedBytes::new(class, class_align(class))
+            }
+        };
+        inner.stats.outstanding += 1;
+        drop(inner);
+        PooledBytes { block: Some(block), len: size, pool: Arc::downgrade(&self.inner) }
+    }
+}
+
+impl BlobAllocator for BlobPool {
+    type Blob = PooledBytes;
+
+    fn allocate(&self, size: usize) -> PooledBytes {
+        self.acquire(size, true)
+    }
+}
+
+/// A blob drawn from a [`BlobPool`]: exposes exactly the requested
+/// `len` bytes of a class-sized, tier-aligned block, and returns the
+/// block to its size class on drop (or frees it if the pool is gone).
+#[derive(Debug)]
+pub struct PooledBytes {
+    /// `None` only for zero-size blobs and mid-drop.
+    block: Option<AlignedBytes>,
+    len: usize,
+    pool: Weak<Mutex<PoolInner>>,
+}
+
+impl PooledBytes {
+    /// Full capacity of the backing block (the size class), of which
+    /// only `len()` bytes are exposed.
+    pub fn capacity(&self) -> usize {
+        self.block.as_ref().map_or(0, |b| b.as_bytes().len())
+    }
+
+    /// Start alignment of the backing block (the class's tier).
+    pub fn align(&self) -> usize {
+        self.block.as_ref().map_or(MIN_CLASS_BYTES, |b| b.align())
+    }
+}
+
+impl Blob for PooledBytes {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        match &self.block {
+            Some(b) => &b.as_bytes()[..self.len],
+            None => &[],
+        }
+    }
+}
+
+impl BlobMut for PooledBytes {
+    #[inline]
+    fn as_bytes_mut(&mut self) -> &mut [u8] {
+        match &mut self.block {
+            Some(b) => &mut b.as_bytes_mut()[..self.len],
+            None => &mut [],
+        }
+    }
+}
+
+impl Drop for PooledBytes {
+    fn drop(&mut self) {
+        let Some(block) = self.block.take() else {
+            return;
+        };
+        match self.pool.upgrade() {
+            Some(inner) => {
+                let mut inner = lock(&inner);
+                inner.stats.outstanding -= 1;
+                inner.classes.entry(block.as_bytes().len()).or_default().push(block);
+            }
+            // Pool gone: the block frees like any AlignedBytes.
+            None => drop(block),
+        }
+    }
+}
+
+/// Cloning draws a fresh blob (from the pool when it is still alive)
+/// and copies the exposed bytes — pool semantics are preserved, so
+/// `View::clone` works over pooled storage.
+impl Clone for PooledBytes {
+    fn clone(&self) -> Self {
+        let mut out = match self.pool.upgrade() {
+            // Full overwrite below: the re-zero may be skipped.
+            Some(inner) => BlobPool { inner }.acquire(self.len, false),
+            None => {
+                let class = class_of(self.len);
+                PooledBytes {
+                    block: (self.len > 0).then(|| AlignedBytes::new(class, class_align(class))),
+                    len: self.len,
+                    pool: Weak::new(),
+                }
+            }
+        };
+        out.as_bytes_mut().copy_from_slice(self.as_bytes());
+        out
+    }
+}
+
+/// Equality over the *exposed* bytes (capacity and pool identity are
+/// allocation details) — lets differential tests compare pooled blobs
+/// against `Vec<u8>` oracles blob-for-blob.
+impl PartialEq for PooledBytes {
+    fn eq(&self, other: &Self) -> bool {
+        self.as_bytes() == other.as_bytes()
+    }
+}
+
+impl Eq for PooledBytes {}
+
+impl PartialEq<Vec<u8>> for PooledBytes {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_bytes() == other.as_slice()
+    }
+}
+
+/// A [`BlobAllocator`] that can additionally hand out blobs whose
+/// contents the caller promises to overwrite completely, skipping the
+/// zero fill. Every allocator is trivially a recycler (the default
+/// method just zeroes); only pooling allocators gain from the skip.
+///
+/// The contract of [`BlobRecycler::allocate_covered`]: the caller must
+/// overwrite **every** exposed byte before any read — the adaptive
+/// engine proves this per migration from the compiled copy program's
+/// destination spans ([`crate::copy::programs_cover_dst`]) and falls
+/// back to the zeroed [`BlobAllocator::allocate`] otherwise. The
+/// method is safe either way (recycled bytes are this process's own
+/// prior blob contents, never foreign memory); the rule exists so
+/// blob bytes stay bit-identical to a fresh-zeroed run.
+pub trait BlobRecycler: BlobAllocator {
+    /// Allocate `size` bytes that the caller will fully overwrite;
+    /// implementations may skip the zero fill on recycled memory.
+    fn allocate_covered(&self, size: usize) -> Self::Blob {
+        self.allocate(size)
+    }
+
+    /// The recycler's counters, if it keeps any.
+    fn pool_stats(&self) -> Option<PoolStats> {
+        None
+    }
+}
+
+impl BlobRecycler for super::alloc::VecAlloc {}
+
+impl BlobRecycler for super::alloc::AlignedAlloc {}
+
+impl<R: BlobRecycler> BlobRecycler for &R {
+    fn allocate_covered(&self, size: usize) -> Self::Blob {
+        // UFCS to avoid autoref recursion into this impl.
+        R::allocate_covered(self, size)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        R::pool_stats(self)
+    }
+}
+
+impl BlobRecycler for BlobPool {
+    fn allocate_covered(&self, size: usize) -> PooledBytes {
+        self.acquire(size, false)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_rounding_and_alignment_tiers() {
+        assert_eq!(class_of(0), 64);
+        assert_eq!(class_of(1), 64);
+        assert_eq!(class_of(64), 64);
+        assert_eq!(class_of(65), 128);
+        assert_eq!(class_of(4096), 4096);
+        assert_eq!(class_of(4097), 8192);
+        assert_eq!(class_align(64), 64);
+        assert_eq!(class_align(2048), 64);
+        assert_eq!(class_align(4096), 4096);
+        assert_eq!(class_align(1 << 20), 4096);
+        assert_eq!(class_align(LARGE_PAGE_BYTES), LARGE_PAGE_BYTES);
+        assert_eq!(class_align(LARGE_PAGE_BYTES * 4), LARGE_PAGE_BYTES);
+    }
+
+    #[test]
+    fn allocate_exposes_exact_len_over_class_capacity() {
+        let pool = BlobPool::new();
+        let b = pool.allocate(100);
+        assert_eq!(b.as_bytes().len(), 100);
+        assert_eq!(b.capacity(), 128);
+        assert_eq!(b.as_bytes().as_ptr() as usize % 64, 0);
+        assert!(b.as_bytes().iter().all(|&x| x == 0));
+        assert_eq!(pool.stats().outstanding, 1);
+        drop(b);
+        assert_eq!(pool.stats().outstanding, 0);
+        assert_eq!(pool.free_blocks(), 1);
+    }
+
+    #[test]
+    fn recycle_hands_the_block_back_and_zeroes() {
+        let pool = BlobPool::new();
+        let mut a = pool.allocate(200);
+        a.as_bytes_mut().fill(0xAB);
+        let addr = a.as_bytes().as_ptr() as usize;
+        drop(a);
+        // Same class (256): the block comes back, re-zeroed.
+        let b = pool.allocate(256);
+        assert_eq!(b.as_bytes().as_ptr() as usize, addr);
+        assert!(b.as_bytes().iter().all(|&x| x == 0), "reuse must re-zero");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.recycled_bytes, 256);
+        assert_eq!(s.zero_skips, 0);
+    }
+
+    #[test]
+    fn allocate_covered_skips_the_zero() {
+        let pool = BlobPool::new();
+        let mut a = pool.allocate(64);
+        a.as_bytes_mut().fill(0xCD);
+        drop(a);
+        let b = pool.allocate_covered(64);
+        // Contract: contents are arbitrary (here: the old fill).
+        assert_eq!(b.as_bytes()[0], 0xCD);
+        assert_eq!(pool.stats().zero_skips, 1);
+        // A fresh (miss) covered allocation is still zeroed memory.
+        let c = pool.allocate_covered(1 << 14);
+        assert!(c.as_bytes().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn distinct_outstanding_blobs_never_alias() {
+        let pool = BlobPool::new();
+        let mut blobs: Vec<PooledBytes> = (0..8).map(|_| pool.allocate(96)).collect();
+        for (i, b) in blobs.iter_mut().enumerate() {
+            b.as_bytes_mut().fill(i as u8 + 1);
+        }
+        for (i, b) in blobs.iter().enumerate() {
+            assert!(b.as_bytes().iter().all(|&x| x == i as u8 + 1), "blob {i} clobbered");
+        }
+        assert_eq!(pool.stats().outstanding, 8);
+    }
+
+    #[test]
+    fn zero_size_blobs_skip_the_pool() {
+        let pool = BlobPool::new();
+        let b = pool.allocate(0);
+        assert!(b.as_bytes().is_empty());
+        assert_eq!(b.capacity(), 0);
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.outstanding), (0, 0, 0));
+    }
+
+    #[test]
+    fn clone_copies_bytes_through_the_pool() {
+        let pool = BlobPool::new();
+        let mut a = pool.allocate(70);
+        a.as_bytes_mut()[69] = 9;
+        let b = a.clone();
+        assert_eq!(a, b);
+        assert_ne!(a.as_bytes().as_ptr(), b.as_bytes().as_ptr());
+        assert_eq!(pool.stats().outstanding, 2);
+    }
+
+    #[test]
+    fn outstanding_blobs_survive_the_pool() {
+        let pool = BlobPool::new();
+        let mut b = pool.allocate(128);
+        drop(pool);
+        b.as_bytes_mut()[0] = 1; // still a valid blob
+        assert_eq!(b.as_bytes()[0], 1);
+        drop(b); // weak upgrade fails: the block frees directly
+    }
+
+    #[test]
+    fn trim_drops_free_blocks_only() {
+        let pool = BlobPool::new();
+        let keep = pool.allocate(64);
+        drop(pool.allocate(64));
+        assert_eq!(pool.free_blocks(), 1);
+        pool.trim();
+        assert_eq!(pool.free_blocks(), 0);
+        assert_eq!(keep.as_bytes().len(), 64);
+        drop(keep);
+        assert_eq!(pool.free_blocks(), 1);
+    }
+
+    #[test]
+    fn vec_alloc_is_a_trivial_recycler() {
+        use crate::blob::VecAlloc;
+        let b = VecAlloc.allocate_covered(32);
+        assert!(b.iter().all(|&x| x == 0));
+        assert!(VecAlloc.pool_stats().is_none());
+    }
+}

@@ -10,9 +10,10 @@
 use super::bench::{bench, black_box, Opts};
 use super::report::{fmt_ms, Table};
 use crate::array::ArrayDims;
+use crate::blob::{BlobMut, BlobPool};
 use crate::mapping::{AoS, AoSoA, Mapping, SoA};
 use crate::view::adapt::{AdaptiveConfig, AdaptiveView};
-use crate::view::{alloc_view, View};
+use crate::view::{alloc_view_with, View};
 use crate::workloads::rng::SplitMix64;
 use crate::workloads::{hep, lbm, nbody, picframe};
 
@@ -83,8 +84,12 @@ fn nbody_static<M: Mapping + Clone>(
     steps: usize,
     o: &Opts,
 ) -> f64 {
+    // Every case rebuilds its buffers per iteration; a per-case pool
+    // shared across iterations recycles them (blob::pool, §Alloc), so
+    // the medians measure the workload, not allocator churn.
+    let pool = BlobPool::new();
     bench("nbody static", 1, o.iters, || {
-        let mut v = alloc_view(mapping.clone());
+        let mut v = alloc_view_with(mapping.clone(), pool.clone());
         nbody::llama_impl::load_state(&mut v, state);
         for _ in 0..steps {
             nbody::llama_impl::mv(&mut v);
@@ -113,10 +118,14 @@ fn nbody_case(s: &Sizes, o: &Opts, t: &mut Table) {
         ),
     ];
     let mut final_layout = String::new();
+    // The adaptive run routes both its buffers *and* its migration
+    // destinations through the pool (AdaptiveView::with_recycler):
+    // iteration N's migration reuses iteration N-1's retired blobs.
+    let pool = BlobPool::new();
     let r = bench("nbody adaptive", 1, o.iters, || {
-        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), pool.clone());
         nbody::llama_impl::load_state(&mut v, &state);
-        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut av = AdaptiveView::with_recycler(v, engine_cfg(), pool.clone());
         let mut k = nbody::llama_impl::AdaptiveMove { threads: 1 };
         for _ in 0..s.steps {
             av.step(&mut k);
@@ -135,9 +144,12 @@ fn lbm_static<M: Mapping + Clone>(
     steps: usize,
     o: &Opts,
 ) -> f64 {
+    // The classic double-buffer churn: both ping-pong buffers draw
+    // from a pool shared across iterations.
+    let pool = BlobPool::new();
     bench("lbm static", 1, o.iters, || {
-        let mut a = alloc_view(mapping.clone());
-        let mut b = alloc_view(mapping.clone());
+        let mut a = alloc_view_with(mapping.clone(), pool.clone());
+        let mut b = alloc_view_with(mapping.clone(), pool.clone());
         lbm::step::init(&mut a, geo);
         lbm::step::init(&mut b, geo);
         for _ in 0..steps {
@@ -167,10 +179,11 @@ fn lbm_case(s: &Sizes, o: &Opts, t: &mut Table) {
         ),
     ];
     let mut final_layout = String::new();
+    let pool = BlobPool::new();
     let r = bench("lbm adaptive", 1, o.iters, || {
-        let mut v = alloc_view(AoS::aligned(&d, geo.dims.clone()));
+        let mut v = alloc_view_with(AoS::aligned(&d, geo.dims.clone()), pool.clone());
         lbm::step::init(&mut v, &geo);
-        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut av = AdaptiveView::with_recycler(v, engine_cfg(), pool.clone());
         let mut k = lbm::step::AdaptiveStep { threads: 1 };
         for _ in 0..s.steps {
             av.step_zip(&mut k);
@@ -183,7 +196,7 @@ fn lbm_case(s: &Sizes, o: &Opts, t: &mut Table) {
 
 // ---- picframe: the drift sweep over an attribute store ----
 
-fn fill_particles<M: Mapping>(v: &mut View<M, Vec<u8>>, seed: u64) {
+fn fill_particles<M: Mapping, B: BlobMut>(v: &mut View<M, B>, seed: u64) {
     let mut rng = SplitMix64::new(seed);
     for lin in 0..v.count() {
         for leaf in [picframe::POS_X, picframe::POS_Y, picframe::POS_Z] {
@@ -198,8 +211,9 @@ fn fill_particles<M: Mapping>(v: &mut View<M, Vec<u8>>, seed: u64) {
 }
 
 fn pic_static<M: Mapping + Clone>(mapping: M, steps: usize, o: &Opts) -> f64 {
+    let pool = BlobPool::new();
     bench("picframe static", 1, o.iters, || {
-        let mut v = alloc_view(mapping.clone());
+        let mut v = alloc_view_with(mapping.clone(), pool.clone());
         fill_particles(&mut v, 23);
         let n = v.count();
         for _ in 0..steps {
@@ -219,10 +233,11 @@ fn pic_case(s: &Sizes, o: &Opts, t: &mut Table) {
         ("AoSoA32".into(), pic_static(AoSoA::new(&d, dims.clone(), 32), s.steps, o)),
     ];
     let mut final_layout = String::new();
+    let pool = BlobPool::new();
     let r = bench("picframe adaptive", 1, o.iters, || {
-        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), pool.clone());
         fill_particles(&mut v, 23);
-        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut av = AdaptiveView::with_recycler(v, engine_cfg(), pool.clone());
         let mut k = picframe::frames::AdaptiveDrift { dt: 0.05 };
         for _ in 0..s.steps {
             av.step(&mut k);
@@ -237,8 +252,9 @@ fn pic_case(s: &Sizes, o: &Opts, t: &mut Table) {
 
 fn hep_static<M: Mapping + Clone>(mapping: M, steps: usize, o: &Opts) -> (f64, f64) {
     let mut total = 0.0f64;
+    let pool = BlobPool::new();
     let ns = bench("hep static", 1, o.iters, || {
-        let mut v = alloc_view(mapping.clone());
+        let mut v = alloc_view_with(mapping.clone(), pool.clone());
         hep::generate_events(&mut v, 77);
         total = 0.0;
         for _ in 0..steps {
@@ -265,10 +281,11 @@ fn hep_case(s: &Sizes, o: &Opts, t: &mut Table) {
     ];
     let mut final_layout = String::new();
     let mut adaptive_total = 0.0f64;
+    let pool = BlobPool::new();
     let r = bench("hep adaptive", 1, o.iters, || {
-        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), pool.clone());
         hep::generate_events(&mut v, 77);
-        let mut av = AdaptiveView::new(v, engine_cfg());
+        let mut av = AdaptiveView::with_recycler(v, engine_cfg(), pool.clone());
         let mut k = hep::AdaptiveIsolation { min_quality: 128, threads: 1, total: 0.0 };
         for _ in 0..s.steps {
             av.step(&mut k);

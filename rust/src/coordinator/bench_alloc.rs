@@ -1,0 +1,276 @@
+//! `bench-alloc` driver: allocator-extensibility measurements
+//! (EXPERIMENTS.md §Alloc) — the paper's §3.8 claim ("LLAMA is
+//! extensible with third-party allocators") quantified.
+//!
+//! Three cases, each pooled-vs-fresh:
+//!
+//! * **migration-churn** — repeated AoS ⇄ SoA migrations through the
+//!   engine's exact path ([`migrate_with`]): a warm [`BlobPool`]
+//!   serves every destination from its free lists (the `fresh allocs
+//!   (warm)` column is asserted **0**) while the fresh-zeroed variant
+//!   pays one allocation per destination blob per round.
+//! * **picframe-reshuffle** — the fig 9 layout exchange over a frame
+//!   arena: one compiled program replayed per frame, destinations
+//!   pooled vs freshly zeroed.
+//! * **soa-move (fig5)** — the fig 5 SoA move kernel on
+//!   [`AlignedAlloc::cache_line()`] blobs vs `VecAlloc`: the paper's
+//!   aligned-allocator use case on a real kernel.
+
+use super::bench::{bench, black_box, Opts};
+use super::report::{fmt_ms, Table};
+use crate::array::ArrayDims;
+use crate::blob::{AlignedAlloc, BlobMut, BlobPool};
+use crate::copy::ProgramCache;
+use crate::mapping::{Mapping, Recommendation, SoA};
+use crate::view::adapt::migrate_with;
+use crate::view::{alloc_view, alloc_view_with, View};
+use crate::workloads::picframe::frames::ParticleStore;
+use crate::workloads::picframe::{attr_dim, FRAME_SIZE};
+use crate::workloads::nbody;
+
+/// Problem sizes (quick = CI smoke).
+struct Sizes {
+    /// Records per view in the migration-churn case.
+    migrate_n: usize,
+    /// AoS ⇄ SoA round trips per timed iteration.
+    rounds: usize,
+    /// Particles per supercell in the reshuffle case.
+    per_cell: usize,
+    /// Records in the soa-move case.
+    move_n: usize,
+}
+
+fn sizes(o: &Opts) -> Sizes {
+    if o.quick {
+        Sizes { migrate_n: o.n.unwrap_or(1 << 12), rounds: 2, per_cell: 150, move_n: 1 << 14 }
+    } else {
+        Sizes { migrate_n: o.n.unwrap_or(1 << 18), rounds: 4, per_cell: 1000, move_n: 1 << 20 }
+    }
+}
+
+fn fill_particles<M: Mapping, B: BlobMut>(v: &mut View<M, B>, n: usize) {
+    let s = nbody::init_particles(n, 41);
+    nbody::llama_impl::load_state(v, &s);
+}
+
+/// Repeated AoS ⇄ SoA migration churn through [`migrate_with`] — the
+/// adaptive engine's migration body. Returns `(median ns, fresh blob
+/// allocations per round after warm-up)` for the pooled variant; the
+/// pooled count is asserted to be zero.
+fn migration_case(s: &Sizes, o: &Opts, t: &mut Table) {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(s.migrate_n);
+    let aos = Recommendation::Aos.to_mapping(&d, dims.clone());
+    let soa = Recommendation::SoaMultiBlob.to_mapping(&d, dims.clone());
+    let per_round = aos.blob_count() + soa.blob_count();
+
+    // Pooled: destinations from the pool, retired sources back to it.
+    let pool = BlobPool::new();
+    let mut cache = ProgramCache::new();
+    let mut v = alloc_view_with(aos.clone(), pool.clone());
+    fill_particles(&mut v, s.migrate_n);
+    // Warm-up round trip: primes both size classes and the program
+    // cache (also what `bench`'s warmup iteration repeats).
+    let tmp = migrate_with(&mut cache, &v, soa.clone(), &pool, Some(1));
+    v = migrate_with(&mut cache, &tmp, aos.clone(), &pool, Some(1));
+    drop(tmp);
+    let warm_misses = pool.stats().misses;
+    let r = bench("alloc migration pooled", 1, o.iters, || {
+        for _ in 0..s.rounds {
+            let mid = migrate_with(&mut cache, &v, soa.clone(), &pool, Some(1));
+            v = migrate_with(&mut cache, &mid, aos.clone(), &pool, Some(1));
+        }
+        black_box(v.blobs());
+    });
+    let fresh = pool.stats().misses - warm_misses;
+    assert_eq!(fresh, 0, "warmed pool allocated {fresh} fresh blobs during migration churn");
+    t.row(vec![
+        "migration-churn".into(),
+        "pooled".into(),
+        fmt_ms(r.median_ns),
+        fresh.to_string(),
+    ]);
+
+    // Fresh-zeroed: every destination is a brand-new zeroed Vec.
+    let mut cache = ProgramCache::new();
+    let mut v = alloc_view(aos.clone());
+    fill_particles(&mut v, s.migrate_n);
+    let r = bench("alloc migration fresh", 1, o.iters, || {
+        for _ in 0..s.rounds {
+            let mid = migrate_with(&mut cache, &v, soa.clone(), &crate::blob::VecAlloc, Some(1));
+            v = migrate_with(&mut cache, &mid, aos.clone(), &crate::blob::VecAlloc, Some(1));
+        }
+        black_box(v.blobs());
+    });
+    t.row(vec![
+        "migration-churn".into(),
+        "fresh-zeroed".into(),
+        fmt_ms(r.median_ns),
+        // Unit-labelled: the pooled row is a measured post-warm-up
+        // total; this is the per-round-trip allocation count by
+        // construction (VecAlloc keeps no stats).
+        format!("{per_round}/round"),
+    ]);
+}
+
+/// The fig 9 layout exchange (`ParticleStore::reshuffle`) with pooled
+/// vs fresh destination frames.
+fn reshuffle_case(s: &Sizes, o: &Opts, t: &mut Table) {
+    let d = attr_dim();
+    let dims = ArrayDims::linear(FRAME_SIZE);
+    let grid = [2usize, 2, 2];
+
+    let pool = BlobPool::new();
+    let mut st =
+        ParticleStore::with_allocator(SoA::multi_blob(&d, dims.clone()), grid, pool.clone());
+    st.populate(s.per_cell, 99);
+    // Warm-up: one reshuffle allocates the AoSoA frames, dropping it
+    // parks them on the free lists.
+    drop(st.reshuffle(crate::mapping::AoSoA::new(&d, dims.clone(), 32)));
+    let warm_misses = pool.stats().misses;
+    let frames = st.frame_count();
+    let r = bench("alloc reshuffle pooled", 1, o.iters, || {
+        let shuffled = st.reshuffle(crate::mapping::AoSoA::new(&d, dims.clone(), 32));
+        black_box(shuffled.particle_count());
+    });
+    let fresh = pool.stats().misses - warm_misses;
+    assert_eq!(fresh, 0, "warmed pool allocated {fresh} fresh blobs during reshuffle");
+    t.row(vec![
+        "picframe-reshuffle".into(),
+        "pooled".into(),
+        fmt_ms(r.median_ns),
+        fresh.to_string(),
+    ]);
+
+    let mut plain = ParticleStore::new(SoA::multi_blob(&d, dims.clone()), grid);
+    plain.populate(s.per_cell, 99);
+    let r = bench("alloc reshuffle fresh", 1, o.iters, || {
+        let shuffled = plain.reshuffle(crate::mapping::AoSoA::new(&d, dims.clone(), 32));
+        black_box(shuffled.particle_count());
+    });
+    t.row(vec![
+        "picframe-reshuffle".into(),
+        "fresh-zeroed".into(),
+        fmt_ms(r.median_ns),
+        // One single-blob AoSoA frame allocation per live frame, per
+        // reshuffle (unit-labelled like the migration row).
+        format!("{frames}/reshuffle"),
+    ]);
+}
+
+/// The fig 5 SoA move kernel over cache-line-aligned blobs vs Vec —
+/// allocation policy as a kernel-facing property (dense SoA leaves
+/// start on cache-line boundaries, the paper's vectorized-load case).
+fn move_case(s: &Sizes, o: &Opts, t: &mut Table) {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(s.move_n);
+
+    let mut aligned =
+        alloc_view_with(SoA::multi_blob(&d, dims.clone()), AlignedAlloc::cache_line());
+    fill_particles(&mut aligned, s.move_n);
+    let r = bench("alloc move aligned", 1, o.iters, || {
+        nbody::llama_impl::mv(&mut aligned);
+        black_box(aligned.blobs());
+    });
+    t.row(vec![
+        "soa-move (fig5)".into(),
+        "AlignedAlloc::cache_line()".into(),
+        fmt_ms(r.median_ns),
+        "-".into(),
+    ]);
+
+    let mut plain = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    fill_particles(&mut plain, s.move_n);
+    let r = bench("alloc move vec", 1, o.iters, || {
+        nbody::llama_impl::mv(&mut plain);
+        black_box(plain.blobs());
+    });
+    t.row(vec!["soa-move (fig5)".into(), "VecAlloc".into(), fmt_ms(r.median_ns), "-".into()]);
+}
+
+/// Run the allocator comparison (pooled vs fresh-zeroed migration and
+/// reshuffle churn, aligned vs Vec move kernel).
+pub fn run(o: &Opts) -> Table {
+    let s = sizes(o);
+    let mut t = Table::new(
+        format!(
+            "blob::pool — pooled vs fresh allocation ({} records, {} round-trips/iter, {})",
+            s.migrate_n,
+            s.rounds,
+            if o.quick { "quick" } else { "full" }
+        ),
+        &["case", "variant", "ms", "fresh allocs (warm)"],
+    );
+    migration_case(&s, o, &mut t);
+    reshuffle_case(&s, o, &mut t);
+    move_case(&s, o, &mut t);
+    t
+}
+
+/// Serialize a bench-alloc run as the `BENCH_alloc.json` baseline.
+/// Refuses structurally to emit a document missing any (case, variant)
+/// row or whose pooled rows allocated fresh blobs after warm-up.
+pub fn baseline_json_checked(o: &Opts) -> crate::error::Result<String> {
+    let t = run(o);
+    for (case, variants) in [
+        ("migration-churn", &["pooled", "fresh-zeroed"][..]),
+        ("picframe-reshuffle", &["pooled", "fresh-zeroed"][..]),
+        ("soa-move (fig5)", &["AlignedAlloc::cache_line()", "VecAlloc"][..]),
+    ] {
+        for variant in variants {
+            crate::ensure!(
+                t.rows.iter().any(|r| r[0] == case && r[1] == *variant),
+                "bench-alloc: missing {case}/{variant} row"
+            );
+        }
+    }
+    for r in &t.rows {
+        crate::ensure!(
+            r[1] != "pooled" || r[3] == "0",
+            "bench-alloc: pooled row {} allocated fresh blobs after warm-up ({})",
+            r[0],
+            r[3]
+        );
+    }
+    Ok(format!(
+        "{{\n  \"figure\": \"bench_alloc\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
+         \"unit\": \"ms (median)\",\n  \"alloc\": {}\n}}\n",
+        if o.quick { "quick" } else { "full" },
+        o.iters,
+        t.to_json()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> Opts {
+        let mut o = Opts::quick();
+        o.iters = 1;
+        o.n = Some(512);
+        o
+    }
+
+    #[test]
+    fn all_cases_produce_both_variants_and_pooled_allocates_zero() {
+        let t = run(&tiny_opts());
+        assert_eq!(t.rows.len(), 6);
+        for r in &t.rows {
+            assert_eq!(r.len(), 4, "ragged row {r:?}");
+            if r[1] == "pooled" {
+                assert_eq!(r[3], "0", "pooled row {} must allocate 0 after warm-up", r[0]);
+            }
+        }
+        assert!(t.rows.iter().any(|r| r[1] == "AlignedAlloc::cache_line()"));
+    }
+
+    #[test]
+    fn baseline_json_gates_on_rows_and_zero_alloc() {
+        let j = baseline_json_checked(&tiny_opts()).expect("complete run passes");
+        assert!(j.contains("\"figure\": \"bench_alloc\""), "{j}");
+        assert!(j.contains("\"alloc\": {"), "{j}");
+        assert!(j.contains("migration-churn"), "{j}");
+        assert!(!j.contains("\"rows\": []"), "{j}");
+    }
+}

@@ -6,7 +6,7 @@ use crate::bail;
 use crate::error::Result;
 
 use super::bench::Opts;
-use super::{bench_adapt, fig10_picframe, fig5_nbody, fig6_xla, fig7_copy, fig8_lbm};
+use super::{bench_adapt, bench_alloc, fig10_picframe, fig5_nbody, fig6_xla, fig7_copy, fig8_lbm};
 
 const USAGE: &str = "\
 llama — LLAMA (Low-Level Abstraction of Memory Access) reproduction
@@ -23,6 +23,8 @@ COMMANDS:
   bench-fig7  run fig 7 and write the BENCH_fig7.json baseline
   adapt       adaptive relayout engine vs best/worst static layout
   bench-adapt run adapt and write the BENCH_adapt.json baseline
+  allocbench  blob::pool — pooled vs fresh-zeroed allocation churn
+  bench-alloc run allocbench and write the BENCH_alloc.json baseline
   dump        fig 4: write SVG/HTML layout dumps + heatmap
   e2e         end-to-end driver: LLAMA memory -> PJRT n-body steps
   all         run every figure driver (quick mode by default)
@@ -128,6 +130,12 @@ pub fn run(cli: Cli) -> Result<()> {
             std::fs::write(path, bench_adapt::baseline_json_checked(o)?)?;
             println!("wrote {path}");
         }
+        "allocbench" => emit(&bench_alloc::run(o), cli.markdown),
+        "bench-alloc" => {
+            let path = "BENCH_alloc.json";
+            std::fs::write(path, bench_alloc::baseline_json_checked(o)?)?;
+            println!("wrote {path}");
+        }
         "dump" => dump(&cli.out_dir)?,
         "e2e" => e2e(o, &cli.out_dir)?,
         "all" => {
@@ -141,6 +149,7 @@ pub fn run(cli: Cli) -> Result<()> {
             }
             emit(&fig10_picframe::run(&o), cli.markdown);
             emit(&bench_adapt::run(&o), cli.markdown);
+            emit(&bench_alloc::run(&o), cli.markdown);
             match fig6_xla::run(&o) {
                 Ok(t) => emit(&t, cli.markdown),
                 Err(e) => println!("fig6 skipped ({e}); run `make artifacts` first"),

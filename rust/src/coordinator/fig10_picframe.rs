@@ -22,7 +22,10 @@ fn run_case<M: Mapping + Clone>(
     o: &Opts,
     rows: &mut Vec<(String, f64)>,
 ) {
-    let mut store = ParticleStore::new(proto, grid);
+    // The frame arena draws from a blob pool (layer 0): frames freed
+    // by `exchange` recycle into the frames `push` allocates.
+    let pool = crate::blob::BlobPool::new();
+    let mut store = ParticleStore::with_allocator(proto, grid, pool);
     store.populate(per_cell, 99);
     let total = store.particle_count();
     let r = bench(name, 1, o.iters, || {
@@ -73,7 +76,9 @@ pub fn run(o: &Opts) -> Table {
     // The fig 9 layout-exchange path: one compiled CopyProgram replayed
     // over every frame of the store (SoA -> AoSoA32 and back).
     {
-        let mut st = ParticleStore::new(SoA::multi_blob(&d, dims.clone()), grid);
+        let pool = crate::blob::BlobPool::new();
+        let mut st =
+            ParticleStore::with_allocator(SoA::multi_blob(&d, dims.clone()), grid, pool);
         st.populate(per_cell, 99);
         let total = st.particle_count();
         let r = bench("reshuffle", 1, o.iters, || {

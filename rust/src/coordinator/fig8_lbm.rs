@@ -28,8 +28,12 @@ fn run_case<M: Mapping + Clone>(
     o: &Opts,
     rows: &mut Vec<(String, f64)>,
 ) {
-    let mut a = alloc_view(mapping.clone());
-    let mut b = alloc_view(mapping);
+    // The ping-pong double buffers draw from a blob pool (layer 0):
+    // the step kernel runs on pooled blobs through the same zip
+    // executor, exercising blob-generic dispatch end to end.
+    let pool = crate::blob::BlobPool::new();
+    let mut a = crate::view::alloc_view_with(mapping.clone(), pool.clone());
+    let mut b = crate::view::alloc_view_with(mapping, pool);
     init(&mut a, geo);
     init(&mut b, geo);
     let m0 = total_mass(&a);

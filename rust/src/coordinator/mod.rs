@@ -10,6 +10,7 @@
 
 pub mod bench;
 pub mod bench_adapt;
+pub mod bench_alloc;
 pub mod cli;
 pub mod fig10_picframe;
 pub mod fig5_nbody;

@@ -600,6 +600,31 @@ impl ProgramCache {
         method
     }
 
+    /// Compile (or look up) the sharded program list for a mapping
+    /// pair and hand it to `f` — callers that must inspect the ops
+    /// *before* touching a destination use this: the adaptive engine
+    /// checks [`programs_cover_dst`] to decide whether a recycled
+    /// destination needs its re-zero, allocates, and then executes the
+    /// same list via [`execute_parallel`]. Thread resolution and cache
+    /// accounting match [`ProgramCache::copy_parallel`] exactly.
+    pub fn with_parallel_programs<MS, MD, T>(
+        &mut self,
+        src: &MS,
+        dst: &MD,
+        threads: Option<usize>,
+        f: impl FnOnce(&[CopyProgram]) -> T,
+    ) -> T
+    where
+        MS: Mapping + ?Sized,
+        MD: Mapping + ?Sized,
+    {
+        let threads = resolve_threads(src.dims().count(), threads);
+        let sp = src.plan();
+        let dp = dst.plan();
+        let progs = self.programs_for(src, dst, &sp, &dp, threads);
+        f(&progs)
+    }
+
     /// [`super::copy_parallel`] through the cache: compile (or look
     /// up) one sub-program per plan-aligned shard and replay them on
     /// scoped threads — the adaptive engine's `migrate_parallel` path.
@@ -623,6 +648,116 @@ impl ProgramCache {
         execute_parallel(&progs, src, dst);
         method
     }
+}
+
+/// True if executing `programs` writes **every** byte of every
+/// destination blob (`dst_blob_sizes[nr]` bytes each), padding
+/// included — the static proof that lets a recycled destination skip
+/// its re-zero ([`crate::blob::BlobRecycler::allocate_covered`]; the
+/// adaptive engine checks this before drawing migration destinations
+/// from its pool).
+///
+/// The proof is purely structural, over the compiled ops:
+///
+/// * `Memcpy` spans and contiguous `StridedRun`s (stride == elem)
+///   cover their byte ranges directly.
+/// * Gapped `StridedRun`s are grouped into interleaved families (same
+///   destination blob, stride and count): when a family's pieces tile
+///   one full period — per-leaf runs into a packed-AoS destination —
+///   the family covers its whole `count * stride` range.
+/// * `Gather` ops resolve through the mappings at execution time, so
+///   they never prove coverage.
+///
+/// Conservative by construction: `false` means "re-zero", never an
+/// unsound skip. Aligned destinations with padding holes (aligned AoS,
+/// AoSoA tail blocks) correctly report `false`.
+pub fn programs_cover_dst(programs: &[CopyProgram], dst_blob_sizes: &[usize]) -> bool {
+    /// A gapped strided run awaiting the family analysis:
+    /// (program index, dst offset, dst stride, element size, count).
+    type GappedRun = (usize, usize, usize, usize, usize);
+    let nblobs = dst_blob_sizes.len();
+    // Per blob: directly-covered byte spans and gapped strided runs.
+    let mut dense: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nblobs];
+    let mut strided: Vec<Vec<GappedRun>> = vec![Vec::new(); nblobs];
+    for (pi, p) in programs.iter().enumerate() {
+        for op in p.ops() {
+            match *op {
+                CopyOp::Memcpy { dst_blob, dst_off, len, .. } => {
+                    if dst_blob >= nblobs {
+                        return false;
+                    }
+                    if len > 0 {
+                        dense[dst_blob].push((dst_off, dst_off + len));
+                    }
+                }
+                CopyOp::StridedRun { dst_blob, dst_off, dst_stride, elem, count, .. } => {
+                    if dst_blob >= nblobs {
+                        return false;
+                    }
+                    if elem == 0 || count == 0 {
+                        continue;
+                    }
+                    if dst_stride == elem {
+                        dense[dst_blob].push((dst_off, dst_off + count * elem));
+                    } else {
+                        strided[dst_blob].push((pi, dst_off, dst_stride, elem, count));
+                    }
+                }
+                CopyOp::Gather { start, end } => {
+                    if start < end {
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+    for (nr, &size) in dst_blob_sizes.iter().enumerate() {
+        if size == 0 {
+            continue;
+        }
+        let spans = &mut dense[nr];
+        // Group gapped runs into per-program (stride, count) families
+        // and check whether each family's pieces tile one full period.
+        // Families never span sub-programs: a sharded list's shards
+        // tile their own record ranges independently (equal-length
+        // shards would otherwise collide on (stride, count)).
+        let mut fams: std::collections::BTreeMap<(usize, usize, usize), Vec<(usize, usize)>> =
+            std::collections::BTreeMap::new();
+        for &(pi, off, stride, elem, count) in &strided[nr] {
+            fams.entry((pi, stride, count)).or_default().push((off, elem));
+        }
+        for ((_pi, stride, count), mut pieces) in fams {
+            pieces.sort_unstable();
+            let r0 = pieces[0].0;
+            let mut covered = 0usize; // within [0, stride)
+            let mut tiles = true;
+            for (off, elem) in pieces {
+                let a = off - r0;
+                if a > covered || a + elem > stride {
+                    tiles = false;
+                    break;
+                }
+                covered = covered.max(a + elem);
+            }
+            if tiles && covered >= stride {
+                spans.push((r0, r0 + count * stride));
+            }
+            // Non-tiling families contribute nothing: their gaps make
+            // the final check fail closed.
+        }
+        spans.sort_unstable();
+        let mut covered = 0usize;
+        for &(a, b) in spans.iter() {
+            if a > covered {
+                return false;
+            }
+            covered = covered.max(b);
+        }
+        if covered < size {
+            return false;
+        }
+    }
+    true
 }
 
 /// Base pointers + lengths of the destination blobs, shared across the
@@ -1073,6 +1208,79 @@ mod tests {
         let mut oracle = alloc_view(SoA::multi_blob(&d, dims.clone()));
         copy_naive(&src, &mut oracle);
         assert_eq!(dst.blobs(), oracle.blobs());
+    }
+
+    fn dst_sizes<M: Mapping>(m: &M) -> Vec<usize> {
+        (0..m.blob_count()).map(|b| m.blob_size(b)).collect()
+    }
+
+    #[test]
+    fn coverage_proof_matches_the_strategy_table() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(64); // lane multiple of every case below
+        let soa = SoA::multi_blob(&d, dims.clone());
+        // Blobwise-identical: one memcpy per blob covers everything.
+        let prog = CopyProgram::compile(&soa, &SoA::multi_blob(&d, dims.clone()));
+        assert!(programs_cover_dst(&[prog], &dst_sizes(&soa)));
+        // Chunked into SoA (no padding): covered.
+        let prog = CopyProgram::compile(&AoSoA::new(&d, dims.clone(), 8), &soa);
+        assert!(programs_cover_dst(&[prog], &dst_sizes(&soa)));
+        // Chunked into an exact-multiple AoSoA (no tail padding): covered.
+        let a8 = AoSoA::new(&d, dims.clone(), 8);
+        let prog = CopyProgram::compile(&soa, &a8);
+        assert!(programs_cover_dst(&[prog], &dst_sizes(&a8)));
+        // Tail-block AoSoA destination: padding is never written.
+        let dims17 = ArrayDims::linear(17);
+        let a8t = AoSoA::new(&d, dims17.clone(), 8);
+        let prog = CopyProgram::compile(&SoA::multi_blob(&d, dims17.clone()), &a8t);
+        assert!(!programs_cover_dst(&[prog], &dst_sizes(&a8t)));
+        // Aligned-AoS destination: strided runs skip the padding holes.
+        let aos = AoS::aligned(&d, dims.clone());
+        let prog = CopyProgram::compile(&soa, &aos);
+        assert!(!programs_cover_dst(&[prog], &dst_sizes(&aos)));
+        // Packed-AoS destination from aligned AoS: per-leaf strided
+        // runs tile every record — the interleaved-family proof.
+        let packed = AoS::packed(&d, dims.clone());
+        let prog = CopyProgram::compile(&aos, &packed);
+        assert_eq!(prog.method(), CopyMethod::Program);
+        assert!(programs_cover_dst(&[prog], &dst_sizes(&packed)));
+        // Gather programs never prove coverage.
+        use crate::mapping::Byteswap;
+        let prog = CopyProgram::compile(&Byteswap::new(AoS::packed(&d, dims.clone())), &soa);
+        assert!(!programs_cover_dst(&[prog], &dst_sizes(&soa)));
+    }
+
+    #[test]
+    fn coverage_proof_holds_across_sharded_program_lists() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(4096);
+        let soa = SoA::multi_blob(&d, dims.clone());
+        let progs = shard_programs(&AoSoA::new(&d, dims.clone(), 16), &soa, 7);
+        assert!(progs.len() > 1);
+        assert!(programs_cover_dst(&progs, &dst_sizes(&soa)));
+        // Any single shard alone covers only its slice.
+        assert!(!programs_cover_dst(&progs[..1], &dst_sizes(&soa)));
+    }
+
+    #[test]
+    fn with_parallel_programs_shares_cache_accounting() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(4096 + 17);
+        let mut cache = ProgramCache::new();
+        let src_m = SoA::multi_blob(&d, dims.clone());
+        let dst_m = AoSoA::new(&d, dims.clone(), 16);
+        let n1 = cache.with_parallel_programs(&src_m, &dst_m, Some(3), |p| p.len());
+        let n2 = cache.with_parallel_programs(&src_m, &dst_m, Some(3), |p| p.len());
+        assert_eq!(n1, n2);
+        assert_eq!(cache.entries(), 1);
+        assert_eq!(cache.hits(), 1);
+        // The same (pair, threads) key serves copy_parallel too.
+        let mut src = alloc_view(src_m);
+        fill_distinct(&mut src);
+        let mut dst = alloc_view(dst_m);
+        cache.copy_parallel(&src, &mut dst, Some(3));
+        assert_eq!(cache.entries(), 1);
+        assert_eq!(cache.hits(), 2);
     }
 
     #[test]

@@ -47,7 +47,8 @@
 //! * **Copy** — [`copy`]: layout-changing copies compiled once into
 //!   [`copy::CopyProgram`]s ([`copy::program`]).
 //!
-//! Supporting modules: [`blob`] (storage), [`dump`] (fig 4 layout
+//! Supporting modules: [`blob`] (storage: owned, aligned, external,
+//! and the recycling [`blob::pool`] — layer 0), [`dump`] (fig 4 layout
 //! visualizations), [`error`] (in-tree error plumbing), [`workloads`]
 //! (n-body, D3Q19 LBM, HEP events, PIConGPU-style frames),
 //! [`runtime`] (PJRT execution of JAX/Pallas AOT artifacts, `xla`
@@ -85,10 +86,14 @@ pub mod prelude {
     pub use crate::array::{
         ArrayDims, ArrayIndexRange, ColMajor, HilbertCurve2D, MortonCurve, RowMajor,
     };
-    pub use crate::blob::{AlignedAlloc, Blob, BlobAllocator, BlobMut, VecAlloc};
+    pub use crate::blob::{
+        AlignedAlloc, Blob, BlobAllocator, BlobMut, BlobPool, BlobRecycler, PoolStats,
+        PooledBytes, VecAlloc,
+    };
     pub use crate::copy::{
-        aosoa_copy, copy, copy_blobwise, copy_naive, copy_parallel, copy_stdcopy, views_equal,
-        ChunkOrder, CopyMethod, CopyOp, CopyProgram, ProgramCache,
+        aosoa_copy, copy, copy_blobwise, copy_naive, copy_parallel, copy_stdcopy,
+        programs_cover_dst, views_equal, ChunkOrder, CopyMethod, CopyOp, CopyProgram,
+        ProgramCache,
     };
     pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
     pub use crate::mapping::{
@@ -99,9 +104,9 @@ pub mod prelude {
     };
     pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};
     pub use crate::view::{
-        alloc_view, alloc_view_with, pair_align, par_execute, par_execute_zip, par_map_shards,
-        par_shards, plan_aliases, shard_align, shard_pair, shard_plan, shard_range, AdaptiveConfig,
-        AdaptiveKernel, AdaptiveKernel2, AdaptiveView, CursorRead, CursorWrite, OneRecord,
-        ScalarVal, Shard, ShardKernel, ShardKernel2, View,
+        alloc_view, alloc_view_with, migrate_with, pair_align, par_execute, par_execute_zip,
+        par_map_shards, par_shards, plan_aliases, shard_align, shard_pair, shard_plan,
+        shard_range, AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2, AdaptiveView, CursorRead,
+        CursorWrite, OneRecord, ScalarVal, Shard, ShardKernel, ShardKernel2, View,
     };
 }

@@ -27,31 +27,50 @@
 //!    never re-migrates.
 //! 3. **Migrate** — the live blobs move into the new layout through a
 //!    compiled [`CopyProgram`](crate::copy::CopyProgram) executed on
-//!    plan-aligned shards over scoped threads
-//!    ([`ProgramCache::copy_parallel`]); the engine's [`ProgramCache`]
-//!    is keyed by (src plan, dst plan) fingerprint, so repeated
-//!    migrations between the same layouts compile once.
+//!    plan-aligned shards over scoped threads ([`migrate_with`]); the
+//!    engine's [`ProgramCache`] is keyed by (src plan, dst plan)
+//!    fingerprint, so repeated migrations between the same layouts
+//!    compile once.
 //!
 //! Then the cycle restarts: after `steady_steps` uninstrumented steps
 //! the engine re-enters a sampling epoch, so workloads whose access
 //! pattern *drifts* (picframe) are re-observed and re-layouted.
 //!
+//! # Blob storage and the recycling pool (layer 0)
+//!
+//! The engine is generic over its blob storage: `AdaptiveView<R>`
+//! owns a [`BlobRecycler`] `R` (default [`VecAlloc`], i.e. plain
+//! `Vec<u8>` blobs) and draws **every** blob it creates — migration
+//! destinations and the [`AdaptiveView::step_zip`] ping-pong back
+//! buffer — from it. With a [`crate::blob::BlobPool`]
+//! ([`AdaptiveView::with_recycler`]), retired blobs return to the
+//! pool's size-class free lists when dropped, so a *warm* engine
+//! performs **zero** fresh blob allocations per migration. The pool's
+//! re-zero is skipped exactly when the compiled program proves full
+//! destination byte coverage
+//! ([`programs_cover_dst`](crate::copy::programs_cover_dst)) — padding
+//! included — so pooled runs stay bit-identical to fresh-zeroed runs
+//! (property-tested in `rust/tests/prop_adapt.rs`).
+//!
 //! Workload kernels plug in through [`AdaptiveKernel`] (one view per
 //! step: n-body, picframe drift, hep sweeps) or [`AdaptiveKernel2`]
 //! (src/dst ping-pong per step: lbm stream-collide) — the generic
-//! method is what lets one kernel body run on every layout the engine
-//! can choose, statically dispatched per [`RecipeMapping`] variant.
+//! method is what lets one kernel body run on every layout *and every
+//! blob type* the engine can hold, statically dispatched per
+//! [`RecipeMapping`] variant.
 
 use std::sync::Arc;
 
-use crate::copy::ProgramCache;
+use crate::blob::{BlobAllocator, BlobMut, BlobRecycler, VecAlloc};
+use crate::copy::program::execute_parallel;
+use crate::copy::{programs_cover_dst, ProgramCache};
 use crate::mapping::{
     migration_gain, recommend_stats, AccessPattern, CostModel, FieldStats, Mapping, RecipeMapping,
     Recommendation, Trace,
 };
 use crate::record::RecordInfo;
 use crate::view::scalar::ScalarVal;
-use crate::view::view::{alloc_view, View};
+use crate::view::view::View;
 
 /// Tuning knobs of the [`AdaptiveView`] epoch state machine.
 #[derive(Debug, Clone, Copy)]
@@ -92,11 +111,13 @@ impl Default for AdaptiveConfig {
 }
 
 /// A workload step over one view — implemented once, generic over the
-/// mapping, so the engine can run it on whatever layout it currently
-/// holds (instrumented during sampling epochs, bare otherwise).
+/// mapping *and* the blob storage, so the engine can run it on
+/// whatever layout it currently holds (instrumented during sampling
+/// epochs, bare otherwise) over `Vec<u8>`, pooled, aligned or external
+/// blobs alike.
 pub trait AdaptiveKernel {
     /// Run one step of the workload over `view`.
-    fn run<M: Mapping>(&mut self, view: &mut View<M, Vec<u8>>);
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, view: &mut View<M, B>);
 }
 
 /// A workload step over a (src, dst) view pair of the *same* mapping —
@@ -106,30 +127,63 @@ pub trait AdaptiveKernel {
 pub trait AdaptiveKernel2 {
     /// Run one step, pulling from `src` and writing every record of
     /// `dst`.
-    fn run<M: Mapping>(&mut self, src: &View<M, Vec<u8>>, dst: &mut View<M, Vec<u8>>);
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, src: &View<M, B>, dst: &mut View<M, B>);
 }
 
 /// A sampling-phase view: the live recipe wrapped in a shared trace
 /// (the `Arc` lets a ping-pong back buffer count into the same epoch).
-type TracedView = View<Arc<Trace<RecipeMapping>>, Vec<u8>>;
+type TracedView<B> = View<Arc<Trace<RecipeMapping>>, B>;
 
 /// The engine's two phases. The front view always holds the live data;
 /// the back buffer exists only for [`AdaptiveKernel2`] ping-pong and is
 /// allocated lazily per phase.
-enum Phase {
+enum Phase<B: BlobMut> {
     /// Counting epoch: the recipe rides inside an `Arc<Trace<..>>`, so
     /// the optional back buffer shares the *same* counters.
     Sampling {
-        front: TracedView,
-        back: Option<TracedView>,
+        front: TracedView<B>,
+        back: Option<TracedView<B>>,
         left: usize,
     },
     /// Uninstrumented steady state on the adopted layout.
     Steady {
-        front: View<RecipeMapping, Vec<u8>>,
-        back: Option<View<RecipeMapping, Vec<u8>>>,
+        front: View<RecipeMapping, B>,
+        back: Option<View<RecipeMapping, B>>,
         left: usize,
     },
+}
+
+/// The engine's migration body, usable standalone (the `bench-alloc`
+/// driver measures exactly this path): compile — or look up — the
+/// sharded copy programs for `(src, target)` through `cache`, draw the
+/// destination blobs from `recycler`, and execute. The destination
+/// skips its re-zero **only** when the program proves full byte
+/// coverage ([`programs_cover_dst`]), so recycled memory can never
+/// leak stale bytes into padding a fresh-zeroed run would have zeroed.
+pub fn migrate_with<MS, MD, R>(
+    cache: &mut ProgramCache,
+    src: &View<MS, R::Blob>,
+    target: MD,
+    recycler: &R,
+    threads: Option<usize>,
+) -> View<MD, R::Blob>
+where
+    MS: Mapping,
+    MD: Mapping + Clone,
+    R: BlobRecycler,
+    R::Blob: Sync,
+{
+    let sizes: Vec<usize> = (0..target.blob_count()).map(|b| target.blob_size(b)).collect();
+    cache.with_parallel_programs(src.mapping(), &target, threads, |progs| {
+        let covered = programs_cover_dst(progs, &sizes);
+        let blobs: Vec<R::Blob> = sizes
+            .iter()
+            .map(|&s| if covered { recycler.allocate_covered(s) } else { recycler.allocate(s) })
+            .collect();
+        let mut dst = View::from_blobs(target.clone(), blobs);
+        execute_parallel(progs, src, &mut dst);
+        dst
+    })
 }
 
 /// A self-relayouting view: wraps any starting layout, samples access
@@ -142,7 +196,7 @@ enum Phase {
 ///
 /// struct Sweep;
 /// impl AdaptiveKernel for Sweep {
-///     fn run<M: Mapping>(&mut self, v: &mut View<M, Vec<u8>>) {
+///     fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut View<M, B>) {
 ///         for i in 0..v.count() {
 ///             let x: f32 = v.get(i, 0);
 ///             v.set(i, 0, x + 1.0); // touches only the hot leaf
@@ -162,34 +216,97 @@ enum Phase {
 /// assert!(av.mapping_name().starts_with("Split("));
 /// assert_eq!(av.get::<f32>(3, 0), 4.0);
 /// ```
-pub struct AdaptiveView {
+///
+/// With a [`crate::blob::BlobPool`] as the recycler, every blob the
+/// engine creates is drawn from — and returned to — the pool:
+///
+/// ```
+/// use llama::prelude::*;
+///
+/// # struct Sweep;
+/// # impl AdaptiveKernel for Sweep {
+/// #     fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut View<M, B>) {
+/// #         for i in 0..v.count() {
+/// #             let x: f32 = v.get(i, 0);
+/// #             v.set(i, 0, x + 1.0);
+/// #         }
+/// #     }
+/// # }
+/// let d = llama::record_dim! { hot: f32, cold: [f64; 6] };
+/// let pool = BlobPool::new();
+/// let view = alloc_view_with(AoS::aligned(&d, ArrayDims::linear(64)), pool.clone());
+/// let mut av = AdaptiveView::with_recycler(view, AdaptiveConfig::default(), pool.clone());
+/// for _ in 0..4 {
+///     av.step(&mut Sweep);
+/// }
+/// assert_eq!(av.migrations(), 1);
+/// // The retired AoS blob went back to the pool when the migration
+/// // released it.
+/// assert!(pool.free_blocks() > 0);
+/// ```
+pub struct AdaptiveView<R: BlobRecycler = VecAlloc> {
     cfg: AdaptiveConfig,
     /// `None` only transiently inside phase transitions.
-    phase: Option<Phase>,
+    phase: Option<Phase<R::Blob>>,
     cache: ProgramCache,
     info: Arc<RecordInfo>,
     migrations: usize,
     /// The recommendation describing the *current* layout, once the
     /// advisor has matched one (the hysteresis baseline).
     advised: Option<Recommendation>,
+    recycler: R,
 }
 
-impl AdaptiveView {
-    /// Wrap an existing view (any mapping, any starting layout) and
-    /// begin a sampling epoch.
+impl AdaptiveView<VecAlloc> {
+    /// Wrap an existing `Vec<u8>`-backed view (any mapping, any
+    /// starting layout) and begin a sampling epoch. For pooled or
+    /// otherwise custom storage use [`AdaptiveView::with_recycler`].
     pub fn new<M: Mapping + 'static>(view: View<M, Vec<u8>>, cfg: AdaptiveConfig) -> AdaptiveView {
-        let (mapping, blobs) = view.into_parts();
-        Self::from_parts(RecipeMapping::Other(Arc::new(mapping)), blobs, cfg)
+        Self::with_recycler(view, cfg, VecAlloc)
     }
 
     /// Re-host a previously adapted view ([`AdaptiveView::into_view`])
     /// — data and layout carry over, and a fresh observe cycle begins.
     pub fn from_recipe(view: View<RecipeMapping, Vec<u8>>, cfg: AdaptiveConfig) -> AdaptiveView {
-        let (recipe, blobs) = view.into_parts();
-        Self::from_parts(recipe, blobs, cfg)
+        Self::from_recipe_with(view, cfg, VecAlloc)
+    }
+}
+
+impl<R: BlobRecycler> AdaptiveView<R>
+where
+    R::Blob: Sync,
+{
+    /// Wrap an existing view whose blobs came from `recycler` (any
+    /// mapping, any starting layout) and begin a sampling epoch. All
+    /// future engine allocations — migration destinations, zip back
+    /// buffers — are drawn from `recycler`; with a
+    /// [`crate::blob::BlobPool`] the retired blobs recycle, so a warm
+    /// engine migrates without touching the system allocator.
+    pub fn with_recycler<M: Mapping + 'static>(
+        view: View<M, R::Blob>,
+        cfg: AdaptiveConfig,
+        recycler: R,
+    ) -> AdaptiveView<R> {
+        let (mapping, blobs) = view.into_parts();
+        Self::from_parts(RecipeMapping::Other(Arc::new(mapping)), blobs, cfg, recycler)
     }
 
-    fn from_parts(recipe: RecipeMapping, blobs: Vec<Vec<u8>>, cfg: AdaptiveConfig) -> AdaptiveView {
+    /// [`AdaptiveView::from_recipe`] with an explicit recycler.
+    pub fn from_recipe_with(
+        view: View<RecipeMapping, R::Blob>,
+        cfg: AdaptiveConfig,
+        recycler: R,
+    ) -> AdaptiveView<R> {
+        let (recipe, blobs) = view.into_parts();
+        Self::from_parts(recipe, blobs, cfg, recycler)
+    }
+
+    fn from_parts(
+        recipe: RecipeMapping,
+        blobs: Vec<R::Blob>,
+        cfg: AdaptiveConfig,
+        recycler: R,
+    ) -> AdaptiveView<R> {
         let info = recipe.info().clone();
         let mut av = AdaptiveView {
             cfg,
@@ -198,18 +315,25 @@ impl AdaptiveView {
             info,
             migrations: 0,
             advised: None,
+            recycler,
         };
         av.phase = Some(av.enter_sampling(recipe, blobs));
         av
     }
 
-    fn enter_sampling(&self, recipe: RecipeMapping, blobs: Vec<Vec<u8>>) -> Phase {
+    fn enter_sampling(&self, recipe: RecipeMapping, blobs: Vec<R::Blob>) -> Phase<R::Blob> {
         let traced = Arc::new(Trace::new(recipe));
         Phase::Sampling {
             front: View::from_blobs(traced, blobs),
             back: None,
             left: self.cfg.sample_steps.max(1),
         }
+    }
+
+    /// A view over `mapping` with every blob drawn (zeroed) from the
+    /// engine's recycler — the zip back buffer's allocation path.
+    fn alloc_from_recycler<M: Mapping + Clone>(recycler: &R, mapping: &M) -> View<M, R::Blob> {
+        crate::view::view::alloc_view_with(mapping.clone(), recycler)
     }
 
     /// Run one workload step, advancing the epoch state machine: the
@@ -233,19 +357,35 @@ impl AdaptiveView {
         });
     }
 
+    /// One ping-pong: ensure a back buffer (drawn zeroed from the
+    /// recycler, sharing `front`'s mapping — and, while sampling, its
+    /// trace counters), run the kernel, swap.
+    fn zip_once<M, K>(
+        recycler: &R,
+        kernel: &mut K,
+        front: &mut View<M, R::Blob>,
+        back: &mut Option<View<M, R::Blob>>,
+    ) where
+        M: Mapping + Clone,
+        K: AdaptiveKernel2,
+    {
+        let b = back.get_or_insert_with(|| Self::alloc_from_recycler(recycler, front.mapping()));
+        kernel.run(front, b);
+        std::mem::swap(front, b);
+    }
+
     /// Run one double-buffered workload step (src → dst, then swap);
     /// same epoch semantics as [`AdaptiveView::step`]. The back buffer
-    /// is allocated lazily with the current layout — during sampling
-    /// it shares the front buffer's trace counters.
+    /// is allocated lazily with the current layout, from the engine's
+    /// recycler — during sampling it shares the front buffer's trace
+    /// counters, and when a phase ends it returns to the recycler's
+    /// pool.
     pub fn step_zip<K: AdaptiveKernel2>(&mut self, kernel: &mut K) {
         let phase = self.phase.take().expect("phase present outside transitions");
+        let recycler = &self.recycler;
         self.phase = Some(match phase {
             Phase::Sampling { mut front, mut back, left } => {
-                {
-                    let b = back.get_or_insert_with(|| alloc_view(front.mapping().clone()));
-                    kernel.run(&front, b);
-                    std::mem::swap(&mut front, b);
-                }
+                Self::zip_once(recycler, kernel, &mut front, &mut back);
                 if left <= 1 {
                     self.finish_sampling(front, back)
                 } else {
@@ -253,11 +393,7 @@ impl AdaptiveView {
                 }
             }
             Phase::Steady { mut front, mut back, left } => {
-                {
-                    let b = back.get_or_insert_with(|| alloc_view(front.mapping().clone()));
-                    kernel.run(&front, b);
-                    std::mem::swap(&mut front, b);
-                }
+                Self::zip_once(recycler, kernel, &mut front, &mut back);
                 self.advance_steady(front, back, left)
             }
         });
@@ -267,15 +403,16 @@ impl AdaptiveView {
     /// (`steady_steps == 0` stays steady forever).
     fn advance_steady(
         &mut self,
-        front: View<RecipeMapping, Vec<u8>>,
-        back: Option<View<RecipeMapping, Vec<u8>>>,
+        front: View<RecipeMapping, R::Blob>,
+        back: Option<View<RecipeMapping, R::Blob>>,
         left: usize,
-    ) -> Phase {
+    ) -> Phase<R::Blob> {
         if self.cfg.steady_steps == 0 || left > 1 {
             let left = if self.cfg.steady_steps == 0 { left } else { left - 1 };
             return Phase::Steady { front, back, left };
         }
-        // Re-observe: drop the stale back buffer, rewrap the recipe.
+        // Re-observe: drop the stale back buffer (its blobs return to
+        // the recycler's pool), rewrap the recipe.
         drop(back);
         let (recipe, blobs) = front.into_parts();
         self.enter_sampling(recipe, blobs)
@@ -284,8 +421,12 @@ impl AdaptiveView {
     /// End of a sampling epoch: snapshot → stats → recommendation →
     /// (maybe) migration. The trace wrapper is dissolved here; steady
     /// phases run with zero instrumentation overhead.
-    fn finish_sampling(&mut self, front: TracedView, back: Option<TracedView>) -> Phase {
-        drop(back); // releases the back buffer's Arc clone
+    fn finish_sampling(
+        &mut self,
+        front: TracedView<R::Blob>,
+        back: Option<TracedView<R::Blob>>,
+    ) -> Phase<R::Blob> {
+        drop(back); // releases the back buffer's Arc clone (and blobs)
         let (traced, blobs) = front.into_parts();
         let traced =
             Arc::try_unwrap(traced).expect("trace uniquely owned at the epoch boundary");
@@ -311,10 +452,20 @@ impl AdaptiveView {
         }
         // Migrate: plan-aligned sharded copy through the cached
         // program — repeated migrations between the same layout pair
-        // replay the compiled op list.
+        // replay the compiled op list, with the destination drawn from
+        // the recycler (re-zero skipped when the program proves full
+        // coverage).
         let src = View::from_blobs(recipe, blobs);
-        let mut dst = alloc_view(target);
-        self.cache.copy_parallel(&src, &mut dst, Some(self.cfg.threads.max(1)));
+        let dst = migrate_with(
+            &mut self.cache,
+            &src,
+            target,
+            &self.recycler,
+            Some(self.cfg.threads.max(1)),
+        );
+        // The old layout's blobs return to the recycler's pool here —
+        // the next migration of these shapes allocates nothing fresh.
+        drop(src);
         self.migrations += 1;
         self.advised = Some(candidate);
         // A measured cost described the layout that just went away;
@@ -324,7 +475,7 @@ impl AdaptiveView {
         self.steady(dst)
     }
 
-    fn steady(&self, front: View<RecipeMapping, Vec<u8>>) -> Phase {
+    fn steady(&self, front: View<RecipeMapping, R::Blob>) -> Phase<R::Blob> {
         Phase::Steady { front, back: None, left: self.cfg.steady_steps }
     }
 
@@ -394,10 +545,17 @@ impl AdaptiveView {
         &self.cache
     }
 
+    /// The recycler every engine-created blob is drawn from (tests
+    /// assert a warm pool serves migrations without fresh allocations
+    /// via [`crate::blob::BlobRecycler::pool_stats`]).
+    pub fn recycler(&self) -> &R {
+        &self.recycler
+    }
+
     /// Dissolve the engine, returning the live data as a plain view of
     /// the current layout. A sampling epoch in flight ends without a
     /// decision (its counts are discarded).
-    pub fn into_view(mut self) -> View<RecipeMapping, Vec<u8>> {
+    pub fn into_view(mut self) -> View<RecipeMapping, R::Blob> {
         match self.phase.take().expect("phase present") {
             Phase::Sampling { front, back, .. } => {
                 drop(back);
@@ -416,7 +574,9 @@ impl AdaptiveView {
 mod tests {
     use super::*;
     use crate::array::ArrayDims;
+    use crate::blob::BlobPool;
     use crate::mapping::{AoS, AoSoA, SoA};
+    use crate::view::view::alloc_view_with;
     use crate::view::alloc_view;
     use crate::workloads::nbody::{self, llama_impl};
 
@@ -424,7 +584,7 @@ mod tests {
     struct Move;
 
     impl AdaptiveKernel for Move {
-        fn run<M: Mapping>(&mut self, v: &mut View<M, Vec<u8>>) {
+        fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut View<M, B>) {
             llama_impl::mv(v);
         }
     }
@@ -496,7 +656,7 @@ mod tests {
     struct CopyAll;
 
     impl AdaptiveKernel2 for CopyAll {
-        fn run<M: Mapping>(&mut self, src: &View<M, Vec<u8>>, dst: &mut View<M, Vec<u8>>) {
+        fn run<M: Mapping, B: BlobMut + Sync>(&mut self, src: &View<M, B>, dst: &mut View<M, B>) {
             for lin in 0..src.count() {
                 for leaf in 0..7 {
                     let v: f32 = src.get(lin, leaf);
@@ -521,7 +681,7 @@ mod tests {
     struct FullTouch;
 
     impl AdaptiveKernel for FullTouch {
-        fn run<M: Mapping>(&mut self, v: &mut View<M, Vec<u8>>) {
+        fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut View<M, B>) {
             for lin in 0..v.count() {
                 for leaf in 0..7 {
                     let x: f32 = v.get(lin, leaf);
@@ -535,7 +695,7 @@ mod tests {
     struct OneLeaf;
 
     impl AdaptiveKernel for OneLeaf {
-        fn run<M: Mapping>(&mut self, v: &mut View<M, Vec<u8>>) {
+        fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut View<M, B>) {
             for lin in 0..v.count() {
                 let x: f32 = v.get(lin, 0);
                 v.set(lin, 0, x);
@@ -617,5 +777,78 @@ mod tests {
         // AoSoA start, streaming 6/7 leaves: advisor says SoA MB.
         assert_eq!(av.migrations(), 1);
         assert!(av.mapping_name().starts_with("SoA("));
+    }
+
+    /// The pooled engine behaves exactly like the `Vec<u8>` engine and
+    /// draws every blob it creates from the pool — a second engine on
+    /// the warmed pool migrates with zero fresh allocations.
+    #[test]
+    fn pooled_engine_matches_vec_engine_and_recycles() {
+        let d = nbody::particle_dim();
+        let n = 64;
+        let s = nbody::init_particles(n, 5);
+        let pool = BlobPool::new();
+
+        let run_round = |pool: &BlobPool| {
+            let mut v =
+                alloc_view_with(AoS::aligned(&d, ArrayDims::linear(n)), pool.clone());
+            llama_impl::load_state(&mut v, &s);
+            let mut av =
+                AdaptiveView::with_recycler(v, AdaptiveConfig::default(), pool.clone());
+            for _ in 0..3 {
+                av.step(&mut Move);
+            }
+            assert_eq!(av.migrations(), 1);
+            av.into_view()
+        };
+
+        // Round 1 (cold pool): the reference values.
+        let pooled = run_round(&pool);
+        let mut vec_view = alloc_view(AoS::aligned(&d, ArrayDims::linear(n)));
+        llama_impl::load_state(&mut vec_view, &s);
+        let mut vec_av = AdaptiveView::new(vec_view, AdaptiveConfig::default());
+        for _ in 0..3 {
+            vec_av.step(&mut Move);
+        }
+        let vec_final = vec_av.into_view();
+        assert_eq!(pooled.mapping().mapping_name(), vec_final.mapping().mapping_name());
+        // Bit-identical storage: SoA destinations are fully covered by
+        // the program, so the skipped re-zero cannot be observed.
+        for (p, v) in pooled.blobs().iter().zip(vec_final.blobs()) {
+            assert_eq!(p, v);
+        }
+
+        // Round 2 (warm pool): same migration, zero fresh allocations.
+        drop(pooled);
+        let before = pool.stats();
+        let again = run_round(&pool);
+        let after = pool.stats();
+        assert_eq!(after.misses, before.misses, "warm engine allocated fresh blobs");
+        assert!(after.hits > before.hits);
+        for (p, v) in again.blobs().iter().zip(vec_final.blobs()) {
+            assert_eq!(p, v);
+        }
+    }
+
+    /// Zip back buffers come from the recycler too: after an epoch
+    /// ends, the retired buffer's blobs are back on the free lists.
+    #[test]
+    fn pooled_zip_back_buffer_recycles() {
+        let d = nbody::particle_dim();
+        let n = 64;
+        let pool = BlobPool::new();
+        let mut v = alloc_view_with(AoS::aligned(&d, ArrayDims::linear(n)), pool.clone());
+        llama_impl::load_state(&mut v, &nbody::init_particles(n, 9));
+        let mut av = AdaptiveView::with_recycler(v, AdaptiveConfig::default(), pool.clone());
+        for _ in 0..3 {
+            av.step_zip(&mut CopyAll);
+        }
+        assert_eq!(av.migrations(), 1);
+        // Live: front + back of the steady phase; everything else
+        // (AoS front, traced back, migration source) has returned.
+        let stats = pool.stats();
+        assert!(stats.outstanding >= 2);
+        drop(av);
+        assert_eq!(pool.stats().outstanding, 0, "engine must return every blob");
     }
 }

@@ -13,7 +13,7 @@ pub mod view;
 pub mod virtual_record;
 pub mod virtual_view;
 
-pub use adapt::{AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2, AdaptiveView};
+pub use adapt::{migrate_with, AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2, AdaptiveView};
 pub use cursor::{
     CursorRead, CursorWrite, LeafCursor, LeafCursorMut, PiecewiseCursor, PiecewiseCursorMut,
     PlanCursors, PlanCursorsMut,

@@ -268,6 +268,36 @@ pub trait ShardKernel2: Sync {
 /// or ranges that do not fit the blobs): the caller then runs its own
 /// accessor-path fallback, exactly as with
 /// [`View::plan_cursors_mut`].
+///
+/// The executor is generic over the blob storage `B: BlobMut`, so it
+/// drives views over **caller-provided memory** too — the PIConGPU
+/// integration scenario of paper §4.4, where LLAMA reinterprets a
+/// buffer another framework owns:
+///
+/// ```
+/// use llama::prelude::*;
+/// use llama::blob::ExternalBytesMut;
+///
+/// struct Stamp;
+/// impl ShardKernel for Stamp {
+///     fn run<C: CursorWrite>(&self, cur: &[C], s: Shard) {
+///         for lin in s.start..s.end {
+///             // SAFETY: lin < count; shards are disjoint.
+///             unsafe { cur[0].write_at::<f32>(lin, lin as f32) };
+///         }
+///     }
+/// }
+///
+/// let d = llama::record_dim! { x: f32, y: f32 };
+/// // Memory owned by "someone else" (here: a stack-local buffer).
+/// let mut foreign = vec![0u8; 2 * 4 * 64];
+/// {
+///     let mapping = SoA::single_blob(&d, ArrayDims::linear(64));
+///     let mut view = View::from_blobs(mapping, vec![ExternalBytesMut(&mut foreign)]);
+///     assert!(par_execute(&mut view, 4, &Stamp));
+/// } // the view borrows; the caller keeps the buffer
+/// assert_eq!(f32::from_ne_bytes(foreign[4 * 63..4 * 64].try_into().unwrap()), 63.0);
+/// ```
 pub fn par_execute<M, B, K>(view: &mut View<M, B>, threads: usize, kernel: &K) -> bool
 where
     M: Mapping,

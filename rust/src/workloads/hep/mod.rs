@@ -133,7 +133,7 @@ pub struct AdaptiveIsolation {
 }
 
 impl crate::view::adapt::AdaptiveKernel for AdaptiveIsolation {
-    fn run<M: Mapping>(&mut self, view: &mut crate::view::View<M, Vec<u8>>) {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, view: &mut crate::view::View<M, B>) {
         self.total += isolated_energy_parallel(view, self.min_quality, self.threads.max(1));
     }
 }

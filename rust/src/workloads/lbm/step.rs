@@ -21,7 +21,7 @@ pub struct AdaptiveStep {
 }
 
 impl AdaptiveKernel2 for AdaptiveStep {
-    fn run<M: Mapping>(&mut self, src: &View<M, Vec<u8>>, dst: &mut View<M, Vec<u8>>) {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, src: &View<M, B>, dst: &mut View<M, B>) {
         step_parallel(src, dst, self.threads.max(1));
     }
 }

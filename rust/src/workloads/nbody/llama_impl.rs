@@ -21,7 +21,7 @@ pub struct AdaptiveUpdate {
 }
 
 impl AdaptiveKernel for AdaptiveUpdate {
-    fn run<M: Mapping>(&mut self, view: &mut View<M, Vec<u8>>) {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, view: &mut View<M, B>) {
         update_parallel(view, self.threads.max(1));
     }
 }
@@ -34,7 +34,7 @@ pub struct AdaptiveMove {
 }
 
 impl AdaptiveKernel for AdaptiveMove {
-    fn run<M: Mapping>(&mut self, view: &mut View<M, Vec<u8>>) {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, view: &mut View<M, B>) {
         mv_parallel(view, self.threads.max(1));
     }
 }

@@ -5,17 +5,20 @@
 use super::{
     ParticleAttrs, CELL_IDX, FRAME_SIZE, MOM_X, MOM_Y, MOM_Z, POS_X, POS_Y, POS_Z, WEIGHTING,
 };
+use crate::blob::{Blob, BlobAllocator, BlobMut, VecAlloc};
 use crate::mapping::Mapping;
 use crate::view::cursor::CursorWrite;
 use crate::view::shard::{par_execute, shard_range, Shard, ShardKernel};
-use crate::view::{alloc_view, View};
+use crate::view::View;
 use crate::workloads::rng::SplitMix64;
 
 /// One particle frame: an attribute view over `FRAME_SIZE` slots plus
-/// the doubly-linked-list pointers of fig 9.
+/// the doubly-linked-list pointers of fig 9. Generic over the blob
+/// storage (`Vec<u8>` by default; a pooled store's frames hold
+/// [`crate::blob::PooledBytes`]).
 #[derive(Debug)]
-pub struct Frame<M: Mapping> {
-    pub view: View<M, Vec<u8>>,
+pub struct Frame<M: Mapping, B: Blob = Vec<u8>> {
+    pub view: View<M, B>,
     pub prev: Option<usize>,
     pub next: Option<usize>,
     /// Number of used slots; only the *last* frame of a list may be
@@ -33,32 +36,55 @@ struct CellList {
 /// The particle store: supercells × frame lists over a frame arena.
 ///
 /// `M` must be `Clone` so each new frame instantiates the same mapping
-/// (the layout under test).
+/// (the layout under test). `A` is the blob allocator every frame
+/// draws from — with a [`crate::blob::BlobPool`]
+/// ([`ParticleStore::with_allocator`]) the arena *recycles*: frames
+/// freed by [`ParticleStore::exchange`] return their blobs to the
+/// pool's size classes and the next allocated frame pops them back,
+/// so steady-state frame churn performs zero fresh allocations.
 #[derive(Debug)]
-pub struct ParticleStore<M: Mapping + Clone> {
+pub struct ParticleStore<M: Mapping + Clone, A: BlobAllocator = VecAlloc> {
     proto: M,
+    alloc: A,
     /// Supercell grid extents.
     pub grid: [usize; 3],
-    frames: Vec<Option<Frame<M>>>,
+    frames: Vec<Option<Frame<M, A::Blob>>>,
     free: Vec<usize>,
     cells: Vec<CellList>,
     particles: usize,
 }
 
-impl<M: Mapping + Clone> ParticleStore<M> {
+impl<M: Mapping + Clone> ParticleStore<M, VecAlloc> {
     /// `proto`: a mapping over `ArrayDims::linear(FRAME_SIZE)` used for
-    /// every frame. `grid`: supercell grid extents.
+    /// every frame. `grid`: supercell grid extents. Frames hold plain
+    /// `Vec<u8>` blobs; see [`ParticleStore::with_allocator`] for
+    /// pooled or aligned storage.
     pub fn new(proto: M, grid: [usize; 3]) -> Self {
+        Self::with_allocator(proto, grid, VecAlloc)
+    }
+}
+
+impl<M: Mapping + Clone, A: BlobAllocator> ParticleStore<M, A> {
+    /// [`ParticleStore::new`] with an explicit blob allocator for the
+    /// frame arena (paper §3.8: `allocView(mapping, blobAlloc)` as a
+    /// whole-data-structure property).
+    pub fn with_allocator(proto: M, grid: [usize; 3], alloc: A) -> Self {
         assert_eq!(proto.dims().count(), FRAME_SIZE, "frame mapping must cover FRAME_SIZE");
         let ncells = grid[0] * grid[1] * grid[2];
         ParticleStore {
             proto,
+            alloc,
             grid,
             frames: Vec::new(),
             free: Vec::new(),
             cells: vec![CellList::default(); ncells],
             particles: 0,
         }
+    }
+
+    /// The allocator the frame arena draws from.
+    pub fn allocator(&self) -> &A {
+        &self.alloc
     }
 
     pub fn cell_count(&self) -> usize {
@@ -76,7 +102,7 @@ impl<M: Mapping + Clone> ParticleStore<M> {
 
     fn alloc_frame(&mut self) -> usize {
         let frame = Frame {
-            view: alloc_view(self.proto.clone()),
+            view: crate::view::alloc_view_with(self.proto.clone(), &self.alloc),
             prev: None,
             next: None,
             filled: 0,
@@ -95,11 +121,11 @@ impl<M: Mapping + Clone> ParticleStore<M> {
         self.free.push(idx);
     }
 
-    fn frame(&self, idx: usize) -> &Frame<M> {
+    fn frame(&self, idx: usize) -> &Frame<M, A::Blob> {
         self.frames[idx].as_ref().expect("stale frame index")
     }
 
-    fn frame_mut(&mut self, idx: usize) -> &mut Frame<M> {
+    fn frame_mut(&mut self, idx: usize) -> &mut Frame<M, A::Blob> {
         self.frames[idx].as_mut().expect("stale frame index")
     }
 
@@ -209,7 +235,10 @@ impl<M: Mapping + Clone> ParticleStore<M> {
     /// The memory-bound attribute sweep of fig 10: advance every
     /// particle's position by its momentum (in-supercell coordinates,
     /// positions may leave [0,1)³ until [`ParticleStore::exchange`]).
-    pub fn drift(&mut self, dt: f32) {
+    pub fn drift(&mut self, dt: f32)
+    where
+        A::Blob: Send,
+    {
         self.drift_parallel(dt, 1);
     }
 
@@ -219,7 +248,10 @@ impl<M: Mapping + Clone> ParticleStore<M> {
     /// arena, not the frame; each frame's sweep still runs through the
     /// plan-driven executor). Any thread count is bit-identical to the
     /// serial sweep: every particle's arithmetic is self-contained.
-    pub fn drift_parallel(&mut self, dt: f32, threads: usize) {
+    pub fn drift_parallel(&mut self, dt: f32, threads: usize)
+    where
+        A::Blob: Send,
+    {
         let shards = shard_range(self.frames.len(), threads, 1);
         if shards.len() <= 1 {
             for f in self.frames.iter_mut().flatten() {
@@ -317,8 +349,14 @@ impl<M: Mapping + Clone> ParticleStore<M> {
     /// compile the (old proto, new proto) pair into **one**
     /// [`crate::copy::CopyProgram`] and replay it per frame — the
     /// frames all share the same extent and mapping pair, so the chunk
-    /// intersection derivation runs once, not once per frame.
-    pub fn reshuffle<M2: Mapping + Clone>(&self, proto: M2) -> ParticleStore<M2> {
+    /// intersection derivation runs once, not once per frame. The new
+    /// store shares this store's allocator: with a pooled arena, the
+    /// reshuffled frames draw from (and the old store's frames later
+    /// return to) the same size-class free lists.
+    pub fn reshuffle<M2: Mapping + Clone>(&self, proto: M2) -> ParticleStore<M2, A>
+    where
+        A: Clone,
+    {
         assert_eq!(proto.dims().count(), FRAME_SIZE, "frame mapping must cover FRAME_SIZE");
         let prog = crate::copy::CopyProgram::compile(&self.proto, &proto);
         let frames = self
@@ -326,7 +364,7 @@ impl<M: Mapping + Clone> ParticleStore<M> {
             .iter()
             .map(|slot| {
                 slot.as_ref().map(|f| {
-                    let mut view = alloc_view(proto.clone());
+                    let mut view = crate::view::alloc_view_with(proto.clone(), &self.alloc);
                     prog.execute(&f.view, &mut view);
                     Frame { view, prev: f.prev, next: f.next, filled: f.filled }
                 })
@@ -334,6 +372,7 @@ impl<M: Mapping + Clone> ParticleStore<M> {
             .collect();
         ParticleStore {
             proto,
+            alloc: self.alloc.clone(),
             grid: self.grid,
             frames,
             free: self.free.clone(),
@@ -389,14 +428,14 @@ impl ShardKernel for DriftKernel {
 /// Drift one frame: plan fast path (EXPERIMENTS.md §Perf) through the
 /// shared executor — loop-invariant cursors, affine or lane-blocked —
 /// with the accessor loop as the generic-plan fallback.
-fn drift_frame<M: Mapping>(frame: &mut Frame<M>, dt: f32) {
+fn drift_frame<M: Mapping, B: BlobMut>(frame: &mut Frame<M, B>, dt: f32) {
     drift_view(&mut frame.view, frame.filled, dt);
 }
 
 /// The drift sweep over the first `filled` records of any attribute
 /// view — the body shared by [`Frame`] sweeps and the adaptive-store
-/// kernel ([`AdaptiveDrift`]).
-pub fn drift_view<M: Mapping>(view: &mut View<M, Vec<u8>>, filled: usize, dt: f32) {
+/// kernel ([`AdaptiveDrift`]), generic over mapping and blob storage.
+pub fn drift_view<M: Mapping, B: BlobMut>(view: &mut View<M, B>, filled: usize, dt: f32) {
     let n = filled.min(view.count());
     if par_execute(view, 1, &DriftKernel { filled: n, dt }) {
         return;
@@ -426,7 +465,7 @@ pub struct AdaptiveDrift {
 }
 
 impl crate::view::adapt::AdaptiveKernel for AdaptiveDrift {
-    fn run<M: Mapping>(&mut self, view: &mut View<M, Vec<u8>>) {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, view: &mut View<M, B>) {
         let n = view.count();
         drift_view(view, n, self.dt);
     }
@@ -448,7 +487,7 @@ fn drift_cursors<C: CursorWrite>(cur: &[C], start: usize, end: usize, dt: f32) {
     }
 }
 
-fn write_particle<M: Mapping>(view: &mut View<M, Vec<u8>>, slot: usize, p: &ParticleAttrs) {
+fn write_particle<M: Mapping, B: BlobMut>(view: &mut View<M, B>, slot: usize, p: &ParticleAttrs) {
     view.set::<f32>(slot, POS_X, p.pos[0]);
     view.set::<f32>(slot, POS_Y, p.pos[1]);
     view.set::<f32>(slot, POS_Z, p.pos[2]);
@@ -459,7 +498,7 @@ fn write_particle<M: Mapping>(view: &mut View<M, Vec<u8>>, slot: usize, p: &Part
     view.set::<i32>(slot, CELL_IDX, p.cell_idx);
 }
 
-fn read_particle<M: Mapping>(view: &View<M, Vec<u8>>, slot: usize) -> ParticleAttrs {
+fn read_particle<M: Mapping, B: Blob>(view: &View<M, B>, slot: usize) -> ParticleAttrs {
     ParticleAttrs {
         pos: [
             view.get::<f32>(slot, POS_X),
@@ -636,6 +675,91 @@ mod tests {
         a.drift(0.3);
         a.exchange();
         a.check_invariants().unwrap();
+    }
+
+    /// A pooled frame arena recycles: frames freed by `exchange`
+    /// return their blobs to the pool and later `push`es reuse them.
+    /// The arena never holds more than `total/FRAME_SIZE + ncells`
+    /// frames (the "only the tail is partial" invariant, removals
+    /// precede the matching pushes), so a pool pre-warmed to that
+    /// bound serves the whole churn with zero fresh allocations — and
+    /// the physics stays identical to the `Vec<u8>` store.
+    #[test]
+    fn pooled_arena_recycles_frame_churn() {
+        use crate::blob::BlobPool;
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let ncells = 2;
+        let per_cell = FRAME_SIZE + 40;
+        let pool = BlobPool::new();
+        let bound = (ncells * per_cell) / FRAME_SIZE + ncells + 1;
+        {
+            let warm: Vec<_> = (0..bound)
+                .map(|_| {
+                    crate::view::alloc_view_with(SoA::multi_blob(&d, dims.clone()), pool.clone())
+                })
+                .collect();
+            drop(warm);
+        }
+        let warm_misses = pool.stats().misses;
+        let mut pooled = ParticleStore::with_allocator(
+            SoA::multi_blob(&d, dims.clone()),
+            [ncells, 1, 1],
+            pool.clone(),
+        );
+        let mut plain = soa_store([ncells, 1, 1]);
+        pooled.populate(per_cell, 7);
+        plain.populate(per_cell, 7);
+        // Drive hard enough that particles cross cells every step
+        // (frames free on one side, allocate on the other).
+        for _ in 0..4 {
+            pooled.drift(5.0);
+            pooled.exchange();
+            plain.drift(5.0);
+            plain.exchange();
+        }
+        pooled.check_invariants().unwrap();
+        assert_eq!(
+            pool.stats().misses,
+            warm_misses,
+            "churn within the frame bound must allocate zero fresh blobs"
+        );
+        assert!(pool.stats().hits > 0);
+        for cell in 0..plain.cell_count() {
+            assert_eq!(pooled.cell_particles(cell), plain.cell_particles(cell), "cell {cell}");
+        }
+    }
+
+    /// `reshuffle` keeps the allocator: a pooled store reshuffles into
+    /// pooled frames, and dropping the old store refills the pool.
+    #[test]
+    fn pooled_reshuffle_round_trips() {
+        use crate::blob::BlobPool;
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let pool = BlobPool::new();
+        let mut st = ParticleStore::with_allocator(
+            SoA::multi_blob(&d, dims.clone()),
+            [2, 2, 1],
+            pool.clone(),
+        );
+        st.populate(300, 23);
+        let plain = {
+            let mut p = soa_store([2, 2, 1]);
+            p.populate(300, 23);
+            p.reshuffle(AoSoA::new(&d, dims.clone(), 32))
+        };
+        let warm = {
+            // First reshuffle warms the AoSoA class; drop it again.
+            drop(st.reshuffle(AoSoA::new(&d, dims.clone(), 32)));
+            pool.stats().misses
+        };
+        let a = st.reshuffle(AoSoA::new(&d, dims.clone(), 32));
+        a.check_invariants().unwrap();
+        assert_eq!(pool.stats().misses, warm, "warm reshuffle must reuse pooled frames");
+        for cell in 0..plain.cell_count() {
+            assert_eq!(a.cell_particles(cell), plain.cell_particles(cell), "cell {cell}");
+        }
     }
 
     #[test]

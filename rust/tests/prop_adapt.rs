@@ -131,7 +131,7 @@ fn prop_engine_migration_matches_naive_for_every_reachable_recipe() {
 fn prop_hysteresis_holds_under_resampling() {
     struct Move;
     impl AdaptiveKernel for Move {
-        fn run<M: Mapping>(&mut self, v: &mut llama::view::View<M, Vec<u8>>) {
+        fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut llama::view::View<M, B>) {
             llama_impl::mv(v);
         }
     }
@@ -203,6 +203,94 @@ fn prop_epoch_reset_leaves_zero_counts() {
     }
 }
 
+/// (4) Blob-generality of the engine (EXPERIMENTS.md §Alloc): for
+/// every matrix starting layout, an engine whose blobs live in a
+/// `BlobPool` runs the same steps as the `Vec<u8>` engine and lands on
+/// the same layout with **byte-identical** blobs — the pool's
+/// zero-on-reuse rule (skip only under the compiled program's
+/// full-coverage proof) makes recycled storage unobservable. And the
+/// migration path of a *warmed* engine performs zero fresh blob
+/// allocations, asserted via `PoolStats`.
+#[test]
+fn prop_pooled_engine_bit_identical_and_zero_alloc_when_warm() {
+    struct Move;
+    impl AdaptiveKernel for Move {
+        fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut llama::view::View<M, B>) {
+            llama_impl::mv(v);
+        }
+    }
+    let d = nbody::particle_dim();
+    let n = 96;
+    let state = nbody::init_particles(n, 11);
+    let dims = ArrayDims::linear(n);
+    for start in 0..MATRIX {
+        // Reference: the Vec<u8> engine.
+        let mut vec_view = alloc_view(nth(&d, &dims, start));
+        llama_impl::load_state(&mut vec_view, &state);
+        let mut vec_av = AdaptiveView::new(vec_view, AdaptiveConfig::default());
+        for _ in 0..4 {
+            vec_av.step(&mut Move);
+        }
+        let vec_final = vec_av.into_view();
+
+        // Pooled engine, same start: seed the pooled start view with
+        // the Vec view's exact bytes.
+        let pool = BlobPool::new();
+        let run_round = |pool: &BlobPool| {
+            let mut seed_view = alloc_view(nth(&d, &dims, start));
+            llama_impl::load_state(&mut seed_view, &state);
+            let blobs: Vec<PooledBytes> = seed_view
+                .blobs()
+                .iter()
+                .map(|b| {
+                    let mut pb = pool.allocate(b.len());
+                    pb.as_bytes_mut().copy_from_slice(b);
+                    pb
+                })
+                .collect();
+            let pooled_view = llama::view::View::from_blobs(nth(&d, &dims, start), blobs);
+            let mut av =
+                AdaptiveView::with_recycler(pooled_view, AdaptiveConfig::default(), pool.clone());
+            for _ in 0..4 {
+                av.step(&mut Move);
+            }
+            av.into_view()
+        };
+        let pooled_final = run_round(&pool);
+        assert_eq!(
+            pooled_final.mapping().mapping_name(),
+            vec_final.mapping().mapping_name(),
+            "start {start}: engines diverged on layout"
+        );
+        assert_eq!(
+            pooled_final.blobs().len(),
+            vec_final.blobs().len(),
+            "start {start}: blob count"
+        );
+        for (nr, (p, v)) in pooled_final.blobs().iter().zip(vec_final.blobs()).enumerate() {
+            assert_eq!(
+                p.as_bytes(),
+                v.as_slice(),
+                "start {start} blob {nr}: pooled bytes != Vec<u8> bytes"
+            );
+        }
+
+        // Warm round: every blob the engine needs is on a free list,
+        // so the whole observe→migrate cycle allocates nothing fresh.
+        drop(pooled_final);
+        let before = pool.stats();
+        let again = run_round(&pool);
+        let after = pool.stats();
+        assert_eq!(
+            after.misses, before.misses,
+            "start {start}: warmed engine allocated fresh blobs"
+        );
+        for (nr, (p, v)) in again.blobs().iter().zip(vec_final.blobs()).enumerate() {
+            assert_eq!(p.as_bytes(), v.as_slice(), "start {start} blob {nr} (warm round)");
+        }
+    }
+}
+
 /// The ISSUE acceptance scenario end-to-end: lbm starting from AoS —
 /// the engine's trace epoch triggers exactly one migration to the
 /// advisor's hot/cold Split, and the post-migration fields are
@@ -211,10 +299,10 @@ fn prop_epoch_reset_leaves_zero_counts() {
 fn lbm_adaptive_end_to_end_migrates_to_split_and_stays_correct() {
     struct Step;
     impl AdaptiveKernel2 for Step {
-        fn run<M: Mapping>(
+        fn run<M: Mapping, B: BlobMut + Sync>(
             &mut self,
-            src: &llama::view::View<M, Vec<u8>>,
-            dst: &mut llama::view::View<M, Vec<u8>>,
+            src: &llama::view::View<M, B>,
+            dst: &mut llama::view::View<M, B>,
         ) {
             lbm::step::step(src, dst);
         }

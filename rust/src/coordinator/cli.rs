@@ -275,6 +275,11 @@ fn e2e(o: &Opts, out_dir: &str) -> Result<()> {
 fn info(o: &Opts) -> Result<()> {
     println!("llama reproduction of DOI 10.1002/spe.3077");
     println!("cores: {}", o.threads());
+    println!(
+        "simd: compiled={}, dispatch={}",
+        crate::view::simd::simd_compiled(),
+        crate::view::simd::detect().name()
+    );
     match crate::runtime::Manifest::load(&o.artifacts) {
         Ok(m) => {
             println!("artifacts in {}:", o.artifacts);

@@ -12,6 +12,7 @@ use super::report::{fmt_ms, fmt_ratio, Table};
 use crate::array::ArrayDims;
 use crate::mapping::{AoS, AoSoA, SoA};
 use crate::view::alloc_view;
+use crate::view::simd::{detect, simd_compiled};
 use crate::workloads::nbody::{self, llama_impl, manual};
 
 pub struct Fig5Sizes {
@@ -85,6 +86,27 @@ pub fn run(o: &Opts) -> (Table, Table) {
     llama_update!("LLAMA SoA MB", SoA::multi_blob(&d, dims.clone()));
     llama_update!("LLAMA AoSoA8", AoSoA::new(&d, dims.clone(), 8));
     llama_update!("LLAMA AoSoA16", AoSoA::new(&d, dims.clone(), 16));
+    // Scalar-vs-SIMD rows: the same shard kernel on the detected lane
+    // path (bit-identical results — `prop_simd`); the row name records
+    // which path actually ran, so a baseline can never silently carry
+    // scalar numbers as "simd". Packed AoS goes through the same
+    // kernel via the batch-cursor gather path.
+    let spath = detect();
+    let stag = format!(" (simd: {})", spath.name());
+    macro_rules! llama_update_simd {
+        ($name:expr, $mapping:expr) => {{
+            let mut v = alloc_view($mapping);
+            llama_impl::load_state(&mut v, &state_u);
+            results.push(bench(&format!("{}{stag}", $name), w, o.iters, || {
+                llama_impl::update_simd_parallel_with(&mut v, 1, spath);
+                black_box(v.blobs());
+            }));
+        }};
+    }
+    llama_update_simd!("LLAMA AoS (packed)", AoS::packed(&d, dims.clone()));
+    llama_update_simd!("LLAMA SoA MB", SoA::multi_blob(&d, dims.clone()));
+    llama_update_simd!("LLAMA AoSoA8", AoSoA::new(&d, dims.clone(), 8));
+    llama_update_simd!("LLAMA AoSoA16", AoSoA::new(&d, dims.clone(), 16));
     // The paper's missing piece: a mapping-aware blocked iteration.
     {
         let mut v = alloc_view(AoSoA::new(&d, dims.clone(), 16));
@@ -161,6 +183,20 @@ pub fn run(o: &Opts) -> (Table, Table) {
     llama_move!("LLAMA AoS (aligned)", AoS::aligned(&d, dims.clone()));
     llama_move!("LLAMA SoA MB", SoA::multi_blob(&d, dims.clone()));
     llama_move!("LLAMA AoSoA16", AoSoA::new(&d, dims.clone(), 16));
+    macro_rules! llama_move_simd {
+        ($name:expr, $mapping:expr) => {{
+            let mut v = alloc_view($mapping);
+            llama_impl::load_state(&mut v, &state_m);
+            results.push(bench(&format!("{}{stag}", $name), w, o.iters, || {
+                for _ in 0..s.move_reps {
+                    llama_impl::mv_simd_parallel_with(&mut v, 1, spath);
+                }
+                black_box(v.blobs());
+            }));
+        }};
+    }
+    llama_move_simd!("LLAMA SoA MB", SoA::multi_blob(&d, dims.clone()));
+    llama_move_simd!("LLAMA AoSoA16", AoSoA::new(&d, dims.clone(), 16));
 
     let base = results[0].median_ns;
     for r in &results {
@@ -229,9 +265,13 @@ pub fn thread_sweep(o: &Opts) -> Table {
 fn render_baseline(o: &Opts, update: &Table, mv: &Table, threads: &Table) -> String {
     format!(
         "{{\n  \"figure\": \"fig5_nbody\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
-         \"unit\": \"ms (median)\",\n  \"update\": {},\n  \"move\": {},\n  \"threads\": {}\n}}\n",
+         \"unit\": \"ms (median)\",\n  \
+         \"simd\": {{ \"compiled\": {}, \"path\": \"{}\" }},\n  \
+         \"update\": {},\n  \"move\": {},\n  \"threads\": {}\n}}\n",
         if o.quick { "quick" } else { "full" },
         o.iters,
+        simd_compiled(),
+        detect().name(),
         update.to_json(),
         mv.to_json(),
         threads.to_json()
@@ -246,6 +286,17 @@ fn render_baseline(o: &Opts, update: &Table, mv: &Table, threads: &Table) -> Str
 /// with any empty table — an empty table is a broken run, not a
 /// measurement.
 pub fn baseline_json_checked(o: &Opts) -> crate::error::Result<String> {
+    // A SIMD-capable build whose dispatch resolved to scalar would
+    // record scalar numbers in every "(simd: ...)" row — refuse, unless
+    // the scalar pin was explicit (`LLAMA_SIMD=scalar` is how a
+    // deliberate scalar baseline is recorded on a SIMD host).
+    if simd_compiled() {
+        crate::ensure!(
+            detect().is_vector() || std::env::var("LLAMA_SIMD").is_ok(),
+            "bench-fig5: built with `--features simd` but dispatch fell back to scalar on \
+             this host; set LLAMA_SIMD=scalar to record a scalar baseline deliberately"
+        );
+    }
     let (update, mv) = run(o);
     let threads = thread_sweep(o);
     for t in [&update, &mv, &threads] {
@@ -264,13 +315,19 @@ mod tests {
         o.n = Some(256);
         o.iters = 1;
         let (u, m) = run(&o);
-        assert_eq!(u.rows.len(), 12);
-        assert_eq!(m.rows.len(), 6);
+        assert_eq!(u.rows.len(), 16);
+        assert_eq!(m.rows.len(), 8);
         // Baseline ratio is exactly 1.
         assert_eq!(u.rows[0][2], "1.000");
         let txt = u.to_text();
         assert!(txt.contains("LLAMA SoA MB"));
         assert!(txt.contains("LLAMA adaptive"));
+        // The simd rows record the dispatched path in their name —
+        // "(simd: scalar)" on non-SIMD builds, never an unlabeled row.
+        assert_eq!(u.rows.iter().filter(|r| r[0].contains("(simd: ")).count(), 4);
+        assert_eq!(m.rows.iter().filter(|r| r[0].contains("(simd: ")).count(), 2);
+        let tag = format!("(simd: {})", crate::view::simd::detect().name());
+        assert!(txt.contains(&tag), "{txt}");
     }
 
     #[test]
@@ -284,6 +341,10 @@ mod tests {
         assert!(j.contains("\"update\": {"), "{j}");
         assert!(j.contains("\"move\": {"), "{j}");
         assert!(j.contains("\"threads\": {"), "{j}");
+        assert!(j.contains("\"simd\": {"), "{j}");
+        assert!(j.contains("\"compiled\": "), "{j}");
+        assert!(j.contains("\"path\": \""), "{j}");
+        assert!(j.contains("(simd: "), "{j}");
         assert!(j.contains("LLAMA AoSoA16"), "{j}");
         assert!(j.contains("thread sweep"), "{j}");
         assert!(!j.contains("\"rows\": []"), "empty table in {j}");

@@ -10,9 +10,10 @@ use crate::array::ArrayDims;
 use crate::copy::program::{execute_parallel, shard_programs};
 use crate::copy::{
     aosoa_copy, aosoa_compatible, copy_aosoa_parallel, copy_naive, copy_naive_parallel,
-    copy_stdcopy, views_equal, ChunkOrder, CopyProgram,
+    copy_stdcopy, views_equal, ChunkOrder, CopyOp, CopyProgram,
 };
 use crate::mapping::{total_blob_bytes, AoS, AoSoA, Mapping, SoA};
+use crate::view::simd::{detect, simd_compiled, SimdPath};
 use crate::view::{alloc_view, View};
 use crate::workloads::hep;
 use crate::workloads::nbody;
@@ -98,6 +99,20 @@ fn strategies<MS, MD>(
     // sub-program per plan-aligned shard on scoped threads.
     case("program", &mut |s, d| prog.execute(s, d));
     case("program (p)", &mut |s, d| execute_parallel(&shard_progs, s, d));
+    // Scalar-vs-SIMD rows exist only where the program actually
+    // compiled a StridedRun (the one op kind with a vector gather
+    // path); memcpy-only programs would just measure the same code
+    // twice. The row name records the dispatched path so the baseline
+    // is auditable.
+    if prog.ops().iter().any(|op| matches!(op, CopyOp::StridedRun { .. })) {
+        let spath = detect();
+        case(&format!("program (simd: {})", spath.name()), &mut |s, d| {
+            prog.execute_with_path(s, d, spath)
+        });
+        case("program (scalar)", &mut |s, d| {
+            prog.execute_with_path(s, d, SimdPath::Scalar)
+        });
+    }
 }
 
 /// Run fig 7: particle (7 floats) and HEP event (100 fields) copies.
@@ -138,6 +153,20 @@ pub fn run(o: &Opts) -> Table {
     strategies(
         "particle AoS -> SoA MB",
         AoS::packed(&pd, dims.clone()),
+        SoA::multi_blob(&pd, dims.clone()),
+        |v| {
+            let s = nbody::init_particles(v.count(), 7);
+            crate::workloads::nbody::llama_impl::load_state(v, &s);
+        },
+        o,
+        &mut t,
+    );
+    // Aligned AoS defeats chunking (inter-field padding means a record
+    // is not one dense span), so this pair compiles to per-leaf
+    // StridedRuns — the gather-executed Program rows (scalar vs simd).
+    strategies(
+        "particle AoS (aligned) -> SoA MB",
+        AoS::aligned(&pd, dims.clone()),
         SoA::multi_blob(&pd, dims.clone()),
         |v| {
             let s = nbody::init_particles(v.count(), 7);
@@ -212,17 +241,35 @@ pub fn headline(o: &Opts) -> (f64, f64, f64) {
 /// mode). Refuses structurally to write a baseline with an empty table
 /// or without the program-path rows — those mean a broken run.
 pub fn baseline_json_checked(o: &Opts) -> crate::error::Result<String> {
+    // Refuse to record a "simd" baseline that silently dispatched to
+    // scalar on a SIMD-capable build — that mislabels the whole column.
+    // LLAMA_SIMD=scalar is the explicit escape hatch for a deliberate
+    // scalar baseline.
+    if simd_compiled() {
+        crate::ensure!(
+            detect().is_vector() || std::env::var("LLAMA_SIMD").is_ok(),
+            "bench-fig7: built with `--features simd` but dispatch fell back to scalar \
+             on this host; set LLAMA_SIMD=scalar to record a scalar baseline deliberately"
+        );
+    }
     let t = run(o);
     crate::ensure!(!t.rows.is_empty(), "bench-fig7: table produced no rows");
     crate::ensure!(
         t.rows.iter().any(|r| r[0].contains("program")),
         "bench-fig7: no program rows — copy path not routed through CopyProgram"
     );
+    crate::ensure!(
+        t.rows.iter().any(|r| r[0].contains("(simd: ")),
+        "bench-fig7: no scalar-vs-simd rows — the strided pair is missing"
+    );
     Ok(format!(
         "{{\n  \"figure\": \"fig7_copy\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
-         \"unit\": \"ms (median) / GiB per s\",\n  \"copy\": {}\n}}\n",
+         \"unit\": \"ms (median) / GiB per s\",\n  \
+         \"simd\": {{ \"compiled\": {}, \"path\": \"{}\" }},\n  \"copy\": {}\n}}\n",
         if o.quick { "quick" } else { "full" },
         o.iters,
+        simd_compiled(),
+        detect().name(),
         t.to_json()
     ))
 }
@@ -244,9 +291,16 @@ mod tests {
         assert!(txt.contains("program (p)"));
         assert!(txt.contains("particle memcpy (p)"));
         assert!(txt.contains("event AoS -> SoA MB"));
-        // Every pair is chunkable (packed AoS = 1 lane), so each of the
-        // 5 pairs has 9 strategy rows (7 + program + program (p)).
-        assert!(t.rows.len() >= 3 * 9 + 4 + 4);
+        // The aligned-AoS pair is the strided (non-chunkable) one: it
+        // carries the scalar-vs-simd Program rows, and the simd row
+        // records the dispatched path in its name.
+        assert!(txt.contains("particle AoS (aligned) -> SoA MB"));
+        assert!(txt.contains(&format!("program (simd: {})", detect().name())));
+        assert!(txt.contains("program (scalar)"));
+        // The 5 packed pairs are chunkable (packed AoS = 1 lane) with 9
+        // strategy rows each; the aligned pair adds 5 base rows plus
+        // the 2 path rows; 4 memcpy rows close the table.
+        assert!(t.rows.len() >= 3 * 9 + 4 + 4 + 7);
     }
 
     #[test]
@@ -274,6 +328,10 @@ mod tests {
         assert!(j.contains("\"figure\": \"fig7_copy\""), "{j}");
         assert!(j.contains("\"copy\": {"), "{j}");
         assert!(j.contains("program (p)"), "{j}");
+        assert!(j.contains("\"simd\": {"), "{j}");
+        assert!(j.contains("\"compiled\": "), "{j}");
+        assert!(j.contains("\"path\": \""), "{j}");
+        assert!(j.contains("(simd: "), "{j}");
         assert!(!j.contains("\"rows\": []"), "empty table in {j}");
     }
 }

@@ -39,7 +39,9 @@ pub use aosoa::{aosoa_copy, ChunkOrder};
 pub use blobwise::copy_blobwise;
 pub use naive::{copy_naive, copy_naive_field_major};
 pub use parallel::{copy_aosoa_parallel, copy_naive_parallel};
-pub use program::{execute_parallel, programs_cover_dst, CopyOp, CopyProgram, ProgramCache};
+pub use program::{
+    execute_parallel, execute_parallel_with, programs_cover_dst, CopyOp, CopyProgram, ProgramCache,
+};
 pub use stdcopy::copy_stdcopy;
 
 /// Which strategy the compiled program uses (returned by [`copy`] /

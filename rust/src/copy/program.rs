@@ -15,7 +15,11 @@
 //!   `Memcpy` per blob; AoSoA-N ↔ AoSoA-M pairs to gcd-sized runs.
 //! * [`CopyOp::StridedRun`] — affine ↔ affine leaves with mismatched
 //!   strides (e.g. aligned AoS ↔ SoA, previously field-wise): one op
-//!   per leaf replaces per-record mapping calls.
+//!   per leaf replaces per-record mapping calls. Executed through
+//!   [`crate::view::simd::strided_run`]: scalar word moves by default,
+//!   AVX2 gathers for 4/8-byte elements on the detected (or pinned,
+//!   [`CopyProgram::execute_with_path`]) SIMD path — the op list itself
+//!   never depends on the path.
 //! * [`CopyOp::Gather`] — element fallback when either side is generic
 //!   or the byte representations differ; resolves through the mappings
 //!   at execution time, bit-identical to [`super::copy_naive`].
@@ -45,6 +49,7 @@
 use crate::blob::{Blob, BlobMut};
 use crate::mapping::{LayoutPlan, Mapping};
 use crate::view::shard::shard_pair;
+use crate::view::simd::{detect, SimdPath};
 use crate::view::View;
 
 use super::{
@@ -206,6 +211,26 @@ impl CopyProgram {
         BS: Blob,
         BD: BlobMut,
     {
+        self.execute_with_path(src, dst, detect());
+    }
+
+    /// [`CopyProgram::execute`] on an explicit [`SimdPath`] (benchmark
+    /// rows pin the path; [`CopyProgram::execute`] uses the detected
+    /// one). Only [`CopyOp::StridedRun`] execution is affected — the
+    /// copied bytes are identical on every path. Safe for any `path`
+    /// value: unusable paths fall back to scalar word moves.
+    pub fn execute_with_path<MS, MD, BS, BD>(
+        &self,
+        src: &View<MS, BS>,
+        dst: &mut View<MD, BD>,
+        path: SimdPath,
+    ) where
+        MS: Mapping,
+        MD: Mapping,
+        BS: Blob,
+        BD: BlobMut,
+    {
+        let path = if path.is_vector() { path } else { SimdPath::Scalar };
         assert_eq!(self.count, src.count(), "program compiled for a different extent");
         assert_eq!(self.count, dst.count(), "program compiled for a different extent");
         let info = src.mapping().info().clone();
@@ -228,13 +253,17 @@ impl CopyProgram {
                     count,
                 } => {
                     let (_, dblobs) = dst.mapping_and_blobs_mut();
-                    let sbytes = src.blobs()[src_blob].as_bytes();
-                    let dbytes = dblobs[dst_blob].as_bytes_mut();
-                    for i in 0..count {
-                        let so = src_off + i * src_stride;
-                        let doff = dst_off + i * dst_stride;
-                        dbytes[doff..doff + elem].copy_from_slice(&sbytes[so..so + elem]);
-                    }
+                    crate::view::simd::strided_run(
+                        path,
+                        src.blobs()[src_blob].as_bytes(),
+                        src_off,
+                        src_stride,
+                        dblobs[dst_blob].as_bytes_mut(),
+                        dst_off,
+                        dst_stride,
+                        elem,
+                        count,
+                    );
                 }
                 CopyOp::Gather { start, end } => {
                     for lin in start..end {
@@ -786,9 +815,27 @@ pub fn execute_parallel<MS, MD, BS, BD>(
     BS: Blob + Sync,
     BD: BlobMut,
 {
+    execute_parallel_with(programs, src, dst, detect());
+}
+
+/// [`execute_parallel`] on an explicit [`SimdPath`] (see
+/// [`CopyProgram::execute_with_path`]); unusable paths fall back to
+/// scalar word moves.
+pub fn execute_parallel_with<MS, MD, BS, BD>(
+    programs: &[CopyProgram],
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    path: SimdPath,
+) where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob + Sync,
+    BD: BlobMut,
+{
+    let path = if path.is_vector() { path } else { SimdPath::Scalar };
     match programs {
         [] => {}
-        [p] => p.execute(src, dst),
+        [p] => p.execute_with_path(src, dst, path),
         _ => {
             // Same contract as the serial `execute` path: reject views
             // the programs were not compiled for instead of silently
@@ -818,7 +865,7 @@ pub fn execute_parallel<MS, MD, BS, BD>(
                         for op in p.ops() {
                             // SAFETY: bounds asserted inside; dst
                             // ranges disjoint across programs.
-                            unsafe { execute_op_raw(op, src, raw) };
+                            unsafe { execute_op_raw(op, src, raw, path) };
                         }
                     });
                 }
@@ -833,7 +880,7 @@ pub fn execute_parallel<MS, MD, BS, BD>(
 /// `raw` must point into live destination blobs; concurrent callers
 /// must hold disjoint op sets (guaranteed by [`shard_programs`]'s
 /// disjoint record shards + the mapping invariant).
-unsafe fn execute_op_raw<MS, BS>(op: &CopyOp, src: &View<MS, BS>, raw: &RawDst)
+unsafe fn execute_op_raw<MS, BS>(op: &CopyOp, src: &View<MS, BS>, raw: &RawDst, path: SimdPath)
 where
     MS: Mapping,
     BS: Blob,
@@ -864,13 +911,15 @@ where
                 src_off + (count - 1) * src_stride + elem <= sbytes.len()
                     && dst_off + (count - 1) * dst_stride + elem <= dlen
             );
-            for i in 0..count {
-                std::ptr::copy_nonoverlapping(
-                    sbytes.as_ptr().add(src_off + i * src_stride),
-                    dptr.add(dst_off + i * dst_stride),
-                    elem,
-                );
-            }
+            crate::view::simd::strided_run_raw(
+                path,
+                sbytes.as_ptr().add(src_off),
+                src_stride,
+                dptr.add(dst_off),
+                dst_stride,
+                elem,
+                count,
+            );
         }
         CopyOp::Gather { .. } => unreachable!("gather ops are never sharded"),
     }
@@ -1015,6 +1064,34 @@ mod tests {
             ]
         );
         check_against_naive(m_src, m_dst);
+    }
+
+    #[test]
+    fn strided_runs_copy_identical_bytes_on_every_simd_path() {
+        // Aligned AoS -> SoA MB over the full demo record: 8-, 4-, 2-
+        // and 1-byte leaves hit the gather kernels (elem 4/8, with
+        // scalar tails at 133 % 8 records) and the per-element fallback
+        // (elem 1/2). Serial and raw-pointer parallel sites both sweep.
+        let d = particle_dim();
+        let dims = ArrayDims::linear(133);
+        let m_src = AoS::aligned(&d, dims.clone());
+        let m_dst = SoA::multi_blob(&d, dims.clone());
+        let mut src = alloc_view(m_src);
+        fill_distinct(&mut src);
+        let prog = CopyProgram::compile(src.mapping(), &m_dst);
+        assert_eq!(prog.method(), CopyMethod::Program);
+        assert!(prog.ops().iter().any(|op| matches!(op, CopyOp::StridedRun { .. })));
+        let mut oracle = alloc_view(m_dst.clone());
+        copy_naive(&src, &mut oracle);
+        for path in crate::view::simd::available_paths() {
+            let mut dst = alloc_view(m_dst.clone());
+            prog.execute_with_path(&src, &mut dst, path);
+            assert_eq!(dst.blobs(), oracle.blobs(), "serial path {path:?}");
+            let progs = shard_programs(src.mapping(), &m_dst, 3);
+            let mut par = alloc_view(m_dst.clone());
+            execute_parallel_with(&progs, &src, &mut par, path);
+            assert_eq!(par.blobs(), oracle.blobs(), "parallel path {path:?}");
+        }
     }
 
     #[test]

@@ -42,8 +42,9 @@
 //!   [`mapping::advisor`] recommends layouts from traced statistics.
 //! * **Access & scale** — [`view`]: views over blobs, zero-overhead
 //!   cursors ([`view::cursor`]), plan-aligned parallel sharding
-//!   ([`view::shard`]), and the adaptive relayout engine
-//!   ([`view::adapt`]).
+//!   ([`view::shard`]), runtime-dispatched SIMD execution
+//!   ([`view::simd`], `simd` feature), and the adaptive relayout
+//!   engine ([`view::adapt`]).
 //! * **Copy** — [`copy`]: layout-changing copies compiled once into
 //!   [`copy::CopyProgram`]s ([`copy::program`]).
 //!
@@ -106,7 +107,8 @@ pub mod prelude {
     pub use crate::view::{
         alloc_view, alloc_view_with, migrate_with, pair_align, par_execute, par_execute_zip,
         par_map_shards, par_shards, plan_aliases, shard_align, shard_pair, shard_plan,
-        shard_range, AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2, AdaptiveView, CursorRead,
-        CursorWrite, OneRecord, ScalarVal, Shard, ShardKernel, ShardKernel2, View,
+        shard_range, simd_compiled, AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2,
+        AdaptiveView, CursorRead, CursorWrite, OneRecord, ScalarVal, Shard, ShardKernel,
+        ShardKernel2, SimdCursorRead, SimdCursorWrite, SimdPath, View,
     };
 }

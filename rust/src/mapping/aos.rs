@@ -120,6 +120,15 @@ impl<L: Linearizer> Mapping for AoS<L> {
         // Packed AoS == AoSoA with 1 lane (no padding between fields);
         // single-element runs stay chunk-correct under any slot
         // permutation, so chunkability has no row-major restriction.
+        //
+        // Aligned AoS deliberately reports `None` even though its
+        // 1-element runs are just as contiguous: alignment padding
+        // between fields means a record is NOT one dense span, so
+        // `Some(1)` would only buy per-field 1-element memcpys — and it
+        // would demote aligned-AoS ↔ affine pairs from the `Program`
+        // strategy (one `StridedRun` per leaf, SIMD-gather executable)
+        // to `AoSoAChunked`'s per-record op lists. `chunk_lanes` is a
+        // copy-strategy decision, not a geometric property.
         let chunk = if self.aligned { None } else { Some(1) };
         if std::any::TypeId::of::<L>() != std::any::TypeId::of::<RowMajor>() {
             return super::LayoutPlan::generic(self.dims.count(), true, chunk);

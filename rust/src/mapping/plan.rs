@@ -135,7 +135,18 @@ impl LayoutPlan {
     }
 
     /// AoSoA-family lane count for the chunked copy (packed AoS = 1,
-    /// AoSoA-L = L, SoA = count), `None` if runs are not contiguous.
+    /// AoSoA-L = L, SoA = count), `None` if the layout should not use
+    /// the chunked strategy.
+    ///
+    /// `None` does not always mean "runs are not contiguous": aligned
+    /// AoS has contiguous 1-element runs but reports `None` because its
+    /// inter-field alignment padding makes per-record chunking
+    /// pointless, and the affine `Program` strategy (per-leaf
+    /// [`crate::copy::CopyOp::StridedRun`]s, SIMD-gather executable)
+    /// serves those pairs strictly better — see `AoS::plan`. The copy
+    /// compiler treats this value as the strategy gate
+    /// (`plans_chunk_compatible`), so a mapping opts out by returning
+    /// `None` regardless of geometry.
     #[inline]
     pub fn chunk_lanes(&self) -> Option<usize> {
         self.chunk_lanes
@@ -404,7 +415,14 @@ mod tests {
         let d = particle_dim();
         let dims = ArrayDims::linear(12);
         assert_eq!(AoS::packed(&d, dims.clone()).plan().chunk_lanes(), Some(1));
+        // Aligned AoS pins `None` by design, not geometry: its runs are
+        // contiguous 1-element runs too, but reporting a lane count
+        // would demote aligned-AoS ↔ affine pairs from the `Program`
+        // strategy (per-leaf StridedRuns — see
+        // `golden_affine_pair_compiles_strided_runs`) to per-record
+        // chunk op lists. See the `chunk_lanes` doc.
         assert_eq!(AoS::aligned(&d, dims.clone()).plan().chunk_lanes(), None);
+        assert!(matches!(AoS::aligned(&d, dims.clone()).plan().addr(), AddrPlan::Affine(_)));
         assert_eq!(SoA::multi_blob(&d, dims.clone()).plan().chunk_lanes(), Some(12));
         assert_eq!(AoSoA::new(&d, dims.clone(), 4).plan().chunk_lanes(), Some(4));
         // One aliases every record: affine, never chunkable.

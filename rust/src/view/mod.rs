@@ -9,6 +9,7 @@ pub mod iter;
 pub mod one_record;
 pub mod scalar;
 pub mod shard;
+pub mod simd;
 pub mod view;
 pub mod virtual_record;
 pub mod virtual_view;
@@ -25,6 +26,7 @@ pub use shard::{
     pair_align, par_execute, par_execute_zip, par_map_shards, par_shards, plan_aliases,
     shard_align, shard_pair, shard_plan, shard_range, Shard, ShardKernel, ShardKernel2,
 };
+pub use simd::{simd_compiled, SimdCursorRead, SimdCursorWrite, SimdPath};
 pub use view::{alloc_view, alloc_view_with, View};
 pub use virtual_record::{RecordRef, RecordRefMut};
 pub use virtual_view::VirtualView;

@@ -1,0 +1,454 @@
+//! Runtime-dispatched SIMD execution layer — the "Updates on LLAMA"
+//! extension (arxiv 2302.08251) over this crate's compiled plans.
+//!
+//! Three pieces, all usable with or without the `simd` cargo feature:
+//!
+//! * [`SimdPath`] + [`detect`]: which instruction set the vector
+//!   kernels dispatch to on this build/host. Without `--features simd`
+//!   (or off x86_64) the answer is always [`SimdPath::Scalar`], and
+//!   every `*_simd*` entry point in the crate runs the ordinary scalar
+//!   kernels — same results, bit for bit.
+//! * [`SimdCursorRead`] / [`SimdCursorWrite`]: lane-batch extensions
+//!   of [`CursorRead`] / [`CursorWrite`] that move `W` consecutive
+//!   records per call. The default implementation is `W` strided
+//!   scalar accesses — exactly the gather/scatter path that feeds
+//!   packed-AoS layouts into the vector kernels; dense SoA/AoSoA
+//!   cursors compile the same loop down to contiguous loads.
+//! * [`strided_run`] / [`strided_run_raw`]: the executor for
+//!   [`crate::copy::CopyOp::StridedRun`] — the AoS↔SoA transpose
+//!   inner loop — with element-size specializations (4/8-byte moves)
+//!   and an AVX2 gather fast path on [`SimdPath::Avx2`].
+//!
+//! # Dispatch
+//!
+//! ```text
+//!               ┌── feature "simd" off, or non-x86_64 ──► Scalar
+//! detect() ─────┤
+//!               └── x86_64 + feature "simd"
+//!                      ├── LLAMA_SIMD=scalar|sse2|avx2 (if usable)
+//!                      ├── is_x86_feature_detected!("avx2") ─► Avx2
+//!                      └── otherwise (baseline x86_64)     ─► Sse2
+//! ```
+//!
+//! # Bit identity
+//!
+//! Vector kernels in this crate batch *across* records (the nbody
+//! i-particles, lbm cells along z, copy elements) and keep each
+//! record's arithmetic in the exact scalar operation order, using only
+//! IEEE-exact per-lane operations (add/sub/mul/div/sqrt, no FMA
+//! contraction). Partial tail batches — record counts not divisible by
+//! the lane width — run the scalar per-record path. Both together make
+//! every path produce bit-identical results, which
+//! `tests/prop_simd.rs` pins over the full mapping matrix.
+
+use super::cursor::{CursorRead, CursorWrite};
+use super::scalar::ScalarVal;
+
+/// The instruction set a vectorized kernel dispatches to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPath {
+    /// 256-bit AVX2: 8 × f32 / 4 × f64 lanes, integer gather.
+    Avx2,
+    /// 128-bit SSE2 (x86_64 baseline): 4 × f32 / 2 × f64 lanes.
+    Sse2,
+    /// The always-compiled scalar kernels (bit-identical by design).
+    Scalar,
+}
+
+impl SimdPath {
+    /// Short lowercase name, recorded verbatim in bench JSON rows so a
+    /// baseline documents which path actually executed.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdPath::Avx2 => "avx2",
+            SimdPath::Sse2 => "sse2",
+            SimdPath::Scalar => "scalar",
+        }
+    }
+
+    /// True when kernels dispatched on this path execute vector
+    /// instructions in this build on this host (always false for
+    /// [`SimdPath::Scalar`]).
+    pub fn is_vector(self) -> bool {
+        self != SimdPath::Scalar && available(self)
+    }
+}
+
+/// True when the crate was built with vector kernels compiled in
+/// (`--features simd` on an x86_64 target). When false, [`detect`]
+/// returns [`SimdPath::Scalar`] and the `*_simd*` entry points run the
+/// scalar kernels.
+pub const fn simd_compiled() -> bool {
+    cfg!(all(feature = "simd", target_arch = "x86_64"))
+}
+
+/// Whether `path` can actually execute on this build + host.
+fn available(path: SimdPath) -> bool {
+    match path {
+        SimdPath::Scalar => true,
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdPath::Sse2 => std::arch::is_x86_feature_detected!("sse2"),
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdPath::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        _ => false,
+    }
+}
+
+/// Every path usable on this build + host, best first. Always ends
+/// with [`SimdPath::Scalar`]; property tests iterate this to prove the
+/// paths bit-identical wherever they can run.
+pub fn available_paths() -> Vec<SimdPath> {
+    let mut out = Vec::with_capacity(3);
+    if available(SimdPath::Avx2) {
+        out.push(SimdPath::Avx2);
+    }
+    if available(SimdPath::Sse2) {
+        out.push(SimdPath::Sse2);
+    }
+    out.push(SimdPath::Scalar);
+    out
+}
+
+/// The best usable path for this build + host, cached after the first
+/// call. The `LLAMA_SIMD` env knob (`scalar`, `sse2`, `avx2`) forces a
+/// *usable* path downward for A/B runs; an unusable or unknown value
+/// is ignored.
+pub fn detect() -> SimdPath {
+    static PATH: std::sync::OnceLock<SimdPath> = std::sync::OnceLock::new();
+    *PATH.get_or_init(|| {
+        let best = *available_paths().first().expect("never empty");
+        match std::env::var("LLAMA_SIMD").ok().as_deref() {
+            Some("scalar") => SimdPath::Scalar,
+            Some("sse2") if available(SimdPath::Sse2) => SimdPath::Sse2,
+            Some("avx2") if available(SimdPath::Avx2) => SimdPath::Avx2,
+            _ => best,
+        }
+    })
+}
+
+/// Lane-batch read extension of [`CursorRead`]: one call reads the
+/// leaf values of `W` consecutive records. The default body is `W`
+/// strided scalar reads — the gather path that lets packed AoS (and
+/// any other injective layout) feed the same vector kernels as SoA;
+/// for dense cursors the compiler collapses it to contiguous loads.
+pub trait SimdCursorRead: CursorRead {
+    /// Read records `lin..lin + W` of this leaf.
+    ///
+    /// # Safety
+    /// `lin + W <= self.count()`, `W >= 1`, and `T` must match the
+    /// leaf's scalar type (same contract as [`CursorRead::read_at`]).
+    #[inline(always)]
+    unsafe fn read_batch<T: ScalarVal, const W: usize>(&self, lin: usize) -> [T; W] {
+        debug_assert!(W >= 1 && lin + W <= self.count());
+        let mut out = [self.read_at::<T>(lin); W];
+        for k in 1..W {
+            out[k] = self.read_at::<T>(lin + k);
+        }
+        out
+    }
+}
+
+impl<C: CursorRead> SimdCursorRead for C {}
+
+/// Lane-batch write extension of [`CursorWrite`]; scatter twin of
+/// [`SimdCursorRead::read_batch`].
+pub trait SimdCursorWrite: CursorWrite {
+    /// Write records `lin..lin + W` of this leaf.
+    ///
+    /// # Safety
+    /// `lin + W <= self.count()` and `T` must match the leaf's scalar
+    /// type (same contract as [`CursorWrite::write_at`]).
+    #[inline(always)]
+    unsafe fn write_batch<T: ScalarVal, const W: usize>(&self, lin: usize, v: [T; W]) {
+        debug_assert!(lin + W <= self.count());
+        for (k, x) in v.into_iter().enumerate() {
+            self.write_at::<T>(lin + k, x);
+        }
+    }
+}
+
+impl<C: CursorWrite> SimdCursorWrite for C {}
+
+/// Execute one [`crate::copy::CopyOp::StridedRun`] over byte slices —
+/// the bounds-checked site of [`crate::copy::CopyProgram::execute`].
+/// `count` elements of `elem` bytes move from `src_off + i*src_stride`
+/// to `dst_off + i*dst_stride`; the result is pure byte movement, so
+/// every path is trivially bit-identical.
+///
+/// # Panics
+/// If either strided range is out of bounds for its slice.
+#[allow(clippy::too_many_arguments)]
+pub fn strided_run(
+    path: SimdPath,
+    src: &[u8],
+    src_off: usize,
+    src_stride: usize,
+    dst: &mut [u8],
+    dst_off: usize,
+    dst_stride: usize,
+    elem: usize,
+    count: usize,
+) {
+    if count == 0 || elem == 0 {
+        return;
+    }
+    let s_end = src_off + (count - 1) * src_stride + elem;
+    let d_end = dst_off + (count - 1) * dst_stride + elem;
+    assert!(s_end <= src.len(), "strided src range {s_end} out of bounds {}", src.len());
+    assert!(d_end <= dst.len(), "strided dst range {d_end} out of bounds {}", dst.len());
+    // SAFETY: both strided ranges verified in bounds just above; the
+    // &/&mut borrows guarantee the regions do not overlap.
+    unsafe {
+        strided_run_raw(
+            path,
+            src.as_ptr().add(src_off),
+            src_stride,
+            dst.as_mut_ptr().add(dst_off),
+            dst_stride,
+            elem,
+            count,
+        );
+    }
+}
+
+/// Raw-pointer twin of [`strided_run`] for the sharded copy executor
+/// (which writes through a pre-validated raw destination).
+///
+/// Specializations: 4-byte elements move as `u32` (with an AVX2
+/// gather + contiguous store when the destination is dense), 8-byte
+/// elements as `u64`; anything else is a byte memcpy per element.
+///
+/// # Safety
+/// `src` must be readable and `dst` writable for
+/// `(count - 1) * stride + elem` bytes respectively, and the two
+/// regions must not overlap.
+pub unsafe fn strided_run_raw(
+    path: SimdPath,
+    src: *const u8,
+    src_stride: usize,
+    dst: *mut u8,
+    dst_stride: usize,
+    elem: usize,
+    count: usize,
+) {
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    let _ = path;
+    match elem {
+        4 => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            if path == SimdPath::Avx2 && count >= 8 && gather_offsets_fit(src_stride, count) {
+                return x86::strided_run_4_avx2(src, src_stride, dst, dst_stride, count);
+            }
+            for i in 0..count {
+                let v = (src.add(i * src_stride) as *const u32).read_unaligned();
+                (dst.add(i * dst_stride) as *mut u32).write_unaligned(v);
+            }
+        }
+        8 => {
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            if path == SimdPath::Avx2 && count >= 4 && gather_offsets_fit(src_stride, count) {
+                return x86::strided_run_8_avx2(src, src_stride, dst, dst_stride, count);
+            }
+            for i in 0..count {
+                let v = (src.add(i * src_stride) as *const u64).read_unaligned();
+                (dst.add(i * dst_stride) as *mut u64).write_unaligned(v);
+            }
+        }
+        _ => {
+            for i in 0..count {
+                std::ptr::copy_nonoverlapping(
+                    src.add(i * src_stride),
+                    dst.add(i * dst_stride),
+                    elem,
+                );
+            }
+        }
+    }
+}
+
+/// AVX2 gathers index with i32 *byte* offsets (scale 1): the whole
+/// source span must fit.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+fn gather_offsets_fit(src_stride: usize, count: usize) -> bool {
+    count.checked_mul(src_stride).is_some_and(|span| span <= i32::MAX as usize)
+}
+
+/// The `core::arch` kernels behind [`strided_run_raw`]. Only the
+/// *source* side gathers; stores use the vector register only when the
+/// destination is dense (`dst_stride == elem`) — AVX2 has no scatter.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    /// 8 strided u32 elements per iteration via `vpgatherdd`.
+    ///
+    /// # Safety
+    /// AVX2 available; bounds as in [`super::strided_run_raw`]; all
+    /// source byte offsets fit in `i32` (checked by the caller).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn strided_run_4_avx2(
+        src: *const u8,
+        src_stride: usize,
+        dst: *mut u8,
+        dst_stride: usize,
+        count: usize,
+    ) {
+        let mut i = 0;
+        if dst_stride == 4 {
+            let s = src_stride as i32;
+            let mut off = _mm256_setr_epi32(0, s, 2 * s, 3 * s, 4 * s, 5 * s, 6 * s, 7 * s);
+            let step = _mm256_set1_epi32(8 * s);
+            while i + 8 <= count {
+                let v = _mm256_i32gather_epi32::<1>(src as *const i32, off);
+                _mm256_storeu_si256(dst.add(i * 4) as *mut __m256i, v);
+                off = _mm256_add_epi32(off, step);
+                i += 8;
+            }
+        }
+        while i < count {
+            let v = (src.add(i * src_stride) as *const u32).read_unaligned();
+            (dst.add(i * dst_stride) as *mut u32).write_unaligned(v);
+            i += 1;
+        }
+    }
+
+    /// 4 strided u64 elements per iteration via `vpgatherdq`.
+    ///
+    /// # Safety
+    /// Same contract as [`strided_run_4_avx2`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn strided_run_8_avx2(
+        src: *const u8,
+        src_stride: usize,
+        dst: *mut u8,
+        dst_stride: usize,
+        count: usize,
+    ) {
+        let mut i = 0;
+        if dst_stride == 8 {
+            let s = src_stride as i32;
+            let mut off = _mm_setr_epi32(0, s, 2 * s, 3 * s);
+            let step = _mm_set1_epi32(4 * s);
+            while i + 4 <= count {
+                let v = _mm256_i32gather_epi64::<1>(src as *const i64, off);
+                _mm256_storeu_si256(dst.add(i * 8) as *mut __m256i, v);
+                off = _mm_add_epi32(off, step);
+                i += 4;
+            }
+        }
+        while i < count {
+            let v = (src.add(i * src_stride) as *const u64).read_unaligned();
+            (dst.add(i * dst_stride) as *mut u64).write_unaligned(v);
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::{AoS, AoSoA};
+    use crate::view::alloc_view;
+    use crate::view::cursor::{PlanCursors, PlanCursorsMut};
+    use crate::workloads::nbody::particle_dim;
+    use crate::workloads::rng::SplitMix64;
+
+    #[test]
+    fn detection_is_consistent() {
+        let paths = available_paths();
+        assert_eq!(*paths.last().unwrap(), SimdPath::Scalar);
+        assert!(paths.contains(&detect()));
+        assert!(!SimdPath::Scalar.is_vector());
+        if !simd_compiled() {
+            assert_eq!(paths, vec![SimdPath::Scalar]);
+            assert_eq!(detect(), SimdPath::Scalar);
+        }
+        let names: Vec<_> = paths.iter().map(|p| p.name()).collect();
+        assert_eq!(names.len(), {
+            let mut u = names.clone();
+            u.dedup();
+            u.len()
+        });
+    }
+
+    #[test]
+    fn strided_run_matches_naive_for_every_path_and_shape() {
+        let mut rng = SplitMix64::new(42);
+        for path in available_paths() {
+            for &elem in &[1usize, 3, 4, 8, 12] {
+                for &(ss, ds) in &[
+                    (elem, elem),
+                    (elem + 1, elem),
+                    (elem, elem + 5),
+                    (3 * elem + 2, 2 * elem + 1),
+                ] {
+                    for &count in &[0usize, 1, 7, 8, 9, 33, 100] {
+                        let span = |stride: usize| 4 + count.saturating_sub(1) * stride + elem;
+                        let src: Vec<u8> =
+                            (0..span(ss)).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+                        let mut got = vec![0u8; span(ds)];
+                        let mut want = got.clone();
+                        strided_run(path, &src, 2, ss, &mut got, 3, ds, elem, count);
+                        for i in 0..count {
+                            let so = 2 + i * ss;
+                            let doff = 3 + i * ds;
+                            want[doff..doff + elem].copy_from_slice(&src[so..so + elem]);
+                        }
+                        assert_eq!(got, want, "path {path:?} elem {elem} s {ss}/{ds} n {count}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn strided_run_rejects_out_of_bounds() {
+        let src = vec![0u8; 16];
+        let mut dst = vec![0u8; 8];
+        strided_run(SimdPath::Scalar, &src, 0, 4, &mut dst, 0, 4, 4, 3);
+    }
+
+    #[test]
+    fn batch_cursors_roundtrip_on_affine_and_piecewise_plans() {
+        let d = particle_dim();
+        for count in [16usize, 37] {
+            // Packed AoS (affine, strided leaves — the gather path) and
+            // AoSoA-4 (piecewise, batches crossing lane blocks).
+            {
+                let dims = crate::array::ArrayDims::linear(count);
+                let mut v = alloc_view(AoS::packed(&d, dims));
+                for lin in 0..count {
+                    v.set::<f32>(lin, 0, lin as f32 + 0.25);
+                }
+                let PlanCursorsMut::Affine(cur) = v.plan_cursors_mut() else {
+                    panic!("packed AoS is affine")
+                };
+                // SAFETY: lins below stay within count.
+                unsafe {
+                    let got: [f32; 4] = cur[0].read_batch(count - 4);
+                    for (k, g) in got.iter().enumerate() {
+                        assert_eq!(*g, cur[0].as_read().read::<f32>(count - 4 + k));
+                    }
+                    cur[0].write_batch(1, [9.0f32, 8.0, 7.0, 6.0]);
+                }
+                assert_eq!(v.get::<f32>(2, 0), 8.0);
+            }
+            {
+                let dims = crate::array::ArrayDims::linear(count);
+                let mut v = alloc_view(AoSoA::new(&d, dims, 4));
+                for lin in 0..count {
+                    v.set::<f32>(lin, 0, 100.0 + lin as f32);
+                }
+                let PlanCursors::Piecewise(cur) = v.plan_cursors() else {
+                    panic!("AoSoA is piecewise")
+                };
+                // SAFETY: 2 + 4 <= count; the batch spans two lane
+                // blocks, exercising the strided default path.
+                let got: [f32; 4] = unsafe { cur[0].read_batch(2) };
+                assert_eq!(got, [102.0, 103.0, 104.0, 105.0]);
+            }
+        }
+    }
+}

@@ -7,6 +7,7 @@ use crate::mapping::Mapping;
 use crate::view::adapt::AdaptiveKernel2;
 use crate::view::cursor::{CursorRead, CursorWrite};
 use crate::view::shard::{par_execute_zip, Shard, ShardKernel2};
+use crate::view::simd::{detect, SimdPath};
 use crate::view::View;
 
 /// The stream-collide step as an adaptive-engine kernel
@@ -102,47 +103,70 @@ unsafe fn step_slab_cursors<R: CursorRead, W: CursorWrite>(
     for x in x0..x1 {
         for y in 0..ny {
             for z in 0..nz {
-                let lin = (x * ny + y) * nz + z;
-                let flags = src[FLAGS].read_at::<f64>(lin);
-                if flags == OBSTACLE {
-                    for i in 0..Q {
-                        dst[i].write_at::<f64>(lin, src[i].read_at::<f64>(lin));
-                    }
-                    dst[FLAGS].write_at::<f64>(lin, flags);
-                    continue;
-                }
-                let mut f = [0.0f64; Q];
-                let mut rho = 0.0;
-                let mut u = [0.0f64; 3];
-                for i in 0..Q {
-                    let sx = wrap(x as i64 - E[i][0] as i64, nxi);
-                    let sy = wrap(y as i64 - E[i][1] as i64, nyi);
-                    let sz = wrap(z as i64 - E[i][2] as i64, nzi);
-                    let slin = (sx * ny + sy) * nz + sz;
-                    let fi = if src[FLAGS].read_at::<f64>(slin) == OBSTACLE {
-                        src[OPP[i]].read_at::<f64>(lin)
-                    } else {
-                        src[i].read_at::<f64>(slin)
-                    };
-                    f[i] = fi;
-                    rho += fi;
-                    for d in 0..3 {
-                        u[d] += fi * E[i][d] as f64;
-                    }
-                }
-                let inv_rho = 1.0 / rho;
-                for d in &mut u {
-                    *d *= inv_rho;
-                }
-                u[0] += ACCEL;
-                for i in 0..Q {
-                    let feq = equilibrium(i, rho, u);
-                    dst[i].write_at::<f64>(lin, f[i] + OMEGA * (feq - f[i]));
-                }
-                dst[FLAGS].write_at::<f64>(lin, flags);
+                step_cell_cursors(src, dst, x, y, z, ny, nz, nxi, nyi, nzi);
             }
         }
     }
+}
+
+/// One cell of the cursor stream-collide kernel, extracted so the
+/// scalar slab loop and the SIMD driver's divergent cells (batches
+/// touching obstacles, z-tails) share a single body.
+///
+/// # Safety
+/// Cursors cover `0..nx*ny*nz` and `(x, y, z)` is in range.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+unsafe fn step_cell_cursors<R: CursorRead, W: CursorWrite>(
+    src: &[R],
+    dst: &[W],
+    x: usize,
+    y: usize,
+    z: usize,
+    ny: usize,
+    nz: usize,
+    nxi: i64,
+    nyi: i64,
+    nzi: i64,
+) {
+    let lin = (x * ny + y) * nz + z;
+    let flags = src[FLAGS].read_at::<f64>(lin);
+    if flags == OBSTACLE {
+        for i in 0..Q {
+            dst[i].write_at::<f64>(lin, src[i].read_at::<f64>(lin));
+        }
+        dst[FLAGS].write_at::<f64>(lin, flags);
+        return;
+    }
+    let mut f = [0.0f64; Q];
+    let mut rho = 0.0;
+    let mut u = [0.0f64; 3];
+    for i in 0..Q {
+        let sx = wrap(x as i64 - E[i][0] as i64, nxi);
+        let sy = wrap(y as i64 - E[i][1] as i64, nyi);
+        let sz = wrap(z as i64 - E[i][2] as i64, nzi);
+        let slin = (sx * ny + sy) * nz + sz;
+        let fi = if src[FLAGS].read_at::<f64>(slin) == OBSTACLE {
+            src[OPP[i]].read_at::<f64>(lin)
+        } else {
+            src[i].read_at::<f64>(slin)
+        };
+        f[i] = fi;
+        rho += fi;
+        for d in 0..3 {
+            u[d] += fi * E[i][d] as f64;
+        }
+    }
+    let inv_rho = 1.0 / rho;
+    for d in &mut u {
+        *d *= inv_rho;
+    }
+    u[0] += ACCEL;
+    for i in 0..Q {
+        let feq = equilibrium(i, rho, u);
+        dst[i].write_at::<f64>(lin, f[i] + OMEGA * (feq - f[i]));
+    }
+    dst[FLAGS].write_at::<f64>(lin, flags);
 }
 
 /// One stream-collide step over the x-slab `x0..x1`, pulling from `src`
@@ -319,6 +343,309 @@ fn step_parallel_generic<MS, MD, B>(
     });
 }
 
+/// Lane-batched slab driver (`simd` feature, x86_64): `B` z-consecutive
+/// cells advance together. `lin = (x*ny + y)*nz + z`, so the batch is
+/// linearly contiguous and batch reads/writes hit the cursors' fast
+/// block paths. The divergent parts — periodic wrap and the per-link
+/// bounce-back flag choice — stay scalar and fill one `[f64; B]` per
+/// direction; only the collision arithmetic runs through `collide`,
+/// whose lanes replay the exact scalar operation order. Batches that
+/// touch an obstacle cell and the `nz % B` z-tail run the per-cell
+/// scalar kernel, so the whole step is bit-identical to
+/// [`step_slab_cursors`].
+///
+/// # Safety
+/// Cursors cover `0..nx*ny*nz`; `collide`'s ISA must be available on
+/// this host; concurrent callers use disjoint slabs.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+unsafe fn step_slab_cursors_simd<R: CursorRead, Wr: CursorWrite, const B: usize>(
+    src: &[R],
+    dst: &[Wr],
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    x0: usize,
+    x1: usize,
+    collide: unsafe fn(&mut [[f64; B]; Q]),
+) {
+    use crate::view::simd::{SimdCursorRead, SimdCursorWrite};
+    let (nxi, nyi, nzi) = (nx as i64, ny as i64, nz as i64);
+    for x in x0..x1 {
+        for y in 0..ny {
+            let mut z = 0;
+            while z + B <= nz {
+                let lin0 = (x * ny + y) * nz + z;
+                let flags: [f64; B] = src[FLAGS].read_batch(lin0);
+                if flags.iter().any(|&fl| fl == OBSTACLE) {
+                    for k in 0..B {
+                        step_cell_cursors(src, dst, x, y, z + k, ny, nz, nxi, nyi, nzi);
+                    }
+                } else {
+                    let mut f = [[0.0f64; B]; Q];
+                    for (i, fi) in f.iter_mut().enumerate() {
+                        for (k, fk) in fi.iter_mut().enumerate() {
+                            let sx = wrap(x as i64 - E[i][0] as i64, nxi);
+                            let sy = wrap(y as i64 - E[i][1] as i64, nyi);
+                            let sz = wrap((z + k) as i64 - E[i][2] as i64, nzi);
+                            let slin = (sx * ny + sy) * nz + sz;
+                            *fk = if src[FLAGS].read_at::<f64>(slin) == OBSTACLE {
+                                src[OPP[i]].read_at::<f64>(lin0 + k)
+                            } else {
+                                src[i].read_at::<f64>(slin)
+                            };
+                        }
+                    }
+                    collide(&mut f);
+                    for (i, fi) in f.iter().enumerate() {
+                        dst[i].write_batch(lin0, *fi);
+                    }
+                    dst[FLAGS].write_batch(lin0, flags);
+                }
+                z += B;
+            }
+            while z < nz {
+                step_cell_cursors(src, dst, x, y, z, ny, nz, nxi, nyi, nzi);
+                z += 1;
+            }
+        }
+    }
+}
+
+/// Plain `unsafe fn` wrappers (no `#[target_feature]`) so the slab
+/// driver can take the collision kernels as ordinary function pointers;
+/// the dispatcher only selects them after runtime detection.
+///
+/// # Safety
+/// AVX2 must be available.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+unsafe fn collide4_avx2(f: &mut [[f64; 4]; Q]) {
+    x86::collide_block_avx2(f);
+}
+
+/// See [`collide4_avx2`].
+///
+/// # Safety
+/// SSE2 must be available (guaranteed on x86_64, dispatched anyway).
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+unsafe fn collide2_sse2(f: &mut [[f64; 2]; Q]) {
+    x86::collide_block_sse2(f);
+}
+
+/// Vectorized BGK collision kernels. Each lane replays the scalar
+/// collision bit for bit: rho/u accumulate in the same `i` order,
+/// `inv_rho` is the same `1.0 / rho` division, and the equilibrium
+/// polynomial uses the exact association of
+/// [`crate::workloads::lbm::equilibrium`]. `u2` is hoisted out of the
+/// direction loop — the scalar kernel recomputes the identical value
+/// per direction, so hoisting preserves bit-identity.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::{ACCEL, E, OMEGA, Q};
+    use crate::workloads::lbm::W;
+    use core::arch::x86_64::*;
+
+    /// Collide 4 f64 cells per call (AVX2).
+    ///
+    /// # Safety
+    /// AVX2 must be available on the executing CPU.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn collide_block_avx2(f: &mut [[f64; 4]; Q]) {
+        let mut rho = _mm256_setzero_pd();
+        let mut u = [_mm256_setzero_pd(); 3];
+        for (i, fi) in f.iter().enumerate() {
+            let v = _mm256_loadu_pd(fi.as_ptr());
+            rho = _mm256_add_pd(rho, v);
+            for (d, ud) in u.iter_mut().enumerate() {
+                *ud = _mm256_add_pd(*ud, _mm256_mul_pd(v, _mm256_set1_pd(E[i][d] as f64)));
+            }
+        }
+        let inv_rho = _mm256_div_pd(_mm256_set1_pd(1.0), rho);
+        for ud in &mut u {
+            *ud = _mm256_mul_pd(*ud, inv_rho);
+        }
+        u[0] = _mm256_add_pd(u[0], _mm256_set1_pd(ACCEL));
+        let u2 = _mm256_add_pd(
+            _mm256_add_pd(_mm256_mul_pd(u[0], u[0]), _mm256_mul_pd(u[1], u[1])),
+            _mm256_mul_pd(u[2], u[2]),
+        );
+        for (i, fi) in f.iter_mut().enumerate() {
+            let v = _mm256_loadu_pd(fi.as_ptr());
+            let eu = _mm256_add_pd(
+                _mm256_add_pd(
+                    _mm256_mul_pd(_mm256_set1_pd(E[i][0] as f64), u[0]),
+                    _mm256_mul_pd(_mm256_set1_pd(E[i][1] as f64), u[1]),
+                ),
+                _mm256_mul_pd(_mm256_set1_pd(E[i][2] as f64), u[2]),
+            );
+            // (1 + 3*eu + (4.5*eu)*eu) - 1.5*u2, associated exactly as
+            // the scalar `equilibrium`.
+            let inner = _mm256_sub_pd(
+                _mm256_add_pd(
+                    _mm256_add_pd(_mm256_set1_pd(1.0), _mm256_mul_pd(_mm256_set1_pd(3.0), eu)),
+                    _mm256_mul_pd(_mm256_mul_pd(_mm256_set1_pd(4.5), eu), eu),
+                ),
+                _mm256_mul_pd(_mm256_set1_pd(1.5), u2),
+            );
+            let feq = _mm256_mul_pd(_mm256_mul_pd(_mm256_set1_pd(W[i]), rho), inner);
+            let out = _mm256_add_pd(v, _mm256_mul_pd(_mm256_set1_pd(OMEGA), _mm256_sub_pd(feq, v)));
+            _mm256_storeu_pd(fi.as_mut_ptr(), out);
+        }
+    }
+
+    /// Collide 2 f64 cells per call (SSE2, baseline on x86_64).
+    ///
+    /// # Safety
+    /// SSE2 must be available (always true on x86_64).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn collide_block_sse2(f: &mut [[f64; 2]; Q]) {
+        let mut rho = _mm_setzero_pd();
+        let mut u = [_mm_setzero_pd(); 3];
+        for (i, fi) in f.iter().enumerate() {
+            let v = _mm_loadu_pd(fi.as_ptr());
+            rho = _mm_add_pd(rho, v);
+            for (d, ud) in u.iter_mut().enumerate() {
+                *ud = _mm_add_pd(*ud, _mm_mul_pd(v, _mm_set1_pd(E[i][d] as f64)));
+            }
+        }
+        let inv_rho = _mm_div_pd(_mm_set1_pd(1.0), rho);
+        for ud in &mut u {
+            *ud = _mm_mul_pd(*ud, inv_rho);
+        }
+        u[0] = _mm_add_pd(u[0], _mm_set1_pd(ACCEL));
+        let u2 = _mm_add_pd(
+            _mm_add_pd(_mm_mul_pd(u[0], u[0]), _mm_mul_pd(u[1], u[1])),
+            _mm_mul_pd(u[2], u[2]),
+        );
+        for (i, fi) in f.iter_mut().enumerate() {
+            let v = _mm_loadu_pd(fi.as_ptr());
+            let eu = _mm_add_pd(
+                _mm_add_pd(
+                    _mm_mul_pd(_mm_set1_pd(E[i][0] as f64), u[0]),
+                    _mm_mul_pd(_mm_set1_pd(E[i][1] as f64), u[1]),
+                ),
+                _mm_mul_pd(_mm_set1_pd(E[i][2] as f64), u[2]),
+            );
+            let inner = _mm_sub_pd(
+                _mm_add_pd(
+                    _mm_add_pd(_mm_set1_pd(1.0), _mm_mul_pd(_mm_set1_pd(3.0), eu)),
+                    _mm_mul_pd(_mm_mul_pd(_mm_set1_pd(4.5), eu), eu),
+                ),
+                _mm_mul_pd(_mm_set1_pd(1.5), u2),
+            );
+            let feq = _mm_mul_pd(_mm_mul_pd(_mm_set1_pd(W[i]), rho), inner);
+            let out = _mm_add_pd(v, _mm_mul_pd(_mm_set1_pd(OMEGA), _mm_sub_pd(feq, v)));
+            _mm_storeu_pd(fi.as_mut_ptr(), out);
+        }
+    }
+}
+
+/// [`StepKernel`] twin that routes each shard to the selected SIMD
+/// slab driver (or the scalar one for [`SimdPath::Scalar`] / non-SIMD
+/// builds).
+struct SimdStepKernel {
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    path: SimdPath,
+}
+
+impl ShardKernel2 for SimdStepKernel {
+    fn run<R: CursorRead, W: CursorWrite>(&self, src: &[R], dst: &[W], s: Shard) {
+        let plane = self.ny * self.nz;
+        debug_assert!(s.start % plane == 0, "shard start {} splits an x-slab", s.start);
+        let (x0, x1) = (s.start / plane, s.end.div_ceil(plane));
+        // SAFETY (all arms): cursors were validated over the full range
+        // at extraction; shards are disjoint; the vector arms only run
+        // when the path was detected usable (callers sanitize `path`).
+        match self.path {
+            SimdPath::Scalar => unsafe {
+                step_slab_cursors(src, dst, self.nx, self.ny, self.nz, x0, x1)
+            },
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            SimdPath::Avx2 => unsafe {
+                step_slab_cursors_simd::<_, _, 4>(
+                    src,
+                    dst,
+                    self.nx,
+                    self.ny,
+                    self.nz,
+                    x0,
+                    x1,
+                    collide4_avx2,
+                )
+            },
+            #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+            SimdPath::Sse2 => unsafe {
+                step_slab_cursors_simd::<_, _, 2>(
+                    src,
+                    dst,
+                    self.nx,
+                    self.ny,
+                    self.nz,
+                    x0,
+                    x1,
+                    collide2_sse2,
+                )
+            },
+            #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+            SimdPath::Avx2 | SimdPath::Sse2 => unsafe {
+                step_slab_cursors(src, dst, self.nx, self.ny, self.nz, x0, x1)
+            },
+        }
+    }
+}
+
+/// [`step`] on the best available SIMD path
+/// ([`crate::view::simd::detect`]). Bit-identical to [`step`]: lanes
+/// replay the exact scalar operation order, and obstacle batches plus
+/// z-tails run the scalar per-cell kernel.
+pub fn step_simd<MS, MD, B>(src: &View<MS, B>, dst: &mut View<MD, B>)
+where
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut + Sync,
+{
+    step_simd_parallel_with(src, dst, 1, detect());
+}
+
+/// [`step_parallel`] on the best available SIMD path: x-slab shards are
+/// distributed over `threads` scoped workers, each running the
+/// vectorized slab driver.
+pub fn step_simd_parallel<MS, MD, B>(src: &View<MS, B>, dst: &mut View<MD, B>, threads: usize)
+where
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut + Sync,
+{
+    step_simd_parallel_with(src, dst, threads, detect());
+}
+
+/// [`step_parallel`] on an explicit [`SimdPath`] (benchmark rows pin
+/// the path; tests sweep every available one). Safe for any `path`
+/// value: paths that are not usable on this build/host fall back to
+/// [`SimdPath::Scalar`], and generic plans (instrumented/curve layouts)
+/// take the scalar accessor path regardless of `path`.
+pub fn step_simd_parallel_with<MS, MD, B>(
+    src: &View<MS, B>,
+    dst: &mut View<MD, B>,
+    threads: usize,
+    path: SimdPath,
+) where
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut + Sync,
+{
+    let path = if path.is_vector() { path } else { SimdPath::Scalar };
+    let d = src.mapping().dims().extents();
+    let (nx, ny, nz) = (d[0], d[1], d[2]);
+    let threads = threads.max(1).min(nx.max(1));
+    if par_execute_zip(src, dst, threads, ny * nz, &SimdStepKernel { nx, ny, nz, path }) {
+        return;
+    }
+    step_parallel(src, dst, threads);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -448,6 +775,45 @@ mod tests {
         step(&a, &mut b);
         let m1 = total_mass(&b) - (0..Q).map(|i| b.get::<f64>(1, i)).sum::<f64>();
         assert!((m0 - m1).abs() < 1e-12, "fluid mass {m0} -> {m1}");
+    }
+
+    #[test]
+    fn simd_paths_are_bit_identical_to_scalar() {
+        // nz = 6: AVX2 runs 4-cell batches plus a 2-cell z-tail, SSE2
+        // divides evenly; the sphere puts obstacle cells in some
+        // batches, exercising the per-cell fallback inside a batch.
+        let geo = Geometry::channel_with_sphere(6, 5, 6, 3);
+        let d = cell_dim();
+        fn check<M: Mapping>(make: impl Fn() -> M, geo: &Geometry, name: &str) {
+            let mut a = alloc_view(make());
+            let mut b = alloc_view(make());
+            init(&mut a, geo);
+            init(&mut b, geo);
+            for _ in 0..3 {
+                step(&a, &mut b);
+                std::mem::swap(&mut a, &mut b);
+            }
+            for path in crate::view::simd::available_paths() {
+                for threads in [1usize, 3] {
+                    let mut sa = alloc_view(make());
+                    let mut sb = alloc_view(make());
+                    init(&mut sa, geo);
+                    init(&mut sb, geo);
+                    for _ in 0..3 {
+                        step_simd_parallel_with(&sa, &mut sb, threads, path);
+                        std::mem::swap(&mut sa, &mut sb);
+                    }
+                    assert_eq!(
+                        a.blobs(),
+                        sa.blobs(),
+                        "{name}: path {path:?} x {threads} threads differs from scalar"
+                    );
+                }
+            }
+        }
+        check(|| AoS::packed(&d, geo.dims.clone()), &geo, "AoS packed");
+        check(|| SoA::multi_blob(&d, geo.dims.clone()), &geo, "SoA MB");
+        check(|| AoSoA::new(&d, geo.dims.clone(), 8), &geo, "AoSoA-8");
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::mapping::Mapping;
 use crate::view::adapt::AdaptiveKernel;
 use crate::view::cursor::{CursorWrite, PiecewiseCursorMut};
 use crate::view::shard::{par_execute, Shard, ShardKernel};
+use crate::view::simd::{detect, SimdPath};
 use crate::view::View;
 
 /// The update phase as an adaptive-engine kernel
@@ -486,6 +487,380 @@ fn mv_cursors<C: CursorWrite>(cur: &[C], start: usize, end: usize) {
     }
 }
 
+/// Shard-wise lane-batch update kernel ([`crate::view::simd`]): one
+/// uniform cursor body for every plan shape — batches gather/scatter
+/// through [`crate::view::simd::SimdCursorRead`], which is strided
+/// scalar access for packed AoS and contiguous loads for SoA/AoSoA.
+struct SimdUpdateKernel {
+    n: usize,
+    path: SimdPath,
+}
+
+impl ShardKernel for SimdUpdateKernel {
+    fn run<C: CursorWrite>(&self, cur: &[C], s: Shard) {
+        update_cursors_simd(cur, self.n, s.start, s.end, self.path);
+    }
+}
+
+/// Shard-wise lane-batch move kernel; see [`SimdUpdateKernel`].
+struct SimdMoveKernel {
+    path: SimdPath,
+}
+
+impl ShardKernel for SimdMoveKernel {
+    fn run<C: CursorWrite>(&self, cur: &[C], s: Shard) {
+        mv_cursors_simd(cur, s.start, s.end, self.path);
+    }
+}
+
+/// [`update`] on the best available SIMD path (see
+/// [`crate::view::simd::detect`]); serial. Bit-identical to [`update`]
+/// on every layout: lanes run the exact scalar `pp_interaction`
+/// sequence and partial tail batches fall back to the scalar kernel.
+pub fn update_simd<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
+    update_simd_parallel_with(view, 1, detect());
+}
+
+/// [`update_parallel`] on the best available SIMD path.
+pub fn update_simd_parallel<M: Mapping, B: BlobMut>(view: &mut View<M, B>, threads: usize) {
+    update_simd_parallel_with(view, threads, detect());
+}
+
+/// Explicit-path lane-batch update (benches and the bit-identity
+/// property tests pin the path). A `path` that cannot execute on this
+/// build/host — e.g. [`SimdPath::Avx2`] without `--features simd`, or
+/// on a non-AVX2 machine — runs [`SimdPath::Scalar`] instead, so this
+/// entry point is safe everywhere. Generic plans (instrumented/curve
+/// layouts) have no closed-form cursors to batch and run the scalar
+/// accessor path on every `path`.
+pub fn update_simd_parallel_with<M: Mapping, B: BlobMut>(
+    view: &mut View<M, B>,
+    threads: usize,
+    path: SimdPath,
+) {
+    let path = if path.is_vector() { path } else { SimdPath::Scalar };
+    let n = view.count();
+    if par_execute(view, threads, &SimdUpdateKernel { n, path }) {
+        return;
+    }
+    update_parallel(view, threads);
+}
+
+/// [`mv`] on the best available SIMD path; serial and bit-identical.
+pub fn mv_simd<M: Mapping, B: BlobMut>(view: &mut View<M, B>) {
+    mv_simd_parallel_with(view, 1, detect());
+}
+
+/// [`mv_parallel`] on the best available SIMD path.
+pub fn mv_simd_parallel<M: Mapping, B: BlobMut>(view: &mut View<M, B>, threads: usize) {
+    mv_simd_parallel_with(view, threads, detect());
+}
+
+/// Explicit-path lane-batch move; same path-sanitizing and fallback
+/// contract as [`update_simd_parallel_with`].
+pub fn mv_simd_parallel_with<M: Mapping, B: BlobMut>(
+    view: &mut View<M, B>,
+    threads: usize,
+    path: SimdPath,
+) {
+    let path = if path.is_vector() { path } else { SimdPath::Scalar };
+    if par_execute(view, threads, &SimdMoveKernel { path }) {
+        return;
+    }
+    mv_parallel(view, threads);
+}
+
+/// Path dispatch for the update kernel. The vector arms only exist
+/// when the `simd` feature targets x86_64; everywhere else every path
+/// resolves to the scalar kernel.
+fn update_cursors_simd<C: CursorWrite>(cur: &[C], n: usize, start: usize, end: usize, p: SimdPath) {
+    match p {
+        SimdPath::Scalar => update_cursors(cur, n, start, end),
+        // SAFETY (both arms): callers sanitize `p` through
+        // `SimdPath::is_vector`, so the ISA is present; cursors cover
+        // `0..n` (par_execute contract).
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdPath::Avx2 => unsafe { simd_x86::update_shard_avx2(cur, n, start, end) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdPath::Sse2 => unsafe { simd_x86::update_shard_sse2(cur, n, start, end) },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        SimdPath::Avx2 | SimdPath::Sse2 => update_cursors(cur, n, start, end),
+    }
+}
+
+/// Path dispatch for the move kernel; see [`update_cursors_simd`].
+fn mv_cursors_simd<C: CursorWrite>(cur: &[C], start: usize, end: usize, p: SimdPath) {
+    match p {
+        SimdPath::Scalar => mv_cursors(cur, start, end),
+        // SAFETY (both arms): `p` sanitized via `is_vector`; cursors
+        // cover the shard range.
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdPath::Avx2 => unsafe { simd_x86::mv_shard_avx2(cur, start, end) },
+        #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+        SimdPath::Sse2 => unsafe { simd_x86::mv_shard_sse2(cur, start, end) },
+        #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+        SimdPath::Avx2 | SimdPath::Sse2 => mv_cursors(cur, start, end),
+    }
+}
+
+/// The `core::arch` lane-batch kernels (compiled only with the `simd`
+/// feature on x86_64). Batching is across i-records: each lane runs
+/// the exact scalar `pp_interaction` operation sequence with the
+/// j-record broadcast, using only IEEE-exact per-lane ops (sub, mul,
+/// add, div, sqrt — no FMA contraction), so every lane reproduces the
+/// scalar kernel bit for bit. Tail batches (`(end - start) % W != 0`)
+/// run the scalar cursor kernel, which is value-identical per record.
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod simd_x86 {
+    use super::{mv_cursors, update_cursors};
+    use crate::view::cursor::CursorWrite;
+    use crate::view::simd::{SimdCursorRead, SimdCursorWrite};
+    use crate::workloads::nbody::{EPS2, MASS, POS_X, POS_Y, POS_Z, TIMESTEP, VEL_X, VEL_Y, VEL_Z};
+    use core::arch::x86_64::*;
+
+    /// Stage the j-stream once per shard: scalar cursor reads (the
+    /// gather path for strided layouts) into dense scratch. O(n) setup
+    /// against the O(n · shard_len) interaction loop; values are
+    /// copied bit-exactly, so staging cannot change results.
+    fn stage_j<C: CursorWrite>(cur: &[C], n: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        let mut zs = Vec::with_capacity(n);
+        let mut ms = Vec::with_capacity(n);
+        for j in 0..n {
+            // SAFETY: j < n == cursor count.
+            unsafe {
+                xs.push(cur[POS_X].read_at::<f32>(j));
+                ys.push(cur[POS_Y].read_at::<f32>(j));
+                zs.push(cur[POS_Z].read_at::<f32>(j));
+                ms.push(cur[MASS].read_at::<f32>(j));
+            }
+        }
+        (xs, ys, zs, ms)
+    }
+
+    /// AVX2 update over i-records `start..end`, 8 lanes per batch.
+    ///
+    /// # Safety
+    /// AVX2 must be available at runtime; cursors must cover `0..n`.
+    pub unsafe fn update_shard_avx2<C: CursorWrite>(cur: &[C], n: usize, start: usize, end: usize) {
+        let (xs, ys, zs, ms) = stage_j(cur, n);
+        let mut i = start;
+        while i + 8 <= end {
+            let pix: [f32; 8] = cur[POS_X].read_batch(i);
+            let piy: [f32; 8] = cur[POS_Y].read_batch(i);
+            let piz: [f32; 8] = cur[POS_Z].read_batch(i);
+            let mut vel = [
+                cur[VEL_X].read_batch::<f32, 8>(i),
+                cur[VEL_Y].read_batch::<f32, 8>(i),
+                cur[VEL_Z].read_batch::<f32, 8>(i),
+            ];
+            update_block_avx2(&pix, &piy, &piz, &mut vel, &xs, &ys, &zs, &ms);
+            cur[VEL_X].write_batch(i, vel[0]);
+            cur[VEL_Y].write_batch(i, vel[1]);
+            cur[VEL_Z].write_batch(i, vel[2]);
+            i += 8;
+        }
+        update_cursors(cur, n, i, end);
+    }
+
+    /// SSE2 update (x86_64 baseline), 4 lanes per batch.
+    ///
+    /// # Safety
+    /// Cursors must cover `0..n`.
+    pub unsafe fn update_shard_sse2<C: CursorWrite>(cur: &[C], n: usize, start: usize, end: usize) {
+        let (xs, ys, zs, ms) = stage_j(cur, n);
+        let mut i = start;
+        while i + 4 <= end {
+            let pix: [f32; 4] = cur[POS_X].read_batch(i);
+            let piy: [f32; 4] = cur[POS_Y].read_batch(i);
+            let piz: [f32; 4] = cur[POS_Z].read_batch(i);
+            let mut vel = [
+                cur[VEL_X].read_batch::<f32, 4>(i),
+                cur[VEL_Y].read_batch::<f32, 4>(i),
+                cur[VEL_Z].read_batch::<f32, 4>(i),
+            ];
+            update_block_sse2(&pix, &piy, &piz, &mut vel, &xs, &ys, &zs, &ms);
+            cur[VEL_X].write_batch(i, vel[0]);
+            cur[VEL_Y].write_batch(i, vel[1]);
+            cur[VEL_Z].write_batch(i, vel[2]);
+            i += 4;
+        }
+        update_cursors(cur, n, i, end);
+    }
+
+    /// One AVX2 i-batch against the whole j-stream; `pp_interaction`
+    /// op-for-op per lane.
+    ///
+    /// # Safety
+    /// AVX2 available; the four j-slices have equal length.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn update_block_avx2(
+        pix: &[f32; 8],
+        piy: &[f32; 8],
+        piz: &[f32; 8],
+        vel: &mut [[f32; 8]; 3],
+        xs: &[f32],
+        ys: &[f32],
+        zs: &[f32],
+        ms: &[f32],
+    ) {
+        let pix = _mm256_loadu_ps(pix.as_ptr());
+        let piy = _mm256_loadu_ps(piy.as_ptr());
+        let piz = _mm256_loadu_ps(piz.as_ptr());
+        let mut vx = _mm256_loadu_ps(vel[0].as_ptr());
+        let mut vy = _mm256_loadu_ps(vel[1].as_ptr());
+        let mut vz = _mm256_loadu_ps(vel[2].as_ptr());
+        let eps2 = _mm256_set1_ps(EPS2);
+        let one = _mm256_set1_ps(1.0);
+        let ts = _mm256_set1_ps(TIMESTEP);
+        for ((&xj, &yj), (&zj, &mj)) in xs.iter().zip(ys).zip(zs.iter().zip(ms)) {
+            let mut dx = _mm256_sub_ps(pix, _mm256_set1_ps(xj));
+            let mut dy = _mm256_sub_ps(piy, _mm256_set1_ps(yj));
+            let mut dz = _mm256_sub_ps(piz, _mm256_set1_ps(zj));
+            dx = _mm256_mul_ps(dx, dx);
+            dy = _mm256_mul_ps(dy, dy);
+            dz = _mm256_mul_ps(dz, dz);
+            let dist_sqr = _mm256_add_ps(_mm256_add_ps(_mm256_add_ps(eps2, dx), dy), dz);
+            let dist_sixth = _mm256_mul_ps(_mm256_mul_ps(dist_sqr, dist_sqr), dist_sqr);
+            let inv_dist_cube = _mm256_div_ps(one, _mm256_sqrt_ps(dist_sixth));
+            let sts = _mm256_mul_ps(_mm256_mul_ps(_mm256_set1_ps(mj), inv_dist_cube), ts);
+            vx = _mm256_add_ps(vx, _mm256_mul_ps(dx, sts));
+            vy = _mm256_add_ps(vy, _mm256_mul_ps(dy, sts));
+            vz = _mm256_add_ps(vz, _mm256_mul_ps(dz, sts));
+        }
+        _mm256_storeu_ps(vel[0].as_mut_ptr(), vx);
+        _mm256_storeu_ps(vel[1].as_mut_ptr(), vy);
+        _mm256_storeu_ps(vel[2].as_mut_ptr(), vz);
+    }
+
+    /// One SSE2 i-batch against the whole j-stream.
+    ///
+    /// # Safety
+    /// The four j-slices have equal length.
+    #[target_feature(enable = "sse2")]
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn update_block_sse2(
+        pix: &[f32; 4],
+        piy: &[f32; 4],
+        piz: &[f32; 4],
+        vel: &mut [[f32; 4]; 3],
+        xs: &[f32],
+        ys: &[f32],
+        zs: &[f32],
+        ms: &[f32],
+    ) {
+        let pix = _mm_loadu_ps(pix.as_ptr());
+        let piy = _mm_loadu_ps(piy.as_ptr());
+        let piz = _mm_loadu_ps(piz.as_ptr());
+        let mut vx = _mm_loadu_ps(vel[0].as_ptr());
+        let mut vy = _mm_loadu_ps(vel[1].as_ptr());
+        let mut vz = _mm_loadu_ps(vel[2].as_ptr());
+        let eps2 = _mm_set1_ps(EPS2);
+        let one = _mm_set1_ps(1.0);
+        let ts = _mm_set1_ps(TIMESTEP);
+        for ((&xj, &yj), (&zj, &mj)) in xs.iter().zip(ys).zip(zs.iter().zip(ms)) {
+            let mut dx = _mm_sub_ps(pix, _mm_set1_ps(xj));
+            let mut dy = _mm_sub_ps(piy, _mm_set1_ps(yj));
+            let mut dz = _mm_sub_ps(piz, _mm_set1_ps(zj));
+            dx = _mm_mul_ps(dx, dx);
+            dy = _mm_mul_ps(dy, dy);
+            dz = _mm_mul_ps(dz, dz);
+            let dist_sqr = _mm_add_ps(_mm_add_ps(_mm_add_ps(eps2, dx), dy), dz);
+            let dist_sixth = _mm_mul_ps(_mm_mul_ps(dist_sqr, dist_sqr), dist_sqr);
+            let inv_dist_cube = _mm_div_ps(one, _mm_sqrt_ps(dist_sixth));
+            let sts = _mm_mul_ps(_mm_mul_ps(_mm_set1_ps(mj), inv_dist_cube), ts);
+            vx = _mm_add_ps(vx, _mm_mul_ps(dx, sts));
+            vy = _mm_add_ps(vy, _mm_mul_ps(dy, sts));
+            vz = _mm_add_ps(vz, _mm_mul_ps(dz, sts));
+        }
+        _mm_storeu_ps(vel[0].as_mut_ptr(), vx);
+        _mm_storeu_ps(vel[1].as_mut_ptr(), vy);
+        _mm_storeu_ps(vel[2].as_mut_ptr(), vz);
+    }
+
+    /// AVX2 move over `start..end`, 8 lanes per batch.
+    ///
+    /// # Safety
+    /// AVX2 available; cursors cover the shard range.
+    pub unsafe fn mv_shard_avx2<C: CursorWrite>(cur: &[C], start: usize, end: usize) {
+        let mut i = start;
+        while i + 8 <= end {
+            let mut p = [
+                cur[POS_X].read_batch::<f32, 8>(i),
+                cur[POS_Y].read_batch::<f32, 8>(i),
+                cur[POS_Z].read_batch::<f32, 8>(i),
+            ];
+            let v = [
+                cur[VEL_X].read_batch::<f32, 8>(i),
+                cur[VEL_Y].read_batch::<f32, 8>(i),
+                cur[VEL_Z].read_batch::<f32, 8>(i),
+            ];
+            mv_block_avx2(&mut p, &v);
+            cur[POS_X].write_batch(i, p[0]);
+            cur[POS_Y].write_batch(i, p[1]);
+            cur[POS_Z].write_batch(i, p[2]);
+            i += 8;
+        }
+        mv_cursors(cur, i, end);
+    }
+
+    /// SSE2 move over `start..end`, 4 lanes per batch.
+    ///
+    /// # Safety
+    /// Cursors cover the shard range.
+    pub unsafe fn mv_shard_sse2<C: CursorWrite>(cur: &[C], start: usize, end: usize) {
+        let mut i = start;
+        while i + 4 <= end {
+            let mut p = [
+                cur[POS_X].read_batch::<f32, 4>(i),
+                cur[POS_Y].read_batch::<f32, 4>(i),
+                cur[POS_Z].read_batch::<f32, 4>(i),
+            ];
+            let v = [
+                cur[VEL_X].read_batch::<f32, 4>(i),
+                cur[VEL_Y].read_batch::<f32, 4>(i),
+                cur[VEL_Z].read_batch::<f32, 4>(i),
+            ];
+            mv_block_sse2(&mut p, &v);
+            cur[POS_X].write_batch(i, p[0]);
+            cur[POS_Y].write_batch(i, p[1]);
+            cur[POS_Z].write_batch(i, p[2]);
+            i += 4;
+        }
+        mv_cursors(cur, i, end);
+    }
+
+    /// `pos += vel * TIMESTEP` on 8 lanes.
+    ///
+    /// # Safety
+    /// AVX2 available.
+    #[target_feature(enable = "avx2")]
+    unsafe fn mv_block_avx2(p: &mut [[f32; 8]; 3], v: &[[f32; 8]; 3]) {
+        let ts = _mm256_set1_ps(TIMESTEP);
+        for (pd, vd) in p.iter_mut().zip(v) {
+            let x = _mm256_loadu_ps(pd.as_ptr());
+            let y = _mm256_loadu_ps(vd.as_ptr());
+            _mm256_storeu_ps(pd.as_mut_ptr(), _mm256_add_ps(x, _mm256_mul_ps(y, ts)));
+        }
+    }
+
+    /// `pos += vel * TIMESTEP` on 4 lanes.
+    ///
+    /// # Safety
+    /// SSE2 (x86_64 baseline).
+    #[target_feature(enable = "sse2")]
+    unsafe fn mv_block_sse2(p: &mut [[f32; 4]; 3], v: &[[f32; 4]; 3]) {
+        let ts = _mm_set1_ps(TIMESTEP);
+        for (pd, vd) in p.iter_mut().zip(v) {
+            let x = _mm_loadu_ps(pd.as_ptr());
+            let y = _mm_loadu_ps(vd.as_ptr());
+            _mm_storeu_ps(pd.as_mut_ptr(), _mm_add_ps(x, _mm_mul_ps(y, ts)));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -597,6 +972,53 @@ mod tests {
             assert_eq!(expect, run_par(SoA::multi_blob(&d, dims.clone()), &s, threads));
             assert_eq!(expect, run_par(AoSoA::new(&d, dims.clone(), 8), &s, threads));
             assert_eq!(expect, run_par(AoSoA::new(&d, dims.clone(), 16), &s, threads));
+        }
+    }
+
+    #[test]
+    fn simd_paths_are_bit_identical_to_scalar() {
+        // Every dispatchable path (always at least Scalar; Sse2/Avx2
+        // when built with --features simd on capable hosts) must
+        // reproduce the scalar kernels bit for bit, on every plan
+        // shape: strided affine (the packed-AoS gather path), dense
+        // affine, and piecewise with tail blocks (97 records).
+        let s = init_particles(97, 13);
+        let d = particle_dim();
+        let dims = ArrayDims::linear(97);
+        fn run_simd<M: Mapping>(
+            mapping: M,
+            s: &ParticleSoA,
+            threads: usize,
+            path: crate::view::simd::SimdPath,
+        ) -> ParticleSoA {
+            let mut v = alloc_view(mapping);
+            load_state(&mut v, s);
+            for _ in 0..2 {
+                update_simd_parallel_with(&mut v, threads, path);
+                mv_simd_parallel_with(&mut v, threads, path);
+            }
+            store_state(&v)
+        }
+        let expect = {
+            let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+            load_state(&mut v, &s);
+            for _ in 0..2 {
+                update(&mut v);
+                mv(&mut v);
+            }
+            store_state(&v)
+        };
+        for path in crate::view::simd::available_paths() {
+            for threads in [1usize, 3] {
+                let run = |m: &str, got: ParticleSoA| {
+                    assert_eq!(expect, got, "{m} path {path:?} threads {threads}");
+                };
+                run("aos_aligned", run_simd(AoS::aligned(&d, dims.clone()), &s, threads, path));
+                run("aos_packed", run_simd(AoS::packed(&d, dims.clone()), &s, threads, path));
+                run("soa_mb", run_simd(SoA::multi_blob(&d, dims.clone()), &s, threads, path));
+                run("aosoa4", run_simd(AoSoA::new(&d, dims.clone(), 4), &s, threads, path));
+                run("aosoa16", run_simd(AoSoA::new(&d, dims.clone(), 16), &s, threads, path));
+            }
         }
     }
 

@@ -1,0 +1,299 @@
+//! SIMD bit-identity suite (EXPERIMENTS.md §SIMD): every `*_simd*`
+//! entry point must produce **bit-identical** results to its scalar
+//! twin, on every [`SimdPath`] the host offers (always at least
+//! `Scalar`, so the suite is meaningful with or without `--features
+//! simd`), across the full 13-mapping layout matrix including
+//! tail-block extents, generic-plan fallbacks, and the packed-AoS
+//! gather path. The `One` mapping is excluded from the n-body kernel
+//! identity checks only: it aliases every record onto the same bytes,
+//! so the scalar kernel's sequential read-after-write dependence is
+//! semantically different from any batched schedule — batching it is
+//! not a supported operation, and the executor runs it through the
+//! scalar fallback anyway.
+
+mod prop_support;
+
+use llama::copy::program::{execute_parallel_with, shard_programs};
+use llama::prelude::*;
+use llama::view::simd::available_paths;
+use llama::workloads::lbm;
+use llama::workloads::nbody;
+use llama::workloads::nbody::llama_impl as nb;
+use prop_support::*;
+
+/// Explicit layout matrix (same as `prop_copy_matrix`); index 8 is the
+/// aliasing `One` mapping.
+const MATRIX: usize = 13;
+const ONE_IDX: usize = 8;
+
+fn nth(d: &RecordDim, dims: &ArrayDims, k: usize) -> Box<dyn Mapping> {
+    match k {
+        0 => Box::new(AoS::aligned(d, dims.clone())),
+        1 => Box::new(AoS::packed(d, dims.clone())),
+        2 => Box::new(SoA::single_blob(d, dims.clone())),
+        3 => Box::new(SoA::multi_blob(d, dims.clone())),
+        4 => Box::new(AoSoA::new(d, dims.clone(), 2)),
+        5 => Box::new(AoSoA::new(d, dims.clone(), 4)),
+        6 => Box::new(AoSoA::new(d, dims.clone(), 8)),
+        7 => Box::new(AoSoA::new(d, dims.clone(), 16)),
+        8 => Box::new(One::new(d, dims.clone())),
+        9 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        )),
+        10 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| AoSoA::new(sd, ad, 8),
+        )),
+        11 => Box::new(Byteswap::new(AoS::packed(d, dims.clone()))),
+        12 => Box::new(Heatmap::with_granularity(AoS::packed(d, dims.clone()), 4)),
+        _ => unreachable!("matrix has {MATRIX} entries"),
+    }
+}
+
+/// Every mapping in the matrix (minus the aliasing `One`), every
+/// available path, serial and sharded: two n-body `update`+`mv` rounds
+/// through the lane-batch kernels reproduce the scalar state bit for
+/// bit. 97 records: prime, so every lane width (4 and 8) and every
+/// AoSoA block size sees a tail. Mappings 11/12 (Byteswap, Heatmap)
+/// compile to generic plans and exercise the scalar accessor fallback
+/// under a vector `path`.
+#[test]
+fn prop_nbody_simd_bit_identical_across_matrix() {
+    let d = nbody::particle_dim();
+    for dims in [ArrayDims::linear(97), ArrayDims::from([5, 7])] {
+        let n = dims.count();
+        let state = nbody::init_particles(n, 41);
+        // Scalar reference, once per extent.
+        let mut reference = alloc_view(AoS::aligned(&d, dims.clone()));
+        nb::load_state(&mut reference, &state);
+        for _ in 0..2 {
+            nb::update(&mut reference);
+            nb::mv(&mut reference);
+        }
+        let expect = nb::store_state(&reference);
+        for k in (0..MATRIX).filter(|&k| k != ONE_IDX) {
+            for path in available_paths() {
+                for threads in [1usize, 3] {
+                    let mut v = alloc_view(nth(&d, &dims, k));
+                    nb::load_state(&mut v, &state);
+                    for _ in 0..2 {
+                        nb::update_simd_parallel_with(&mut v, threads, path);
+                        nb::mv_simd_parallel_with(&mut v, threads, path);
+                    }
+                    assert_eq!(
+                        nb::store_state(&v),
+                        expect,
+                        "mapping {k} ({}) path {path:?} threads {threads} ({dims:?})",
+                        v.mapping().mapping_name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// D3Q19 LBM: the lane-batched step reproduces the scalar step bit for
+/// bit on every available path — including obstacle-carrying batches,
+/// z-tails (nz = 6 vs AVX2's 4-lane blocks), and a generic-plan
+/// mapping (Heatmap) that must take the scalar accessor fallback under
+/// a vector `path`.
+#[test]
+fn prop_lbm_simd_bit_identical() {
+    fn check<M: Mapping>(make: impl Fn() -> M, geo: &lbm::Geometry, name: &str) {
+        let mut a = alloc_view(make());
+        let mut b = alloc_view(make());
+        lbm::step::init(&mut a, geo);
+        lbm::step::init(&mut b, geo);
+        for _ in 0..3 {
+            lbm::step::step(&a, &mut b);
+            std::mem::swap(&mut a, &mut b);
+        }
+        for path in available_paths() {
+            for threads in [1usize, 2] {
+                let mut sa = alloc_view(make());
+                let mut sb = alloc_view(make());
+                lbm::step::init(&mut sa, geo);
+                lbm::step::init(&mut sb, geo);
+                for _ in 0..3 {
+                    lbm::step::step_simd_parallel_with(&sa, &mut sb, threads, path);
+                    std::mem::swap(&mut sa, &mut sb);
+                }
+                assert_eq!(
+                    a.blobs(),
+                    sa.blobs(),
+                    "{name}: path {path:?} threads {threads} differs from scalar"
+                );
+            }
+        }
+    }
+    let geo = lbm::Geometry::channel_with_sphere(5, 4, 6, 7);
+    let d = lbm::cell_dim();
+    check(|| AoS::packed(&d, geo.dims.clone()), &geo, "AoS packed");
+    check(|| SoA::multi_blob(&d, geo.dims.clone()), &geo, "SoA MB");
+    check(|| AoSoA::new(&d, geo.dims.clone(), 8), &geo, "AoSoA-8");
+    check(
+        || Heatmap::with_granularity(AoS::packed(&d, geo.dims.clone()), 4),
+        &geo,
+        "Heatmap(AoS packed)",
+    );
+}
+
+/// `CopyProgram` execution with a pinned path is bit-identical to the
+/// naive oracle on **every** pair of the matrix that compiles at least
+/// one `StridedRun` — the ops the SIMD gather kernels execute — both
+/// through the serial slice site and the raw-pointer parallel site.
+#[test]
+fn prop_strided_run_simd_matches_oracle_across_matrix() {
+    let d = nbody::particle_dim();
+    for dims in [ArrayDims::linear(97), ArrayDims::from([5, 7])] {
+        for i in 0..MATRIX {
+            let mut src = alloc_view(nth(&d, &dims, i));
+            fill_sentinels(&mut src);
+            for j in 0..MATRIX {
+                let dst_m = nth(&d, &dims, j);
+                let prog = CopyProgram::compile(src.mapping(), dst_m.as_ref());
+                if !prog.ops().iter().any(|op| matches!(op, CopyOp::StridedRun { .. })) {
+                    continue;
+                }
+                let mut oracle = alloc_view(nth(&d, &dims, j));
+                copy_naive(&src, &mut oracle);
+                let label = format!(
+                    "{} -> {} ({dims:?})",
+                    src.mapping().mapping_name(),
+                    dst_m.mapping_name()
+                );
+                for path in available_paths() {
+                    let mut got = alloc_view(nth(&d, &dims, j));
+                    prog.execute_with_path(&src, &mut got, path);
+                    assert_eq!(got.blobs(), oracle.blobs(), "{label} serial {path:?}");
+                    let progs = shard_programs(src.mapping(), dst_m.as_ref(), 3);
+                    let mut par = alloc_view(nth(&d, &dims, j));
+                    execute_parallel_with(&progs, &src, &mut par, path);
+                    assert_eq!(par.blobs(), oracle.blobs(), "{label} parallel {path:?}");
+                }
+            }
+        }
+    }
+}
+
+/// The raw strided-run kernels against a byte-level oracle on random
+/// shapes: element sizes around the 4/8-byte gather specializations,
+/// counts straddling the vector-width thresholds, strides including
+/// dense (`stride == elem`, the contiguous store fast path) and gappy.
+#[test]
+fn prop_strided_run_raw_matches_bytewise_oracle() {
+    use llama::view::simd::strided_run;
+    use llama::workloads::rng::SplitMix64;
+    for seed in 0..cases() {
+        let mut rng = SplitMix64::new(seed ^ 0x51AD);
+        let elem = [1usize, 2, 3, 4, 8, 12, 16][rng.below(7)];
+        let count = [0usize, 1, 3, 4, 7, 8, 9, 31, 64, 129][rng.below(10)];
+        let src_stride = elem + rng.below(9);
+        let dst_stride = elem + rng.below(9);
+        let src_off = rng.below(5);
+        let dst_off = rng.below(5);
+        let src_len = src_off + count.saturating_sub(1) * src_stride + elem + rng.below(8);
+        let dst_len = dst_off + count.saturating_sub(1) * dst_stride + elem + rng.below(8);
+        let src: Vec<u8> = (0..src_len).map(|_| rng.next_u64() as u8).collect();
+        let mut expect = vec![0u8; dst_len];
+        for k in 0..count {
+            let so = src_off + k * src_stride;
+            let doff = dst_off + k * dst_stride;
+            expect[doff..doff + elem].copy_from_slice(&src[so..so + elem]);
+        }
+        for path in available_paths() {
+            let mut got = vec![0u8; dst_len];
+            strided_run(
+                path, &src, src_off, src_stride, &mut got, dst_off, dst_stride, elem, count,
+            );
+            assert_eq!(
+                got, expect,
+                "seed {seed}: elem {elem} count {count} strides {src_stride}/{dst_stride} {path:?}"
+            );
+        }
+    }
+}
+
+/// Batch cursor reads/writes agree with scalar cursor accesses on both
+/// cursor shapes — affine (packed AoS) and piecewise (AoSoA-4, where a
+/// 8-wide batch crosses two lane blocks) — at random positions
+/// including the extent's tail.
+#[test]
+fn prop_batch_cursors_match_scalar_accesses() {
+    use llama::view::simd::{SimdCursorRead, SimdCursorWrite};
+    use llama::view::PlanCursorsMut;
+    use llama::workloads::rng::SplitMix64;
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(37);
+
+    fn check_view<M: Mapping>(mut v: llama::view::View<M, Vec<u8>>, label: &str) {
+        // Finite, distinct per-record floats (sentinel bytes could
+        // decode to NaN, which never compares equal).
+        let n = v.count();
+        for i in 0..n {
+            v.set::<f32>(i, 0, 100.0 + i as f32);
+        }
+        let expected: Vec<f32> = (0..n).map(|i| v.get::<f32>(i, 0)).collect();
+        let mut rng = SplitMix64::new(0xBA7C);
+        match v.plan_cursors_mut() {
+            PlanCursorsMut::Affine(cur) => {
+                for _ in 0..64 {
+                    let lin = rng.below(n - 7);
+                    // SAFETY: lin + 7 < n over a validated view.
+                    let got: [f32; 8] = unsafe { cur[0].read_batch(lin) };
+                    assert_eq!(&got[..], &expected[lin..lin + 8], "{label} read lin {lin}");
+                    // Round-trip: write the batch back shifted, check
+                    // scalar reads see it, then restore.
+                    let bumped = got.map(|x| x + 1.0);
+                    unsafe { cur[0].write_batch(lin, bumped) };
+                    for k in 0..8 {
+                        let r: f32 = unsafe { cur[0].read_at(lin + k) };
+                        assert_eq!(r, expected[lin + k] + 1.0, "{label} write lin {lin}+{k}");
+                    }
+                    unsafe { cur[0].write_batch(lin, got) };
+                }
+            }
+            PlanCursorsMut::Piecewise(cur) => {
+                for _ in 0..64 {
+                    let lin = rng.below(n - 7);
+                    let got: [f32; 8] = unsafe { cur[0].read_batch(lin) };
+                    assert_eq!(&got[..], &expected[lin..lin + 8], "{label} read lin {lin}");
+                    let bumped = got.map(|x| x + 1.0);
+                    unsafe { cur[0].write_batch(lin, bumped) };
+                    for k in 0..8 {
+                        let r: f32 = unsafe { cur[0].read_at(lin + k) };
+                        assert_eq!(r, expected[lin + k] + 1.0, "{label} write lin {lin}+{k}");
+                    }
+                    unsafe { cur[0].write_batch(lin, got) };
+                }
+            }
+            PlanCursorsMut::Generic => panic!("{label}: expected a closed-form plan"),
+        }
+    }
+
+    check_view(alloc_view(AoS::packed(&d, dims.clone())), "affine (AoS packed)");
+    // Lane count 4 < batch width 8: every batch crosses lane blocks.
+    check_view(alloc_view(AoSoA::new(&d, dims.clone(), 4)), "piecewise (AoSoA-4)");
+}
+
+/// Detection sanity shared by benches: the compile-time gate and the
+/// runtime path agree, `Scalar` is always available, and the detected
+/// path is in the available set.
+#[test]
+fn detection_is_coherent() {
+    use llama::view::simd::{detect, simd_compiled, SimdPath};
+    let paths = available_paths();
+    assert_eq!(paths.last(), Some(&SimdPath::Scalar));
+    assert!(paths.contains(&detect()));
+    if !simd_compiled() {
+        assert_eq!(paths, vec![SimdPath::Scalar]);
+        assert_eq!(detect(), SimdPath::Scalar);
+    }
+}

@@ -22,6 +22,16 @@ impl<A: BlobAllocator> BlobAllocator for &A {
     }
 }
 
+/// And behind shared ownership: a serving fleet hands one allocator
+/// (typically a [`crate::blob::BlobPool`]) to many stores as an `Arc`.
+impl<A: BlobAllocator> BlobAllocator for std::sync::Arc<A> {
+    type Blob = A::Blob;
+
+    fn allocate(&self, size: usize) -> A::Blob {
+        A::allocate(self, size)
+    }
+}
+
 /// Default allocator: zero-initialized `Vec<u8>`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct VecAlloc;

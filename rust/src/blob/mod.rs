@@ -58,6 +58,18 @@ impl BlobMut for Box<[u8]> {
     }
 }
 
+/// Shared immutable blob ownership: a published serving generation
+/// hands the *same* blob bytes to every pinned reader by cloning the
+/// `Arc`, never the bytes ([`crate::view::serve::ReadGuard`]). Write
+/// access deliberately has no impl — a generation is frozen at
+/// publish.
+impl<B: Blob> Blob for std::sync::Arc<B> {
+    #[inline]
+    fn as_bytes(&self) -> &[u8] {
+        (**self).as_bytes()
+    }
+}
+
 impl<const N: usize> Blob for [u8; N] {
     #[inline]
     fn as_bytes(&self) -> &[u8] {

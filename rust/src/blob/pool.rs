@@ -326,6 +326,16 @@ impl<R: BlobRecycler> BlobRecycler for &R {
     }
 }
 
+impl<R: BlobRecycler> BlobRecycler for Arc<R> {
+    fn allocate_covered(&self, size: usize) -> Self::Blob {
+        R::allocate_covered(self, size)
+    }
+
+    fn pool_stats(&self) -> Option<PoolStats> {
+        R::pool_stats(self)
+    }
+}
+
 impl BlobRecycler for BlobPool {
     fn allocate_covered(&self, size: usize) -> PooledBytes {
         self.acquire(size, false)
@@ -457,6 +467,32 @@ mod tests {
         assert_eq!(keep.as_bytes().len(), 64);
         drop(keep);
         assert_eq!(pool.free_blocks(), 1);
+    }
+
+    /// Compile-time thread-safety contracts: the pool handle crosses
+    /// threads freely (shared free lists behind a mutex), and pooled
+    /// blobs — including the `Arc`'d form a published serving
+    /// generation shares with its readers — move and share too.
+    #[test]
+    fn pool_types_are_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<BlobPool>();
+        assert_send_sync::<PooledBytes>();
+        assert_send_sync::<AlignedBytes>();
+        assert_send_sync::<Arc<PooledBytes>>();
+        assert_send_sync::<Arc<BlobPool>>();
+        assert_send_sync::<Vec<Arc<PooledBytes>>>();
+    }
+
+    /// The `Arc<R>` recycler delegates to the shared pool, stats
+    /// included.
+    #[test]
+    fn arc_recycler_delegates_to_the_shared_pool() {
+        let pool = Arc::new(BlobPool::new());
+        drop(pool.allocate(64));
+        let b = pool.allocate_covered(64);
+        assert_eq!(pool.pool_stats().unwrap().zero_skips, 1);
+        assert_eq!(b.as_bytes().len(), 64);
     }
 
     #[test]

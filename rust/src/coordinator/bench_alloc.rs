@@ -66,19 +66,19 @@ fn migration_case(s: &Sizes, o: &Opts, t: &mut Table) {
 
     // Pooled: destinations from the pool, retired sources back to it.
     let pool = BlobPool::new();
-    let mut cache = ProgramCache::new();
+    let cache = ProgramCache::new();
     let mut v = alloc_view_with(aos.clone(), pool.clone());
     fill_particles(&mut v, s.migrate_n);
     // Warm-up round trip: primes both size classes and the program
     // cache (also what `bench`'s warmup iteration repeats).
-    let tmp = migrate_with(&mut cache, &v, soa.clone(), &pool, Some(1));
-    v = migrate_with(&mut cache, &tmp, aos.clone(), &pool, Some(1));
+    let tmp = migrate_with(&cache, &v, soa.clone(), &pool, Some(1));
+    v = migrate_with(&cache, &tmp, aos.clone(), &pool, Some(1));
     drop(tmp);
     let warm_misses = pool.stats().misses;
     let r = bench("alloc migration pooled", 1, o.iters, || {
         for _ in 0..s.rounds {
-            let mid = migrate_with(&mut cache, &v, soa.clone(), &pool, Some(1));
-            v = migrate_with(&mut cache, &mid, aos.clone(), &pool, Some(1));
+            let mid = migrate_with(&cache, &v, soa.clone(), &pool, Some(1));
+            v = migrate_with(&cache, &mid, aos.clone(), &pool, Some(1));
         }
         black_box(v.blobs());
     });
@@ -92,13 +92,13 @@ fn migration_case(s: &Sizes, o: &Opts, t: &mut Table) {
     ]);
 
     // Fresh-zeroed: every destination is a brand-new zeroed Vec.
-    let mut cache = ProgramCache::new();
+    let cache = ProgramCache::new();
     let mut v = alloc_view(aos.clone());
     fill_particles(&mut v, s.migrate_n);
     let r = bench("alloc migration fresh", 1, o.iters, || {
         for _ in 0..s.rounds {
-            let mid = migrate_with(&mut cache, &v, soa.clone(), &crate::blob::VecAlloc, Some(1));
-            v = migrate_with(&mut cache, &mid, aos.clone(), &crate::blob::VecAlloc, Some(1));
+            let mid = migrate_with(&cache, &v, soa.clone(), &crate::blob::VecAlloc, Some(1));
+            v = migrate_with(&cache, &mid, aos.clone(), &crate::blob::VecAlloc, Some(1));
         }
         black_box(v.blobs());
     });

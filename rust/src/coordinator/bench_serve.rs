@@ -1,0 +1,575 @@
+//! `bench-serve` driver: concurrent serving engines under mixed traffic
+//! with drifting hot fields, across many stores (EXPERIMENTS.md §Serve).
+//!
+//! Three engines serve the same request stream over the same fleet of
+//! stores:
+//!
+//! * **adaptive-serving** — [`ServingEngine`] stores under an
+//!   [`AdvisorPool`] budget: read requests pin a published generation
+//!   (O(1), never traced), while sampling, publishing and budgeted
+//!   migration run as maintenance *between* requests. Maintenance cost
+//!   lands in throughput (wall clock), never in request latency.
+//! * **stop-the-world** — a bare [`AdaptiveView`] per store: every read
+//!   request steps the engine directly, so requests pay for tracing
+//!   during sampling epochs and the unlucky request at an epoch end
+//!   pays for the whole migration copy — the classic fat tail.
+//! * **best-static** — a plain [`View`] per store in the best fixed
+//!   layout (fastest of AoS/SoA/AoSoA over the full stream): no
+//!   sampling, no migration, but also no adaptation as the hot fields
+//!   drift.
+//!
+//! The table reports throughput (`req_per_s`, includes maintenance)
+//! and request-latency percentiles (`p50_us` / `p99_us`, service time
+//! only). Traffic is mixed: every [`Sizes::write_every`]-th request is
+//! a point write; the rest are analytic scan queries whose hot fields
+//! drift every maintenance interval (the hep window advances one
+//! object; picframe alternates drift sweeps with deposits).
+
+use std::time::Instant;
+
+use super::bench::{black_box, Opts};
+use super::report::Table;
+use crate::array::ArrayDims;
+use crate::blob::{BlobMut, BlobPool};
+use crate::mapping::{AoS, AoSoA, Mapping, SoA};
+use crate::record::RecordInfo;
+use crate::view::adapt::{AdaptiveConfig, AdaptiveKernel, AdaptiveView};
+use crate::view::serve::{AdvisorPool, ServingEngine};
+use crate::view::{alloc_view_with, View};
+use crate::workloads::{hep, picframe};
+
+/// Problem sizes per workload (quick = CI smoke).
+struct Sizes {
+    /// Stores per fleet (each engine serves this many).
+    stores: usize,
+    /// Records per hep store.
+    hep_n: usize,
+    /// Records per picframe store.
+    pic_n: usize,
+    /// Requests per engine run.
+    requests: usize,
+    /// Requests between maintenance intervals (sampling + publish +
+    /// budget cycle; the hot set drifts here too).
+    epoch_every: usize,
+    /// Every k-th request is a point write (mixed traffic).
+    write_every: usize,
+    /// Migration budget per [`AdvisorPool::cycle`].
+    budget: usize,
+    /// Objects per hep window query.
+    window: usize,
+}
+
+fn sizes(o: &Opts) -> Sizes {
+    if o.quick {
+        Sizes {
+            stores: 4,
+            hep_n: o.n.unwrap_or(1 << 10),
+            pic_n: o.n.unwrap_or(picframe::FRAME_SIZE * 4),
+            requests: 240,
+            epoch_every: 30,
+            write_every: 7,
+            budget: 1,
+            window: 4,
+        }
+    } else {
+        Sizes {
+            stores: 8,
+            hep_n: o.n.unwrap_or(1 << 13),
+            pic_n: o.n.unwrap_or(picframe::FRAME_SIZE * 32),
+            requests: 2400,
+            epoch_every: 120,
+            write_every: 7,
+            budget: 2,
+            window: 4,
+        }
+    }
+}
+
+/// Engine defaults for the serving runs: short steady phases so the
+/// engines keep re-sampling as the hot fields drift.
+fn serve_cfg() -> AdaptiveConfig {
+    AdaptiveConfig { steady_steps: 4, ..Default::default() }
+}
+
+/// Nearest-rank percentile over pre-sorted samples.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One engine run's measurements.
+struct RunStats {
+    layout: String,
+    elapsed_s: f64,
+    lat_ns: Vec<f64>,
+    migrations: usize,
+}
+
+fn push_row(t: &mut Table, workload: &str, engine: &str, s: &Sizes, r: RunStats) {
+    let mut lat = r.lat_ns;
+    lat.sort_by(|a, b| a.total_cmp(b));
+    t.row(vec![
+        workload.to_string(),
+        engine.to_string(),
+        r.layout,
+        s.stores.to_string(),
+        format!("{:.0}", s.requests as f64 / r.elapsed_s),
+        format!("{:.1}", percentile(&lat, 0.50) / 1e3),
+        format!("{:.1}", percentile(&lat, 0.99) / 1e3),
+        r.migrations.to_string(),
+    ]);
+}
+
+// ---- hep: drifting window queries over event stores ----
+
+/// Fresh window-query kernel pinned to the driver's current window
+/// (`steps_per_window: 0` — the *driver* drifts the windows, identically
+/// for every engine).
+fn window_kernel(s: &Sizes, obj_lo: usize) -> hep::AdaptiveWindow {
+    hep::AdaptiveWindow {
+        obj_lo,
+        width: s.window,
+        min_quality: 128,
+        steps_per_window: 0,
+        step: 0,
+        total: 0.0,
+    }
+}
+
+fn hep_energy_leaves() -> Vec<usize> {
+    let info = RecordInfo::new(&hep::event_dim());
+    (0..20)
+        .map(|obj| info.leaf_by_path(&format!("obj{obj}_energy")).expect("energy leaf"))
+        .collect()
+}
+
+fn hep_adaptive_serving(s: &Sizes) -> RunStats {
+    let d = hep::event_dim();
+    let dims = ArrayDims::linear(s.hep_n);
+    let blobs = BlobPool::new();
+    let mut pool = AdvisorPool::<BlobPool>::new(s.budget);
+    for k in 0..s.stores {
+        let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), blobs.clone());
+        hep::generate_events(&mut v, 40 + k as u64);
+        pool.add(ServingEngine::with_recycler(v, serve_cfg(), blobs.clone()));
+    }
+    let energy = hep_energy_leaves();
+    let mut windows: Vec<usize> = (0..s.stores).map(|k| k % 20).collect();
+    let mut lat_ns = Vec::with_capacity(s.requests);
+    let mut total = 0.0f64;
+    let t0 = Instant::now();
+    for r in 0..s.requests {
+        let store = r % s.stores;
+        let eng = pool.store(store);
+        let t1 = Instant::now();
+        if r % s.write_every == s.write_every - 1 {
+            eng.write::<f32>(r % s.hep_n, energy[windows[store]], 123.0);
+        } else {
+            let g = eng.pin();
+            total += hep::energy_window(g.view(), windows[store], s.window, 128);
+        }
+        lat_ns.push(t1.elapsed().as_nanos() as f64);
+        if (r + 1) % s.epoch_every == 0 {
+            // Maintenance, off the request-latency path: sample the
+            // head with representative traffic, publish, then let the
+            // budget pick the fleet's best parked migrations.
+            for (k, eng) in pool.stores().iter().enumerate() {
+                let mut kernel = window_kernel(s, windows[k]);
+                eng.update(&mut kernel);
+                eng.publish();
+            }
+            pool.cycle();
+            for w in &mut windows {
+                *w = (*w + 1) % 20;
+            }
+        }
+    }
+    black_box(total);
+    RunStats {
+        layout: pool.store(0).mapping_name(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        lat_ns,
+        migrations: pool.stores().iter().map(|e| e.migrations()).sum(),
+    }
+}
+
+fn hep_stop_the_world(s: &Sizes) -> RunStats {
+    let d = hep::event_dim();
+    let dims = ArrayDims::linear(s.hep_n);
+    let blobs = BlobPool::new();
+    let mut stores: Vec<AdaptiveView<BlobPool>> = (0..s.stores)
+        .map(|k| {
+            let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), blobs.clone());
+            hep::generate_events(&mut v, 40 + k as u64);
+            AdaptiveView::with_recycler(v, serve_cfg(), blobs.clone())
+        })
+        .collect();
+    let energy = hep_energy_leaves();
+    let mut windows: Vec<usize> = (0..s.stores).map(|k| k % 20).collect();
+    let mut lat_ns = Vec::with_capacity(s.requests);
+    let mut total = 0.0f64;
+    let t0 = Instant::now();
+    for r in 0..s.requests {
+        let store = r % s.stores;
+        let t1 = Instant::now();
+        if r % s.write_every == s.write_every - 1 {
+            stores[store].set::<f32>(r % s.hep_n, energy[windows[store]], 123.0);
+        } else {
+            // The request *is* an engine step: it pays tracing in
+            // sampling epochs and the migration copy at epoch ends.
+            let mut kernel = window_kernel(s, windows[store]);
+            stores[store].step(&mut kernel);
+            total += kernel.total;
+        }
+        lat_ns.push(t1.elapsed().as_nanos() as f64);
+        if (r + 1) % s.epoch_every == 0 {
+            for w in &mut windows {
+                *w = (*w + 1) % 20;
+            }
+        }
+    }
+    black_box(total);
+    RunStats {
+        layout: stores[0].mapping_name(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        lat_ns,
+        migrations: stores.iter().map(|a| a.migrations()).sum(),
+    }
+}
+
+fn hep_static<M: Mapping + Clone>(mapping: M, s: &Sizes) -> RunStats {
+    let blobs = BlobPool::new();
+    let name = mapping.mapping_name();
+    let mut stores: Vec<View<M, _>> = (0..s.stores)
+        .map(|k| {
+            let mut v = alloc_view_with(mapping.clone(), blobs.clone());
+            hep::generate_events(&mut v, 40 + k as u64);
+            v
+        })
+        .collect();
+    let energy = hep_energy_leaves();
+    let mut windows: Vec<usize> = (0..s.stores).map(|k| k % 20).collect();
+    let mut lat_ns = Vec::with_capacity(s.requests);
+    let mut total = 0.0f64;
+    let t0 = Instant::now();
+    for r in 0..s.requests {
+        let store = r % s.stores;
+        let t1 = Instant::now();
+        if r % s.write_every == s.write_every - 1 {
+            stores[store].set::<f32>(r % s.hep_n, energy[windows[store]], 123.0);
+        } else {
+            total += hep::energy_window(&stores[store], windows[store], s.window, 128);
+        }
+        lat_ns.push(t1.elapsed().as_nanos() as f64);
+        if (r + 1) % s.epoch_every == 0 {
+            for w in &mut windows {
+                *w = (*w + 1) % 20;
+            }
+        }
+    }
+    black_box(total);
+    RunStats {
+        layout: name,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        lat_ns,
+        migrations: 0,
+    }
+}
+
+fn hep_case(s: &Sizes, t: &mut Table) {
+    let d = hep::event_dim();
+    let dims = ArrayDims::linear(s.hep_n);
+    push_row(t, "hep", "adaptive-serving", s, hep_adaptive_serving(s));
+    push_row(t, "hep", "stop-the-world", s, hep_stop_the_world(s));
+    let statics = vec![
+        hep_static(AoS::aligned(&d, dims.clone()), s),
+        hep_static(SoA::multi_blob(&d, dims.clone()), s),
+        hep_static(AoSoA::new(&d, dims.clone(), 16), s),
+    ];
+    let best = statics
+        .into_iter()
+        .min_by(|a, b| a.elapsed_s.total_cmp(&b.elapsed_s))
+        .expect("static candidates");
+    push_row(t, "hep", "best-static", s, best);
+}
+
+// ---- picframe: deposits interleaved with drift sweeps ----
+
+/// The read-only charge-deposit request as an adaptive-engine kernel.
+struct DepositReq {
+    filled: usize,
+    total: f64,
+}
+
+impl AdaptiveKernel for DepositReq {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, view: &mut View<M, B>) {
+        self.total += picframe::frames::deposit_view(view, self.filled);
+    }
+}
+
+fn fill_attrs<M: Mapping, B: BlobMut>(v: &mut View<M, B>, seed: u64) {
+    use crate::workloads::rng::SplitMix64;
+    let mut rng = SplitMix64::new(seed);
+    for lin in 0..v.count() {
+        for leaf in [picframe::POS_X, picframe::POS_Y, picframe::POS_Z] {
+            v.set::<f32>(lin, leaf, rng.next_f32());
+        }
+        for leaf in [picframe::MOM_X, picframe::MOM_Y, picframe::MOM_Z] {
+            v.set::<f32>(lin, leaf, rng.range_f32(-0.3, 0.3));
+        }
+        v.set::<f32>(lin, picframe::WEIGHTING, rng.range_f32(0.5, 1.5));
+        v.set::<i32>(lin, picframe::CELL_IDX, rng.below(picframe::FRAME_SIZE) as i32);
+    }
+}
+
+fn pic_adaptive_serving(s: &Sizes) -> RunStats {
+    let d = picframe::attr_dim();
+    let dims = ArrayDims::linear(s.pic_n);
+    let blobs = BlobPool::new();
+    let mut pool = AdvisorPool::<BlobPool>::new(s.budget);
+    for k in 0..s.stores {
+        let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), blobs.clone());
+        fill_attrs(&mut v, 60 + k as u64);
+        pool.add(ServingEngine::with_recycler(v, serve_cfg(), blobs.clone()));
+    }
+    let mut lat_ns = Vec::with_capacity(s.requests);
+    let mut total = 0.0f64;
+    let t0 = Instant::now();
+    for r in 0..s.requests {
+        let store = r % s.stores;
+        let eng = pool.store(store);
+        let t1 = Instant::now();
+        if r % s.write_every == s.write_every - 1 {
+            eng.write::<f32>(r % s.pic_n, picframe::WEIGHTING, 2.0);
+        } else {
+            let g = eng.pin();
+            total += picframe::frames::deposit_view(g.view(), s.pic_n);
+        }
+        lat_ns.push(t1.elapsed().as_nanos() as f64);
+        if (r + 1) % s.epoch_every == 0 {
+            // The hot set alternates between the deposit's weighting
+            // read and the drift sweep's pos+mom traffic.
+            for eng in pool.stores() {
+                eng.update(&mut DepositReq { filled: s.pic_n, total: 0.0 });
+                eng.update(&mut picframe::frames::AdaptiveDrift { dt: 0.05 });
+                eng.publish();
+            }
+            pool.cycle();
+        }
+    }
+    black_box(total);
+    RunStats {
+        layout: pool.store(0).mapping_name(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        lat_ns,
+        migrations: pool.stores().iter().map(|e| e.migrations()).sum(),
+    }
+}
+
+fn pic_stop_the_world(s: &Sizes) -> RunStats {
+    let d = picframe::attr_dim();
+    let dims = ArrayDims::linear(s.pic_n);
+    let blobs = BlobPool::new();
+    let mut stores: Vec<AdaptiveView<BlobPool>> = (0..s.stores)
+        .map(|k| {
+            let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), blobs.clone());
+            fill_attrs(&mut v, 60 + k as u64);
+            AdaptiveView::with_recycler(v, serve_cfg(), blobs.clone())
+        })
+        .collect();
+    let mut lat_ns = Vec::with_capacity(s.requests);
+    let mut total = 0.0f64;
+    let t0 = Instant::now();
+    for r in 0..s.requests {
+        let store = r % s.stores;
+        let t1 = Instant::now();
+        if r % s.write_every == s.write_every - 1 {
+            stores[store].set::<f32>(r % s.pic_n, picframe::WEIGHTING, 2.0);
+        } else {
+            let mut kernel = DepositReq { filled: s.pic_n, total: 0.0 };
+            stores[store].step(&mut kernel);
+            total += kernel.total;
+        }
+        lat_ns.push(t1.elapsed().as_nanos() as f64);
+        if (r + 1) % s.epoch_every == 0 {
+            for av in &mut stores {
+                av.step(&mut picframe::frames::AdaptiveDrift { dt: 0.05 });
+            }
+        }
+    }
+    black_box(total);
+    RunStats {
+        layout: stores[0].mapping_name(),
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        lat_ns,
+        migrations: stores.iter().map(|a| a.migrations()).sum(),
+    }
+}
+
+fn pic_static<M: Mapping + Clone>(mapping: M, s: &Sizes) -> RunStats {
+    let blobs = BlobPool::new();
+    let name = mapping.mapping_name();
+    let mut stores: Vec<View<M, _>> = (0..s.stores)
+        .map(|k| {
+            let mut v = alloc_view_with(mapping.clone(), blobs.clone());
+            fill_attrs(&mut v, 60 + k as u64);
+            v
+        })
+        .collect();
+    let mut lat_ns = Vec::with_capacity(s.requests);
+    let mut total = 0.0f64;
+    let t0 = Instant::now();
+    for r in 0..s.requests {
+        let store = r % s.stores;
+        let t1 = Instant::now();
+        if r % s.write_every == s.write_every - 1 {
+            stores[store].set::<f32>(r % s.pic_n, picframe::WEIGHTING, 2.0);
+        } else {
+            total += picframe::frames::deposit_view(&stores[store], s.pic_n);
+        }
+        lat_ns.push(t1.elapsed().as_nanos() as f64);
+        if (r + 1) % s.epoch_every == 0 {
+            for v in &mut stores {
+                picframe::frames::drift_view(v, s.pic_n, 0.05);
+            }
+        }
+    }
+    black_box(total);
+    RunStats {
+        layout: name,
+        elapsed_s: t0.elapsed().as_secs_f64(),
+        lat_ns,
+        migrations: 0,
+    }
+}
+
+fn pic_case(s: &Sizes, t: &mut Table) {
+    let d = picframe::attr_dim();
+    let dims = ArrayDims::linear(s.pic_n);
+    push_row(t, "picframe", "adaptive-serving", s, pic_adaptive_serving(s));
+    push_row(t, "picframe", "stop-the-world", s, pic_stop_the_world(s));
+    let statics = vec![
+        pic_static(AoS::aligned(&d, dims.clone()), s),
+        pic_static(SoA::multi_blob(&d, dims.clone()), s),
+        pic_static(AoSoA::new(&d, dims.clone(), 32), s),
+    ];
+    let best = statics
+        .into_iter()
+        .min_by(|a, b| a.elapsed_s.total_cmp(&b.elapsed_s))
+        .expect("static candidates");
+    push_row(t, "picframe", "best-static", s, best);
+}
+
+/// Run the serving comparison for both request-driven workloads.
+pub fn run(o: &Opts) -> Table {
+    let s = sizes(o);
+    let mut t = Table::new(
+        format!(
+            "concurrent serving: adaptive-serving vs stop-the-world vs best-static \
+             ({} requests x {} stores, budget {}, {})",
+            s.requests,
+            s.stores,
+            s.budget,
+            if o.quick { "quick" } else { "full" }
+        ),
+        &[
+            "workload",
+            "engine",
+            "layout",
+            "stores",
+            "req_per_s",
+            "p50_us",
+            "p99_us",
+            "migrations",
+        ],
+    );
+    hep_case(&s, &mut t);
+    pic_case(&s, &mut t);
+    t
+}
+
+/// Serialize a bench-serve run as the `BENCH_serve.json` baseline.
+/// Refuses structurally to emit a document missing any
+/// workload × engine row or reporting a non-positive throughput.
+pub fn baseline_json_checked(o: &Opts) -> crate::error::Result<String> {
+    let t = run(o);
+    for workload in ["hep", "picframe"] {
+        for engine in ["adaptive-serving", "stop-the-world", "best-static"] {
+            let row = t
+                .rows
+                .iter()
+                .find(|r| r[0] == workload && r[1] == engine)
+                .ok_or_else(|| crate::anyhow!("bench-serve: missing {workload}/{engine} row"))?;
+            let req_per_s: f64 = row[4].parse()?;
+            crate::ensure!(
+                req_per_s > 0.0,
+                "bench-serve: {workload}/{engine} throughput must be positive"
+            );
+        }
+    }
+    Ok(format!(
+        "{{\n  \"figure\": \"bench_serve\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
+         \"unit\": \"req/s; latency us (p50/p99 service time, nearest rank)\",\n  \"serve\": {}\n}}\n",
+        if o.quick { "quick" } else { "full" },
+        o.iters,
+        t.to_json()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> Opts {
+        let mut o = Opts::quick();
+        o.iters = 1;
+        o.n = Some(256);
+        o
+    }
+
+    #[test]
+    fn both_workloads_produce_the_engine_triple() {
+        let t = run(&tiny_opts());
+        assert_eq!(t.rows.len(), 2 * 3);
+        for workload in ["hep", "picframe"] {
+            for engine in ["adaptive-serving", "stop-the-world", "best-static"] {
+                let row = t
+                    .rows
+                    .iter()
+                    .find(|r| r[0] == workload && r[1] == engine)
+                    .unwrap_or_else(|| panic!("missing {workload}/{engine}"));
+                let req_per_s: f64 = row[4].parse().expect("req_per_s parses");
+                assert!(req_per_s > 0.0, "{workload}/{engine}: {row:?}");
+                let p50: f64 = row[5].parse().expect("p50 parses");
+                let p99: f64 = row[6].parse().expect("p99 parses");
+                assert!(p50 <= p99, "{workload}/{engine}: p50 {p50} > p99 {p99}");
+            }
+        }
+        // The static engines never migrate; the adaptive fleets did
+        // (the drifting window parks decisions every interval and the
+        // budget applies the best of them).
+        for workload in ["hep", "picframe"] {
+            let stat =
+                t.rows.iter().find(|r| r[0] == workload && r[1] == "best-static").unwrap();
+            assert_eq!(stat[7], "0");
+            let adaptive =
+                t.rows.iter().find(|r| r[0] == workload && r[1] == "adaptive-serving").unwrap();
+            let migrations: usize = adaptive[7].parse().expect("migrations parse");
+            assert!(migrations >= 1, "{workload}: adaptive fleet never migrated");
+        }
+    }
+
+    #[test]
+    fn baseline_json_gates_on_rows_and_throughput() {
+        let j = baseline_json_checked(&tiny_opts()).expect("complete run passes");
+        assert!(j.contains("\"figure\": \"bench_serve\""), "{j}");
+        assert!(j.contains("\"serve\": {"), "{j}");
+        assert!(j.contains("adaptive-serving"), "{j}");
+        assert!(j.contains("req_per_s"), "{j}");
+        assert!(j.contains("p99_us"), "{j}");
+        assert!(!j.contains("\"rows\": []"), "{j}");
+    }
+}

@@ -6,7 +6,10 @@ use crate::bail;
 use crate::error::Result;
 
 use super::bench::Opts;
-use super::{bench_adapt, bench_alloc, fig10_picframe, fig5_nbody, fig6_xla, fig7_copy, fig8_lbm};
+use super::{
+    bench_adapt, bench_alloc, bench_serve, fig10_picframe, fig5_nbody, fig6_xla, fig7_copy,
+    fig8_lbm,
+};
 
 const USAGE: &str = "\
 llama — LLAMA (Low-Level Abstraction of Memory Access) reproduction
@@ -25,6 +28,8 @@ COMMANDS:
   bench-adapt run adapt and write the BENCH_adapt.json baseline
   allocbench  blob::pool — pooled vs fresh-zeroed allocation churn
   bench-alloc run allocbench and write the BENCH_alloc.json baseline
+  serve       serving engines: epoch-pinned reads vs stop-the-world
+  bench-serve run serve and write the BENCH_serve.json baseline
   dump        fig 4: write SVG/HTML layout dumps + heatmap
   e2e         end-to-end driver: LLAMA memory -> PJRT n-body steps
   all         run every figure driver (quick mode by default)
@@ -136,6 +141,12 @@ pub fn run(cli: Cli) -> Result<()> {
             std::fs::write(path, bench_alloc::baseline_json_checked(o)?)?;
             println!("wrote {path}");
         }
+        "serve" => emit(&bench_serve::run(o), cli.markdown),
+        "bench-serve" => {
+            let path = "BENCH_serve.json";
+            std::fs::write(path, bench_serve::baseline_json_checked(o)?)?;
+            println!("wrote {path}");
+        }
         "dump" => dump(&cli.out_dir)?,
         "e2e" => e2e(o, &cli.out_dir)?,
         "all" => {
@@ -150,6 +161,7 @@ pub fn run(cli: Cli) -> Result<()> {
             emit(&fig10_picframe::run(&o), cli.markdown);
             emit(&bench_adapt::run(&o), cli.markdown);
             emit(&bench_alloc::run(&o), cli.markdown);
+            emit(&bench_serve::run(&o), cli.markdown);
             match fig6_xla::run(&o) {
                 Ok(t) => emit(&t, cli.markdown),
                 Err(e) => println!("fig6 skipped ({e}); run `make artifacts` first"),

@@ -11,6 +11,7 @@
 pub mod bench;
 pub mod bench_adapt;
 pub mod bench_alloc;
+pub mod bench_serve;
 pub mod cli;
 pub mod fig10_picframe;
 pub mod fig5_nbody;

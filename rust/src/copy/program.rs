@@ -557,10 +557,18 @@ impl PairKey {
 /// represented, curve layouts) compile fresh on every call — their
 /// placement lives in the mapping object, which the fingerprint cannot
 /// see.
+///
+/// The cache is `Sync`: every method takes `&self`, entries live
+/// behind an internal mutex, and compiled program lists are shared as
+/// `Arc` slices so execution never holds the lock. One cache serves
+/// the whole serving fleet ([`crate::view::serve`]) — migrations of
+/// different stores with the same layout pair compile once, and racing
+/// first-compilers resolve first-insert-wins (the loser's identical
+/// list is dropped).
 #[derive(Debug, Default)]
 pub struct ProgramCache {
-    programs: std::collections::HashMap<PairKey, Vec<CopyProgram>>,
-    hits: usize,
+    programs: std::sync::Mutex<std::collections::HashMap<PairKey, std::sync::Arc<[CopyProgram]>>>,
+    hits: std::sync::atomic::AtomicUsize,
 }
 
 impl ProgramCache {
@@ -571,13 +579,13 @@ impl ProgramCache {
 
     /// Number of distinct (pair, thread-count) entries compiled so far.
     pub fn entries(&self) -> usize {
-        self.programs.len()
+        self.programs.lock().unwrap().len()
     }
 
     /// Number of lookups served from the cache (tests assert repeated
     /// migrations compile once).
     pub fn hits(&self) -> usize {
-        self.hits
+        self.hits.load(std::sync::atomic::Ordering::Relaxed)
     }
 
     fn cacheable(sp: &LayoutPlan, dp: &LayoutPlan) -> bool {
@@ -586,35 +594,42 @@ impl ProgramCache {
     }
 
     fn programs_for<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
-        &mut self,
+        &self,
         src: &MS,
         dst: &MD,
         sp: &LayoutPlan,
         dp: &LayoutPlan,
         threads: usize,
-    ) -> std::borrow::Cow<'_, [CopyProgram]> {
-        let compile = |threads: usize| {
+    ) -> std::sync::Arc<[CopyProgram]> {
+        use std::sync::atomic::Ordering;
+        let compile = |threads: usize| -> std::sync::Arc<[CopyProgram]> {
             if threads == 0 {
-                vec![compile_with(src, dst, sp, dp, ChunkOrder::ReadContiguous)]
+                vec![compile_with(src, dst, sp, dp, ChunkOrder::ReadContiguous)].into()
             } else {
-                shard_programs_with(src, dst, sp, dp, ChunkOrder::ReadContiguous, threads)
+                shard_programs_with(src, dst, sp, dp, ChunkOrder::ReadContiguous, threads).into()
             }
         };
         if !Self::cacheable(sp, dp) {
-            return std::borrow::Cow::Owned(compile(threads));
+            return compile(threads);
         }
         let key = PairKey::new(src, dst, sp, dp, threads);
-        if self.programs.contains_key(&key) {
-            self.hits += 1;
+        if let Some(progs) = self.programs.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return std::sync::Arc::clone(progs);
         }
-        std::borrow::Cow::Borrowed(
-            self.programs.entry(key).or_insert_with(|| compile(threads)).as_slice(),
+        // Compile outside the lock — program compilation walks both
+        // plans and can be arbitrarily long. Two threads racing on the
+        // same new pair both compile; the first insert wins and both
+        // results are identical by construction.
+        let compiled = compile(threads);
+        std::sync::Arc::clone(
+            self.programs.lock().unwrap().entry(key).or_insert(compiled),
         )
     }
 
     /// [`super::copy`] through the cache: compile (or look up) the
     /// serial program for the pair, execute it, report the strategy.
-    pub fn copy<MS, MD, BS, BD>(&mut self, src: &View<MS, BS>, dst: &mut View<MD, BD>) -> CopyMethod
+    pub fn copy<MS, MD, BS, BD>(&self, src: &View<MS, BS>, dst: &mut View<MD, BD>) -> CopyMethod
     where
         MS: Mapping,
         MD: Mapping,
@@ -637,7 +652,7 @@ impl ProgramCache {
     /// same list via [`execute_parallel`]. Thread resolution and cache
     /// accounting match [`ProgramCache::copy_parallel`] exactly.
     pub fn with_parallel_programs<MS, MD, T>(
-        &mut self,
+        &self,
         src: &MS,
         dst: &MD,
         threads: Option<usize>,
@@ -658,7 +673,7 @@ impl ProgramCache {
     /// up) one sub-program per plan-aligned shard and replay them on
     /// scoped threads — the adaptive engine's `migrate_parallel` path.
     pub fn copy_parallel<MS, MD, BS, BD>(
-        &mut self,
+        &self,
         src: &View<MS, BS>,
         dst: &mut View<MD, BD>,
         threads: Option<usize>,
@@ -1224,7 +1239,7 @@ mod tests {
     fn program_cache_compiles_once_per_pair() {
         let d = particle_dim();
         let dims = ArrayDims::linear(64);
-        let mut cache = ProgramCache::new();
+        let cache = ProgramCache::new();
         let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
         fill_distinct(&mut src);
         let mut oracle = alloc_view(AoSoA::new(&d, dims.clone(), 8));
@@ -1247,7 +1262,7 @@ mod tests {
     fn program_cache_parallel_matches_serial_and_caches_per_thread_count() {
         let d = particle_dim();
         let dims = ArrayDims::linear(4096 + 17);
-        let mut cache = ProgramCache::new();
+        let cache = ProgramCache::new();
         let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
         fill_distinct(&mut src);
         let mut serial = alloc_view(AoSoA::new(&d, dims.clone(), 16));
@@ -1272,7 +1287,7 @@ mod tests {
         use crate::mapping::Trace;
         let d = particle_dim();
         let dims = ArrayDims::linear(16);
-        let mut cache = ProgramCache::new();
+        let cache = ProgramCache::new();
         // Trace plans are generic: two different inner layouts would
         // collide on the plan fingerprint, so the cache must decline.
         let mut src = alloc_view(Trace::new(AoS::packed(&d, dims.clone())));
@@ -1343,7 +1358,7 @@ mod tests {
     fn with_parallel_programs_shares_cache_accounting() {
         let d = particle_dim();
         let dims = ArrayDims::linear(4096 + 17);
-        let mut cache = ProgramCache::new();
+        let cache = ProgramCache::new();
         let src_m = SoA::multi_blob(&d, dims.clone());
         let dst_m = AoSoA::new(&d, dims.clone(), 16);
         let n1 = cache.with_parallel_programs(&src_m, &dst_m, Some(3), |p| p.len());
@@ -1358,6 +1373,38 @@ mod tests {
         cache.copy_parallel(&src, &mut dst, Some(3));
         assert_eq!(cache.entries(), 1);
         assert_eq!(cache.hits(), 2);
+    }
+
+    #[test]
+    fn program_cache_is_send_and_sync() {
+        // Compile-time contract: one ProgramCache is shared by every
+        // store in a serving fleet, across reader + migration threads.
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ProgramCache>();
+        assert_send_sync::<std::sync::Arc<ProgramCache>>();
+    }
+
+    #[test]
+    fn program_cache_shared_across_threads_compiles_once() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(64);
+        let cache = ProgramCache::new();
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_distinct(&mut src);
+        let mut oracle = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        copy_naive(&src, &mut oracle);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+                    cache.copy(&src, &mut dst);
+                    assert_eq!(dst.blobs(), oracle.blobs());
+                });
+            }
+        });
+        // Racing first-compilers may each compile, but the map holds
+        // exactly one entry for the pair afterwards.
+        assert_eq!(cache.entries(), 1);
     }
 
     #[test]

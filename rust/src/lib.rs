@@ -43,8 +43,10 @@
 //! * **Access & scale** — [`view`]: views over blobs, zero-overhead
 //!   cursors ([`view::cursor`]), plan-aligned parallel sharding
 //!   ([`view::shard`]), runtime-dispatched SIMD execution
-//!   ([`view::simd`], `simd` feature), and the adaptive relayout
-//!   engine ([`view::adapt`]).
+//!   ([`view::simd`], `simd` feature), the adaptive relayout
+//!   engine ([`view::adapt`]), and the concurrent serving layer —
+//!   epoch-pinned reads during background relayout under a fleet
+//!   migration budget ([`view::serve`]).
 //! * **Copy** — [`copy`]: layout-changing copies compiled once into
 //!   [`copy::CopyProgram`]s ([`copy::program`]).
 //!
@@ -108,7 +110,8 @@ pub mod prelude {
         alloc_view, alloc_view_with, migrate_with, pair_align, par_execute, par_execute_zip,
         par_map_shards, par_shards, plan_aliases, shard_align, shard_pair, shard_plan,
         shard_range, simd_compiled, AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2,
-        AdaptiveView, CursorRead, CursorWrite, OneRecord, ScalarVal, Shard, ShardKernel,
-        ShardKernel2, SimdCursorRead, SimdCursorWrite, SimdPath, View,
+        AdaptiveView, AdvisorPool, CursorRead, CursorWrite, CycleEntry, CycleReport, OneRecord,
+        PendingMigration, ReadGuard, ScalarVal, ServingEngine, Shard, ShardKernel, ShardKernel2,
+        SimdCursorRead, SimdCursorWrite, SimdPath, View,
     };
 }

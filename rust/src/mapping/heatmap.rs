@@ -146,9 +146,13 @@ impl<M: Mapping> Heatmap<M> {
             .sum()
     }
 
-    /// Zero every counter in place through a shared reference; may
-    /// interleave with concurrent writers (see [`Heatmap::snapshot`]
-    /// for the race-free epoch boundary).
+    /// Zero every counter in place through a shared reference.
+    ///
+    /// **Test helper only.** The stores may interleave with concurrent
+    /// writers, splitting one logical epoch across two counting
+    /// windows; every engine path uses the race-free
+    /// [`Heatmap::snapshot`] swap instead.
+    #[doc(hidden)]
     pub fn reset(&self) {
         for b in &self.counters {
             for c in b {

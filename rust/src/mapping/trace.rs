@@ -39,6 +39,57 @@ impl TraceSnapshot {
     pub fn total(&self) -> u64 {
         self.counts.iter().sum()
     }
+
+    /// All (field path, count) pairs, declaration order — the
+    /// race-free replacement for the old live report: take a
+    /// [`Trace::snapshot`] at the epoch boundary, then render.
+    pub fn report(&self, info: &RecordInfo) -> Vec<(String, u64)> {
+        info.fields.iter().zip(&self.counts).map(|(f, &c)| (f.path.clone(), c)).collect()
+    }
+
+    /// Render the counts as an aligned text table (the paper prints
+    /// this "to help a user understand the access behavior of their
+    /// program").
+    pub fn to_table(&self, info: &RecordInfo) -> String {
+        let rep = self.report(info);
+        let w = rep.iter().map(|(p, _)| p.len()).max().unwrap_or(5).max(5);
+        let mut out = format!("{:w$}  {:>12}\n", "field", "count");
+        for (p, c) in rep {
+            out.push_str(&format!("{p:w$}  {c:>12}\n"));
+        }
+        out
+    }
+
+    /// Group the leaves into `groups` buckets of roughly equal total
+    /// access count (greedy, preserving declaration order) — the
+    /// paper's §4.3 "split the record dimension into 4 groups of AoS
+    /// layouts with equal access count", computed from epoch-consistent
+    /// counts.
+    pub fn equal_count_groups(&self, groups: usize) -> Vec<Vec<usize>> {
+        equal_count_groups_of(&self.counts, groups)
+    }
+}
+
+/// The greedy equal-count grouping shared by [`TraceSnapshot`] and the
+/// (quiescent-only) live [`Trace::equal_count_groups`].
+fn equal_count_groups_of(counts: &[u64], groups: usize) -> Vec<Vec<usize>> {
+    assert!(groups > 0);
+    let total: u64 = counts.iter().sum();
+    let per_group = total / groups as u64;
+    let mut out: Vec<Vec<usize>> = vec![Vec::new()];
+    let mut acc = 0u64;
+    for (leaf, &c) in counts.iter().enumerate() {
+        let ngroups = out.len();
+        let cur = out.last_mut().unwrap();
+        if !cur.is_empty() && acc + c / 2 > per_group && ngroups < groups {
+            out.push(vec![leaf]);
+            acc = c;
+        } else {
+            cur.push(leaf);
+            acc += c;
+        }
+    }
+    out
 }
 
 /// Per-field access counting wrapper. Counting uses relaxed atomics so
@@ -93,13 +144,14 @@ impl<M: Mapping> Trace<M> {
         self.counts[leaf].load(Ordering::Relaxed)
     }
 
-    /// All (field path, count) pairs, declaration order.
+    /// Live (field path, count) pairs through `&self`.
     ///
-    /// This is the *live* view: each counter is loaded individually
-    /// with relaxed ordering, so a report taken while writers are
-    /// running can mix counts from different moments. Decision-making
-    /// consumers (the advisor, the adaptive engine) should use
-    /// [`Trace::snapshot`] instead.
+    /// **Test helper only.** Each counter is loaded individually with
+    /// relaxed ordering, so a report taken while writers run can mix
+    /// counts from different moments. Every decision or display path
+    /// must go through the epoch boundary instead:
+    /// [`Trace::snapshot`], then [`TraceSnapshot::report`].
+    #[doc(hidden)]
     pub fn report(&self) -> Vec<(String, u64)> {
         self.inner
             .info()
@@ -110,8 +162,10 @@ impl<M: Mapping> Trace<M> {
             .collect()
     }
 
-    /// Render the report as an aligned text table (the paper prints this
-    /// "to help a user understand the access behavior of their program").
+    /// Live text table through `&self` — **test helper only** (see
+    /// [`Trace::report`]); the supported rendering path is
+    /// [`TraceSnapshot::to_table`].
+    #[doc(hidden)]
     pub fn to_table(&self) -> String {
         let rep = self.report();
         let w = rep.iter().map(|(p, _)| p.len()).max().unwrap_or(5).max(5);
@@ -126,32 +180,24 @@ impl<M: Mapping> Trace<M> {
     /// access count (greedy, preserving declaration order) — the paper's
     /// §4.3 "split the record dimension into 4 groups of AoS layouts
     /// with equal access count".
+    ///
+    /// The counters are read live (relaxed loads), so call this only
+    /// when the workload is quiescent — between phases, as the §4.3
+    /// workflow does. For the concurrent path, snapshot first and use
+    /// [`TraceSnapshot::equal_count_groups`].
     pub fn equal_count_groups(&self, groups: usize) -> Vec<Vec<usize>> {
-        assert!(groups > 0);
         let counts: Vec<u64> = self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        let per_group = total / groups as u64;
-        let mut out: Vec<Vec<usize>> = vec![Vec::new()];
-        let mut acc = 0u64;
-        for (leaf, &c) in counts.iter().enumerate() {
-            let ngroups = out.len();
-            let cur = out.last_mut().unwrap();
-            if !cur.is_empty() && acc + c / 2 > per_group && ngroups < groups {
-                out.push(vec![leaf]);
-                acc = c;
-            } else {
-                cur.push(leaf);
-                acc += c;
-            }
-        }
-        out
+        equal_count_groups_of(&counts, groups)
     }
 
-    /// Zero every counter in place. Unlike [`Trace::snapshot`] this
-    /// works through a shared reference, so concurrent writers may
-    /// interleave with the stores; use it only between phases you know
-    /// to be quiescent (the snapshot API is the race-free epoch
-    /// boundary).
+    /// Zero every counter in place through `&self`.
+    ///
+    /// **Test helper only.** Concurrent writers may interleave with
+    /// the stores, splitting one logical epoch across two counting
+    /// windows. The race-free epoch boundary is [`Trace::snapshot`]
+    /// (counter-vector swap under exclusive access) — the only reset
+    /// the serving engine's sampling path uses.
+    #[doc(hidden)]
     pub fn reset(&self) {
         for c in &self.counts {
             c.store(0, Ordering::Relaxed);
@@ -272,6 +318,26 @@ mod tests {
         let (inner, last) = t.into_inner();
         assert!(inner.mapping_name().starts_with("AoS(aligned"));
         assert_eq!(last.total(), 0);
+    }
+
+    /// The snapshot-side report/table/grouping (the concurrent-safe
+    /// path) agree with the hidden live helpers on a quiescent trace.
+    #[test]
+    fn snapshot_report_and_table_match_live_helpers() {
+        let mut t = Trace::new(AoS::aligned(&particle_dim(), ArrayDims::linear(4)));
+        for _ in 0..4 {
+            let _ = t.blob_nr_and_offset(1, 0);
+        }
+        let _ = t.blob_nr_and_offset(4, 0);
+        let live_report = t.report();
+        let live_groups = t.equal_count_groups(2);
+        let info = t.inner().info().clone();
+        let snap = t.snapshot();
+        assert_eq!(snap.report(&info), live_report);
+        assert_eq!(snap.equal_count_groups(2), live_groups);
+        let table = snap.to_table(&info);
+        assert!(table.contains("pos.x"));
+        assert!(table.contains("field"));
     }
 
     #[test]

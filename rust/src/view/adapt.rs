@@ -161,7 +161,7 @@ enum Phase<B: BlobMut> {
 /// coverage ([`programs_cover_dst`]), so recycled memory can never
 /// leak stale bytes into padding a fresh-zeroed run would have zeroed.
 pub fn migrate_with<MS, MD, R>(
-    cache: &mut ProgramCache,
+    cache: &ProgramCache,
     src: &View<MS, R::Blob>,
     target: MD,
     recycler: &R,
@@ -248,13 +248,53 @@ pub struct AdaptiveView<R: BlobRecycler = VecAlloc> {
     cfg: AdaptiveConfig,
     /// `None` only transiently inside phase transitions.
     phase: Option<Phase<R::Blob>>,
-    cache: ProgramCache,
+    /// Shared by reference so one cache can serve a whole fleet of
+    /// engines ([`AdaptiveView::share_cache`]): layout pairs repeated
+    /// across stores compile once, fleet-wide.
+    cache: Arc<ProgramCache>,
     info: Arc<RecordInfo>,
     migrations: usize,
     /// The recommendation describing the *current* layout, once the
     /// advisor has matched one (the hysteresis baseline).
     advised: Option<Recommendation>,
+    /// When set, epoch decisions that clear both hysteresis gates are
+    /// *parked* in `pending` instead of migrating inline — the
+    /// [`crate::view::serve::AdvisorPool`] budget loop ranks the parked
+    /// candidates by gain and applies only the winners.
+    defer_migrations: bool,
+    pending: Option<PendingMigration>,
     recycler: R,
+}
+
+/// A migration decision the engine has made but not executed: the
+/// advisor's candidate, the materialized target layout, and the cost
+/// model's predicted relative gain — everything a budget scheduler
+/// needs to rank it. Produced when [`AdaptiveView::set_defer`] is on;
+/// executed (or overwritten by the next epoch) via
+/// [`AdaptiveView::apply_pending`].
+pub struct PendingMigration {
+    candidate: Recommendation,
+    target: RecipeMapping,
+    /// Predicted relative gain; `f64::INFINITY` for a first decision
+    /// (no adopted baseline to compare against — always worth taking).
+    gain: f64,
+}
+
+impl PendingMigration {
+    /// The predicted relative gain the budget scheduler ranks by.
+    pub fn gain(&self) -> f64 {
+        self.gain
+    }
+
+    /// The advisor's recommendation awaiting execution.
+    pub fn candidate(&self) -> &Recommendation {
+        &self.candidate
+    }
+
+    /// Name of the layout this migration would adopt.
+    pub fn target_name(&self) -> String {
+        self.target.mapping_name()
+    }
 }
 
 impl AdaptiveView<VecAlloc> {
@@ -311,10 +351,12 @@ where
         let mut av = AdaptiveView {
             cfg,
             phase: None,
-            cache: ProgramCache::new(),
+            cache: Arc::new(ProgramCache::new()),
             info,
             migrations: 0,
             advised: None,
+            defer_migrations: false,
+            pending: None,
             recycler,
         };
         av.phase = Some(av.enter_sampling(recipe, blobs));
@@ -435,34 +477,53 @@ where
         let candidate = recommend_stats(&stats, &self.info, self.cfg.pattern);
         let target = candidate.to_mapping(&self.info.dim, recipe.dims().clone());
 
-        // Hysteresis gate 1: the live layout already is the recipe.
+        // Hysteresis gate 1: the live layout already is the recipe —
+        // any previously parked decision is obsolete too.
         if target.mapping_name() == recipe.mapping_name() {
             self.advised = Some(candidate);
+            self.pending = None;
             return self.steady(View::from_blobs(recipe, blobs));
         }
         // Hysteresis gate 2: an already-advised layout only migrates
         // when the predicted gain clears the threshold. The first
         // decision (arbitrary starting layout, nothing to compare
-        // against) always adopts the advisor's choice.
-        if let Some(current) = &self.advised {
-            let gain = migration_gain(&stats, &self.info, current, &candidate, &self.cfg.cost);
-            if gain < 1.0 + self.cfg.hysteresis {
-                return self.steady(View::from_blobs(recipe, blobs));
+        // against) always adopts the advisor's choice — modeled as an
+        // infinite gain so budget schedulers rank it first.
+        let gain = match &self.advised {
+            Some(current) => {
+                migration_gain(&stats, &self.info, current, &candidate, &self.cfg.cost)
             }
+            None => f64::INFINITY,
+        };
+        if gain < 1.0 + self.cfg.hysteresis {
+            self.pending = None;
+            return self.steady(View::from_blobs(recipe, blobs));
         }
-        // Migrate: plan-aligned sharded copy through the cached
-        // program — repeated migrations between the same layout pair
-        // replay the compiled op list, with the destination drawn from
-        // the recycler (re-zero skipped when the program proves full
-        // coverage).
-        let src = View::from_blobs(recipe, blobs);
-        let dst = migrate_with(
-            &mut self.cache,
-            &src,
-            target,
-            &self.recycler,
-            Some(self.cfg.threads.max(1)),
-        );
+        // Deferred mode: park the decision for the budget scheduler
+        // (each epoch end overwrites it — the ranking always sees the
+        // freshest observation) and keep serving the current layout.
+        if self.defer_migrations {
+            self.pending = Some(PendingMigration { candidate, target, gain });
+            return self.steady(View::from_blobs(recipe, blobs));
+        }
+        self.pending = None;
+        self.do_migrate(View::from_blobs(recipe, blobs), target, candidate)
+    }
+
+    /// The migration body shared by the inline path and
+    /// [`AdaptiveView::apply_pending`]: plan-aligned sharded copy
+    /// through the cached program — repeated migrations between the
+    /// same layout pair replay the compiled op list, with the
+    /// destination drawn from the recycler (re-zero skipped when the
+    /// program proves full coverage).
+    fn do_migrate(
+        &mut self,
+        src: View<RecipeMapping, R::Blob>,
+        target: RecipeMapping,
+        candidate: Recommendation,
+    ) -> Phase<R::Blob> {
+        let dst =
+            migrate_with(&self.cache, &src, target, &self.recycler, Some(self.cfg.threads.max(1)));
         // The old layout's blobs return to the recycler's pool here —
         // the next migration of these shapes allocates nothing fresh.
         drop(src);
@@ -539,10 +600,69 @@ where
         self.cfg.cost = cost;
     }
 
+    /// Toggle deferred-migration mode: when on, epoch decisions that
+    /// clear both hysteresis gates are parked as a
+    /// [`PendingMigration`] instead of executing inline — the engine
+    /// keeps serving the current layout until
+    /// [`AdaptiveView::apply_pending`] is called (the
+    /// [`crate::view::serve::AdvisorPool`] budget loop).
+    pub fn set_defer(&mut self, defer: bool) {
+        self.defer_migrations = defer;
+    }
+
+    /// The parked migration decision, if any (deferred mode only).
+    pub fn pending(&self) -> Option<&PendingMigration> {
+        self.pending.as_ref()
+    }
+
+    /// Execute the parked migration decision now. A sampling epoch in
+    /// flight ends without a decision (its counts are discarded — the
+    /// layout is about to change, so they describe a dead layout).
+    /// Returns `true` if a migration ran.
+    pub fn apply_pending(&mut self) -> bool {
+        let Some(p) = self.pending.take() else { return false };
+        let phase = self.phase.take().expect("phase present outside transitions");
+        let front = match phase {
+            Phase::Sampling { front, back, .. } => {
+                drop(back);
+                let (traced, blobs) = front.into_parts();
+                let traced =
+                    Arc::try_unwrap(traced).expect("trace uniquely owned at the epoch boundary");
+                let (recipe, _) = traced.into_inner();
+                View::from_blobs(recipe, blobs)
+            }
+            Phase::Steady { front, back, .. } => {
+                drop(back);
+                front
+            }
+        };
+        self.phase = Some(self.do_migrate(front, p.target, p.candidate));
+        true
+    }
+
+    /// Expose the live layout and blob bytes to `f` without dissolving
+    /// the engine — the serving engine's publish path reads the blobs
+    /// byte-for-byte here (never through the traced mapping, so a
+    /// publish mid-epoch cannot pollute the sample counters).
+    pub fn with_live<T>(&self, f: impl FnOnce(&RecipeMapping, &[R::Blob]) -> T) -> T {
+        match self.phase.as_ref().expect("phase present") {
+            Phase::Sampling { front, .. } => f(front.mapping().inner(), front.blobs()),
+            Phase::Steady { front, .. } => f(front.mapping(), front.blobs()),
+        }
+    }
+
     /// The engine's program cache (tests assert repeated migrations
     /// between the same layout pair compile once).
     pub fn program_cache(&self) -> &ProgramCache {
         &self.cache
+    }
+
+    /// Replace the engine's program cache with a shared one: every
+    /// engine in a fleet pointed at the same `Arc` compiles each
+    /// (src plan, dst plan, threads) pair once, fleet-wide. Safe at
+    /// any time — the cache is pure memoization.
+    pub fn share_cache(&mut self, cache: Arc<ProgramCache>) {
+        self.cache = cache;
     }
 
     /// The recycler every engine-created blob is drawn from (tests
@@ -828,6 +948,61 @@ mod tests {
         for (p, v) in again.blobs().iter().zip(vec_final.blobs()) {
             assert_eq!(p, v);
         }
+    }
+
+    /// Deferred mode parks the decision (gain + target visible to a
+    /// budget scheduler) and `apply_pending` executes it later, data
+    /// intact.
+    #[test]
+    fn deferred_migration_parks_and_applies() {
+        let mut av = nbody_adaptive(false, AdaptiveConfig::default());
+        av.set_defer(true);
+        av.step(&mut Move); // epoch completes -> decision parked
+        assert_eq!(av.migrations(), 0);
+        assert!(av.mapping_name().starts_with("AoS("), "{}", av.mapping_name());
+        let p = av.pending().expect("decision parked");
+        // First decision: no adopted baseline, ranked as infinite gain.
+        assert!(p.gain().is_infinite());
+        assert!(p.target_name().starts_with("SoA("));
+        let want: f32 = av.get(7, 2);
+        assert!(av.apply_pending());
+        assert_eq!(av.migrations(), 1);
+        assert!(av.mapping_name().starts_with("SoA("));
+        assert_eq!(av.get::<f32>(7, 2), want, "apply_pending must carry the data across");
+        assert!(av.pending().is_none());
+        assert!(!av.apply_pending(), "nothing left to apply");
+    }
+
+    /// `with_live` peels the trace wrapper during sampling and exposes
+    /// the bare recipe + blobs in both phases.
+    #[test]
+    fn with_live_exposes_layout_and_blobs_in_both_phases() {
+        let mut av =
+            nbody_adaptive(false, AdaptiveConfig { sample_steps: 2, ..Default::default() });
+        av.step(&mut Move);
+        assert!(av.is_sampling());
+        let (name, nblobs) = av.with_live(|m, b| (m.mapping_name(), b.len()));
+        assert!(name.starts_with("AoS("), "{name}");
+        assert_eq!(nblobs, 1);
+        av.step(&mut Move); // completes the epoch: AoS -> SoA
+        let (name, nblobs) = av.with_live(|m, b| (m.mapping_name(), b.len()));
+        assert!(name.starts_with("SoA("), "{name}");
+        assert_eq!(nblobs, 7);
+    }
+
+    /// Two engines pointed at one shared cache compile their common
+    /// layout pair once, fleet-wide.
+    #[test]
+    fn shared_cache_compiles_once_across_engines() {
+        let shared = Arc::new(ProgramCache::new());
+        for round in 0..2 {
+            let mut av = nbody_adaptive(false, AdaptiveConfig::default());
+            av.share_cache(Arc::clone(&shared));
+            av.step(&mut Move);
+            assert_eq!(av.migrations(), 1, "round {round}");
+        }
+        assert_eq!(shared.entries(), 1, "one AoS->SoA pair, compiled once");
+        assert!(shared.hits() >= 1, "second engine must reuse the compiled programs");
     }
 
     /// Zip back buffers come from the recycler too: after an epoch

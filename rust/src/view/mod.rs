@@ -8,13 +8,16 @@ pub mod cursor;
 pub mod iter;
 pub mod one_record;
 pub mod scalar;
+pub mod serve;
 pub mod shard;
 pub mod simd;
 pub mod view;
 pub mod virtual_record;
 pub mod virtual_view;
 
-pub use adapt::{migrate_with, AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2, AdaptiveView};
+pub use adapt::{
+    migrate_with, AdaptiveConfig, AdaptiveKernel, AdaptiveKernel2, AdaptiveView, PendingMigration,
+};
 pub use cursor::{
     CursorRead, CursorWrite, LeafCursor, LeafCursorMut, PiecewiseCursor, PiecewiseCursorMut,
     PlanCursors, PlanCursorsMut,
@@ -22,6 +25,7 @@ pub use cursor::{
 pub use iter::RecordIter;
 pub use one_record::OneRecord;
 pub use scalar::ScalarVal;
+pub use serve::{AdvisorPool, CycleEntry, CycleReport, ReadGuard, ServingEngine};
 pub use shard::{
     pair_align, par_execute, par_execute_zip, par_map_shards, par_shards, plan_aliases,
     shard_align, shard_pair, shard_plan, shard_range, Shard, ShardKernel, ShardKernel2,

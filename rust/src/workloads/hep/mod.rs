@@ -114,6 +114,105 @@ pub fn isolated_energy_parallel<M: Mapping, B: Blob>(
     }
 }
 
+/// A serving-style point query with a *drifting* hot set: total energy
+/// of good-quality objects inside the window `[obj_lo, obj_lo + width)`
+/// (object indices wrap modulo 20). Each request reads 2 of the 100
+/// fields per window object, so which leaves are hot follows the
+/// window — exactly the traffic drift the serving engine's background
+/// relayout (`view::serve`) is built to chase. Read-only: works over
+/// any [`Blob`] storage, including the `Arc`-frozen generations handed
+/// out by `ServingEngine::pin`.
+pub fn energy_window<M: Mapping, B: Blob>(
+    view: &View<M, B>,
+    obj_lo: usize,
+    width: usize,
+    min_quality: u8,
+) -> f64 {
+    let info = view.mapping().info().clone();
+    let mut leaves = Vec::with_capacity(width.min(20));
+    for k in 0..width.min(20) {
+        let obj = (obj_lo + k) % 20;
+        let e = info.leaf_by_path(&format!("obj{obj}_energy")).expect("energy leaf");
+        let q = info.leaf_by_path(&format!("obj{obj}_quality")).expect("quality leaf");
+        leaves.push((e, q));
+    }
+    let plan = view.mapping().plan();
+    let n = view.count();
+    match view.plan_cursors_with(&plan) {
+        PlanCursors::Affine(cur) => energy_window_cursors(&cur, &leaves, n, min_quality),
+        PlanCursors::Piecewise(cur) => energy_window_cursors(&cur, &leaves, n, min_quality),
+        PlanCursors::Generic => {
+            let mut sum = 0.0f64;
+            for lin in 0..n {
+                for &(e, q) in &leaves {
+                    if view.get::<u8>(lin, q) >= min_quality {
+                        sum += view.get::<f32>(lin, e) as f64;
+                    }
+                }
+            }
+            sum
+        }
+    }
+}
+
+fn energy_window_cursors<C: CursorRead>(
+    cur: &[C],
+    leaves: &[(usize, usize)],
+    n: usize,
+    min_quality: u8,
+) -> f64 {
+    let mut sum = 0.0f64;
+    for lin in 0..n {
+        for &(e, q) in leaves {
+            // SAFETY: lin < n == cursor count.
+            unsafe {
+                if cur[q].read_at::<u8>(lin) >= min_quality {
+                    sum += cur[e].read_at::<f32>(lin) as f64;
+                }
+            }
+        }
+    }
+    sum
+}
+
+/// The window sweep as an adaptive-engine kernel whose hot fields
+/// *drift*: every `steps_per_window` steps the window advances by one
+/// object, so successive trace epochs see different hot leaves and the
+/// advisor keeps re-splitting — the workload the serving benchmark
+/// uses to pit adaptive relayout against stop-the-world and
+/// best-static engines.
+pub struct AdaptiveWindow {
+    /// First object of the current window (wraps modulo 20).
+    pub obj_lo: usize,
+    /// Objects per window.
+    pub width: usize,
+    /// Quality threshold of the query.
+    pub min_quality: u8,
+    /// Steps between one-object window advances (0 = never drift).
+    pub steps_per_window: usize,
+    /// Steps run so far.
+    pub step: usize,
+    /// Accumulated energy across steps (checked against static runs).
+    pub total: f64,
+}
+
+impl AdaptiveWindow {
+    /// A fresh sweep starting at object 0.
+    pub fn new(width: usize, min_quality: u8, steps_per_window: usize) -> AdaptiveWindow {
+        AdaptiveWindow { obj_lo: 0, width, min_quality, steps_per_window, step: 0, total: 0.0 }
+    }
+}
+
+impl crate::view::adapt::AdaptiveKernel for AdaptiveWindow {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, view: &mut crate::view::View<M, B>) {
+        self.total += energy_window(view, self.obj_lo, self.width, self.min_quality);
+        self.step += 1;
+        if self.steps_per_window > 0 && self.step % self.steps_per_window == 0 {
+            self.obj_lo = (self.obj_lo + 1) % 20;
+        }
+    }
+}
+
 /// The isolation sweep as an adaptive-engine kernel: each step sums
 /// [`isolated_energy`] into `total`. The sweep reads at most 3 of 100
 /// fields per object, but conditionally: `isolated` always, `quality`
@@ -219,6 +318,46 @@ mod tests {
         let mut traced = alloc_view(Trace::new(AoS::packed(&d, dims.clone())));
         generate_events(&mut traced, 21);
         assert_eq!(isolated_energy(&traced, 128), expect);
+    }
+
+    #[test]
+    fn energy_window_agrees_across_layouts_and_wraps() {
+        use crate::mapping::{AoS, Trace};
+        let d = event_dim();
+        let dims = ArrayDims::linear(29);
+        let mut soa = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        generate_events(&mut soa, 13);
+        // Window wraps: objects 18, 19, 0, 1.
+        let expect = energy_window(&soa, 18, 4, 64);
+        assert!(expect > 0.0);
+
+        let mut aos = alloc_view(AoS::aligned(&d, dims.clone()));
+        generate_events(&mut aos, 13);
+        assert_eq!(energy_window(&aos, 18, 4, 64), expect);
+
+        // Generic plan (instrumented) takes the accessor path, same sum.
+        let mut traced = alloc_view(Trace::new(AoS::packed(&d, dims.clone())));
+        generate_events(&mut traced, 13);
+        assert_eq!(energy_window(&traced, 18, 4, 64), expect);
+
+        // Width caps at the 20 available objects.
+        assert_eq!(energy_window(&soa, 0, 25, 64), energy_window(&soa, 0, 20, 64));
+    }
+
+    #[test]
+    fn adaptive_window_drifts_on_schedule() {
+        use crate::view::adapt::AdaptiveKernel;
+        let d = event_dim();
+        let mut v = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(8)));
+        generate_events(&mut v, 3);
+        let mut k = AdaptiveWindow::new(3, 0, 2);
+        for _ in 0..4 {
+            k.run(&mut v);
+        }
+        // 4 steps / 2 steps-per-window = 2 advances.
+        assert_eq!(k.obj_lo, 2);
+        assert_eq!(k.step, 4);
+        assert!(k.total > 0.0);
     }
 
     #[test]

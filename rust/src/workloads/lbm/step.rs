@@ -2,7 +2,7 @@
 //! multi-threaded — the compute kernel behind fig 8.
 
 use super::{equilibrium, Geometry, E, FLAGS, FLUID, OBSTACLE, OMEGA, OPP, Q};
-use crate::blob::BlobMut;
+use crate::blob::{Blob, BlobMut};
 use crate::mapping::Mapping;
 use crate::view::adapt::AdaptiveKernel2;
 use crate::view::cursor::{CursorRead, CursorWrite};
@@ -41,7 +41,7 @@ pub fn init<M: Mapping, B: BlobMut>(view: &mut View<M, B>, geo: &Geometry) {
 }
 
 /// Density+velocity of one cell (diagnostics, mass-conservation tests).
-pub fn macroscopic<M: Mapping, B: BlobMut>(view: &View<M, B>, lin: usize) -> (f64, [f64; 3]) {
+pub fn macroscopic<M: Mapping, B: Blob>(view: &View<M, B>, lin: usize) -> (f64, [f64; 3]) {
     let mut rho = 0.0;
     let mut u = [0.0f64; 3];
     for i in 0..Q {
@@ -60,7 +60,7 @@ pub fn macroscopic<M: Mapping, B: BlobMut>(view: &View<M, B>, lin: usize) -> (f6
 }
 
 /// Total mass in the lattice (conserved by the step).
-pub fn total_mass<M: Mapping, B: BlobMut>(view: &View<M, B>) -> f64 {
+pub fn total_mass<M: Mapping, B: Blob>(view: &View<M, B>) -> f64 {
     (0..view.count()).map(|lin| (0..Q).map(|i| view.get::<f64>(lin, i)).sum::<f64>()).sum()
 }
 

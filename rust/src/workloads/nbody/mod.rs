@@ -141,6 +141,23 @@ pub fn kinetic_energy(p: &ParticleSoA) -> f64 {
         .sum()
 }
 
+/// [`kinetic_energy`] read directly off a view in any layout — the
+/// serving-mode twin. Read-only over any [`crate::blob::Blob`]
+/// storage, so it runs against the `Arc`-frozen generations handed out
+/// by `ServingEngine::pin` as well as live mutable views.
+pub fn kinetic_energy_view<M: crate::mapping::Mapping, B: crate::blob::Blob>(
+    view: &crate::view::View<M, B>,
+) -> f64 {
+    (0..view.count())
+        .map(|i| {
+            let v2 = (view.get::<f32>(i, VEL_X) as f64).powi(2)
+                + (view.get::<f32>(i, VEL_Y) as f64).powi(2)
+                + (view.get::<f32>(i, VEL_Z) as f64).powi(2);
+            0.5 * view.get::<f32>(i, MASS) as f64 * v2
+        })
+        .sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,6 +187,22 @@ mod tests {
         let mut vel = [0.0f32; 3];
         pp_interaction(0.5, 0.5, 0.5, 0.5, 0.5, 0.5, 1.0, &mut vel);
         assert!(vel.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn kinetic_energy_view_matches_plain_arrays() {
+        use crate::array::ArrayDims;
+        use crate::mapping::{AoSoA, SoA};
+        use crate::view::alloc_view;
+        let s = init_particles(200, 9);
+        let expect = kinetic_energy(&s);
+        assert!(expect > 0.0);
+        let mut soa = alloc_view(SoA::multi_blob(&particle_dim(), ArrayDims::linear(200)));
+        llama_impl::load_state(&mut soa, &s);
+        assert_eq!(kinetic_energy_view(&soa), expect);
+        let mut aosoa = alloc_view(AoSoA::new(&particle_dim(), ArrayDims::linear(200), 8));
+        llama_impl::load_state(&mut aosoa, &s);
+        assert_eq!(kinetic_energy_view(&aosoa), expect);
     }
 
     #[test]

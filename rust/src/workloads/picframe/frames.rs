@@ -7,7 +7,7 @@ use super::{
 };
 use crate::blob::{Blob, BlobAllocator, BlobMut, VecAlloc};
 use crate::mapping::Mapping;
-use crate::view::cursor::CursorWrite;
+use crate::view::cursor::{CursorRead, CursorWrite, PlanCursors};
 use crate::view::shard::{par_execute, shard_range, Shard, ShardKernel};
 use crate::view::View;
 use crate::workloads::rng::SplitMix64;
@@ -454,6 +454,35 @@ pub fn drift_view<M: Mapping, B: BlobMut>(view: &mut View<M, B>, filled: usize, 
     }
 }
 
+/// The charge-deposit reduction over the first `filled` records of any
+/// attribute view: sums the macro-particle `weighting` field — the
+/// read-only serving query of the picframe workload. Works over any
+/// [`Blob`] storage, including the `Arc`-frozen generations handed out
+/// by `ServingEngine::pin`, and takes the plan fast path where the
+/// layout admits cursors.
+pub fn deposit_view<M: Mapping, B: Blob>(view: &View<M, B>, filled: usize) -> f64 {
+    let n = filled.min(view.count());
+    let plan = view.mapping().plan();
+    match view.plan_cursors_with(&plan) {
+        PlanCursors::Affine(cur) => deposit_cursors(&cur, n),
+        PlanCursors::Piecewise(cur) => deposit_cursors(&cur, n),
+        PlanCursors::Generic => {
+            (0..n).map(|s| view.get::<f32>(s, WEIGHTING) as f64).sum()
+        }
+    }
+}
+
+fn deposit_cursors<C: CursorRead>(cur: &[C], n: usize) -> f64 {
+    let mut sum = 0.0f64;
+    for s in 0..n {
+        // SAFETY: s < n <= count.
+        unsafe {
+            sum += cur[WEIGHTING].read_at::<f32>(s) as f64;
+        }
+    }
+    sum
+}
+
 /// The drift sweep as an adaptive-engine kernel: an attribute store
 /// wrapped in [`crate::view::adapt::AdaptiveView`] drifts through
 /// whatever layout the engine has adopted (pos + mom touch 6 of 8
@@ -527,6 +556,36 @@ mod tests {
             SoA::multi_blob(&attr_dim(), ArrayDims::linear(FRAME_SIZE)),
             grid,
         )
+    }
+
+    #[test]
+    fn deposit_view_agrees_across_layouts_and_respects_filled() {
+        use crate::view::alloc_view;
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let mut soa = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        for s in 0..FRAME_SIZE {
+            write_particle(
+                &mut soa,
+                s,
+                &ParticleAttrs { weighting: (s + 1) as f32, ..ParticleAttrs::zero() },
+            );
+        }
+        // Sum of 1..=10 = 55; slots past `filled` are ignored.
+        assert_eq!(deposit_view(&soa, 10), 55.0);
+        let full: f64 = (1..=FRAME_SIZE).map(|w| w as f64).sum();
+        assert_eq!(deposit_view(&soa, FRAME_SIZE), full);
+        assert_eq!(deposit_view(&soa, FRAME_SIZE + 99), full);
+
+        let mut aosoa = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        let mut aos = alloc_view(AoS::aligned(&d, dims));
+        for s in 0..FRAME_SIZE {
+            let p = ParticleAttrs { weighting: (s + 1) as f32, ..ParticleAttrs::zero() };
+            write_particle(&mut aosoa, s, &p);
+            write_particle(&mut aos, s, &p);
+        }
+        assert_eq!(deposit_view(&aosoa, 10), 55.0);
+        assert_eq!(deposit_view(&aos, 10), 55.0);
     }
 
     #[test]

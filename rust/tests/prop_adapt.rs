@@ -78,7 +78,7 @@ fn prop_engine_migration_matches_naive_for_every_reachable_recipe() {
     let d = nbody::particle_dim();
     for dims in [ArrayDims::linear(13), ArrayDims::linear(97)] {
         for k in 0..MATRIX {
-            let mut cache = ProgramCache::new();
+            let cache = ProgramCache::new();
             let mut compiled_max = 0usize;
             for (r, rec) in reachable_recipes().into_iter().enumerate() {
                 let mut src = alloc_view(nth(&d, &dims, k));
@@ -108,7 +108,7 @@ fn prop_engine_migration_matches_naive_for_every_reachable_recipe() {
     // tail-block extent, threads 3 and 7, still byte-equal to naive.
     let dims = ArrayDims::linear(4096 + 17);
     for k in [0usize, 3, 6, 9, 11] {
-        let mut cache = ProgramCache::new();
+        let cache = ProgramCache::new();
         let mut src = alloc_view(nth(&d, &dims, k));
         fill_sentinels(&mut src);
         for rec in [Recommendation::SoaMultiBlob, Recommendation::SplitHotCold { hot: vec![1] }] {

@@ -1,0 +1,283 @@
+//! Property harness for the concurrent serving layer (EXPERIMENTS.md
+//! §Serve): (1) readers pinned to published generations observe only
+//! *whole* generations — each one bit-identical to the corresponding
+//! state of a serial `AdaptiveView` run, for every starting layout of
+//! the 13-mapping matrix, verified from concurrent threads; (2) a
+//! warmed pooled engine publishes and migrates with zero fresh blob
+//! allocations, and the last unpin of a retired generation returns its
+//! blobs to the pool; (3) an [`AdvisorPool`] cycle migrates *exactly*
+//! the top-`budget` parked decisions by predicted gain and defers the
+//! rest.
+
+use llama::prelude::*;
+use llama::view::adapt::{AdaptiveConfig, AdaptiveView};
+use llama::view::serve::{AdvisorPool, ServingEngine};
+use llama::workloads::nbody::{self, llama_impl};
+
+/// The 13-mapping matrix of `prop_copy_matrix.rs` / `prop_adapt.rs` —
+/// every entry a possible starting layout for a served store.
+const MATRIX: usize = 13;
+
+fn nth(d: &RecordDim, dims: &ArrayDims, k: usize) -> Box<dyn Mapping> {
+    match k {
+        0 => Box::new(AoS::aligned(d, dims.clone())),
+        1 => Box::new(AoS::packed(d, dims.clone())),
+        2 => Box::new(SoA::single_blob(d, dims.clone())),
+        3 => Box::new(SoA::multi_blob(d, dims.clone())),
+        4 => Box::new(AoSoA::new(d, dims.clone(), 2)),
+        5 => Box::new(AoSoA::new(d, dims.clone(), 4)),
+        6 => Box::new(AoSoA::new(d, dims.clone(), 8)),
+        7 => Box::new(AoSoA::new(d, dims.clone(), 16)),
+        8 => Box::new(One::new(d, dims.clone())),
+        9 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        )),
+        10 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| AoSoA::new(sd, ad, 8),
+        )),
+        11 => Box::new(Byteswap::new(AoS::packed(d, dims.clone()))),
+        12 => Box::new(Heatmap::with_granularity(AoS::packed(d, dims.clone()), 4)),
+        _ => unreachable!("matrix has {MATRIX} entries"),
+    }
+}
+
+struct Move;
+
+impl AdaptiveKernel for Move {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut llama::view::View<M, B>) {
+        llama_impl::mv(v);
+    }
+}
+
+/// All 7 f32 leaves of one state, as stable bit patterns.
+fn state_bits(get: impl Fn(usize, usize) -> f32, n: usize) -> Vec<u32> {
+    (0..n)
+        .flat_map(|lin| (0..nbody::LEAVES).map(move |leaf| get(lin, leaf).to_bits()))
+        .collect()
+}
+
+/// (1) Generation-swap correctness across the matrix: a serving engine
+/// stepping-and-publishing produces generations 1..=S+1 whose contents
+/// are bit-identical to the serial `AdaptiveView` reference after
+/// 0..=S steps of the same kernel — and guards pinned *before* later
+/// steps still read their own generation, verified concurrently while
+/// the head keeps churning.
+#[test]
+fn prop_pinned_readers_observe_whole_generations_bit_identical_to_serial() {
+    let d = nbody::particle_dim();
+    let n = 96;
+    let dims = ArrayDims::linear(n);
+    let state = nbody::init_particles(n, 17);
+    let steps = 4;
+    for start in 0..MATRIX {
+        // Serial reference: record the state after 0..=steps steps.
+        let mut ref_view = alloc_view(nth(&d, &dims, start));
+        llama_impl::load_state(&mut ref_view, &state);
+        let mut ref_av = AdaptiveView::new(ref_view, AdaptiveConfig::default());
+        let mut expected: Vec<Vec<u32>> = vec![state_bits(|l, f| ref_av.get(l, f), n)];
+        let mut ref_names = vec![ref_av.mapping_name()];
+        for _ in 0..steps {
+            ref_av.step(&mut Move);
+            expected.push(state_bits(|l, f| ref_av.get(l, f), n));
+            ref_names.push(ref_av.mapping_name());
+        }
+
+        // Served run: pin before every step, publish after each.
+        let mut v = alloc_view(nth(&d, &dims, start));
+        llama_impl::load_state(&mut v, &state);
+        let engine = ServingEngine::new(v, AdaptiveConfig::default());
+        let mut guards = vec![engine.pin()];
+        for _ in 0..steps {
+            engine.step_publish(&mut Move);
+            guards.push(engine.pin());
+        }
+        assert_eq!(engine.migrations(), ref_av.migrations(), "start {start}");
+
+        // Concurrent verification: one thread per pinned generation,
+        // while the main thread keeps stepping and publishing.
+        std::thread::scope(|s| {
+            for (i, guard) in guards.iter().enumerate() {
+                let expected = &expected[i];
+                let ref_name = &ref_names[i];
+                s.spawn(move || {
+                    assert_eq!(guard.generation(), i as u64 + 1, "start {start}");
+                    assert_eq!(
+                        &guard.mapping_name(),
+                        ref_name,
+                        "start {start} generation {i}: layout diverged from serial run"
+                    );
+                    let got = state_bits(|l, f| guard.get(l, f), n);
+                    assert_eq!(
+                        &got, expected,
+                        "start {start} generation {i}: bytes diverged from serial run"
+                    );
+                    // Re-read: the pinned snapshot is frozen even while
+                    // the head publishes more generations underneath.
+                    assert_eq!(state_bits(|l, f| guard.get(l, f), n), got);
+                });
+            }
+            for _ in 0..3 {
+                engine.step_publish(&mut Move);
+            }
+        });
+    }
+}
+
+/// (2) Warm serving allocates nothing: after one cold round has
+/// populated the pool's size classes, a full pin/step/publish/unpin
+/// round — including the migration the engine performs — draws every
+/// blob from the free lists (`PoolStats::misses` unchanged), and each
+/// retired generation's blobs come back to the pool on last unpin.
+#[test]
+fn prop_warm_engine_serves_and_migrates_with_zero_fresh_allocations() {
+    let d = nbody::particle_dim();
+    let n = 128;
+    let dims = ArrayDims::linear(n);
+    let state = nbody::init_particles(n, 23);
+    let pool = BlobPool::new();
+    let round = |pool: &BlobPool| {
+        let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), pool.clone());
+        llama_impl::load_state(&mut v, &state);
+        let engine = ServingEngine::with_recycler(v, AdaptiveConfig::default(), pool.clone());
+        for _ in 0..4 {
+            let guard = engine.pin();
+            let _: f32 = guard.get(0, 0);
+            engine.step_publish(&mut Move);
+            drop(guard);
+        }
+        assert!(engine.migrations() >= 1, "move sweep must trigger a migration");
+        // Dropping the engine retires the head and the last published
+        // generation; their pooled blobs return to the free lists.
+    };
+    round(&pool); // cold: populates every size class
+    assert!(pool.stats().misses > 0, "cold round must allocate");
+    let before = pool.stats();
+    assert_eq!(before.outstanding, 0, "everything returned after the cold round");
+    round(&pool); // warm: identical traffic, zero fresh blobs
+    let after = pool.stats();
+    assert_eq!(
+        after.misses, before.misses,
+        "warm serving round allocated fresh blobs (publish or migration bypassed the pool)"
+    );
+
+    // Last-unpin reclamation, explicitly: two guards on one retired
+    // generation; only the second drop releases its blobs.
+    let mut v = alloc_view_with(AoS::aligned(&d, dims.clone()), pool.clone());
+    llama_impl::load_state(&mut v, &state);
+    let engine = ServingEngine::with_recycler(v, AdaptiveConfig::default(), pool.clone());
+    let a = engine.pin();
+    let b = a.clone();
+    engine.publish(); // retire generation 1: only the guards hold it now
+    let held = pool.stats().outstanding;
+    drop(a);
+    assert_eq!(pool.stats().outstanding, held, "clone still pins the generation");
+    drop(b);
+    assert!(pool.stats().outstanding < held, "last unpin must free the generation");
+}
+
+/// A read-only sweep over a chosen leaf set — the traffic shape that
+/// steers the advisor's hot/cold split.
+struct TouchLeaves {
+    leaves: Vec<usize>,
+    sum: f64,
+}
+
+impl AdaptiveKernel for TouchLeaves {
+    fn run<M: Mapping, B: BlobMut + Sync>(&mut self, v: &mut llama::view::View<M, B>) {
+        for lin in 0..v.count() {
+            for &leaf in &self.leaves {
+                self.sum += v.get::<f32>(lin, leaf) as f64;
+            }
+        }
+    }
+}
+
+/// (3) The pool migrates exactly the top-`budget` parked decisions by
+/// predicted gain: with three stores parking decisions of distinct
+/// finite gains, a budget-1 cycle migrates only the best store, the
+/// next cycle the runner-up, and deferred stores are untouched
+/// in between.
+#[test]
+fn prop_advisor_pool_migrates_exactly_the_top_k_by_gain() {
+    let d = nbody::particle_dim();
+    let n = 64;
+    let dims = ArrayDims::linear(n);
+    let state = nbody::init_particles(n, 31);
+    // One steady step between sampling epochs: after a migration, the
+    // first update leaves steady and re-arms the tracer, the second is
+    // the sampling epoch that parks a fresh decision.
+    let cfg = AdaptiveConfig { steady_steps: 1, ..Default::default() };
+    let mut pool = AdvisorPool::<VecAlloc>::new(3);
+    for _ in 0..3 {
+        let mut v = alloc_view(AoS::aligned(&d, dims.clone()));
+        llama_impl::load_state(&mut v, &state);
+        pool.add(ServingEngine::new(v, cfg));
+    }
+    // Round 1: identical single-leaf traffic everywhere. First
+    // decisions park with infinite gain; budget 3 drains them all, so
+    // every store adopts Split(hot = [0]) and has an advised layout.
+    for eng in pool.stores() {
+        eng.update(&mut TouchLeaves { leaves: vec![0], sum: 0.0 });
+    }
+    let r = pool.cycle();
+    assert_eq!(r.migrated.len(), 3, "round 1 drains all first decisions");
+    assert!(r.deferred.is_empty());
+    assert!(r.migrated.iter().all(|e| e.gain.is_infinite()));
+    for eng in pool.stores() {
+        assert_eq!(eng.migrations(), 1);
+        assert!(eng.mapping_name().starts_with("Split("), "{}", eng.mapping_name());
+    }
+
+    // Round 2: traffic diverges per store — touching 1, 2 and 3 leaves
+    // *outside* the adopted hot set parks decisions whose predicted
+    // gains differ (fewer cold bytes per useful byte = higher gain).
+    pool.set_budget(1);
+    let shapes: [Vec<usize>; 3] = [vec![1], vec![1, 2], vec![1, 2, 3]];
+    for (eng, leaves) in pool.stores().iter().zip(&shapes) {
+        // Two updates: the post-migration steady step, then the
+        // sampling epoch whose counts park the decision.
+        for _ in 0..2 {
+            eng.update(&mut TouchLeaves { leaves: leaves.clone(), sum: 0.0 });
+        }
+    }
+    let pending: Vec<(usize, f64)> = pool
+        .stores()
+        .iter()
+        .enumerate()
+        .filter_map(|(i, e)| e.pending_gain().map(|g| (i, g)))
+        .collect();
+    assert!(pending.len() >= 2, "at least two stores must park finite decisions");
+    assert!(pending.iter().all(|(_, g)| g.is_finite() && *g > 1.0), "{pending:?}");
+    let mut ranked = pending.clone();
+    ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
+
+    let before: Vec<usize> = pool.stores().iter().map(|e| e.migrations()).collect();
+    let r = pool.cycle();
+    // Exactly the single top-gain store migrated...
+    assert_eq!(r.migrated.len(), 1, "budget 1 migrates exactly one store");
+    assert_eq!(r.migrated[0].store, ranked[0].0);
+    assert_eq!(r.migrated[0].gain, ranked[0].1);
+    assert_eq!(r.deferred.len(), ranked.len() - 1);
+    assert!(r.deferred.iter().all(|e| e.gain <= r.migrated[0].gain));
+    // ...and only it: deferred stores' migration counters are frozen.
+    for (i, eng) in pool.stores().iter().enumerate() {
+        let expect = before[i] + usize::from(i == ranked[0].0);
+        assert_eq!(eng.migrations(), expect, "store {i}");
+    }
+    // The next cycle drains the runner-up (its park survives).
+    let r = pool.cycle();
+    assert_eq!(r.migrated.len(), 1);
+    assert_eq!(r.migrated[0].store, ranked[1].0);
+    // Round 1 migrated the same AoS -> Split(hot=[0]) pair in all
+    // three stores: the fleet-shared cache compiled it once and
+    // replayed it for the other two.
+    assert!(pool.program_cache().hits() >= 2, "shared cache never reused a program");
+}

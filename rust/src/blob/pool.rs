@@ -17,6 +17,10 @@
 //!   served from the class `next_power_of_two(max(size, 64))`; the blob
 //!   exposes exactly `size` bytes, the class capacity stays with the
 //!   block so a recycled block can serve any request of its class.
+//!   Requests beyond the largest power-of-two class
+//!   ([`MAX_CLASS_BYTES`]) are refused with a panic — a non-power-of-
+//!   two "class" would break the free-list keying invariant (and no
+//!   such allocation can succeed anyway).
 //! * **Alignment tiers** — small classes are cache-line aligned (64 B),
 //!   classes from one page up are page-aligned (4 KiB), and classes
 //!   from 2 MiB up get large-page alignment (llmalloc's
@@ -46,6 +50,11 @@ use super::{Blob, BlobAllocator, BlobMut};
 /// least cache-line sized and cache-line aligned.
 pub const MIN_CLASS_BYTES: usize = 64;
 
+/// Largest size class: the biggest power of two representable in
+/// `usize` (2^63 on 64-bit). Requests above this have no power-of-two
+/// class and are refused by [`class_of`].
+pub const MAX_CLASS_BYTES: usize = 1 << (usize::BITS - 1);
+
 /// Classes at or above one page are page-aligned.
 pub const PAGE_BYTES: usize = 4096;
 
@@ -54,10 +63,21 @@ pub const PAGE_BYTES: usize = 4096;
 pub const LARGE_PAGE_BYTES: usize = 2 * 1024 * 1024;
 
 /// The size class serving a request: the next power of two at or above
-/// `max(size, MIN_CLASS_BYTES)`. Requests too large for a power-of-two
-/// class (> 2^63 on 64-bit) fall back to their exact size.
+/// `max(size, MIN_CLASS_BYTES)`.
+///
+/// # Panics
+/// If `size` exceeds [`MAX_CLASS_BYTES`]: there is no power-of-two
+/// class for it, and silently handing back a non-power-of-two "class"
+/// (the old fallback) would desync the free-list keys — a returned
+/// block is parked under its full block length, which recycled
+/// requests then never match.
 pub fn class_of(size: usize) -> usize {
-    size.max(MIN_CLASS_BYTES).checked_next_power_of_two().unwrap_or(size)
+    size.max(MIN_CLASS_BYTES).checked_next_power_of_two().unwrap_or_else(|| {
+        panic!(
+            "blob::pool: request of {size} bytes exceeds the largest \
+             size class ({MAX_CLASS_BYTES} bytes)"
+        )
+    })
 }
 
 /// The alignment tier of a size class: cache line, page, or large page.
@@ -358,12 +378,24 @@ mod tests {
         assert_eq!(class_of(65), 128);
         assert_eq!(class_of(4096), 4096);
         assert_eq!(class_of(4097), 8192);
+        // Boundary: the largest class is served exactly...
+        assert_eq!(class_of(MAX_CLASS_BYTES), MAX_CLASS_BYTES);
+        assert_eq!(class_of(MAX_CLASS_BYTES - 1), MAX_CLASS_BYTES);
         assert_eq!(class_align(64), 64);
         assert_eq!(class_align(2048), 64);
         assert_eq!(class_align(4096), 4096);
         assert_eq!(class_align(1 << 20), 4096);
         assert_eq!(class_align(LARGE_PAGE_BYTES), LARGE_PAGE_BYTES);
         assert_eq!(class_align(LARGE_PAGE_BYTES * 4), LARGE_PAGE_BYTES);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the largest size class")]
+    fn oversized_requests_are_refused_not_misclassed() {
+        // ...and one byte past it is refused. The old fallback returned
+        // `size` itself here — a non-power-of-two class whose free-list
+        // key no later request could reproduce.
+        class_of(MAX_CLASS_BYTES + 1);
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! `bench-wire` driver: program-compiled wire serialization vs naive
+//! element-wise packing (EXPERIMENTS.md §Wire) — the claim that
+//! `copy::wire` serialization is "just another compiled copy", so it
+//! packs at strided-memcpy speed where a bespoke encoder would walk
+//! the record field by field.
+//!
+//! Three cases, each program-vs-naive:
+//!
+//! * **nbody soa→wire** — a multi-blob SoA particle view packed into
+//!   the dense AoS wire layout (per-leaf strided runs).
+//! * **picframe aosoa→wire** — an AoSoA(32) frame arena packed into
+//!   the wire layout (lane-block chunk moves).
+//! * **nbody soa→wire (swapped)** — the same SoA pack targeting an
+//!   opposite-endian peer: the program path compiles per-leaf
+//!   [`crate::copy::CopyOp::SwapRun`]s; the naive path swaps through
+//!   the `Byteswap` accessors one field at a time.
+//!
+//! Bit-identity between the two packers is asserted before anything is
+//! timed — the speedup is only meaningful if the bytes agree.
+
+use super::bench::{bench, black_box, BenchResult, Opts};
+use super::report::{fmt_ms, Table};
+use crate::array::ArrayDims;
+use crate::blob::Blob;
+use crate::copy::{copy_naive, deserialize_into, serialize_endian, views_equal, wire_view};
+use crate::error::Result;
+use crate::mapping::{AoSoA, Byteswap, DynMapping, Mapping, SoA, WireRecipe};
+use crate::runtime::WireEndian;
+use crate::view::{alloc_view, View};
+use crate::workloads::nbody;
+use crate::workloads::picframe::{attr_dim, FRAME_SIZE};
+use crate::workloads::rng::SplitMix64;
+
+/// Records per case (quick = CI smoke).
+fn records(o: &Opts) -> usize {
+    o.n.unwrap_or(if o.quick { 1 << 12 } else { 1 << 18 })
+}
+
+/// MiB/s from bytes moved per iteration.
+fn fmt_mib_s(bytes: usize, r: &BenchResult) -> String {
+    format!("{:.1}", bytes as f64 / r.median_s() / (1024.0 * 1024.0))
+}
+
+/// The wire layout the naive packer writes into: the manifest's dense
+/// packed AoS, wrapped in [`Byteswap`] when the peer's order differs —
+/// the same destination `serialize_endian` compiles against.
+fn naive_wire_mapping<M: Mapping>(src_mapping: &M, endian: WireEndian) -> DynMapping {
+    let m = WireRecipe::AosPacked.build(&src_mapping.info().dim, src_mapping.dims().clone());
+    if endian.is_native() {
+        m
+    } else {
+        Box::new(Byteswap::new(m))
+    }
+}
+
+/// Element-wise pack: one mapping-accessor read + write per (leaf,
+/// element) — what a hand-rolled encoder loop does.
+fn naive_pack<M: Mapping, B: Blob>(src: &View<M, B>, endian: WireEndian) -> Vec<u8> {
+    let mut dst = alloc_view(naive_wire_mapping(src.mapping(), endian));
+    copy_naive(src, &mut dst);
+    dst.blobs()[0].as_bytes().to_vec()
+}
+
+/// One (case, variant)×2 block: correctness gates, then the program
+/// rows and the naive rows.
+fn wire_case<M: Mapping + Clone>(
+    label: &str,
+    src: &View<M, Vec<u8>>,
+    endian: WireEndian,
+    o: &Opts,
+    t: &mut Table,
+) -> Result<()> {
+    let msg = serialize_endian(src, endian)?;
+    let bytes = msg.payload_len();
+    let mut back = alloc_view(src.mapping().clone());
+
+    // Correctness before speed: the compiled round trip restores every
+    // field, and the naive packer produces the identical wire bytes.
+    deserialize_into(&msg, &mut back)?;
+    crate::ensure!(views_equal(src, &back), "bench-wire: {label} round trip corrupted data");
+    crate::ensure!(
+        naive_pack(src, endian) == msg.payload,
+        "bench-wire: {label} naive and program packs disagree"
+    );
+
+    let pack = bench(&format!("{label} program pack"), 1, o.iters, || {
+        black_box(serialize_endian(src, endian).unwrap().payload_len());
+    });
+    let unpack = bench(&format!("{label} program unpack"), 1, o.iters, || {
+        deserialize_into(&msg, &mut back).unwrap();
+        black_box(back.count());
+    });
+    let rt = bench(&format!("{label} program roundtrip"), 1, o.iters, || {
+        let m = serialize_endian(src, endian).unwrap();
+        deserialize_into(&m, &mut back).unwrap();
+        black_box(back.count());
+    });
+    t.row(vec![
+        label.into(),
+        "program".into(),
+        fmt_mib_s(bytes, &pack),
+        fmt_mib_s(bytes, &unpack),
+        fmt_ms(rt.median_ns),
+    ]);
+
+    let wire_m = naive_wire_mapping(src.mapping(), endian);
+    let pack = bench(&format!("{label} naive pack"), 1, o.iters, || {
+        let mut dst = alloc_view(&wire_m);
+        copy_naive(src, &mut dst);
+        black_box(dst.blobs()[0].len());
+    });
+    let unpack = bench(&format!("{label} naive unpack"), 1, o.iters, || {
+        copy_naive(&wire_view(&msg).unwrap(), &mut back);
+        black_box(back.count());
+    });
+    let rt = bench(&format!("{label} naive roundtrip"), 1, o.iters, || {
+        let mut dst = alloc_view(&wire_m);
+        copy_naive(src, &mut dst);
+        copy_naive(&dst, &mut back);
+        black_box(back.count());
+    });
+    t.row(vec![
+        label.into(),
+        "naive".into(),
+        fmt_mib_s(bytes, &pack),
+        fmt_mib_s(bytes, &unpack),
+        fmt_ms(rt.median_ns),
+    ]);
+    Ok(())
+}
+
+/// Fill a picframe attribute view with deterministic per-particle
+/// values (every leaf distinct — the frame arena analogue of
+/// `nbody::init_particles`).
+fn fill_attrs<M: Mapping>(v: &mut View<M, Vec<u8>>) {
+    use crate::workloads::picframe::{CELL_IDX, LEAVES};
+    let mut rng = SplitMix64::new(0x17E);
+    for i in 0..v.count() {
+        for leaf in 0..LEAVES {
+            if leaf == CELL_IDX {
+                v.set::<i32>(i, leaf, (rng.next_u64() % 256) as i32);
+            } else {
+                v.set::<f32>(i, leaf, (rng.next_u64() % 4096) as f32 / 17.0);
+            }
+        }
+    }
+}
+
+/// Run the wire comparison (program-compiled vs element-wise pack /
+/// unpack, native and cross-endian).
+pub fn run(o: &Opts) -> Result<Table> {
+    let n = records(o);
+    let mut t = Table::new(
+        format!(
+            "copy::wire — compiled pack vs naive element-wise ({n} records, {})",
+            if o.quick { "quick" } else { "full" }
+        ),
+        &["case", "variant", "pack MiB/s", "unpack MiB/s", "round-trip ms"],
+    );
+
+    let d = nbody::particle_dim();
+    let mut soa = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(n)));
+    let state = nbody::init_particles(n, 41);
+    nbody::llama_impl::load_state(&mut soa, &state);
+    wire_case("nbody soa→wire", &soa, WireEndian::native(), o, &mut t)?;
+
+    let frames = (n / FRAME_SIZE).max(1) * FRAME_SIZE;
+    let mut arena = alloc_view(AoSoA::new(&attr_dim(), ArrayDims::linear(frames), 32));
+    fill_attrs(&mut arena);
+    wire_case("picframe aosoa→wire", &arena, WireEndian::native(), o, &mut t)?;
+
+    wire_case("nbody soa→wire (swapped)", &soa, WireEndian::native().swapped(), o, &mut t)?;
+    Ok(t)
+}
+
+/// Serialize a bench-wire run as the `BENCH_wire.json` baseline.
+/// Refuses structurally to emit a document missing any (case, variant)
+/// row or whose throughput cells are not positive numbers.
+pub fn baseline_json_checked(o: &Opts) -> Result<String> {
+    let t = run(o)?;
+    for case in ["nbody soa→wire", "picframe aosoa→wire", "nbody soa→wire (swapped)"] {
+        for variant in ["program", "naive"] {
+            crate::ensure!(
+                t.rows.iter().any(|r| r[0] == case && r[1] == variant),
+                "bench-wire: missing {case}/{variant} row"
+            );
+        }
+    }
+    for r in &t.rows {
+        for col in [2, 3] {
+            let v: f64 = r[col].parse().map_err(|_| {
+                crate::error::Error::msg(format!("bench-wire: non-numeric cell {:?}", r[col]))
+            })?;
+            crate::ensure!(v > 0.0, "bench-wire: non-positive throughput in {}/{}", r[0], r[1]);
+        }
+    }
+    Ok(format!(
+        "{{\n  \"figure\": \"bench_wire\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
+         \"unit\": \"MiB/s (median)\",\n  \"wire\": {}\n}}\n",
+        if o.quick { "quick" } else { "full" },
+        o.iters,
+        t.to_json()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> Opts {
+        let mut o = Opts::quick();
+        o.iters = 1;
+        o.n = Some(512);
+        o
+    }
+
+    #[test]
+    fn all_cases_produce_both_variants() {
+        let t = run(&tiny_opts()).expect("bench-wire run");
+        assert_eq!(t.rows.len(), 6);
+        for r in &t.rows {
+            assert_eq!(r.len(), 5, "ragged row {r:?}");
+            assert!(r[2].parse::<f64>().unwrap() > 0.0, "pack MiB/s in {r:?}");
+            assert!(r[3].parse::<f64>().unwrap() > 0.0, "unpack MiB/s in {r:?}");
+        }
+        assert!(t.rows.iter().any(|r| r[0].contains("swapped")));
+    }
+
+    #[test]
+    fn baseline_json_gates_on_rows_and_throughput() {
+        let j = baseline_json_checked(&tiny_opts()).expect("complete run passes");
+        assert!(j.contains("\"figure\": \"bench_wire\""), "{j}");
+        assert!(j.contains("\"wire\": {"), "{j}");
+        assert!(j.contains("picframe aosoa→wire"), "{j}");
+        assert!(!j.contains("\"rows\": []"), "{j}");
+    }
+}

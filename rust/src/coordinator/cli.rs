@@ -7,8 +7,8 @@ use crate::error::Result;
 
 use super::bench::Opts;
 use super::{
-    bench_adapt, bench_alloc, bench_serve, fig10_picframe, fig5_nbody, fig6_xla, fig7_copy,
-    fig8_lbm,
+    bench_adapt, bench_alloc, bench_serve, bench_wire, fig10_picframe, fig5_nbody, fig6_xla,
+    fig7_copy, fig8_lbm, wire_demo,
 };
 
 const USAGE: &str = "\
@@ -30,6 +30,10 @@ COMMANDS:
   bench-alloc run allocbench and write the BENCH_alloc.json baseline
   serve       serving engines: epoch-pinned reads vs stop-the-world
   bench-serve run serve and write the BENCH_serve.json baseline
+  wire        copy::wire demo: frames exchanged with worker processes
+  wire-worker the worker side of `wire` (framed stdin -> stdout loop)
+  wirebench   copy::wire — compiled pack vs naive element-wise
+  bench-wire  run wirebench and write the BENCH_wire.json baseline
   dump        fig 4: write SVG/HTML layout dumps + heatmap
   e2e         end-to-end driver: LLAMA memory -> PJRT n-body steps
   all         run every figure driver (quick mode by default)
@@ -147,6 +151,14 @@ pub fn run(cli: Cli) -> Result<()> {
             std::fs::write(path, bench_serve::baseline_json_checked(o)?)?;
             println!("wrote {path}");
         }
+        "wire" => emit(&wire_demo::run(o)?, cli.markdown),
+        "wire-worker" => wire_demo::worker_main()?,
+        "wirebench" => emit(&bench_wire::run(o)?, cli.markdown),
+        "bench-wire" => {
+            let path = "BENCH_wire.json";
+            std::fs::write(path, bench_wire::baseline_json_checked(o)?)?;
+            println!("wrote {path}");
+        }
         "dump" => dump(&cli.out_dir)?,
         "e2e" => e2e(o, &cli.out_dir)?,
         "all" => {
@@ -162,6 +174,8 @@ pub fn run(cli: Cli) -> Result<()> {
             emit(&bench_adapt::run(&o), cli.markdown);
             emit(&bench_alloc::run(&o), cli.markdown);
             emit(&bench_serve::run(&o), cli.markdown);
+            emit(&bench_wire::run(&o)?, cli.markdown);
+            emit(&wire_demo::run(&o)?, cli.markdown);
             match fig6_xla::run(&o) {
                 Ok(t) => emit(&t, cli.markdown),
                 Err(e) => println!("fig6 skipped ({e}); run `make artifacts` first"),

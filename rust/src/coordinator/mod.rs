@@ -12,6 +12,7 @@ pub mod bench;
 pub mod bench_adapt;
 pub mod bench_alloc;
 pub mod bench_serve;
+pub mod bench_wire;
 pub mod cli;
 pub mod fig10_picframe;
 pub mod fig5_nbody;
@@ -19,6 +20,7 @@ pub mod fig6_xla;
 pub mod fig7_copy;
 pub mod fig8_lbm;
 pub mod report;
+pub mod wire_demo;
 
 pub use bench::{bench, BenchResult};
 pub use report::Table;

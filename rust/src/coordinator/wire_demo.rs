@@ -1,0 +1,233 @@
+//! The `wire` demo: picframe frames exchanged with worker *processes*
+//! over OS pipes — `copy::wire` end to end across a real process
+//! boundary, zero dependencies beyond `std::process`.
+//!
+//! The parent serializes each frame ([`crate::copy::serialize_endian`],
+//! alternating byte orders so half the traffic exercises the swap-run
+//! pack), frames it onto a worker's stdin ([`crate::copy::write_message`]),
+//! and reads back the response frame. Each worker (`llama wire-worker`)
+//! is this same binary in a loop: read a message, rebuild the view from
+//! the manifest alone, advance the particles one drift step, and reply
+//! *in the byte order the request arrived in* — so a cross-endian
+//! request gets a cross-endian response, exactly what a heterogeneous
+//! peer would want. The parent verifies every response against a
+//! locally drifted oracle; the demo fails loudly on any mismatch.
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
+
+use super::bench::Opts;
+use super::report::Table;
+use crate::array::ArrayDims;
+use crate::copy::{
+    deserialize, deserialize_into, read_message, serialize_endian, views_equal, write_message,
+    WireMessage,
+};
+use crate::error::{Context, Result};
+use crate::mapping::SoA;
+use crate::runtime::WireEndian;
+use crate::view::{alloc_view, View};
+use crate::workloads::picframe::{attr_dim, frames::drift_view, CELL_IDX, FRAME_SIZE, LEAVES};
+use crate::workloads::rng::SplitMix64;
+use crate::{bail, ensure};
+
+/// Time step every worker applies to a received frame.
+pub const DRIFT_DT: f32 = 0.5;
+
+/// One worker step: rebuild the view from the wire bytes, drift the
+/// particles, and re-serialize in the byte order the request used.
+pub fn serve_frame(msg: &WireMessage) -> Result<WireMessage> {
+    let (mut v, _) = deserialize(msg)?;
+    let n = v.count();
+    drift_view(&mut v, n, DRIFT_DT);
+    serialize_endian(&v, msg.manifest.endian)
+}
+
+/// The `wire-worker` request/response loop over any byte stream:
+/// one framed response per framed request, clean exit at EOF.
+pub fn worker_loop<R: BufRead, W: Write>(r: &mut R, w: &mut W) -> Result<()> {
+    while let Some(msg) = read_message(r)? {
+        write_message(w, &serve_frame(&msg)?)?;
+    }
+    Ok(())
+}
+
+/// Entry point of the `wire-worker` CLI command: the loop over this
+/// process's stdin/stdout.
+pub fn worker_main() -> Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    worker_loop(&mut stdin.lock(), &mut stdout.lock())
+}
+
+/// A spawned worker process with its pipe endpoints.
+struct Worker {
+    child: Child,
+    stdin: std::process::ChildStdin,
+    stdout: BufReader<std::process::ChildStdout>,
+}
+
+fn spawn_worker() -> Result<Worker> {
+    let exe = std::env::current_exe().context("locating the llama binary")?;
+    let mut child = Command::new(exe)
+        .arg("wire-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawning wire-worker")?;
+    let stdin = child.stdin.take().expect("piped stdin");
+    let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+    Ok(Worker { child, stdin, stdout })
+}
+
+/// Deterministic frame contents, distinct per frame.
+fn fill_frame<M: crate::mapping::Mapping>(v: &mut View<M, Vec<u8>>, seed: u64) {
+    let mut rng = SplitMix64::new(seed ^ 0xF7A3);
+    for i in 0..v.count() {
+        for leaf in 0..LEAVES {
+            if leaf == CELL_IDX {
+                v.set::<i32>(i, leaf, (rng.next_u64() % 256) as i32);
+            } else {
+                v.set::<f32>(i, leaf, (rng.next_u64() % 2048) as f32 / 31.0);
+            }
+        }
+    }
+}
+
+/// Run the multi-process frame exchange: spawn `max(2, threads)`
+/// workers, round-robin the frames over them with alternating byte
+/// orders, and verify every returned frame bit-for-bit against a
+/// locally drifted oracle.
+pub fn run(o: &Opts) -> Result<Table> {
+    let workers = o.threads.unwrap_or(2).max(2);
+    let frames = o.n.unwrap_or(if o.quick { 4 } else { 16 }).max(workers);
+    let d = attr_dim();
+    let dims = ArrayDims::linear(FRAME_SIZE);
+
+    let mut pool = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        pool.push(spawn_worker()?);
+    }
+
+    let mut cross = 0usize;
+    let mut payload_bytes = 0usize;
+    for f in 0..frames {
+        let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_frame(&mut frame, f as u64);
+
+        // The local oracle: the same drift step the worker applies.
+        let mut oracle = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        crate::copy::copy(&frame, &mut oracle);
+        drift_view(&mut oracle, FRAME_SIZE, DRIFT_DT);
+
+        let endian =
+            if f % 2 == 0 { WireEndian::native() } else { WireEndian::native().swapped() };
+        if !endian.is_native() {
+            cross += 1;
+        }
+        let request = serialize_endian(&frame, endian)?;
+        payload_bytes += request.payload_len();
+
+        let w = &mut pool[f % workers];
+        write_message(&mut w.stdin, &request).context("sending frame to worker")?;
+        let Some(response) = read_message(&mut w.stdout).context("reading worker response")?
+        else {
+            bail!("worker {} closed its pipe before responding to frame {f}", f % workers);
+        };
+        ensure!(
+            response.manifest.endian == endian,
+            "worker replied in {:?}, request was {:?}",
+            response.manifest.endian,
+            endian
+        );
+        let mut returned = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        deserialize_into(&response, &mut returned)?;
+        ensure!(
+            views_equal(&oracle, &returned),
+            "frame {f} came back wrong from worker {}",
+            f % workers
+        );
+    }
+
+    // Closing stdin is the shutdown signal; workers exit at EOF.
+    for mut w in pool {
+        drop(w.stdin);
+        let status = w.child.wait().context("waiting for wire-worker")?;
+        ensure!(status.success(), "wire-worker exited with {status}");
+    }
+
+    let mut t = Table::new(
+        "copy::wire — multi-process picframe frame exchange",
+        &["metric", "value"],
+    );
+    t.row(vec!["worker processes".into(), workers.to_string()]);
+    t.row(vec!["frames exchanged".into(), frames.to_string()]);
+    t.row(vec!["cross-endian frames".into(), cross.to_string()]);
+    t.row(vec!["payload bytes sent".into(), payload_bytes.to_string()]);
+    t.row(vec!["round trips verified".into(), format!("{frames}/{frames}")]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::copy::serialize;
+    use crate::mapping::AoSoA;
+
+    // The process-spawning path needs the real `llama` binary on the
+    // other end of the pipe; `tests/prop_wire.rs` covers it through
+    // `CARGO_BIN_EXE_llama`. Here the same protocol runs over
+    // in-memory streams.
+
+    #[test]
+    fn worker_loop_drifts_and_echoes_the_request_order() {
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_frame(&mut frame, 7);
+        let mut oracle = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        crate::copy::copy(&frame, &mut oracle);
+        drift_view(&mut oracle, FRAME_SIZE, DRIFT_DT);
+
+        let mut requests = Vec::new();
+        write_message(&mut requests, &serialize(&frame).unwrap()).unwrap();
+        write_message(
+            &mut requests,
+            &serialize_endian(&frame, WireEndian::native().swapped()).unwrap(),
+        )
+        .unwrap();
+
+        let mut responses = Vec::new();
+        worker_loop(&mut std::io::Cursor::new(requests), &mut responses).unwrap();
+
+        let mut r = std::io::Cursor::new(responses);
+        let native = read_message(&mut r).unwrap().expect("native response");
+        let swapped = read_message(&mut r).unwrap().expect("swapped response");
+        assert!(read_message(&mut r).unwrap().is_none(), "worker answered exactly twice");
+        assert_eq!(native.manifest.endian, WireEndian::native());
+        assert_eq!(swapped.manifest.endian, WireEndian::native().swapped());
+        assert_ne!(native.payload, swapped.payload, "orders differ on the wire");
+        for resp in [native, swapped] {
+            let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+            deserialize_into(&resp, &mut got).unwrap();
+            assert!(views_equal(&oracle, &got));
+        }
+    }
+
+    #[test]
+    fn serve_frame_accepts_any_source_layout() {
+        // The worker rebuilds from the manifest alone, so the sender's
+        // in-memory layout is irrelevant — only the wire layout travels.
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let mut frame = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+        fill_frame(&mut frame, 3);
+        let resp = serve_frame(&serialize(&frame).unwrap()).unwrap();
+        let mut oracle = alloc_view(AoSoA::new(&d, dims.clone(), 16));
+        crate::copy::copy(&frame, &mut oracle);
+        drift_view(&mut oracle, FRAME_SIZE, DRIFT_DT);
+        let mut got = alloc_view(AoSoA::new(&d, dims, 16));
+        deserialize_into(&resp, &mut got).unwrap();
+        assert!(views_equal(&oracle, &got));
+    }
+}

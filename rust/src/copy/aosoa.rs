@@ -65,8 +65,9 @@ pub(crate) fn aosoa_copy_with<MS, MD, BS, BD>(
     dp.chunk_lanes()
         .expect("aosoa_copy: destination is not an AoSoA-family layout");
     assert!(
-        sp.native() && dp.native(),
-        "aosoa_copy requires native byte representation on both sides"
+        sp.native() == dp.native(),
+        "aosoa_copy requires equal byte representation on both sides \
+         (verbatim chunk moves cannot convert)"
     );
     let n = src.count();
     let prog =

@@ -18,8 +18,11 @@
 //! * [`parallel`] — multi-threaded versions of naive and aosoa.
 //! * [`program`] — the (src plan, dst plan) pair compiled **once** into
 //!   an executable [`program::CopyProgram`]: span-merged memcpys,
-//!   strided runs, or a gather fallback. `blobwise` and `aosoa` are
-//!   thin wrappers over this compiler.
+//!   strided runs, per-element swap runs, or a gather fallback.
+//!   `blobwise` and `aosoa` are thin wrappers over this compiler.
+//! * [`wire`] — serialization over process boundaries as a compiled
+//!   copy: pack into (and unpack from) a self-describing dense wire
+//!   buffer, with cross-endian peers served by swap-run programs.
 //!
 //! [`copy`] (and [`copy_parallel`]) compile the pair into a program and
 //! execute it, like the paper's `llama::copy`.
@@ -30,6 +33,7 @@ pub mod naive;
 pub mod parallel;
 pub mod program;
 pub mod stdcopy;
+pub mod wire;
 
 use crate::blob::{Blob, BlobMut};
 use crate::mapping::{AddrPlan, LayoutPlan, Mapping};
@@ -43,6 +47,10 @@ pub use program::{
     execute_parallel, execute_parallel_with, programs_cover_dst, CopyOp, CopyProgram, ProgramCache,
 };
 pub use stdcopy::copy_stdcopy;
+pub use wire::{
+    deserialize, deserialize_into, read_message, serialize, serialize_endian, serialize_with,
+    wire_view, write_message, WireMessage,
+};
 
 /// Which strategy the compiled program uses (returned by [`copy`] /
 /// [`copy_parallel`] for tests and reports).
@@ -55,8 +63,13 @@ pub enum CopyMethod {
     /// Both sides affine (outside the chunkable family): strided-run
     /// program — pairs that were field-wise before the compiler.
     Program,
-    /// Generic addressing or representation conversion on either side:
-    /// element gather through the mappings.
+    /// Affine pair with exactly one byteswapped side: per-leaf swapping
+    /// strided runs ([`CopyOp::SwapRun`]) — the cross-endian pack and
+    /// unpack path of `copy::wire`, field-wise before the compiler.
+    SwapProgram,
+    /// Generic addressing on either side (or a representation mismatch
+    /// outside the affine closed form): element gather through the
+    /// mappings.
     FieldWise,
 }
 
@@ -102,25 +115,38 @@ pub(crate) fn layouts_identical_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>
     }
 }
 
-/// True if both plans admit the chunked copy: native representation on
-/// both sides and an AoSoA-family lane count each (packed AoS = 1,
-/// AoSoA-L = L, SoA = count).
+/// True if both plans admit the chunked copy: *equal* byte
+/// representation on both sides (both native, or both byteswapped —
+/// equal-representation bytes move verbatim, no swap needed) and an
+/// AoSoA-family lane count each (packed AoS = 1, AoSoA-L = L,
+/// SoA = count).
 pub fn plans_chunk_compatible(src: &LayoutPlan, dst: &LayoutPlan) -> bool {
-    src.native() && dst.native() && src.chunk_lanes().is_some() && dst.chunk_lanes().is_some()
+    src.native() == dst.native() && src.chunk_lanes().is_some() && dst.chunk_lanes().is_some()
 }
 
-/// True if both plans admit the strided-run program: native affine
-/// addressing on both sides — the pairs outside the chunkable family
-/// that still compile to a closed form (checked *after*
-/// [`plans_chunk_compatible`] by the program compiler).
+/// True if both plans admit the strided-run program: affine addressing
+/// with *equal* byte representation on both sides — the pairs outside
+/// the chunkable family that still compile to a verbatim closed form
+/// (checked *after* [`plans_chunk_compatible`] by the program
+/// compiler).
 pub fn plans_strided_compatible(src: &LayoutPlan, dst: &LayoutPlan) -> bool {
-    src.native()
-        && dst.native()
+    src.native() == dst.native()
         && matches!(src.addr(), AddrPlan::Affine(_))
         && matches!(dst.addr(), AddrPlan::Affine(_))
 }
 
-/// True if both mappings are in the AoSoA family with native
+/// True if both plans are affine but the byte representation
+/// *mismatches* (exactly one side byteswapped): every leaf compiles to
+/// a per-element byte-reversing [`CopyOp::SwapRun`] instead of the
+/// element gather. Checked after the verbatim strategies by the
+/// program compiler — serialization's cross-endian pack/unpack path.
+pub fn plans_swap_compatible(src: &LayoutPlan, dst: &LayoutPlan) -> bool {
+    src.native() != dst.native()
+        && matches!(src.addr(), AddrPlan::Affine(_))
+        && matches!(dst.addr(), AddrPlan::Affine(_))
+}
+
+/// True if both mappings are in the AoSoA family with equal byte
 /// representation, enabling the chunked copy.
 pub fn aosoa_compatible<MS: Mapping, MD: Mapping>(src: &MS, dst: &MD) -> bool {
     same_data_space(src, dst) && plans_chunk_compatible(&src.plan(), &dst.plan())
@@ -354,7 +380,9 @@ mod tests {
     }
 
     #[test]
-    fn byteswap_forces_fieldwise_and_stays_correct() {
+    fn byteswap_affine_pairs_compile_swap_programs() {
+        // Exactly one byteswapped side + both affine: per-leaf swap
+        // runs, not the element gather (field-wise before the wire PR).
         let d = particle_dim();
         let src = {
             let mut v = alloc_view(Byteswap::new(SoA::multi_blob(&d, ArrayDims::linear(8))));
@@ -362,6 +390,53 @@ mod tests {
             v
         };
         let mut dst = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(8)));
+        assert_eq!(copy(&src, &mut dst), CopyMethod::SwapProgram);
+        assert!(views_equal(&src, &dst));
+        // And the other direction: native → byteswapped packing.
+        let mut back = alloc_view(Byteswap::new(AoS::packed(&d, ArrayDims::linear(8))));
+        assert_eq!(copy(&dst, &mut back), CopyMethod::SwapProgram);
+        assert!(views_equal(&dst, &back));
+    }
+
+    #[test]
+    fn identical_byteswapped_pairs_move_bytes_verbatim() {
+        // Byteswapped pairs of identical inner layout are byte-identical
+        // layouts: one memcpy per blob, no per-element swapping.
+        let d = particle_dim();
+        let src = {
+            let mut v = alloc_view(Byteswap::new(SoA::multi_blob(&d, ArrayDims::linear(16))));
+            fill_distinct(&mut v);
+            v
+        };
+        let mut dst = alloc_view(Byteswap::new(SoA::multi_blob(&d, ArrayDims::linear(16))));
+        assert_eq!(copy(&src, &mut dst), CopyMethod::Blobwise);
+        assert!(views_equal(&src, &dst));
+        // Different chunkable layouts, both byteswapped: the chunked
+        // strategy moves the swapped bytes verbatim too.
+        let mut chunked = alloc_view(Byteswap::new(AoSoA::new(&d, ArrayDims::linear(16), 4)));
+        assert_eq!(copy(&src, &mut chunked), CopyMethod::AoSoAChunked);
+        assert!(views_equal(&src, &chunked));
+    }
+
+    #[test]
+    fn byteswap_generic_pairs_stay_fieldwise() {
+        // A byteswapped side whose inner addressing is generic (Morton
+        // curve) has no closed form: the element gather still applies
+        // and converts the representation per field.
+        use crate::array::MortonCurve;
+        let d = particle_dim();
+        let dims = ArrayDims::from([4, 4]);
+        let src = {
+            let mut v = alloc_view(Byteswap::new(AoS::with_linearizer(
+                &d,
+                dims.clone(),
+                MortonCurve,
+                true,
+            )));
+            fill_distinct(&mut v);
+            v
+        };
+        let mut dst = alloc_view(SoA::multi_blob(&d, dims));
         assert_eq!(copy(&src, &mut dst), CopyMethod::FieldWise);
         assert!(views_equal(&src, &dst));
     }

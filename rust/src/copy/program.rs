@@ -20,17 +20,26 @@
 //!   AVX2 gathers for 4/8-byte elements on the detected (or pinned,
 //!   [`CopyProgram::execute_with_path`]) SIMD path — the op list itself
 //!   never depends on the path.
+//! * [`CopyOp::SwapRun`] — affine ↔ affine leaves with *mismatched*
+//!   byte representation (exactly one side byteswapped): a strided run
+//!   that writes each element's bytes reversed — the closed form behind
+//!   `copy::wire`'s cross-endian pack/unpack. 1-byte leaves degrade to
+//!   verbatim runs (reversal is the identity).
 //! * [`CopyOp::Gather`] — element fallback when either side is generic
-//!   or the byte representations differ; resolves through the mappings
-//!   at execution time, bit-identical to [`super::copy_naive`].
+//!   (including representation conversion outside the affine closed
+//!   form); resolves through the mappings at execution time,
+//!   bit-identical to [`super::copy_naive`].
 //!
-//! Strategy selection (also what [`super::copy`] reports):
+//! Strategy selection (also what [`super::copy`] reports). "Equal
+//! representation" means both sides native *or* both byteswapped —
+//! equal-representation bytes move verbatim:
 //!
 //! | Pair | Strategy | [`super::CopyMethod`] |
 //! |---|---|---|
 //! | identical layouts | per-blob memcpy | `Blobwise` |
-//! | both native + chunkable | span-merged chunk runs | `AoSoAChunked` |
-//! | both native + affine | strided runs | `Program` |
+//! | equal repr + chunkable | span-merged chunk runs | `AoSoAChunked` |
+//! | equal repr + affine | strided runs | `Program` |
+//! | mismatched repr + affine | per-leaf swap runs | `SwapProgram` |
 //! | otherwise | gather | `FieldWise` |
 //!
 //! The chunked strategy caps run lengths at **both** plans'
@@ -53,8 +62,8 @@ use crate::view::simd::{detect, SimdPath};
 use crate::view::View;
 
 use super::{
-    layouts_identical_with, plans_chunk_compatible, plans_strided_compatible, ChunkOrder,
-    CopyMethod,
+    layouts_identical_with, plans_chunk_compatible, plans_strided_compatible,
+    plans_swap_compatible, ChunkOrder, CopyMethod,
 };
 
 /// One instruction of a compiled [`CopyProgram`].
@@ -72,6 +81,20 @@ pub enum CopyOp {
     /// `count` elements of `elem` bytes each, at (possibly) different
     /// strides on the two sides.
     StridedRun {
+        src_blob: usize,
+        src_off: usize,
+        src_stride: usize,
+        dst_blob: usize,
+        dst_off: usize,
+        dst_stride: usize,
+        elem: usize,
+        count: usize,
+    },
+    /// Like [`CopyOp::StridedRun`], but each element's bytes are
+    /// written in **reversed** order — the closed form of a native ↔
+    /// byteswapped affine pair (`elem` ≥ 2; 1-byte elements compile to
+    /// verbatim runs since reversal is the identity).
+    SwapRun {
         src_blob: usize,
         src_off: usize,
         src_stride: usize,
@@ -265,6 +288,28 @@ impl CopyProgram {
                         count,
                     );
                 }
+                CopyOp::SwapRun {
+                    src_blob,
+                    src_off,
+                    src_stride,
+                    dst_blob,
+                    dst_off,
+                    dst_stride,
+                    elem,
+                    count,
+                } => {
+                    let (_, dblobs) = dst.mapping_and_blobs_mut();
+                    swap_run(
+                        src.blobs()[src_blob].as_bytes(),
+                        src_off,
+                        src_stride,
+                        dblobs[dst_blob].as_bytes_mut(),
+                        dst_off,
+                        dst_stride,
+                        elem,
+                        count,
+                    );
+                }
                 CopyOp::Gather { start, end } => {
                     for lin in start..end {
                         for leaf in 0..info.leaf_count() {
@@ -274,6 +319,29 @@ impl CopyProgram {
                     }
                 }
             }
+        }
+    }
+}
+
+/// Scalar kernel of [`CopyOp::SwapRun`]: move `count` elements of
+/// `elem` bytes, writing each element's bytes in reversed order — the
+/// representation conversion between a native and a byteswapped side.
+#[allow(clippy::too_many_arguments)]
+fn swap_run(
+    sbytes: &[u8],
+    src_off: usize,
+    src_stride: usize,
+    dbytes: &mut [u8],
+    dst_off: usize,
+    dst_stride: usize,
+    elem: usize,
+    count: usize,
+) {
+    for i in 0..count {
+        let s = &sbytes[src_off + i * src_stride..src_off + i * src_stride + elem];
+        let d = &mut dbytes[dst_off + i * dst_stride..dst_off + i * dst_stride + elem];
+        for b in 0..elem {
+            d[b] = s[elem - 1 - b];
         }
     }
 }
@@ -315,7 +383,8 @@ pub(crate) fn compile_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
 }
 
 /// Compile the record range `start..end` with the best non-identical
-/// strategy: span-merged chunk runs, strided runs, or gather.
+/// strategy: span-merged chunk runs, strided runs, swap runs, or
+/// gather.
 pub(crate) fn compile_range_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
     src: &MS,
     dst: &MD,
@@ -329,6 +398,8 @@ pub(crate) fn compile_range_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
         compile_chunk_range(src, dst, sp, dp, order, start, end)
     } else if plans_strided_compatible(sp, dp) {
         compile_strided_range(src, sp, dp, start, end)
+    } else if plans_swap_compatible(sp, dp) {
+        compile_swap_range(src, sp, dp, start, end)
     } else {
         let ops =
             if start < end { vec![CopyOp::Gather { start, end }] } else { Vec::new() };
@@ -419,6 +490,60 @@ fn compile_strided_range<MS: Mapping + ?Sized>(
     CopyProgram { count: sp.count(), method: CopyMethod::Program, ops: sink.ops }
 }
 
+/// The swap strategy: an affine pair with exactly one byteswapped side
+/// ([`plans_swap_compatible`]). Same per-leaf shape as the strided
+/// strategy, but every multi-byte leaf becomes a [`CopyOp::SwapRun`]
+/// that reverses element bytes in flight — the `copy::wire` cross-endian
+/// pack/unpack path. 1-byte leaves need no reversal and compile to the
+/// verbatim ops of the strided strategy.
+fn compile_swap_range<MS: Mapping + ?Sized>(
+    src: &MS,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    start: usize,
+    end: usize,
+) -> CopyProgram {
+    let info = src.info().clone();
+    let mut sink = OpSink::new();
+    if start < end {
+        for leaf in 0..info.leaf_count() {
+            let e = info.fields[leaf].size();
+            let a = sp.affine_leaf(leaf).expect("swap strategy needs affine src");
+            let b = dp.affine_leaf(leaf).expect("swap strategy needs affine dst");
+            if e <= 1 {
+                // Byte reversal of a 1-byte element is the identity.
+                if a.stride == e && b.stride == e {
+                    let (so, doff) = (a.base + start * e, b.base + start * e);
+                    sink.memcpy(a.blob, so, b.blob, doff, (end - start) * e);
+                } else {
+                    sink.ops.push(CopyOp::StridedRun {
+                        src_blob: a.blob,
+                        src_off: a.base + start * a.stride,
+                        src_stride: a.stride,
+                        dst_blob: b.blob,
+                        dst_off: b.base + start * b.stride,
+                        dst_stride: b.stride,
+                        elem: e,
+                        count: end - start,
+                    });
+                }
+            } else {
+                sink.ops.push(CopyOp::SwapRun {
+                    src_blob: a.blob,
+                    src_off: a.base + start * a.stride,
+                    src_stride: a.stride,
+                    dst_blob: b.blob,
+                    dst_off: b.base + start * b.stride,
+                    dst_stride: b.stride,
+                    elem: e,
+                    count: end - start,
+                });
+            }
+        }
+    }
+    CopyProgram { count: sp.count(), method: CopyMethod::SwapProgram, ops: sink.ops }
+}
+
 /// Split the record range into plan-aligned shards and compile one
 /// sub-program per shard, for [`execute_parallel`]. Falls back to a
 /// single full program (executed serially) when the pair has no
@@ -444,10 +569,11 @@ pub(crate) fn shard_programs_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
     threads: usize,
 ) -> Vec<CopyProgram> {
     let n = sp.count();
-    // Same predicate pair as `compile_range_with`'s strategy choice, so
+    // Same predicate set as `compile_range_with`'s strategy choice, so
     // sharded ranges can never land on the unshardable gather fallback.
-    let closed_range_form =
-        plans_chunk_compatible(sp, dp) || plans_strided_compatible(sp, dp);
+    let closed_range_form = plans_chunk_compatible(sp, dp)
+        || plans_strided_compatible(sp, dp)
+        || plans_swap_compatible(sp, dp);
     // Identical layouts keep the single per-blob memcpy program: a
     // memcpy is already memory-bound, and the dispatcher keeps
     // reporting `Blobwise`.
@@ -703,18 +829,25 @@ impl ProgramCache {
 ///
 /// The proof is purely structural, over the compiled ops:
 ///
-/// * `Memcpy` spans and contiguous `StridedRun`s (stride == elem)
-///   cover their byte ranges directly.
-/// * Gapped `StridedRun`s are grouped into interleaved families (same
-///   destination blob, stride and count): when a family's pieces tile
-///   one full period — per-leaf runs into a packed-AoS destination —
-///   the family covers its whole `count * stride` range.
+/// * `Memcpy` spans and contiguous `StridedRun`s/`SwapRun`s
+///   (stride == elem) cover their byte ranges directly — a swap run
+///   writes the same bytes as a strided run, just reordered within
+///   each element.
+/// * Gapped `StridedRun`s/`SwapRun`s are grouped into interleaved
+///   families (same destination blob, stride and count): when a
+///   family's pieces tile one full period — per-leaf runs into a
+///   packed-AoS destination — the family covers its whole
+///   `count * stride` range.
 /// * `Gather` ops resolve through the mappings at execution time, so
 ///   they never prove coverage.
 ///
 /// Conservative by construction: `false` means "re-zero", never an
 /// unsound skip. Aligned destinations with padding holes (aligned AoS,
-/// AoSoA tail blocks) correctly report `false`.
+/// AoSoA tail blocks) correctly report `false`, and **all** span
+/// arithmetic is overflow-checked — an op list whose extents wrap
+/// `usize` (a corrupt or adversarial program, e.g. from a forged wire
+/// manifest) can never alias a small in-bounds span and falsely prove
+/// coverage; it reports `false` instead.
 pub fn programs_cover_dst(programs: &[CopyProgram], dst_blob_sizes: &[usize]) -> bool {
     /// A gapped strided run awaiting the family analysis:
     /// (program index, dst offset, dst stride, element size, count).
@@ -731,10 +864,14 @@ pub fn programs_cover_dst(programs: &[CopyProgram], dst_blob_sizes: &[usize]) ->
                         return false;
                     }
                     if len > 0 {
-                        dense[dst_blob].push((dst_off, dst_off + len));
+                        match dst_off.checked_add(len) {
+                            Some(end) => dense[dst_blob].push((dst_off, end)),
+                            None => return false,
+                        }
                     }
                 }
-                CopyOp::StridedRun { dst_blob, dst_off, dst_stride, elem, count, .. } => {
+                CopyOp::StridedRun { dst_blob, dst_off, dst_stride, elem, count, .. }
+                | CopyOp::SwapRun { dst_blob, dst_off, dst_stride, elem, count, .. } => {
                     if dst_blob >= nblobs {
                         return false;
                     }
@@ -742,7 +879,10 @@ pub fn programs_cover_dst(programs: &[CopyProgram], dst_blob_sizes: &[usize]) ->
                         continue;
                     }
                     if dst_stride == elem {
-                        dense[dst_blob].push((dst_off, dst_off + count * elem));
+                        match count.checked_mul(elem).and_then(|b| dst_off.checked_add(b)) {
+                            Some(end) => dense[dst_blob].push((dst_off, end)),
+                            None => return false,
+                        }
                     } else {
                         strided[dst_blob].push((pi, dst_off, dst_stride, elem, count));
                     }
@@ -777,14 +917,21 @@ pub fn programs_cover_dst(programs: &[CopyProgram], dst_blob_sizes: &[usize]) ->
             let mut tiles = true;
             for (off, elem) in pieces {
                 let a = off - r0;
-                if a > covered || a + elem > stride {
+                let piece_end = match a.checked_add(elem) {
+                    Some(e) => e,
+                    None => return false,
+                };
+                if a > covered || piece_end > stride {
                     tiles = false;
                     break;
                 }
-                covered = covered.max(a + elem);
+                covered = covered.max(piece_end);
             }
             if tiles && covered >= stride {
-                spans.push((r0, r0 + count * stride));
+                match count.checked_mul(stride).and_then(|b| r0.checked_add(b)) {
+                    Some(end) => spans.push((r0, end)),
+                    None => return false,
+                }
             }
             // Non-tiling families contribute nothing: their gaps make
             // the final check fail closed.
@@ -935,6 +1082,34 @@ where
                 elem,
                 count,
             );
+        }
+        CopyOp::SwapRun {
+            src_blob,
+            src_off,
+            src_stride,
+            dst_blob,
+            dst_off,
+            dst_stride,
+            elem,
+            count,
+        } => {
+            if count == 0 {
+                return;
+            }
+            let sbytes = src.blobs()[src_blob].as_bytes();
+            let (dptr, dlen) = raw.ptrs[dst_blob];
+            assert!(
+                src_off + (count - 1) * src_stride + elem <= sbytes.len()
+                    && dst_off + (count - 1) * dst_stride + elem <= dlen
+            );
+            let sptr = sbytes.as_ptr();
+            for i in 0..count {
+                let s = sptr.add(src_off + i * src_stride);
+                let d = dptr.add(dst_off + i * dst_stride);
+                for b in 0..elem {
+                    *d.add(b) = *s.add(elem - 1 - b);
+                }
+            }
         }
         CopyOp::Gather { .. } => unreachable!("gather ops are never sharded"),
     }
@@ -1223,16 +1398,113 @@ mod tests {
 
     #[test]
     fn gather_fallback_is_single_program() {
-        use crate::mapping::Byteswap;
+        use crate::array::MortonCurve;
+        // A space-filling-curve layout has a generic plan — the only
+        // remaining route to the gather fallback now that byteswapped
+        // affine pairs compile to swap programs.
         let d = particle_dim();
-        let dims = ArrayDims::linear(16);
-        let src_m = Byteswap::new(AoS::packed(&d, dims.clone()));
+        let dims = ArrayDims::from([4, 4]);
+        let src_m = AoS::with_linearizer(&d, dims.clone(), MortonCurve, true);
         let dst_m = SoA::multi_blob(&d, dims.clone());
         let prog = CopyProgram::compile(&src_m, &dst_m);
         assert_eq!(prog.method(), CopyMethod::FieldWise);
         assert!(!prog.is_closed_form());
         assert_eq!(shard_programs(&src_m, &dst_m, 8).len(), 1);
         check_against_naive(src_m, dst_m);
+    }
+
+    #[test]
+    fn golden_swap_pair_compiles_swap_runs() {
+        use crate::mapping::Byteswap;
+        // Byteswapped packed AoS → native SoA mb: a representation
+        // mismatch over an affine pair — one 4-byte swap run per leaf.
+        let m_src = Byteswap::new(AoS::packed(&xy(), ArrayDims::linear(3)));
+        let m_dst = SoA::multi_blob(&xy(), ArrayDims::linear(3));
+        let prog = CopyProgram::compile(&m_src, &m_dst);
+        assert_eq!(prog.method(), CopyMethod::SwapProgram);
+        assert!(prog.is_closed_form());
+        assert_eq!(
+            prog.ops(),
+            &[
+                CopyOp::SwapRun {
+                    src_blob: 0,
+                    src_off: 0,
+                    src_stride: 8,
+                    dst_blob: 0,
+                    dst_off: 0,
+                    dst_stride: 4,
+                    elem: 4,
+                    count: 3
+                },
+                CopyOp::SwapRun {
+                    src_blob: 0,
+                    src_off: 4,
+                    src_stride: 8,
+                    dst_blob: 1,
+                    dst_off: 0,
+                    dst_stride: 4,
+                    elem: 4,
+                    count: 3
+                },
+            ]
+        );
+        check_against_naive(m_src, m_dst);
+        // The reverse direction (native → byteswapped, the wire pack
+        // path) is equally closed-form.
+        let m_src = SoA::multi_blob(&xy(), ArrayDims::linear(3));
+        let m_dst = Byteswap::new(AoS::packed(&xy(), ArrayDims::linear(3)));
+        let prog = CopyProgram::compile(&m_src, &m_dst);
+        assert_eq!(prog.method(), CopyMethod::SwapProgram);
+        assert!(prog.is_closed_form());
+        check_against_naive(m_src, m_dst);
+    }
+
+    #[test]
+    fn swap_programs_move_single_byte_leaves_verbatim() {
+        use crate::mapping::Byteswap;
+        // particle_dim has five multi-byte leaves (u16, 3×f32, f64) and
+        // three 1-byte bool leaves. SoA mb → Byteswap(SoA mb) puts every
+        // leaf at stride == elem: multi-byte leaves swap, 1-byte leaves
+        // coalesce to plain memcpys (reversal is the identity).
+        let d = particle_dim();
+        let dims = ArrayDims::linear(13);
+        let m_src = SoA::multi_blob(&d, dims.clone());
+        let m_dst = Byteswap::new(SoA::multi_blob(&d, dims.clone()));
+        let prog = CopyProgram::compile(&m_src, &m_dst);
+        assert_eq!(prog.method(), CopyMethod::SwapProgram);
+        assert!(prog.is_closed_form());
+        let swaps =
+            prog.ops().iter().filter(|op| matches!(op, CopyOp::SwapRun { .. })).count();
+        let verbatim =
+            prog.ops().iter().filter(|op| matches!(op, CopyOp::Memcpy { .. })).count();
+        assert_eq!(swaps, 5, "one swap run per multi-byte leaf");
+        assert_eq!(verbatim, 3, "1-byte leaves move verbatim");
+        check_against_naive(m_src, m_dst);
+    }
+
+    #[test]
+    fn swap_programs_shard_and_match_serial() {
+        use crate::mapping::Byteswap;
+        let d = particle_dim();
+        let dims = ArrayDims::linear(4096 + 17);
+        let m_src = Byteswap::new(AoS::packed(&d, dims.clone()));
+        let m_dst = SoA::multi_blob(&d, dims.clone());
+        let mut src = alloc_view(m_src.clone());
+        fill_distinct(&mut src);
+        let mut oracle = alloc_view(m_dst.clone());
+        copy_naive(&src, &mut oracle);
+        let prog = CopyProgram::compile(&m_src, &m_dst);
+        assert_eq!(prog.method(), CopyMethod::SwapProgram);
+        let mut serial = alloc_view(m_dst.clone());
+        prog.execute(&src, &mut serial);
+        assert_eq!(serial.blobs(), oracle.blobs(), "serial swap != naive oracle");
+        for threads in [2usize, 5] {
+            let progs = shard_programs(&m_src, &m_dst, threads);
+            assert!(progs.len() > 1, "swap pairs must shard");
+            let mut par = alloc_view(m_dst.clone());
+            execute_parallel(&progs, &src, &mut par);
+            assert_eq!(par.blobs(), oracle.blobs(), "threads {threads}");
+        }
     }
 
     #[test]
@@ -1336,10 +1608,80 @@ mod tests {
         let prog = CopyProgram::compile(&aos, &packed);
         assert_eq!(prog.method(), CopyMethod::Program);
         assert!(programs_cover_dst(&[prog], &dst_sizes(&packed)));
-        // Gather programs never prove coverage.
+        // Swap programs cover like strided programs: per-leaf swap runs
+        // into un-padded SoA write every byte.
         use crate::mapping::Byteswap;
         let prog = CopyProgram::compile(&Byteswap::new(AoS::packed(&d, dims.clone())), &soa);
-        assert!(!programs_cover_dst(&[prog], &dst_sizes(&soa)));
+        assert_eq!(prog.method(), CopyMethod::SwapProgram);
+        assert!(programs_cover_dst(&[prog], &dst_sizes(&soa)));
+        // Gather programs never prove coverage.
+        use crate::array::MortonCurve;
+        let dims2 = ArrayDims::from([8, 8]);
+        let morton = AoS::with_linearizer(&d, dims2.clone(), MortonCurve, true);
+        let soa2 = SoA::multi_blob(&d, dims2);
+        let prog = CopyProgram::compile(&morton, &soa2);
+        assert_eq!(prog.method(), CopyMethod::FieldWise);
+        assert!(!programs_cover_dst(&[prog], &dst_sizes(&soa2)));
+    }
+
+    #[test]
+    fn coverage_proof_rejects_overflowing_spans() {
+        // Untrusted op lists (a corrupt program, a forged wire message)
+        // must never prove coverage through wrapping span arithmetic —
+        // each case below produced a small aliased span (and a false
+        // `true`) under unchecked `+`/`*`.
+        //
+        // Dense strided form: count * elem wraps to 16.
+        let p = CopyProgram {
+            count: 4,
+            method: CopyMethod::Program,
+            ops: vec![CopyOp::StridedRun {
+                src_blob: 0,
+                src_off: 0,
+                src_stride: 16,
+                dst_blob: 0,
+                dst_off: 0,
+                dst_stride: 16,
+                elem: 16,
+                count: usize::MAX / 16 + 2,
+            }],
+        };
+        assert!(!programs_cover_dst(&[p], &[16]));
+        // Memcpy: dst_off + len wraps past zero behind a legit first
+        // span.
+        let p = CopyProgram {
+            count: 1,
+            method: CopyMethod::Blobwise,
+            ops: vec![
+                CopyOp::Memcpy { src_blob: 0, src_off: 0, dst_blob: 0, dst_off: 0, len: 1 },
+                CopyOp::Memcpy {
+                    src_blob: 0,
+                    src_off: 0,
+                    dst_blob: 0,
+                    dst_off: 1,
+                    len: usize::MAX,
+                },
+            ],
+        };
+        assert!(!programs_cover_dst(&[p], &[1]));
+        // Interleaved family whose pieces tile the stride but whose
+        // full-period span r0 + count * stride wraps to a small end.
+        let run = |off: usize| CopyOp::StridedRun {
+            src_blob: 0,
+            src_off: 0,
+            src_stride: 8,
+            dst_blob: 0,
+            dst_off: off,
+            dst_stride: 8,
+            elem: 4,
+            count: usize::MAX / 8 + 2,
+        };
+        let p = CopyProgram {
+            count: 2,
+            method: CopyMethod::Program,
+            ops: vec![run(0), run(4)],
+        };
+        assert!(!programs_cover_dst(&[p], &[8]));
     }
 
     #[test]

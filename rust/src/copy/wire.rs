@@ -1,0 +1,431 @@
+//! `copy::wire`: layout-aware serialization over process boundaries.
+//!
+//! A wire message is a self-describing layout manifest line
+//! ([`WireManifest`], the whitespace format of `runtime::manifest`)
+//! plus the payload blobs concatenated in order. The pack and unpack
+//! steps are **compiled copies**, not bespoke encoders: the wire layout
+//! is just another mapping (dense packed AoS by default), so
+//! [`serialize`] compiles a [`CopyProgram`] whose destination is the
+//! wire buffer and [`deserialize_into`] compiles the reverse. Every
+//! strategy of the program compiler applies unchanged:
+//!
+//! * A packed-AoS source serializes as a handful of coalesced memcpys
+//!   (`Blobwise`/`AoSoAChunked`).
+//! * A cross-endian target ([`serialize_endian`] with the peer's
+//!   [`WireEndian`]) wraps the wire mapping in
+//!   [`crate::mapping::Byteswap`]; affine pairs then compile to
+//!   per-leaf [`super::CopyOp::SwapRun`]s (`SwapProgram`) instead of
+//!   degrading to the element gather — and a *byteswapped source* sent
+//!   in its own byte order moves verbatim, because equal-representation
+//!   pairs stay on the memcpy strategies.
+//!
+//! The receiving side rebuilds a [`View`] from bytes alone:
+//! [`wire_view`] is the zero-copy read view straight over the payload
+//! (foreign byte orders read through swapping accessors), and
+//! [`deserialize`]/[`deserialize_into`] compile the copy out into a
+//! native-layout view. Framing for pipes/sockets is [`write_message`] /
+//! [`read_message`]: a `LLAMA-WIRE <manifest_len> <payload_len>`
+//! header line, the manifest, then the payload — the manifest is
+//! parsed and cross-checked **before** the payload length is trusted,
+//! so a corrupted or forged header can never cause an oversized read.
+//!
+//! Wire buffers come from any [`BlobRecycler`] ([`serialize_with`]):
+//! frame exchange loops draw them from a [`crate::blob::BlobPool`],
+//! and the zero fill is skipped whenever [`programs_cover_dst`] proves
+//! the pack program overwrites every payload byte.
+
+use std::io::{BufRead, Write};
+
+use crate::blob::{Blob, BlobMut, BlobRecycler, ExternalBytes, ExternalBytesMut, VecAlloc};
+use crate::error::{Context, Result};
+use crate::mapping::{DynMapping, Mapping, WireRecipe};
+use crate::runtime::{WireEndian, WireManifest};
+use crate::view::View;
+use crate::{bail, ensure};
+
+use super::{programs_cover_dst, same_data_space, CopyMethod, CopyProgram};
+
+/// Framing magic of [`write_message`] header lines.
+pub const WIRE_MAGIC: &str = "LLAMA-WIRE";
+
+/// Upper bound on a framed manifest line. Manifests are one line of
+/// text (a record grammar plus a few tokens); anything larger is a
+/// corrupt or hostile header, rejected before allocation.
+pub const MAX_MANIFEST_BYTES: usize = 1 << 20;
+
+/// A serialized view: the self-describing manifest plus the payload
+/// (all wire blobs concatenated in manifest order).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireMessage<P: Blob = Vec<u8>> {
+    pub manifest: WireManifest,
+    pub payload: P,
+}
+
+impl<P: Blob> WireMessage<P> {
+    /// Total message size on the wire (header excluded).
+    pub fn payload_len(&self) -> usize {
+        self.payload.as_bytes().len()
+    }
+}
+
+/// Split a payload buffer into per-blob slices of the manifest's
+/// declared sizes. Panics if the buffer is too short — callers check
+/// [`WireManifest::payload_len`] first.
+fn split_blobs<'a>(mut bytes: &'a [u8], sizes: &[usize]) -> Vec<ExternalBytes<'a>> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &s in sizes {
+        let (head, tail) = bytes.split_at(s);
+        out.push(ExternalBytes(head));
+        bytes = tail;
+    }
+    out
+}
+
+fn split_blobs_mut<'a>(mut bytes: &'a mut [u8], sizes: &[usize]) -> Vec<ExternalBytesMut<'a>> {
+    let mut out = Vec::with_capacity(sizes.len());
+    for &s in sizes {
+        let (head, tail) = bytes.split_at_mut(s);
+        out.push(ExternalBytesMut(head));
+        bytes = tail;
+    }
+    out
+}
+
+/// Serialize `src` into a dense packed-AoS wire buffer in this
+/// process's byte order — the cheapest layout to re-view on an
+/// identical-endian peer.
+pub fn serialize<M, B>(src: &View<M, B>) -> Result<WireMessage>
+where
+    M: Mapping,
+    B: Blob,
+{
+    serialize_endian(src, WireEndian::native())
+}
+
+/// [`serialize`] with an explicit payload byte order — pass the *peer's*
+/// endianness to pre-swap on the sending side (the receiver then reads
+/// natively). Cross-endian packing compiles to swap runs, never the
+/// element gather.
+pub fn serialize_endian<M, B>(src: &View<M, B>, endian: WireEndian) -> Result<WireMessage>
+where
+    M: Mapping,
+    B: Blob,
+{
+    serialize_with(src, endian, &VecAlloc).map(|(msg, _)| msg)
+}
+
+/// The full-control serializer: wire buffers come from `recycler`
+/// (e.g. a shared [`crate::blob::BlobPool`] in a frame-exchange loop),
+/// and the compiled pack strategy is reported alongside the message.
+/// The buffer's zero fill is skipped when [`programs_cover_dst`]
+/// proves the pack program writes every payload byte.
+pub fn serialize_with<M, B, R>(
+    src: &View<M, B>,
+    endian: WireEndian,
+    recycler: &R,
+) -> Result<(WireMessage<R::Blob>, CopyMethod)>
+where
+    M: Mapping,
+    B: Blob,
+    R: BlobRecycler,
+{
+    let manifest = WireManifest::describe(
+        src.mapping().info().dim.clone(),
+        src.mapping().dims().clone(),
+        WireRecipe::AosPacked,
+        endian,
+    )?;
+    // Non-native orders come back wrapped in Byteswap: the pack copy
+    // below then compiles to swap runs (or verbatim moves, if the
+    // source representation already matches).
+    let wire_mapping = manifest.build_mapping()?;
+    let prog = CopyProgram::compile(src.mapping(), &wire_mapping);
+    let covered = programs_cover_dst(
+        std::slice::from_ref(&prog),
+        &manifest.blob_sizes,
+    );
+    let mut payload = if covered {
+        recycler.allocate_covered(manifest.payload_len())
+    } else {
+        recycler.allocate(manifest.payload_len())
+    };
+    let method = prog.method();
+    {
+        let blobs = split_blobs_mut(payload.as_bytes_mut(), &manifest.blob_sizes);
+        let mut dst = View::from_blobs(&wire_mapping, blobs);
+        prog.execute(src, &mut dst);
+    }
+    Ok((WireMessage { manifest, payload }, method))
+}
+
+/// Zero-copy read view straight over a message's payload bytes: the
+/// manifest's mapping (wrapped in [`crate::mapping::Byteswap`] for
+/// foreign byte orders, so accessors swap on read) over borrowed
+/// per-blob slices. No bytes move.
+pub fn wire_view<P: Blob>(msg: &WireMessage<P>) -> Result<View<DynMapping, ExternalBytes<'_>>> {
+    let mapping = msg.manifest.build_mapping()?;
+    let payload = msg.payload.as_bytes();
+    ensure!(
+        payload.len() == msg.manifest.payload_len(),
+        "wire payload is {} bytes, manifest declares {}",
+        payload.len(),
+        msg.manifest.payload_len()
+    );
+    let blobs = split_blobs(payload, &msg.manifest.blob_sizes);
+    Ok(View::from_blobs(mapping, blobs))
+}
+
+/// Deserialize a message into an existing view of the same data space
+/// (any layout — the unpack is a compiled copy). Returns the strategy
+/// used: native payloads into AoSoA-family layouts unpack as verbatim
+/// chunk moves, cross-endian payloads as swap runs.
+pub fn deserialize_into<M, B, P>(msg: &WireMessage<P>, dst: &mut View<M, B>) -> Result<CopyMethod>
+where
+    M: Mapping,
+    B: BlobMut,
+    P: Blob,
+{
+    let src = wire_view(msg)?;
+    if !same_data_space(src.mapping(), dst.mapping()) {
+        bail!(
+            "wire message data space ({} records of {:?}) does not match \
+             the destination view ({} records)",
+            src.count(),
+            msg.manifest.dims.extents(),
+            dst.count()
+        );
+    }
+    let prog = CopyProgram::compile(src.mapping(), dst.mapping());
+    prog.execute(&src, dst);
+    Ok(prog.method())
+}
+
+/// Deserialize a message into a freshly allocated **native** view in
+/// the manifest's recipe layout: the round-trip inverse of
+/// [`serialize`], independent of the payload's byte order.
+pub fn deserialize<P: Blob>(msg: &WireMessage<P>) -> Result<(View<DynMapping, Vec<u8>>, CopyMethod)> {
+    let mapping = msg.manifest.recipe.build(&msg.manifest.record, msg.manifest.dims.clone());
+    let mut dst = crate::view::alloc_view(mapping);
+    let method = deserialize_into(msg, &mut dst)?;
+    Ok((dst, method))
+}
+
+/// Frame a message onto a byte stream:
+///
+/// ```text
+/// LLAMA-WIRE <manifest_len> <payload_len>\n
+/// <manifest line (manifest_len bytes, no trailing newline)>
+/// <payload (payload_len bytes)>
+/// ```
+pub fn write_message<W, P>(w: &mut W, msg: &WireMessage<P>) -> Result<()>
+where
+    W: Write,
+    P: Blob,
+{
+    let line = msg.manifest.to_line()?;
+    let payload = msg.payload.as_bytes();
+    ensure!(
+        payload.len() == msg.manifest.payload_len(),
+        "refusing to frame a message whose payload ({} bytes) disagrees \
+         with its manifest ({} bytes)",
+        payload.len(),
+        msg.manifest.payload_len()
+    );
+    writeln!(w, "{WIRE_MAGIC} {} {}", line.len(), payload.len())?;
+    w.write_all(line.as_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed message; `Ok(None)` on a clean end of stream
+/// (zero bytes before the next header).
+///
+/// Validation order matters: the header's manifest length is capped
+/// ([`MAX_MANIFEST_BYTES`]), the manifest is parsed and cross-checked
+/// against its own rebuilt layout, and only then is the header's
+/// payload length compared against the manifest's — so the payload
+/// allocation is always bounded by a self-consistent layout, never by
+/// an attacker-controlled number alone.
+pub fn read_message<R: BufRead>(r: &mut R) -> Result<Option<WireMessage>> {
+    let mut header = String::new();
+    if r.read_line(&mut header)? == 0 {
+        return Ok(None);
+    }
+    let parts: Vec<&str> = header.split_whitespace().collect();
+    ensure!(
+        parts.len() == 3 && parts[0] == WIRE_MAGIC,
+        "bad wire header {:?}",
+        header.trim_end()
+    );
+    let manifest_len: usize = parts[1].parse().context("wire header manifest length")?;
+    let payload_len: usize = parts[2].parse().context("wire header payload length")?;
+    ensure!(
+        manifest_len <= MAX_MANIFEST_BYTES,
+        "wire manifest length {manifest_len} exceeds the {MAX_MANIFEST_BYTES}-byte cap"
+    );
+    let mut manifest_bytes = vec![0u8; manifest_len];
+    r.read_exact(&mut manifest_bytes)?;
+    let line = std::str::from_utf8(&manifest_bytes).context("wire manifest is not UTF-8")?;
+    let manifest = WireManifest::parse_line(line)?;
+    ensure!(
+        payload_len == manifest.payload_len(),
+        "wire header declares {payload_len} payload bytes, manifest {}",
+        manifest.payload_len()
+    );
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(WireMessage { manifest, payload }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::ArrayDims;
+    use crate::copy::test_support::fill_distinct;
+    use crate::copy::views_equal;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::{AoS, AoSoA, Byteswap, SoA};
+    use crate::view::alloc_view;
+
+    #[test]
+    fn round_trip_preserves_every_field() {
+        let d = particle_dim();
+        let mut src = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(19)));
+        fill_distinct(&mut src);
+        let msg = serialize(&src).unwrap();
+        assert_eq!(msg.payload_len(), msg.manifest.payload_len());
+        // Zero-copy wire view reads the payload in place...
+        assert!(views_equal(&src, &wire_view(&msg).unwrap()));
+        // ...and the compiled unpack lands in any layout.
+        let mut dst = alloc_view(AoSoA::new(&d, ArrayDims::linear(19), 4));
+        let method = deserialize_into(&msg, &mut dst).unwrap();
+        assert_eq!(method, CopyMethod::AoSoAChunked);
+        assert!(views_equal(&src, &dst));
+    }
+
+    #[test]
+    fn native_pack_of_packed_aos_is_verbatim() {
+        // Packed AoS → the packed-AoS wire layout is the identical
+        // pair: serialization is one memcpy.
+        let d = particle_dim();
+        let mut src = alloc_view(AoS::packed(&d, ArrayDims::linear(8)));
+        fill_distinct(&mut src);
+        let (msg, method) = serialize_with(&src, WireEndian::native(), &VecAlloc).unwrap();
+        assert_eq!(method, CopyMethod::Blobwise);
+        assert!(views_equal(&src, &wire_view(&msg).unwrap()));
+    }
+
+    #[test]
+    fn cross_endian_pack_compiles_swap_runs_not_gather() {
+        let d = particle_dim();
+        let mut src = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(11)));
+        fill_distinct(&mut src);
+        let (msg, method) =
+            serialize_with(&src, WireEndian::native().swapped(), &VecAlloc).unwrap();
+        assert_eq!(method, CopyMethod::SwapProgram);
+        // The foreign-order payload still reads correctly through the
+        // swapping accessors of the wire view...
+        assert!(views_equal(&src, &wire_view(&msg).unwrap()));
+        // ...and unpacking back to a native layout swaps again.
+        let (back, method) = deserialize(&msg).unwrap();
+        assert_eq!(method, CopyMethod::SwapProgram);
+        assert!(views_equal(&src, &back));
+    }
+
+    #[test]
+    fn byteswapped_source_sent_in_its_own_order_moves_verbatim() {
+        // A view already holding big-endian bytes (Byteswap mapping on
+        // a little-endian host), serialized *as* the foreign order:
+        // equal representation on both sides — bytes move verbatim,
+        // no per-element swapping.
+        let d = particle_dim();
+        let mut src =
+            alloc_view(Byteswap::new(AoS::packed(&d, ArrayDims::linear(6))));
+        fill_distinct(&mut src);
+        let (msg, method) =
+            serialize_with(&src, WireEndian::native().swapped(), &VecAlloc).unwrap();
+        assert_eq!(method, CopyMethod::Blobwise);
+        assert!(views_equal(&src, &wire_view(&msg).unwrap()));
+    }
+
+    #[test]
+    fn pooled_wire_buffers_skip_the_zero_fill_when_covered() {
+        use crate::blob::BlobPool;
+        let d = particle_dim();
+        let mut src = alloc_view(AoS::packed(&d, ArrayDims::linear(64)));
+        fill_distinct(&mut src);
+        let pool = BlobPool::new();
+        // Warm the pool, then re-serialize: the pack program covers the
+        // dense wire buffer, so the recycled buffer skips its re-zero.
+        drop(serialize_with(&src, WireEndian::native(), &pool).unwrap());
+        let (msg, _) = serialize_with(&src, WireEndian::native(), &pool).unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.hits, 1);
+        assert!(stats.zero_skips >= 1, "covered pack must skip the re-zero");
+        assert!(views_equal(&src, &wire_view(&msg).unwrap()));
+    }
+
+    #[test]
+    fn framing_round_trips_over_a_byte_stream() {
+        let d = particle_dim();
+        let mut src = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(7)));
+        fill_distinct(&mut src);
+        let mut stream = Vec::new();
+        write_message(&mut stream, &serialize(&src).unwrap()).unwrap();
+        write_message(
+            &mut stream,
+            &serialize_endian(&src, WireEndian::native().swapped()).unwrap(),
+        )
+        .unwrap();
+        let mut r = std::io::Cursor::new(stream);
+        let first = read_message(&mut r).unwrap().expect("first message");
+        let second = read_message(&mut r).unwrap().expect("second message");
+        assert!(read_message(&mut r).unwrap().is_none(), "clean EOF");
+        assert!(views_equal(&src, &wire_view(&first).unwrap()));
+        assert!(views_equal(&src, &wire_view(&second).unwrap()));
+        assert_ne!(first.payload, second.payload, "orders differ on the wire");
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected_before_the_payload() {
+        let d = particle_dim();
+        let mut src = alloc_view(AoS::packed(&d, ArrayDims::linear(4)));
+        fill_distinct(&mut src);
+        let mut stream = Vec::new();
+        write_message(&mut stream, &serialize(&src).unwrap()).unwrap();
+        let text = String::from_utf8_lossy(&stream).into_owned();
+
+        // Wrong magic.
+        let bad = text.replacen(WIRE_MAGIC, "LLAMA-EVIL", 1);
+        assert!(read_message(&mut std::io::Cursor::new(bad.into_bytes())).is_err());
+        // Truncated payload: the reader hits EOF mid-read_exact.
+        let mut cut = stream.clone();
+        cut.truncate(stream.len() - 10);
+        assert!(read_message(&mut std::io::Cursor::new(cut)).is_err());
+        // A forged header payload length larger than the manifest's is
+        // caught before any payload read (4 records × 25 B = 100).
+        let forged = text.replacen(" 100\n", " 999999\n", 1);
+        assert_ne!(forged, text, "expected the 100-byte payload length in the header");
+        assert!(read_message(&mut std::io::Cursor::new(forged.into_bytes())).is_err());
+        // Oversized manifest lengths are refused before allocation.
+        let huge = format!("{WIRE_MAGIC} {} 0\n", MAX_MANIFEST_BYTES + 1);
+        assert!(read_message(&mut std::io::Cursor::new(huge.into_bytes())).is_err());
+    }
+
+    #[test]
+    fn mismatched_destination_is_an_error_not_a_panic() {
+        let d = particle_dim();
+        let mut src = alloc_view(AoS::packed(&d, ArrayDims::linear(4)));
+        fill_distinct(&mut src);
+        let msg = serialize(&src).unwrap();
+        let mut wrong = alloc_view(AoS::packed(&d, ArrayDims::linear(5)));
+        assert!(deserialize_into(&msg, &mut wrong).is_err());
+        // Payload/manifest length mismatches are refused at framing and
+        // at viewing time.
+        let mut short = msg.clone();
+        short.payload.pop();
+        assert!(wire_view(&short).is_err());
+        assert!(write_message(&mut Vec::new(), &short).is_err());
+    }
+}

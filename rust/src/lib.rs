@@ -48,7 +48,10 @@
 //!   epoch-pinned reads during background relayout under a fleet
 //!   migration budget ([`view::serve`]).
 //! * **Copy** — [`copy`]: layout-changing copies compiled once into
-//!   [`copy::CopyProgram`]s ([`copy::program`]).
+//!   [`copy::CopyProgram`]s ([`copy::program`]), and layout-aware
+//!   serialization over process boundaries ([`copy::wire`]: a
+//!   self-describing manifest + a compiled pack/unpack, cross-endian
+//!   included).
 //!
 //! Supporting modules: [`blob`] (storage: owned, aligned, external,
 //! and the recycling [`blob::pool`] — layer 0), [`dump`] (fig 4 layout
@@ -94,17 +97,19 @@ pub mod prelude {
         PooledBytes, VecAlloc,
     };
     pub use crate::copy::{
-        aosoa_copy, copy, copy_blobwise, copy_naive, copy_parallel, copy_stdcopy,
-        programs_cover_dst, views_equal, ChunkOrder, CopyMethod, CopyOp, CopyProgram,
-        ProgramCache,
+        aosoa_copy, copy, copy_blobwise, copy_naive, copy_parallel, copy_stdcopy, deserialize,
+        deserialize_into, programs_cover_dst, read_message, serialize, serialize_endian,
+        serialize_with, views_equal, wire_view, write_message, ChunkOrder, CopyMethod, CopyOp,
+        CopyProgram, ProgramCache, WireMessage,
     };
     pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
     pub use crate::mapping::{
         estimated_bytes_per_record, migration_gain, recommend, recommend_stats, AccessPattern,
         AddrPlan, AoS, AoSoA, Byteswap, CostModel, FieldStats, Heatmap, HeatmapSnapshot,
         LayoutPlan, Mapping, Null, One, RecipeMapping, Recommendation, SoA, Split, Trace,
-        TraceSnapshot,
+        TraceSnapshot, WireRecipe,
     };
+    pub use crate::runtime::{WireEndian, WireManifest};
     pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};
     pub use crate::view::{
         alloc_view, alloc_view_with, migrate_with, pair_align, par_execute, par_execute_zip,

@@ -77,10 +77,13 @@ impl<M: Mapping> Mapping for Byteswap<M> {
     }
 
     fn plan(&self) -> super::LayoutPlan {
-        // Chunked copies would move swapped bytes verbatim (only legal
-        // between two byteswapped views) and cursors would bypass the
-        // swap in the accessor layer: non-native, no chunking, generic.
-        super::LayoutPlan::generic(self.inner.dims().count(), false, None)
+        // Forward the inner plan's addressing and chunkability with the
+        // native flag cleared: the copy engine moves swapped bytes
+        // verbatim between equal-representation pairs, compiles
+        // native ↔ swapped affine pairs into per-leaf swap runs
+        // (`copy::CopyOp::SwapRun`), and cursors key off `!native` to
+        // refuse raw-byte extraction (the accessor layer swaps).
+        self.inner.plan().with_native(false)
     }
 }
 
@@ -109,6 +112,21 @@ mod tests {
     fn non_native_flag() {
         let bs = Byteswap::new(AoS::packed(&particle_dim(), ArrayDims::linear(4)));
         assert!(!bs.is_native_representation());
-        assert_eq!(bs.aosoa_lanes(), None);
+        assert!(!bs.plan().native());
+    }
+
+    #[test]
+    fn plan_forwards_inner_addressing() {
+        use crate::mapping::{AddrPlan, SoA};
+        // The wrapper's plan is the inner plan with `native` cleared:
+        // addressing and chunk lanes carry through untouched.
+        let inner = AoS::packed(&particle_dim(), ArrayDims::linear(4));
+        let bs = Byteswap::new(AoS::packed(&particle_dim(), ArrayDims::linear(4)));
+        assert_eq!(bs.plan(), inner.plan().with_native(false));
+        assert!(matches!(bs.plan().addr(), AddrPlan::Affine(_)));
+        assert_eq!(bs.aosoa_lanes(), inner.aosoa_lanes());
+        let soa = Byteswap::new(SoA::multi_blob(&particle_dim(), ArrayDims::linear(4)));
+        assert_eq!(soa.plan().chunk_lanes(), Some(4));
+        assert!(!soa.plan().native());
     }
 }

@@ -21,6 +21,7 @@ pub mod heatmap;
 pub mod null;
 pub mod one;
 pub mod plan;
+pub mod recipe;
 pub mod soa;
 pub mod split;
 pub mod trace;
@@ -42,6 +43,7 @@ pub use heatmap::{Heatmap, HeatmapSnapshot};
 pub use null::Null;
 pub use one::One;
 pub use plan::{AddrPlan, LayoutPlan, PiecewiseLeaf, PiecewisePlan};
+pub use recipe::WireRecipe;
 pub use soa::SoA;
 pub use split::Split;
 pub use trace::{Trace, TraceSnapshot};

@@ -14,14 +14,17 @@
 //!   (lin%L)*lane_stride]` — covers packed AoS (`L = 1`), AoSoA-L and
 //!   SoA (`L = count`) uniformly, plus Split compositions thereof;
 //! * [`AddrPlan::Generic`] — dynamic translation through the mapping
-//!   object, preserving the semantics of instrumented (Trace, Heatmap),
-//!   represented (Byteswap) and space-filling-curve layouts.
+//!   object, preserving the semantics of instrumented (Trace, Heatmap)
+//!   and space-filling-curve layouts.
 //!
 //! Besides addressing, a plan carries the two properties the copy
 //! engine dispatches on: [`LayoutPlan::chunk_lanes`] (the AoSoA-family
 //! lane count, valid in canonical index order — possibly present even
 //! when addressing is `Generic`, e.g. packed AoS under a Morton order)
-//! and [`LayoutPlan::native`]. Kernels obtain per-leaf cursors from a
+//! and [`LayoutPlan::native`]. Representation wrappers (Byteswap)
+//! forward their inner plan's addressing with the native flag cleared
+//! ([`LayoutPlan::with_native`]); cursors and the copy engine key every
+//! raw-byte fast path off that flag. Kernels obtain per-leaf cursors from a
 //! plan via `view::cursor`; the copy engine compares two plans to pick
 //! its strategy. A new mapping gets every fast path by implementing the
 //! one [`super::Mapping::plan`] method.
@@ -120,6 +123,18 @@ impl LayoutPlan {
     /// order preserves for 1-element runs.
     pub fn generic(count: usize, native: bool, chunk_lanes: Option<usize>) -> Self {
         LayoutPlan { count, native, chunk_lanes, addr: AddrPlan::Generic }
+    }
+
+    /// The same plan with the native-representation flag replaced.
+    /// Representation wrappers ([`crate::mapping::Byteswap`]) forward
+    /// their inner mapping's addressing unchanged and only flip this
+    /// flag — the copy engine then moves swapped bytes verbatim between
+    /// equal-representation pairs and compiles native ↔ swapped affine
+    /// pairs into per-leaf swap runs, while cursors refuse raw-byte
+    /// extraction for any non-native plan.
+    pub fn with_native(mut self, native: bool) -> Self {
+        self.native = native;
+        self
     }
 
     /// Canonical record count the plan was compiled for.
@@ -405,9 +420,14 @@ mod tests {
             Heatmap::new(AoS::packed(&d, dims.clone())).plan().addr(),
             AddrPlan::Generic
         ));
+        // Byteswap forwards the inner plan's addressing — only the
+        // native flag flips (packed AoS: affine, 1-lane chunkable).
         let bs = Byteswap::new(AoS::packed(&d, dims.clone())).plan();
-        assert!(matches!(bs.addr(), AddrPlan::Generic));
+        assert!(matches!(bs.addr(), AddrPlan::Affine(_)));
+        assert_eq!(bs.chunk_lanes(), Some(1));
         assert!(!bs.native());
+        check_plan(&Byteswap::new(AoS::packed(&d, dims.clone())));
+        check_plan(&Byteswap::new(AoSoA::new(&d, dims, 4)));
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! [`WireRecipe`]: a *nameable* storage-mapping recipe — the closed set
+//! of layouts a wire manifest (`runtime::manifest::WireManifest`) can
+//! describe with one token and the receiving process can rebuild from
+//! the record dimension + array extents alone.
+//!
+//! Distinct from [`super::RecipeMapping`], which *holds* a materialized
+//! mapping chosen by the advisor; a `WireRecipe` is pure data (it
+//! survives `parse(token())`) and materializes on demand via
+//! [`WireRecipe::build`].
+
+use crate::array::ArrayDims;
+use crate::error::{Context, Result};
+use crate::record::RecordDim;
+use crate::{bail, ensure};
+
+use super::{AoS, AoSoA, DynMapping, SoA};
+
+/// A parseable layout token naming one of the storage mappings.
+///
+/// Tokens: `aos:packed`, `aos:aligned`, `soa:sb`, `soa:mb`,
+/// `aosoa:<L>`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WireRecipe {
+    /// Packed (padding-free) array-of-structs — the dense wire layout
+    /// `copy::wire::serialize` always packs into.
+    AosPacked,
+    /// Aligned array-of-structs.
+    AosAligned,
+    /// Single-blob struct-of-arrays.
+    SoaSingle,
+    /// Multi-blob struct-of-arrays (one blob per leaf).
+    SoaMulti,
+    /// Array-of-struct-of-arrays with `L` lanes.
+    AoSoA(usize),
+}
+
+impl WireRecipe {
+    /// The manifest token (`parse(token())` is identity).
+    pub fn token(&self) -> String {
+        match self {
+            WireRecipe::AosPacked => "aos:packed".into(),
+            WireRecipe::AosAligned => "aos:aligned".into(),
+            WireRecipe::SoaSingle => "soa:sb".into(),
+            WireRecipe::SoaMulti => "soa:mb".into(),
+            WireRecipe::AoSoA(l) => format!("aosoa:{l}"),
+        }
+    }
+
+    /// Parse a manifest token.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "aos:packed" => WireRecipe::AosPacked,
+            "aos:aligned" => WireRecipe::AosAligned,
+            "soa:sb" => WireRecipe::SoaSingle,
+            "soa:mb" => WireRecipe::SoaMulti,
+            other => {
+                let Some(lanes) = other.strip_prefix("aosoa:") else {
+                    bail!("unknown layout recipe {other:?}");
+                };
+                let lanes: usize = lanes.parse().context("aosoa lane count")?;
+                ensure!(lanes >= 1, "aosoa lane count must be >= 1");
+                WireRecipe::AoSoA(lanes)
+            }
+        })
+    }
+
+    /// Materialize the concrete mapping for `record` × `dims`.
+    pub fn build(&self, record: &RecordDim, dims: ArrayDims) -> DynMapping {
+        match self {
+            WireRecipe::AosPacked => Box::new(AoS::packed(record, dims)),
+            WireRecipe::AosAligned => Box::new(AoS::aligned(record, dims)),
+            WireRecipe::SoaSingle => Box::new(SoA::single_blob(record, dims)),
+            WireRecipe::SoaMulti => Box::new(SoA::multi_blob(record, dims)),
+            WireRecipe::AoSoA(l) => Box::new(AoSoA::new(record, dims, *l)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::test_support::particle_dim;
+    use crate::mapping::Mapping;
+
+    #[test]
+    fn tokens_round_trip() {
+        for r in [
+            WireRecipe::AosPacked,
+            WireRecipe::AosAligned,
+            WireRecipe::SoaSingle,
+            WireRecipe::SoaMulti,
+            WireRecipe::AoSoA(8),
+            WireRecipe::AoSoA(3),
+        ] {
+            assert_eq!(WireRecipe::parse(&r.token()).unwrap(), r, "{}", r.token());
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["aos", "soa", "aosoa", "aosoa:", "aosoa:0", "aosoa:x", "packed", ""] {
+            assert!(WireRecipe::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn build_materializes_the_named_layout() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(16);
+        let packed = WireRecipe::AosPacked.build(&d, dims.clone());
+        assert_eq!(packed.blob_count(), 1);
+        assert_eq!(packed.blob_size(0), d.packed_size() * 16);
+        let soa = WireRecipe::SoaMulti.build(&d, dims.clone());
+        assert_eq!(soa.blob_count(), d.leaf_count());
+        let aosoa = WireRecipe::AoSoA(4).build(&d, dims);
+        assert_eq!(aosoa.aosoa_lanes(), Some(4));
+    }
+}

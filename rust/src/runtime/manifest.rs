@@ -1,12 +1,16 @@
-//! Artifact manifest: `python -m compile.aot` writes one line per
-//! lowered variant; this parser is the contract between the compile
-//! path and the Rust runtime (plain whitespace format — no serde in the
-//! vendored dependency set).
+//! Manifests: the plain whitespace `key=value` line format shared by
+//! the AOT artifact index (`python -m compile.aot` writes one line per
+//! lowered variant) and the [`WireManifest`] that travels in front of a
+//! serialized view (see `copy::wire`). No serde in the vendored
+//! dependency set — both are parsed by the same `kv` helper.
 
 use std::path::{Path, PathBuf};
 
-use crate::bail;
+use crate::array::ArrayDims;
 use crate::error::{Context, Result};
+use crate::mapping::{Byteswap, DynMapping, Mapping, WireRecipe};
+use crate::record::{Field, RecordDim, Scalar, Type};
+use crate::{bail, ensure};
 
 /// One AOT artifact's metadata.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -32,10 +36,16 @@ pub struct Manifest {
     pub artifacts: Vec<Artifact>,
 }
 
+/// Exact-key `key=value` lookup in a whitespace-split manifest line.
+///
+/// Keys must match exactly up to the first `=`: a `strip_prefix` lookup
+/// would let any key that prefixes another (`n` vs `name`, `in` vs
+/// `inputs`) resolve to the wrong part. Values may themselves contain
+/// `=` — only the first one splits.
 fn kv<'a>(parts: &'a [&str], key: &str) -> Result<&'a str> {
     parts
         .iter()
-        .find_map(|p| p.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+        .find_map(|p| p.split_once('=').and_then(|(k, v)| (k == key).then_some(v)))
         .with_context(|| format!("manifest line missing {key}="))
 }
 
@@ -86,6 +96,335 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------
+// Wire manifest: the self-describing layout header of `copy::wire`
+// ---------------------------------------------------------------------
+
+/// Byte order of a wire payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WireEndian {
+    Little,
+    Big,
+}
+
+impl WireEndian {
+    /// This process's byte order.
+    pub fn native() -> Self {
+        if cfg!(target_endian = "big") {
+            WireEndian::Big
+        } else {
+            WireEndian::Little
+        }
+    }
+
+    /// True when a payload in this order needs no swap here.
+    pub fn is_native(self) -> bool {
+        self == Self::native()
+    }
+
+    /// The opposite byte order — what a cross-endian peer writes.
+    pub fn swapped(self) -> Self {
+        match self {
+            WireEndian::Little => WireEndian::Big,
+            WireEndian::Big => WireEndian::Little,
+        }
+    }
+
+    /// Manifest token (`little` / `big`).
+    pub fn token(self) -> &'static str {
+        match self {
+            WireEndian::Little => "little",
+            WireEndian::Big => "big",
+        }
+    }
+
+    /// Parse a manifest token.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "little" => Ok(WireEndian::Little),
+            "big" => Ok(WireEndian::Big),
+            other => bail!("unknown endianness {other:?} (expected little/big)"),
+        }
+    }
+}
+
+/// Self-describing layout header of a serialized view: enough for the
+/// receiving process to rebuild a [`crate::view::View`] from the raw
+/// payload bytes alone.
+///
+/// One line of the whitespace manifest format:
+///
+/// ```text
+/// wire record={id:u16,pos:{x:f32,y:f32,z:f32},mass:f64,flags:[bool;3]} \
+///      dims=5x7 layout=aos:packed endian=little blobs=875
+/// ```
+///
+/// * `record=` — the record dimension in the grammar of
+///   [`format_record`] (no whitespace, so it stays one token).
+/// * `dims=` — `x`-separated array extents.
+/// * `layout=` — a [`WireRecipe`] token naming the payload's mapping.
+/// * `endian=` — the payload's byte order; a receiver whose native
+///   order differs wraps the rebuilt mapping in [`Byteswap`].
+/// * `blobs=` — comma-separated byte size of each payload blob, in
+///   order; the payload is their concatenation. Cross-checked against
+///   the rebuilt mapping on parse, so a corrupted length never reaches
+///   the payload reader.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireManifest {
+    pub record: RecordDim,
+    pub dims: ArrayDims,
+    pub recipe: WireRecipe,
+    pub endian: WireEndian,
+    pub blob_sizes: Vec<usize>,
+}
+
+impl WireManifest {
+    /// Describe a `record` × `dims` data space stored as `recipe` in
+    /// `endian` byte order (blob sizes are derived from the recipe).
+    pub fn describe(
+        record: RecordDim,
+        dims: ArrayDims,
+        recipe: WireRecipe,
+        endian: WireEndian,
+    ) -> Result<Self> {
+        ensure!(dims.rank() > 0, "wire manifest needs at least one array extent");
+        let m = recipe.build(&record, dims.clone());
+        let blob_sizes = (0..m.blob_count()).map(|b| m.blob_size(b)).collect();
+        Ok(WireManifest { record, dims, recipe, endian, blob_sizes })
+    }
+
+    /// Total payload length: the blobs are concatenated in order.
+    pub fn payload_len(&self) -> usize {
+        self.blob_sizes.iter().sum()
+    }
+
+    /// Rebuild the payload's mapping: the recipe's concrete layout,
+    /// wrapped in [`Byteswap`] when the payload's byte order is not
+    /// this process's native order. Fails if the manifest's blob sizes
+    /// disagree with the rebuilt layout (a corrupt manifest).
+    pub fn build_mapping(&self) -> Result<DynMapping> {
+        let m = self.recipe.build(&self.record, self.dims.clone());
+        let sizes: Vec<usize> = (0..m.blob_count()).map(|b| m.blob_size(b)).collect();
+        ensure!(
+            sizes == self.blob_sizes,
+            "wire manifest blob sizes {:?} disagree with the rebuilt {} layout ({:?})",
+            self.blob_sizes,
+            m.mapping_name(),
+            sizes
+        );
+        Ok(if self.endian.is_native() { m } else { Box::new(Byteswap::new(m)) })
+    }
+
+    /// Format as one manifest line (see the type-level grammar).
+    pub fn to_line(&self) -> Result<String> {
+        ensure!(self.dims.rank() > 0, "wire manifest needs at least one array extent");
+        let record = format_record(&self.record)?;
+        let dims: Vec<String> = self.dims.extents().iter().map(|e| e.to_string()).collect();
+        let blobs: Vec<String> = self.blob_sizes.iter().map(|s| s.to_string()).collect();
+        Ok(format!(
+            "wire record={record} dims={} layout={} endian={} blobs={}",
+            dims.join("x"),
+            self.recipe.token(),
+            self.endian.token(),
+            blobs.join(",")
+        ))
+    }
+
+    /// Parse one manifest line, rejecting anything that does not
+    /// rebuild into a self-consistent layout.
+    pub fn parse_line(line: &str) -> Result<Self> {
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        ensure!(
+            parts.first() == Some(&"wire"),
+            "not a wire manifest line: {line:?}"
+        );
+        let record = parse_record(kv(&parts, "record")?)?;
+        let dims: Vec<usize> = kv(&parts, "dims")?
+            .split('x')
+            .map(|e| e.parse::<usize>().context("array extent"))
+            .collect::<Result<_>>()?;
+        ensure!(!dims.is_empty(), "wire manifest needs at least one array extent");
+        let recipe = WireRecipe::parse(kv(&parts, "layout")?)?;
+        let endian = WireEndian::parse(kv(&parts, "endian")?)?;
+        let blob_sizes: Vec<usize> = kv(&parts, "blobs")?
+            .split(',')
+            .map(|s| s.parse::<usize>().context("blob size"))
+            .collect::<Result<_>>()?;
+        let wm = WireManifest {
+            record,
+            dims: ArrayDims::new(dims),
+            recipe,
+            endian,
+            blob_sizes,
+        };
+        // Cross-check the declared blob sizes against the rebuilt
+        // layout right away: a corrupted size must never reach the
+        // payload reader.
+        wm.build_mapping()?;
+        Ok(wm)
+    }
+}
+
+/// Format a record dimension in the wire grammar:
+/// `{name:type,...}` where `type` is a scalar name (`f32`, `u8`, ...),
+/// a nested `{...}` record, or a static array `[type;N]`. No
+/// whitespace, so the result is a single manifest token. Fails on
+/// field names that would collide with the grammar.
+pub fn format_record(d: &RecordDim) -> Result<String> {
+    let mut out = String::new();
+    format_fields(&d.fields, &mut out)?;
+    Ok(out)
+}
+
+/// Characters with structural meaning in the record grammar (plus
+/// whitespace, which would split the manifest token).
+const RECORD_GRAMMAR_CHARS: &str = "{}[]:;,=";
+
+fn name_ok(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .chars()
+            .all(|c| !c.is_whitespace() && !RECORD_GRAMMAR_CHARS.contains(c))
+}
+
+fn format_fields(fields: &[Field], out: &mut String) -> Result<()> {
+    out.push('{');
+    for (i, f) in fields.iter().enumerate() {
+        ensure!(
+            name_ok(&f.name),
+            "field name {:?} cannot appear in a wire manifest",
+            f.name
+        );
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&f.name);
+        out.push(':');
+        format_type(&f.ty, out)?;
+    }
+    out.push('}');
+    Ok(())
+}
+
+fn format_type(t: &Type, out: &mut String) -> Result<()> {
+    match t {
+        Type::Scalar(s) => out.push_str(s.name()),
+        Type::Record(fields) => format_fields(fields, out)?,
+        Type::Array(inner, n) => {
+            out.push('[');
+            format_type(inner, out)?;
+            out.push(';');
+            out.push_str(&n.to_string());
+            out.push(']');
+        }
+    }
+    Ok(())
+}
+
+/// Parse the record grammar of [`format_record`] back into a
+/// [`RecordDim`]; the round trip is exact (array nodes stay arrays).
+pub fn parse_record(s: &str) -> Result<RecordDim> {
+    let mut p = RecParser { s, i: 0 };
+    let fields = p.fields().context("wire record grammar")?;
+    ensure!(
+        p.i == s.len(),
+        "trailing bytes after wire record: {:?}",
+        &s[p.i..]
+    );
+    Ok(RecordDim { fields })
+}
+
+fn scalar_by_name(name: &str) -> Result<Scalar> {
+    Ok(match name {
+        "f32" => Scalar::F32,
+        "f64" => Scalar::F64,
+        "i8" => Scalar::I8,
+        "i16" => Scalar::I16,
+        "i32" => Scalar::I32,
+        "i64" => Scalar::I64,
+        "u8" => Scalar::U8,
+        "u16" => Scalar::U16,
+        "u32" => Scalar::U32,
+        "u64" => Scalar::U64,
+        "bool" => Scalar::Bool,
+        other => bail!("unknown scalar type {other:?}"),
+    })
+}
+
+/// Recursive-descent parser over the record grammar. All structural
+/// characters are ASCII, so single-byte advances stay on char
+/// boundaries; identifiers are sliced as whole prefixes.
+struct RecParser<'a> {
+    s: &'a str,
+    i: usize,
+}
+
+impl<'a> RecParser<'a> {
+    fn peek(&self) -> Option<char> {
+        self.s[self.i..].chars().next()
+    }
+
+    fn eat(&mut self, c: char) -> Result<()> {
+        match self.peek() {
+            Some(got) if got == c => {
+                self.i += c.len_utf8();
+                Ok(())
+            }
+            got => bail!("expected {c:?} at byte {} of record, found {got:?}", self.i),
+        }
+    }
+
+    /// Longest nonempty run of non-structural, non-whitespace chars.
+    fn ident(&mut self) -> Result<&'a str> {
+        let rest = &self.s[self.i..];
+        let len = rest
+            .char_indices()
+            .find(|(_, c)| c.is_whitespace() || RECORD_GRAMMAR_CHARS.contains(*c))
+            .map_or(rest.len(), |(i, _)| i);
+        ensure!(len > 0, "expected a name at byte {} of record", self.i);
+        self.i += len;
+        Ok(&rest[..len])
+    }
+
+    fn ty(&mut self) -> Result<Type> {
+        match self.peek() {
+            Some('{') => Ok(Type::Record(self.fields()?)),
+            Some('[') => {
+                self.eat('[')?;
+                let inner = self.ty()?;
+                self.eat(';')?;
+                let n: usize = self.ident()?.parse().context("array extent")?;
+                self.eat(']')?;
+                Ok(Type::Array(Box::new(inner), n))
+            }
+            _ => Ok(Type::Scalar(scalar_by_name(self.ident()?)?)),
+        }
+    }
+
+    fn fields(&mut self) -> Result<Vec<Field>> {
+        self.eat('{')?;
+        let mut fields = Vec::new();
+        if self.peek() == Some('}') {
+            self.i += 1;
+            return Ok(fields);
+        }
+        loop {
+            let name = self.ident()?;
+            self.eat(':')?;
+            let ty = self.ty()?;
+            fields.push(Field::new(name, ty));
+            match self.peek() {
+                Some(',') => self.i += 1,
+                Some('}') => {
+                    self.i += 1;
+                    return Ok(fields);
+                }
+                got => bail!("expected ',' or '}}' at byte {} of record, found {got:?}", self.i),
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +459,23 @@ nbody_move_aos nbody_move_aos.hlo.txt n=65536 tile=256 dtype=f32 layout=aos inpu
     }
 
     #[test]
+    fn kv_matches_keys_exactly() {
+        // Regression: the old strip_prefix lookup resolved "n" to the
+        // first part *starting* with "n=", but also let "n" match
+        // "name=..." and "in" match "inputs=..." when the exact key was
+        // absent or later in the line.
+        let parts = ["name=outer", "inputs=3", "n=7", "in=9"];
+        assert_eq!(kv(&parts, "n").unwrap(), "7");
+        assert_eq!(kv(&parts, "in").unwrap(), "9");
+        assert_eq!(kv(&parts, "name").unwrap(), "outer");
+        assert_eq!(kv(&parts, "inputs").unwrap(), "3");
+        assert!(kv(&parts, "npu").is_err());
+        assert!(kv(&["input=1"], "inputs").is_err(), "prefix of the key must not match");
+        // Values may themselves contain '=': only the first splits.
+        assert_eq!(kv(&["eq=a=b"], "eq").unwrap(), "a=b");
+    }
+
+    #[test]
     fn real_manifest_if_built() {
         // Integration hook: parse the actual artifacts dir when present.
         if let Ok(m) = Manifest::load("artifacts") {
@@ -127,6 +483,119 @@ nbody_move_aos nbody_move_aos.hlo.txt n=65536 tile=256 dtype=f32 layout=aos inpu
             for a in &m.artifacts {
                 assert!(m.path_of(a).exists(), "{} missing", a.file);
             }
+        }
+    }
+
+    // -- wire manifest ------------------------------------------------
+
+    #[test]
+    fn record_grammar_round_trips() {
+        let d = crate::mapping_demo_dim();
+        let text = format_record(&d).unwrap();
+        assert_eq!(
+            text,
+            "{id:u16,pos:{x:f32,y:f32,z:f32},mass:f64,flags:[bool;3]}"
+        );
+        assert_eq!(parse_record(&text).unwrap(), d);
+        // Nested arrays-of-records round-trip too.
+        let odd = RecordDim::new()
+            .array("m", RecordDim::new().scalar("v", Scalar::I8).as_type(), 2)
+            .scalar("t", Scalar::Bool);
+        let text = format_record(&odd).unwrap();
+        assert_eq!(parse_record(&text).unwrap(), odd);
+        // Empty record is representable.
+        assert_eq!(parse_record("{}").unwrap(), RecordDim::new());
+    }
+
+    #[test]
+    fn record_grammar_rejects_garbage() {
+        for bad in [
+            "",          // not a record
+            "{a:f32",    // unterminated
+            "{a:f32}x",  // trailing bytes
+            "{a:f99}",   // unknown scalar
+            "{a}",       // missing type
+            "{:f32}",    // missing name
+            "{a:f32,,b:u8}", // empty field
+            "{a:[f32;x]}",   // non-numeric extent
+            "{a:[f32;3}",    // unterminated array
+        ] {
+            assert!(parse_record(bad).is_err(), "accepted {bad:?}");
+        }
+        // Names that collide with the grammar cannot be formatted.
+        let bad = RecordDim::new().scalar("a b", Scalar::F32);
+        assert!(format_record(&bad).is_err());
+        let bad = RecordDim::new().scalar("a:b", Scalar::F32);
+        assert!(format_record(&bad).is_err());
+    }
+
+    #[test]
+    fn wire_line_round_trips() {
+        let d = crate::mapping_demo_dim();
+        let wm = WireManifest::describe(
+            d.clone(),
+            ArrayDims::new(vec![5, 7]),
+            WireRecipe::AosPacked,
+            WireEndian::native(),
+        )
+        .unwrap();
+        // Packed AoS: one blob of 25 B/record × 35 records.
+        assert_eq!(wm.blob_sizes, vec![875]);
+        assert_eq!(wm.payload_len(), 875);
+        let line = wm.to_line().unwrap();
+        assert!(line.starts_with("wire record={id:u16,"), "{line}");
+        assert!(line.contains("dims=5x7"), "{line}");
+        assert!(line.contains("blobs=875"), "{line}");
+        let back = WireManifest::parse_line(&line).unwrap();
+        assert_eq!(back, wm);
+        assert_eq!(back.record, d);
+        assert!(back.build_mapping().unwrap().is_native_representation());
+    }
+
+    #[test]
+    fn wire_multi_blob_and_cross_endian() {
+        let d = crate::mapping_demo_dim();
+        let wm = WireManifest::describe(
+            d,
+            ArrayDims::linear(16),
+            WireRecipe::SoaMulti,
+            WireEndian::native().swapped(),
+        )
+        .unwrap();
+        assert_eq!(wm.blob_sizes.len(), 8); // one blob per leaf
+        let line = wm.to_line().unwrap();
+        let back = WireManifest::parse_line(&line).unwrap();
+        assert_eq!(back, wm);
+        // A cross-endian payload rebuilds as a Byteswap-wrapped layout.
+        let m = back.build_mapping().unwrap();
+        assert!(!m.is_native_representation());
+        assert!(m.mapping_name().starts_with("Byteswap("), "{}", m.mapping_name());
+    }
+
+    #[test]
+    fn wire_line_rejects_corruption() {
+        let d = crate::mapping_demo_dim();
+        let wm = WireManifest::describe(
+            d,
+            ArrayDims::new(vec![5, 7]),
+            WireRecipe::AosPacked,
+            WireEndian::Little,
+        )
+        .unwrap();
+        let line = wm.to_line().unwrap();
+        // A tampered blob size disagrees with the rebuilt layout.
+        assert!(WireManifest::parse_line(&line.replace("blobs=875", "blobs=874")).is_err());
+        // A tampered extent changes the rebuilt sizes too.
+        assert!(WireManifest::parse_line(&line.replace("dims=5x7", "dims=5x8")).is_err());
+        for broken in [
+            line.replace("endian=little", "endian=mixed"),
+            line.replace("layout=aos:packed", "layout=aos:zerocopy"),
+            line.replace("record={", "record={{"),
+            line.replace("wire ", "spam "),
+            line.replace(" blobs=875", ""),
+            "wire".to_string(),
+        ] {
+            assert!(WireManifest::parse_line(&broken).is_err(), "accepted {broken:?}");
         }
     }
 }

@@ -15,7 +15,7 @@
 
 pub mod manifest;
 
-pub use manifest::{Artifact, Manifest};
+pub use manifest::{Artifact, Manifest, WireEndian, WireManifest};
 
 #[cfg(feature = "xla")]
 pub mod client;

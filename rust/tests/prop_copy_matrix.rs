@@ -12,7 +12,9 @@ mod prop_support;
 
 use llama::copy::program::shard_programs;
 use llama::copy::{aosoa_compatible, aosoa_copy, copy_aosoa_parallel, copy_naive_parallel};
-use llama::copy::{layouts_identical, plans_chunk_compatible, plans_strided_compatible};
+use llama::copy::{
+    layouts_identical, plans_chunk_compatible, plans_strided_compatible, plans_swap_compatible,
+};
 use llama::prelude::*;
 use llama::workloads::nbody;
 use llama::workloads::rng::SplitMix64;
@@ -65,8 +67,10 @@ fn extents() -> Vec<ArrayDims> {
 }
 
 /// The documented strategy-selection rules, restated independently of
-/// the dispatcher: identical → blobwise; both chunkable → chunked;
-/// both affine native → strided program; otherwise field-wise gather.
+/// the dispatcher: identical → blobwise; equal representation and
+/// chunkable → chunked; equal representation and affine → strided
+/// program; representation-mismatched affine pair → swap program;
+/// otherwise field-wise gather.
 fn expected_method(src: &dyn Mapping, dst: &dyn Mapping) -> CopyMethod {
     let sp = src.plan();
     let dp = dst.plan();
@@ -76,6 +80,8 @@ fn expected_method(src: &dyn Mapping, dst: &dyn Mapping) -> CopyMethod {
         CopyMethod::AoSoAChunked
     } else if plans_strided_compatible(&sp, &dp) {
         CopyMethod::Program
+    } else if plans_swap_compatible(&sp, &dp) {
+        CopyMethod::SwapProgram
     } else {
         CopyMethod::FieldWise
     }
@@ -148,9 +154,9 @@ fn prop_dispatcher_picks_expected_method_without_panicking() {
 }
 
 /// A few structural facts the matrix relies on (guards against the
-/// matrix silently degenerating).
+/// matrix silently degenerating): all five strategies appear.
 #[test]
-fn matrix_covers_all_four_methods() {
+fn matrix_covers_every_method() {
     let d = nbody::particle_dim();
     let dims = ArrayDims::linear(13);
     use CopyMethod::*;
@@ -160,7 +166,9 @@ fn matrix_covers_all_four_methods() {
     assert_eq!(method(5, 5), Blobwise); // AoSoA4 -> AoSoA4
     assert_eq!(method(3, 6), AoSoAChunked); // SoA MB -> AoSoA8
     assert_eq!(method(0, 3), Program); // aligned AoS -> SoA MB (strided)
-    assert_eq!(method(11, 3), FieldWise); // Byteswap -> SoA MB
+    assert_eq!(method(11, 3), SwapProgram); // Byteswap -> SoA MB (affine pair)
+    assert_eq!(method(11, 11), Blobwise); // Byteswap -> same Byteswap
+    assert_eq!(method(11, 12), FieldWise); // Byteswap -> Heatmap (generic plan)
     assert_eq!(method(12, 12), Blobwise); // Heatmap -> same Heatmap
     assert_eq!(method(5, 10), AoSoAChunked); // AoSoA4 -> Split gcd pair
 }
@@ -174,7 +182,7 @@ fn prop_parallel_copy_bit_identical_across_thread_counts() {
     let dims = ArrayDims::linear(4096 + 17); // tail at every lane count
     // (chunked SoA->AoSoA16, chunked AoSoA8->AoSoA16, chunked
     // AoS->SoA, strided aligned-AoS->SoA, chunked into a gcd Split,
-    // gather from a Byteswap source.)
+    // swap runs from a Byteswap source.)
     for (i, j) in [(3, 7), (6, 7), (1, 3), (0, 3), (5, 10), (11, 3)] {
         let mut src = alloc_view(nth(&d, &dims, i));
         fill_sentinels(&mut src);

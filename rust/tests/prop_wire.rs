@@ -1,0 +1,239 @@
+//! Wire-serialization acceptance properties (EXPERIMENTS.md §Wire):
+//! `copy::wire` round trips are bit-identical to the `copy_naive`
+//! oracle across the full 13-mapping matrix — including `Byteswap`
+//! endpoints in both directions and tail-block extents — affine packs
+//! never degrade to the element gather, corrupted or truncated
+//! manifests are rejected before the payload is trusted, and the
+//! framed protocol survives a real process boundary (`llama
+//! wire-worker` spoken to over OS pipes).
+
+mod prop_support;
+
+use llama::coordinator::wire_demo::serve_frame;
+use llama::prelude::*;
+use llama::workloads::nbody;
+use llama::workloads::picframe::{attr_dim, FRAME_SIZE};
+use prop_support::*;
+
+/// The explicit layout matrix of `prop_copy_matrix` (index 8 is the
+/// aliasing `One` mapping).
+const MATRIX: usize = 13;
+const ONE_IDX: usize = 8;
+
+fn nth(d: &RecordDim, dims: &ArrayDims, k: usize) -> Box<dyn Mapping> {
+    match k {
+        0 => Box::new(AoS::aligned(d, dims.clone())),
+        1 => Box::new(AoS::packed(d, dims.clone())),
+        2 => Box::new(SoA::single_blob(d, dims.clone())),
+        3 => Box::new(SoA::multi_blob(d, dims.clone())),
+        4 => Box::new(AoSoA::new(d, dims.clone(), 2)),
+        5 => Box::new(AoSoA::new(d, dims.clone(), 4)),
+        6 => Box::new(AoSoA::new(d, dims.clone(), 8)),
+        7 => Box::new(AoSoA::new(d, dims.clone(), 16)),
+        8 => Box::new(One::new(d, dims.clone())),
+        9 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| SoA::multi_blob(sd, ad),
+        )),
+        10 => Box::new(Split::new(
+            d,
+            dims.clone(),
+            RecordCoord::new(vec![1]),
+            |sd, ad| AoSoA::new(sd, ad, 4),
+            |sd, ad| AoSoA::new(sd, ad, 8),
+        )),
+        11 => Box::new(Byteswap::new(AoS::packed(d, dims.clone()))),
+        12 => Box::new(Heatmap::with_granularity(AoS::packed(d, dims.clone()), 4)),
+        _ => unreachable!("matrix has {MATRIX} entries"),
+    }
+}
+
+/// Extents with tail blocks at every lane count in the matrix (13 and
+/// 97 are prime; 5×7 is multi-dimensional).
+fn extents() -> Vec<ArrayDims> {
+    vec![ArrayDims::linear(13), ArrayDims::from([5, 7]), ArrayDims::linear(97)]
+}
+
+/// The acceptance property: `serialize_endian` → `deserialize_into`
+/// restores the exact bytes `copy_naive` would have produced, for
+/// every mapping in the matrix, both payload byte orders, every tail
+/// extent — and the message is internally consistent along the way.
+#[test]
+fn prop_wire_round_trip_matches_the_naive_oracle() {
+    let d = nbody::particle_dim();
+    for dims in extents() {
+        for k in 0..MATRIX {
+            let mut src = alloc_view(nth(&d, &dims, k));
+            fill_sentinels(&mut src);
+            let mut oracle = alloc_view(nth(&d, &dims, k));
+            copy_naive(&src, &mut oracle);
+            for endian in [WireEndian::native(), WireEndian::native().swapped()] {
+                let label = format!("{} {endian:?} ({dims:?})", src.mapping().mapping_name());
+                let msg = serialize_endian(&src, endian).unwrap();
+                assert_eq!(msg.manifest.endian, endian, "{label}");
+                assert_eq!(msg.payload_len(), msg.manifest.payload_len(), "{label}");
+                // The zero-copy wire view reads the payload in place
+                // (through swapping accessors for the foreign order).
+                if k != ONE_IDX {
+                    assert!(views_equal(&src, &wire_view(&msg).unwrap()), "{label}");
+                }
+                // The compiled unpack restores the oracle's bytes.
+                let mut back = alloc_view(nth(&d, &dims, k));
+                deserialize_into(&msg, &mut back).unwrap();
+                assert_eq!(back.blobs(), oracle.blobs(), "{label}");
+            }
+        }
+    }
+}
+
+/// A framed stream carrying the whole matrix round trips message by
+/// message and terminates with a clean EOF.
+#[test]
+fn prop_framing_round_trips_the_whole_matrix() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(13);
+    let mut stream = Vec::new();
+    for k in 0..MATRIX {
+        let mut src = alloc_view(nth(&d, &dims, k));
+        fill_sentinels(&mut src);
+        let endian =
+            if k % 2 == 0 { WireEndian::native() } else { WireEndian::native().swapped() };
+        write_message(&mut stream, &serialize_endian(&src, endian).unwrap()).unwrap();
+    }
+    let mut r = std::io::Cursor::new(stream);
+    for k in 0..MATRIX {
+        let msg = read_message(&mut r).unwrap().unwrap_or_else(|| panic!("message {k}"));
+        let mut src = alloc_view(nth(&d, &dims, k));
+        fill_sentinels(&mut src);
+        let mut oracle = alloc_view(nth(&d, &dims, k));
+        copy_naive(&src, &mut oracle);
+        let mut back = alloc_view(nth(&d, &dims, k));
+        deserialize_into(&msg, &mut back).unwrap();
+        assert_eq!(back.blobs(), oracle.blobs(), "matrix entry {k}");
+    }
+    assert!(read_message(&mut r).unwrap().is_none(), "clean EOF");
+}
+
+/// Affine sources never pack through the element gather: equal
+/// representation stays on the verbatim strategies, mismatched
+/// representation compiles swap runs — in both directions.
+#[test]
+fn wire_packs_never_degrade_affine_layouts_to_gather() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(29);
+    let swapped = WireEndian::native().swapped();
+
+    let mut packed = alloc_view(AoS::packed(&d, dims.clone()));
+    fill_sentinels(&mut packed);
+    let (_, m) = serialize_with(&packed, WireEndian::native(), &VecAlloc).unwrap();
+    assert_eq!(m, CopyMethod::Blobwise, "identical pair is one memcpy");
+    let (_, m) = serialize_with(&packed, swapped, &VecAlloc).unwrap();
+    assert_eq!(m, CopyMethod::SwapProgram, "cross-endian pack swaps, not gathers");
+
+    let mut soa = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    fill_sentinels(&mut soa);
+    let (_, m) = serialize_with(&soa, swapped, &VecAlloc).unwrap();
+    assert_eq!(m, CopyMethod::SwapProgram, "strided cross-endian pack swaps");
+
+    // A byteswapped source sent in its own byte order is equal
+    // representation again: verbatim, no per-element work.
+    let mut foreign = alloc_view(Byteswap::new(AoS::packed(&d, dims.clone())));
+    fill_sentinels(&mut foreign);
+    let (_, m) = serialize_with(&foreign, swapped, &VecAlloc).unwrap();
+    assert_eq!(m, CopyMethod::Blobwise, "matching representations move verbatim");
+    let (_, m) = serialize_with(&foreign, WireEndian::native(), &VecAlloc).unwrap();
+    assert_eq!(m, CopyMethod::SwapProgram, "re-nativizing pack swaps");
+}
+
+/// Corrupted manifests — unknown layout tokens, tampered blob sizes,
+/// broken record grammar, truncation — are rejected by the framed
+/// reader before any payload is trusted.
+#[test]
+fn corrupted_and_truncated_manifests_are_rejected() {
+    let d = nbody::particle_dim();
+    let mut src = alloc_view(AoS::packed(&d, ArrayDims::linear(13)));
+    fill_sentinels(&mut src);
+    let mut stream = Vec::new();
+    write_message(&mut stream, &serialize(&src).unwrap()).unwrap();
+    let text = String::from_utf8_lossy(&stream).into_owned();
+
+    // Same-length substitutions keep the header's manifest_len valid,
+    // so the failure is the manifest parse itself, not the framing.
+    for (from, to) in [
+        ("layout=aos:packed", "layout=sos:packed"), // unknown recipe
+        ("endian=", "endiam="),                     // missing key
+        ("mass:f32", "mass:f33"),                   // broken record grammar
+        ("blobs=364", "blobs=363"),                 // tampered blob size (13 × 28 B)
+    ] {
+        let bad = text.replacen(from, to, 1);
+        assert_ne!(bad, text, "substitution {from:?} must apply");
+        assert!(
+            read_message(&mut std::io::Cursor::new(bad.into_bytes())).is_err(),
+            "corruption {from:?} -> {to:?} must be rejected"
+        );
+    }
+
+    // Truncation inside the manifest line hits EOF before a parse.
+    let mut cut = stream.clone();
+    cut.truncate(30);
+    assert!(read_message(&mut std::io::Cursor::new(cut)).is_err());
+
+    // Direct parse: declared blob sizes must match the rebuilt layout.
+    assert!(WireManifest::parse_line(
+        "wire record={a:f32} dims=4 layout=aos:packed endian=little blobs=17"
+    )
+    .is_err());
+}
+
+/// The framed protocol across a real process boundary: spawn the
+/// `llama wire-worker` binary and speak the request/response protocol
+/// over its pipes, alternating byte orders. The worker's response must
+/// be byte-identical to running its step (`serve_frame`) locally.
+#[test]
+fn wire_worker_process_round_trips_frames() {
+    use std::io::BufReader;
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_llama"))
+        .arg("wire-worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("spawn llama wire-worker");
+    let mut stdin = child.stdin.take().unwrap();
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+
+    let d = attr_dim();
+    let dims = ArrayDims::linear(FRAME_SIZE);
+    for f in 0..4u64 {
+        let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_sentinels(&mut frame);
+        let endian =
+            if f % 2 == 0 { WireEndian::native() } else { WireEndian::native().swapped() };
+        let request = serialize_endian(&frame, endian).unwrap();
+        write_message(&mut stdin, &request).unwrap();
+        let response = read_message(&mut stdout).unwrap().expect("worker response");
+        assert_eq!(response, serve_frame(&request).unwrap(), "frame {f} ({endian:?})");
+    }
+    drop(stdin); // EOF = shutdown
+    let status = child.wait().unwrap();
+    assert!(status.success(), "worker exited with {status}");
+}
+
+/// The `llama wire` demo command end to end: parent + worker processes,
+/// verified frame exchange, zero exit code.
+#[test]
+fn wire_demo_command_verifies_its_exchange() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_llama"))
+        .args(["wire", "--quick", "--n", "4"])
+        .output()
+        .expect("run llama wire");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "llama wire failed: {stdout}\n{stderr}");
+    assert!(stdout.contains("round trips verified"), "{stdout}");
+    assert!(stdout.contains("cross-endian frames"), "{stdout}");
+}

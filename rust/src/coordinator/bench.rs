@@ -83,11 +83,22 @@ pub struct Opts {
     pub iters: usize,
     /// Artifacts directory (fig 6).
     pub artifacts: String,
+    /// Socket address for the wire transport commands: the bind
+    /// address of `wire-serve`, the server `wire-connect` joins
+    /// (None = spawn a private server on an ephemeral port).
+    pub addr: Option<String>,
 }
 
 impl Default for Opts {
     fn default() -> Self {
-        Opts { quick: false, threads: None, n: None, iters: 5, artifacts: "artifacts".into() }
+        Opts {
+            quick: false,
+            threads: None,
+            n: None,
+            iters: 5,
+            artifacts: "artifacts".into(),
+            addr: None,
+        }
     }
 }
 

@@ -23,7 +23,7 @@ use super::report::{fmt_ms, Table};
 use crate::array::ArrayDims;
 use crate::blob::Blob;
 use crate::copy::{copy_naive, deserialize_into, serialize_endian, views_equal, wire_view};
-use crate::error::Result;
+use crate::error::{Context, Result};
 use crate::mapping::{AoSoA, Byteswap, DynMapping, Mapping, SoA, WireRecipe};
 use crate::runtime::WireEndian;
 use crate::view::{alloc_view, View};
@@ -173,9 +173,143 @@ pub fn run(o: &Opts) -> Result<Table> {
     Ok(t)
 }
 
+/// Distributed transport rows (EXPERIMENTS.md §Wire, distributed
+/// methodology): real-socket loopback round trips — whole-view frames
+/// over one connection vs the same view split by
+/// [`crate::copy::serialize_sharded`] and exchanged shard-parallel —
+/// plus the lbm halo exchange (one ghost-exchange + step cycle across
+/// all in-process workers). The multi-*process* variants live in the
+/// `wire-connect`/`halo` demos and `tests/prop_halo.rs`, where process
+/// startup would swamp a median; here the protocol and copy work are
+/// what is timed.
+pub fn distributed(o: &Opts) -> Result<Table> {
+    use std::io::BufReader;
+    use std::net::{TcpListener, TcpStream};
+
+    use super::wire_demo::{fill_frame, DRIFT_DT};
+    use super::wire_net;
+    use crate::copy::{deserialize_sharded_into, read_message, serialize_sharded, write_message};
+    use crate::workloads::lbm::{self, halo};
+    use crate::workloads::picframe::frames::drift_view;
+
+    let n = records(o).min(1 << 16);
+    let conns = o.threads.unwrap_or(4).clamp(2, 8);
+    let mut t = Table::new(
+        format!("copy::wire — distributed transport ({n} records, {conns} shard connections)"),
+        &["case", "MiB/s", "round-trip ms"],
+    );
+
+    let ad = attr_dim();
+    let dims = ArrayDims::linear(n);
+    let mut frame = alloc_view(SoA::multi_blob(&ad, dims.clone()));
+    fill_frame(&mut frame, 77);
+    let mut oracle = alloc_view(SoA::multi_blob(&ad, dims.clone()));
+    crate::copy::copy(&frame, &mut oracle);
+    drift_view(&mut oracle, n, DRIFT_DT);
+    let frame_bytes = serialize_endian(&frame, WireEndian::native())?.payload_len();
+
+    // Loopback echo-drift server: 1 single-stream + `conns` shard
+    // connections, then it drains and joins.
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding the loopback server")?;
+    let addr = listener.local_addr().context("reading the bound address")?.to_string();
+    let server = std::thread::spawn(move || wire_net::serve_connections(&listener, 1 + conns));
+
+    {
+        let stream = TcpStream::connect(&addr).context("dialing the loopback server")?;
+        let mut w = stream.try_clone().context("cloning the wire socket")?;
+        let mut r = BufReader::new(stream);
+        let mut got = alloc_view(SoA::multi_blob(&ad, dims.clone()));
+        // Correctness gate before timing.
+        write_message(&mut w, &serialize_endian(&frame, WireEndian::native())?)?;
+        let reply = read_message(&mut r)?.context("loopback server closed")?;
+        deserialize_into(&reply, &mut got)?;
+        crate::ensure!(
+            views_equal(&oracle, &got),
+            "bench-wire: loopback round trip corrupted data"
+        );
+        let single = bench("tcp single-stream", 1, o.iters, || {
+            let msg = serialize_endian(&frame, WireEndian::native()).unwrap();
+            write_message(&mut w, &msg).unwrap();
+            let reply = read_message(&mut r).unwrap().expect("loopback reply");
+            deserialize_into(&reply, &mut got).unwrap();
+            black_box(got.count());
+        });
+        t.row(vec![
+            "tcp single-stream".into(),
+            fmt_mib_s(frame_bytes, &single),
+            fmt_ms(single.median_ns),
+        ]);
+    }
+
+    {
+        let mut pairs = Vec::with_capacity(conns);
+        for _ in 0..conns {
+            let s = TcpStream::connect(&addr).context("dialing the loopback server")?;
+            let wh = s.try_clone().context("cloning the wire socket")?;
+            pairs.push((BufReader::new(s), wh));
+        }
+        let mut got = alloc_view(SoA::multi_blob(&ad, dims.clone()));
+        let sharded = bench("tcp shard-parallel", 1, o.iters, || {
+            let msgs = serialize_sharded(&frame, WireEndian::native(), conns).unwrap();
+            let replies: Vec<crate::copy::WireMessage> = std::thread::scope(|scope| {
+                let handles: Vec<_> = pairs
+                    .iter_mut()
+                    .zip(&msgs)
+                    .map(|((r, w), msg)| {
+                        scope.spawn(move || {
+                            write_message(w, msg).unwrap();
+                            read_message(r).unwrap().expect("loopback shard reply")
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
+            });
+            deserialize_sharded_into(&replies, &mut got).unwrap();
+            black_box(got.count());
+        });
+        crate::ensure!(
+            views_equal(&oracle, &got),
+            "bench-wire: shard-parallel reassembly corrupted data"
+        );
+        t.row(vec![
+            "tcp shard-parallel".into(),
+            fmt_mib_s(frame_bytes, &sharded),
+            fmt_ms(sharded.median_ns),
+        ]);
+    }
+    server.join().expect("loopback server thread panicked")?;
+
+    // lbm halo exchange: one ghost-exchange + step cycle across all
+    // workers; MiB/s is boundary-plane traffic over the cycle time.
+    let nx = if o.quick { 8 } else { 16 };
+    let workers = conns.min(4);
+    let geo = lbm::Geometry::channel_with_sphere(nx, 8, 8, 13);
+    let d = lbm::cell_dim();
+    let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+    lbm::step::init(&mut global, &geo);
+    let mut locals = halo::split_lattice(&global, workers)?;
+    let (first, _) = halo::boundary_messages(&locals[0].src)?;
+    let halo_bytes = 2 * workers * first.payload_len();
+    let exchange = bench("lbm halo exchange", 1, o.iters, || {
+        halo::exchange_ghosts(&mut locals).unwrap();
+        for w in &mut locals {
+            lbm::step::step(&w.src, &mut w.dst);
+            std::mem::swap(&mut w.src, &mut w.dst);
+        }
+        black_box(locals.len());
+    });
+    t.row(vec![
+        "lbm halo exchange".into(),
+        fmt_mib_s(halo_bytes, &exchange),
+        fmt_ms(exchange.median_ns),
+    ]);
+    Ok(t)
+}
+
 /// Serialize a bench-wire run as the `BENCH_wire.json` baseline.
 /// Refuses structurally to emit a document missing any (case, variant)
-/// row or whose throughput cells are not positive numbers.
+/// row, any distributed row, or whose throughput cells are not
+/// positive numbers.
 pub fn baseline_json_checked(o: &Opts) -> Result<String> {
     let t = run(o)?;
     for case in ["nbody soa→wire", "picframe aosoa→wire", "nbody soa→wire (swapped)"] {
@@ -194,12 +328,28 @@ pub fn baseline_json_checked(o: &Opts) -> Result<String> {
             crate::ensure!(v > 0.0, "bench-wire: non-positive throughput in {}/{}", r[0], r[1]);
         }
     }
+    let dist = distributed(o)?;
+    for case in ["tcp single-stream", "tcp shard-parallel", "lbm halo exchange"] {
+        crate::ensure!(
+            dist.rows.iter().any(|r| r[0] == case),
+            "bench-wire: missing distributed row {case}"
+        );
+    }
+    for r in &dist.rows {
+        for col in [1, 2] {
+            let v: f64 = r[col].parse().map_err(|_| {
+                crate::error::Error::msg(format!("bench-wire: non-numeric cell {:?}", r[col]))
+            })?;
+            crate::ensure!(v > 0.0, "bench-wire: non-positive distributed cell in {}", r[0]);
+        }
+    }
     Ok(format!(
         "{{\n  \"figure\": \"bench_wire\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
-         \"unit\": \"MiB/s (median)\",\n  \"wire\": {}\n}}\n",
+         \"unit\": \"MiB/s (median)\",\n  \"wire\": {},\n  \"distributed\": {}\n}}\n",
         if o.quick { "quick" } else { "full" },
         o.iters,
-        t.to_json()
+        t.to_json(),
+        dist.to_json()
     ))
 }
 
@@ -227,11 +377,27 @@ mod tests {
     }
 
     #[test]
+    fn distributed_rows_cover_all_three_cases() {
+        let t = distributed(&tiny_opts()).expect("distributed run");
+        assert_eq!(t.rows.len(), 3);
+        for r in &t.rows {
+            assert_eq!(r.len(), 3, "ragged row {r:?}");
+            assert!(r[1].parse::<f64>().unwrap() > 0.0, "MiB/s in {r:?}");
+            assert!(r[2].parse::<f64>().unwrap() > 0.0, "round-trip ms in {r:?}");
+        }
+        for case in ["tcp single-stream", "tcp shard-parallel", "lbm halo exchange"] {
+            assert!(t.rows.iter().any(|r| r[0] == case), "missing {case}");
+        }
+    }
+
+    #[test]
     fn baseline_json_gates_on_rows_and_throughput() {
         let j = baseline_json_checked(&tiny_opts()).expect("complete run passes");
         assert!(j.contains("\"figure\": \"bench_wire\""), "{j}");
         assert!(j.contains("\"wire\": {"), "{j}");
+        assert!(j.contains("\"distributed\": {"), "{j}");
         assert!(j.contains("picframe aosoa→wire"), "{j}");
+        assert!(j.contains("tcp shard-parallel"), "{j}");
         assert!(!j.contains("\"rows\": []"), "{j}");
     }
 }

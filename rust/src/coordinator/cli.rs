@@ -8,7 +8,7 @@ use crate::error::Result;
 use super::bench::Opts;
 use super::{
     bench_adapt, bench_alloc, bench_serve, bench_wire, fig10_picframe, fig5_nbody, fig6_xla,
-    fig7_copy, fig8_lbm, wire_demo,
+    fig7_copy, fig8_lbm, halo, wire_demo, wire_net,
 };
 
 const USAGE: &str = "\
@@ -32,6 +32,10 @@ COMMANDS:
   bench-serve run serve and write the BENCH_serve.json baseline
   wire        copy::wire demo: frames exchanged with worker processes
   wire-worker the worker side of `wire` (framed stdin -> stdout loop)
+  wire-serve  TCP wire server: serve --n connections on --addr
+  wire-connect TCP wire client demo: single-stream vs shard-parallel
+  halo        lbm halo exchange across worker processes over TCP
+  halo-worker the worker side of `halo` (one ring member)
   wirebench   copy::wire — compiled pack vs naive element-wise
   bench-wire  run wirebench and write the BENCH_wire.json baseline
   dump        fig 4: write SVG/HTML layout dumps + heatmap
@@ -45,6 +49,7 @@ OPTIONS:
   --iters <K>       timed iterations per case (default 5)
   --threads <T>     worker threads for parallel variants
   --artifacts <DIR> artifacts directory (default: artifacts)
+  --addr <ADDR>     socket address for wire-serve/wire-connect
   --out-dir <DIR>   output directory for dump/e2e files
   --markdown        print tables as Markdown instead of aligned text
 ";
@@ -82,6 +87,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--iters" => opts.iters = take()?.parse()?,
             "--threads" => opts.threads = Some(take()?.parse()?),
             "--artifacts" => opts.artifacts = take()?.clone(),
+            "--addr" => opts.addr = Some(take()?.clone()),
             "--out-dir" => out_dir = take()?.clone(),
             "--markdown" => markdown = true,
             "-h" | "--help" => bail!("{USAGE}"),
@@ -153,7 +159,14 @@ pub fn run(cli: Cli) -> Result<()> {
         }
         "wire" => emit(&wire_demo::run(o)?, cli.markdown),
         "wire-worker" => wire_demo::worker_main()?,
-        "wirebench" => emit(&bench_wire::run(o)?, cli.markdown),
+        "wire-serve" => wire_net::serve_main(o)?,
+        "wire-connect" => emit(&wire_net::run(o)?, cli.markdown),
+        "halo" => emit(&halo::run(o)?, cli.markdown),
+        "halo-worker" => halo::worker_main()?,
+        "wirebench" => {
+            emit(&bench_wire::run(o)?, cli.markdown);
+            emit(&bench_wire::distributed(o)?, cli.markdown);
+        }
         "bench-wire" => {
             let path = "BENCH_wire.json";
             std::fs::write(path, bench_wire::baseline_json_checked(o)?)?;
@@ -341,6 +354,14 @@ mod tests {
         assert_eq!(cli.opts.iters, 2);
         assert_eq!(cli.opts.threads, Some(4));
         assert!(cli.markdown);
+    }
+
+    #[test]
+    fn parse_addr_option() {
+        let cli = parse(&args(&["wire-serve", "--addr", "127.0.0.1:7070", "--n", "3"])).unwrap();
+        assert_eq!(cli.opts.addr.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(cli.opts.n, Some(3));
+        assert!(parse(&args(&["wire-serve", "--addr"])).is_err());
     }
 
     #[test]

@@ -15,12 +15,14 @@ pub mod bench_serve;
 pub mod bench_wire;
 pub mod cli;
 pub mod fig10_picframe;
+pub mod halo;
 pub mod fig5_nbody;
 pub mod fig6_xla;
 pub mod fig7_copy;
 pub mod fig8_lbm;
 pub mod report;
 pub mod wire_demo;
+pub mod wire_net;
 
 pub use bench::{bench, BenchResult};
 pub use report::Table;

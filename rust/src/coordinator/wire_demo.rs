@@ -80,8 +80,9 @@ fn spawn_worker() -> Result<Worker> {
     Ok(Worker { child, stdin, stdout })
 }
 
-/// Deterministic frame contents, distinct per frame.
-fn fill_frame<M: crate::mapping::Mapping>(v: &mut View<M, Vec<u8>>, seed: u64) {
+/// Deterministic frame contents, distinct per frame (shared with the
+/// socket transport demo in `wire_net`).
+pub(crate) fn fill_frame<M: crate::mapping::Mapping>(v: &mut View<M, Vec<u8>>, seed: u64) {
     let mut rng = SplitMix64::new(seed ^ 0xF7A3);
     for i in 0..v.count() {
         for leaf in 0..LEAVES {

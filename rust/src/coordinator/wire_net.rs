@@ -1,0 +1,375 @@
+//! TCP socket transport for `copy::wire` (wire phase 2): the framed
+//! message protocol of [`wire_demo`] lifted from OS pipes onto
+//! `std::net` sockets, zero dependencies beyond `std`.
+//!
+//! `llama wire-serve` binds a listener (`--addr`, default an ephemeral
+//! localhost port), announces `wire-listening <addr>` on stdout, and
+//! serves `--n` connections — one framed response per framed request,
+//! each connection on its own thread. `llama wire-connect` runs the
+//! client side as a self-checking demo: whole-view frames over a
+//! single connection, then the same view split by
+//! [`crate::copy::serialize_sharded`] and exchanged shard-parallel
+//! over several connections at once, every reply verified against a
+//! locally drifted oracle. Without `--addr` it spawns its own server
+//! process, so `wire-connect --quick` is a self-contained smoke test.
+//!
+//! Framing is byte-identical to the pipe transport ([`read_message`]
+//! and [`write_message`] know nothing about their stream), so a
+//! phase-1 peer speaking whole-view messages interoperates unchanged;
+//! only `range=`-carrying requests take the new slab path of
+//! [`serve_slab`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use super::bench::Opts;
+use super::report::Table;
+use super::wire_demo::{self, fill_frame, DRIFT_DT};
+use crate::array::ArrayDims;
+use crate::copy::{
+    deserialize_into, deserialize_sharded_into, read_message, serialize_endian, serialize_sharded,
+    views_equal, wire_view, write_message, CopyProgram, WireMessage,
+};
+use crate::error::{Context, Result};
+use crate::mapping::SoA;
+use crate::runtime::{WireEndian, WireManifest};
+use crate::view::alloc_view;
+use crate::workloads::picframe::{attr_dim, frames::drift_view, FRAME_SIZE};
+use crate::{bail, ensure};
+
+/// The server's announce line prefix, printed to stdout once bound —
+/// parents and tests read `wire-listening <addr>` to learn the
+/// ephemeral port.
+pub const LISTENING_PREFIX: &str = "wire-listening ";
+
+/// One server step. Whole-view messages take the phase-1 path
+/// ([`wire_demo::serve_frame`]). A `range=` slab is rebuilt over the
+/// range length alone (the manifest's recipe over `end - begin`
+/// records — [`wire_view`] already wraps cross-endian payloads in a
+/// byteswap), drifted, and re-serialized under a manifest that names
+/// the *original* full-view dims and range — so the reply lands back
+/// on the requester's records `begin..end` via
+/// [`crate::copy::deserialize_range_into`], and shard replies
+/// reassemble by manifest range alone.
+pub fn serve_slab(msg: &WireMessage) -> Result<WireMessage> {
+    let Some((begin, end)) = msg.manifest.range else {
+        return wire_demo::serve_frame(msg);
+    };
+    let n = end - begin;
+    let src = wire_view(msg)?;
+    let mut slab =
+        alloc_view(msg.manifest.recipe.build(&msg.manifest.record, ArrayDims::linear(n)));
+    CopyProgram::compile_slice(src.mapping(), slab.mapping(), 0, 0, n).execute(&src, &mut slab);
+    drift_view(&mut slab, n, DRIFT_DT);
+    let packed = serialize_endian(&slab, msg.manifest.endian)?;
+    let manifest = WireManifest::describe_range(
+        msg.manifest.record.clone(),
+        msg.manifest.dims.clone(),
+        msg.manifest.recipe,
+        msg.manifest.endian,
+        begin,
+        end,
+    )?;
+    ensure!(
+        manifest.blob_sizes == packed.manifest.blob_sizes,
+        "slab reply payload diverged from its manifest"
+    );
+    Ok(WireMessage { manifest, payload: packed.payload })
+}
+
+/// Serve one accepted connection: a framed response per framed
+/// request, clean exit at EOF. Shared by `wire-serve` and the loopback
+/// servers the bench and tests spin up in-process.
+pub fn serve_connection(stream: TcpStream) -> Result<()> {
+    let mut w = stream.try_clone().context("cloning the wire socket")?;
+    let mut r = BufReader::new(stream);
+    while let Some(msg) = read_message(&mut r)? {
+        write_message(&mut w, &serve_slab(&msg)?)?;
+    }
+    Ok(())
+}
+
+/// Accept-and-serve loop: exactly `conns` connections, one serving
+/// thread each. Returns once every accepted connection has drained to
+/// EOF — a bounded accept count is the server's shutdown signal.
+pub fn serve_connections(listener: &TcpListener, conns: usize) -> Result<()> {
+    std::thread::scope(|scope| -> Result<()> {
+        for _ in 0..conns {
+            let (stream, peer) = listener.accept().context("accepting wire connection")?;
+            scope.spawn(move || {
+                if let Err(e) = serve_connection(stream) {
+                    eprintln!("wire-serve: connection {peer}: {e}");
+                }
+            });
+        }
+        Ok(())
+    })
+}
+
+/// Entry point of the `wire-serve` CLI command.
+pub fn serve_main(o: &Opts) -> Result<()> {
+    let addr = o.addr.clone().unwrap_or_else(|| "127.0.0.1:0".to_string());
+    let listener =
+        TcpListener::bind(&addr).with_context(|| format!("binding wire-serve to {addr}"))?;
+    let local = listener.local_addr().context("reading the bound address")?;
+    println!("{LISTENING_PREFIX}{local}");
+    std::io::stdout().flush().context("announcing the wire-serve address")?;
+    serve_connections(&listener, o.n.unwrap_or(2))
+}
+
+/// Spawn `binary wire-serve --n <conns>` and read its announce line.
+/// Public so integration tests can pass the `CARGO_BIN_EXE_llama`
+/// path; the demo passes its own `current_exe`.
+pub fn spawn_server(binary: &Path, conns: usize) -> Result<(Child, String)> {
+    let mut child = Command::new(binary)
+        .args(["wire-serve", "--n"])
+        .arg(conns.to_string())
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .spawn()
+        .context("spawning wire-serve")?;
+    let mut line = String::new();
+    BufReader::new(child.stdout.as_mut().expect("piped stdout"))
+        .read_line(&mut line)
+        .context("reading the wire-serve announce line")?;
+    let Some(addr) = line.trim().strip_prefix(LISTENING_PREFIX) else {
+        let _ = child.kill();
+        bail!("unexpected wire-serve announce line {line:?}");
+    };
+    Ok((child, addr.to_string()))
+}
+
+/// Dial the server; the pair is (buffered read half, write half) of
+/// one socket.
+fn connect(addr: &str) -> Result<(BufReader<TcpStream>, TcpStream)> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to wire server {addr}"))?;
+    let w = stream.try_clone().context("cloning the wire socket")?;
+    Ok((BufReader::new(stream), w))
+}
+
+/// The `wire-connect` demo: exchange `--iters` frames single-stream,
+/// then the same frame shard-parallel over `--threads` connections
+/// (alternating byte orders throughout), verifying every round trip
+/// bit-for-bit against a locally drifted oracle. Joins an external
+/// server via `--addr`, or spawns its own `wire-serve` child.
+pub fn run(o: &Opts) -> Result<Table> {
+    let conns = o.threads.unwrap_or(4).clamp(2, 8);
+    let n = o.n.unwrap_or(if o.quick { FRAME_SIZE / 4 } else { FRAME_SIZE }).max(conns * 2);
+    let iters = o.iters.max(2);
+
+    let d = attr_dim();
+    let dims = ArrayDims::linear(n);
+    let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    fill_frame(&mut frame, 0xC0);
+    let mut oracle = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    crate::copy::copy(&frame, &mut oracle);
+    drift_view(&mut oracle, n, DRIFT_DT);
+    let frame_bytes = serialize_endian(&frame, WireEndian::native())?.payload_len();
+
+    let mut child = None;
+    let addr = match &o.addr {
+        Some(a) => a.clone(),
+        None => {
+            let exe = std::env::current_exe().context("locating the llama binary")?;
+            let (c, a) = spawn_server(&exe, conns + 1)?;
+            child = Some(c);
+            a
+        }
+    };
+
+    // Case 1: whole-view frames over one connection.
+    let single = {
+        let (mut r, mut w) = connect(&addr)?;
+        let t0 = Instant::now();
+        for it in 0..iters {
+            let endian = if it % 2 == 0 {
+                WireEndian::native()
+            } else {
+                WireEndian::native().swapped()
+            };
+            write_message(&mut w, &serialize_endian(&frame, endian)?)?;
+            let reply = read_message(&mut r)?.context("server closed mid-exchange")?;
+            ensure!(
+                reply.manifest.endian == endian,
+                "reply byte order {:?}, request was {:?}",
+                reply.manifest.endian,
+                endian
+            );
+            let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+            deserialize_into(&reply, &mut got)?;
+            ensure!(views_equal(&oracle, &got), "single-stream round trip {it} diverged");
+        }
+        t0.elapsed()
+    };
+
+    // Case 2: the same frame split into per-connection range slabs,
+    // all sent and received concurrently, reassembled by manifest
+    // range on the way back.
+    let mut pairs = Vec::with_capacity(conns);
+    for _ in 0..conns {
+        pairs.push(connect(&addr)?);
+    }
+    let sharded = {
+        let t0 = Instant::now();
+        for it in 0..iters {
+            let endian = if it % 2 == 0 {
+                WireEndian::native().swapped()
+            } else {
+                WireEndian::native()
+            };
+            let msgs = serialize_sharded(&frame, endian, conns)?;
+            let replies: Vec<WireMessage> = std::thread::scope(|scope| -> Result<Vec<_>> {
+                let handles: Vec<_> = pairs
+                    .iter_mut()
+                    .zip(&msgs)
+                    .map(|((r, w), msg)| {
+                        scope.spawn(move || -> Result<WireMessage> {
+                            write_message(w, msg)?;
+                            read_message(r)?.context("server closed a shard connection")
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard exchange thread panicked"))
+                    .collect()
+            })?;
+            let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+            deserialize_sharded_into(&replies, &mut got)?;
+            ensure!(views_equal(&oracle, &got), "shard-parallel round trip {it} diverged");
+        }
+        t0.elapsed()
+    };
+    drop(pairs);
+
+    if let Some(mut c) = child {
+        let status = c.wait().context("waiting for wire-serve")?;
+        ensure!(status.success(), "wire-serve exited with {status}");
+    }
+
+    let mib = |elapsed: Duration| {
+        (frame_bytes * iters) as f64 / elapsed.as_secs_f64().max(1e-9) / (1024.0 * 1024.0)
+    };
+    let mut t = Table::new(
+        format!("copy::wire — TCP socket exchange ({n} records, {conns} shard connections)"),
+        &["case", "MiB/s", "round trips"],
+    );
+    t.row(vec![
+        "single-stream".into(),
+        format!("{:.1}", mib(single)),
+        format!("{iters}/{iters} verified"),
+    ]);
+    t.row(vec![
+        format!("shard-parallel ({conns} conns)"),
+        format!("{:.1}", mib(sharded)),
+        format!("{iters}/{iters} verified"),
+    ]);
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::copy::{deserialize_range_into, serialize, serialize_range_endian};
+    use crate::workloads::picframe::{CELL_IDX, LEAVES};
+
+    #[test]
+    fn serve_slab_drifts_a_range_and_replies_under_the_full_manifest() {
+        let d = attr_dim();
+        let dims = ArrayDims::linear(96);
+        let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_frame(&mut frame, 5);
+        let mut oracle = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        crate::copy::copy(&frame, &mut oracle);
+        drift_view(&mut oracle, 96, DRIFT_DT);
+
+        for endian in [WireEndian::native(), WireEndian::native().swapped()] {
+            let request = serialize_range_endian(&frame, 16, 48, endian).unwrap();
+            let reply = serve_slab(&request).unwrap();
+            assert_eq!(reply.manifest.range, Some((16, 48)));
+            assert_eq!(reply.manifest.endian, endian);
+
+            let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+            crate::copy::copy(&frame, &mut got);
+            deserialize_range_into(&reply, &mut got).unwrap();
+            for i in 0..96 {
+                let want = if (16..48).contains(&i) { &oracle } else { &frame };
+                for leaf in 0..LEAVES {
+                    if leaf == CELL_IDX {
+                        assert_eq!(
+                            got.get::<i32>(i, leaf),
+                            want.get::<i32>(i, leaf),
+                            "record {i} leaf {leaf} ({endian:?})"
+                        );
+                    } else {
+                        assert_eq!(
+                            got.get::<f32>(i, leaf).to_bits(),
+                            want.get::<f32>(i, leaf).to_bits(),
+                            "record {i} leaf {leaf} ({endian:?})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn serve_slab_matches_the_frame_path_on_whole_view_messages() {
+        let d = attr_dim();
+        let dims = ArrayDims::linear(32);
+        let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_frame(&mut frame, 9);
+        let msg = serialize(&frame).unwrap();
+        let a = serve_slab(&msg).unwrap();
+        let b = wire_demo::serve_frame(&msg).unwrap();
+        assert_eq!(a.manifest.range, None);
+        assert_eq!(a.payload, b.payload);
+    }
+
+    #[test]
+    fn loopback_socket_round_trips_sharded_frames() {
+        // Real TCP, no child process: the serve loop on a thread, three
+        // client connections exchanging range slabs concurrently.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || serve_connections(&listener, 3).unwrap());
+
+        let d = attr_dim();
+        let dims = ArrayDims::linear(200);
+        let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_frame(&mut frame, 1);
+        let mut oracle = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        crate::copy::copy(&frame, &mut oracle);
+        drift_view(&mut oracle, 200, DRIFT_DT);
+
+        let msgs = serialize_sharded(&frame, WireEndian::native().swapped(), 3).unwrap();
+        assert_eq!(msgs.len(), 3);
+        let mut pairs = Vec::new();
+        for _ in 0..msgs.len() {
+            pairs.push(connect(&addr).unwrap());
+        }
+        let replies: Vec<WireMessage> = std::thread::scope(|scope| {
+            let handles: Vec<_> = pairs
+                .iter_mut()
+                .zip(&msgs)
+                .map(|((r, w), msg)| {
+                    scope.spawn(move || {
+                        write_message(w, msg).unwrap();
+                        read_message(r).unwrap().expect("shard reply")
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        drop(pairs);
+        server.join().unwrap();
+
+        let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        deserialize_sharded_into(&replies, &mut got).unwrap();
+        assert!(views_equal(&oracle, &got));
+    }
+}

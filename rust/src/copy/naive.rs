@@ -20,13 +20,33 @@ pub(crate) fn copy_field<MS, MD, BS, BD>(
     BS: Blob,
     BD: BlobMut,
 {
+    copy_field_between(src, dst, leaf, lin, lin, size);
+}
+
+/// Copy one leaf value between *different* linearized indices — the
+/// gather primitive of slice programs ([`super::CopyProgram::compile_slice`]),
+/// where source record `src_lin` lands at destination record `dst_lin`.
+#[inline]
+pub(crate) fn copy_field_between<MS, MD, BS, BD>(
+    src: &View<MS, BS>,
+    dst: &mut View<MD, BD>,
+    leaf: usize,
+    src_lin: usize,
+    dst_lin: usize,
+    size: usize,
+) where
+    MS: Mapping,
+    MD: Mapping,
+    BS: Blob,
+    BD: BlobMut,
+{
     let (snr, soff) = src
         .mapping()
-        .blob_nr_and_offset(leaf, src.mapping().slot_of_lin(lin));
+        .blob_nr_and_offset(leaf, src.mapping().slot_of_lin(src_lin));
     let src_native = src.mapping().is_native_representation();
     let dst_native = dst.mapping().is_native_representation();
     let (dm, dblobs) = dst.mapping_and_blobs_mut();
-    let (dnr, doff) = dm.blob_nr_and_offset(leaf, dm.slot_of_lin(lin));
+    let (dnr, doff) = dm.blob_nr_and_offset(leaf, dm.slot_of_lin(dst_lin));
     let sbytes = &src.blobs()[snr].as_bytes()[soff..soff + size];
     let dbytes = &mut dblobs[dnr].as_bytes_mut()[doff..doff + size];
     dbytes.copy_from_slice(sbytes);

@@ -104,18 +104,26 @@ pub enum CopyOp {
         elem: usize,
         count: usize,
     },
-    /// Field-wise element copy of records `start..end`, resolved
-    /// through the mapping objects at execution time (handles generic
-    /// addressing and byte-representation conversion).
-    Gather { start: usize, end: usize },
+    /// Field-wise element copy of `len` records, resolved through the
+    /// mapping objects at execution time (handles generic addressing
+    /// and byte-representation conversion). Source record
+    /// `src_start + i` lands at destination record `dst_start + i` —
+    /// whole-view programs have `src_start == dst_start`, slice
+    /// programs ([`CopyProgram::compile_slice`]) may not.
+    Gather { src_start: usize, dst_start: usize, len: usize },
 }
 
-/// A compiled copy schedule between two fixed layouts over the same
-/// data space. Compile once per (src mapping, dst mapping) pair,
-/// execute on any number of view pairs using those mappings.
+/// A compiled copy schedule between two fixed layouts. Whole-view
+/// programs ([`CopyProgram::compile`]) require the same data space on
+/// both sides; slice programs ([`CopyProgram::compile_slice`]) only the
+/// same record dimension, so `count` (source records) and `dst_count`
+/// (destination records) can differ. Compile once per (src mapping,
+/// dst mapping) pair, execute on any number of view pairs using those
+/// mappings.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CopyProgram {
     count: usize,
+    dst_count: usize,
     method: CopyMethod,
     ops: Vec<CopyOp>,
 }
@@ -198,6 +206,36 @@ impl CopyProgram {
         compile_with(src, dst, &sp, &dp, order)
     }
 
+    /// Compile a **slice** program: source records
+    /// `src_start .. src_start + len` land at destination records
+    /// `dst_start .. dst_start + len`. Unlike [`CopyProgram::compile`],
+    /// the two sides need not share array extents — only the record
+    /// dimension — which is what range-restricted serialization
+    /// (`copy::wire`) and halo exchanges need: a sub-range of a big
+    /// view packed into (or unpacked from) a dense buffer of exactly
+    /// `len` records at a different base index.
+    ///
+    /// Strategy selection matches the range compiler: chunk-compatible
+    /// pairs walk lane runs at each side's own offset, affine pairs
+    /// compile one strided (or swap) run per leaf, and only pairs with
+    /// a generic side fall back to the element [`CopyOp::Gather`] —
+    /// offsets never force a gather on their own, so lane-unaligned
+    /// slab boundaries stay on closed-form runs for affine layouts.
+    ///
+    /// Panics if the record dimensions differ or either range is out of
+    /// bounds.
+    pub fn compile_slice<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+        src: &MS,
+        dst: &MD,
+        src_start: usize,
+        dst_start: usize,
+        len: usize,
+    ) -> CopyProgram {
+        let sp = src.plan();
+        let dp = dst.plan();
+        compile_slice_with(src, dst, &sp, &dp, src_start, dst_start, len)
+    }
+
     /// Which strategy the compiler chose (what [`super::copy`] reports).
     #[inline]
     pub fn method(&self) -> CopyMethod {
@@ -210,10 +248,17 @@ impl CopyProgram {
         &self.ops
     }
 
-    /// Record count the program was compiled for.
+    /// Source record count the program was compiled for.
     #[inline]
     pub fn count(&self) -> usize {
         self.count
+    }
+
+    /// Destination record count the program was compiled for (equal to
+    /// [`CopyProgram::count`] except for slice programs).
+    #[inline]
+    pub fn dst_count(&self) -> usize {
+        self.dst_count
     }
 
     /// True if no op needs the mapping objects at execution time
@@ -255,7 +300,7 @@ impl CopyProgram {
     {
         let path = if path.is_vector() { path } else { SimdPath::Scalar };
         assert_eq!(self.count, src.count(), "program compiled for a different extent");
-        assert_eq!(self.count, dst.count(), "program compiled for a different extent");
+        assert_eq!(self.dst_count, dst.count(), "program compiled for a different extent");
         let info = src.mapping().info().clone();
         for op in &self.ops {
             match *op {
@@ -310,11 +355,18 @@ impl CopyProgram {
                         count,
                     );
                 }
-                CopyOp::Gather { start, end } => {
-                    for lin in start..end {
+                CopyOp::Gather { src_start, dst_start, len } => {
+                    for i in 0..len {
                         for leaf in 0..info.leaf_count() {
                             let size = info.fields[leaf].size();
-                            super::naive::copy_field(src, dst, leaf, lin, size);
+                            super::naive::copy_field_between(
+                                src,
+                                dst,
+                                leaf,
+                                src_start + i,
+                                dst_start + i,
+                                size,
+                            );
                         }
                     }
                 }
@@ -377,14 +429,19 @@ pub(crate) fn compile_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
                 });
             }
         }
-        return CopyProgram { count: sp.count(), method: CopyMethod::Blobwise, ops };
+        return CopyProgram {
+            count: sp.count(),
+            dst_count: dp.count(),
+            method: CopyMethod::Blobwise,
+            ops,
+        };
     }
     compile_range_with(src, dst, sp, dp, order, 0, sp.count())
 }
 
 /// Compile the record range `start..end` with the best non-identical
 /// strategy: span-merged chunk runs, strided runs, swap runs, or
-/// gather.
+/// gather. A range is a slice with equal offsets on both sides.
 pub(crate) fn compile_range_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
     src: &MS,
     dst: &MD,
@@ -394,16 +451,69 @@ pub(crate) fn compile_range_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
     start: usize,
     end: usize,
 ) -> CopyProgram {
+    compile_slice_ordered(src, dst, sp, dp, order, start, start, end.saturating_sub(start))
+}
+
+/// [`CopyProgram::compile_slice`] over plans the caller already
+/// compiled.
+pub(crate) fn compile_slice_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+    src: &MS,
+    dst: &MD,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    src_start: usize,
+    dst_start: usize,
+    len: usize,
+) -> CopyProgram {
+    assert!(
+        src.info().dim == dst.info().dim,
+        "slice program between different record dimensions: {} vs {}",
+        src.mapping_name(),
+        dst.mapping_name()
+    );
+    assert!(
+        src_start.checked_add(len).is_some_and(|e| e <= sp.count())
+            && dst_start.checked_add(len).is_some_and(|e| e <= dp.count()),
+        "slice src {src_start}+{len} / dst {dst_start}+{len} out of bounds ({} / {} records)",
+        sp.count(),
+        dp.count()
+    );
+    compile_slice_ordered(src, dst, sp, dp, ChunkOrder::ReadContiguous, src_start, dst_start, len)
+}
+
+/// The shared slice compiler behind ranges and slices: source records
+/// `src_start .. src_start + len` land at destination records
+/// `dst_start .. dst_start + len`, each side addressed at its own
+/// offset.
+#[allow(clippy::too_many_arguments)]
+fn compile_slice_ordered<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+    src: &MS,
+    dst: &MD,
+    sp: &LayoutPlan,
+    dp: &LayoutPlan,
+    order: ChunkOrder,
+    src_start: usize,
+    dst_start: usize,
+    len: usize,
+) -> CopyProgram {
     if plans_chunk_compatible(sp, dp) {
-        compile_chunk_range(src, dst, sp, dp, order, start, end)
+        compile_chunk_slice(src, dst, sp, dp, order, src_start, dst_start, len)
     } else if plans_strided_compatible(sp, dp) {
-        compile_strided_range(src, sp, dp, start, end)
+        compile_strided_slice(src, sp, dp, src_start, dst_start, len)
     } else if plans_swap_compatible(sp, dp) {
-        compile_swap_range(src, sp, dp, start, end)
+        compile_swap_slice(src, sp, dp, src_start, dst_start, len)
     } else {
-        let ops =
-            if start < end { vec![CopyOp::Gather { start, end }] } else { Vec::new() };
-        CopyProgram { count: sp.count(), method: CopyMethod::FieldWise, ops }
+        let ops = if len > 0 {
+            vec![CopyOp::Gather { src_start, dst_start, len }]
+        } else {
+            Vec::new()
+        };
+        CopyProgram {
+            count: sp.count(),
+            dst_count: dp.count(),
+            method: CopyMethod::FieldWise,
+            ops,
+        }
     }
 }
 
@@ -412,82 +522,104 @@ pub(crate) fn compile_range_with<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
 /// lengths are capped at both plans' `chunk_lanes` — for Splits the
 /// gcd of the children's lanes, the longest run contiguous on *every*
 /// routed child.
-fn compile_chunk_range<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
+#[allow(clippy::too_many_arguments)]
+fn compile_chunk_slice<MS: Mapping + ?Sized, MD: Mapping + ?Sized>(
     src: &MS,
     dst: &MD,
     sp: &LayoutPlan,
     dp: &LayoutPlan,
     order: ChunkOrder,
-    start: usize,
-    end: usize,
+    src_start: usize,
+    dst_start: usize,
+    len: usize,
 ) -> CopyProgram {
     let src_lanes = sp.chunk_lanes().expect("chunk strategy needs src chunk_lanes");
     let dst_lanes = dp.chunk_lanes().expect("chunk strategy needs dst chunk_lanes");
     let info = src.info().clone();
     let leaves = info.leaf_count();
-    let outer = match order {
-        ChunkOrder::ReadContiguous => src_lanes,
-        ChunkOrder::WriteContiguous => dst_lanes,
+    let end = src_start + len;
+    // Next outer-block boundary after `pos`, in *source* coordinates:
+    // the chosen side's lane blocks, the destination's translated by
+    // the slice offset (equal offsets reduce to the range walk).
+    let boundary = |pos: usize| match order {
+        ChunkOrder::ReadContiguous => ((pos / src_lanes) + 1) * src_lanes,
+        ChunkOrder::WriteContiguous => {
+            let dpos = pos - src_start + dst_start;
+            ((dpos / dst_lanes) + 1) * dst_lanes - dst_start + src_start
+        }
     };
     let mut sink = OpSink::new();
-    let mut block_start = start;
+    let mut block_start = src_start;
     while block_start < end {
-        let block_end = (((block_start / outer) + 1) * outer).min(end);
+        let block_end = boundary(block_start).min(end);
         for leaf in 0..leaves {
             let size = info.fields[leaf].size();
             let mut pos = block_start;
             while pos < block_end {
+                let dpos = pos - src_start + dst_start;
                 // Largest run not crossing a lane boundary on either
-                // side (plan.rs span helpers).
+                // side (plan.rs span helpers), each side at its own
+                // offset.
                 let run = block_end
                     .min(sp.chunk_run_end(pos).expect("src chunkable"))
-                    .min(dp.chunk_run_end(pos).expect("dst chunkable"));
+                    .min(dp.chunk_run_end(dpos).expect("dst chunkable") - dst_start + src_start);
                 let (snr, soff) = sp.resolve_with(src, leaf, pos);
-                let (dnr, doff) = dp.resolve_with(dst, leaf, pos);
+                let (dnr, doff) = dp.resolve_with(dst, leaf, dpos);
                 sink.memcpy(snr, soff, dnr, doff, (run - pos) * size);
                 pos = run;
             }
         }
         block_start = block_end;
     }
-    CopyProgram { count: sp.count(), method: CopyMethod::AoSoAChunked, ops: sink.ops }
+    CopyProgram {
+        count: sp.count(),
+        dst_count: dp.count(),
+        method: CopyMethod::AoSoAChunked,
+        ops: sink.ops,
+    }
 }
 
 /// The affine strategy: one op per leaf over the whole range. Leaves
 /// contiguous on both sides (stride == element size) become `Memcpy`
 /// spans; everything else a `StridedRun`.
-fn compile_strided_range<MS: Mapping + ?Sized>(
+fn compile_strided_slice<MS: Mapping + ?Sized>(
     src: &MS,
     sp: &LayoutPlan,
     dp: &LayoutPlan,
-    start: usize,
-    end: usize,
+    src_start: usize,
+    dst_start: usize,
+    len: usize,
 ) -> CopyProgram {
     let info = src.info().clone();
     let mut sink = OpSink::new();
-    if start < end {
+    if len > 0 {
         for leaf in 0..info.leaf_count() {
             let e = info.fields[leaf].size();
             let a = sp.affine_leaf(leaf).expect("strided strategy needs affine src");
             let b = dp.affine_leaf(leaf).expect("strided strategy needs affine dst");
             if a.stride == e && b.stride == e {
-                let (so, doff) = (a.base + start * e, b.base + start * e);
-                sink.memcpy(a.blob, so, b.blob, doff, (end - start) * e);
+                let (so, doff) = (a.base + src_start * e, b.base + dst_start * e);
+                sink.memcpy(a.blob, so, b.blob, doff, len * e);
             } else {
                 sink.ops.push(CopyOp::StridedRun {
                     src_blob: a.blob,
-                    src_off: a.base + start * a.stride,
+                    src_off: a.base + src_start * a.stride,
                     src_stride: a.stride,
                     dst_blob: b.blob,
-                    dst_off: b.base + start * b.stride,
+                    dst_off: b.base + dst_start * b.stride,
                     dst_stride: b.stride,
                     elem: e,
-                    count: end - start,
+                    count: len,
                 });
             }
         }
     }
-    CopyProgram { count: sp.count(), method: CopyMethod::Program, ops: sink.ops }
+    CopyProgram {
+        count: sp.count(),
+        dst_count: dp.count(),
+        method: CopyMethod::Program,
+        ops: sink.ops,
+    }
 }
 
 /// The swap strategy: an affine pair with exactly one byteswapped side
@@ -496,16 +628,17 @@ fn compile_strided_range<MS: Mapping + ?Sized>(
 /// that reverses element bytes in flight — the `copy::wire` cross-endian
 /// pack/unpack path. 1-byte leaves need no reversal and compile to the
 /// verbatim ops of the strided strategy.
-fn compile_swap_range<MS: Mapping + ?Sized>(
+fn compile_swap_slice<MS: Mapping + ?Sized>(
     src: &MS,
     sp: &LayoutPlan,
     dp: &LayoutPlan,
-    start: usize,
-    end: usize,
+    src_start: usize,
+    dst_start: usize,
+    len: usize,
 ) -> CopyProgram {
     let info = src.info().clone();
     let mut sink = OpSink::new();
-    if start < end {
+    if len > 0 {
         for leaf in 0..info.leaf_count() {
             let e = info.fields[leaf].size();
             let a = sp.affine_leaf(leaf).expect("swap strategy needs affine src");
@@ -513,35 +646,40 @@ fn compile_swap_range<MS: Mapping + ?Sized>(
             if e <= 1 {
                 // Byte reversal of a 1-byte element is the identity.
                 if a.stride == e && b.stride == e {
-                    let (so, doff) = (a.base + start * e, b.base + start * e);
-                    sink.memcpy(a.blob, so, b.blob, doff, (end - start) * e);
+                    let (so, doff) = (a.base + src_start * e, b.base + dst_start * e);
+                    sink.memcpy(a.blob, so, b.blob, doff, len * e);
                 } else {
                     sink.ops.push(CopyOp::StridedRun {
                         src_blob: a.blob,
-                        src_off: a.base + start * a.stride,
+                        src_off: a.base + src_start * a.stride,
                         src_stride: a.stride,
                         dst_blob: b.blob,
-                        dst_off: b.base + start * b.stride,
+                        dst_off: b.base + dst_start * b.stride,
                         dst_stride: b.stride,
                         elem: e,
-                        count: end - start,
+                        count: len,
                     });
                 }
             } else {
                 sink.ops.push(CopyOp::SwapRun {
                     src_blob: a.blob,
-                    src_off: a.base + start * a.stride,
+                    src_off: a.base + src_start * a.stride,
                     src_stride: a.stride,
                     dst_blob: b.blob,
-                    dst_off: b.base + start * b.stride,
+                    dst_off: b.base + dst_start * b.stride,
                     dst_stride: b.stride,
                     elem: e,
-                    count: end - start,
+                    count: len,
                 });
             }
         }
     }
-    CopyProgram { count: sp.count(), method: CopyMethod::SwapProgram, ops: sink.ops }
+    CopyProgram {
+        count: sp.count(),
+        dst_count: dp.count(),
+        method: CopyMethod::SwapProgram,
+        ops: sink.ops,
+    }
 }
 
 /// Split the record range into plan-aligned shards and compile one
@@ -887,8 +1025,8 @@ pub fn programs_cover_dst(programs: &[CopyProgram], dst_blob_sizes: &[usize]) ->
                         strided[dst_blob].push((pi, dst_off, dst_stride, elem, count));
                     }
                 }
-                CopyOp::Gather { start, end } => {
-                    if start < end {
+                CopyOp::Gather { len, .. } => {
+                    if len > 0 {
                         return false;
                     }
                 }
@@ -1004,7 +1142,7 @@ pub fn execute_parallel_with<MS, MD, BS, BD>(
             // copying a prefix.
             for p in programs {
                 assert_eq!(p.count(), src.count(), "program compiled for a different extent");
-                assert_eq!(p.count(), dst.count(), "program compiled for a different extent");
+                assert_eq!(p.dst_count(), dst.count(), "program compiled for a different extent");
             }
             assert!(
                 programs.iter().all(|p| p.is_closed_form()),
@@ -1634,6 +1772,7 @@ mod tests {
         // Dense strided form: count * elem wraps to 16.
         let p = CopyProgram {
             count: 4,
+            dst_count: 4,
             method: CopyMethod::Program,
             ops: vec![CopyOp::StridedRun {
                 src_blob: 0,
@@ -1651,6 +1790,7 @@ mod tests {
         // span.
         let p = CopyProgram {
             count: 1,
+            dst_count: 1,
             method: CopyMethod::Blobwise,
             ops: vec![
                 CopyOp::Memcpy { src_blob: 0, src_off: 0, dst_blob: 0, dst_off: 0, len: 1 },
@@ -1678,6 +1818,7 @@ mod tests {
         };
         let p = CopyProgram {
             count: 2,
+            dst_count: 2,
             method: CopyMethod::Program,
             ops: vec![run(0), run(4)],
         };
@@ -1747,6 +1888,168 @@ mod tests {
         // Racing first-compilers may each compile, but the map holds
         // exactly one entry for the pair afterwards.
         assert_eq!(cache.entries(), 1);
+    }
+
+    /// Naive slice oracle: field-wise two-index copy, the reference
+    /// for every `compile_slice` strategy.
+    fn slice_oracle<MS: Mapping, MD: Mapping>(
+        src: &crate::view::View<MS, Vec<u8>>,
+        dst: &mut crate::view::View<MD, Vec<u8>>,
+        src_start: usize,
+        dst_start: usize,
+        len: usize,
+    ) {
+        let info = src.mapping().info().clone();
+        for i in 0..len {
+            for leaf in 0..info.leaf_count() {
+                crate::copy::naive::copy_field_between(
+                    src,
+                    dst,
+                    leaf,
+                    src_start + i,
+                    dst_start + i,
+                    info.fields[leaf].size(),
+                );
+            }
+        }
+    }
+
+    /// Differential slice helper: compile_slice must be bit-identical
+    /// to the two-index naive oracle, and report the expected method.
+    fn check_slice<MS: Mapping + Clone, MD: Mapping + Clone>(
+        src_m: MS,
+        dst_m: MD,
+        src_start: usize,
+        dst_start: usize,
+        len: usize,
+        expect: CopyMethod,
+    ) {
+        let mut src = alloc_view(src_m);
+        fill_distinct(&mut src);
+        let mut oracle = alloc_view(dst_m.clone());
+        let mut got = alloc_view(dst_m.clone());
+        // Sentinel the destinations identically so untouched bytes
+        // must match too (the slice writes only its records).
+        for v in [&mut oracle, &mut got] {
+            let (_, blobs) = v.mapping_and_blobs_mut();
+            for b in blobs {
+                b.iter_mut().enumerate().for_each(|(i, x)| *x = (i % 251) as u8);
+            }
+        }
+        slice_oracle(&src, &mut oracle, src_start, dst_start, len);
+        let prog = CopyProgram::compile_slice(src.mapping(), &dst_m, src_start, dst_start, len);
+        assert_eq!(prog.method(), expect, "slice strategy");
+        assert_eq!(prog.count(), src.count());
+        assert_eq!(prog.dst_count(), oracle.count());
+        prog.execute(&src, &mut got);
+        assert_eq!(got.blobs(), oracle.blobs(), "slice program != naive oracle");
+    }
+
+    #[test]
+    fn slice_programs_match_the_two_index_oracle() {
+        let d = particle_dim();
+        let big = ArrayDims::linear(37);
+        let small = ArrayDims::linear(11);
+        // Chunked pair, lane-unaligned offsets on both sides.
+        check_slice(
+            AoSoA::new(&d, big.clone(), 8),
+            AoSoA::new(&d, small.clone(), 4),
+            13,
+            3,
+            7,
+            CopyMethod::AoSoAChunked,
+        );
+        // Packed AoS → packed AoS at shifted offsets coalesces to one
+        // span per slice (chunk lanes 1).
+        check_slice(
+            AoS::packed(&d, big.clone()),
+            AoS::packed(&d, small.clone()),
+            20,
+            1,
+            9,
+            CopyMethod::AoSoAChunked,
+        );
+        // Affine pair (SoA → aligned AoS): per-leaf strided runs.
+        check_slice(
+            SoA::multi_blob(&d, big.clone()),
+            AoS::aligned(&d, small.clone()),
+            5,
+            2,
+            6,
+            CopyMethod::Program,
+        );
+        // Swap pair: byteswapped source into native SoA.
+        use crate::mapping::Byteswap;
+        check_slice(
+            Byteswap::new(AoS::packed(&d, big.clone())),
+            SoA::multi_blob(&d, small.clone()),
+            7,
+            0,
+            11,
+            CopyMethod::SwapProgram,
+        );
+        // Generic side (Morton curve): the element gather fallback.
+        use crate::array::MortonCurve;
+        check_slice(
+            AoS::with_linearizer(&d, ArrayDims::from([8, 8]), MortonCurve, true),
+            AoS::packed(&d, small),
+            9,
+            1,
+            8,
+            CopyMethod::FieldWise,
+        );
+    }
+
+    #[test]
+    fn slice_with_equal_spaces_and_offsets_matches_range_compile() {
+        // A whole-space slice at offset 0 produces the same ops as the
+        // range compiler (Blobwise aside, which slices never use).
+        let d = particle_dim();
+        let dims = ArrayDims::linear(29);
+        let src_m = AoSoA::new(&d, dims.clone(), 8);
+        let dst_m = SoA::multi_blob(&d, dims.clone());
+        let slice = CopyProgram::compile_slice(&src_m, &dst_m, 0, 0, 29);
+        let range = CopyProgram::compile(&src_m, &dst_m);
+        assert_eq!(slice.ops(), range.ops());
+        assert_eq!(slice.method(), range.method());
+    }
+
+    #[test]
+    fn empty_slice_compiles_to_no_ops() {
+        let d = particle_dim();
+        let prog = CopyProgram::compile_slice(
+            &AoS::packed(&d, ArrayDims::linear(10)),
+            &SoA::multi_blob(&d, ArrayDims::linear(4)),
+            10,
+            4,
+            0,
+        );
+        assert!(prog.ops().is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_out_of_bounds_rejected() {
+        let d = particle_dim();
+        let _ = CopyProgram::compile_slice(
+            &AoS::packed(&d, ArrayDims::linear(10)),
+            &AoS::packed(&d, ArrayDims::linear(4)),
+            8,
+            0,
+            3, // src 8+3 > 10
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "different record dimensions")]
+    fn slice_record_mismatch_rejected() {
+        let _ = CopyProgram::compile_slice(
+            &AoS::packed(&xy(), ArrayDims::linear(4)),
+            &AoS::packed(&particle_dim(), ArrayDims::linear(4)),
+            0,
+            0,
+            2,
+        );
     }
 
     #[test]

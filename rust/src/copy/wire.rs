@@ -53,6 +53,13 @@ pub const WIRE_MAGIC: &str = "LLAMA-WIRE";
 /// corrupt or hostile header, rejected before allocation.
 pub const MAX_MANIFEST_BYTES: usize = 1 << 20;
 
+/// Upper bound on a frame *header* line (`LLAMA-WIRE <m> <p>\n`): the
+/// magic plus two decimal lengths fits in well under 64 bytes, so the
+/// header read never buffers more than this — a newline-free hostile
+/// stream errors after [`MAX_HEADER_BYTES`] bytes instead of
+/// allocating without bound.
+pub const MAX_HEADER_BYTES: u64 = 256;
+
 /// A serialized view: the self-describing manifest plus the payload
 /// (all wire blobs concatenated in manifest order).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -158,6 +165,100 @@ where
     Ok((WireMessage { manifest, payload }, method))
 }
 
+/// Serialize only the linearized records `begin..end` of `src` into a
+/// dense packed-AoS wire buffer (native byte order). The manifest
+/// carries a `range=` token so the receiver knows where the slab lands
+/// in the full data space — the primitive behind shard-parallel sends
+/// and halo exchanges.
+pub fn serialize_range<M, B>(src: &View<M, B>, begin: usize, end: usize) -> Result<WireMessage>
+where
+    M: Mapping,
+    B: Blob,
+{
+    serialize_range_endian(src, begin, end, WireEndian::native())
+}
+
+/// [`serialize_range`] with an explicit payload byte order.
+pub fn serialize_range_endian<M, B>(
+    src: &View<M, B>,
+    begin: usize,
+    end: usize,
+    endian: WireEndian,
+) -> Result<WireMessage>
+where
+    M: Mapping,
+    B: Blob,
+{
+    serialize_range_with(src, begin, end, endian, &VecAlloc).map(|(msg, _)| msg)
+}
+
+/// The full-control range serializer: like [`serialize_with`], but the
+/// pack is a **slice program** ([`CopyProgram::compile_slice`]) from
+/// source records `begin..end` into a dense `end - begin`-record wire
+/// buffer. Lane-aligned slab boundaries stay on the closed-form run
+/// strategies; only generic source plans fall back to the element
+/// gather.
+pub fn serialize_range_with<M, B, R>(
+    src: &View<M, B>,
+    begin: usize,
+    end: usize,
+    endian: WireEndian,
+    recycler: &R,
+) -> Result<(WireMessage<R::Blob>, CopyMethod)>
+where
+    M: Mapping,
+    B: Blob,
+    R: BlobRecycler,
+{
+    let manifest = WireManifest::describe_range(
+        src.mapping().info().dim.clone(),
+        src.mapping().dims().clone(),
+        WireRecipe::AosPacked,
+        endian,
+        begin,
+        end,
+    )?;
+    let wire_mapping = manifest.build_mapping()?;
+    let prog = CopyProgram::compile_slice(src.mapping(), &wire_mapping, begin, 0, end - begin);
+    let covered = programs_cover_dst(std::slice::from_ref(&prog), &manifest.blob_sizes);
+    let mut payload = if covered {
+        recycler.allocate_covered(manifest.payload_len())
+    } else {
+        recycler.allocate(manifest.payload_len())
+    };
+    let method = prog.method();
+    {
+        let blobs = split_blobs_mut(payload.as_bytes_mut(), &manifest.blob_sizes);
+        let mut dst = View::from_blobs(&wire_mapping, blobs);
+        prog.execute(src, &mut dst);
+    }
+    Ok((WireMessage { manifest, payload }, method))
+}
+
+/// Split `src` into up to `parts` lane-aligned record shards
+/// ([`crate::view::shard::shard_range`] at the source plan's
+/// [`crate::view::shard::shard_align`]) and serialize each as one
+/// range-restricted message — the per-connection payloads of a
+/// shard-parallel send. Empty tail shards are dropped.
+pub fn serialize_sharded<M, B>(
+    src: &View<M, B>,
+    endian: WireEndian,
+    parts: usize,
+) -> Result<Vec<WireMessage>>
+where
+    M: Mapping,
+    B: Blob,
+{
+    ensure!(src.count() > 0, "cannot shard a zero-record view onto the wire");
+    let plan = src.mapping().plan();
+    let align = crate::view::shard::shard_align(&plan);
+    crate::view::shard::shard_range(src.count(), parts.max(1), align)
+        .into_iter()
+        .filter(|s| !s.is_empty())
+        .map(|s| serialize_range_endian(src, s.start, s.end, endian))
+        .collect()
+}
+
 /// Zero-copy read view straight over a message's payload bytes: the
 /// manifest's mapping (wrapped in [`crate::mapping::Byteswap`] for
 /// foreign byte orders, so accessors swap on read) over borrowed
@@ -198,6 +299,117 @@ where
     let prog = CopyProgram::compile(src.mapping(), dst.mapping());
     prog.execute(&src, dst);
     Ok(prog.method())
+}
+
+/// Deserialize a range-restricted message into the records
+/// `begin..end` of an existing view over the **full** data space the
+/// manifest names (any layout): the inverse of [`serialize_range`].
+/// Records outside the range are untouched. Errors if the message
+/// carries no `range=` or the destination's data space differs from
+/// the manifest's.
+pub fn deserialize_range_into<M, B, P>(
+    msg: &WireMessage<P>,
+    dst: &mut View<M, B>,
+) -> Result<CopyMethod>
+where
+    M: Mapping,
+    B: BlobMut,
+    P: Blob,
+{
+    let (begin, _) = msg
+        .manifest
+        .range
+        .context("wire message carries no range= (use deserialize_into)")?;
+    ensure!(
+        &msg.manifest.dims == dst.mapping().dims(),
+        "wire range message describes a {:?} data space, destination is {:?}",
+        msg.manifest.dims.extents(),
+        dst.mapping().dims().extents()
+    );
+    deserialize_range_into_at(msg, dst, begin)
+}
+
+/// Deserialize a message's records into an existing view at an
+/// explicit destination offset, ignoring where the sender's manifest
+/// says the slab came *from*: halo receivers land a neighbour's
+/// boundary plane on their own ghost plane, and reassembly loops land
+/// worker interiors at their global offsets. Only the record dimension
+/// must match; the destination's array extents are its own.
+pub fn deserialize_range_into_at<M, B, P>(
+    msg: &WireMessage<P>,
+    dst: &mut View<M, B>,
+    dst_start: usize,
+) -> Result<CopyMethod>
+where
+    M: Mapping,
+    B: BlobMut,
+    P: Blob,
+{
+    let src = wire_view(msg)?;
+    let n = msg.manifest.payload_records();
+    ensure!(
+        msg.manifest.record == dst.mapping().info().dim,
+        "wire message record dimension does not match the destination view"
+    );
+    ensure!(
+        dst_start.checked_add(n).is_some_and(|e| e <= dst.count()),
+        "wire records {dst_start}..{} do not fit the {}-record destination",
+        dst_start + n,
+        dst.count()
+    );
+    let prog = CopyProgram::compile_slice(src.mapping(), dst.mapping(), 0, dst_start, n);
+    prog.execute(&src, dst);
+    Ok(prog.method())
+}
+
+/// Reassemble a batch of range-restricted messages (a shard-parallel
+/// send, arriving in any order) into one destination view. The ranges
+/// must tile the destination exactly — disjoint and complete — and
+/// every manifest must name the destination's data space; partial or
+/// overlapping deliveries are rejected before any byte lands.
+pub fn deserialize_sharded_into<M, B, P>(
+    msgs: &[WireMessage<P>],
+    dst: &mut View<M, B>,
+) -> Result<()>
+where
+    M: Mapping,
+    B: BlobMut,
+    P: Blob,
+{
+    let mut ranges = Vec::with_capacity(msgs.len());
+    for msg in msgs {
+        let (b, e) = msg
+            .manifest
+            .range
+            .context("sharded reassembly needs range-restricted messages")?;
+        ensure!(
+            &msg.manifest.dims == dst.mapping().dims(),
+            "shard message describes a {:?} data space, destination is {:?}",
+            msg.manifest.dims.extents(),
+            dst.mapping().dims().extents()
+        );
+        ranges.push((b, e));
+    }
+    ranges.sort_unstable();
+    let mut covered = 0usize;
+    for &(b, e) in &ranges {
+        ensure!(
+            b == covered,
+            "shard ranges {} at record {covered} (got {b}..{e})",
+            if b > covered { "leave a gap" } else { "overlap" }
+        );
+        covered = e;
+    }
+    ensure!(
+        covered == dst.count(),
+        "shard ranges cover {covered} of {} records",
+        dst.count()
+    );
+    for msg in msgs {
+        let (b, _) = msg.manifest.range.expect("checked above");
+        deserialize_range_into_at(msg, dst, b)?;
+    }
+    Ok(())
 }
 
 /// Deserialize a message into a freshly allocated **native** view in
@@ -248,10 +460,21 @@ where
 /// allocation is always bounded by a self-consistent layout, never by
 /// an attacker-controlled number alone.
 pub fn read_message<R: BufRead>(r: &mut R) -> Result<Option<WireMessage>> {
+    // The header is read through a byte-limited `Read::take`: an
+    // uncapped `read_line` on a newline-free hostile stream would
+    // buffer (and allocate) without bound before any length check ran.
     let mut header = String::new();
-    if r.read_line(&mut header)? == 0 {
+    if (&mut *r).take(MAX_HEADER_BYTES).read_line(&mut header)? == 0 {
         return Ok(None);
     }
+    // `Ok(None)` means a clean frame boundary and nothing else: a
+    // header cut off by EOF (or by the byte cap) is an error, never a
+    // silent end of stream.
+    ensure!(
+        header.ends_with('\n'),
+        "wire header truncated or longer than {MAX_HEADER_BYTES} bytes: {:?}",
+        header.trim_end()
+    );
     let parts: Vec<&str> = header.split_whitespace().collect();
     ensure!(
         parts.len() == 3 && parts[0] == WIRE_MAGIC,
@@ -411,6 +634,116 @@ mod tests {
         // Oversized manifest lengths are refused before allocation.
         let huge = format!("{WIRE_MAGIC} {} 0\n", MAX_MANIFEST_BYTES + 1);
         assert!(read_message(&mut std::io::Cursor::new(huge.into_bytes())).is_err());
+    }
+
+    #[test]
+    fn range_round_trip_restores_only_the_range() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(23);
+        let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_distinct(&mut src);
+        let info = src.mapping().info().clone();
+        for endian in [WireEndian::native(), WireEndian::native().swapped()] {
+            let msg = serialize_range_endian(&src, 7, 18, endian).unwrap();
+            assert_eq!(msg.manifest.range, Some((7, 18)));
+            assert_eq!(msg.manifest.payload_records(), 11);
+            assert_eq!(msg.payload_len(), msg.manifest.payload_len());
+            assert_eq!(wire_view(&msg).unwrap().count(), 11);
+
+            // Unpack into a zeroed 23-record view: records 7..18 carry
+            // the source values, everything else stays zero — the
+            // oracle is the two-index naive copy over the range alone.
+            let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 4));
+            deserialize_range_into(&msg, &mut dst).unwrap();
+            let mut oracle = alloc_view(AoSoA::new(&d, dims.clone(), 4));
+            for lin in 7..18 {
+                for leaf in 0..info.leaf_count() {
+                    crate::copy::naive::copy_field_between(
+                        &src,
+                        &mut oracle,
+                        leaf,
+                        lin,
+                        lin,
+                        info.fields[leaf].size(),
+                    );
+                }
+            }
+            assert_eq!(dst.blobs(), oracle.blobs(), "{endian:?}");
+
+            // Offset landing: the same slab placed at record 0 of an
+            // 11-record view with its own extents.
+            let mut small = alloc_view(AoS::packed(&d, ArrayDims::linear(11)));
+            deserialize_range_into_at(&msg, &mut small, 0).unwrap();
+            let mut expect = alloc_view(AoS::packed(&d, ArrayDims::linear(11)));
+            for i in 0..11 {
+                for leaf in 0..info.leaf_count() {
+                    crate::copy::naive::copy_field_between(
+                        &src,
+                        &mut expect,
+                        leaf,
+                        7 + i,
+                        i,
+                        info.fields[leaf].size(),
+                    );
+                }
+            }
+            assert_eq!(small.blobs(), expect.blobs(), "{endian:?}");
+        }
+    }
+
+    #[test]
+    fn sharded_messages_reassemble_exactly() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(97); // prime: uneven tail shard
+        let mut src = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        fill_distinct(&mut src);
+        let msgs = serialize_sharded(&src, WireEndian::native(), 4).unwrap();
+        assert!(msgs.len() >= 2, "97 records over 4 parts must shard");
+        // Shard boundaries are lane-aligned on the AoSoA-8 source.
+        for m in &msgs[..msgs.len() - 1] {
+            let (b, e) = m.manifest.range.unwrap();
+            assert_eq!(b % 8, 0, "shard begin {b} not lane-aligned");
+            assert_eq!(e % 8, 0, "shard end {e} not lane-aligned");
+        }
+        // Reassembly in arrival order and in reversed order both land
+        // the exact source bytes.
+        for reversed in [false, true] {
+            let mut batch: Vec<_> = msgs.clone();
+            if reversed {
+                batch.reverse();
+            }
+            let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+            deserialize_sharded_into(&batch, &mut dst).unwrap();
+            assert!(views_equal(&src, &dst));
+        }
+        // A missing shard is a gap, a duplicated one an overlap.
+        let mut dst = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        assert!(deserialize_sharded_into(&msgs[1..], &mut dst).is_err());
+        let mut doubled = msgs.clone();
+        doubled.push(msgs[0].clone());
+        assert!(deserialize_sharded_into(&doubled, &mut dst).is_err());
+        // Whole-view messages (no range=) are refused.
+        let whole = serialize(&src).unwrap();
+        assert!(deserialize_sharded_into(&[whole], &mut dst).is_err());
+    }
+
+    #[test]
+    fn newline_free_streams_error_at_the_header_cap() {
+        // Regression: an uncapped read_line buffered the whole hostile
+        // stream before MAX_MANIFEST_BYTES ever applied. The reader
+        // must now give up after MAX_HEADER_BYTES.
+        let hostile = vec![b'A'; 4 * 1024 * 1024];
+        let mut r = std::io::Cursor::new(hostile);
+        assert!(read_message(&mut r).is_err());
+        assert!(
+            r.position() <= MAX_HEADER_BYTES,
+            "reader consumed {} bytes of a newline-free stream",
+            r.position()
+        );
+        // A truncated header (EOF before the newline) is an error too:
+        // Ok(None) is reserved for clean frame boundaries.
+        let mut r = std::io::Cursor::new(b"LLAMA-WIRE 10".to_vec());
+        assert!(read_message(&mut r).is_err());
     }
 
     #[test]

@@ -98,9 +98,11 @@ pub mod prelude {
     };
     pub use crate::copy::{
         aosoa_copy, copy, copy_blobwise, copy_naive, copy_parallel, copy_stdcopy, deserialize,
-        deserialize_into, programs_cover_dst, read_message, serialize, serialize_endian,
+        deserialize_into, deserialize_range_into, deserialize_range_into_at,
+        deserialize_sharded_into, programs_cover_dst, read_message, serialize, serialize_endian,
+        serialize_range, serialize_range_endian, serialize_range_with, serialize_sharded,
         serialize_with, views_equal, wire_view, write_message, ChunkOrder, CopyMethod, CopyOp,
-        CopyProgram, ProgramCache, WireMessage,
+        CopyProgram, ProgramCache, WireMessage, MAX_HEADER_BYTES,
     };
     pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
     pub use crate::mapping::{

@@ -43,10 +43,15 @@ pub struct Manifest {
 /// `inputs`) resolve to the wrong part. Values may themselves contain
 /// `=` — only the first one splits.
 fn kv<'a>(parts: &'a [&str], key: &str) -> Result<&'a str> {
+    kv_opt(parts, key).with_context(|| format!("manifest line missing {key}="))
+}
+
+/// Like [`kv`], but for optional keys: `None` when the key is absent
+/// (older peers omit keys newer ones emit) instead of an error.
+fn kv_opt<'a>(parts: &'a [&str], key: &str) -> Option<&'a str> {
     parts
         .iter()
         .find_map(|p| p.split_once('=').and_then(|(k, v)| (k == key).then_some(v)))
-        .with_context(|| format!("manifest line missing {key}="))
 }
 
 impl Manifest {
@@ -169,6 +174,10 @@ impl WireEndian {
 ///   order; the payload is their concatenation. Cross-checked against
 ///   the rebuilt mapping on parse, so a corrupted length never reaches
 ///   the payload reader.
+/// * `range=<begin>..<end>` — optional: the payload carries only the
+///   linearized records `begin..end` of the `dims=` data space, packed
+///   densely (the recipe is built over `end - begin` records). Absent
+///   for whole-view messages, so PR 8 peers keep parsing unchanged.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireManifest {
     pub record: RecordDim,
@@ -176,6 +185,9 @@ pub struct WireManifest {
     pub recipe: WireRecipe,
     pub endian: WireEndian,
     pub blob_sizes: Vec<usize>,
+    /// Linearized record sub-range `begin..end` the payload covers;
+    /// `None` means the whole `dims` data space.
+    pub range: Option<(usize, usize)>,
 }
 
 impl WireManifest {
@@ -190,7 +202,40 @@ impl WireManifest {
         ensure!(dims.rank() > 0, "wire manifest needs at least one array extent");
         let m = recipe.build(&record, dims.clone());
         let blob_sizes = (0..m.blob_count()).map(|b| m.blob_size(b)).collect();
-        Ok(WireManifest { record, dims, recipe, endian, blob_sizes })
+        Ok(WireManifest { record, dims, recipe, endian, blob_sizes, range: None })
+    }
+
+    /// Describe a payload carrying only the linearized records
+    /// `begin..end` of the `record` × `dims` data space: the recipe is
+    /// built over the *range length*, so the blob sizes (and payload)
+    /// cover exactly `end - begin` densely packed records, while `dims`
+    /// still names the full space the range indexes into.
+    pub fn describe_range(
+        record: RecordDim,
+        dims: ArrayDims,
+        recipe: WireRecipe,
+        endian: WireEndian,
+        begin: usize,
+        end: usize,
+    ) -> Result<Self> {
+        ensure!(dims.rank() > 0, "wire manifest needs at least one array extent");
+        ensure!(
+            begin < end && end <= dims.count(),
+            "wire range {begin}..{end} out of bounds for {} records",
+            dims.count()
+        );
+        let m = recipe.build(&record, ArrayDims::linear(end - begin));
+        let blob_sizes = (0..m.blob_count()).map(|b| m.blob_size(b)).collect();
+        Ok(WireManifest { record, dims, recipe, endian, blob_sizes, range: Some((begin, end)) })
+    }
+
+    /// Record count the payload actually carries: the range length for
+    /// range-restricted messages, the full `dims` count otherwise.
+    pub fn payload_records(&self) -> usize {
+        match self.range {
+            Some((begin, end)) => end - begin,
+            None => self.dims.count(),
+        }
     }
 
     /// Total payload length: the blobs are concatenated in order.
@@ -198,12 +243,24 @@ impl WireManifest {
         self.blob_sizes.iter().sum()
     }
 
-    /// Rebuild the payload's mapping: the recipe's concrete layout,
-    /// wrapped in [`Byteswap`] when the payload's byte order is not
-    /// this process's native order. Fails if the manifest's blob sizes
-    /// disagree with the rebuilt layout (a corrupt manifest).
+    /// Rebuild the payload's mapping: the recipe's concrete layout —
+    /// over the range length for range-restricted payloads — wrapped in
+    /// [`Byteswap`] when the payload's byte order is not this process's
+    /// native order. Fails if the manifest's blob sizes disagree with
+    /// the rebuilt layout (a corrupt manifest).
     pub fn build_mapping(&self) -> Result<DynMapping> {
-        let m = self.recipe.build(&self.record, self.dims.clone());
+        if let Some((begin, end)) = self.range {
+            ensure!(
+                begin < end && end <= self.dims.count(),
+                "wire range {begin}..{end} out of bounds for {} records",
+                self.dims.count()
+            );
+        }
+        let payload_dims = match self.range {
+            Some((begin, end)) => ArrayDims::linear(end - begin),
+            None => self.dims.clone(),
+        };
+        let m = self.recipe.build(&self.record, payload_dims);
         let sizes: Vec<usize> = (0..m.blob_count()).map(|b| m.blob_size(b)).collect();
         ensure!(
             sizes == self.blob_sizes,
@@ -221,13 +278,17 @@ impl WireManifest {
         let record = format_record(&self.record)?;
         let dims: Vec<String> = self.dims.extents().iter().map(|e| e.to_string()).collect();
         let blobs: Vec<String> = self.blob_sizes.iter().map(|s| s.to_string()).collect();
-        Ok(format!(
+        let mut line = format!(
             "wire record={record} dims={} layout={} endian={} blobs={}",
             dims.join("x"),
             self.recipe.token(),
             self.endian.token(),
             blobs.join(",")
-        ))
+        );
+        if let Some((begin, end)) = self.range {
+            line.push_str(&format!(" range={begin}..{end}"));
+        }
+        Ok(line)
     }
 
     /// Parse one manifest line, rejecting anything that does not
@@ -250,12 +311,25 @@ impl WireManifest {
             .split(',')
             .map(|s| s.parse::<usize>().context("blob size"))
             .collect::<Result<_>>()?;
+        let range = match kv_opt(&parts, "range") {
+            None => None,
+            Some(tok) => {
+                let (b, e) = tok
+                    .split_once("..")
+                    .with_context(|| format!("wire range {tok:?} is not <begin>..<end>"))?;
+                Some((
+                    b.parse::<usize>().context("range begin")?,
+                    e.parse::<usize>().context("range end")?,
+                ))
+            }
+        };
         let wm = WireManifest {
             record,
             dims: ArrayDims::new(dims),
             recipe,
             endian,
             blob_sizes,
+            range,
         };
         // Cross-check the declared blob sizes against the rebuilt
         // layout right away: a corrupted size must never reach the
@@ -570,6 +644,74 @@ nbody_move_aos nbody_move_aos.hlo.txt n=65536 tile=256 dtype=f32 layout=aos inpu
         let m = back.build_mapping().unwrap();
         assert!(!m.is_native_representation());
         assert!(m.mapping_name().starts_with("Byteswap("), "{}", m.mapping_name());
+    }
+
+    #[test]
+    fn wire_range_line_round_trips() {
+        let d = crate::mapping_demo_dim();
+        // Records 10..22 of a 5×7 space: 12 densely packed records.
+        let wm = WireManifest::describe_range(
+            d,
+            ArrayDims::new(vec![5, 7]),
+            WireRecipe::AosPacked,
+            WireEndian::native(),
+            10,
+            22,
+        )
+        .unwrap();
+        assert_eq!(wm.range, Some((10, 22)));
+        assert_eq!(wm.payload_records(), 12);
+        // Packed AoS over the *range*: 25 B/record × 12 records.
+        assert_eq!(wm.blob_sizes, vec![300]);
+        assert_eq!(wm.payload_len(), 300);
+        let line = wm.to_line().unwrap();
+        assert!(line.ends_with("range=10..22"), "{line}");
+        let back = WireManifest::parse_line(&line).unwrap();
+        assert_eq!(back, wm);
+        // The rebuilt mapping covers the range length, not the space.
+        assert_eq!(back.build_mapping().unwrap().dims().count(), 12);
+    }
+
+    #[test]
+    fn wire_range_rejects_out_of_bounds_and_garbage() {
+        let d = crate::mapping_demo_dim();
+        let dims = ArrayDims::new(vec![5, 7]); // 35 records
+        for (b, e) in [(10, 10), (12, 10), (0, 36), (36, 36)] {
+            assert!(
+                WireManifest::describe_range(
+                    d.clone(),
+                    dims.clone(),
+                    WireRecipe::AosPacked,
+                    WireEndian::native(),
+                    b,
+                    e,
+                )
+                .is_err(),
+                "accepted range {b}..{e}"
+            );
+        }
+        let wm = WireManifest::describe_range(
+            d,
+            dims,
+            WireRecipe::AosPacked,
+            WireEndian::native(),
+            10,
+            22,
+        )
+        .unwrap();
+        let line = wm.to_line().unwrap();
+        for broken in [
+            line.replace("range=10..22", "range=10..99"), // beyond dims
+            line.replace("range=10..22", "range=22..10"), // inverted
+            line.replace("range=10..22", "range=10..10"), // empty
+            line.replace("range=10..22", "range=ten..22"), // non-numeric
+            line.replace("range=10..22", "range=10-22"),  // wrong separator
+            // Range dropped but blob sizes still range-sized: the
+            // rebuilt whole-space layout disagrees.
+            line.replace(" range=10..22", ""),
+        ] {
+            assert!(WireManifest::parse_line(&broken).is_err(), "accepted {broken:?}");
+        }
     }
 
     #[test]

@@ -66,6 +66,14 @@ impl Shard {
     pub fn is_empty(&self) -> bool {
         self.end <= self.start
     }
+
+    /// The shard as a half-open index range — the `begin..end` handed
+    /// to range-restricted serialization (`copy::wire::serialize_range`
+    /// splits a view into per-connection payloads at these boundaries).
+    #[inline]
+    pub fn as_range(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
 }
 
 fn gcd(mut a: usize, mut b: usize) -> usize {

@@ -1,0 +1,371 @@
+//! X-slab domain decomposition and halo exchange for the D3Q19 lattice
+//! (wire phase 2): the lattice is partitioned into contiguous x-slabs,
+//! each worker holds its slab plus one ghost plane per side, and every
+//! step exchanges one-plane-deep boundary manifests before running the
+//! unmodified [`super::step::step`] kernel over the whole local view.
+//!
+//! The linearization is `lin = (x*ny + y)*nz + z`, so an x-plane is one
+//! *contiguous* record range — exactly what range-restricted
+//! serialization ([`crate::copy::serialize_range`]) ships without a
+//! gather. Interior cells read neighbours at most one plane away, so
+//! after the exchange the stepped interior is **bit-identical** to the
+//! single-process kernel: decomposition changes scheduling and
+//! transport, never arithmetic. The ghost planes themselves are stepped
+//! with locally-wrapped (wrong) neighbours, but their post-step values
+//! are dead — the next exchange overwrites them before anything reads
+//! them.
+//!
+//! This module is the in-process half: partition arithmetic, local
+//! extraction, boundary messages, and [`run_in_process`] — the
+//! differential twin the multi-process TCP runner
+//! (`coordinator::halo`) is verified against.
+
+use super::{cell_dim, step::init, step::step, Geometry};
+use crate::array::ArrayDims;
+use crate::blob::{Blob, BlobMut};
+use crate::copy::{deserialize_range_into_at, serialize_range, CopyProgram, WireMessage};
+use crate::ensure;
+use crate::error::Result;
+use crate::mapping::{DynMapping, Mapping, WireRecipe};
+use crate::view::{alloc_view, View};
+
+/// Split `nx` planes into exactly `workers` contiguous x-slabs
+/// `(x0, x1)`, each at least one plane thick (balanced: the first
+/// `nx % workers` slabs get the extra plane).
+pub fn partition_x(nx: usize, workers: usize) -> Result<Vec<(usize, usize)>> {
+    ensure!(workers >= 1, "halo decomposition needs at least one worker");
+    ensure!(
+        workers <= nx,
+        "cannot split {nx} x-planes across {workers} workers (each needs one)"
+    );
+    let base = nx / workers;
+    let rem = nx % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut x0 = 0;
+    for i in 0..workers {
+        let w = base + usize::from(i < rem);
+        out.push((x0, x0 + w));
+        x0 += w;
+    }
+    Ok(out)
+}
+
+/// The contiguous record range of x-plane `x`:
+/// `[x*ny*nz, (x+1)*ny*nz)`.
+pub fn plane_records(ny: usize, nz: usize, x: usize) -> (usize, usize) {
+    (x * ny * nz, (x + 1) * ny * nz)
+}
+
+/// Local lattice extents for slab `x0..x1`: the interior planes plus
+/// one ghost plane on each side.
+pub fn local_dims(x0: usize, x1: usize, ny: usize, nz: usize) -> ArrayDims {
+    ArrayDims::from([x1 - x0 + 2, ny, nz])
+}
+
+/// Compiled-slice copy of `len` records from `src_start` of the global
+/// view to `dst_start` of the local one (the two views only share the
+/// cell record dimension; their extents differ by design).
+fn slice_copy<MG, BG, ML, BL>(
+    global: &View<MG, BG>,
+    local: &mut View<ML, BL>,
+    src_start: usize,
+    dst_start: usize,
+    len: usize,
+) where
+    MG: Mapping,
+    BG: Blob,
+    ML: Mapping,
+    BL: BlobMut,
+{
+    CopyProgram::compile_slice(global.mapping(), local.mapping(), src_start, dst_start, len)
+        .execute(global, local);
+}
+
+/// Fill a worker's local lattice from the global one: interior planes
+/// from `x0..x1`, ghost planes from the periodic wrap — after this the
+/// local view is ready for its first step with no exchange.
+pub fn extract_local<MG, BG, ML, BL>(
+    global: &View<MG, BG>,
+    local: &mut View<ML, BL>,
+    x0: usize,
+    x1: usize,
+) where
+    MG: Mapping,
+    BG: Blob,
+    ML: Mapping,
+    BL: BlobMut,
+{
+    let g = global.mapping().dims().extents();
+    let (nx, ny, nz) = (g[0], g[1], g[2]);
+    let plane = ny * nz;
+    let local_nx = x1 - x0;
+    assert_eq!(
+        local.mapping().dims(),
+        &local_dims(x0, x1, ny, nz),
+        "local lattice extents do not match slab {x0}..{x1}"
+    );
+    slice_copy(global, local, x0 * plane, plane, local_nx * plane);
+    let left = (x0 + nx - 1) % nx;
+    let right = x1 % nx;
+    slice_copy(global, local, left * plane, 0, plane);
+    slice_copy(global, local, right * plane, (local_nx + 1) * plane, plane);
+}
+
+/// The two boundary manifests a worker sends each step:
+/// `(first, last)` — its first and last *interior* planes,
+/// range-serialized from the local view. The `range=` token names
+/// local record coordinates; receivers land the slab on their own
+/// ghost planes by explicit offset
+/// ([`crate::copy::deserialize_range_into_at`]).
+pub fn boundary_messages<M, B>(local: &View<M, B>) -> Result<(WireMessage, WireMessage)>
+where
+    M: Mapping,
+    B: Blob,
+{
+    let e = local.mapping().dims().extents();
+    let (local_nx, ny, nz) = (e[0] - 2, e[1], e[2]);
+    let plane = ny * nz;
+    let first = serialize_range(local, plane, 2 * plane)?;
+    let last = serialize_range(local, local_nx * plane, (local_nx + 1) * plane)?;
+    Ok((first, last))
+}
+
+/// Record offset of a ghost plane in a local lattice: `Left` is plane
+/// 0, `Right` is plane `local_nx + 1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GhostSide {
+    Left,
+    Right,
+}
+
+/// Land a neighbour's boundary-plane message on this worker's ghost
+/// plane.
+pub fn receive_ghost<M, B>(local: &mut View<M, B>, msg: &WireMessage, side: GhostSide) -> Result<()>
+where
+    M: Mapping,
+    B: BlobMut,
+{
+    let e = local.mapping().dims().extents();
+    let (local_nx, ny, nz) = (e[0] - 2, e[1], e[2]);
+    let plane = ny * nz;
+    ensure!(
+        msg.manifest.payload_records() == plane,
+        "ghost message carries {} records, a plane is {plane}",
+        msg.manifest.payload_records()
+    );
+    let at = match side {
+        GhostSide::Left => 0,
+        GhostSide::Right => (local_nx + 1) * plane,
+    };
+    deserialize_range_into_at(msg, local, at)?;
+    Ok(())
+}
+
+/// One worker's slab bounds and ping-pong local lattice pair.
+pub struct LocalLattice {
+    pub x0: usize,
+    pub x1: usize,
+    pub src: View<DynMapping, Vec<u8>>,
+    pub dst: View<DynMapping, Vec<u8>>,
+}
+
+/// Partition the initialized `global` lattice into `workers` local
+/// lattices (packed-AoS storage, the wire recipe's layout).
+pub fn split_lattice<M, B>(global: &View<M, B>, workers: usize) -> Result<Vec<LocalLattice>>
+where
+    M: Mapping,
+    B: Blob,
+{
+    let g = global.mapping().dims().extents();
+    let (nx, ny, nz) = (g[0], g[1], g[2]);
+    let d = cell_dim();
+    partition_x(nx, workers)?
+        .into_iter()
+        .map(|(x0, x1)| {
+            let mut src = alloc_view(WireRecipe::AosPacked.build(&d, local_dims(x0, x1, ny, nz)));
+            extract_local(global, &mut src, x0, x1);
+            let dst = alloc_view(WireRecipe::AosPacked.build(&d, local_dims(x0, x1, ny, nz)));
+            Ok(LocalLattice { x0, x1, src, dst })
+        })
+        .collect()
+}
+
+/// One in-process exchange round: every worker's boundary planes are
+/// snapshotted into wire messages first, then landed on the neighbours'
+/// ghost planes (left neighbour's *last* plane → my left ghost, right
+/// neighbour's *first* plane → my right ghost, indices wrapping
+/// periodically).
+pub fn exchange_ghosts(locals: &mut [LocalLattice]) -> Result<()> {
+    let n = locals.len();
+    let msgs: Vec<(WireMessage, WireMessage)> =
+        locals.iter().map(|w| boundary_messages(&w.src)).collect::<Result<_>>()?;
+    for i in 0..n {
+        let left = (i + n - 1) % n;
+        let right = (i + 1) % n;
+        receive_ghost(&mut locals[i].src, &msgs[left].1, GhostSide::Left)?;
+        receive_ghost(&mut locals[i].src, &msgs[right].0, GhostSide::Right)?;
+    }
+    Ok(())
+}
+
+/// Serialize a local lattice's interior (planes `1..=local_nx`, one
+/// contiguous record range) — the reassembly payload sent to the parent
+/// after the final step.
+pub fn interior_message<M, B>(local: &View<M, B>) -> Result<WireMessage>
+where
+    M: Mapping,
+    B: Blob,
+{
+    let e = local.mapping().dims().extents();
+    let plane = e[1] * e[2];
+    serialize_range(local, plane, (e[0] - 1) * plane)
+}
+
+/// Land a worker interior at its global x-offset.
+pub fn place_interior<M, B>(global: &mut View<M, B>, msg: &WireMessage, x0: usize) -> Result<()>
+where
+    M: Mapping,
+    B: BlobMut,
+{
+    let g = global.mapping().dims().extents();
+    deserialize_range_into_at(msg, global, x0 * g[1] * g[2])?;
+    Ok(())
+}
+
+/// Run `steps` of the decomposed lattice fully in-process: `workers`
+/// local lattices in one address space, ghosts exchanged through real
+/// [`WireMessage`]s before every step, interiors reassembled into the
+/// returned global view. Bit-identical to `steps` ping-pong calls of
+/// [`step`] on the undecomposed lattice — the differential oracle the
+/// multi-process TCP runner is tested against.
+pub fn run_in_process(
+    geo: &Geometry,
+    workers: usize,
+    steps: usize,
+) -> Result<View<DynMapping, Vec<u8>>> {
+    let d = cell_dim();
+    let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+    init(&mut global, geo);
+    let mut locals = split_lattice(&global, workers)?;
+    for _ in 0..steps {
+        exchange_ghosts(&mut locals)?;
+        for w in &mut locals {
+            step(&w.src, &mut w.dst);
+            std::mem::swap(&mut w.src, &mut w.dst);
+        }
+    }
+    for w in &locals {
+        place_interior(&mut global, &interior_message(&w.src)?, w.x0)?;
+    }
+    Ok(global)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn global_oracle(geo: &Geometry, steps: usize) -> View<DynMapping, Vec<u8>> {
+        let d = cell_dim();
+        let mut a = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        let mut b = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        init(&mut a, geo);
+        init(&mut b, geo);
+        for _ in 0..steps {
+            step(&a, &mut b);
+            std::mem::swap(&mut a, &mut b);
+        }
+        a
+    }
+
+    #[test]
+    fn partition_is_balanced_and_covers() {
+        for nx in [1usize, 2, 3, 7, 8, 16] {
+            for workers in 1..=nx.min(5) {
+                let slabs = partition_x(nx, workers).unwrap();
+                assert_eq!(slabs.len(), workers, "nx={nx} workers={workers}");
+                assert_eq!(slabs[0].0, 0);
+                assert_eq!(slabs.last().unwrap().1, nx);
+                for w in slabs.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "gap in {slabs:?}");
+                }
+                let widths: Vec<usize> = slabs.iter().map(|(a, b)| b - a).collect();
+                let (min, max) =
+                    (widths.iter().min().unwrap(), widths.iter().max().unwrap());
+                assert!(*min >= 1 && max - min <= 1, "unbalanced {widths:?}");
+            }
+        }
+        assert!(partition_x(3, 4).is_err());
+        assert!(partition_x(3, 0).is_err());
+    }
+
+    #[test]
+    fn extract_local_wraps_the_ghost_planes() {
+        let geo = Geometry::channel_with_sphere(6, 4, 4, 9);
+        let d = cell_dim();
+        let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        init(&mut global, &geo);
+        // Slab 0..2 of nx=6: left ghost wraps to plane 5, right to 2.
+        let mut local = alloc_view(WireRecipe::AosPacked.build(&d, local_dims(0, 2, 4, 4)));
+        extract_local(&global, &mut local, 0, 2);
+        let plane = 16;
+        for p in 0..plane {
+            for leaf in 0..super::super::LEAVES {
+                assert_eq!(
+                    local.get::<f64>(p, leaf),
+                    global.get::<f64>(5 * plane + p, leaf),
+                    "left ghost p={p} leaf={leaf}"
+                );
+                assert_eq!(
+                    local.get::<f64>(3 * plane + p, leaf),
+                    global.get::<f64>(2 * plane + p, leaf),
+                    "right ghost p={p} leaf={leaf}"
+                );
+                assert_eq!(local.get::<f64>(plane + p, leaf), global.get::<f64>(p, leaf));
+            }
+        }
+    }
+
+    #[test]
+    fn decomposed_steps_are_bit_identical_to_the_global_kernel() {
+        // Obstacle geometry included: the sphere intersects slab
+        // boundaries, so bounce-back links cross the halo.
+        let geo = Geometry::channel_with_sphere(8, 6, 6, 5);
+        let oracle = global_oracle(&geo, 3);
+        for workers in [1usize, 2, 3] {
+            let got = run_in_process(&geo, workers, 3).unwrap();
+            assert_eq!(
+                got.blobs(),
+                oracle.blobs(),
+                "{workers}-worker halo exchange diverged from the global step"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_steps_reassembles_the_initial_state() {
+        let geo = Geometry::channel_with_sphere(4, 4, 4, 2);
+        let d = cell_dim();
+        let mut init_view = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        init(&mut init_view, &geo);
+        let got = run_in_process(&geo, 2, 0).unwrap();
+        assert_eq!(got.blobs(), init_view.blobs());
+    }
+
+    #[test]
+    fn boundary_messages_carry_one_plane_each() {
+        let geo = Geometry::channel_with_sphere(6, 4, 4, 1);
+        let d = cell_dim();
+        let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        init(&mut global, &geo);
+        let locals = split_lattice(&global, 2).unwrap();
+        let (first, last) = boundary_messages(&locals[0].src).unwrap();
+        let plane = 16;
+        assert_eq!(first.manifest.payload_records(), plane);
+        assert_eq!(last.manifest.payload_records(), plane);
+        assert_eq!(first.manifest.range, Some((plane, 2 * plane)));
+        // A wrong-sized message is refused before landing.
+        let bogus = serialize_range(&locals[0].src, 0, 2 * plane).unwrap();
+        let mut l = split_lattice(&global, 2).unwrap().remove(0);
+        assert!(receive_ghost(&mut l.src, &bogus, GhostSide::Left).is_err());
+    }
+}

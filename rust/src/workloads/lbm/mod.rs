@@ -13,6 +13,7 @@
 //! solver is layout-generic: fig 8's AoS / Split / SoA / AoSoA rows all
 //! run this one kernel over different mappings.
 
+pub mod halo;
 pub mod split4;
 pub mod step;
 

@@ -1,0 +1,80 @@
+//! Distributed differential acceptance (EXPERIMENTS.md §Wire
+//! distributed): an lbm lattice decomposed into x-slabs across N real
+//! worker **processes** — exchanging one-plane-deep boundary manifests
+//! over localhost TCP each step — reassembles bit-identical to the
+//! single-process `step` kernel after K steps, obstacles included.
+//! Decomposition and transport may change scheduling; they must never
+//! change arithmetic.
+
+use std::path::Path;
+
+use llama::coordinator::halo::run_distributed;
+use llama::prelude::*;
+use llama::workloads::lbm::halo::run_in_process;
+use llama::workloads::lbm::step::{init, step};
+use llama::workloads::lbm::{cell_dim, Geometry};
+
+/// `steps` ping-pong calls of the undecomposed kernel: the oracle both
+/// the in-process and the multi-process decompositions must match.
+fn global_oracle(geo: &Geometry, steps: usize) -> View<DynMapping, Vec<u8>> {
+    let d = cell_dim();
+    let mut a = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+    let mut b = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+    init(&mut a, geo);
+    init(&mut b, geo);
+    for _ in 0..steps {
+        step(&a, &mut b);
+        std::mem::swap(&mut a, &mut b);
+    }
+    a
+}
+
+/// The tentpole acceptance test: N spawned `llama halo-worker`
+/// processes, boundary planes over real sockets, K steps — the
+/// reassembled lattice's bytes equal the oracle's exactly, for both a
+/// 2-ring and a 3-ring, around a sphere obstacle.
+#[test]
+fn distributed_halo_is_bit_identical_to_the_single_process_kernel() {
+    let binary = Path::new(env!("CARGO_BIN_EXE_llama"));
+    let geo = Geometry::channel_with_sphere(10, 6, 6, 7);
+    let steps = 3;
+    let oracle = global_oracle(&geo, steps);
+    // The in-process twin first: if this diverges, the bug is in the
+    // decomposition, not the transport.
+    let twin = run_in_process(&geo, 3, steps).unwrap();
+    assert_eq!(twin.blobs(), oracle.blobs(), "in-process decomposition diverged");
+    for workers in [2usize, 3] {
+        let got = run_distributed(&geo, steps, workers, Some(binary)).unwrap();
+        assert_eq!(
+            got.blobs(),
+            oracle.blobs(),
+            "{workers}-process halo exchange diverged from the single-process kernel"
+        );
+    }
+}
+
+/// Zero steps exercises only distribution and reassembly: scatter the
+/// initial lattice to the workers, gather the interiors back, and the
+/// bytes must equal the freshly initialized global.
+#[test]
+fn zero_step_distribution_reassembles_the_initial_lattice() {
+    let binary = Path::new(env!("CARGO_BIN_EXE_llama"));
+    let geo = Geometry::channel_with_sphere(8, 5, 5, 21);
+    let got = run_distributed(&geo, 0, 2, Some(binary)).unwrap();
+    assert_eq!(got.blobs(), global_oracle(&geo, 0).blobs());
+}
+
+/// The `llama halo` demo end to end: spawns its workers, verifies the
+/// exchange against the oracle, zero exit code.
+#[test]
+fn halo_command_verifies_bit_identity() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_llama"))
+        .args(["halo", "--quick", "--iters", "2"])
+        .output()
+        .expect("run llama halo");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "llama halo failed: {stdout}\n{stderr}");
+    assert!(stdout.contains("bit-identical to single-process step"), "{stdout}");
+    assert!(stdout.contains("worker processes"), "{stdout}");
+}

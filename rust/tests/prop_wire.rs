@@ -188,6 +188,189 @@ fn corrupted_and_truncated_manifests_are_rejected() {
     .is_err());
 }
 
+/// Flatten any view of `d` × `dims` to packed-AoS record bytes through
+/// the `copy_naive` oracle: record `r` occupies bytes
+/// `r*packed_size .. (r+1)*packed_size`, so sub-ranges of any layout
+/// can be compared byte for byte in one canonical space.
+fn packed_bytes<M: Mapping, B: Blob>(v: &View<M, B>, d: &RecordDim) -> Vec<u8> {
+    let mut packed = alloc_view(AoS::packed(d, v.mapping().dims().clone()));
+    copy_naive(v, &mut packed);
+    packed.blobs()[0].clone()
+}
+
+/// Range-restricted serialization: `serialize_range_endian` →
+/// `deserialize_range_into` restores exactly the records inside the
+/// range — bit-identical to the `copy_naive` oracle's sub-range — and
+/// leaves every record outside it untouched, for every mapping in the
+/// matrix, both byte orders, lane-unaligned boundaries and tail
+/// extents included.
+#[test]
+fn prop_wire_range_round_trips_match_the_naive_sub_range() {
+    let d = nbody::particle_dim();
+    let rec = d.packed_size();
+    for dims in extents() {
+        let count = dims.count();
+        // Whole view, lane-unaligned interior slabs, and the tail.
+        let ranges = [
+            (0, count),
+            (0, count / 2),
+            (1, count - 1),
+            (count / 3, 2 * count / 3),
+            (count - 3, count),
+        ];
+        for k in 0..MATRIX {
+            let mut src = alloc_view(nth(&d, &dims, k));
+            fill_sentinels(&mut src);
+            let src_bytes = packed_bytes(&src, &d);
+            for &(begin, end) in ranges.iter().filter(|(b, e)| b < e) {
+                for endian in [WireEndian::native(), WireEndian::native().swapped()] {
+                    let label = format!(
+                        "{} {endian:?} {begin}..{end} ({dims:?})",
+                        src.mapping().mapping_name()
+                    );
+                    let msg = serialize_range_endian(&src, begin, end, endian).unwrap();
+                    assert_eq!(msg.manifest.range, Some((begin, end)), "{label}");
+                    assert_eq!(msg.manifest.payload_records(), end - begin, "{label}");
+                    assert_eq!(msg.payload_len(), msg.manifest.payload_len(), "{label}");
+                    // The zero-copy wire view reads the slab's native
+                    // values in place (swapping accessors for foreign
+                    // orders); flattened it must equal the oracle's
+                    // packed sub-range.
+                    let slab = packed_bytes(&wire_view(&msg).unwrap(), &d);
+                    assert_eq!(slab, src_bytes[begin * rec..end * rec], "{label} wire view");
+                    // The compiled unpack restores the range into a
+                    // zeroed twin and touches nothing else.
+                    let mut back = alloc_view(nth(&d, &dims, k));
+                    deserialize_range_into(&msg, &mut back).unwrap();
+                    let back_bytes = packed_bytes(&back, &d);
+                    assert_eq!(
+                        back_bytes[begin * rec..end * rec],
+                        src_bytes[begin * rec..end * rec],
+                        "{label} in-range records"
+                    );
+                    if k != ONE_IDX {
+                        // One aliases every record onto the same bytes,
+                        // so only it may observe writes outside the
+                        // range; everywhere else the zeros survive.
+                        assert!(
+                            back_bytes[..begin * rec].iter().all(|&b| b == 0)
+                                && back_bytes[end * rec..].iter().all(|&b| b == 0),
+                            "{label} out-of-range records must stay untouched"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `serialize_sharded` tiles the record space in order at the source
+/// plan's shard alignment, and `deserialize_sharded_into` reassembles
+/// the shards — arriving in any order — back to the `copy_naive`
+/// oracle's bytes.
+#[test]
+fn sharded_messages_tile_the_view_and_reassemble_bit_identically() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(97);
+    for k in [1usize, 3, 6, 9] {
+        let mut src = alloc_view(nth(&d, &dims, k));
+        fill_sentinels(&mut src);
+        let mut oracle = alloc_view(nth(&d, &dims, k));
+        copy_naive(&src, &mut oracle);
+        let mut msgs = serialize_sharded(&src, WireEndian::native().swapped(), 4).unwrap();
+        assert!(!msgs.is_empty() && msgs.len() <= 4, "matrix entry {k}");
+        let align = shard_align(&src.mapping().plan());
+        let mut covered = 0usize;
+        for m in &msgs {
+            let (b, e) = m.manifest.range.expect("shards carry ranges");
+            assert_eq!(b, covered, "matrix entry {k}: shards tile in order");
+            assert!(e == 97 || e % align == 0, "matrix entry {k}: boundary {e} off {align}");
+            covered = e;
+        }
+        assert_eq!(covered, 97, "matrix entry {k}");
+        msgs.reverse(); // reassembly must not depend on arrival order
+        let mut back = alloc_view(nth(&d, &dims, k));
+        deserialize_sharded_into(&msgs, &mut back).unwrap();
+        assert_eq!(back.blobs(), oracle.blobs(), "matrix entry {k}");
+        // Partial deliveries are rejected before any byte lands.
+        let mut partial = alloc_view(nth(&d, &dims, k));
+        assert!(deserialize_sharded_into(&msgs[1..], &mut partial).is_err());
+    }
+}
+
+/// Range packs inherit the full-view strategy guarantee: strategy
+/// selection is plan-based, so closed-form layouts stay on chunked,
+/// strided, or swap runs at *every* slab boundary — lane-aligned or
+/// not — and only the generic plans (`One`, `Heatmap`) take the
+/// documented element-gather fallback.
+#[test]
+fn range_packs_on_closed_form_layouts_never_degrade_to_gather() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(96);
+    let swapped = WireEndian::native().swapped();
+    // (0,32)/(16,80)/(64,96) are multiples of every lane count in the
+    // matrix; (3,21) and (95,96) are aligned to none of them.
+    let boundaries = [(0usize, 32usize), (16, 80), (3, 21), (64, 96), (95, 96)];
+    for k in (0..MATRIX).filter(|&k| k != ONE_IDX && k != 12) {
+        let mut src = alloc_view(nth(&d, &dims, k));
+        fill_sentinels(&mut src);
+        for &(b, e) in &boundaries {
+            for endian in [WireEndian::native(), swapped] {
+                let (_, m) = serialize_range_with(&src, b, e, endian, &VecAlloc).unwrap();
+                assert_ne!(
+                    m,
+                    CopyMethod::FieldWise,
+                    "matrix entry {k} range {b}..{e} ({endian:?}) must not gather"
+                );
+            }
+        }
+    }
+    // The aliasing and counting wrappers are generic plans: the
+    // element gather is their legal (and only) pack strategy.
+    for k in [ONE_IDX, 12] {
+        let mut src = alloc_view(nth(&d, &dims, k));
+        fill_sentinels(&mut src);
+        let (_, m) = serialize_range_with(&src, 16, 48, WireEndian::native(), &VecAlloc).unwrap();
+        assert_eq!(m, CopyMethod::FieldWise, "matrix entry {k} packs element-wise");
+    }
+}
+
+/// Out-of-bounds or inverted ranges are rejected at serialization
+/// time, and range messages refuse full-view deserialization entry
+/// points (and vice versa).
+#[test]
+fn range_bounds_and_entry_points_are_enforced() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(13);
+    let mut src = alloc_view(AoS::packed(&d, dims.clone()));
+    fill_sentinels(&mut src);
+    assert!(serialize_range(&src, 5, 4).is_err(), "inverted range");
+    assert!(serialize_range(&src, 0, 14).is_err(), "end past the extent");
+    assert!(serialize_range(&src, 3, 3).is_err(), "empty range");
+
+    let ranged = serialize_range(&src, 2, 9).unwrap();
+    let whole = serialize(&src).unwrap();
+    let mut dst = alloc_view(AoS::packed(&d, dims.clone()));
+    assert!(
+        deserialize_range_into(&whole, &mut dst).is_err(),
+        "whole-view messages carry no range="
+    );
+    let mut short = alloc_view(AoS::packed(&d, ArrayDims::linear(7)));
+    assert!(
+        deserialize_range_into(&ranged, &mut short).is_err(),
+        "range landing needs the manifest's full data space"
+    );
+    // ..._at ignores the manifest's origin: the 7-record slab fits the
+    // 7-record view at offset 0 even though it came from records 2..9.
+    deserialize_range_into_at(&ranged, &mut short, 0).unwrap();
+    let src_bytes = packed_bytes(&src, &d);
+    assert_eq!(packed_bytes(&short, &d), src_bytes[2 * d.packed_size()..9 * d.packed_size()]);
+    assert!(
+        deserialize_range_into_at(&ranged, &mut short, 1).is_err(),
+        "slab past the destination's end"
+    );
+}
+
 /// The framed protocol across a real process boundary: spawn the
 /// `llama wire-worker` binary and speak the request/response protocol
 /// over its pipes, alternating byte orders. The worker's response must

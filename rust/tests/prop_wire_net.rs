@@ -1,0 +1,241 @@
+//! Socket-transport acceptance properties (EXPERIMENTS.md §Wire
+//! distributed): the framed reader survives a hostile byte stream —
+//! header reads are byte-capped, split writes and byte-at-a-time
+//! delivery reassemble, abrupt disconnects surface as errors, and
+//! `Ok(None)` means a clean frame boundary and nothing else — and the
+//! TCP slab server (`llama wire-serve`) round trips shard-parallel
+//! sends from a real client across a real process boundary.
+
+mod prop_support;
+
+use std::io::{BufReader, Cursor, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+use llama::coordinator::wire_demo::DRIFT_DT;
+use llama::coordinator::wire_net;
+use llama::prelude::*;
+use llama::workloads::nbody;
+use llama::workloads::picframe::frames::drift_view;
+use llama::workloads::picframe::attr_dim;
+use prop_support::*;
+
+fn sample_frame_bytes() -> (WireMessage, Vec<u8>) {
+    let d = nbody::particle_dim();
+    let mut src = alloc_view(AoS::packed(&d, ArrayDims::linear(13)));
+    fill_sentinels(&mut src);
+    let msg = serialize(&src).unwrap();
+    let mut bytes = Vec::new();
+    write_message(&mut bytes, &msg).unwrap();
+    (msg, bytes)
+}
+
+/// A newline-free hostile stream must be rejected once the byte-capped
+/// header read gives up — it must never be buffered without bound in
+/// search of a newline.
+#[test]
+fn newline_free_streams_are_rejected_at_the_header_cap() {
+    let hostile = vec![b'A'; 4 * MAX_HEADER_BYTES as usize];
+    let err = read_message(&mut Cursor::new(hostile)).unwrap_err();
+    let text = err.to_string();
+    assert!(text.contains("truncated or longer"), "unexpected error: {text}");
+
+    // Exactly at the cap with no newline: same rejection, no panic.
+    let at_cap = vec![b'L'; MAX_HEADER_BYTES as usize];
+    assert!(read_message(&mut Cursor::new(at_cap)).is_err());
+
+    // A newline *within* the cap still parses normally.
+    let (msg, bytes) = sample_frame_bytes();
+    let got = read_message(&mut Cursor::new(bytes)).unwrap().expect("one frame");
+    assert_eq!(got, msg);
+}
+
+/// `Ok(None)` is reserved for the clean frame boundary: an empty
+/// stream and the position after a whole frame. Every truncation —
+/// mid-header, mid-manifest, mid-payload — is an error.
+#[test]
+fn none_means_clean_frame_boundary_and_nothing_else() {
+    let (msg, bytes) = sample_frame_bytes();
+
+    // Clean boundaries.
+    assert!(read_message(&mut Cursor::new(Vec::new())).unwrap().is_none());
+    let mut r = Cursor::new(bytes.clone());
+    assert_eq!(read_message(&mut r).unwrap().expect("frame"), msg);
+    assert!(read_message(&mut r).unwrap().is_none(), "EOF after a whole frame");
+
+    // A header cut off by EOF before its newline is an error.
+    assert!(read_message(&mut Cursor::new(b"LLAMA-WIRE 50".to_vec())).is_err());
+
+    // Truncation at every prefix length: nothing but the two clean
+    // boundaries may produce `Ok(None)`, and no prefix may panic.
+    for cut in 1..bytes.len() {
+        match read_message(&mut Cursor::new(bytes[..cut].to_vec())) {
+            Err(_) => {}
+            Ok(got) => panic!("truncation at byte {cut}/{} returned {got:?}", bytes.len()),
+        }
+    }
+
+    // Trailing garbage after a clean frame is an error, not EOF.
+    let mut noisy = bytes.clone();
+    noisy.extend_from_slice(b"LL");
+    let mut r = Cursor::new(noisy);
+    assert!(read_message(&mut r).unwrap().is_some());
+    assert!(read_message(&mut r).is_err(), "partial next header must not read as EOF");
+}
+
+/// A reader that delivers at most one byte per call — the worst
+/// fragmentation a socket can legally produce.
+struct Trickle<R>(R);
+
+impl<R: Read> Read for Trickle<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = buf.len().min(1);
+        self.0.read(&mut buf[..n])
+    }
+}
+
+/// Byte-at-a-time delivery reassembles every frame bit-identically:
+/// framing never assumes a read returns more than one byte.
+#[test]
+fn byte_at_a_time_delivery_reassembles_whole_frames() {
+    let d = nbody::particle_dim();
+    let mut stream = Vec::new();
+    let mut sent = Vec::new();
+    for (k, endian) in
+        [WireEndian::native(), WireEndian::native().swapped()].into_iter().enumerate()
+    {
+        let mut src = alloc_view(AoSoA::new(&d, ArrayDims::linear(21), 4));
+        fill_sentinels(&mut src);
+        let msg = serialize_range_endian(&src, k, 19 + k, endian).unwrap();
+        write_message(&mut stream, &msg).unwrap();
+        sent.push(msg);
+    }
+    let mut r = BufReader::with_capacity(1, Trickle(Cursor::new(stream)));
+    for (k, want) in sent.iter().enumerate() {
+        let got = read_message(&mut r).unwrap().unwrap_or_else(|| panic!("frame {k}"));
+        assert_eq!(&got, want, "frame {k}");
+    }
+    assert!(read_message(&mut r).unwrap().is_none());
+}
+
+/// Real sockets: split writes with flushes in between reassemble into
+/// whole frames, and an abrupt peer disconnect mid-manifest or
+/// mid-payload surfaces as an error on the reader — never as a clean
+/// end of stream.
+#[test]
+fn split_socket_writes_reassemble_and_disconnects_surface_as_errors() {
+    let (msg, bytes) = sample_frame_bytes();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // Cut points: inside the header/manifest text and inside the
+    // payload (the payload is 13 × 28 B, so len-10 is always in it).
+    let cuts = [30usize, bytes.len() - 10];
+
+    let frame = bytes.clone();
+    let writer = std::thread::spawn(move || {
+        // Connection 1: dribble the whole frame in 7-byte chunks.
+        let mut s = TcpStream::connect(addr).unwrap();
+        for chunk in frame.chunks(7) {
+            s.write_all(chunk).unwrap();
+            s.flush().unwrap();
+        }
+        drop(s);
+        // Connections 2..: send a prefix, then disconnect abruptly.
+        for cut in cuts {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&frame[..cut]).unwrap();
+            drop(s);
+        }
+    });
+
+    let (s, _) = listener.accept().unwrap();
+    let mut r = BufReader::new(s);
+    assert_eq!(read_message(&mut r).unwrap().expect("dribbled frame"), msg);
+    assert!(read_message(&mut r).unwrap().is_none(), "clean close after the frame");
+
+    for cut in cuts {
+        let (s, _) = listener.accept().unwrap();
+        let mut r = BufReader::new(s);
+        assert!(
+            read_message(&mut r).is_err(),
+            "disconnect after {cut} bytes must error, not end cleanly"
+        );
+    }
+    writer.join().unwrap();
+}
+
+/// The slab server across a real process boundary: spawn `llama
+/// wire-serve`, drive one single-stream exchange and one shard-parallel
+/// send from this process, and check both land bit-identical to the
+/// locally computed drifted oracle.
+#[test]
+fn wire_serve_process_round_trips_shard_parallel_slabs() {
+    const CONNS: usize = 3;
+    let binary = Path::new(env!("CARGO_BIN_EXE_llama"));
+    let (mut child, addr) = wire_net::spawn_server(binary, 1 + CONNS).unwrap();
+
+    let d = attr_dim();
+    let dims = ArrayDims::linear(96);
+    let mut src = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    fill_sentinels(&mut src);
+    let mut expected = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    copy(&src, &mut expected);
+    drift_view(&mut expected, dims.count(), DRIFT_DT);
+
+    let connect = |addr: &str| {
+        let s = TcpStream::connect(addr).expect("connect to wire-serve");
+        (BufReader::new(s.try_clone().unwrap()), s)
+    };
+
+    // Single stream, foreign byte order: the whole-frame path.
+    let (mut r, mut w) = connect(&addr);
+    let request = serialize_endian(&src, WireEndian::native().swapped()).unwrap();
+    write_message(&mut w, &request).unwrap();
+    let reply = read_message(&mut r).unwrap().expect("frame reply");
+    assert_eq!(reply.manifest.endian, request.manifest.endian, "reply keeps the byte order");
+    let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    deserialize_into(&reply, &mut got).unwrap();
+    assert!(views_equal(&got, &expected), "single-stream slab diverged from the oracle");
+    drop((r, w));
+
+    // Shard-parallel: one connection per sub-range, replies reassembled
+    // by their manifests' ranges alone.
+    let msgs = serialize_sharded(&src, WireEndian::native().swapped(), CONNS).unwrap();
+    let mut pairs: Vec<_> = msgs.iter().map(|_| connect(&addr)).collect();
+    let replies = std::thread::scope(|scope| {
+        let handles: Vec<_> = pairs
+            .iter_mut()
+            .zip(&msgs)
+            .map(|((r, w), msg)| {
+                scope.spawn(move || {
+                    write_message(w, msg).unwrap();
+                    read_message(r).unwrap().expect("slab reply")
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("shard thread")).collect::<Vec<_>>()
+    });
+    let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+    deserialize_sharded_into(&replies, &mut got).unwrap();
+    assert!(views_equal(&got, &expected), "sharded slabs diverged from the oracle");
+    drop(pairs);
+
+    let status = child.wait().unwrap();
+    assert!(status.success(), "wire-serve exited with {status}");
+}
+
+/// The `llama wire-connect` demo end to end: spawns its own private
+/// server, verifies every round trip, zero exit code.
+#[test]
+fn wire_connect_command_verifies_its_exchange() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_llama"))
+        .args(["wire-connect", "--quick", "--n", "64", "--iters", "2"])
+        .output()
+        .expect("run llama wire-connect");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "llama wire-connect failed: {stdout}\n{stderr}");
+    assert!(stdout.contains("TCP socket exchange"), "{stdout}");
+    assert!(stdout.contains("shard-parallel"), "{stdout}");
+    assert!(stdout.contains("verified"), "{stdout}");
+}

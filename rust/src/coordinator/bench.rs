@@ -87,6 +87,9 @@ pub struct Opts {
     /// address of `wire-serve`, the server `wire-connect` joins
     /// (None = spawn a private server on an ephemeral port).
     pub addr: Option<String>,
+    /// Distributed halo schedule: split-phase overlapped exchange
+    /// instead of the blocking ring.
+    pub overlap: bool,
 }
 
 impl Default for Opts {
@@ -98,6 +101,7 @@ impl Default for Opts {
             iters: 5,
             artifacts: "artifacts".into(),
             addr: None,
+            overlap: false,
         }
     }
 }

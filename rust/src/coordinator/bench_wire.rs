@@ -174,28 +174,46 @@ pub fn run(o: &Opts) -> Result<Table> {
 }
 
 /// Distributed transport rows (EXPERIMENTS.md §Wire, distributed
-/// methodology): real-socket loopback round trips — whole-view frames
-/// over one connection vs the same view split by
-/// [`crate::copy::serialize_sharded`] and exchanged shard-parallel —
-/// plus the lbm halo exchange (one ghost-exchange + step cycle across
-/// all in-process workers). The multi-*process* variants live in the
-/// `wire-connect`/`halo` demos and `tests/prop_halo.rs`, where process
-/// startup would swamp a median; here the protocol and copy work are
-/// what is timed.
+/// methodology): real-socket loopback round trips, every case as a
+/// **paired** `(blocking)` / `(overlapped)` row so the overlap win is
+/// read directly off the table:
+///
+/// * **tcp single-stream** — whole-view frames over one connection:
+///   blocking stages the whole payload before the first byte moves;
+///   overlapped streams it in shard-aligned chunks via
+///   [`crate::copy::write_range_chunked`].
+/// * **tcp multiplexed** — the view split by
+///   [`crate::copy::serialize_sharded`] into `(step, range)`-tagged
+///   frames on ONE [`crate::coordinator::wire_net::PeerLink`]:
+///   blocking sends and awaits each shard in lockstep; overlapped
+///   queues every shard and claims the replies by tag.
+/// * **lbm halo exchange** — one step cycle across all in-process
+///   workers: blocking is ghost-exchange-then-step; overlapped is the
+///   split-phase schedule (`overlapped_step`: boundary planes first,
+///   interior swept while ghosts move through the arenas).
+///
+/// The multi-*process* variants live in the `wire-connect`/`halo`
+/// demos and `tests/prop_halo.rs`, where process startup would swamp
+/// a median; here the protocol and copy work are what is timed.
 pub fn distributed(o: &Opts) -> Result<Table> {
     use std::io::BufReader;
     use std::net::{TcpListener, TcpStream};
 
     use super::wire_demo::{fill_frame, DRIFT_DT};
-    use super::wire_net;
-    use crate::copy::{deserialize_sharded_into, read_message, serialize_sharded, write_message};
+    use super::wire_net::{self, PeerLink, WIRE_IO_TIMEOUT};
+    use crate::copy::{
+        deserialize_range_into, deserialize_sharded_into, read_message, serialize_sharded,
+        write_message, write_range_chunked,
+    };
     use crate::workloads::lbm::{self, halo};
     use crate::workloads::picframe::frames::drift_view;
 
     let n = records(o).min(1 << 16);
-    let conns = o.threads.unwrap_or(4).clamp(2, 8);
+    let shards = o.threads.unwrap_or(4).clamp(2, 8);
     let mut t = Table::new(
-        format!("copy::wire — distributed transport ({n} records, {conns} shard connections)"),
+        format!(
+            "copy::wire — distributed transport ({n} records, {shards} shards, blocking vs overlapped)"
+        ),
         &["case", "MiB/s", "round-trip ms"],
     );
 
@@ -208,11 +226,11 @@ pub fn distributed(o: &Opts) -> Result<Table> {
     drift_view(&mut oracle, n, DRIFT_DT);
     let frame_bytes = serialize_endian(&frame, WireEndian::native())?.payload_len();
 
-    // Loopback echo-drift server: 1 single-stream + `conns` shard
-    // connections, then it drains and joins.
+    // Loopback echo-drift server: staged single-stream + pipelined
+    // single-stream + one multiplexed link, then it drains and joins.
     let listener = TcpListener::bind("127.0.0.1:0").context("binding the loopback server")?;
     let addr = listener.local_addr().context("reading the bound address")?.to_string();
-    let server = std::thread::spawn(move || wire_net::serve_connections(&listener, 1 + conns));
+    let server = std::thread::spawn(move || wire_net::serve_connections(&listener, 3));
 
     {
         let stream = TcpStream::connect(&addr).context("dialing the loopback server")?;
@@ -227,7 +245,7 @@ pub fn distributed(o: &Opts) -> Result<Table> {
             views_equal(&oracle, &got),
             "bench-wire: loopback round trip corrupted data"
         );
-        let single = bench("tcp single-stream", 1, o.iters, || {
+        let single = bench("tcp single-stream (blocking)", 1, o.iters, || {
             let msg = serialize_endian(&frame, WireEndian::native()).unwrap();
             write_message(&mut w, &msg).unwrap();
             let reply = read_message(&mut r).unwrap().expect("loopback reply");
@@ -235,54 +253,126 @@ pub fn distributed(o: &Opts) -> Result<Table> {
             black_box(got.count());
         });
         t.row(vec![
-            "tcp single-stream".into(),
+            "tcp single-stream (blocking)".into(),
             fmt_mib_s(frame_bytes, &single),
             fmt_ms(single.median_ns),
         ]);
     }
 
     {
-        let mut pairs = Vec::with_capacity(conns);
-        for _ in 0..conns {
-            let s = TcpStream::connect(&addr).context("dialing the loopback server")?;
-            let wh = s.try_clone().context("cloning the wire socket")?;
-            pairs.push((BufReader::new(s), wh));
-        }
+        let stream = TcpStream::connect(&addr).context("dialing the loopback server")?;
+        let mut w = stream.try_clone().context("cloning the wire socket")?;
+        let mut r = BufReader::new(stream);
         let mut got = alloc_view(SoA::multi_blob(&ad, dims.clone()));
-        let sharded = bench("tcp shard-parallel", 1, o.iters, || {
-            let msgs = serialize_sharded(&frame, WireEndian::native(), conns).unwrap();
-            let replies: Vec<crate::copy::WireMessage> = std::thread::scope(|scope| {
-                let handles: Vec<_> = pairs
-                    .iter_mut()
-                    .zip(&msgs)
-                    .map(|((r, w), msg)| {
-                        scope.spawn(move || {
-                            write_message(w, msg).unwrap();
-                            read_message(r).unwrap().expect("loopback shard reply")
-                        })
-                    })
-                    .collect();
-                handles.into_iter().map(|h| h.join().expect("shard thread panicked")).collect()
-            });
+        let chunk = (n / 8).max(1);
+        // Correctness gate: a chunk-streamed request reassembles to
+        // the same drifted reply.
+        write_range_chunked(&mut w, &frame, 0, n, WireEndian::native(), None, chunk)?;
+        let reply = read_message(&mut r)?.context("loopback server closed")?;
+        deserialize_range_into(&reply, &mut got)?;
+        crate::ensure!(
+            views_equal(&oracle, &got),
+            "bench-wire: pipelined round trip corrupted data"
+        );
+        let piped = bench("tcp single-stream (overlapped)", 1, o.iters, || {
+            write_range_chunked(&mut w, &frame, 0, n, WireEndian::native(), None, chunk).unwrap();
+            let reply = read_message(&mut r).unwrap().expect("loopback reply");
+            deserialize_range_into(&reply, &mut got).unwrap();
+            black_box(got.count());
+        });
+        t.row(vec![
+            "tcp single-stream (overlapped)".into(),
+            fmt_mib_s(frame_bytes, &piped),
+            fmt_ms(piped.median_ns),
+        ]);
+    }
+
+    {
+        let link = PeerLink::connect(&addr, WIRE_IO_TIMEOUT)?;
+        let mut got = alloc_view(SoA::multi_blob(&ad, dims.clone()));
+        let mut step_no = 0usize;
+        // Correctness gate: one tagged exchange reassembles.
+        {
+            let mut msgs = serialize_sharded(&frame, WireEndian::native(), shards)?;
+            let mut tags = Vec::new();
+            for m in &mut msgs {
+                m.manifest.step = Some(step_no);
+                tags.push(m.manifest.range.context("sharded frame without a range")?);
+            }
+            for m in msgs {
+                link.send(m)?;
+            }
+            let mut replies = Vec::new();
+            for &range in &tags {
+                replies.push(link.recv_tagged(step_no, range)?);
+            }
+            step_no += 1;
+            deserialize_sharded_into(&replies, &mut got)?;
+            crate::ensure!(
+                views_equal(&oracle, &got),
+                "bench-wire: multiplexed reassembly corrupted data"
+            );
+        }
+        // Blocking: one shard in flight at a time — send, await, next.
+        let lockstep = bench("tcp multiplexed (blocking)", 1, o.iters, || {
+            let mut msgs = serialize_sharded(&frame, WireEndian::native(), shards).unwrap();
+            let mut replies = Vec::with_capacity(msgs.len());
+            for m in &mut msgs {
+                m.manifest.step = Some(step_no);
+            }
+            for m in msgs {
+                let range = m.manifest.range.unwrap();
+                link.send(m).unwrap();
+                replies.push(link.recv_tagged(step_no, range).unwrap());
+            }
+            step_no += 1;
+            deserialize_sharded_into(&replies, &mut got).unwrap();
+            black_box(got.count());
+        });
+        t.row(vec![
+            "tcp multiplexed (blocking)".into(),
+            fmt_mib_s(frame_bytes, &lockstep),
+            fmt_ms(lockstep.median_ns),
+        ]);
+        // Overlapped: every shard queued before the first reply is
+        // claimed — the frames interleave freely on the one socket.
+        let queued = bench("tcp multiplexed (overlapped)", 1, o.iters, || {
+            let mut msgs = serialize_sharded(&frame, WireEndian::native(), shards).unwrap();
+            let mut tags = Vec::with_capacity(msgs.len());
+            for m in &mut msgs {
+                m.manifest.step = Some(step_no);
+                tags.push(m.manifest.range.unwrap());
+            }
+            for m in msgs {
+                link.send(m).unwrap();
+            }
+            let mut replies = Vec::with_capacity(tags.len());
+            for &range in &tags {
+                replies.push(link.recv_tagged(step_no, range).unwrap());
+            }
+            step_no += 1;
             deserialize_sharded_into(&replies, &mut got).unwrap();
             black_box(got.count());
         });
         crate::ensure!(
             views_equal(&oracle, &got),
-            "bench-wire: shard-parallel reassembly corrupted data"
+            "bench-wire: multiplexed reassembly corrupted data"
         );
         t.row(vec![
-            "tcp shard-parallel".into(),
-            fmt_mib_s(frame_bytes, &sharded),
-            fmt_ms(sharded.median_ns),
+            "tcp multiplexed (overlapped)".into(),
+            fmt_mib_s(frame_bytes, &queued),
+            fmt_ms(queued.median_ns),
         ]);
     }
     server.join().expect("loopback server thread panicked")?;
 
-    // lbm halo exchange: one ghost-exchange + step cycle across all
-    // workers; MiB/s is boundary-plane traffic over the cycle time.
+    // lbm halo exchange: one step cycle across all workers; MiB/s is
+    // boundary-plane traffic over the cycle time. Blocking and
+    // overlapped run the same number of deterministic cycles from the
+    // same initial state, so their final lattices must agree
+    // bit-for-bit — asserted below as an embedded differential check.
     let nx = if o.quick { 8 } else { 16 };
-    let workers = conns.min(4);
+    let workers = shards.min(4);
     let geo = lbm::Geometry::channel_with_sphere(nx, 8, 8, 13);
     let d = lbm::cell_dim();
     let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
@@ -290,7 +380,7 @@ pub fn distributed(o: &Opts) -> Result<Table> {
     let mut locals = halo::split_lattice(&global, workers)?;
     let (first, _) = halo::boundary_messages(&locals[0].src)?;
     let halo_bytes = 2 * workers * first.payload_len();
-    let exchange = bench("lbm halo exchange", 1, o.iters, || {
+    let exchange = bench("lbm halo exchange (blocking)", 1, o.iters, || {
         halo::exchange_ghosts(&mut locals).unwrap();
         for w in &mut locals {
             lbm::step::step(&w.src, &mut w.dst);
@@ -299,17 +389,78 @@ pub fn distributed(o: &Opts) -> Result<Table> {
         black_box(locals.len());
     });
     t.row(vec![
-        "lbm halo exchange".into(),
+        "lbm halo exchange (blocking)".into(),
         fmt_mib_s(halo_bytes, &exchange),
         fmt_ms(exchange.median_ns),
+    ]);
+
+    let mut locals_ov = halo::split_lattice(&global, workers)?;
+    let mut arenas: Vec<halo::GhostArena> =
+        (0..workers).map(|_| halo::GhostArena::default()).collect();
+    let mut step_no = 0usize;
+    let overlapped = bench("lbm halo exchange (overlapped)", 1, o.iters, || {
+        halo::overlapped_step(&mut locals_ov, &mut arenas, step_no).unwrap();
+        step_no += 1;
+        black_box(locals_ov.len());
+    });
+    for (a, b) in locals.iter().zip(&locals_ov) {
+        crate::ensure!(
+            a.src.blobs() == b.src.blobs(),
+            "bench-wire: overlapped halo diverged from the blocking ring"
+        );
+    }
+    t.row(vec![
+        "lbm halo exchange (overlapped)".into(),
+        fmt_mib_s(halo_bytes, &overlapped),
+        fmt_ms(overlapped.median_ns),
     ]);
     Ok(t)
 }
 
+/// The six distributed cases every baseline must carry, as
+/// `(blocking, overlapped)` pairs.
+const DISTRIBUTED_CASES: [&str; 6] = [
+    "tcp single-stream (blocking)",
+    "tcp single-stream (overlapped)",
+    "tcp multiplexed (blocking)",
+    "tcp multiplexed (overlapped)",
+    "lbm halo exchange (blocking)",
+    "lbm halo exchange (overlapped)",
+];
+
+/// Structural gate for the distributed table: all six paired cases
+/// present, no `(overlapped)` row without its `(blocking)` partner,
+/// every cell a positive number.
+fn check_distributed_rows(dist: &Table) -> Result<()> {
+    for case in DISTRIBUTED_CASES {
+        crate::ensure!(
+            dist.rows.iter().any(|r| r[0] == case),
+            "bench-wire: missing distributed row {case}"
+        );
+    }
+    for r in &dist.rows {
+        if let Some(stem) = r[0].strip_suffix(" (overlapped)") {
+            crate::ensure!(
+                dist.rows.iter().any(|b| b[0] == format!("{stem} (blocking)")),
+                "bench-wire: overlapped row {:?} has no blocking partner",
+                r[0]
+            );
+        }
+        for col in [1, 2] {
+            let v: f64 = r[col].parse().map_err(|_| {
+                crate::error::Error::msg(format!("bench-wire: non-numeric cell {:?}", r[col]))
+            })?;
+            crate::ensure!(v > 0.0, "bench-wire: non-positive distributed cell in {}", r[0]);
+        }
+    }
+    Ok(())
+}
+
 /// Serialize a bench-wire run as the `BENCH_wire.json` baseline.
 /// Refuses structurally to emit a document missing any (case, variant)
-/// row, any distributed row, or whose throughput cells are not
-/// positive numbers.
+/// row, any of the six paired distributed rows (an `(overlapped)` row
+/// without its `(blocking)` partner is refused outright), or whose
+/// throughput cells are not positive numbers.
 pub fn baseline_json_checked(o: &Opts) -> Result<String> {
     let t = run(o)?;
     for case in ["nbody soa→wire", "picframe aosoa→wire", "nbody soa→wire (swapped)"] {
@@ -329,20 +480,7 @@ pub fn baseline_json_checked(o: &Opts) -> Result<String> {
         }
     }
     let dist = distributed(o)?;
-    for case in ["tcp single-stream", "tcp shard-parallel", "lbm halo exchange"] {
-        crate::ensure!(
-            dist.rows.iter().any(|r| r[0] == case),
-            "bench-wire: missing distributed row {case}"
-        );
-    }
-    for r in &dist.rows {
-        for col in [1, 2] {
-            let v: f64 = r[col].parse().map_err(|_| {
-                crate::error::Error::msg(format!("bench-wire: non-numeric cell {:?}", r[col]))
-            })?;
-            crate::ensure!(v > 0.0, "bench-wire: non-positive distributed cell in {}", r[0]);
-        }
-    }
+    check_distributed_rows(&dist)?;
     Ok(format!(
         "{{\n  \"figure\": \"bench_wire\",\n  \"mode\": \"{}\",\n  \"iters\": {},\n  \
          \"unit\": \"MiB/s (median)\",\n  \"wire\": {},\n  \"distributed\": {}\n}}\n",
@@ -377,17 +515,47 @@ mod tests {
     }
 
     #[test]
-    fn distributed_rows_cover_all_three_cases() {
+    fn distributed_rows_cover_all_six_paired_cases() {
         let t = distributed(&tiny_opts()).expect("distributed run");
-        assert_eq!(t.rows.len(), 3);
+        assert_eq!(t.rows.len(), 6);
         for r in &t.rows {
             assert_eq!(r.len(), 3, "ragged row {r:?}");
             assert!(r[1].parse::<f64>().unwrap() > 0.0, "MiB/s in {r:?}");
             assert!(r[2].parse::<f64>().unwrap() > 0.0, "round-trip ms in {r:?}");
         }
-        for case in ["tcp single-stream", "tcp shard-parallel", "lbm halo exchange"] {
+        for case in DISTRIBUTED_CASES {
             assert!(t.rows.iter().any(|r| r[0] == case), "missing {case}");
         }
+        check_distributed_rows(&t).expect("paired table passes the gate");
+    }
+
+    #[test]
+    fn distributed_gate_refuses_unpaired_and_incomplete_tables() {
+        // An overlapped row with no blocking partner is refused even
+        // when all six case names are nominally present elsewhere.
+        let mut t = Table::new("synthetic", &["case", "MiB/s", "round-trip ms"]);
+        for case in DISTRIBUTED_CASES {
+            if case != "lbm halo exchange (blocking)" {
+                t.row(vec![case.into(), "10.0".into(), "1.0".into()]);
+            }
+        }
+        let err = check_distributed_rows(&t).unwrap_err().to_string();
+        assert!(err.contains("lbm halo exchange (blocking)"), "{err}");
+
+        let mut unpaired = Table::new("synthetic", &["case", "MiB/s", "round-trip ms"]);
+        for case in DISTRIBUTED_CASES {
+            unpaired.row(vec![case.into(), "10.0".into(), "1.0".into()]);
+        }
+        unpaired.row(vec!["new case (overlapped)".into(), "10.0".into(), "1.0".into()]);
+        let err = check_distributed_rows(&unpaired).unwrap_err().to_string();
+        assert!(err.contains("no blocking partner"), "{err}");
+
+        let mut bad = Table::new("synthetic", &["case", "MiB/s", "round-trip ms"]);
+        for case in DISTRIBUTED_CASES {
+            bad.row(vec![case.into(), "0.0".into(), "1.0".into()]);
+        }
+        let err = check_distributed_rows(&bad).unwrap_err().to_string();
+        assert!(err.contains("non-positive"), "{err}");
     }
 
     #[test]
@@ -397,7 +565,8 @@ mod tests {
         assert!(j.contains("\"wire\": {"), "{j}");
         assert!(j.contains("\"distributed\": {"), "{j}");
         assert!(j.contains("picframe aosoa→wire"), "{j}");
-        assert!(j.contains("tcp shard-parallel"), "{j}");
+        assert!(j.contains("tcp multiplexed (overlapped)"), "{j}");
+        assert!(j.contains("lbm halo exchange (blocking)"), "{j}");
         assert!(!j.contains("\"rows\": []"), "{j}");
     }
 }

@@ -33,7 +33,7 @@ COMMANDS:
   wire        copy::wire demo: frames exchanged with worker processes
   wire-worker the worker side of `wire` (framed stdin -> stdout loop)
   wire-serve  TCP wire server: serve --n connections on --addr
-  wire-connect TCP wire client demo: single-stream vs shard-parallel
+  wire-connect TCP wire client demo: staged/pipelined/multiplexed
   halo        lbm halo exchange across worker processes over TCP
   halo-worker the worker side of `halo` (one ring member)
   wirebench   copy::wire — compiled pack vs naive element-wise
@@ -50,6 +50,7 @@ OPTIONS:
   --threads <T>     worker threads for parallel variants
   --artifacts <DIR> artifacts directory (default: artifacts)
   --addr <ADDR>     socket address for wire-serve/wire-connect
+  --overlap         halo: split-phase overlapped schedule (default: blocking ring)
   --out-dir <DIR>   output directory for dump/e2e files
   --markdown        print tables as Markdown instead of aligned text
 ";
@@ -88,6 +89,7 @@ pub fn parse(args: &[String]) -> Result<Cli> {
             "--threads" => opts.threads = Some(take()?.parse()?),
             "--artifacts" => opts.artifacts = take()?.clone(),
             "--addr" => opts.addr = Some(take()?.clone()),
+            "--overlap" => opts.overlap = true,
             "--out-dir" => out_dir = take()?.clone(),
             "--markdown" => markdown = true,
             "-h" | "--help" => bail!("{USAGE}"),
@@ -362,6 +364,13 @@ mod tests {
         assert_eq!(cli.opts.addr.as_deref(), Some("127.0.0.1:7070"));
         assert_eq!(cli.opts.n, Some(3));
         assert!(parse(&args(&["wire-serve", "--addr"])).is_err());
+    }
+
+    #[test]
+    fn parse_overlap_flag() {
+        let cli = parse(&args(&["halo", "--quick", "--overlap"])).unwrap();
+        assert!(cli.opts.overlap);
+        assert!(!parse(&args(&["halo", "--quick"])).unwrap().opts.overlap);
     }
 
     #[test]

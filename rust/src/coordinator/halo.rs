@@ -1,29 +1,41 @@
-//! Distributed lbm halo exchange over localhost TCP (wire phase 2):
-//! the x-slab decomposition of [`crate::workloads::lbm::halo`] spread
-//! across real worker *processes*.
+//! Distributed lbm halo exchange over localhost TCP (wire phases 2
+//! and 3): the x-slab decomposition of
+//! [`crate::workloads::lbm::halo`] spread across real worker
+//! *processes*.
 //!
 //! Topology: the parent spawns `workers` copies of this binary
 //! (`llama halo-worker`). Each worker binds an ephemeral port and
 //! announces `halo-listening <addr>` on stdout. The parent dials every
 //! worker, sends a `halo-parent` hello, a `halo-init` line naming the
-//! step count and the right neighbour's address, and the worker's
-//! initial local lattice (ghost planes included) as one whole-view
-//! wire message. Each worker then dials its right neighbour with a
-//! `halo-peer` hello, forming a ring: every worker holds one socket it
-//! dialed (to its right neighbour) and one it accepted (from its left
-//! neighbour).
+//! step count, the exchange mode, and the right neighbour's address,
+//! and the worker's initial local lattice (ghost planes included) as
+//! one whole-view wire message. Each worker then dials its right
+//! neighbour with a `halo-peer` hello, forming a ring: every worker
+//! holds one socket it dialed (to its right neighbour) and one it
+//! accepted (from its left neighbour). All ring and parent sockets
+//! carry [`WIRE_IO_TIMEOUT`] deadlines, so a hung peer fails loudly.
 //!
-//! Every step, each worker pushes its two boundary planes as
-//! range-restricted messages — the *last* interior plane to the right
-//! neighbour, the *first* to the left — on a scoped sender thread
-//! while the main thread lands the two arriving planes on its ghost
-//! cells, then runs the unmodified [`step`] kernel. After the final
-//! step each worker ships its interior back to the parent, which
-//! reassembles the global lattice by manifest range. The result is
-//! **bit-identical** to the single-process kernel (see the
-//! differential tests in `tests/prop_halo.rs`).
+//! Two exchange schedules share the ring:
+//!
+//! - **Blocking** (`overlap=0`, the phase-2 schedule): every step,
+//!   each worker pushes its two boundary planes of the *current*
+//!   state on a scoped sender thread while the main thread lands the
+//!   two arriving planes on its ghost cells, then runs the unmodified
+//!   [`step`] kernel over the whole slab.
+//! - **Overlapped** (`overlap=1`, the phase-3 split-phase schedule):
+//!   each ring socket is wrapped in a multiplexed
+//!   [`PeerLink`]; every step the worker computes its boundary planes
+//!   first ([`step_boundary`]), queues them as `step=`-tagged frames,
+//!   and computes the interior ([`step_interior`]) while a comm
+//!   thread collects the next step's ghosts into a double-buffered
+//!   [`GhostArena`] — communication hides behind the interior sweep.
+//!
+//! After the final step each worker ships its interior back to the
+//! parent, which reassembles the global lattice by manifest range.
+//! Both schedules are **bit-identical** to the single-process kernel
+//! (see the differential tests in `tests/prop_halo.rs`).
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::process::{Command, Stdio};
@@ -31,13 +43,15 @@ use std::time::Instant;
 
 use super::bench::Opts;
 use super::report::Table;
+use super::wire_net::{configure_stream, DeadlineRead, PeerLink, WIRE_IO_TIMEOUT};
 use crate::copy::{deserialize, read_message, serialize, write_message};
 use crate::error::{Context, Result};
 use crate::mapping::{DynMapping, WireRecipe};
 use crate::view::{alloc_view, View};
 use crate::workloads::lbm::halo::{
-    boundary_messages, extract_local, interior_message, local_dims, partition_x, place_interior,
-    receive_ghost, GhostSide,
+    boundary_messages, boundary_messages_tagged, extract_local, interior_message, local_dims,
+    partition_x, place_interior, receive_ghost, step_boundary, step_interior, GhostArena,
+    GhostSide,
 };
 use crate::workloads::lbm::step::{init, step};
 use crate::workloads::lbm::{cell_dim, Geometry};
@@ -52,25 +66,121 @@ enum Hello {
     Peer,
 }
 
-fn accept_hello(listener: &TcpListener) -> Result<(Hello, BufReader<TcpStream>, TcpStream)> {
+/// Accept a connection and read its one-line hello **unbuffered**
+/// (byte at a time off the raw socket), so not a single byte beyond
+/// the newline is consumed — the stream can then be handed to a
+/// [`PeerLink`] or a fresh `BufReader` without losing frames a fast
+/// peer may already have sent.
+fn accept_hello(listener: &TcpListener) -> Result<(Hello, TcpStream)> {
     let (stream, _) = listener.accept().context("accepting halo connection")?;
-    let w = stream.try_clone().context("cloning the halo socket")?;
-    let mut r = BufReader::new(stream);
+    configure_stream(&stream, WIRE_IO_TIMEOUT)?;
     let mut hello = String::new();
-    r.read_line(&mut hello).context("reading the halo hello line")?;
+    let mut byte = [0u8; 1];
+    loop {
+        let n = (&stream).read(&mut byte).context("reading the halo hello line")?;
+        ensure!(n == 1, "halo peer closed during its hello");
+        if byte[0] == b'\n' {
+            break;
+        }
+        ensure!(hello.len() < 64, "halo hello line too long ({hello:?}…)");
+        hello.push(byte[0] as char);
+    }
     let kind = match hello.trim() {
         "halo-parent" => Hello::Parent,
         "halo-peer" => Hello::Peer,
         other => bail!("unexpected halo hello {other:?}"),
     };
-    Ok((kind, r, w))
+    Ok((kind, stream))
 }
 
-/// Pull `key=value` out of a `halo-init` line.
-fn init_field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+/// Pull `key=value` out of a `halo-init` line, if present.
+fn init_field_opt<'a>(line: &'a str, key: &str) -> Option<&'a str> {
     line.split_whitespace()
         .find_map(|tok| tok.strip_prefix(key).and_then(|t| t.strip_prefix('=')))
+}
+
+/// Pull a required `key=value` out of a `halo-init` line.
+fn init_field<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    init_field_opt(line, key)
         .with_context(|| format!("halo-init line missing {key}= ({line:?})"))
+}
+
+/// The phase-3 split-phase worker loop: boundary planes first, their
+/// frames queued on the peer links, the interior swept while a comm
+/// thread lands the next step's ghosts in the arena. The arena's
+/// ownership rule guarantees no ghost is overwritten before its
+/// consumer takes it; the links' tag dispatch guarantees frames match
+/// steps no matter how the ring interleaves.
+fn worker_steps_overlapped(
+    src: &mut View<DynMapping, Vec<u8>>,
+    dst: &mut View<DynMapping, Vec<u8>>,
+    steps: usize,
+    right_stream: TcpStream,
+    left_stream: TcpStream,
+) -> Result<()> {
+    let right = PeerLink::from_stream(right_stream, WIRE_IO_TIMEOUT)?;
+    let left = PeerLink::from_stream(left_stream, WIRE_IO_TIMEOUT)?;
+    let mut arena = GhostArena::default();
+    for k in 0..steps {
+        step_boundary(&*src, dst);
+        let (first, last) = boundary_messages_tagged(dst, k + 1)?;
+        std::thread::scope(|scope| -> Result<()> {
+            let comm = scope.spawn(|| -> Result<()> {
+                // Queued sends return immediately; the thread's real
+                // work is waiting for the inbound step-(k+1) ghosts
+                // while the main thread sweeps the interior.
+                right.send(last)?;
+                left.send(first)?;
+                arena.deposit(GhostSide::Left, k + 1, left.recv_step(k + 1)?)?;
+                arena.deposit(GhostSide::Right, k + 1, right.recv_step(k + 1)?)?;
+                Ok(())
+            });
+            step_interior(&*src, dst);
+            comm.join().expect("halo comm thread panicked")
+        })?;
+        std::mem::swap(src, dst);
+        let lmsg = arena.take(GhostSide::Left, k + 1)?;
+        receive_ghost(src, &lmsg, GhostSide::Left)?;
+        let rmsg = arena.take(GhostSide::Right, k + 1)?;
+        receive_ghost(src, &rmsg, GhostSide::Right)?;
+    }
+    Ok(())
+}
+
+/// The phase-2 blocking worker loop: exchange the *current* state's
+/// boundary planes, then step the whole slab.
+fn worker_steps_blocking(
+    src: &mut View<DynMapping, Vec<u8>>,
+    dst: &mut View<DynMapping, Vec<u8>>,
+    steps: usize,
+    right_stream: TcpStream,
+    left_stream: TcpStream,
+) -> Result<()> {
+    let mut rw = right_stream.try_clone().context("cloning the halo socket")?;
+    let mut rr = BufReader::new(DeadlineRead::new(right_stream, WIRE_IO_TIMEOUT));
+    let mut lw = left_stream.try_clone().context("cloning the halo socket")?;
+    let mut lr = BufReader::new(DeadlineRead::new(left_stream, WIRE_IO_TIMEOUT));
+    for _ in 0..steps {
+        let (first, last) = boundary_messages(src)?;
+        std::thread::scope(|scope| -> Result<()> {
+            // Push on a sender thread while the main thread receives:
+            // every ring member does both at once, so no step can
+            // deadlock on a full socket buffer.
+            let sender = scope.spawn(|| -> Result<()> {
+                write_message(&mut rw, &last)?;
+                write_message(&mut lw, &first)?;
+                Ok(())
+            });
+            let lmsg = read_message(&mut lr)?.context("left neighbour closed")?;
+            receive_ghost(src, &lmsg, GhostSide::Left)?;
+            let rmsg = read_message(&mut rr)?.context("right neighbour closed")?;
+            receive_ghost(src, &rmsg, GhostSide::Right)?;
+            sender.join().expect("halo sender panicked")
+        })?;
+        step(&*src, dst);
+        std::mem::swap(src, dst);
+    }
+    Ok(())
 }
 
 /// Entry point of the `halo-worker` CLI command: one ring member.
@@ -83,16 +193,18 @@ pub fn worker_main() -> Result<()> {
     // The parent usually dials first, but a fast left peer is
     // tolerated: stash it until the parent's hello shows up.
     let mut left = None;
-    let (mut pr, mut pw) = loop {
-        let (kind, r, w) = accept_hello(&listener)?;
+    let parent = loop {
+        let (kind, stream) = accept_hello(&listener)?;
         match kind {
-            Hello::Parent => break (r, w),
+            Hello::Parent => break stream,
             Hello::Peer => {
                 ensure!(left.is_none(), "two left peers dialed in");
-                left = Some((r, w));
+                left = Some(stream);
             }
         }
     };
+    let mut pw = parent.try_clone().context("cloning the halo socket")?;
+    let mut pr = BufReader::new(DeadlineRead::new(parent, WIRE_IO_TIMEOUT));
 
     // Read the assignment and the initial lattice BEFORE dialing out,
     // so the parent's sequential init writes never block on a full
@@ -103,6 +215,13 @@ pub fn worker_main() -> Result<()> {
     let steps: usize =
         init_field(&init_line, "steps")?.parse().context("halo-init steps")?;
     let right_addr = init_field(&init_line, "right")?.to_string();
+    // Tolerant: a phase-2 parent sends no overlap= field, meaning the
+    // blocking schedule.
+    let overlap = match init_field_opt(&init_line, "overlap") {
+        None | Some("0") => false,
+        Some("1") => true,
+        Some(other) => bail!("halo-init overlap={other:?} is not 0 or 1"),
+    };
     let msg = read_message(&mut pr)?.context("parent closed before sending the lattice")?;
     let (mut src, _) = deserialize(&msg)?;
     let mut dst =
@@ -113,42 +232,29 @@ pub fn worker_main() -> Result<()> {
     // no ordering constraint even for the two-worker ring.
     let rstream = TcpStream::connect(&right_addr)
         .with_context(|| format!("dialing right neighbour {right_addr}"))?;
-    let mut rw = rstream.try_clone().context("cloning the halo socket")?;
-    writeln!(rw, "halo-peer").context("sending the halo hello")?;
-    rw.flush().context("flushing the halo hello")?;
-    let mut rr = BufReader::new(rstream);
+    configure_stream(&rstream, WIRE_IO_TIMEOUT)?;
+    {
+        let mut hello = rstream.try_clone().context("cloning the halo socket")?;
+        writeln!(hello, "halo-peer").context("sending the halo hello")?;
+        hello.flush().context("flushing the halo hello")?;
+    }
 
     // Wait for the left neighbour's dial if it has not arrived yet.
-    let (mut lr, mut lw) = match left {
-        Some(pair) => pair,
+    let lstream = match left {
+        Some(stream) => stream,
         None => loop {
-            let (kind, r, w) = accept_hello(&listener)?;
+            let (kind, stream) = accept_hello(&listener)?;
             match kind {
-                Hello::Peer => break (r, w),
+                Hello::Peer => break stream,
                 Hello::Parent => bail!("second parent dialed in"),
             }
         },
     };
 
-    for _ in 0..steps {
-        let (first, last) = boundary_messages(&src)?;
-        std::thread::scope(|scope| -> Result<()> {
-            // Push on a sender thread while the main thread receives:
-            // every ring member does both at once, so no step can
-            // deadlock on a full socket buffer.
-            let sender = scope.spawn(|| -> Result<()> {
-                write_message(&mut rw, &last)?;
-                write_message(&mut lw, &first)?;
-                Ok(())
-            });
-            let lmsg = read_message(&mut lr)?.context("left neighbour closed")?;
-            receive_ghost(&mut src, &lmsg, GhostSide::Left)?;
-            let rmsg = read_message(&mut rr)?.context("right neighbour closed")?;
-            receive_ghost(&mut src, &rmsg, GhostSide::Right)?;
-            sender.join().expect("halo sender panicked")
-        })?;
-        step(&src, &mut dst);
-        std::mem::swap(&mut src, &mut dst);
+    if overlap {
+        worker_steps_overlapped(&mut src, &mut dst, steps, rstream, lstream)?;
+    } else {
+        worker_steps_blocking(&mut src, &mut dst, steps, rstream, lstream)?;
     }
 
     write_message(&mut pw, &interior_message(&src)?).context("sending the interior")?;
@@ -164,11 +270,14 @@ pub fn worker_main() -> Result<()> {
 /// processes over localhost TCP and reassemble the global result.
 /// `binary` overrides the worker executable (integration tests pass
 /// `CARGO_BIN_EXE_llama`); `None` uses this process's own image.
+/// `overlap` selects the split-phase schedule (phase 3) over the
+/// blocking ring (phase 2); both reassemble bit-identically.
 pub fn run_distributed(
     geo: &Geometry,
     steps: usize,
     workers: usize,
     binary: Option<&Path>,
+    overlap: bool,
 ) -> Result<View<DynMapping, Vec<u8>>> {
     ensure!(workers >= 2, "distributed halo needs at least two workers (got {workers})");
     let g = geo.dims.extents();
@@ -207,12 +316,17 @@ pub fn run_distributed(
     for (i, &(x0, x1)) in slabs.iter().enumerate() {
         let stream = TcpStream::connect(&addrs[i])
             .with_context(|| format!("dialing halo-worker {i}"))?;
+        configure_stream(&stream, WIRE_IO_TIMEOUT)?;
         let mut w = stream.try_clone().context("cloning the halo socket")?;
-        let r = BufReader::new(stream);
+        let r = BufReader::new(DeadlineRead::new(stream, WIRE_IO_TIMEOUT));
         let right = &addrs[(i + 1) % workers];
+        let ov = overlap as usize;
         writeln!(w, "halo-parent").context("sending the parent hello")?;
-        writeln!(w, "halo-init steps={steps} workers={workers} index={i} right={right}")
-            .context("sending the halo-init line")?;
+        writeln!(
+            w,
+            "halo-init steps={steps} workers={workers} index={i} overlap={ov} right={right}"
+        )
+        .context("sending the halo-init line")?;
         let mut local =
             alloc_view(WireRecipe::AosPacked.build(&d, local_dims(x0, x1, ny, nz)));
         extract_local(&global, &mut local, x0, x1);
@@ -234,9 +348,10 @@ pub fn run_distributed(
     Ok(global)
 }
 
-/// The `halo` demo: run the distributed exchange, verify the
-/// reassembled lattice bit-for-bit against the single-process
-/// ping-pong oracle, and report the exchange shape.
+/// The `halo` demo: run the distributed exchange (blocking ring, or
+/// split-phase overlapped with `--overlap`), verify the reassembled
+/// lattice bit-for-bit against the single-process ping-pong oracle,
+/// and report the exchange shape.
 pub fn run(o: &Opts) -> Result<Table> {
     let workers = o.threads.unwrap_or(2).clamp(2, 4);
     let (default_nx, ny, nz) = if o.quick { (8, 6, 6) } else { (16, 12, 12) };
@@ -245,7 +360,7 @@ pub fn run(o: &Opts) -> Result<Table> {
     let geo = Geometry::channel_with_sphere(nx, ny, nz, 11);
 
     let t0 = Instant::now();
-    let got = run_distributed(&geo, steps, workers, None)?;
+    let got = run_distributed(&geo, steps, workers, None, o.overlap)?;
     let wall = t0.elapsed();
 
     let d = cell_dim();
@@ -270,6 +385,10 @@ pub fn run(o: &Opts) -> Result<Table> {
     t.row(vec!["lattice".into(), format!("{nx}x{ny}x{nz}")]);
     t.row(vec!["worker processes".into(), workers.to_string()]);
     t.row(vec!["steps".into(), steps.to_string()]);
+    t.row(vec![
+        "schedule".into(),
+        if o.overlap { "overlapped (split-phase)".into() } else { "blocking ring".into() },
+    ]);
     t.row(vec!["halo plane bytes".into(), plane_bytes.to_string()]);
     t.row(vec!["wall ms".into(), format!("{:.3}", wall.as_secs_f64() * 1e3)]);
     t.row(vec!["bit-identical to single-process step".into(), "yes".into()]);
@@ -281,21 +400,30 @@ mod tests {
     use super::*;
 
     // The process-spawning ring needs the real `llama` binary;
-    // `tests/prop_halo.rs` drives it through `CARGO_BIN_EXE_llama`.
-    // The protocol pieces are unit-testable here.
+    // `tests/prop_halo.rs` drives it through `CARGO_BIN_EXE_llama`
+    // in both schedules. The protocol pieces are unit-testable here.
 
     #[test]
     fn init_field_parses_and_rejects() {
-        let line = "halo-init steps=3 workers=2 index=1 right=127.0.0.1:4040\n";
+        let line = "halo-init steps=3 workers=2 index=1 overlap=1 right=127.0.0.1:4040\n";
         assert_eq!(init_field(line, "steps").unwrap(), "3");
+        assert_eq!(init_field(line, "overlap").unwrap(), "1");
         assert_eq!(init_field(line, "right").unwrap(), "127.0.0.1:4040");
         assert!(init_field(line, "missing").is_err());
+        // A phase-2 line without overlap= still parses — the field is
+        // optional and defaults to the blocking schedule.
+        let legacy = "halo-init steps=3 workers=2 index=1 right=127.0.0.1:4040\n";
+        assert_eq!(init_field_opt(legacy, "overlap"), None);
+        assert_eq!(init_field(legacy, "steps").unwrap(), "3");
     }
 
     #[test]
     fn run_distributed_refuses_a_single_worker() {
         let geo = Geometry::channel_with_sphere(4, 4, 4, 3);
-        let err = run_distributed(&geo, 1, 1, None).unwrap_err().to_string();
-        assert!(err.contains("at least two workers"), "{err}");
+        for overlap in [false, true] {
+            let err =
+                run_distributed(&geo, 1, 1, None, overlap).unwrap_err().to_string();
+            assert!(err.contains("at least two workers"), "{err}");
+        }
     }
 }

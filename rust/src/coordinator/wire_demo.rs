@@ -36,11 +36,15 @@ pub const DRIFT_DT: f32 = 0.5;
 
 /// One worker step: rebuild the view from the wire bytes, drift the
 /// particles, and re-serialize in the byte order the request used.
+/// A `step=` tag on the request is echoed into the reply, so
+/// multiplexed clients can dispatch interleaved responses.
 pub fn serve_frame(msg: &WireMessage) -> Result<WireMessage> {
     let (mut v, _) = deserialize(msg)?;
     let n = v.count();
     drift_view(&mut v, n, DRIFT_DT);
-    serialize_endian(&v, msg.manifest.endian)
+    let mut reply = serialize_endian(&v, msg.manifest.endian)?;
+    reply.manifest.step = msg.manifest.step;
+    Ok(reply)
 }
 
 /// The `wire-worker` request/response loop over any byte stream:
@@ -213,6 +217,19 @@ mod tests {
             deserialize_into(&resp, &mut got).unwrap();
             assert!(views_equal(&oracle, &got));
         }
+    }
+
+    #[test]
+    fn serve_frame_echoes_the_step_tag() {
+        let d = attr_dim();
+        let dims = ArrayDims::linear(FRAME_SIZE);
+        let mut frame = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        fill_frame(&mut frame, 2);
+        let mut req = serialize(&frame).unwrap();
+        req.manifest.step = Some(12);
+        assert_eq!(serve_frame(&req).unwrap().manifest.step, Some(12));
+        req.manifest.step = None;
+        assert_eq!(serve_frame(&req).unwrap().manifest.step, None);
     }
 
     #[test]

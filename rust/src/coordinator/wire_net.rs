@@ -1,5 +1,5 @@
-//! TCP socket transport for `copy::wire` (wire phase 2): the framed
-//! message protocol of [`wire_demo`] lifted from OS pipes onto
+//! TCP socket transport for `copy::wire` (wire phases 2 and 3): the
+//! framed message protocol of [`wire_demo`] lifted from OS pipes onto
 //! `std::net` sockets, zero dependencies beyond `std`.
 //!
 //! `llama wire-serve` binds a listener (`--addr`, default an ephemeral
@@ -7,22 +7,42 @@
 //! serves `--n` connections — one framed response per framed request,
 //! each connection on its own thread. `llama wire-connect` runs the
 //! client side as a self-checking demo: whole-view frames over a
-//! single connection, then the same view split by
-//! [`crate::copy::serialize_sharded`] and exchanged shard-parallel
-//! over several connections at once, every reply verified against a
-//! locally drifted oracle. Without `--addr` it spawns its own server
-//! process, so `wire-connect --quick` is a self-contained smoke test.
+//! single connection (staged, then pipelined in shard-aligned chunks
+//! via [`crate::copy::write_range_chunked`]), then the same view split
+//! by [`crate::copy::serialize_sharded`] and exchanged as interleaved
+//! `(step, range)`-tagged frames over ONE persistent [`PeerLink`],
+//! every reply verified against a locally drifted oracle. Without
+//! `--addr` it spawns its own server process, so `wire-connect
+//! --quick` is a self-contained smoke test.
+//!
+//! Phase 3 adds the overlap machinery this module shares with the
+//! distributed halo ring:
+//!
+//! - [`PeerLink`] — one persistent multiplexed connection per peer: a
+//!   per-link send queue drained by a writer thread, and a receive
+//!   dispatcher thread that parks out-of-order frames until a
+//!   [`PeerLink::recv_step`] / [`PeerLink::recv_tagged`] caller claims
+//!   them by manifest tag. This replaces the phase-2
+//!   connection-per-sub-range pattern: sub-range concurrency now rides
+//!   on frame interleaving, not on socket count.
+//! - [`WIRE_IO_TIMEOUT`] / [`DeadlineRead`] — every transport socket
+//!   carries read/write deadlines, so a silent peer surfaces as a
+//!   clear "timed out" error instead of hanging the exchange forever.
 //!
 //! Framing is byte-identical to the pipe transport ([`read_message`]
 //! and [`write_message`] know nothing about their stream), so a
 //! phase-1 peer speaking whole-view messages interoperates unchanged;
-//! only `range=`-carrying requests take the new slab path of
-//! [`serve_slab`].
+//! only `range=`-carrying requests take the slab path of
+//! [`serve_slab`], which echoes the request's `step=` tag so
+//! multiplexed clients can dispatch replies.
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::Path;
 use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::bench::Opts;
@@ -30,8 +50,9 @@ use super::report::Table;
 use super::wire_demo::{self, fill_frame, DRIFT_DT};
 use crate::array::ArrayDims;
 use crate::copy::{
-    deserialize_into, deserialize_sharded_into, read_message, serialize_endian, serialize_sharded,
-    views_equal, wire_view, write_message, CopyProgram, WireMessage,
+    deserialize_into, deserialize_range_into, deserialize_sharded_into, read_message,
+    serialize_endian, serialize_sharded, views_equal, wire_view, write_message,
+    write_range_chunked, CopyProgram, WireMessage,
 };
 use crate::error::{Context, Result};
 use crate::mapping::SoA;
@@ -45,6 +66,259 @@ use crate::{bail, ensure};
 /// ephemeral port.
 pub const LISTENING_PREFIX: &str = "wire-listening ";
 
+/// How long a transport socket may sit silent before a read or write
+/// fails instead of blocking forever. Generous for real exchanges (a
+/// frame arrives or the link is dead), tight enough that a peer which
+/// connects and then never speaks — the classic silent-peer hang —
+/// turns into a diagnosable error rather than a stuck process.
+pub const WIRE_IO_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Apply the transport deadline to both directions of a socket. Every
+/// socket this module reads from or writes to goes through here.
+pub fn configure_stream(stream: &TcpStream, timeout: Duration) -> Result<()> {
+    stream.set_read_timeout(Some(timeout)).context("setting the socket read timeout")?;
+    stream.set_write_timeout(Some(timeout)).context("setting the socket write timeout")?;
+    Ok(())
+}
+
+/// A `Read` adapter that turns the OS's two timeout flavours
+/// (`WouldBlock` on Unix, `TimedOut` on Windows) into one unambiguous
+/// `TimedOut` error whose message names the deadline — so a stalled
+/// peer surfaces as "socket read timed out after …" in the error
+/// chain instead of a bare "Resource temporarily unavailable".
+pub struct DeadlineRead<R> {
+    inner: R,
+    timeout: Duration,
+}
+
+impl<R> DeadlineRead<R> {
+    pub fn new(inner: R, timeout: Duration) -> Self {
+        Self { inner, timeout }
+    }
+}
+
+impl<R: Read> Read for DeadlineRead<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        use std::io::ErrorKind::{TimedOut, WouldBlock};
+        self.inner.read(buf).map_err(|e| match e.kind() {
+            WouldBlock | TimedOut => std::io::Error::new(
+                TimedOut,
+                format!("socket read timed out after {:?}", self.timeout),
+            ),
+            _ => e,
+        })
+    }
+}
+
+/// The per-link outbound queue: messages park here and the writer
+/// thread drains them in FIFO order, so [`PeerLink::send`] never
+/// blocks on the socket. The flag tells the writer to exit once the
+/// queue drains.
+struct SendQueue {
+    state: Mutex<(VecDeque<WireMessage>, bool)>,
+    ready: Condvar,
+}
+
+/// The per-link inbound dispatcher state: frames the reader thread
+/// has pulled off the socket but no receiver has claimed yet, plus
+/// the terminal condition (clean EOF, timeout, or transport error)
+/// that ends every pending and future receive.
+#[derive(Default)]
+struct InboxState {
+    parked: Vec<WireMessage>,
+    closed: Option<String>,
+}
+
+struct Inbox {
+    state: Mutex<InboxState>,
+    arrived: Condvar,
+}
+
+impl Inbox {
+    fn deliver(&self, msg: WireMessage) {
+        self.state.lock().expect("peer inbox poisoned").parked.push(msg);
+        self.arrived.notify_all();
+    }
+
+    fn close(&self, why: String) {
+        let mut s = self.state.lock().expect("peer inbox poisoned");
+        if s.closed.is_none() {
+            s.closed = Some(why);
+        }
+        drop(s);
+        self.arrived.notify_all();
+    }
+}
+
+/// One persistent, multiplexed connection to a peer.
+///
+/// A `PeerLink` owns a socket plus two service threads: a writer
+/// draining the send queue, and a reader that pulls every inbound
+/// frame off the wire and parks it in the inbox. Frames are claimed
+/// by manifest tag — [`recv_step`](Self::recv_step) matches on the
+/// `step=` key, [`recv_tagged`](Self::recv_tagged) on `(step, range)`
+/// — so frames may arrive in any interleaving: an out-of-order frame
+/// simply waits in the inbox until its receiver shows up, and a
+/// receiver for a frame still in flight blocks until the dispatcher
+/// parks it.
+///
+/// This is the phase-3 replacement for connection-per-sub-range:
+/// where phase 2 opened N sockets to move N shards concurrently, a
+/// `PeerLink` moves them as N tagged frames on one socket.
+pub struct PeerLink {
+    queue: Arc<SendQueue>,
+    inbox: Arc<Inbox>,
+    stream: TcpStream,
+    writer: Option<JoinHandle<()>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+impl PeerLink {
+    /// Dial `addr` and wrap the socket in a link, with `timeout` as
+    /// the silence deadline in both directions.
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting peer link to {addr}"))?;
+        Self::from_stream(stream, timeout)
+    }
+
+    /// Wrap an already-established socket (e.g. one side of an
+    /// accepted halo-ring connection) in a link.
+    pub fn from_stream(stream: TcpStream, timeout: Duration) -> Result<Self> {
+        configure_stream(&stream, timeout)?;
+        let write_half = stream.try_clone().context("cloning the peer socket for writes")?;
+        let read_half = stream.try_clone().context("cloning the peer socket for reads")?;
+
+        let queue = Arc::new(SendQueue {
+            state: Mutex::new((VecDeque::new(), false)),
+            ready: Condvar::new(),
+        });
+        let inbox =
+            Arc::new(Inbox { state: Mutex::new(InboxState::default()), arrived: Condvar::new() });
+
+        let wq = Arc::clone(&queue);
+        let wi = Arc::clone(&inbox);
+        let writer = std::thread::Builder::new()
+            .name("wire-link-writer".into())
+            .spawn(move || {
+                let mut w = write_half;
+                loop {
+                    let msg = {
+                        let mut s = wq.state.lock().expect("send queue poisoned");
+                        loop {
+                            if let Some(m) = s.0.pop_front() {
+                                break m;
+                            }
+                            if s.1 {
+                                return;
+                            }
+                            s = wq.ready.wait(s).expect("send queue poisoned");
+                        }
+                    };
+                    if let Err(e) = write_message(&mut w, &msg) {
+                        // A dead socket kills both directions: fail
+                        // the inbox so receivers learn why.
+                        wi.close(format!("peer link send failed: {e}"));
+                        return;
+                    }
+                }
+            })
+            .context("spawning the peer link writer")?;
+
+        let ri = Arc::clone(&inbox);
+        let reader = std::thread::Builder::new()
+            .name("wire-link-reader".into())
+            .spawn(move || {
+                let mut r = BufReader::new(DeadlineRead::new(read_half, timeout));
+                loop {
+                    match read_message(&mut r) {
+                        Ok(Some(msg)) => ri.deliver(msg),
+                        Ok(None) => {
+                            ri.close("peer closed the link".into());
+                            return;
+                        }
+                        Err(e) => {
+                            ri.close(format!("peer link receive failed: {e}"));
+                            return;
+                        }
+                    }
+                }
+            })
+            .context("spawning the peer link reader")?;
+
+        Ok(Self { queue, inbox, stream, writer: Some(writer), reader: Some(reader) })
+    }
+
+    /// Queue a frame for transmission. Returns as soon as the frame is
+    /// parked on the send queue — the writer thread owns the socket —
+    /// so a compute thread can hand off boundary frames and go
+    /// straight back to work.
+    pub fn send(&self, msg: WireMessage) -> Result<()> {
+        let mut s = self.queue.state.lock().expect("send queue poisoned");
+        ensure!(!s.1, "peer link already closed for sending");
+        s.0.push_back(msg);
+        drop(s);
+        self.queue.ready.notify_all();
+        Ok(())
+    }
+
+    /// Claim the next parked frame matching `pred`, blocking until
+    /// the dispatcher parks one or the link dies (whereupon every
+    /// pending receive reports the terminal cause — EOF, timeout,
+    /// transport error).
+    fn recv_where(
+        &self,
+        pred: impl Fn(&WireManifest) -> bool,
+        what: &str,
+    ) -> Result<WireMessage> {
+        let mut s = self.inbox.state.lock().expect("peer inbox poisoned");
+        loop {
+            if let Some(i) = s.parked.iter().position(|m| pred(&m.manifest)) {
+                return Ok(s.parked.swap_remove(i));
+            }
+            if let Some(why) = &s.closed {
+                bail!("waiting for {what}: {why}");
+            }
+            s = self.inbox.arrived.wait(s).expect("peer inbox poisoned");
+        }
+    }
+
+    /// Receive a frame tagged `step=<step>`, regardless of its range.
+    pub fn recv_step(&self, step: usize) -> Result<WireMessage> {
+        self.recv_where(|m| m.step == Some(step), &format!("a step={step} frame"))
+    }
+
+    /// Receive the frame tagged `step=<step>` covering exactly
+    /// `range` — the full multiplexing address.
+    pub fn recv_tagged(&self, step: usize, range: (usize, usize)) -> Result<WireMessage> {
+        self.recv_where(
+            |m| m.step == Some(step) && m.range == Some(range),
+            &format!("a step={step} range={}..{} frame", range.0, range.1),
+        )
+    }
+}
+
+impl Drop for PeerLink {
+    fn drop(&mut self) {
+        // Close the queue; the writer drains what's left, then exits.
+        {
+            let mut s = self.queue.state.lock().expect("send queue poisoned");
+            s.1 = true;
+        }
+        self.queue.ready.notify_all();
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+        // Shut the socket down so the reader's blocking read returns
+        // (EOF at a frame boundary, an error mid-frame — either ends
+        // the reader), then reap it.
+        let _ = self.stream.shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
 /// One server step. Whole-view messages take the phase-1 path
 /// ([`wire_demo::serve_frame`]). A `range=` slab is rebuilt over the
 /// range length alone (the manifest's recipe over `end - begin`
@@ -53,7 +327,9 @@ pub const LISTENING_PREFIX: &str = "wire-listening ";
 /// the *original* full-view dims and range — so the reply lands back
 /// on the requester's records `begin..end` via
 /// [`crate::copy::deserialize_range_into`], and shard replies
-/// reassemble by manifest range alone.
+/// reassemble by manifest range alone. The request's `step=` tag is
+/// echoed into the reply, so multiplexed clients can dispatch replies
+/// by `(step, range)` no matter how frames interleave.
 pub fn serve_slab(msg: &WireMessage) -> Result<WireMessage> {
     let Some((begin, end)) = msg.manifest.range else {
         return wire_demo::serve_frame(msg);
@@ -65,7 +341,7 @@ pub fn serve_slab(msg: &WireMessage) -> Result<WireMessage> {
     CopyProgram::compile_slice(src.mapping(), slab.mapping(), 0, 0, n).execute(&src, &mut slab);
     drift_view(&mut slab, n, DRIFT_DT);
     let packed = serialize_endian(&slab, msg.manifest.endian)?;
-    let manifest = WireManifest::describe_range(
+    let mut manifest = WireManifest::describe_range(
         msg.manifest.record.clone(),
         msg.manifest.dims.clone(),
         msg.manifest.recipe,
@@ -73,6 +349,7 @@ pub fn serve_slab(msg: &WireMessage) -> Result<WireMessage> {
         begin,
         end,
     )?;
+    manifest.step = msg.manifest.step;
     ensure!(
         manifest.blob_sizes == packed.manifest.blob_sizes,
         "slab reply payload diverged from its manifest"
@@ -82,10 +359,13 @@ pub fn serve_slab(msg: &WireMessage) -> Result<WireMessage> {
 
 /// Serve one accepted connection: a framed response per framed
 /// request, clean exit at EOF. Shared by `wire-serve` and the loopback
-/// servers the bench and tests spin up in-process.
+/// servers the bench and tests spin up in-process. The socket carries
+/// [`WIRE_IO_TIMEOUT`] in both directions, so a client that connects
+/// and goes silent releases the serving thread.
 pub fn serve_connection(stream: TcpStream) -> Result<()> {
+    configure_stream(&stream, WIRE_IO_TIMEOUT)?;
     let mut w = stream.try_clone().context("cloning the wire socket")?;
-    let mut r = BufReader::new(stream);
+    let mut r = BufReader::new(DeadlineRead::new(stream, WIRE_IO_TIMEOUT));
     while let Some(msg) = read_message(&mut r)? {
         write_message(&mut w, &serve_slab(&msg)?)?;
     }
@@ -142,23 +422,29 @@ pub fn spawn_server(binary: &Path, conns: usize) -> Result<(Child, String)> {
     Ok((child, addr.to_string()))
 }
 
-/// Dial the server; the pair is (buffered read half, write half) of
-/// one socket.
-fn connect(addr: &str) -> Result<(BufReader<TcpStream>, TcpStream)> {
+/// Dial the server; the pair is (buffered, deadline-classified read
+/// half, write half) of one socket, both directions carrying
+/// [`WIRE_IO_TIMEOUT`].
+fn connect(addr: &str) -> Result<(BufReader<DeadlineRead<TcpStream>>, TcpStream)> {
     let stream =
         TcpStream::connect(addr).with_context(|| format!("connecting to wire server {addr}"))?;
+    configure_stream(&stream, WIRE_IO_TIMEOUT)?;
     let w = stream.try_clone().context("cloning the wire socket")?;
-    Ok((BufReader::new(stream), w))
+    Ok((BufReader::new(DeadlineRead::new(stream, WIRE_IO_TIMEOUT)), w))
 }
 
-/// The `wire-connect` demo: exchange `--iters` frames single-stream,
-/// then the same frame shard-parallel over `--threads` connections
+/// The `wire-connect` demo: exchange `--iters` frames single-stream —
+/// first staged (whole payload packed before the first byte moves),
+/// then pipelined (the request streamed in shard-aligned chunks, the
+/// socket busy while later chunks still pack) — then the same frame
+/// split into `--threads` range shards and exchanged as interleaved
+/// `(step, range)`-tagged frames over ONE multiplexed [`PeerLink`]
 /// (alternating byte orders throughout), verifying every round trip
 /// bit-for-bit against a locally drifted oracle. Joins an external
 /// server via `--addr`, or spawns its own `wire-serve` child.
 pub fn run(o: &Opts) -> Result<Table> {
-    let conns = o.threads.unwrap_or(4).clamp(2, 8);
-    let n = o.n.unwrap_or(if o.quick { FRAME_SIZE / 4 } else { FRAME_SIZE }).max(conns * 2);
+    let shards = o.threads.unwrap_or(4).clamp(2, 8);
+    let n = o.n.unwrap_or(if o.quick { FRAME_SIZE / 4 } else { FRAME_SIZE }).max(shards * 2);
     let iters = o.iters.max(2);
 
     let d = attr_dim();
@@ -175,14 +461,15 @@ pub fn run(o: &Opts) -> Result<Table> {
         Some(a) => a.clone(),
         None => {
             let exe = std::env::current_exe().context("locating the llama binary")?;
-            let (c, a) = spawn_server(&exe, conns + 1)?;
+            let (c, a) = spawn_server(&exe, 3)?;
             child = Some(c);
             a
         }
     };
 
-    // Case 1: whole-view frames over one connection.
-    let single = {
+    // Case 1: whole-view frames over one connection, each payload
+    // fully staged before its first byte hits the socket.
+    let staged = {
         let (mut r, mut w) = connect(&addr)?;
         let t0 = Instant::now();
         for it in 0..iters {
@@ -201,19 +488,18 @@ pub fn run(o: &Opts) -> Result<Table> {
             );
             let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
             deserialize_into(&reply, &mut got)?;
-            ensure!(views_equal(&oracle, &got), "single-stream round trip {it} diverged");
+            ensure!(views_equal(&oracle, &got), "staged round trip {it} diverged");
         }
         t0.elapsed()
     };
 
-    // Case 2: the same frame split into per-connection range slabs,
-    // all sent and received concurrently, reassembled by manifest
-    // range on the way back.
-    let mut pairs = Vec::with_capacity(conns);
-    for _ in 0..conns {
-        pairs.push(connect(&addr)?);
-    }
-    let sharded = {
+    // Case 2: the same exchange with the request streamed in
+    // shard-aligned chunks — wire memory O(chunk), the first bytes on
+    // the socket while later chunks still pack. The reply comes back
+    // staged with the request's step tag echoed.
+    let pipelined = {
+        let (mut r, mut w) = connect(&addr)?;
+        let chunk = (n / 8).max(1);
         let t0 = Instant::now();
         for it in 0..iters {
             let endian = if it % 2 == 0 {
@@ -221,30 +507,53 @@ pub fn run(o: &Opts) -> Result<Table> {
             } else {
                 WireEndian::native()
             };
-            let msgs = serialize_sharded(&frame, endian, conns)?;
-            let replies: Vec<WireMessage> = std::thread::scope(|scope| -> Result<Vec<_>> {
-                let handles: Vec<_> = pairs
-                    .iter_mut()
-                    .zip(&msgs)
-                    .map(|((r, w), msg)| {
-                        scope.spawn(move || -> Result<WireMessage> {
-                            write_message(w, msg)?;
-                            read_message(r)?.context("server closed a shard connection")
-                        })
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard exchange thread panicked"))
-                    .collect()
-            })?;
+            write_range_chunked(&mut w, &frame, 0, n, endian, Some(it), chunk)?;
+            let reply = read_message(&mut r)?.context("server closed mid-pipeline")?;
+            ensure!(
+                reply.manifest.step == Some(it),
+                "pipelined reply step {:?}, request was {it}",
+                reply.manifest.step
+            );
             let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
-            deserialize_sharded_into(&replies, &mut got)?;
-            ensure!(views_equal(&oracle, &got), "shard-parallel round trip {it} diverged");
+            deserialize_range_into(&reply, &mut got)?;
+            ensure!(views_equal(&oracle, &got), "pipelined round trip {it} diverged");
         }
         t0.elapsed()
     };
-    drop(pairs);
+
+    // Case 3: the frame split into range shards, every shard an
+    // interleaved `(step, range)`-tagged frame on ONE persistent
+    // multiplexed link. Replies are claimed by tag — deliberately in
+    // reverse send order, exercising the out-of-order parking
+    // dispatcher — and reassembled by manifest range.
+    let multiplexed = {
+        let link = PeerLink::connect(&addr, WIRE_IO_TIMEOUT)?;
+        let t0 = Instant::now();
+        for it in 0..iters {
+            let endian = if it % 2 == 0 {
+                WireEndian::native().swapped()
+            } else {
+                WireEndian::native()
+            };
+            let mut msgs = serialize_sharded(&frame, endian, shards)?;
+            let mut ranges = Vec::with_capacity(msgs.len());
+            for m in &mut msgs {
+                m.manifest.step = Some(it);
+                ranges.push(m.manifest.range.context("sharded frame without a range")?);
+            }
+            for m in msgs {
+                link.send(m)?;
+            }
+            let mut replies = Vec::with_capacity(ranges.len());
+            for &range in ranges.iter().rev() {
+                replies.push(link.recv_tagged(it, range)?);
+            }
+            let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+            deserialize_sharded_into(&replies, &mut got)?;
+            ensure!(views_equal(&oracle, &got), "multiplexed round trip {it} diverged");
+        }
+        t0.elapsed()
+    };
 
     if let Some(mut c) = child {
         let status = c.wait().context("waiting for wire-serve")?;
@@ -255,17 +564,24 @@ pub fn run(o: &Opts) -> Result<Table> {
         (frame_bytes * iters) as f64 / elapsed.as_secs_f64().max(1e-9) / (1024.0 * 1024.0)
     };
     let mut t = Table::new(
-        format!("copy::wire — TCP socket exchange ({n} records, {conns} shard connections)"),
+        format!(
+            "copy::wire — TCP socket exchange ({n} records, {shards} shards on one multiplexed link)"
+        ),
         &["case", "MiB/s", "round trips"],
     );
     t.row(vec![
-        "single-stream".into(),
-        format!("{:.1}", mib(single)),
+        "single-stream (staged)".into(),
+        format!("{:.1}", mib(staged)),
         format!("{iters}/{iters} verified"),
     ]);
     t.row(vec![
-        format!("shard-parallel ({conns} conns)"),
-        format!("{:.1}", mib(sharded)),
+        "single-stream (pipelined)".into(),
+        format!("{:.1}", mib(pipelined)),
+        format!("{iters}/{iters} verified"),
+    ]);
+    t.row(vec![
+        format!("multiplexed ({shards} shards, 1 conn)"),
+        format!("{:.1}", mib(multiplexed)),
         format!("{iters}/{iters} verified"),
     ]);
     Ok(t)
@@ -274,7 +590,7 @@ pub fn run(o: &Opts) -> Result<Table> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::copy::{deserialize_range_into, serialize, serialize_range_endian};
+    use crate::copy::{serialize, serialize_range_endian};
     use crate::workloads::picframe::{CELL_IDX, LEAVES};
 
     #[test]
@@ -288,10 +604,12 @@ mod tests {
         drift_view(&mut oracle, 96, DRIFT_DT);
 
         for endian in [WireEndian::native(), WireEndian::native().swapped()] {
-            let request = serialize_range_endian(&frame, 16, 48, endian).unwrap();
+            let mut request = serialize_range_endian(&frame, 16, 48, endian).unwrap();
+            request.manifest.step = Some(7);
             let reply = serve_slab(&request).unwrap();
             assert_eq!(reply.manifest.range, Some((16, 48)));
             assert_eq!(reply.manifest.endian, endian);
+            assert_eq!(reply.manifest.step, Some(7), "step tag must echo into the reply");
 
             let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
             crate::copy::copy(&frame, &mut got);
@@ -331,12 +649,38 @@ mod tests {
     }
 
     #[test]
-    fn loopback_socket_round_trips_sharded_frames() {
-        // Real TCP, no child process: the serve loop on a thread, three
-        // client connections exchanging range slabs concurrently.
+    fn deadline_read_classifies_timeouts_and_passes_other_errors_through() {
+        struct Stall(std::io::ErrorKind);
+        impl Read for Stall {
+            fn read(&mut self, _: &mut [u8]) -> std::io::Result<usize> {
+                Err(std::io::Error::new(self.0, "low-level detail"))
+            }
+        }
+        for kind in [std::io::ErrorKind::WouldBlock, std::io::ErrorKind::TimedOut] {
+            let mut r = DeadlineRead::new(Stall(kind), Duration::from_millis(250));
+            let e = r.read(&mut [0u8; 4]).unwrap_err();
+            assert_eq!(e.kind(), std::io::ErrorKind::TimedOut);
+            assert!(e.to_string().contains("timed out"), "unclassified: {e}");
+        }
+        let mut r = DeadlineRead::new(
+            Stall(std::io::ErrorKind::ConnectionReset),
+            Duration::from_millis(250),
+        );
+        let e = r.read(&mut [0u8; 4]).unwrap_err();
+        assert_eq!(e.kind(), std::io::ErrorKind::ConnectionReset);
+        assert!(e.to_string().contains("low-level detail"));
+    }
+
+    #[test]
+    fn peer_link_multiplexes_interleaved_steps_over_one_socket() {
+        // Real TCP, no child process: ONE connection carrying two
+        // steps' worth of shard frames, all queued before a single
+        // reply is claimed. Replies are then claimed in reverse order
+        // across both steps, so almost every frame parks out-of-order
+        // before its receiver shows up.
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let server = std::thread::spawn(move || serve_connections(&listener, 3).unwrap());
+        let server = std::thread::spawn(move || serve_connections(&listener, 1).unwrap());
 
         let d = attr_dim();
         let dims = ArrayDims::linear(200);
@@ -346,30 +690,59 @@ mod tests {
         crate::copy::copy(&frame, &mut oracle);
         drift_view(&mut oracle, 200, DRIFT_DT);
 
-        let msgs = serialize_sharded(&frame, WireEndian::native().swapped(), 3).unwrap();
-        assert_eq!(msgs.len(), 3);
-        let mut pairs = Vec::new();
-        for _ in 0..msgs.len() {
-            pairs.push(connect(&addr).unwrap());
+        let link = PeerLink::connect(&addr, WIRE_IO_TIMEOUT).unwrap();
+        let mut tags = Vec::new();
+        for step in [4usize, 9] {
+            let endian =
+                if step == 4 { WireEndian::native().swapped() } else { WireEndian::native() };
+            let mut msgs = serialize_sharded(&frame, endian, 3).unwrap();
+            assert_eq!(msgs.len(), 3);
+            for m in &mut msgs {
+                m.manifest.step = Some(step);
+                tags.push((step, m.manifest.range.unwrap()));
+            }
+            for m in msgs {
+                link.send(m).unwrap();
+            }
         }
-        let replies: Vec<WireMessage> = std::thread::scope(|scope| {
-            let handles: Vec<_> = pairs
-                .iter_mut()
-                .zip(&msgs)
-                .map(|((r, w), msg)| {
-                    scope.spawn(move || {
-                        write_message(w, msg).unwrap();
-                        read_message(r).unwrap().expect("shard reply")
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        drop(pairs);
+        for &(step, range) in tags.iter().rev() {
+            let reply = link.recv_tagged(step, range).unwrap();
+            assert_eq!(reply.manifest.step, Some(step));
+            assert_eq!(reply.manifest.range, Some(range));
+        }
+        // A third step claimed by step alone, proving recv_step
+        // dispatch and full reassembly of the drifted replies.
+        let mut msgs = serialize_sharded(&frame, WireEndian::native(), 3).unwrap();
+        for m in &mut msgs {
+            m.manifest.step = Some(11);
+        }
+        for m in msgs {
+            link.send(m).unwrap();
+        }
+        let mut replies = Vec::new();
+        for _ in 0..3 {
+            replies.push(link.recv_step(11).unwrap());
+        }
+        drop(link);
         server.join().unwrap();
 
         let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
         deserialize_sharded_into(&replies, &mut got).unwrap();
         assert!(views_equal(&oracle, &got));
+    }
+
+    #[test]
+    fn a_silent_peer_times_out_with_a_clear_error() {
+        // The peer accepts and then never speaks. A short deadline
+        // turns the would-be infinite hang into a diagnosable error
+        // naming the timeout.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let link = PeerLink::connect(&addr, Duration::from_millis(150)).unwrap();
+        let (silent, _) = listener.accept().unwrap();
+        let err = link.recv_step(0).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "timeout not classified: {err}");
+        drop(silent);
+        drop(link);
     }
 }

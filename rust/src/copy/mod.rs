@@ -51,7 +51,7 @@ pub use wire::{
     deserialize, deserialize_into, deserialize_range_into, deserialize_range_into_at,
     deserialize_sharded_into, read_message, serialize, serialize_endian, serialize_range,
     serialize_range_endian, serialize_range_with, serialize_sharded, serialize_with, wire_view,
-    write_message, WireMessage, MAX_HEADER_BYTES,
+    write_message, write_range_chunked, WireMessage, CHUNK_MAGIC, MAX_HEADER_BYTES,
 };
 
 /// Which strategy the compiled program uses (returned by [`copy`] /

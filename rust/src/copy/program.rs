@@ -236,6 +236,37 @@ impl CopyProgram {
         compile_slice_with(src, dst, &sp, &dp, src_start, dst_start, len)
     }
 
+    /// Split the record range `begin..end` into consecutive chunks of
+    /// at most `target` records whose interior boundaries fall on
+    /// multiples of `align` records past `begin` — the tiling a
+    /// streaming serializer executes one [`CopyProgram::compile_slice`]
+    /// at a time (see `copy::wire::write_range_chunked`). Keeping every
+    /// cut lane-block-aligned (pass [`crate::view::shard::shard_align`]
+    /// of the source plan) means no chunk straddles an AoSoA lane block
+    /// mid-lane, so per-chunk programs stay on the closed-form
+    /// strategies the whole-range program would use. The chunks tile
+    /// the range exactly: disjoint, in order, covering every record.
+    pub fn chunk_slices(
+        begin: usize,
+        end: usize,
+        target: usize,
+        align: usize,
+    ) -> Vec<(usize, usize)> {
+        let align = align.max(1);
+        // Round the target down to a whole number of align blocks; a
+        // target below the alignment still advances one block at a
+        // time (a cut inside a block would be worse than a big chunk).
+        let stride = (target.max(1) / align).max(1) * align;
+        let mut out = Vec::new();
+        let mut b = begin;
+        while b < end {
+            let e = (b + stride).min(end);
+            out.push((b, e));
+            b = e;
+        }
+        out
+    }
+
     /// Which strategy the compiler chose (what [`super::copy`] reports).
     #[inline]
     pub fn method(&self) -> CopyMethod {
@@ -1281,6 +1312,37 @@ mod tests {
         prog.execute(&src, &mut got);
         assert_eq!(got.blobs(), oracle.blobs(), "program != naive oracle");
         assert!(views_equal(&src, &got));
+    }
+
+    #[test]
+    fn chunk_slices_tile_the_range_on_aligned_cuts() {
+        for (begin, end, target, align) in [
+            (0usize, 100usize, 32usize, 8usize),
+            (0, 100, 30, 8),  // target rounds down to 24
+            (5, 97, 16, 16),  // interior cuts at begin + k·16
+            (0, 7, 100, 8),   // one chunk: target exceeds the range
+            (0, 64, 4, 16),   // target below align: whole blocks anyway
+            (0, 33, 1, 1),    // degenerate: per-record chunks
+            (0, 10, 0, 0),    // zero target/align clamp to 1
+        ] {
+            let chunks = CopyProgram::chunk_slices(begin, end, target, align);
+            assert!(!chunks.is_empty(), "{begin}..{end} produced no chunks");
+            // Exact tiling: consecutive, disjoint, covering.
+            assert_eq!(chunks[0].0, begin);
+            assert_eq!(chunks.last().unwrap().1, end);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap or overlap in {chunks:?}");
+            }
+            let align = align.max(1);
+            for (i, (b, e)) in chunks.iter().enumerate() {
+                assert!(b < e, "empty chunk in {chunks:?}");
+                assert!(e - b <= target.max(align), "oversized chunk in {chunks:?}");
+                if i > 0 {
+                    assert_eq!((b - begin) % align, 0, "unaligned cut in {chunks:?}");
+                }
+            }
+        }
+        assert!(CopyProgram::chunk_slices(5, 5, 8, 4).is_empty(), "empty range");
     }
 
     // --- Golden byte-layout snapshots (3-record extents): the exact

@@ -33,6 +33,15 @@
 //! frame exchange loops draw them from a [`crate::blob::BlobPool`],
 //! and the zero fill is skipped whenever [`programs_cover_dst`] proves
 //! the pack program overwrites every payload byte.
+//!
+//! Framing has a second, *pipelined* mode ([`write_range_chunked`]):
+//! the header carries a trailing `chunked` token and the payload
+//! arrives as self-delimiting `LLAMA-CHUNK <len>` sub-frames, each one
+//! produced by executing the pack program over a shard-aligned slice
+//! of the range and flushed to the stream as it completes — wire
+//! memory stays O(chunk) and the first payload byte leaves before the
+//! last record is packed. [`read_message`] reassembles both modes into
+//! the same [`WireMessage`], so receivers are mode-agnostic.
 
 use std::io::{BufRead, Write};
 
@@ -47,6 +56,11 @@ use super::{programs_cover_dst, same_data_space, CopyMethod, CopyProgram};
 
 /// Framing magic of [`write_message`] header lines.
 pub const WIRE_MAGIC: &str = "LLAMA-WIRE";
+
+/// Framing magic of the payload sub-frames in chunked mode
+/// ([`write_range_chunked`]): each chunk is a `LLAMA-CHUNK <len>` line
+/// followed by `len` payload bytes.
+pub const CHUNK_MAGIC: &str = "LLAMA-CHUNK";
 
 /// Upper bound on a framed manifest line. Manifests are one line of
 /// text (a record grammar plus a few tokens); anything larger is a
@@ -259,6 +273,95 @@ where
         .collect()
 }
 
+/// The pipelined range serializer: frame records `begin..end` of `src`
+/// straight onto a byte stream in **chunked mode**, executing the pack
+/// as one slice [`CopyProgram`] per shard-aligned chunk of at most
+/// `chunk_records` records and flushing each chunk sub-frame as it
+/// completes. Unlike [`serialize_range_with`] + [`write_message`] —
+/// which stage the whole payload before the first byte moves — wire
+/// memory stays bounded by one chunk and the receiver can start
+/// unpacking while later records are still being packed. Chunk cuts
+/// fall on [`crate::view::shard::shard_align`] boundaries of the
+/// source plan, so per-chunk programs use the same closed-form
+/// strategies the whole-range program would (the concatenated chunks
+/// are byte-identical to the staged payload: the packed-AoS wire
+/// recipe is a single dense record-major blob, cross-endian included).
+/// `step` tags the manifest for multiplexed links. Returns the pack
+/// strategy of the first chunk and the number of chunks written.
+pub fn write_range_chunked<W, M, B>(
+    w: &mut W,
+    src: &View<M, B>,
+    begin: usize,
+    end: usize,
+    endian: WireEndian,
+    step: Option<usize>,
+    chunk_records: usize,
+) -> Result<(CopyMethod, usize)>
+where
+    W: Write,
+    M: Mapping,
+    B: Blob,
+{
+    let mut manifest = WireManifest::describe_range(
+        src.mapping().info().dim.clone(),
+        src.mapping().dims().clone(),
+        WireRecipe::AosPacked,
+        endian,
+        begin,
+        end,
+    )?;
+    manifest.step = step;
+    ensure!(
+        manifest.blob_sizes.len() == 1,
+        "chunked framing needs a single-blob wire recipe, {} has {}",
+        manifest.recipe.token(),
+        manifest.blob_sizes.len()
+    );
+    let line = manifest.to_line()?;
+    writeln!(w, "{WIRE_MAGIC} {} {} chunked", line.len(), manifest.payload_len())?;
+    w.write_all(line.as_bytes())?;
+    // Dense packed AoS: every record is the same packed size, so a
+    // chunk of n records is exactly n * record_bytes payload bytes.
+    let record_bytes = manifest.payload_len() / (end - begin);
+    let plan = src.mapping().plan();
+    let align = crate::view::shard::shard_align(&plan);
+    let chunks = CopyProgram::chunk_slices(begin, end, chunk_records, align);
+    let max_chunk = chunks.iter().map(|(b, e)| e - b).max().unwrap_or(0);
+    let mut buf = vec![0u8; max_chunk * record_bytes];
+    let mut method = CopyMethod::Blobwise;
+    for (i, &(b, e)) in chunks.iter().enumerate() {
+        let n = e - b;
+        let chunk_manifest = WireManifest::describe_range(
+            manifest.record.clone(),
+            manifest.dims.clone(),
+            WireRecipe::AosPacked,
+            endian,
+            b,
+            e,
+        )?;
+        let wire_mapping = chunk_manifest.build_mapping()?;
+        let prog = CopyProgram::compile_slice(src.mapping(), &wire_mapping, b, 0, n);
+        if i == 0 {
+            method = prog.method();
+        }
+        let bytes = &mut buf[..n * record_bytes];
+        if !programs_cover_dst(std::slice::from_ref(&prog), &chunk_manifest.blob_sizes) {
+            bytes.fill(0);
+        }
+        {
+            let blobs = split_blobs_mut(bytes, &chunk_manifest.blob_sizes);
+            let mut dst = View::from_blobs(&wire_mapping, blobs);
+            prog.execute(src, &mut dst);
+        }
+        writeln!(w, "{CHUNK_MAGIC} {}", bytes.len())?;
+        w.write_all(bytes)?;
+        // Flush per chunk: this is the point of the mode — the chunk
+        // hits the wire while the next one is still being packed.
+        w.flush()?;
+    }
+    Ok((method, chunks.len()))
+}
+
 /// Zero-copy read view straight over a message's payload bytes: the
 /// manifest's mapping (wrapped in [`crate::mapping::Byteswap`] for
 /// foreign byte orders, so accessors swap on read) over borrowed
@@ -459,6 +562,13 @@ where
 /// payload length compared against the manifest's — so the payload
 /// allocation is always bounded by a self-consistent layout, never by
 /// an attacker-controlled number alone.
+///
+/// Headers with a trailing `chunked` token ([`write_range_chunked`])
+/// deliver the payload as `LLAMA-CHUNK <len>` sub-frames; they are
+/// reassembled here — every chunk must be non-empty and the chunks
+/// must sum to exactly the manifest's payload length — so callers see
+/// one [`WireMessage`] either way. (A pre-chunking peer rejects the
+/// four-token header loudly instead of misreading the stream.)
 pub fn read_message<R: BufRead>(r: &mut R) -> Result<Option<WireMessage>> {
     // The header is read through a byte-limited `Read::take`: an
     // uncapped `read_line` on a newline-free hostile stream would
@@ -476,11 +586,11 @@ pub fn read_message<R: BufRead>(r: &mut R) -> Result<Option<WireMessage>> {
         header.trim_end()
     );
     let parts: Vec<&str> = header.split_whitespace().collect();
-    ensure!(
-        parts.len() == 3 && parts[0] == WIRE_MAGIC,
-        "bad wire header {:?}",
-        header.trim_end()
-    );
+    let chunked = match parts.as_slice() {
+        [magic, _, _] if *magic == WIRE_MAGIC => false,
+        [magic, _, _, mode] if *magic == WIRE_MAGIC && *mode == "chunked" => true,
+        _ => bail!("bad wire header {:?}", header.trim_end()),
+    };
     let manifest_len: usize = parts[1].parse().context("wire header manifest length")?;
     let payload_len: usize = parts[2].parse().context("wire header payload length")?;
     ensure!(
@@ -497,7 +607,38 @@ pub fn read_message<R: BufRead>(r: &mut R) -> Result<Option<WireMessage>> {
         manifest.payload_len()
     );
     let mut payload = vec![0u8; payload_len];
-    r.read_exact(&mut payload)?;
+    if chunked {
+        let mut filled = 0usize;
+        while filled < payload_len {
+            let mut chunk_header = String::new();
+            ensure!(
+                (&mut *r).take(MAX_HEADER_BYTES).read_line(&mut chunk_header)? > 0,
+                "wire stream ended after {filled} of {payload_len} chunked payload bytes"
+            );
+            ensure!(
+                chunk_header.ends_with('\n'),
+                "wire chunk header truncated or longer than {MAX_HEADER_BYTES} bytes: {:?}",
+                chunk_header.trim_end()
+            );
+            let cp: Vec<&str> = chunk_header.split_whitespace().collect();
+            ensure!(
+                cp.len() == 2 && cp[0] == CHUNK_MAGIC,
+                "bad wire chunk header {:?}",
+                chunk_header.trim_end()
+            );
+            let len: usize = cp[1].parse().context("wire chunk length")?;
+            ensure!(len > 0, "zero-length wire chunk at byte {filled}");
+            ensure!(
+                len <= payload_len - filled,
+                "wire chunk of {len} bytes overruns the manifest payload \
+                 ({filled} of {payload_len} bytes filled)"
+            );
+            r.read_exact(&mut payload[filled..filled + len])?;
+            filled += len;
+        }
+    } else {
+        r.read_exact(&mut payload)?;
+    }
     Ok(Some(WireMessage { manifest, payload }))
 }
 
@@ -725,6 +866,89 @@ mod tests {
         // Whole-view messages (no range=) are refused.
         let whole = serialize(&src).unwrap();
         assert!(deserialize_sharded_into(&[whole], &mut dst).is_err());
+    }
+
+    #[test]
+    fn chunked_stream_reassembles_to_the_staged_message() {
+        let d = particle_dim();
+        let dims = ArrayDims::linear(53);
+        let mut src = alloc_view(AoSoA::new(&d, dims.clone(), 8));
+        fill_distinct(&mut src);
+        for endian in [WireEndian::native(), WireEndian::native().swapped()] {
+            // The staged (single-buffer) oracle for the same range.
+            let staged = serialize_range_endian(&src, 8, 48, endian).unwrap();
+            for chunk_records in [1, 8, 13, 40, 1000] {
+                let mut stream = Vec::new();
+                let (_, chunks) = write_range_chunked(
+                    &mut stream,
+                    &src,
+                    8,
+                    48,
+                    endian,
+                    Some(3),
+                    chunk_records,
+                )
+                .unwrap();
+                if chunk_records < 40 {
+                    assert!(chunks > 1, "{chunk_records} records/chunk left one chunk");
+                }
+                let text = String::from_utf8_lossy(&stream);
+                assert!(text.starts_with(WIRE_MAGIC), "{text:.60}");
+                assert!(text.lines().next().unwrap().ends_with("chunked"));
+                let msg = read_message(&mut std::io::Cursor::new(stream.clone()))
+                    .unwrap()
+                    .expect("chunked message");
+                // Concatenated chunks are byte-identical to the staged
+                // payload; the manifest differs only by the step tag.
+                assert_eq!(msg.payload, staged.payload, "{endian:?}/{chunk_records}");
+                assert_eq!(msg.manifest.step, Some(3));
+                assert_eq!(msg.manifest.range, staged.manifest.range);
+                assert_eq!(msg.manifest.blob_sizes, staged.manifest.blob_sizes);
+                // Back-to-back chunked frames keep a clean boundary.
+                let mut two = stream.clone();
+                two.extend_from_slice(&stream);
+                let mut r = std::io::Cursor::new(two);
+                assert!(read_message(&mut r).unwrap().is_some());
+                assert!(read_message(&mut r).unwrap().is_some());
+                assert!(read_message(&mut r).unwrap().is_none(), "clean EOF");
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_chunked_frames_are_rejected() {
+        let d = particle_dim();
+        let mut src = alloc_view(AoS::packed(&d, ArrayDims::linear(16)));
+        fill_distinct(&mut src);
+        let mut stream = Vec::new();
+        write_range_chunked(&mut stream, &src, 0, 16, WireEndian::native(), None, 4)
+            .unwrap();
+        let text = String::from_utf8_lossy(&stream).into_owned();
+        // 4 records × 25 B/record per chunk.
+        assert!(text.contains("LLAMA-CHUNK 100\n"), "{text:.120}");
+        // Truncation mid-chunk: EOF inside read_exact.
+        let mut cut = stream.clone();
+        cut.truncate(stream.len() - 10);
+        assert!(read_message(&mut std::io::Cursor::new(cut)).is_err());
+        // Truncation at a chunk boundary: the stream ends cleanly but
+        // the payload is short — never Ok(None), never a short message.
+        let tail = 25 * 4 + "LLAMA-CHUNK 100\n".len();
+        let mut cut = stream.clone();
+        cut.truncate(stream.len() - tail);
+        assert!(read_message(&mut std::io::Cursor::new(cut)).is_err());
+        // A corrupted chunk magic is refused.
+        let bad = text.replacen(CHUNK_MAGIC, "LLAMA-JUNK", 1);
+        assert!(read_message(&mut std::io::Cursor::new(bad.into_bytes())).is_err());
+        // A chunk overrunning the declared payload is refused before
+        // its bytes are read.
+        let bad = text.replacen("LLAMA-CHUNK 100\n", "LLAMA-CHUNK 999\n", 1);
+        assert!(read_message(&mut std::io::Cursor::new(bad.into_bytes())).is_err());
+        // Zero-length chunks cannot make progress and are refused.
+        let bad = text.replacen("LLAMA-CHUNK 100\n", "LLAMA-CHUNK 0\n", 1);
+        assert!(read_message(&mut std::io::Cursor::new(bad.into_bytes())).is_err());
+        // A chunked token on anything but a 4-token header is refused.
+        let bad = text.replacen(" chunked", " chunked extra", 1);
+        assert!(read_message(&mut std::io::Cursor::new(bad.into_bytes())).is_err());
     }
 
     #[test]

@@ -101,15 +101,15 @@ pub mod prelude {
         deserialize_into, deserialize_range_into, deserialize_range_into_at,
         deserialize_sharded_into, programs_cover_dst, read_message, serialize, serialize_endian,
         serialize_range, serialize_range_endian, serialize_range_with, serialize_sharded,
-        serialize_with, views_equal, wire_view, write_message, ChunkOrder, CopyMethod, CopyOp,
-        CopyProgram, ProgramCache, WireMessage, MAX_HEADER_BYTES,
+        serialize_with, views_equal, wire_view, write_message, write_range_chunked, ChunkOrder,
+        CopyMethod, CopyOp, CopyProgram, ProgramCache, WireMessage, CHUNK_MAGIC, MAX_HEADER_BYTES,
     };
     pub use crate::dump::{dump_html, dump_svg, heatmap_ascii};
     pub use crate::mapping::{
         estimated_bytes_per_record, migration_gain, recommend, recommend_stats, AccessPattern,
-        AddrPlan, AoS, AoSoA, Byteswap, CostModel, FieldStats, Heatmap, HeatmapSnapshot,
-        LayoutPlan, Mapping, Null, One, RecipeMapping, Recommendation, SoA, Split, Trace,
-        TraceSnapshot, WireRecipe,
+        AddrPlan, AoS, AoSoA, Byteswap, CostModel, DynMapping, FieldStats, Heatmap,
+        HeatmapSnapshot, LayoutPlan, Mapping, Null, One, RecipeMapping, Recommendation, SoA,
+        Split, Trace, TraceSnapshot, WireRecipe,
     };
     pub use crate::runtime::{WireEndian, WireManifest};
     pub use crate::record::{Field, RecordCoord, RecordDim, RecordInfo, Scalar, Type};

@@ -178,6 +178,11 @@ impl WireEndian {
 ///   linearized records `begin..end` of the `dims=` data space, packed
 ///   densely (the recipe is built over `end - begin` records). Absent
 ///   for whole-view messages, so PR 8 peers keep parsing unchanged.
+/// * `step=<k>` — optional sequencing tag for multiplexed links: frames
+///   for different time steps share one connection and the receiver
+///   dispatches them by `(step, range)` whatever order they arrive in.
+///   The tag does not change the payload layout at all; absent for
+///   untagged messages, so older peers keep parsing unchanged.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct WireManifest {
     pub record: RecordDim,
@@ -188,6 +193,8 @@ pub struct WireManifest {
     /// Linearized record sub-range `begin..end` the payload covers;
     /// `None` means the whole `dims` data space.
     pub range: Option<(usize, usize)>,
+    /// Sequencing tag for multiplexed links; `None` means untagged.
+    pub step: Option<usize>,
 }
 
 impl WireManifest {
@@ -202,7 +209,7 @@ impl WireManifest {
         ensure!(dims.rank() > 0, "wire manifest needs at least one array extent");
         let m = recipe.build(&record, dims.clone());
         let blob_sizes = (0..m.blob_count()).map(|b| m.blob_size(b)).collect();
-        Ok(WireManifest { record, dims, recipe, endian, blob_sizes, range: None })
+        Ok(WireManifest { record, dims, recipe, endian, blob_sizes, range: None, step: None })
     }
 
     /// Describe a payload carrying only the linearized records
@@ -226,7 +233,22 @@ impl WireManifest {
         );
         let m = recipe.build(&record, ArrayDims::linear(end - begin));
         let blob_sizes = (0..m.blob_count()).map(|b| m.blob_size(b)).collect();
-        Ok(WireManifest { record, dims, recipe, endian, blob_sizes, range: Some((begin, end)) })
+        Ok(WireManifest {
+            record,
+            dims,
+            recipe,
+            endian,
+            blob_sizes,
+            range: Some((begin, end)),
+            step: None,
+        })
+    }
+
+    /// Tag this manifest with a multiplexing step (builder style). The
+    /// tag is pure addressing — payload layout and sizes are untouched.
+    pub fn with_step(mut self, step: usize) -> Self {
+        self.step = Some(step);
+        self
     }
 
     /// Record count the payload actually carries: the range length for
@@ -288,6 +310,9 @@ impl WireManifest {
         if let Some((begin, end)) = self.range {
             line.push_str(&format!(" range={begin}..{end}"));
         }
+        if let Some(step) = self.step {
+            line.push_str(&format!(" step={step}"));
+        }
         Ok(line)
     }
 
@@ -323,6 +348,10 @@ impl WireManifest {
                 ))
             }
         };
+        let step = match kv_opt(&parts, "step") {
+            None => None,
+            Some(tok) => Some(tok.parse::<usize>().context("wire step tag")?),
+        };
         let wm = WireManifest {
             record,
             dims: ArrayDims::new(dims),
@@ -330,6 +359,7 @@ impl WireManifest {
             endian,
             blob_sizes,
             range,
+            step,
         };
         // Cross-check the declared blob sizes against the rebuilt
         // layout right away: a corrupted size must never reach the
@@ -709,6 +739,51 @@ nbody_move_aos nbody_move_aos.hlo.txt n=65536 tile=256 dtype=f32 layout=aos inpu
             // Range dropped but blob sizes still range-sized: the
             // rebuilt whole-space layout disagrees.
             line.replace(" range=10..22", ""),
+        ] {
+            assert!(WireManifest::parse_line(&broken).is_err(), "accepted {broken:?}");
+        }
+    }
+
+    #[test]
+    fn wire_step_tag_round_trips_and_rejects_garbage() {
+        let d = crate::mapping_demo_dim();
+        let wm = WireManifest::describe_range(
+            d.clone(),
+            ArrayDims::new(vec![5, 7]),
+            WireRecipe::AosPacked,
+            WireEndian::native(),
+            10,
+            22,
+        )
+        .unwrap()
+        .with_step(4);
+        assert_eq!(wm.step, Some(4));
+        // Tagging is pure addressing: payload layout is untouched.
+        assert_eq!(wm.payload_records(), 12);
+        assert_eq!(wm.blob_sizes, vec![300]);
+        let line = wm.to_line().unwrap();
+        assert!(line.ends_with("range=10..22 step=4"), "{line}");
+        let back = WireManifest::parse_line(&line).unwrap();
+        assert_eq!(back, wm);
+        // Untagged lines parse to step=None (older peers omit the key).
+        let untagged = WireManifest::parse_line(&line.replace(" step=4", "")).unwrap();
+        assert_eq!(untagged.step, None);
+        assert_eq!(untagged.range, wm.range);
+        // Whole-view messages may be tagged too.
+        let whole = WireManifest::describe(
+            d,
+            ArrayDims::new(vec![5, 7]),
+            WireRecipe::AosPacked,
+            WireEndian::native(),
+        )
+        .unwrap()
+        .with_step(0);
+        let back = WireManifest::parse_line(&whole.to_line().unwrap()).unwrap();
+        assert_eq!(back.step, Some(0));
+        for broken in [
+            line.replace("step=4", "step=four"), // non-numeric
+            line.replace("step=4", "step="),     // empty
+            line.replace("step=4", "step=-1"),   // negative
         ] {
             assert!(WireManifest::parse_line(&broken).is_err(), "accepted {broken:?}");
         }

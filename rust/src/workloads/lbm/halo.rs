@@ -15,19 +15,31 @@
 //! are dead — the next exchange overwrites them before anything reads
 //! them.
 //!
+//! Wire phase 3 splits the step so communication hides behind
+//! computation: [`step_boundary`] computes only the two faces the
+//! neighbours need, their step-tagged messages go out immediately, and
+//! [`step_interior`] computes everything else while next-step ghosts
+//! arrive into a double-buffered [`GhostArena`]. The schedule stays
+//! bit-identical to the blocking ring because the boundary planes of
+//! state `k+1` are exactly the planes a blocking ring would serialize
+//! at the *start* of its round `k+1`, and the interior planes never
+//! read ghosts at all (`lin = (x*ny+y)*nz + z` keeps each an x-plane
+//! away from the ghost planes).
+//!
 //! This module is the in-process half: partition arithmetic, local
-//! extraction, boundary messages, and [`run_in_process`] — the
-//! differential twin the multi-process TCP runner
-//! (`coordinator::halo`) is verified against.
+//! extraction, boundary messages, and [`run_in_process`] /
+//! [`run_in_process_overlapped`] — the differential twins the
+//! multi-process TCP runner (`coordinator::halo`) is verified against.
 
-use super::{cell_dim, step::init, step::step, Geometry};
+use super::step::{init, step, step_planes};
+use super::{cell_dim, Geometry};
 use crate::array::ArrayDims;
 use crate::blob::{Blob, BlobMut};
 use crate::copy::{deserialize_range_into_at, serialize_range, CopyProgram, WireMessage};
-use crate::ensure;
 use crate::error::Result;
 use crate::mapping::{DynMapping, Mapping, WireRecipe};
 use crate::view::{alloc_view, View};
+use crate::{bail, ensure};
 
 /// Split `nx` planes into exactly `workers` contiguous x-slabs
 /// `(x0, x1)`, each at least one plane thick (balanced: the first
@@ -130,12 +142,122 @@ where
     Ok((first, last))
 }
 
+/// [`boundary_messages`] with both manifests tagged `step=` for a
+/// multiplexed peer link: frames for different rounds share one
+/// connection and the receiver dispatches them by tag whatever order
+/// they arrive in.
+pub fn boundary_messages_tagged<M, B>(
+    local: &View<M, B>,
+    step: usize,
+) -> Result<(WireMessage, WireMessage)>
+where
+    M: Mapping,
+    B: Blob,
+{
+    let (mut first, mut last) = boundary_messages(local)?;
+    first.manifest.step = Some(step);
+    last.manifest.step = Some(step);
+    Ok((first, last))
+}
+
+/// Phase 1 of the split-phase schedule: step only the two boundary
+/// planes (local planes `1` and `local_nx`) of the next state — the
+/// one-plane-deep faces the neighbours need — so their messages can be
+/// on the wire while [`step_interior`] runs. Reads the current ghost
+/// planes exactly like the whole-lattice [`step`] would.
+pub fn step_boundary<MS, MD, B>(src: &View<MS, B>, dst: &mut View<MD, B>)
+where
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut,
+{
+    let local_nx = src.mapping().dims().extents()[0] - 2;
+    step_planes(src, dst, 1, 2);
+    if local_nx > 1 {
+        step_planes(src, dst, local_nx, local_nx + 1);
+    }
+}
+
+/// Phase 2 of the split-phase schedule: step the interior planes
+/// `2..local_nx` — every plane [`step_boundary`] did not already
+/// compute. These planes pull from planes `1..=local_nx` only, never
+/// from a ghost plane, which is why this phase can run while next-step
+/// ghosts are still in flight. (The ghost planes themselves are not
+/// stepped at all: their post-step values are dead in the blocking
+/// schedule too, overwritten by the next exchange before any read.)
+pub fn step_interior<MS, MD, B>(src: &View<MS, B>, dst: &mut View<MD, B>)
+where
+    MS: Mapping,
+    MD: Mapping,
+    B: BlobMut,
+{
+    let local_nx = src.mapping().dims().extents()[0] - 2;
+    if local_nx > 1 {
+        step_planes(src, dst, 2, local_nx);
+    }
+}
+
 /// Record offset of a ghost plane in a local lattice: `Left` is plane
 /// 0, `Right` is plane `local_nx + 1`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum GhostSide {
     Left,
     Right,
+}
+
+impl GhostSide {
+    fn index(self) -> usize {
+        match self {
+            GhostSide::Left => 0,
+            GhostSide::Right => 1,
+        }
+    }
+}
+
+/// Double-buffered landing slots for in-flight ghost planes: one slot
+/// per `(side, step parity)`. The ownership rule: a parity slot is
+/// writable only while it is empty — i.e. the ghost two rounds back
+/// must have been consumed — and [`GhostArena::deposit`] refuses to
+/// overwrite an unconsumed ghost instead of corrupting a round.
+///
+/// Two slots per side are enough because the schedule's data
+/// dependency bounds how far a peer can run ahead: a worker sends its
+/// step `k+2` boundary only after landing step `k+1` ghosts, which its
+/// neighbour sent only after landing step `k` ghosts — so at most the
+/// frames for steps `k+1` and `k+2` (opposite parity) can coexist
+/// unconsumed on one side.
+#[derive(Debug, Default)]
+pub struct GhostArena {
+    slots: [[Option<(usize, WireMessage)>; 2]; 2],
+}
+
+impl GhostArena {
+    /// Park an arrived ghost message for `step`. Errors if the parity
+    /// slot still holds an unconsumed ghost (a protocol violation —
+    /// the peer ran more than one round ahead, or a tag was wrong).
+    pub fn deposit(&mut self, side: GhostSide, step: usize, msg: WireMessage) -> Result<()> {
+        let slot = &mut self.slots[side.index()][step % 2];
+        if let Some((held, _)) = slot {
+            bail!(
+                "ghost arena {side:?} slot still holds step {held}: \
+                 depositing step {step} would overwrite an unconsumed ghost"
+            );
+        }
+        *slot = Some((step, msg));
+        Ok(())
+    }
+
+    /// Take the ghost message for `step`, freeing its slot for the
+    /// round after next. Errors if the slot is empty or holds a
+    /// different step.
+    pub fn take(&mut self, side: GhostSide, step: usize) -> Result<WireMessage> {
+        let slot = &mut self.slots[side.index()][step % 2];
+        match slot {
+            Some((held, _)) if *held == step => Ok(slot.take().expect("matched above").1),
+            Some((held, _)) => bail!("ghost arena {side:?} holds step {held}, wanted {step}"),
+            None => bail!("ghost arena {side:?} has no step {step} ghost"),
+        }
+    }
 }
 
 /// Land a neighbour's boundary-plane message on this worker's ghost
@@ -230,6 +352,79 @@ where
     let g = global.mapping().dims().extents();
     deserialize_range_into_at(msg, global, x0 * g[1] * g[2])?;
     Ok(())
+}
+
+/// One round of the split-phase schedule across all in-process
+/// workers, advancing state `k` to state `k+1` (`k = step_no`):
+/// boundary planes first, their step-tagged messages deposited into
+/// the neighbours' arenas (the in-process stand-in for frames in
+/// flight on a peer link), then the interior — the phase the
+/// distributed runner overlaps with the wire — then the buffer flip
+/// and the ghost landing. Bit-identical to [`exchange_ghosts`] +
+/// [`step`]: the boundary planes of state `k+1` are exactly what a
+/// blocking ring serializes at the start of its round `k+1`, and the
+/// interior never reads ghost planes.
+pub fn overlapped_step(
+    locals: &mut [LocalLattice],
+    arenas: &mut [GhostArena],
+    step_no: usize,
+) -> Result<()> {
+    ensure!(
+        locals.len() == arenas.len(),
+        "{} workers but {} ghost arenas",
+        locals.len(),
+        arenas.len()
+    );
+    let n = locals.len();
+    for w in locals.iter_mut() {
+        step_boundary(&w.src, &mut w.dst);
+    }
+    let msgs: Vec<(WireMessage, WireMessage)> = locals
+        .iter()
+        .map(|w| boundary_messages_tagged(&w.dst, step_no + 1))
+        .collect::<Result<_>>()?;
+    for (i, arena) in arenas.iter_mut().enumerate() {
+        let left = (i + n - 1) % n;
+        let right = (i + 1) % n;
+        arena.deposit(GhostSide::Left, step_no + 1, msgs[left].1.clone())?;
+        arena.deposit(GhostSide::Right, step_no + 1, msgs[right].0.clone())?;
+    }
+    for w in locals.iter_mut() {
+        step_interior(&w.src, &mut w.dst);
+    }
+    for (w, arena) in locals.iter_mut().zip(arenas.iter_mut()) {
+        std::mem::swap(&mut w.src, &mut w.dst);
+        let l = arena.take(GhostSide::Left, step_no + 1)?;
+        let r = arena.take(GhostSide::Right, step_no + 1)?;
+        receive_ghost(&mut w.src, &l, GhostSide::Left)?;
+        receive_ghost(&mut w.src, &r, GhostSide::Right)?;
+    }
+    Ok(())
+}
+
+/// [`run_in_process`] on the split-phase schedule: `steps` rounds of
+/// [`overlapped_step`], interiors reassembled into the returned global
+/// view. The sequential in-process twin of the overlapped distributed
+/// runner, and the third leg of the differential oracle — it must be
+/// bit-identical to both [`run_in_process`] and the undecomposed
+/// kernel.
+pub fn run_in_process_overlapped(
+    geo: &Geometry,
+    workers: usize,
+    steps: usize,
+) -> Result<View<DynMapping, Vec<u8>>> {
+    let d = cell_dim();
+    let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+    init(&mut global, geo);
+    let mut locals = split_lattice(&global, workers)?;
+    let mut arenas: Vec<GhostArena> = locals.iter().map(|_| GhostArena::default()).collect();
+    for k in 0..steps {
+        overlapped_step(&mut locals, &mut arenas, k)?;
+    }
+    for w in &locals {
+        place_interior(&mut global, &interior_message(&w.src)?, w.x0)?;
+    }
+    Ok(global)
 }
 
 /// Run `steps` of the decomposed lattice fully in-process: `workers`
@@ -349,6 +544,116 @@ mod tests {
         init(&mut init_view, &geo);
         let got = run_in_process(&geo, 2, 0).unwrap();
         assert_eq!(got.blobs(), init_view.blobs());
+    }
+
+    #[test]
+    fn overlapped_schedule_is_bit_identical_to_blocking_and_the_oracle() {
+        // The split-phase twin against both the blocking in-process
+        // ring and the undecomposed kernel — obstacles included, slab
+        // widths down to one plane (workers=3 on nx=8 gives 3/3/2;
+        // also run nx=4 with 3 workers for a 2/1/1 split where a slab's
+        // boundary planes coincide and the interior phase is empty).
+        for (geo, max_workers) in [
+            (Geometry::channel_with_sphere(8, 6, 6, 5), 3usize),
+            (Geometry::channel_with_sphere(4, 4, 4, 2), 3),
+        ] {
+            for steps in [1usize, 4] {
+                let oracle = global_oracle(&geo, steps);
+                for workers in 1..=max_workers {
+                    let blocking = run_in_process(&geo, workers, steps).unwrap();
+                    let overlapped = run_in_process_overlapped(&geo, workers, steps).unwrap();
+                    assert_eq!(
+                        overlapped.blobs(),
+                        blocking.blobs(),
+                        "{workers}-worker overlapped schedule diverged from blocking \
+                         ({steps} steps)"
+                    );
+                    assert_eq!(
+                        overlapped.blobs(),
+                        oracle.blobs(),
+                        "{workers}-worker overlapped schedule diverged from the \
+                         global kernel ({steps} steps)"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_zero_steps_reassembles_the_initial_state() {
+        let geo = Geometry::channel_with_sphere(4, 4, 4, 2);
+        let d = cell_dim();
+        let mut init_view = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        init(&mut init_view, &geo);
+        let got = run_in_process_overlapped(&geo, 2, 0).unwrap();
+        assert_eq!(got.blobs(), init_view.blobs());
+    }
+
+    #[test]
+    fn split_phase_kernels_tile_exactly_one_whole_step() {
+        // boundary + interior must together write exactly the planes a
+        // whole-lattice step writes to the interior (ghost planes are
+        // skipped — their post-step values are dead either way).
+        let geo = Geometry::channel_with_sphere(6, 4, 4, 9);
+        let d = cell_dim();
+        let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        init(&mut global, &geo);
+        for workers in [1usize, 2, 3] {
+            for w in split_lattice(&global, workers).unwrap() {
+                let e = w.src.mapping().dims().extents();
+                let (local_nx, plane) = (e[0] - 2, e[1] * e[2]);
+                let local_m = || WireRecipe::AosPacked.build(&d, local_dims(w.x0, w.x1, 4, 4));
+                let mut whole = alloc_view(local_m());
+                step(&w.src, &mut whole);
+                let mut split = alloc_view(local_m());
+                step_boundary(&w.src, &mut split);
+                step_interior(&w.src, &mut split);
+                // Compare the interior planes 1..=local_nx field-wise.
+                for lin in plane..(local_nx + 1) * plane {
+                    for leaf in 0..super::super::LEAVES {
+                        assert_eq!(
+                            split.get::<f64>(lin, leaf),
+                            whole.get::<f64>(lin, leaf),
+                            "workers={workers} slab {}..{} lin={lin} leaf={leaf}",
+                            w.x0,
+                            w.x1
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ghost_arena_enforces_the_double_buffer_ownership_rule() {
+        let geo = Geometry::channel_with_sphere(4, 4, 4, 1);
+        let d = cell_dim();
+        let mut global = alloc_view(WireRecipe::AosPacked.build(&d, geo.dims.clone()));
+        init(&mut global, &geo);
+        let locals = split_lattice(&global, 2).unwrap();
+        let (first, last) = boundary_messages_tagged(&locals[0].src, 1).unwrap();
+        assert_eq!(first.manifest.step, Some(1));
+        assert_eq!(last.manifest.step, Some(1));
+
+        let mut arena = GhostArena::default();
+        arena.deposit(GhostSide::Left, 1, first.clone()).unwrap();
+        // Opposite parity may land while step 1 is unconsumed (a peer
+        // running one round ahead)...
+        arena.deposit(GhostSide::Left, 2, first.clone()).unwrap();
+        // ...but same parity may not: step 3 would overwrite step 1.
+        assert!(arena.deposit(GhostSide::Left, 3, first.clone()).is_err());
+        // The other side is independent.
+        arena.deposit(GhostSide::Right, 1, last.clone()).unwrap();
+        // Takes must name the held step exactly.
+        assert!(arena.take(GhostSide::Left, 3).is_err());
+        assert!(arena.take(GhostSide::Right, 2).is_err());
+        let got = arena.take(GhostSide::Left, 1).unwrap();
+        assert_eq!(got, first);
+        // Consuming step 1 frees its parity slot for step 3.
+        arena.deposit(GhostSide::Left, 3, first).unwrap();
+        // An empty slot cannot be taken twice.
+        assert!(arena.take(GhostSide::Right, 1).is_ok());
+        assert!(arena.take(GhostSide::Right, 1).is_err());
     }
 
     #[test]

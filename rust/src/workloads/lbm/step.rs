@@ -283,6 +283,62 @@ pub fn step<MS: Mapping, MD: Mapping, B: BlobMut>(src: &View<MS, B>, dst: &mut V
     unsafe { step_slab(src, dst as *mut _, nx, ny, nz, 0, nx) };
 }
 
+/// [`StepKernel`] variant for plane-restricted steps: the executor
+/// hands it the single whole-range shard (it only runs with one
+/// thread) and the kernel steps just the configured `x0..x1` slab —
+/// the cursor fast path of [`step_planes`] without a range-restricted
+/// executor entry point.
+struct PlaneKernel {
+    nx: usize,
+    ny: usize,
+    nz: usize,
+    x0: usize,
+    x1: usize,
+}
+
+impl ShardKernel2 for PlaneKernel {
+    fn run<R: CursorRead, W: CursorWrite>(&self, src: &[R], dst: &[W], s: Shard) {
+        debug_assert_eq!(
+            (s.start, s.end),
+            (0, self.nx * self.ny * self.nz),
+            "PlaneKernel expects the single whole-range shard"
+        );
+        // SAFETY: cursors were validated over the full range at
+        // extraction; the single shard means no concurrent writer.
+        unsafe { step_slab_cursors(src, dst, self.nx, self.ny, self.nz, self.x0, self.x1) };
+    }
+}
+
+/// One stream-collide step restricted to the x-planes `x0..x1`,
+/// pulling from `src` and writing only those planes of `dst` — every
+/// other `dst` cell is untouched. The split-phase halo schedule steps
+/// the two boundary planes first, ships them, then steps the interior
+/// while next-step ghosts arrive
+/// (`workloads::lbm::halo::{step_boundary, step_interior}`). Plane `x`
+/// pulls from planes `x-1..=x+1` (periodic wrap at the lattice edge),
+/// and the cell kernel is byte-for-byte the one [`step`] runs — only
+/// the x loop bounds differ — so restricted steps compose
+/// bit-identically with whole-lattice steps.
+pub fn step_planes<MS: Mapping, MD: Mapping, B: BlobMut>(
+    src: &View<MS, B>,
+    dst: &mut View<MD, B>,
+    x0: usize,
+    x1: usize,
+) {
+    let d = src.mapping().dims().extents();
+    let (nx, ny, nz) = (d[0], d[1], d[2]);
+    assert!(x0 <= x1 && x1 <= nx, "plane range {x0}..{x1} out of 0..{nx}");
+    if x0 == x1 {
+        return;
+    }
+    if par_execute_zip(src, dst, 1, ny * nz, &PlaneKernel { nx, ny, nz, x0, x1 }) {
+        return;
+    }
+    debug_assert!(src.validate().is_ok() && dst.validate().is_ok());
+    // SAFETY: single caller, planes x0..x1 only.
+    unsafe { step_slab(src, dst as *mut _, nx, ny, nz, x0, x1) };
+}
+
 /// Multi-threaded step: x-slab shards are distributed over `threads`
 /// scoped workers by [`crate::view::shard::par_execute_zip`] (the
 /// paper's OpenMP parallelization of 619.lbm_s).
@@ -736,6 +792,31 @@ mod tests {
             step_parallel(&a, &mut bn, 3);
             assert_eq!(b1.blobs(), bn.blobs(), "lanes {lanes}");
         }
+    }
+
+    #[test]
+    fn plane_restricted_steps_compose_to_the_whole_step() {
+        // step_planes over a tiling of 0..nx must be bit-identical to
+        // one whole-lattice step — the invariant the split-phase halo
+        // schedule (boundary planes first, interior later) rests on.
+        let geo = small_geo();
+        let d = cell_dim();
+        fn check<M: Mapping>(make: impl Fn() -> M, geo: &Geometry, name: &str) {
+            let mut a = alloc_view(make());
+            init(&mut a, geo);
+            let mut whole = alloc_view(make());
+            step(&a, &mut whole);
+            for cuts in [vec![0usize, 8], vec![0, 1, 7, 8], vec![0, 3, 3, 5, 8]] {
+                let mut tiled = alloc_view(make());
+                for w in cuts.windows(2) {
+                    step_planes(&a, &mut tiled, w[0], w[1]);
+                }
+                assert_eq!(whole.blobs(), tiled.blobs(), "{name}: cuts {cuts:?}");
+            }
+        }
+        check(|| AoS::packed(&d, geo.dims.clone()), &geo, "AoS packed");
+        check(|| SoA::multi_blob(&d, geo.dims.clone()), &geo, "SoA MB");
+        check(|| AoSoA::new(&d, geo.dims.clone(), 8), &geo, "AoSoA-8");
     }
 
     #[test]

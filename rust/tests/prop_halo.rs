@@ -4,13 +4,17 @@
 //! over localhost TCP each step — reassembles bit-identical to the
 //! single-process `step` kernel after K steps, obstacles included.
 //! Decomposition and transport may change scheduling; they must never
-//! change arithmetic.
+//! change arithmetic. Wire phase 3 adds the split-phase overlapped
+//! schedule (boundary planes first, interior swept while ghosts move):
+//! a different order of operations over the same arithmetic, so it too
+//! must reassemble bit-identical — blocking and overlapped are
+//! differential twins of one oracle.
 
 use std::path::Path;
 
 use llama::coordinator::halo::run_distributed;
 use llama::prelude::*;
-use llama::workloads::lbm::halo::run_in_process;
+use llama::workloads::lbm::halo::{run_in_process, run_in_process_overlapped};
 use llama::workloads::lbm::step::{init, step};
 use llama::workloads::lbm::{cell_dim, Geometry};
 
@@ -32,49 +36,84 @@ fn global_oracle(geo: &Geometry, steps: usize) -> View<DynMapping, Vec<u8>> {
 /// The tentpole acceptance test: N spawned `llama halo-worker`
 /// processes, boundary planes over real sockets, K steps — the
 /// reassembled lattice's bytes equal the oracle's exactly, for both a
-/// 2-ring and a 3-ring, around a sphere obstacle.
+/// 2-ring and a 3-ring, around a sphere obstacle, in **both** the
+/// blocking and the split-phase overlapped schedule.
 #[test]
 fn distributed_halo_is_bit_identical_to_the_single_process_kernel() {
     let binary = Path::new(env!("CARGO_BIN_EXE_llama"));
     let geo = Geometry::channel_with_sphere(10, 6, 6, 7);
     let steps = 3;
     let oracle = global_oracle(&geo, steps);
-    // The in-process twin first: if this diverges, the bug is in the
-    // decomposition, not the transport.
+    // The in-process twins first: if these diverge, the bug is in the
+    // decomposition or the split-phase schedule, not the transport.
     let twin = run_in_process(&geo, 3, steps).unwrap();
     assert_eq!(twin.blobs(), oracle.blobs(), "in-process decomposition diverged");
+    let twin_ov = run_in_process_overlapped(&geo, 3, steps).unwrap();
+    assert_eq!(twin_ov.blobs(), oracle.blobs(), "in-process overlapped schedule diverged");
     for workers in [2usize, 3] {
-        let got = run_distributed(&geo, steps, workers, Some(binary)).unwrap();
-        assert_eq!(
-            got.blobs(),
-            oracle.blobs(),
-            "{workers}-process halo exchange diverged from the single-process kernel"
-        );
+        for overlap in [false, true] {
+            let got = run_distributed(&geo, steps, workers, Some(binary), overlap).unwrap();
+            assert_eq!(
+                got.blobs(),
+                oracle.blobs(),
+                "{workers}-process halo exchange (overlap={overlap}) diverged from the \
+                 single-process kernel"
+            );
+        }
     }
+}
+
+/// The overlapped-vs-blocking differential oracle at a second
+/// geometry: thin slabs (5 planes over 3 workers, so one worker owns a
+/// single plane and `step_interior` degenerates to nothing — the
+/// schedule is all boundary work) — the regime where the split-phase
+/// bookkeeping has the least slack.
+#[test]
+fn overlapped_schedule_survives_thin_slabs() {
+    let binary = Path::new(env!("CARGO_BIN_EXE_llama"));
+    let geo = Geometry::channel_with_sphere(5, 5, 5, 17);
+    let steps = 4;
+    let oracle = global_oracle(&geo, steps);
+    let twin_ov = run_in_process_overlapped(&geo, 3, steps).unwrap();
+    assert_eq!(twin_ov.blobs(), oracle.blobs(), "thin-slab overlapped twin diverged");
+    let got = run_distributed(&geo, steps, 3, Some(binary), true).unwrap();
+    assert_eq!(got.blobs(), oracle.blobs(), "thin-slab distributed overlap diverged");
 }
 
 /// Zero steps exercises only distribution and reassembly: scatter the
 /// initial lattice to the workers, gather the interiors back, and the
-/// bytes must equal the freshly initialized global.
+/// bytes must equal the freshly initialized global — in either
+/// schedule, since neither ever runs.
 #[test]
 fn zero_step_distribution_reassembles_the_initial_lattice() {
     let binary = Path::new(env!("CARGO_BIN_EXE_llama"));
     let geo = Geometry::channel_with_sphere(8, 5, 5, 21);
-    let got = run_distributed(&geo, 0, 2, Some(binary)).unwrap();
-    assert_eq!(got.blobs(), global_oracle(&geo, 0).blobs());
+    for overlap in [false, true] {
+        let got = run_distributed(&geo, 0, 2, Some(binary), overlap).unwrap();
+        assert_eq!(got.blobs(), global_oracle(&geo, 0).blobs(), "overlap={overlap}");
+    }
 }
 
-/// The `llama halo` demo end to end: spawns its workers, verifies the
-/// exchange against the oracle, zero exit code.
+/// The `llama halo` demo end to end in both schedules: spawns its
+/// workers, verifies the exchange against the oracle, zero exit code,
+/// and reports which schedule ran.
 #[test]
 fn halo_command_verifies_bit_identity() {
-    let out = std::process::Command::new(env!("CARGO_BIN_EXE_llama"))
-        .args(["halo", "--quick", "--iters", "2"])
-        .output()
-        .expect("run llama halo");
-    let stdout = String::from_utf8_lossy(&out.stdout);
-    let stderr = String::from_utf8_lossy(&out.stderr);
-    assert!(out.status.success(), "llama halo failed: {stdout}\n{stderr}");
-    assert!(stdout.contains("bit-identical to single-process step"), "{stdout}");
-    assert!(stdout.contains("worker processes"), "{stdout}");
+    for overlap in [false, true] {
+        let mut args = vec!["halo", "--quick", "--iters", "2"];
+        if overlap {
+            args.push("--overlap");
+        }
+        let out = std::process::Command::new(env!("CARGO_BIN_EXE_llama"))
+            .args(&args)
+            .output()
+            .expect("run llama halo");
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(out.status.success(), "llama halo {args:?} failed: {stdout}\n{stderr}");
+        assert!(stdout.contains("bit-identical to single-process step"), "{stdout}");
+        assert!(stdout.contains("worker processes"), "{stdout}");
+        let want = if overlap { "overlapped (split-phase)" } else { "blocking ring" };
+        assert!(stdout.contains(want), "schedule row missing {want:?}: {stdout}");
+    }
 }

@@ -3,9 +3,11 @@
 //! oracle across the full 13-mapping matrix — including `Byteswap`
 //! endpoints in both directions and tail-block extents — affine packs
 //! never degrade to the element gather, corrupted or truncated
-//! manifests are rejected before the payload is trusted, and the
-//! framed protocol survives a real process boundary (`llama
-//! wire-worker` spoken to over OS pipes).
+//! manifests are rejected before the payload is trusted, the pipelined
+//! chunked framing mode reassembles byte-identically to the staged
+//! frame for every layout in the matrix, `step=` tags ride the
+//! manifest grammar untouched, and the framed protocol survives a real
+//! process boundary (`llama wire-worker` spoken to over OS pipes).
 
 mod prop_support;
 
@@ -296,6 +298,74 @@ fn sharded_messages_tile_the_view_and_reassemble_bit_identically() {
         let mut partial = alloc_view(nth(&d, &dims, k));
         assert!(deserialize_sharded_into(&msgs[1..], &mut partial).is_err());
     }
+}
+
+/// The pipelined chunked framing mode against the staged oracle,
+/// across the full layout matrix: `write_range_chunked` streams the
+/// pack chunk by chunk, yet the reassembled message must equal the
+/// staged `serialize_range_endian` frame bit for bit — manifest, step
+/// tag, and payload — for every mapping, both byte orders, and chunk
+/// sizes from degenerate (1 record) past the whole range.
+#[test]
+fn prop_chunked_framing_matches_the_staged_frame_across_the_matrix() {
+    let d = nbody::particle_dim();
+    let dims = ArrayDims::linear(97);
+    let (begin, end) = (3usize, 90);
+    for k in 0..MATRIX {
+        let mut src = alloc_view(nth(&d, &dims, k));
+        fill_sentinels(&mut src);
+        for endian in [WireEndian::native(), WireEndian::native().swapped()] {
+            for chunk in [1usize, 7, 32, 200] {
+                let label = format!("matrix entry {k} {endian:?} chunk={chunk}");
+                let mut stream = Vec::new();
+                let (_, chunks) =
+                    write_range_chunked(&mut stream, &src, begin, end, endian, Some(k), chunk)
+                        .unwrap();
+                assert!(chunks >= 1, "{label}");
+                assert_eq!(chunks == 1, chunk >= end - begin, "{label}: chunk count");
+                // The stream is in chunked mode, not the staged frame.
+                let header_end = stream.iter().position(|&b| b == b'\n').unwrap();
+                let header = std::str::from_utf8(&stream[..header_end]).unwrap();
+                assert!(header.ends_with(" chunked"), "{label}: header {header:?}");
+                let mut r = std::io::Cursor::new(stream);
+                let got = read_message(&mut r).unwrap().expect("chunked frame");
+                assert!(read_message(&mut r).unwrap().is_none(), "{label}: clean EOF");
+                let mut want = serialize_range_endian(&src, begin, end, endian).unwrap();
+                want.manifest.step = Some(k);
+                assert_eq!(got, want, "{label}");
+            }
+        }
+    }
+}
+
+/// `step=` is a pure addressing tag: it survives framing in both modes,
+/// never perturbs the payload, and its absence round trips as absence.
+#[test]
+fn step_tags_ride_the_frame_untouched_in_both_modes() {
+    let d = nbody::particle_dim();
+    let mut src = alloc_view(SoA::multi_blob(&d, ArrayDims::linear(41)));
+    fill_sentinels(&mut src);
+
+    // Staged mode: tag the manifest by hand.
+    let mut tagged = serialize_range(&src, 5, 29).unwrap();
+    tagged.manifest.step = Some(usize::MAX);
+    let untagged = serialize_range(&src, 5, 29).unwrap();
+    assert_eq!(tagged.payload, untagged.payload, "the tag never touches the payload");
+    let mut stream = Vec::new();
+    write_message(&mut stream, &tagged).unwrap();
+    write_message(&mut stream, &untagged).unwrap();
+    let mut r = std::io::Cursor::new(stream);
+    let back = read_message(&mut r).unwrap().expect("tagged frame");
+    assert_eq!(back.manifest.step, Some(usize::MAX), "extreme tag survives the grammar");
+    assert_eq!(back, tagged);
+    let back = read_message(&mut r).unwrap().expect("untagged frame");
+    assert_eq!(back.manifest.step, None, "absence round trips as absence");
+
+    // Chunked mode: `None` stays `None` on the reassembled message.
+    let mut stream = Vec::new();
+    write_range_chunked(&mut stream, &src, 0, 41, WireEndian::native(), None, 8).unwrap();
+    let got = read_message(&mut std::io::Cursor::new(stream)).unwrap().expect("frame");
+    assert_eq!(got.manifest.step, None);
 }
 
 /// Range packs inherit the full-view strategy guarantee: strategy

@@ -3,17 +3,21 @@
 //! header reads are byte-capped, split writes and byte-at-a-time
 //! delivery reassemble, abrupt disconnects surface as errors, and
 //! `Ok(None)` means a clean frame boundary and nothing else — and the
-//! TCP slab server (`llama wire-serve`) round trips shard-parallel
-//! sends from a real client across a real process boundary.
+//! TCP slab server (`llama wire-serve`) round trips multiplexed
+//! `(step, range)`-tagged sends over ONE `PeerLink` from a real
+//! client across a real process boundary, out-of-order and
+//! interleaved across steps. A deliberately silent peer must surface
+//! as a clear timeout error, never a hang.
 
 mod prop_support;
 
 use std::io::{BufReader, Cursor, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
+use std::time::Duration;
 
 use llama::coordinator::wire_demo::DRIFT_DT;
-use llama::coordinator::wire_net;
+use llama::coordinator::wire_net::{self, PeerLink, WIRE_IO_TIMEOUT};
 use llama::prelude::*;
 use llama::workloads::nbody;
 use llama::workloads::picframe::frames::drift_view;
@@ -165,14 +169,18 @@ fn split_socket_writes_reassemble_and_disconnects_surface_as_errors() {
 }
 
 /// The slab server across a real process boundary: spawn `llama
-/// wire-serve`, drive one single-stream exchange and one shard-parallel
-/// send from this process, and check both land bit-identical to the
-/// locally computed drifted oracle.
+/// wire-serve`, drive one single-stream exchange and one multiplexed
+/// `PeerLink` session from this process, and check everything lands
+/// bit-identical to the locally computed drifted oracle. The link
+/// carries two steps' shards interleaved — all queued before a single
+/// reply is claimed, then claimed in reverse order — so the replies
+/// arrive out of order relative to every receiver and the dispatcher
+/// must park them.
 #[test]
-fn wire_serve_process_round_trips_shard_parallel_slabs() {
-    const CONNS: usize = 3;
+fn wire_serve_process_round_trips_multiplexed_slabs() {
+    const SHARDS: usize = 3;
     let binary = Path::new(env!("CARGO_BIN_EXE_llama"));
-    let (mut child, addr) = wire_net::spawn_server(binary, 1 + CONNS).unwrap();
+    let (mut child, addr) = wire_net::spawn_server(binary, 2).unwrap();
 
     let d = attr_dim();
     let dims = ArrayDims::linear(96);
@@ -182,50 +190,78 @@ fn wire_serve_process_round_trips_shard_parallel_slabs() {
     copy(&src, &mut expected);
     drift_view(&mut expected, dims.count(), DRIFT_DT);
 
-    let connect = |addr: &str| {
-        let s = TcpStream::connect(addr).expect("connect to wire-serve");
-        (BufReader::new(s.try_clone().unwrap()), s)
-    };
-
     // Single stream, foreign byte order: the whole-frame path.
-    let (mut r, mut w) = connect(&addr);
-    let request = serialize_endian(&src, WireEndian::native().swapped()).unwrap();
-    write_message(&mut w, &request).unwrap();
-    let reply = read_message(&mut r).unwrap().expect("frame reply");
-    assert_eq!(reply.manifest.endian, request.manifest.endian, "reply keeps the byte order");
-    let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
-    deserialize_into(&reply, &mut got).unwrap();
-    assert!(views_equal(&got, &expected), "single-stream slab diverged from the oracle");
-    drop((r, w));
+    {
+        let s = TcpStream::connect(addr.as_str()).expect("connect to wire-serve");
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut w = s;
+        let request = serialize_endian(&src, WireEndian::native().swapped()).unwrap();
+        write_message(&mut w, &request).unwrap();
+        let reply = read_message(&mut r).unwrap().expect("frame reply");
+        assert_eq!(reply.manifest.endian, request.manifest.endian, "reply keeps the byte order");
+        let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        deserialize_into(&reply, &mut got).unwrap();
+        assert!(views_equal(&got, &expected), "single-stream slab diverged from the oracle");
+    }
 
-    // Shard-parallel: one connection per sub-range, replies reassembled
-    // by their manifests' ranges alone.
-    let msgs = serialize_sharded(&src, WireEndian::native().swapped(), CONNS).unwrap();
-    let mut pairs: Vec<_> = msgs.iter().map(|_| connect(&addr)).collect();
-    let replies = std::thread::scope(|scope| {
-        let handles: Vec<_> = pairs
-            .iter_mut()
-            .zip(&msgs)
-            .map(|((r, w), msg)| {
-                scope.spawn(move || {
-                    write_message(w, msg).unwrap();
-                    read_message(r).unwrap().expect("slab reply")
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("shard thread")).collect::<Vec<_>>()
-    });
-    let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
-    deserialize_sharded_into(&replies, &mut got).unwrap();
-    assert!(views_equal(&got, &expected), "sharded slabs diverged from the oracle");
-    drop(pairs);
+    // Multiplexed: every sub-range a `(step, range)`-tagged frame on
+    // ONE persistent link; two steps interleaved, claimed in reverse.
+    let link = PeerLink::connect(&addr, WIRE_IO_TIMEOUT).unwrap();
+    let mut tags = Vec::new();
+    for step in [2usize, 5] {
+        let endian =
+            if step == 2 { WireEndian::native().swapped() } else { WireEndian::native() };
+        let mut msgs = serialize_sharded(&src, endian, SHARDS).unwrap();
+        assert_eq!(msgs.len(), SHARDS);
+        for m in &mut msgs {
+            m.manifest.step = Some(step);
+            tags.push((step, m.manifest.range.unwrap()));
+        }
+        for m in msgs {
+            link.send(m).unwrap();
+        }
+    }
+    let mut by_step: Vec<Vec<WireMessage>> = vec![Vec::new(), Vec::new()];
+    for &(step, range) in tags.iter().rev() {
+        let reply = link.recv_tagged(step, range).unwrap();
+        assert_eq!(reply.manifest.step, Some(step), "reply keeps the step tag");
+        assert_eq!(reply.manifest.range, Some(range), "reply keeps the range tag");
+        by_step[usize::from(step == 5)].push(reply);
+    }
+    drop(link);
+    for replies in by_step {
+        let mut got = alloc_view(SoA::multi_blob(&d, dims.clone()));
+        deserialize_sharded_into(&replies, &mut got).unwrap();
+        assert!(views_equal(&got, &expected), "multiplexed slabs diverged from the oracle");
+    }
 
     let status = child.wait().unwrap();
     assert!(status.success(), "wire-serve exited with {status}");
 }
 
+/// A peer that accepts the connection and then never sends a byte:
+/// the transport deadline must turn the infinite wait into an error
+/// naming the timeout — the silent-peer regression the phase-2
+/// transport (no read timeouts) would hang on.
+#[test]
+fn silent_peer_surfaces_as_a_timeout_error_not_a_hang() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let link = PeerLink::connect(&addr, Duration::from_millis(200)).unwrap();
+    let (silent, _) = listener.accept().unwrap();
+    let err = link.recv_step(0).unwrap_err().to_string();
+    assert!(err.contains("timed out"), "expected a timeout error, got: {err}");
+    // The link stays failed: later receives report the same cause
+    // instead of waiting again.
+    let err2 = link.recv_tagged(3, (0, 8)).unwrap_err().to_string();
+    assert!(err2.contains("timed out"), "{err2}");
+    drop(silent);
+    drop(link);
+}
+
 /// The `llama wire-connect` demo end to end: spawns its own private
-/// server, verifies every round trip, zero exit code.
+/// server, runs the staged, pipelined, and multiplexed exchanges,
+/// verifies every round trip, zero exit code.
 #[test]
 fn wire_connect_command_verifies_its_exchange() {
     let out = std::process::Command::new(env!("CARGO_BIN_EXE_llama"))
@@ -236,6 +272,7 @@ fn wire_connect_command_verifies_its_exchange() {
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(out.status.success(), "llama wire-connect failed: {stdout}\n{stderr}");
     assert!(stdout.contains("TCP socket exchange"), "{stdout}");
-    assert!(stdout.contains("shard-parallel"), "{stdout}");
+    assert!(stdout.contains("multiplexed"), "{stdout}");
+    assert!(stdout.contains("pipelined"), "{stdout}");
     assert!(stdout.contains("verified"), "{stdout}");
 }
